@@ -1,0 +1,130 @@
+"""AOT lowering driver: model registry -> artifacts/ (HLO text + manifest).
+
+Runs ONCE at build time (`make artifacts`); Python never executes on the
+Rust request path. For every model variant this emits:
+
+* ``<model>.<kind>.hlo.txt`` — HLO *text* per artifact kind
+  (train/predict/update). Text, not serialized proto: jax >= 0.5 emits
+  64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+  parser reassigns ids (see /opt/xla-example/README.md).
+* ``<model>.state.bin`` — the initial state tensors (params + Adam slots
+  + model state), concatenated f32 little-endian in canonical
+  tree_flatten order.
+* ``manifest.txt`` — profiles, per-model state shapes, and per-artifact
+  input/output specs, in the line format ``rust/src/runtime/manifest.rs``
+  parses.
+
+Usage: python -m compile.aot [--out DIR] [--models a,b,c] [--list]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import PROFILES
+from .model import batch_shape_structs, flatten_model, registry, state_leaves
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_str(shape) -> str:
+    return ",".join(str(d) for d in shape) if len(shape) else "-"
+
+
+def emit_model(model_def, out_dir, manifest_lines, verbose=True):
+    name = model_def["name"]
+    leaves, treedef = state_leaves(model_def, seed=0)
+    n_state = len(leaves)
+
+    # State blob: canonical order, f32 LE.
+    blob = b"".join(np.asarray(leaf, np.float32).tobytes() for leaf in leaves)
+    state_file = f"{name}.state.bin"
+    with open(os.path.join(out_dir, state_file), "wb") as f:
+        f.write(blob)
+
+    manifest_lines.append(f"model {name} profile {model_def['profile'].name}")
+    manifest_lines.append(f"state_file {state_file}")
+    for leaf in leaves:
+        manifest_lines.append(f"state f32 {shape_str(leaf.shape)}")
+
+    state_structs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+    for kind in ("train", "predict", "update"):
+        if kind not in model_def["fns"]:
+            continue
+        spec = model_def["specs"][kind]
+        flat = flatten_model(model_def, kind, treedef, n_state)
+        args = state_structs + batch_shape_structs(spec)
+        if verbose:
+            print(f"  lowering {name}.{kind} ({len(args)} inputs)...", flush=True)
+        # keep_unused=True: the Rust runtime passes the full state list to
+        # every artifact; without it jit prunes unused parameters and the
+        # compiled program's arity diverges from the manifest.
+        lowered = jax.jit(flat, keep_unused=True).lower(*args)
+        hlo = to_hlo_text(lowered)
+        hlo_file = f"{name}.{kind}.hlo.txt"
+        with open(os.path.join(out_dir, hlo_file), "w") as f:
+            f.write(hlo)
+
+        manifest_lines.append(f"artifact {kind} {hlo_file}")
+        for in_name, dt, shape in spec:
+            manifest_lines.append(f"in {in_name} {dt} {shape_str(shape)}")
+        if kind == "train":
+            manifest_lines.append("out state")
+            manifest_lines.append("out loss f32 -")
+        elif kind == "predict":
+            out_aval = jax.eval_shape(flat, *args)[0]
+            manifest_lines.append(f"out scores f32 {shape_str(out_aval.shape)}")
+        else:
+            manifest_lines.append("out state")
+        manifest_lines.append("end")
+    manifest_lines.append("endmodel")
+    manifest_lines.append("")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--models", default="", help="comma-separated subset")
+    ap.add_argument("--list", action="store_true", help="list model names")
+    args = ap.parse_args()
+
+    reg = registry()
+    if args.list:
+        print("\n".join(sorted(reg)))
+        return
+    selected = sorted(reg) if not args.models else args.models.split(",")
+    for m in selected:
+        if m not in reg:
+            sys.exit(f"unknown model `{m}` (use --list)")
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = ["# TGM artifact manifest v1"]
+    for p in PROFILES.values():
+        manifest.append(
+            f"profile {p.name} n {p.n} b {p.b} k {p.k} k2 {p.k2} seq {p.seq} "
+            f"c {p.c} d_edge {p.d_edge} d_static {p.d_static} p {p.p}"
+        )
+    manifest.append("")
+
+    for i, m in enumerate(selected):
+        print(f"[{i + 1}/{len(selected)}] {m}", flush=True)
+        emit_model(reg[m], args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(selected)} models to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Artifact size profiles and model hyperparameters.
+
+AOT compilation via PJRT requires static shapes, so every artifact is
+compiled against a *profile*: the padded node count ``n``, batch size
+``b``, neighbor fan-outs, and feature dims. The Rust coordinator pads
+host batches to the profile and masks the padding in-graph.
+
+Hyperparameters follow the paper's Table 14, scaled down for the CPU
+test bed (documented in DESIGN.md "Environment deviations").
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Profile:
+    """Static-shape envelope one artifact family is compiled against."""
+
+    name: str
+    n: int  # padded node count
+    b: int = 200  # batch size (Table 14)
+    k: int = 10  # one-hop neighbors
+    k2: int = 5  # two-hop fan-out (TGAT)
+    seq: int = 32  # sequence length (DyGFormer; Table 14 "# Neighbors" = 32)
+    c: int = 11  # eval candidates per positive (1 pos + 10 negatives)
+    d_edge: int = 16  # edge feature dim
+    d_static: int = 8  # static node feature dim
+    p: int = 16  # node-property classes
+
+
+# CTDG models operate on event streams with up to 1024 nodes.
+CTDG = Profile(name="ctdg1k", n=1024)
+# DTDG models build dense NxN snapshot adjacencies; keep N at 512.
+DTDG = Profile(name="dtdg512", n=512)
+
+PROFILES = {p.name: p for p in (CTDG, DTDG)}
+
+
+@dataclass(frozen=True)
+class Dims:
+    """Model dims (Table 14, scaled: embed 100->64, time 100->32)."""
+
+    embed: int = 64
+    time: int = 32
+    memory: int = 64
+    heads: int = 2
+    hidden: int = 64
+    # DyGFormer
+    patch: int = 4
+    channel: int = 32
+    layers: int = 2
+    # TPNet random-projection dim
+    rp: int = 64
+    rp_decay: float = 1e-6
+    # Optimizer (Table 14)
+    lr: float = 1e-4
+    lr_snapshot: float = 1e-3
+
+
+DIMS = Dims()

@@ -1,0 +1,143 @@
+"""Public kernel API: Pallas forward, reference-vjp backward.
+
+Each op is a ``jax.custom_vjp`` whose forward runs the Pallas kernel
+(``interpret=True``) and whose backward is the vjp of the pure-jnp
+reference. The pytest suite asserts forward(kernel) == forward(ref), so
+the pairing is numerically consistent. This sidesteps Pallas interpret
+mode's limited autodiff while keeping the kernels on the lowered HLO
+path that Rust executes.
+
+Wrappers also pad leading dims to kernel block multiples and reshape
+arbitrary-rank inputs to the kernels' canonical ranks, so model code can
+call these with natural shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .pallas_kernels import (
+    ELT_BLOCK,
+    SEED_BLOCK,
+    matmul_pallas,
+    neighbor_attention_pallas,
+    time_encode_pallas,
+)
+
+
+def _pad_to(x, axis, multiple):
+    size = x.shape[axis]
+    target = max(-(-size // multiple) * multiple, multiple)
+    if target == size:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad), size
+
+
+# ---------------------------------------------------------------------
+# time_encode
+# ---------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def time_encode(dt, w, b):
+    """cos(dt * w + b); Pallas forward, ref-vjp backward.
+
+    dt: [...], w/b: [Dt] -> [..., Dt].
+    """
+    shape = dt.shape
+    flat = dt.reshape(-1).astype(jnp.float32)
+    padded, size = _pad_to(flat, 0, ELT_BLOCK)
+    out = time_encode_pallas(padded, w, b)[:size]
+    return out.reshape(*shape, w.shape[0])
+
+
+def _te_fwd(dt, w, b):
+    return time_encode(dt, w, b), (dt, w, b)
+
+
+def _te_bwd(res, g):
+    _, vjp = jax.vjp(ref.time_encode, *res)
+    return vjp(g)
+
+
+time_encode.defvjp(_te_fwd, _te_bwd)
+
+
+# ---------------------------------------------------------------------
+# neighbor_attention
+# ---------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def neighbor_attention(q, k, v, mask):
+    """Masked attention over sampled neighbors; see ref.neighbor_attention.
+
+    q: [S, D], k: [S, K, D], v: [S, K, Dv], mask: [S, K] -> [S, Dv].
+    """
+    qp, s = _pad_to(q, 0, SEED_BLOCK)
+    kp, _ = _pad_to(k, 0, SEED_BLOCK)
+    vp, _ = _pad_to(v, 0, SEED_BLOCK)
+    mp, _ = _pad_to(mask, 0, SEED_BLOCK)
+    return neighbor_attention_pallas(qp, kp, vp, mp)[:s]
+
+
+def _na_fwd(q, k, v, mask):
+    return neighbor_attention(q, k, v, mask), (q, k, v, mask)
+
+
+def _na_bwd(res, g):
+    _, vjp = jax.vjp(ref.neighbor_attention, *res)
+    return vjp(g)
+
+
+neighbor_attention.defvjp(_na_fwd, _na_bwd)
+
+
+# ---------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------
+
+
+def _mm_pad(size, block):
+    """Pad target: a multiple of `block` when the dim exceeds one block
+    (so the grid tiles evenly), else a multiple of 8 (one block)."""
+    return block if size > block else 8
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Blocked Pallas matmul with ref-vjp backward: [M,K] @ [K,N]."""
+    from .pallas_kernels import MM_BLOCK_K, MM_BLOCK_M, MM_BLOCK_N
+
+    m, kdim = a.shape
+    n = b.shape[1]
+    ap, _ = _pad_to(a, 0, _mm_pad(m, MM_BLOCK_M))
+    ap, _ = _pad_to(ap, 1, _mm_pad(kdim, MM_BLOCK_K))
+    bp, _ = _pad_to(b, 0, _mm_pad(kdim, MM_BLOCK_K))
+    bp, _ = _pad_to(bp, 1, _mm_pad(n, MM_BLOCK_N))
+    return matmul_pallas(ap, bp)[:m, :n]
+
+
+def _mm_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _mm_bwd(res, g):
+    a, b = res
+    return (
+        jnp.dot(g, b.T, preferred_element_type=jnp.float32),
+        jnp.dot(a.T, g, preferred_element_type=jnp.float32),
+    )
+
+
+matmul.defvjp(_mm_fwd, _mm_bwd)
+
+
+def decayed_propagate(reps, gamma, onehot_src, onehot_dst, w):
+    """TPNet propagation composed from the Pallas matmul (see ref)."""
+    gathered = matmul(onehot_dst, reps)
+    msg = matmul(gathered, w)
+    scattered = matmul(onehot_src.T, msg)
+    return gamma * reps + scattered

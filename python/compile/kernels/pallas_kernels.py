@@ -1,0 +1,137 @@
+"""Layer-1 Pallas kernels for the TGM compute hot-spots.
+
+All kernels run with ``interpret=True``: the image's CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode lowers each kernel
+to plain HLO that any backend runs (see /opt/xla-example/README.md).
+Block shapes are nevertheless chosen for the *TPU* memory system — tiles
+sized for VMEM (<16 MiB), last dims padded toward the 128-lane registers,
+matmul tiles in 128-multiples for the MXU systolic array — so the same
+BlockSpecs compile for real hardware. DESIGN.md §Hardware-Adaptation
+records the VMEM/MXU estimates per kernel.
+
+Shape contract: wrappers in ``kernels/__init__.py`` pad leading dims to
+block multiples and slice the result, so callers may pass any shape.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Block of seeds processed per grid step. 128 keeps every operand tile
+# well under VMEM: the largest (DyGFormer K=32, D=64 keys) is
+# 128*32*64*4B = 1 MiB.
+SEED_BLOCK = 128
+# MXU-friendly matmul tiles.
+MM_BLOCK_M = 128
+MM_BLOCK_K = 512
+MM_BLOCK_N = 128
+# 1-D elementwise block (time encoding).
+ELT_BLOCK = 512
+
+
+def _time_encode_kernel(dt_ref, w_ref, b_ref, o_ref):
+    """o[s, :] = cos(dt[s] * w + b) for a block of S positions."""
+    dt = dt_ref[...]  # [bs]
+    w = w_ref[...]  # [Dt]
+    b = b_ref[...]  # [Dt]
+    o_ref[...] = jnp.cos(dt[:, None] * w[None, :] + b[None, :])
+
+
+def time_encode_pallas(dt, w, b):
+    """Pallas forward of ref.time_encode for 1-D dt: [S] -> [S, Dt]."""
+    s = dt.shape[0]
+    dt_dim = w.shape[0]
+    grid = (s // ELT_BLOCK,) if s >= ELT_BLOCK else (1,)
+    bs = s // grid[0]
+    return pl.pallas_call(
+        _time_encode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((dt_dim,), lambda i: (0,)),
+            pl.BlockSpec((dt_dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bs, dt_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, dt_dim), jnp.float32),
+        interpret=True,
+    )(dt, w, b)
+
+
+def _neighbor_attention_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref):
+    """Fused masked attention for a block of seeds.
+
+    The (seeds x K) score matrix lives entirely in VMEM; softmax and the
+    weighted value sum are fused so scores never round-trip to HBM — the
+    TPU rethink of the paper's GPU per-threadblock neighborhood gather.
+    """
+    q = q_ref[...]  # [bs, D]
+    k = k_ref[...]  # [bs, K, D]
+    v = v_ref[...]  # [bs, K, Dv]
+    mask = mask_ref[...]  # [bs, K]
+    d = q.shape[-1]
+    scores = jnp.einsum("sd,skd->sk", q, k) / jnp.sqrt(jnp.float32(d))
+    scores = jnp.where(mask > 0, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m) * (mask > 0)
+    denom = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-9)
+    o_ref[...] = jnp.einsum("sk,skv->sv", e / denom, v)
+
+
+def neighbor_attention_pallas(q, k, v, mask):
+    """Pallas forward of ref.neighbor_attention (shapes pre-padded)."""
+    s, d = q.shape
+    kk = k.shape[1]
+    dv = v.shape[2]
+    grid = (s // SEED_BLOCK,) if s >= SEED_BLOCK else (1,)
+    bs = s // grid[0]
+    return pl.pallas_call(
+        _neighbor_attention_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+            pl.BlockSpec((bs, kk, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bs, kk, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bs, kk), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, dv), jnp.float32),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, k_steps):
+    """Accumulating [bm, bk] @ [bk, bn] tile matmul (MXU tile shape)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+    del k_steps
+
+
+def matmul_pallas(a, b):
+    """Blocked Pallas matmul: [M, K] @ [K, N] (shapes pre-padded)."""
+    m, kdim = a.shape
+    n = b.shape[1]
+    bm = min(m, MM_BLOCK_M)
+    bk = min(kdim, MM_BLOCK_K)
+    bn = min(n, MM_BLOCK_N)
+    grid = (m // bm, n // bn, kdim // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

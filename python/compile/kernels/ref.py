@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness contract).
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` ops. The pytest suite asserts kernel == ref
+under ``assert_allclose``; the kernels' backward passes are *defined* as
+the vjp of these references (see ``kernels/__init__.py``), so matching
+forwards guarantee consistent training behaviour.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def time_encode(dt, w, b):
+    """Bochner/Time2Vec encoding: cos(dt * w + b).
+
+    Args:
+      dt: [...] non-negative time deltas.
+      w:  [Dt] trainable frequencies.
+      b:  [Dt] trainable phases.
+    Returns:
+      [..., Dt] encoding.
+    """
+    return jnp.cos(dt[..., None] * w + b)
+
+
+def neighbor_attention(q, k, v, mask):
+    """Masked single-head attention over K sampled neighbors.
+
+    Args:
+      q:    [S, D]      per-seed query.
+      k:    [S, K, D]   per-neighbor keys.
+      v:    [S, K, Dv]  per-neighbor values.
+      mask: [S, K]      1.0 = valid neighbor, 0.0 = padding.
+    Returns:
+      [S, Dv] attention output; rows with no valid neighbor are zero.
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("sd,skd->sk", q, k) / jnp.sqrt(jnp.float32(d))
+    scores = jnp.where(mask > 0, scores, NEG_INF)
+    # Stable softmax that yields exact zeros for fully-masked rows.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(m)) * (mask > 0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    attn = e / jnp.maximum(denom, 1e-9)
+    return jnp.einsum("sk,skv->sv", attn, v)
+
+
+def matmul(a, b):
+    """Plain f32 matmul: [M, K] @ [K, N] -> [M, N]."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def decayed_propagate(reps, gamma, onehot_src, onehot_dst, w):
+    """TPNet-style random-feature propagation step.
+
+    new_reps = gamma ⊙ reps + onehot_srcᵀ @ ((onehot_dst @ reps) @ w)
+
+    Args:
+      reps:       [N, R] node representation matrix.
+      gamma:      [N, 1] per-node time-decay factors.
+      onehot_src: [B, N] one-hot rows selecting update targets.
+      onehot_dst: [B, N] one-hot rows selecting propagation sources.
+      w:          [R, R] projection.
+    Returns:
+      [N, R] updated representations.
+    """
+    gathered = matmul(onehot_dst, reps)  # [B, R]
+    msg = matmul(gathered, w)  # [B, R]
+    scattered = matmul(onehot_src.T, msg)  # [N, R]
+    return gamma * reps + scattered

@@ -1,0 +1,73 @@
+"""Model registry: (model, task) variants -> AOT-lowerable flat functions.
+
+Each model def (from ``models/*.build``) carries:
+
+* ``init_state(seed)`` — the canonical state pytree (params + Adam slots
+  + model state),
+* ``specs`` — ordered batch-input specs per function kind
+  (``train``/``predict``/``update``): ``(name, dtype, shape)`` tuples,
+* ``fns`` — the pytree-level functions.
+
+``flatten_model`` turns these into positional-argument functions whose
+signature is ``(state..., batch...)`` in manifest order, ready for
+``jax.jit(...).lower`` with static shapes. Outputs are ``(*state, loss)``
+for train, ``(scores,)`` for predict, ``(*state,)`` for update.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import CTDG, DIMS, DTDG
+from .models import dygformer, graphmixer, snapshot, tgat, tgn, tpnet
+
+
+def registry():
+    """All model variants keyed by name (16 models, 44 artifacts)."""
+    defs = [
+        tgat.build(CTDG, DIMS),
+        tgn.build(CTDG, DIMS, "link"),
+        tgn.build(CTDG, DIMS, "node"),
+        graphmixer.build(CTDG, DIMS),
+        dygformer.build(CTDG, DIMS, "link"),
+        dygformer.build(CTDG, DIMS, "node"),
+        tpnet.build(CTDG, DIMS),
+    ]
+    for arch in ("gcn", "gclstm", "tgcn"):
+        for task in ("link", "node", "graph"):
+            defs.append(snapshot.build(DTDG, DIMS, arch, task))
+    return {d["name"]: d for d in defs}
+
+
+def state_leaves(model_def, seed=0):
+    """Canonical flat state tensors (tree_flatten order) and treedef."""
+    state = model_def["init_state"](seed)
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    return leaves, treedef
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def batch_shape_structs(spec):
+    """ShapeDtypeStructs for a batch spec list."""
+    return [jax.ShapeDtypeStruct(shape, _DTYPES[dt]) for (_, dt, shape) in spec]
+
+
+def flatten_model(model_def, kind, treedef, n_state):
+    """Positional wrapper for one artifact kind."""
+    spec = model_def["specs"][kind]
+    fn = model_def["fns"][kind]
+    names = [name for (name, _, _) in spec]
+
+    def flat(*args):
+        state = jax.tree_util.tree_unflatten(treedef, args[:n_state])
+        batch = dict(zip(names, args[n_state:]))
+        if kind == "train":
+            new_state, loss = fn(state, batch)
+            return tuple(jax.tree_util.tree_flatten(new_state)[0]) + (loss,)
+        if kind == "predict":
+            return (fn(state, batch),)
+        new_state = fn(state, batch)
+        return tuple(jax.tree_util.tree_flatten(new_state)[0])
+
+    return flat

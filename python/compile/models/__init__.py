@@ -1,0 +1,2 @@
+"""L2 model zoo. Every module exposes ``build(...) -> model def dict``
+with keys: name, profile, init_state, specs, fns (see model.py)."""

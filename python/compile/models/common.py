@@ -1,0 +1,186 @@
+"""Shared L2 building blocks: initializers, MLPs, Adam, losses.
+
+State layout contract (consumed by aot.py and the Rust runtime):
+every model's state is a pytree ``dict`` —
+
+    {"params": {...}, "m": {...}, "v": {...}, "step": f32[],
+     "extra": {...model state: memory, recurrent h/c, reps...}}
+
+``jax.tree_util.tree_flatten`` over this dict (sorted keys) defines the
+canonical tensor order written to the manifest and the ``.state.bin``
+blob; the Rust side threads the same flat list through every call.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------
+
+
+def glorot(rng: np.random.Generator, shape):
+    """Glorot-uniform init as f32 (numpy so init is jit-free)."""
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return jnp.asarray(rng.uniform(-lim, lim, shape), jnp.float32)
+
+
+def zeros(shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def linear_init(rng, d_in, d_out):
+    return {"w": glorot(rng, (d_in, d_out)), "b": zeros((d_out,))}
+
+
+def mlp2_init(rng, d_in, d_hidden, d_out):
+    return {"l1": linear_init(rng, d_in, d_hidden), "l2": linear_init(rng, d_hidden, d_out)}
+
+
+def time_encoder_init(rng, d_time):
+    """Bochner time encoder: log-spaced frequencies (TGAT init)."""
+    freqs = 1.0 / (10.0 ** np.linspace(0, 6, d_time))
+    del rng
+    return {"w": jnp.asarray(freqs, jnp.float32), "b": zeros((d_time,))}
+
+
+def make_state(params, extra=None):
+    """Wrap params (+model state) with fresh Adam slots."""
+    zeros_like = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {
+        "params": params,
+        "m": zeros_like,
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.float32),
+        "extra": extra or {},
+    }
+
+
+# ---------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------
+
+
+def linear(p, x):
+    return jnp.dot(x, p["w"]) + p["b"]
+
+
+def mlp2(p, x):
+    return linear(p["l2"], jax.nn.relu(linear(p["l1"], x)))
+
+
+def layer_norm(x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+# ---------------------------------------------------------------------
+# optimizer (inside the AOT train step)
+# ---------------------------------------------------------------------
+
+
+def adam_step(state, grads, lr):
+    """One Adam update over state['params']; returns the new state."""
+    step = state["step"] + 1.0
+    b1c = 1.0 - ADAM_B1**step
+    b2c = 1.0 - ADAM_B2**step
+    m = jax.tree_util.tree_map(
+        lambda m_, g: ADAM_B1 * m_ + (1 - ADAM_B1) * g, state["m"], grads
+    )
+    v = jax.tree_util.tree_map(
+        lambda v_, g: ADAM_B2 * v_ + (1 - ADAM_B2) * g * g, state["v"], grads
+    )
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / b1c) / (jnp.sqrt(v_ / b2c) + ADAM_EPS),
+        state["params"],
+        m,
+        v,
+    )
+    return {**state, "params": params, "m": m, "v": v, "step": step}
+
+
+# ---------------------------------------------------------------------
+# losses & decoders
+# ---------------------------------------------------------------------
+
+
+def bce_link_loss(pos_logits, neg_logits, valid):
+    """Masked binary cross-entropy on positive vs negative link logits."""
+    ls = jax.nn.log_sigmoid
+    per_edge = -(ls(pos_logits) + ls(-neg_logits))
+    return jnp.sum(per_edge * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def node_property_loss(logits, target, valid):
+    """Masked cross-entropy between predicted logits [B,P] and a target
+    distribution [B,P] (Trade/Genre-style proportion prediction)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    per_node = -jnp.sum(target * logp, axis=-1)
+    return jnp.sum(per_node * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def graph_property_loss(logit, label):
+    """BCE for snapshot-level binary prediction (RQ1 growth task)."""
+    return -(
+        label * jax.nn.log_sigmoid(logit) + (1.0 - label) * jax.nn.log_sigmoid(-logit)
+    )
+
+
+def link_decoder_init(rng, d):
+    return mlp2_init(rng, 2 * d, d, 1)
+
+
+def link_decode(p, h_src, h_dst):
+    """MLP link decoder on concatenated endpoint embeddings -> logit."""
+    return mlp2(p, jnp.concatenate([h_src, h_dst], axis=-1))[..., 0]
+
+
+def onehot(idx, n):
+    """Dense one-hot rows [B, N] (scatter-free, MXU-friendly)."""
+    return jax.nn.one_hot(idx, n, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------
+# multi-head attention over sampled neighbors (Pallas-backed)
+# ---------------------------------------------------------------------
+
+
+def mha_init(rng, d_q, d_kv, d_model):
+    return {
+        "wq": linear_init(rng, d_q, d_model),
+        "wk": linear_init(rng, d_kv, d_model),
+        "wv": linear_init(rng, d_kv, d_model),
+        "wo": linear_init(rng, d_model, d_model),
+    }
+
+
+def mha_neighbors(p, q_in, kv_in, mask, heads):
+    """Multi-head attention of each seed over its K sampled neighbors.
+
+    q_in: [S, Dq], kv_in: [S, K, Dkv], mask: [S, K] -> [S, D].
+    Heads are folded into the seed axis so the Pallas kernel stays
+    single-head ([S*H, K, Dh] tiles in VMEM).
+    """
+    from .. import kernels  # local import: keep module import-light
+
+    q = linear(p["wq"], q_in)
+    k = linear(p["wk"], kv_in)
+    v = linear(p["wv"], kv_in)
+    s, kk, d = k.shape
+    h = heads
+    dh = d // h
+    qf = q.reshape(s, h, dh).swapaxes(0, 1).reshape(s * h, dh)
+    kf = k.reshape(s, kk, h, dh).transpose(2, 0, 1, 3).reshape(s * h, kk, dh)
+    vf = v.reshape(s, kk, h, dh).transpose(2, 0, 1, 3).reshape(s * h, kk, dh)
+    mf = jnp.tile(mask, (h, 1))
+    out = kernels.neighbor_attention(qf, kf, vf, mf)
+    out = out.reshape(h, s, dh).swapaxes(0, 1).reshape(s, d)
+    return linear(p["wo"], out)

@@ -1,0 +1,212 @@
+"""DyGFormer (Yu et al., 2023): transformer over recent-neighbor sequences.
+
+Per endpoint, the L most recent interactions form a sequence of tokens:
+edge features + time encoding + *neighbor co-occurrence* counts between
+the two endpoints' sequences (the model's key inductive signal). Patches
+of consecutive tokens are projected and fed through a small transformer
+encoder; mean pooling yields the endpoint embedding.
+
+Supports link prediction and node property prediction.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import kernels
+from . import common as cm
+
+
+def _mha_tokens_init(rng, d, heads):
+    del heads
+    return {
+        "wq": cm.linear_init(rng, d, d),
+        "wk": cm.linear_init(rng, d, d),
+        "wv": cm.linear_init(rng, d, d),
+        "wo": cm.linear_init(rng, d, d),
+    }
+
+
+def _mha_tokens(p, x, heads):
+    """Standard self-attention over a short token axis: [S, T, D]."""
+    s, t, d = x.shape
+    dh = d // heads
+    q = cm.linear(p["wq"], x).reshape(s, t, heads, dh)
+    k = cm.linear(p["wk"], x).reshape(s, t, heads, dh)
+    v = cm.linear(p["wv"], x).reshape(s, t, heads, dh)
+    scores = jnp.einsum("sthd,suhd->shtu", q, k) / jnp.sqrt(jnp.float32(dh))
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("shtu,suhd->sthd", attn, v).reshape(s, t, d)
+    return cm.linear(p["wo"], out)
+
+
+def _encoder_layer_init(rng, d, heads):
+    return {
+        "attn": _mha_tokens_init(rng, d, heads),
+        "ffn": cm.mlp2_init(rng, d, 2 * d, d),
+    }
+
+
+def _encoder_layer(p, x, heads):
+    x = x + _mha_tokens(p["attn"], cm.layer_norm(x), heads)
+    return x + cm.mlp2(p["ffn"], cm.layer_norm(x))
+
+
+def _cooccurrence(a_ids, a_mask, b_ids, b_mask):
+    """Per-position co-occurrence counts of a's neighbors in a and in b.
+
+    a_ids/b_ids: [S, L]; returns [S, L, 2] (count in own seq, in other).
+    """
+    eq_aa = (a_ids[:, :, None] == a_ids[:, None, :]).astype(jnp.float32)
+    eq_ab = (a_ids[:, :, None] == b_ids[:, None, :]).astype(jnp.float32)
+    in_a = (eq_aa * a_mask[:, None, :]).sum(-1)
+    in_b = (eq_ab * b_mask[:, None, :]).sum(-1)
+    return jnp.stack([in_a, in_b], axis=-1) * a_mask[..., None]
+
+
+def _init_params(profile, dims, seed, task):
+    rng = np.random.default_rng(seed)
+    d = dims.embed
+    tok_in = (profile.d_edge + dims.time + profile.d_static + 2) * dims.patch
+    params = {
+        "te": cm.time_encoder_init(rng, dims.time),
+        "patch_proj": cm.linear_init(rng, tok_in, d),
+        "enc1": _encoder_layer_init(rng, d, dims.heads),
+        "enc2": _encoder_layer_init(rng, d, dims.heads),
+        "out": cm.linear_init(rng, d, d),
+    }
+    if task == "link":
+        params["dec"] = cm.link_decoder_init(rng, d)
+    else:
+        params["head"] = cm.mlp2_init(rng, d, d, profile.p)
+    return params
+
+
+def _encode(params, dims, profile, node_feats, nbr, cooc):
+    """Sequence encoding of S endpoints: nbr arrays [S, L, ...]."""
+    ids, dt, mask, feats = nbr
+    s, length = ids.shape
+    te = kernels.time_encode(dt, params["te"]["w"], params["te"]["b"])
+    nf = node_feats[ids.reshape(-1)].reshape(s, length, -1)
+    x = jnp.concatenate([feats, te, nf, cooc], axis=-1) * mask[..., None]
+    # Patching: group `patch` consecutive tokens.
+    t = length // dims.patch
+    x = x.reshape(s, t, -1)
+    x = cm.linear(params["patch_proj"], x)
+    x = _encoder_layer(params["enc1"], x, dims.heads)
+    x = _encoder_layer(params["enc2"], x, dims.heads)
+    return cm.linear(params["out"], x.mean(axis=1))
+
+
+def _nbr_block(prefix, p, rows):
+    return [
+        (f"{prefix}ids", "i32", (rows, p.seq)),
+        (f"{prefix}dt", "f32", (rows, p.seq)),
+        (f"{prefix}mask", "f32", (rows, p.seq)),
+        (f"{prefix}feats", "f32", (rows, p.seq, p.d_edge)),
+    ]
+
+
+def build(profile, dims, task="link"):
+    """DyGFormer model definition (task = "link" | "node")."""
+    p = profile
+
+    if task == "link":
+        specs = {
+            "train": [
+                ("node_feats", "f32", (p.n, p.d_static)),
+                ("src", "i32", (p.b,)),
+                ("dst", "i32", (p.b,)),
+                ("neg", "i32", (p.b,)),
+                ("t", "f32", (p.b,)),
+                ("valid", "f32", (p.b,)),
+            ]
+            + _nbr_block("nbr_", p, 3 * p.b),
+            "predict": [
+                ("node_feats", "f32", (p.n, p.d_static)),
+                ("src", "i32", (p.b,)),
+                ("cand", "i32", (p.b, p.c)),
+                ("t", "f32", (p.b,)),
+                ("valid", "f32", (p.b,)),
+            ]
+            + _nbr_block("src_nbr_", p, p.b)
+            + _nbr_block("cand_nbr_", p, p.b * p.c),
+        }
+    else:
+        specs = {
+            "train": [
+                ("node_feats", "f32", (p.n, p.d_static)),
+                ("nodes", "i32", (p.b,)),
+                ("target", "f32", (p.b, p.p)),
+                ("t", "f32", (p.b,)),
+                ("valid", "f32", (p.b,)),
+            ]
+            + _nbr_block("nbr_", p, p.b),
+            "predict": [
+                ("node_feats", "f32", (p.n, p.d_static)),
+                ("nodes", "i32", (p.b,)),
+                ("t", "f32", (p.b,)),
+                ("valid", "f32", (p.b,)),
+            ]
+            + _nbr_block("nbr_", p, p.b),
+        }
+
+    def init_state(seed):
+        return cm.make_state(_init_params(profile, dims, seed, task))
+
+    def nbr_slice(batch, prefix, lo, hi):
+        return tuple(batch[f"{prefix}{f}"][lo:hi] for f in ("ids", "dt", "mask", "feats"))
+
+    def pair_embed(params, node_feats, nbr_a, nbr_b):
+        """Joint (a|b) and (b|a) embeddings with cross co-occurrence."""
+        cooc_a = _cooccurrence(nbr_a[0], nbr_a[2], nbr_b[0], nbr_b[2])
+        cooc_b = _cooccurrence(nbr_b[0], nbr_b[2], nbr_a[0], nbr_a[2])
+        ha = _encode(params, dims, p, node_feats, nbr_a, cooc_a)
+        hb = _encode(params, dims, p, node_feats, nbr_b, cooc_b)
+        return ha, hb
+
+    def loss_fn(params, batch):
+        b = p.b
+        if task == "link":
+            nbr_src = nbr_slice(batch, "nbr_", 0, b)
+            nbr_dst = nbr_slice(batch, "nbr_", b, 2 * b)
+            nbr_neg = nbr_slice(batch, "nbr_", 2 * b, 3 * b)
+            hs, hd = pair_embed(params, batch["node_feats"], nbr_src, nbr_dst)
+            hs2, hn = pair_embed(params, batch["node_feats"], nbr_src, nbr_neg)
+            pos = cm.link_decode(params["dec"], hs, hd)
+            neg = cm.link_decode(params["dec"], hs2, hn)
+            return cm.bce_link_loss(pos, neg, batch["valid"])
+        nbr = nbr_slice(batch, "nbr_", 0, b)
+        cooc = _cooccurrence(nbr[0], nbr[2], nbr[0], nbr[2])
+        h = _encode(params, dims, p, batch["node_feats"], nbr, cooc)
+        logits = cm.mlp2(params["head"], h)
+        return cm.node_property_loss(logits, batch["target"], batch["valid"])
+
+    def train(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        return cm.adam_step(state, grads, dims.lr), loss
+
+    def predict(state, batch):
+        params = state["params"]
+        if task == "link":
+            b, c = p.b, p.c
+            nbr_src = nbr_slice(batch, "src_nbr_", 0, b)
+            nbr_cand = nbr_slice(batch, "cand_nbr_", 0, b * c)
+            # Tile src sequences against every candidate.
+            tiled = tuple(
+                jnp.repeat(x, c, axis=0) for x in nbr_src
+            )  # [B*C, L, ...]
+            hs, hc = pair_embed(params, batch["node_feats"], tiled, nbr_cand)
+            return cm.link_decode(params["dec"], hs, hc).reshape(b, c)
+        nbr = nbr_slice(batch, "nbr_", 0, p.b)
+        cooc = _cooccurrence(nbr[0], nbr[2], nbr[0], nbr[2])
+        h = _encode(params, dims, p, batch["node_feats"], nbr, cooc)
+        return cm.mlp2(params["head"], h)
+
+    return {
+        "name": f"dygformer_{task}",
+        "profile": profile,
+        "init_state": init_state,
+        "specs": specs,
+        "fns": {"train": train, "predict": predict},
+    }

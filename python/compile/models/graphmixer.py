@@ -1,0 +1,131 @@
+"""GraphMixer (Sarıgün, 2023 adaptation): MLP-Mixer over recent neighbors.
+
+Tokens are the K most recent neighbor interactions (edge features +
+Bochner time encoding); mixer blocks alternate token-mixing and
+channel-mixing MLPs, followed by mean pooling and a static-feature
+branch. Parameter-efficient and attention-free.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import kernels
+from . import common as cm
+
+
+def _mixer_block_init(rng, tokens, channels, t_hidden, c_hidden):
+    return {
+        "tok": cm.mlp2_init(rng, tokens, t_hidden, tokens),
+        "chan": cm.mlp2_init(rng, channels, c_hidden, channels),
+    }
+
+
+def _mixer_block(p, x):
+    """x: [S, K, C] -> token-mix over K, then channel-mix over C."""
+    y = x + cm.mlp2(p["tok"], cm.layer_norm(x).swapaxes(-1, -2)).swapaxes(-1, -2)
+    return y + cm.mlp2(p["chan"], cm.layer_norm(y))
+
+
+def _init_params(profile, dims, seed):
+    rng = np.random.default_rng(seed)
+    d = dims.embed
+    chan = profile.d_edge + dims.time
+    # Table 14: token-dim factor 0.5, channel-dim factor 4.0.
+    t_hidden = max(int(profile.k * 0.5), 4)
+    c_hidden = chan * 4
+    return {
+        "te": cm.time_encoder_init(rng, dims.time),
+        "block1": _mixer_block_init(rng, profile.k, chan, t_hidden, c_hidden),
+        "block2": _mixer_block_init(rng, profile.k, chan, t_hidden, c_hidden),
+        "out": cm.linear_init(rng, chan, d),
+        "node": cm.linear_init(rng, profile.d_static, d),
+        "dec": cm.link_decoder_init(rng, d),
+    }
+
+
+def _embed(params, node_feats, seed_ids, nbr):
+    ids, dt, mask, feats = nbr
+    del ids
+    te = kernels.time_encode(dt, params["te"]["w"], params["te"]["b"])
+    x = jnp.concatenate([feats, te], axis=-1) * mask[..., None]
+    x = _mixer_block(params["block1"], x)
+    x = _mixer_block(params["block2"], x)
+    pooled = x.sum(axis=1) / jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    return cm.linear(params["out"], pooled) + cm.linear(params["node"], node_feats[seed_ids])
+
+
+def _nbr_block(prefix, p, rows):
+    return [
+        (f"{prefix}ids", "i32", (rows, p.k)),
+        (f"{prefix}dt", "f32", (rows, p.k)),
+        (f"{prefix}mask", "f32", (rows, p.k)),
+        (f"{prefix}feats", "f32", (rows, p.k, p.d_edge)),
+    ]
+
+
+def build(profile, dims):
+    """GraphMixer link-prediction model definition."""
+    p = profile
+
+    specs = {
+        "train": [
+            ("node_feats", "f32", (p.n, p.d_static)),
+            ("src", "i32", (p.b,)),
+            ("dst", "i32", (p.b,)),
+            ("neg", "i32", (p.b,)),
+            ("t", "f32", (p.b,)),
+            ("valid", "f32", (p.b,)),
+        ]
+        + _nbr_block("nbr_", p, 3 * p.b),
+        "predict": [
+            ("node_feats", "f32", (p.n, p.d_static)),
+            ("src", "i32", (p.b,)),
+            ("cand", "i32", (p.b, p.c)),
+            ("t", "f32", (p.b,)),
+            ("valid", "f32", (p.b,)),
+        ]
+        + _nbr_block("src_nbr_", p, p.b)
+        + _nbr_block("cand_nbr_", p, p.b * p.c),
+    }
+
+    def init_state(seed):
+        return cm.make_state(_init_params(profile, dims, seed))
+
+    def nbr(batch, prefix="nbr_"):
+        return (
+            batch[f"{prefix}ids"],
+            batch[f"{prefix}dt"],
+            batch[f"{prefix}mask"],
+            batch[f"{prefix}feats"],
+        )
+
+    def loss_fn(params, batch):
+        seeds = jnp.concatenate([batch["src"], batch["dst"], batch["neg"]])
+        h = _embed(params, batch["node_feats"], seeds, nbr(batch))
+        b = p.b
+        pos = cm.link_decode(params["dec"], h[:b], h[b : 2 * b])
+        neg = cm.link_decode(params["dec"], h[:b], h[2 * b :])
+        return cm.bce_link_loss(pos, neg, batch["valid"])
+
+    def train(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        # Table 14: GraphMixer lr 2e-4.
+        return cm.adam_step(state, grads, 2e-4), loss
+
+    def predict(state, batch):
+        params = state["params"]
+        h_src = _embed(params, batch["node_feats"], batch["src"], nbr(batch, "src_nbr_"))
+        h_cand = _embed(
+            params, batch["node_feats"], batch["cand"].reshape(-1), nbr(batch, "cand_nbr_")
+        ).reshape(p.b, p.c, dims.embed)
+        h_src_t = jnp.broadcast_to(h_src[:, None, :], (p.b, p.c, dims.embed))
+        return cm.link_decode(params["dec"], h_src_t, h_cand)
+
+    return {
+        "name": "graphmixer_link",
+        "profile": profile,
+        "init_state": init_state,
+        "specs": specs,
+        "fns": {"train": train, "predict": predict},
+    }

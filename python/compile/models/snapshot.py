@@ -1,0 +1,182 @@
+"""Snapshot (DTDG) models: GCN, GCLSTM, T-GCN (paper §B.1, Table 14).
+
+All three share the spatial encoder — a two-layer GCN over the dense
+symmetric-normalized snapshot adjacency produced by the Rust
+`SnapshotAdjHook` — with the `Â @ X` aggregations running through the
+Pallas blocked matmul (the MXU-oriented rethink of GPU SpMM, see
+DESIGN.md §Hardware-Adaptation). They differ in the temporal encoder:
+
+* **GCN** — none (each snapshot independent),
+* **T-GCN** — GRU over snapshot embeddings,
+* **GCLSTM** — LSTM over snapshot embeddings.
+
+Each supports three tasks: `link` (predict next-snapshot edges), `node`
+(next-period property distribution), `graph` (binary growth label, RQ1).
+Recurrent state advances with truncated BPTT-1 (carried state is
+stop-gradiented), and `update` advances state during evaluation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import kernels
+from . import common as cm
+
+
+def _gcn2_init(rng, d_in, d_h, d_out):
+    return {
+        "w1": cm.linear_init(rng, d_in, d_h),
+        "w2": cm.linear_init(rng, d_h, d_out),
+    }
+
+
+def _gcn2(p, adj, x):
+    """Two-layer GCN: relu(Â relu(Â X W1) W2), Pallas matmuls."""
+    h = jax.nn.relu(kernels.matmul(adj, cm.linear(p["w1"], x)))
+    return jax.nn.relu(kernels.matmul(adj, cm.linear(p["w2"], h)))
+
+
+def _lstm_init(rng, d_in, d_h):
+    return {"w": cm.linear_init(rng, d_in + d_h, 4 * d_h)}
+
+
+def _lstm(p, x, h, c):
+    gates = cm.linear(p["w"], jnp.concatenate([x, h], axis=-1))
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c2 = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h2 = jax.nn.sigmoid(o) * jnp.tanh(c2)
+    return h2, c2
+
+
+def _gru_init(rng, d_in, d_h):
+    return {
+        "wz": cm.linear_init(rng, d_in + d_h, d_h),
+        "wr": cm.linear_init(rng, d_in + d_h, d_h),
+        "wh": cm.linear_init(rng, d_in + d_h, d_h),
+    }
+
+
+def _gru(p, x, h):
+    xh = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(cm.linear(p["wz"], xh))
+    r = jax.nn.sigmoid(cm.linear(p["wr"], xh))
+    hh = jnp.tanh(cm.linear(p["wh"], jnp.concatenate([x, r * h], axis=-1)))
+    return (1.0 - z) * h + z * hh
+
+
+def _init_params(profile, dims, seed, arch, task):
+    rng = np.random.default_rng(seed)
+    d = dims.embed
+    params = {"gcn": _gcn2_init(rng, profile.d_static, dims.hidden, d)}
+    if arch == "gclstm":
+        params["cell"] = _lstm_init(rng, d, d)
+    elif arch == "tgcn":
+        params["cell"] = _gru_init(rng, d, d)
+    if task == "link":
+        params["dec"] = cm.link_decoder_init(rng, d)
+    elif task == "node":
+        params["head"] = cm.mlp2_init(rng, d, d, profile.p)
+    else:
+        params["graph_head"] = cm.mlp2_init(rng, d, d, 1)
+    return params
+
+
+def _advance(params, arch, extra, adj, node_feats):
+    """Run one snapshot through the spatial+temporal encoders."""
+    x = _gcn2(params["gcn"], adj, node_feats)
+    if arch == "gcn":
+        return x, extra
+    h = jax.lax.stop_gradient(extra["h"])
+    if arch == "gclstm":
+        c = jax.lax.stop_gradient(extra["c"])
+        h2, c2 = _lstm(params["cell"], x, h, c)
+        return h2, {**extra, "h": h2, "c": c2}
+    h2 = _gru(params["cell"], x, h)
+    return h2, {**extra, "h": h2}
+
+
+def build(profile, dims, arch, task):
+    """Snapshot model definition (arch ∈ {gcn,gclstm,tgcn}, task ∈
+    {link,node,graph})."""
+    p = profile
+    d = dims.embed
+
+    base = [("node_feats", "f32", (p.n, p.d_static)), ("adj", "f32", (p.n, p.n))]
+    if task == "link":
+        train_q = [
+            ("src", "i32", (p.b,)),
+            ("dst", "i32", (p.b,)),
+            ("neg", "i32", (p.b,)),
+            ("valid", "f32", (p.b,)),
+        ]
+        pred_q = [("src", "i32", (p.b,)), ("cand", "i32", (p.b, p.c)), ("valid", "f32", (p.b,))]
+    elif task == "node":
+        train_q = [("nodes", "i32", (p.b,)), ("target", "f32", (p.b, p.p)), ("valid", "f32", (p.b,))]
+        pred_q = [("nodes", "i32", (p.b,)), ("valid", "f32", (p.b,))]
+    else:
+        train_q = [("label", "f32", ())]
+        pred_q = []
+
+    specs = {
+        "train": base + train_q,
+        # predict reads the stored embedding (advanced by train/update).
+        "predict": pred_q,
+        "update": base,
+    }
+
+    def init_state(seed):
+        params = _init_params(p, dims, seed, arch, task)
+        extra = {"emb": jnp.zeros((p.n, d), jnp.float32)}
+        if arch == "gclstm":
+            extra["h"] = jnp.zeros((p.n, d), jnp.float32)
+            extra["c"] = jnp.zeros((p.n, d), jnp.float32)
+        elif arch == "tgcn":
+            extra["h"] = jnp.zeros((p.n, d), jnp.float32)
+        return cm.make_state(params, extra)
+
+    def task_loss(params, emb, batch):
+        if task == "link":
+            pos = cm.link_decode(params["dec"], emb[batch["src"]], emb[batch["dst"]])
+            neg = cm.link_decode(params["dec"], emb[batch["src"]], emb[batch["neg"]])
+            return cm.bce_link_loss(pos, neg, batch["valid"])
+        if task == "node":
+            logits = cm.mlp2(params["head"], emb[batch["nodes"]])
+            return cm.node_property_loss(logits, batch["target"], batch["valid"])
+        logit = cm.mlp2(params["graph_head"], emb.mean(axis=0))[0]
+        return cm.graph_property_loss(logit, batch["label"])
+
+    def loss_fn(params, extra, batch):
+        emb, extra2 = _advance(params, arch, extra, batch["adj"], batch["node_feats"])
+        return task_loss(params, emb, batch), (emb, extra2)
+
+    def train(state, batch):
+        (loss, (emb, extra2)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], state["extra"], batch
+        )
+        state = cm.adam_step(state, grads, dims.lr_snapshot)
+        extra2 = jax.tree_util.tree_map(jax.lax.stop_gradient, {**extra2, "emb": emb})
+        return {**state, "extra": extra2}, loss
+
+    def predict(state, batch):
+        params, emb = state["params"], state["extra"]["emb"]
+        if task == "link":
+            b, c = p.b, p.c
+            h_src = jnp.broadcast_to(emb[batch["src"]][:, None, :], (b, c, d))
+            h_cand = emb[batch["cand"].reshape(-1)].reshape(b, c, d)
+            return cm.link_decode(params["dec"], h_src, h_cand)
+        if task == "node":
+            return cm.mlp2(params["head"], emb[batch["nodes"]])
+        return cm.mlp2(params["graph_head"], emb.mean(axis=0))
+
+    def update(state, batch):
+        emb, extra2 = _advance(state["params"], arch, state["extra"], batch["adj"], batch["node_feats"])
+        return {**state, "extra": {**extra2, "emb": emb}}
+
+    return {
+        "name": f"{arch}_{task}",
+        "profile": p,
+        "init_state": init_state,
+        "specs": specs,
+        "fns": {"train": train, "predict": predict, "update": update},
+    }

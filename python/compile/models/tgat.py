@@ -1,0 +1,165 @@
+"""TGAT (da Xu et al., 2020): two-layer temporal graph attention.
+
+Each seed embedding is computed by attending over its K sampled
+temporal neighbors, whose own embeddings come from a first attention
+layer over their K2 neighbors (hop-2). Time deltas enter through the
+Bochner time encoder; both the encoder and the masked attention run as
+Pallas kernels (L1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import kernels
+from . import common as cm
+
+
+def _specs_train(p):
+    s = 3 * p.b
+    return [
+        ("node_feats", "f32", (p.n, p.d_static)),
+        ("src", "i32", (p.b,)),
+        ("dst", "i32", (p.b,)),
+        ("neg", "i32", (p.b,)),
+        ("t", "f32", (p.b,)),
+        ("valid", "f32", (p.b,)),
+        ("nbr_ids", "i32", (s, p.k)),
+        ("nbr_dt", "f32", (s, p.k)),
+        ("nbr_mask", "f32", (s, p.k)),
+        ("nbr_feats", "f32", (s, p.k, p.d_edge)),
+        ("nbr2_ids", "i32", (s * p.k, p.k2)),
+        ("nbr2_dt", "f32", (s * p.k, p.k2)),
+        ("nbr2_mask", "f32", (s * p.k, p.k2)),
+        ("nbr2_feats", "f32", (s * p.k, p.k2, p.d_edge)),
+    ]
+
+
+def _specs_predict(p):
+    bc = p.b * p.c
+    return [
+        ("node_feats", "f32", (p.n, p.d_static)),
+        ("src", "i32", (p.b,)),
+        ("cand", "i32", (p.b, p.c)),
+        ("t", "f32", (p.b,)),
+        ("valid", "f32", (p.b,)),
+        ("src_nbr_ids", "i32", (p.b, p.k)),
+        ("src_nbr_dt", "f32", (p.b, p.k)),
+        ("src_nbr_mask", "f32", (p.b, p.k)),
+        ("src_nbr_feats", "f32", (p.b, p.k, p.d_edge)),
+        ("src_nbr2_ids", "i32", (p.b * p.k, p.k2)),
+        ("src_nbr2_dt", "f32", (p.b * p.k, p.k2)),
+        ("src_nbr2_mask", "f32", (p.b * p.k, p.k2)),
+        ("src_nbr2_feats", "f32", (p.b * p.k, p.k2, p.d_edge)),
+        ("cand_nbr_ids", "i32", (bc, p.k)),
+        ("cand_nbr_dt", "f32", (bc, p.k)),
+        ("cand_nbr_mask", "f32", (bc, p.k)),
+        ("cand_nbr_feats", "f32", (bc, p.k, p.d_edge)),
+        ("cand_nbr2_ids", "i32", (bc * p.k, p.k2)),
+        ("cand_nbr2_dt", "f32", (bc * p.k, p.k2)),
+        ("cand_nbr2_mask", "f32", (bc * p.k, p.k2)),
+        ("cand_nbr2_feats", "f32", (bc * p.k, p.k2, p.d_edge)),
+    ]
+
+
+def _init_params(profile, dims, seed):
+    rng = np.random.default_rng(seed)
+    d = dims.embed
+    kv_dim = d + dims.time + profile.d_edge
+    return {
+        "proj": cm.linear_init(rng, profile.d_static, d),
+        "te": cm.time_encoder_init(rng, dims.time),
+        "attn1": cm.mha_init(rng, d + dims.time, kv_dim, d),
+        "attn2": cm.mha_init(rng, d + dims.time, kv_dim, d),
+        "merge1": cm.mlp2_init(rng, 2 * d, d, d),
+        "merge2": cm.mlp2_init(rng, 2 * d, d, d),
+        "dec": cm.link_decoder_init(rng, d),
+    }
+
+
+def _layer(params, attn_key, merge_key, self_emb, nbr_emb, nbr_dt, nbr_mask, nbr_feats, heads):
+    """One TGAT layer: self_emb [S,D] attends over nbr_emb [S,K,D]."""
+    te0 = kernels.time_encode(jnp.zeros(self_emb.shape[0], jnp.float32), params["te"]["w"], params["te"]["b"])
+    q_in = jnp.concatenate([self_emb, te0], axis=-1)
+    te_n = kernels.time_encode(nbr_dt, params["te"]["w"], params["te"]["b"])
+    kv_in = jnp.concatenate([nbr_emb, te_n, nbr_feats], axis=-1)
+    attn = cm.mha_neighbors(params[attn_key], q_in, kv_in, nbr_mask, heads)
+    return cm.mlp2(params[merge_key], jnp.concatenate([attn, self_emb], axis=-1))
+
+
+def _embed(params, dims, node_feats, seed_ids, nbr, nbr2):
+    """Two-layer TGAT embedding for S seeds.
+
+    nbr = (ids [S,K], dt, mask, feats); nbr2 = (ids [S*K,K2], dt, mask, feats).
+    """
+    ids1, dt1, mask1, feats1 = nbr
+    ids2, dt2, mask2, feats2 = nbr2
+    s, k = ids1.shape
+    proj = lambda ids: cm.linear(params["proj"], node_feats[ids])
+
+    # Layer 1: embed every hop-1 neighbor by attending over its hop-2 ring.
+    h1_self = proj(ids1.reshape(-1))  # [S*K, D]
+    h1_nbr = proj(ids2.reshape(-1)).reshape(s * k, -1, dims.embed)  # [S*K, K2, D]
+    h1 = _layer(params, "attn1", "merge1", h1_self, h1_nbr, dt2, mask2, feats2, dims.heads)
+
+    # Layer 2: seeds attend over embedded hop-1 neighbors.
+    h2_self = proj(seed_ids)
+    h2_nbr = h1.reshape(s, k, dims.embed)
+    return _layer(params, "attn2", "merge2", h2_self, h2_nbr, dt1, mask1, feats1, dims.heads)
+
+
+def build(profile, dims):
+    """TGAT link-prediction model definition for `aot.py`."""
+
+    def init_state(seed):
+        return cm.make_state(_init_params(profile, dims, seed))
+
+    def loss_fn(params, batch):
+        seeds = jnp.concatenate([batch["src"], batch["dst"], batch["neg"]])
+        h = _embed(
+            params,
+            dims,
+            batch["node_feats"],
+            seeds,
+            (batch["nbr_ids"], batch["nbr_dt"], batch["nbr_mask"], batch["nbr_feats"]),
+            (batch["nbr2_ids"], batch["nbr2_dt"], batch["nbr2_mask"], batch["nbr2_feats"]),
+        )
+        b = profile.b
+        h_src, h_dst, h_neg = h[:b], h[b : 2 * b], h[2 * b :]
+        pos = cm.link_decode(params["dec"], h_src, h_dst)
+        neg = cm.link_decode(params["dec"], h_src, h_neg)
+        return cm.bce_link_loss(pos, neg, batch["valid"])
+
+    def train(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        return cm.adam_step(state, grads, dims.lr), loss
+
+    def predict(state, batch):
+        params = state["params"]
+        b, c, k = profile.b, profile.c, profile.k
+        h_src = _embed(
+            params,
+            dims,
+            batch["node_feats"],
+            batch["src"],
+            (batch["src_nbr_ids"], batch["src_nbr_dt"], batch["src_nbr_mask"], batch["src_nbr_feats"]),
+            (batch["src_nbr2_ids"], batch["src_nbr2_dt"], batch["src_nbr2_mask"], batch["src_nbr2_feats"]),
+        )
+        h_cand = _embed(
+            params,
+            dims,
+            batch["node_feats"],
+            batch["cand"].reshape(-1),
+            (batch["cand_nbr_ids"], batch["cand_nbr_dt"], batch["cand_nbr_mask"], batch["cand_nbr_feats"]),
+            (batch["cand_nbr2_ids"], batch["cand_nbr2_dt"], batch["cand_nbr2_mask"], batch["cand_nbr2_feats"]),
+        ).reshape(b, c, dims.embed)
+        h_src_tiled = jnp.broadcast_to(h_src[:, None, :], (b, c, dims.embed))
+        return cm.link_decode(params["dec"], h_src_tiled, h_cand)
+
+    return {
+        "name": "tgat_link",
+        "profile": profile,
+        "init_state": init_state,
+        "specs": {"train": _specs_train(profile), "predict": _specs_predict(profile)},
+        "fns": {"train": train, "predict": predict},
+    }

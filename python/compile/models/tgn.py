@@ -1,0 +1,231 @@
+"""TGN (Rossi et al., 2020): memory-based temporal graph network.
+
+State carries a per-node memory matrix and last-update times. The
+embedding module is one temporal-attention layer over sampled neighbors
+(memory + projected static features). Memory updates use a GRU cell over
+mean-aggregated messages and are expressed scatter-free as one-hot
+matmuls so the AOT graph keeps static shapes (MXU-friendly — see
+DESIGN.md §Hardware-Adaptation).
+
+Supports both link prediction and node property prediction (Table 4).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import kernels
+from . import common as cm
+
+
+def _gru_init(rng, d_in, d_h):
+    return {
+        "wz": cm.linear_init(rng, d_in + d_h, d_h),
+        "wr": cm.linear_init(rng, d_in + d_h, d_h),
+        "wh": cm.linear_init(rng, d_in + d_h, d_h),
+    }
+
+
+def _gru(p, x, h):
+    xh = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(cm.linear(p["wz"], xh))
+    r = jax.nn.sigmoid(cm.linear(p["wr"], xh))
+    hh = jnp.tanh(cm.linear(p["wh"], jnp.concatenate([x, r * h], axis=-1)))
+    return (1.0 - z) * h + z * hh
+
+
+def _init_params(profile, dims, seed, task):
+    rng = np.random.default_rng(seed)
+    d, m = dims.embed, dims.memory
+    msg_dim = 2 * m + dims.time + profile.d_edge
+    kv_dim = m + d + dims.time + profile.d_edge
+    params = {
+        "proj": cm.linear_init(rng, profile.d_static, d),
+        "te": cm.time_encoder_init(rng, dims.time),
+        "msg": cm.linear_init(rng, msg_dim, m),
+        "gru": _gru_init(rng, m, m),
+        "attn": cm.mha_init(rng, m + d + dims.time, kv_dim, d),
+        "merge": cm.mlp2_init(rng, d + m, d, d),
+    }
+    if task == "link":
+        params["dec"] = cm.link_decoder_init(rng, d)
+    else:
+        params["head"] = cm.mlp2_init(rng, d, d, profile.p)
+    return params
+
+
+def _embed(params, dims, memory, node_feats, seed_ids, nbr):
+    """One temporal-attention layer over memory-augmented neighbors."""
+    ids, dt, mask, feats = nbr
+    s, k = ids.shape
+    self_in = jnp.concatenate(
+        [
+            memory[seed_ids],
+            cm.linear(params["proj"], node_feats[seed_ids]),
+            kernels.time_encode(jnp.zeros(s, jnp.float32), params["te"]["w"], params["te"]["b"]),
+        ],
+        axis=-1,
+    )
+    te_n = kernels.time_encode(dt, params["te"]["w"], params["te"]["b"])
+    nbr_in = jnp.concatenate(
+        [
+            memory[ids.reshape(-1)].reshape(s, k, -1),
+            cm.linear(params["proj"], node_feats[ids.reshape(-1)]).reshape(s, k, -1),
+            te_n,
+            feats,
+        ],
+        axis=-1,
+    )
+    attn = cm.mha_neighbors(params["attn"], self_in, nbr_in, mask, dims.heads)
+    return cm.mlp2(params["merge"], jnp.concatenate([attn, memory[seed_ids]], axis=-1))
+
+
+def _memory_update(params, profile, extra, src, dst, t, valid, edge_feats):
+    """GRU memory update with mean message aggregation (scatter-free)."""
+    mem, last = extra["memory"], extra["last_update"]
+    n = profile.n
+
+    def messages(a_ids, b_ids):
+        dt = jnp.maximum(t - last[a_ids], 0.0)
+        te = kernels.time_encode(dt, params["te"]["w"], params["te"]["b"])
+        raw = jnp.concatenate([mem[a_ids], mem[b_ids], te, edge_feats], axis=-1)
+        return cm.linear(params["msg"], raw)
+
+    def apply(mem_in, ids, msg):
+        oh = cm.onehot(ids, n) * valid[:, None]  # [B, N]
+        count = oh.sum(axis=0)[:, None]  # [N, 1]
+        agg = kernels.matmul(oh.T, msg) / jnp.maximum(count, 1.0)
+        updated = _gru(params["gru"], agg, mem_in)
+        touched = jnp.minimum(count, 1.0)
+        return mem_in + touched * (updated - mem_in)
+
+    mem1 = apply(mem, src, messages(src, dst))
+    mem2 = apply(mem1, dst, messages(dst, src))
+    t_masked = t * valid - 1e30 * (1.0 - valid)
+    contrib = jnp.maximum(
+        (cm.onehot(src, n) * t_masked[:, None]).max(axis=0),
+        (cm.onehot(dst, n) * t_masked[:, None]).max(axis=0),
+    )
+    last2 = jnp.maximum(last, contrib)
+    return {"memory": mem2, "last_update": last2}
+
+
+def _nbr_block(prefix, p, rows):
+    return [
+        (f"{prefix}ids", "i32", (rows, p.k)),
+        (f"{prefix}dt", "f32", (rows, p.k)),
+        (f"{prefix}mask", "f32", (rows, p.k)),
+        (f"{prefix}feats", "f32", (rows, p.k, p.d_edge)),
+    ]
+
+
+def _specs(profile, task):
+    p = profile
+    base = [("node_feats", "f32", (p.n, p.d_static))]
+    update = [
+        ("src", "i32", (p.b,)),
+        ("dst", "i32", (p.b,)),
+        ("t", "f32", (p.b,)),
+        ("valid", "f32", (p.b,)),
+        ("edge_feats", "f32", (p.b, p.d_edge)),
+    ]
+    if task == "link":
+        train = base + [
+            ("src", "i32", (p.b,)),
+            ("dst", "i32", (p.b,)),
+            ("neg", "i32", (p.b,)),
+            ("t", "f32", (p.b,)),
+            ("valid", "f32", (p.b,)),
+            ("edge_feats", "f32", (p.b, p.d_edge)),
+        ] + _nbr_block("nbr_", p, 3 * p.b)
+        predict = base + [
+            ("src", "i32", (p.b,)),
+            ("cand", "i32", (p.b, p.c)),
+            ("t", "f32", (p.b,)),
+            ("valid", "f32", (p.b,)),
+        ] + _nbr_block("src_nbr_", p, p.b) + _nbr_block("cand_nbr_", p, p.b * p.c)
+    else:
+        train = base + [
+            ("nodes", "i32", (p.b,)),
+            ("target", "f32", (p.b, p.p)),
+            ("t", "f32", (p.b,)),
+            ("valid", "f32", (p.b,)),
+        ] + _nbr_block("nbr_", p, p.b)
+        predict = base + [
+            ("nodes", "i32", (p.b,)),
+            ("t", "f32", (p.b,)),
+            ("valid", "f32", (p.b,)),
+        ] + _nbr_block("nbr_", p, p.b)
+    return {"train": train, "predict": predict, "update": update}
+
+
+def build(profile, dims, task="link"):
+    """TGN model definition (task = "link" | "node")."""
+
+    def init_state(seed):
+        params = _init_params(profile, dims, seed, task)
+        extra = {
+            "memory": jnp.zeros((profile.n, dims.memory), jnp.float32),
+            "last_update": jnp.zeros((profile.n,), jnp.float32),
+        }
+        return cm.make_state(params, extra)
+
+    def nbr(batch, prefix="nbr_"):
+        return (
+            batch[f"{prefix}ids"],
+            batch[f"{prefix}dt"],
+            batch[f"{prefix}mask"],
+            batch[f"{prefix}feats"],
+        )
+
+    def loss_fn(params, extra, batch):
+        mem = jax.lax.stop_gradient(extra["memory"])
+        if task == "link":
+            seeds = jnp.concatenate([batch["src"], batch["dst"], batch["neg"]])
+            h = _embed(params, dims, mem, batch["node_feats"], seeds, nbr(batch))
+            b = profile.b
+            pos = cm.link_decode(params["dec"], h[:b], h[b : 2 * b])
+            neg = cm.link_decode(params["dec"], h[:b], h[2 * b :])
+            return cm.bce_link_loss(pos, neg, batch["valid"])
+        h = _embed(params, dims, mem, batch["node_feats"], batch["nodes"], nbr(batch))
+        logits = cm.mlp2(params["head"], h)
+        return cm.node_property_loss(logits, batch["target"], batch["valid"])
+
+    def train(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], state["extra"], batch)
+        state = cm.adam_step(state, grads, dims.lr)
+        if task == "link":
+            extra = _memory_update(
+                state["params"], profile, state["extra"],
+                batch["src"], batch["dst"], batch["t"], batch["valid"], batch["edge_feats"],
+            )
+            state = {**state, "extra": jax.tree_util.tree_map(jax.lax.stop_gradient, extra)}
+        return state, loss
+
+    def predict(state, batch):
+        params, mem = state["params"], state["extra"]["memory"]
+        if task == "link":
+            b, c = profile.b, profile.c
+            h_src = _embed(params, dims, mem, batch["node_feats"], batch["src"], nbr(batch, "src_nbr_"))
+            h_cand = _embed(
+                params, dims, mem, batch["node_feats"], batch["cand"].reshape(-1), nbr(batch, "cand_nbr_")
+            ).reshape(b, c, dims.embed)
+            h_src_t = jnp.broadcast_to(h_src[:, None, :], (b, c, dims.embed))
+            return cm.link_decode(params["dec"], h_src_t, h_cand)
+        h = _embed(params, dims, mem, batch["node_feats"], batch["nodes"], nbr(batch))
+        return cm.mlp2(params["head"], h)
+
+    def update(state, batch):
+        extra = _memory_update(
+            state["params"], profile, state["extra"],
+            batch["src"], batch["dst"], batch["t"], batch["valid"], batch["edge_feats"],
+        )
+        return {**state, "extra": extra}
+
+    return {
+        "name": f"tgn_{task}",
+        "profile": profile,
+        "init_state": init_state,
+        "specs": _specs(profile, task),
+        "fns": {"train": train, "predict": predict, "update": update},
+    }

@@ -1,0 +1,123 @@
+"""TPNet (Lu et al., 2024): temporal walk matrices via random feature
+propagation with time decay.
+
+State holds a node-representation matrix `reps` (the random-feature
+sketch of the temporal walk matrix) and per-node last-update times. On
+every batch the sketch decays by `exp(-λ Δt)` and propagates across the
+batch edges through a *fixed* random projection — expressed scatter-free
+with one-hot matmuls through the Pallas matmul kernel. Link likelihood
+is an MLP over the endpoint sketches and their Hadamard product (the
+implicit walk-count inner product).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import kernels
+from . import common as cm
+
+
+def _init_params(profile, dims, seed):
+    rng = np.random.default_rng(seed)
+    r = dims.rp
+    return {"dec": cm.mlp2_init(rng, 3 * r, dims.hidden, 1)}
+
+
+def _init_extra(profile, dims, seed):
+    rng = np.random.default_rng(seed + 1)
+    r = dims.rp
+    # Fixed random features (±1/sqrt(R)) and projection, per the paper's
+    # random feature propagation mechanism — not trained.
+    reps = rng.choice([-1.0, 1.0], (profile.n, r)).astype(np.float32) / np.sqrt(r)
+    w = rng.normal(0.0, 1.0 / np.sqrt(r), (r, r)).astype(np.float32)
+    return {
+        "reps": jnp.asarray(reps),
+        "rp_w": jnp.asarray(w),
+        "last_t": jnp.zeros((profile.n,), jnp.float32),
+    }
+
+
+def _propagate(profile, dims, extra, src, dst, t, valid):
+    reps, last_t, w = extra["reps"], extra["last_t"], extra["rp_w"]
+    n = profile.n
+    t_now = jnp.max(t * valid)
+    gamma = jnp.exp(-dims.rp_decay * jnp.maximum(t_now - last_t, 0.0))[:, None]
+    oh_src = cm.onehot(src, n) * valid[:, None]
+    oh_dst = cm.onehot(dst, n) * valid[:, None]
+    reps1 = kernels.decayed_propagate(reps, gamma, oh_src, oh_dst, w)
+    reps2 = kernels.decayed_propagate(reps1, jnp.ones_like(gamma), oh_dst, oh_src, w)
+    # Row-norm control: repeated propagation compounds ||W|| per touch,
+    # which overflows f32 on long streams. Soft-clip row norms (the
+    # sketch's inner products only matter up to scale).
+    norms = jnp.sqrt(jnp.sum(reps2 * reps2, axis=1, keepdims=True))
+    reps2 = reps2 / jnp.maximum(1.0, norms / 3.0)
+    touched = jnp.minimum(oh_src.sum(0) + oh_dst.sum(0), 1.0)
+    last_t2 = last_t * (1.0 - touched) + t_now * touched
+    return {**extra, "reps": reps2, "last_t": last_t2}
+
+
+def _score(params, reps, a_ids, b_ids):
+    ha, hb = reps[a_ids], reps[b_ids]
+    x = jnp.concatenate([ha, hb, ha * hb], axis=-1)
+    return cm.mlp2(params["dec"], x)[..., 0]
+
+
+def build(profile, dims):
+    """TPNet link-prediction model definition."""
+    p = profile
+
+    specs = {
+        "train": [
+            ("src", "i32", (p.b,)),
+            ("dst", "i32", (p.b,)),
+            ("neg", "i32", (p.b,)),
+            ("t", "f32", (p.b,)),
+            ("valid", "f32", (p.b,)),
+        ],
+        "predict": [
+            ("src", "i32", (p.b,)),
+            ("cand", "i32", (p.b, p.c)),
+            ("t", "f32", (p.b,)),
+            ("valid", "f32", (p.b,)),
+        ],
+        "update": [
+            ("src", "i32", (p.b,)),
+            ("dst", "i32", (p.b,)),
+            ("t", "f32", (p.b,)),
+            ("valid", "f32", (p.b,)),
+        ],
+    }
+
+    def init_state(seed):
+        return cm.make_state(_init_params(p, dims, seed), _init_extra(p, dims, seed))
+
+    def loss_fn(params, reps, batch):
+        pos = _score(params, reps, batch["src"], batch["dst"])
+        neg = _score(params, reps, batch["src"], batch["neg"])
+        return cm.bce_link_loss(pos, neg, batch["valid"])
+
+    def train(state, batch):
+        reps = jax.lax.stop_gradient(state["extra"]["reps"])
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], reps, batch)
+        state = cm.adam_step(state, grads, dims.lr)
+        extra = _propagate(p, dims, state["extra"], batch["src"], batch["dst"], batch["t"], batch["valid"])
+        return {**state, "extra": extra}, loss
+
+    def predict(state, batch):
+        reps = state["extra"]["reps"]
+        b, c = p.b, p.c
+        src = jnp.repeat(batch["src"], c)
+        return _score(state["params"], reps, src, batch["cand"].reshape(-1)).reshape(b, c)
+
+    def update(state, batch):
+        extra = _propagate(p, dims, state["extra"], batch["src"], batch["dst"], batch["t"], batch["valid"])
+        return {**state, "extra": extra}
+
+    return {
+        "name": "tpnet_link",
+        "profile": p,
+        "init_state": init_state,
+        "specs": specs,
+        "fns": {"train": train, "predict": predict, "update": update},
+    }

@@ -1,0 +1,93 @@
+"""AOT pipeline checks: manifest structure, state blobs, HLO text."""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_registry_names_and_specs():
+    reg = model.registry()
+    expected = {
+        "tgat_link", "tgn_link", "tgn_node", "graphmixer_link",
+        "dygformer_link", "dygformer_node", "tpnet_link",
+        "gcn_link", "gcn_node", "gcn_graph",
+        "gclstm_link", "gclstm_node", "gclstm_graph",
+        "tgcn_link", "tgcn_node", "tgcn_graph",
+    }
+    assert set(reg) == expected
+    for name, d in reg.items():
+        assert "train" in d["fns"] and "predict" in d["fns"], name
+        for kind, spec in d["specs"].items():
+            if kind in d["fns"]:
+                names = [n for n, _, _ in spec]
+                assert len(names) == len(set(names)), f"{name}.{kind} dup input"
+
+
+def test_state_leaves_all_f32():
+    reg = model.registry()
+    for name in ("tgat_link", "tgn_link", "gclstm_graph", "tpnet_link"):
+        leaves, _ = model.state_leaves(reg[name])
+        for leaf in leaves:
+            assert str(leaf.dtype) == "float32", f"{name}: {leaf.dtype}"
+
+
+def test_emit_model_writes_consistent_blob():
+    reg = model.registry()
+    mdef = reg["gcn_graph"]  # smallest
+    with tempfile.TemporaryDirectory() as d:
+        lines = []
+        aot.emit_model(mdef, d, lines, verbose=False)
+        text = "\n".join(lines)
+        assert "model gcn_graph profile dtdg512" in text
+        assert "artifact train gcn_graph.train.hlo.txt" in text
+        assert "artifact update gcn_graph.update.hlo.txt" in text
+        # Blob length == sum of declared state sizes.
+        sizes = 0
+        for ln in lines:
+            if ln.startswith("state f32"):
+                dims = ln.split()[-1]
+                n = 1 if dims == "-" else int(np.prod([int(x) for x in dims.split(",")]))
+                sizes += n
+        blob = open(os.path.join(d, "gcn_graph.state.bin"), "rb").read()
+        assert len(blob) == 4 * sizes
+        # HLO text parses as HLO (sanity: module header present).
+        hlo = open(os.path.join(d, "gcn_graph.train.hlo.txt")).read()
+        assert hlo.startswith("HloModule"), hlo[:60]
+        assert "parameter" in hlo
+
+
+def test_built_artifacts_manifest_if_present():
+    """When `make artifacts` has run, validate the real manifest."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man = os.path.join(art, "manifest.txt")
+    if not os.path.exists(man):
+        pytest.skip("artifacts not built")
+    text = open(man).read()
+    assert text.startswith("# TGM artifact manifest v1")
+    models = [ln.split()[1] for ln in text.splitlines() if ln.startswith("model ")]
+    assert len(models) == 16
+    for m in models:
+        for token in (f"{m}.state.bin", f"{m}.train.hlo.txt"):
+            assert token in text
+            assert os.path.exists(os.path.join(art, token)), token
+
+
+def test_cli_list():
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--list"],
+        capture_output=True,
+        text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert out.returncode == 0
+    assert "tgat_link" in out.stdout
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,206 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; assert_allclose against ref.py is
+the core correctness signal for everything the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def arr(rng, shape, lo=-2.0, hi=2.0):
+    return jnp.asarray(rng.uniform(lo, hi, shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------
+# time_encode
+# ---------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.integers(1, 70),
+    k=st.integers(1, 9),
+    dt_dim=st.integers(1, 33),
+    seed=st.integers(0, 2**31),
+)
+def test_time_encode_matches_ref(s, k, dt_dim, seed):
+    rng = np.random.default_rng(seed)
+    dt = arr(rng, (s, k), 0.0, 1000.0)
+    w = arr(rng, (dt_dim,))
+    b = arr(rng, (dt_dim,))
+    got = kernels.time_encode(dt, w, b)
+    want = ref.time_encode(dt, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+    assert got.shape == (s, k, dt_dim)
+
+
+def test_time_encode_rank1_and_rank3():
+    rng = np.random.default_rng(0)
+    w, b = arr(rng, (8,)), arr(rng, (8,))
+    for shape in [(5,), (3, 4, 2)]:
+        dt = arr(rng, shape, 0.0, 10.0)
+        np.testing.assert_allclose(
+            kernels.time_encode(dt, w, b), ref.time_encode(dt, w, b), atol=1e-4
+        )
+
+
+def test_time_encode_grads_match_ref():
+    rng = np.random.default_rng(1)
+    dt, w, b = arr(rng, (17,), 0.0, 5.0), arr(rng, (6,)), arr(rng, (6,))
+    f_k = lambda w, b: kernels.time_encode(dt, w, b).sum()
+    f_r = lambda w, b: ref.time_encode(dt, w, b).sum()
+    gk = jax.grad(f_k, argnums=(0, 1))(w, b)
+    gr = jax.grad(f_r, argnums=(0, 1))(w, b)
+    for a, bb in zip(gk, gr):
+        np.testing.assert_allclose(a, bb, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------
+# neighbor_attention
+# ---------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.integers(1, 150),
+    k=st.integers(1, 12),
+    d=st.integers(1, 24),
+    dv=st.integers(1, 24),
+    seed=st.integers(0, 2**31),
+)
+def test_neighbor_attention_matches_ref(s, k, d, dv, seed):
+    rng = np.random.default_rng(seed)
+    q = arr(rng, (s, d))
+    kk = arr(rng, (s, k, d))
+    v = arr(rng, (s, k, dv))
+    mask = jnp.asarray(rng.integers(0, 2, (s, k)), jnp.float32)
+    got = kernels.neighbor_attention(q, kk, v, mask)
+    want = ref.neighbor_attention(q, kk, v, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_fully_masked_rows_are_zero():
+    rng = np.random.default_rng(2)
+    q, k, v = arr(rng, (4, 8)), arr(rng, (4, 5, 8)), arr(rng, (4, 5, 6))
+    mask = jnp.zeros((4, 5), jnp.float32)
+    out = kernels.neighbor_attention(q, k, v, mask)
+    np.testing.assert_allclose(out, jnp.zeros((4, 6)), atol=1e-7)
+
+
+def test_attention_single_neighbor_passthrough():
+    # With one valid neighbor the output must equal its value row.
+    rng = np.random.default_rng(3)
+    q, k, v = arr(rng, (3, 4)), arr(rng, (3, 2, 4)), arr(rng, (3, 2, 5))
+    mask = jnp.asarray([[1, 0], [1, 0], [0, 1]], jnp.float32)
+    out = kernels.neighbor_attention(q, k, v, mask)
+    expect = jnp.stack([v[0, 0], v[1, 0], v[2, 1]])
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_attention_is_permutation_invariant_under_mask():
+    # Shuffling padded slots must not change the output.
+    rng = np.random.default_rng(4)
+    q = arr(rng, (1, 4))
+    k = arr(rng, (1, 3, 4))
+    v = arr(rng, (1, 3, 4))
+    mask = jnp.asarray([[1, 1, 0]], jnp.float32)
+    out1 = kernels.neighbor_attention(q, k, v, mask)
+    # Replace the masked slot with garbage.
+    k2 = k.at[0, 2].set(99.0)
+    v2 = v.at[0, 2].set(-99.0)
+    out2 = kernels.neighbor_attention(q, k2, v2, mask)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+def test_attention_grads_flow():
+    rng = np.random.default_rng(5)
+    q, k, v = arr(rng, (6, 4)), arr(rng, (6, 3, 4)), arr(rng, (6, 3, 4))
+    mask = jnp.ones((6, 3), jnp.float32)
+    g = jax.grad(lambda q: kernels.neighbor_attention(q, k, v, mask).sum())(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    gr = jax.grad(lambda q: ref.neighbor_attention(q, k, v, mask).sum())(q)
+    np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 80),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = arr(rng, (m, k)), arr(rng, (k, n))
+    np.testing.assert_allclose(
+        kernels.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_large_blocks():
+    # Exercise the multi-tile grid path (beyond one 128x512x128 block).
+    rng = np.random.default_rng(6)
+    a, b = arr(rng, (300, 600)), arr(rng, (600, 200))
+    np.testing.assert_allclose(
+        kernels.matmul(a, b), ref.matmul(a, b), rtol=1e-3, atol=1e-2
+    )
+
+
+def test_matmul_identity():
+    rng = np.random.default_rng(7)
+    a = arr(rng, (33, 33))
+    np.testing.assert_allclose(kernels.matmul(a, jnp.eye(33)), a, atol=1e-5)
+
+
+# ---------------------------------------------------------------------
+# decayed_propagate (TPNet)
+# ---------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(4, 64),
+    b=st.integers(1, 16),
+    r=st.integers(2, 24),
+    seed=st.integers(0, 2**31),
+)
+def test_decayed_propagate_matches_ref(n, b, r, seed):
+    rng = np.random.default_rng(seed)
+    reps = arr(rng, (n, r))
+    gamma = arr(rng, (n, 1), 0.0, 1.0)
+    src = rng.integers(0, n, b)
+    dst = rng.integers(0, n, b)
+    oh_s = jax.nn.one_hot(src, n, dtype=jnp.float32)
+    oh_d = jax.nn.one_hot(dst, n, dtype=jnp.float32)
+    w = arr(rng, (r, r))
+    got = kernels.decayed_propagate(reps, gamma, oh_s, oh_d, w)
+    want = ref.decayed_propagate(reps, gamma, oh_s, oh_d, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_decayed_propagate_no_edges_is_pure_decay():
+    rng = np.random.default_rng(8)
+    reps = arr(rng, (10, 4))
+    gamma = jnp.full((10, 1), 0.5)
+    oh = jnp.zeros((3, 10), jnp.float32)
+    w = arr(rng, (4, 4))
+    out = kernels.decayed_propagate(reps, gamma, oh, oh, w)
+    np.testing.assert_allclose(out, 0.5 * reps, atol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

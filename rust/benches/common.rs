@@ -1,0 +1,55 @@
+//! Shared bench harness (criterion is unavailable offline; this provides
+//! warmup + repeated timing with mean/std reporting in a stable format).
+
+use std::time::Instant;
+
+/// Time `f` over `reps` runs after `warmup` runs; returns per-run secs.
+pub fn time_runs<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Mean of samples.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Print one result row: `<table> | <label> | mean ± std over n`.
+pub fn report(table: &str, label: &str, secs: &[f64]) {
+    let m = mean(secs);
+    let var = if secs.len() > 1 {
+        secs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (secs.len() - 1) as f64
+    } else {
+        0.0
+    };
+    println!("{table} | {label:<40} | {m:>10.4}s ± {:>7.4}s (n={})", var.sqrt(), secs.len());
+}
+
+/// Scale factor override for bench sizing: `TGM_BENCH_SCALE` (default 1).
+pub fn bench_scale() -> f64 {
+    std::env::var("TGM_BENCH_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(1.0)
+}
+
+/// Skip helper when artifacts are missing (benches needing PJRT).
+pub fn engine_or_skip(table: &str) -> Option<tgm::runtime::XlaEngine> {
+    let dir = std::env::var("TGM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match tgm::runtime::XlaEngine::cpu(&dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            println!("{table} | SKIPPED: artifacts unavailable ({err})");
+            None
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Table 11: runtime breakdown of TGAT training on the LastFM surrogate
+//! (the paper's cProfile decomposition: data loading / hooks / sampler /
+//! model execute / packing). Uses TGM's built-in profiler.
+
+#[path = "common.rs"]
+mod common;
+
+use tgm::coordinator::{Pipeline, PipelineConfig};
+use tgm::io::gen;
+
+fn main() {
+    let Some(engine) = common::engine_or_skip("table11") else { return };
+    let scale = 0.05 * common::bench_scale();
+    println!("Table 11: TGAT runtime breakdown (lastfm surrogate)");
+    let data = gen::by_name("lastfm", scale, 42).unwrap();
+    let mut pipe = Pipeline::new(&engine, data, PipelineConfig::new("tgat_link")).unwrap();
+    pipe.profiler.start_wall();
+    let r = pipe.train_epoch().unwrap();
+    println!("table11 | loss={:.4} batches={}", r.mean_loss, r.batches);
+    for (cat, secs, pct) in pipe.profiler.report() {
+        println!("table11 | {cat:<24} {secs:>9.4}s {pct:>6.2}%");
+    }
+}

@@ -1,0 +1,44 @@
+//! Table 3: training time per epoch for link property prediction.
+//!
+//! TGM's pipeline (circular-buffer recency sampler) vs the DyGLib-style
+//! baseline pipeline (per-seed history-copy sampler) for each model and
+//! dataset surrogate. The paper's absolute numbers come from an A100;
+//! here the *shape* — TGM's data path never slower, biggest gaps on
+//! sampler-bound models and high-degree graphs — is what's reproduced.
+//! Surrogates run at a reduced scale (override: TGM_BENCH_SCALE).
+
+#[path = "common.rs"]
+mod common;
+
+use tgm::coordinator::{Pipeline, PipelineConfig};
+use tgm::hooks::SamplerKind;
+use tgm::io::gen;
+use tgm::util::TimeGranularity;
+
+fn main() {
+    let Some(engine) = common::engine_or_skip("table3") else { return };
+    let scale = 0.1 * common::bench_scale();
+    println!("Table 3: link-prediction training time per epoch (s)");
+    let models =
+        ["tpnet_link", "tgn_link", "graphmixer_link", "dygformer_link", "tgat_link", "gcn_link", "gclstm_link"];
+    for ds in ["wiki", "reddit", "lastfm"] {
+        for model in models {
+            for (label, sampler) in
+                [("TGM/recency", SamplerKind::Recency), ("DyGLib-style/naive", SamplerKind::Naive)]
+            {
+                // Samplers only matter for neighbor-based CTDG models.
+                let neighbor_based = !model.starts_with("gc") && model != "tpnet_link";
+                if !neighbor_based && sampler == SamplerKind::Naive {
+                    continue;
+                }
+                let data = gen::by_name(ds, scale, 42).unwrap();
+                let mut cfg = PipelineConfig::new(model);
+                cfg.sampler = sampler;
+                cfg.granularity = TimeGranularity::Day;
+                let mut pipe = Pipeline::new(&engine, data, cfg).unwrap();
+                let secs = common::time_runs(1, 2, || pipe.train_epoch().unwrap());
+                common::report("table3", &format!("{ds:<8} {model:<17} {label}"), &secs);
+            }
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Table 4: training time per epoch for dynamic node property prediction
+//! on the Trade (yearly) and Genre (weekly) surrogates. TGM uniquely
+//! supports message-passing (TGN), transformer (DyGFormer) and snapshot
+//! (GCN/GCLSTM/T-GCN) models on this task.
+
+#[path = "common.rs"]
+mod common;
+
+use tgm::coordinator::{Pipeline, PipelineConfig};
+use tgm::io::gen;
+use tgm::util::TimeGranularity;
+
+fn main() {
+    let Some(engine) = common::engine_or_skip("table4") else { return };
+    let scale = common::bench_scale();
+    println!("Table 4: node-property training time per epoch (s)");
+    let cases = [
+        ("trade", 0.5 * scale, TimeGranularity::Year),
+        ("genre", 0.15 * scale, TimeGranularity::Week),
+    ];
+    let models = ["tgn_node", "dygformer_node", "gcn_node", "gclstm_node", "tgcn_node"];
+    for (ds, s, gran) in cases {
+        for model in models {
+            let data = gen::by_name(ds, s, 42).unwrap();
+            let mut cfg = PipelineConfig::new(model);
+            cfg.granularity = gran;
+            let mut pipe = Pipeline::new(&engine, data, cfg).unwrap();
+            let secs = common::time_runs(1, 2, || pipe.train_epoch().unwrap());
+            common::report("table4", &format!("{ds:<8} {model}"), &secs);
+        }
+    }
+}

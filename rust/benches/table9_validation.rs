@@ -1,0 +1,51 @@
+//! Table 9: validation time per epoch under the TGB one-vs-many
+//! protocol. TGM's batch-level dedup (sample once per unique node) vs
+//! the DyGLib-style naive mode (re-sample per (seed, candidate) slot),
+//! plus the EdgeBank baseline. MRRs must agree between the two modes —
+//! only the data-path cost differs (paper: up to 246x on TGN/Wikipedia).
+
+#[path = "common.rs"]
+mod common;
+
+use tgm::coordinator::{evaluate_edgebank, Pipeline, PipelineConfig, Split};
+use tgm::io::gen;
+use tgm::models::EdgeBankMode;
+
+fn main() {
+    let Some(engine) = common::engine_or_skip("table9") else { return };
+    let scale = 0.15 * common::bench_scale();
+    println!("Table 9: one-vs-many validation time (s), dedup vs naive");
+    for ds in ["wiki", "reddit"] {
+        // EdgeBank row (pure Rust).
+        let data = gen::by_name(ds, scale, 42).unwrap();
+        let splits = data.split().unwrap();
+        let eb = evaluate_edgebank(&data, &splits.val, EdgeBankMode::Unlimited, 10, 0).unwrap();
+        common::report("table9", &format!("{ds:<8} edgebank"), &[eb.seconds]);
+
+        for model in ["tgn_link", "graphmixer_link"] {
+            // Two identically trained pipelines (deterministic seeds), so
+            // stateful models (TGN memory advances during eval) see the
+            // same state in both eval modes.
+            let mk = || {
+                let data = gen::by_name(ds, scale, 42).unwrap();
+                let mut p = Pipeline::new(&engine, data, PipelineConfig::new(model)).unwrap();
+                p.train_epoch().unwrap();
+                p
+            };
+            let mut pipe = mk();
+            let fast = pipe.evaluate(Split::Val).unwrap();
+            let mut pipe_naive = mk();
+            let naive = pipe_naive.evaluate_link_naive(Split::Val).unwrap();
+            common::report("table9", &format!("{ds:<8} {model:<17} TGM dedup"), &[fast.seconds]);
+            common::report("table9", &format!("{ds:<8} {model:<17} naive"), &[naive.seconds]);
+            let agree = (fast.mrr.unwrap() - naive.mrr.unwrap()).abs() < 1e-6;
+            println!(
+                "table9 | {ds} {model}: data-path speedup {:.2}x, MRR {:.4} vs {:.4} ({})",
+                naive.seconds / fast.seconds.max(1e-12),
+                fast.mrr.unwrap(),
+                naive.mrr.unwrap(),
+                if agree { "identical" } else { "DIFFER" }
+            );
+        }
+    }
+}

@@ -1,0 +1,765 @@
+//! Batch packing: hook outputs -> fixed-shape artifact inputs.
+//!
+//! AOT artifacts are compiled against a static [`Profile`]; this module
+//! pads ragged host batches into that envelope (zero padding + `valid`
+//! masks), widens edge-feature dims, re-lays sampler segments
+//! (`[src|dst|neg] x b_real` -> `[src|dst|neg] x B`), and fans the
+//! dedup'd unique-node lookups out to per-slot candidate rows. Packers
+//! emit a *superset* of tensors; `ModelRuntime::run` selects exactly the
+//! inputs each artifact's manifest declares.
+
+use crate::error::{Result, TgmError};
+use crate::graph::GraphStorage;
+use crate::hooks::batch::{attr, MaterializedBatch};
+use crate::hooks::eval_sampler as uq;
+use crate::runtime::Profile;
+use crate::util::Tensor;
+use std::collections::HashMap;
+
+/// Which input family a model consumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelFamily {
+    /// Neighbor-based CTDG (TGAT/TGN/GraphMixer/DyGFormer).
+    CtdgNeighbors,
+    /// TPNet: state-sketch only, no neighbor inputs.
+    CtdgSketch,
+    /// Dense-snapshot DTDG (GCN/GCLSTM/T-GCN).
+    Snapshot,
+}
+
+/// Per-model packing configuration derived from the model name.
+#[derive(Debug, Clone, Copy)]
+pub struct PackConfig {
+    pub family: ModelFamily,
+    /// One-hop fan-out the model was compiled for (k or seq).
+    pub k: usize,
+    /// Two-hop fan-out (TGAT).
+    pub k2: Option<usize>,
+}
+
+impl PackConfig {
+    /// Derive packing needs from a model name + profile.
+    pub fn for_model(name: &str, profile: &Profile) -> Result<PackConfig> {
+        let arch = name.split('_').next().unwrap_or(name);
+        let cfg = match arch {
+            "tgat" => PackConfig {
+                family: ModelFamily::CtdgNeighbors,
+                k: profile.k,
+                k2: Some(profile.k2),
+            },
+            "tgn" | "graphmixer" => {
+                PackConfig { family: ModelFamily::CtdgNeighbors, k: profile.k, k2: None }
+            }
+            "dygformer" => {
+                PackConfig { family: ModelFamily::CtdgNeighbors, k: profile.seq, k2: None }
+            }
+            "tpnet" => PackConfig { family: ModelFamily::CtdgSketch, k: 0, k2: None },
+            "gcn" | "gclstm" | "tgcn" => {
+                PackConfig { family: ModelFamily::Snapshot, k: 0, k2: None }
+            }
+            other => return Err(TgmError::Model(format!("unknown architecture `{other}`"))),
+        };
+        Ok(cfg)
+    }
+}
+
+/// A packed batch ready for `ModelRuntime::run`.
+pub type Packed = HashMap<String, Tensor>;
+
+fn pad_ids(src: &[u32], b: usize) -> Vec<i32> {
+    let mut v: Vec<i32> = src.iter().map(|&x| x as i32).collect();
+    v.resize(b, 0);
+    v
+}
+
+fn valid_mask(real: usize, b: usize) -> Vec<f32> {
+    let mut v = vec![1.0f32; real.min(b)];
+    v.resize(b, 0.0);
+    v
+}
+
+/// Widen a `[rows, d_in]` feature block into `[rows_out, d_out]`.
+fn widen_feats(data: &[f32], rows_in: usize, d_in: usize, rows_out: usize, d_out: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows_out * d_out];
+    let copy = d_in.min(d_out);
+    for r in 0..rows_in.min(rows_out) {
+        out[r * d_out..r * d_out + copy].copy_from_slice(&data[r * d_in..r * d_in + copy]);
+    }
+    out
+}
+
+/// Pack the static node-feature matrix once per dataset.
+pub fn pack_node_feats(storage: &GraphStorage, profile: &Profile) -> Result<Tensor> {
+    if storage.num_nodes() > profile.n {
+        return Err(TgmError::Model(format!(
+            "dataset has {} nodes; profile `{}` supports {}",
+            storage.num_nodes(),
+            profile.name,
+            profile.n
+        )));
+    }
+    let data = widen_feats(
+        storage.static_feats(),
+        storage.num_nodes(),
+        storage.static_feat_dim(),
+        profile.n,
+        profile.d_static,
+    );
+    Tensor::f32(data, &[profile.n, profile.d_static])
+}
+
+/// Re-lay a `[3*b_real, k, ...]` sampler output into `[3*b, k, ...]`
+/// (each of the three seed segments padded independently to `b`).
+fn relayout_segments_f32(data: &[f32], b_real: usize, b: usize, inner: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; 3 * b * inner];
+    for seg in 0..3 {
+        let src = seg * b_real * inner..(seg + 1) * b_real * inner;
+        let dst = seg * b * inner..seg * b * inner + b_real * inner;
+        out[dst].copy_from_slice(&data[src]);
+    }
+    out
+}
+
+fn relayout_segments_i32(data: &[i32], b_real: usize, b: usize, inner: usize) -> Vec<i32> {
+    let mut out = vec![0i32; 3 * b * inner];
+    for seg in 0..3 {
+        let src = seg * b_real * inner..(seg + 1) * b_real * inner;
+        let dst = seg * b * inner..seg * b * inner + b_real * inner;
+        out[dst].copy_from_slice(&data[src]);
+    }
+    out
+}
+
+/// Shared seed columns: src/dst/t/valid (+ edge feats widened).
+fn pack_seeds(out: &mut Packed, batch: &MaterializedBatch, profile: &Profile) -> Result<usize> {
+    let b = profile.b;
+    let real = batch.num_edges();
+    if real > b {
+        return Err(TgmError::Model(format!("batch has {real} edges; profile b={b}")));
+    }
+    out.insert("src".into(), Tensor::i32(pad_ids(&batch.src, b), &[b])?);
+    out.insert("dst".into(), Tensor::i32(pad_ids(&batch.dst, b), &[b])?);
+    let mut t: Vec<f32> = batch.ts.iter().map(|&x| x as f32).collect();
+    t.resize(b, 0.0);
+    out.insert("t".into(), Tensor::f32(t, &[b])?);
+    out.insert("valid".into(), Tensor::f32(valid_mask(real, b), &[b])?);
+    let ef = batch.get(attr::EDGE_FEATS)?;
+    let d_in = if ef.shape().len() == 2 { ef.shape()[1] } else { 0 };
+    out.insert(
+        "edge_feats".into(),
+        Tensor::f32(widen_feats(ef.as_f32()?, real, d_in, b, profile.d_edge), &[b, profile.d_edge])?,
+    );
+    Ok(real)
+}
+
+/// Pack one-hop (and optional two-hop) training neighbor tensors.
+fn pack_train_neighbors(
+    out: &mut Packed,
+    batch: &MaterializedBatch,
+    profile: &Profile,
+    cfg: &PackConfig,
+    b_real: usize,
+) -> Result<()> {
+    let (b, k, de) = (profile.b, cfg.k, profile.d_edge);
+    let ids = batch.get(attr::NEIGHBORS)?;
+    let s_real = ids.shape()[0];
+    if s_real != 3 * b_real {
+        return Err(TgmError::Model(format!(
+            "sampler produced {s_real} rows; expected 3 x {b_real} (seed negatives enabled?)"
+        )));
+    }
+    if ids.shape()[1] != k {
+        return Err(TgmError::Model(format!(
+            "sampler k={} but model compiled for k={k}",
+            ids.shape()[1]
+        )));
+    }
+    out.insert(
+        "nbr_ids".into(),
+        Tensor::i32(relayout_segments_i32(ids.as_i32()?, b_real, b, k), &[3 * b, k])?,
+    );
+    let dt = batch.get(attr::NEIGHBOR_TIMES)?;
+    out.insert(
+        "nbr_dt".into(),
+        Tensor::f32(relayout_segments_f32(dt.as_f32()?, b_real, b, k), &[3 * b, k])?,
+    );
+    let mask = batch.get(attr::NEIGHBOR_MASK)?;
+    out.insert(
+        "nbr_mask".into(),
+        Tensor::f32(relayout_segments_f32(mask.as_f32()?, b_real, b, k), &[3 * b, k])?,
+    );
+    let feats = batch.get(attr::NEIGHBOR_FEATS)?;
+    let d_in = feats.shape()[2];
+    // Widen dims first (row-major per (row,slot)), then re-lay segments.
+    let widened = widen_feats(feats.as_f32()?, s_real * k, d_in, s_real * k, de);
+    out.insert(
+        "nbr_feats".into(),
+        Tensor::f32(relayout_segments_f32(&widened, b_real, b, k * de), &[3 * b, k, de])?,
+    );
+
+    if let Some(k2) = cfg.k2 {
+        let ids2 = batch.get(attr::NEIGHBORS_2)?;
+        out.insert(
+            "nbr2_ids".into(),
+            Tensor::i32(relayout_segments_i32(ids2.as_i32()?, b_real, b, k * k2), &[3 * b * k, k2])?,
+        );
+        let dt2 = batch.get(attr::NEIGHBOR_TIMES_2)?;
+        out.insert(
+            "nbr2_dt".into(),
+            Tensor::f32(relayout_segments_f32(dt2.as_f32()?, b_real, b, k * k2), &[3 * b * k, k2])?,
+        );
+        let mask2 = batch.get(attr::NEIGHBOR_MASK_2)?;
+        out.insert(
+            "nbr2_mask".into(),
+            Tensor::f32(relayout_segments_f32(mask2.as_f32()?, b_real, b, k * k2), &[3 * b * k, k2])?,
+        );
+        let feats2 = batch.get(attr::NEIGHBOR_FEATS_2)?;
+        let d2 = feats2.shape()[3];
+        let widened2 = widen_feats(feats2.as_f32()?, s_real * k * k2, d2, s_real * k * k2, de);
+        out.insert(
+            "nbr2_feats".into(),
+            Tensor::f32(
+                relayout_segments_f32(&widened2, b_real, b, k * k2 * de),
+                &[3 * b * k, k2, de],
+            )?,
+        );
+    }
+    Ok(())
+}
+
+/// Pack a CTDG link-prediction *training* batch.
+pub fn pack_link_train(
+    batch: &MaterializedBatch,
+    profile: &Profile,
+    cfg: &PackConfig,
+    node_feats: &Tensor,
+) -> Result<Packed> {
+    let mut out = Packed::new();
+    let b_real = pack_seeds(&mut out, batch, profile)?;
+    let b = profile.b;
+    let negs = batch.get(attr::NEGATIVES)?.as_i32()?;
+    let mut neg = negs.to_vec();
+    neg.resize(b, 0);
+    out.insert("neg".into(), Tensor::i32(neg, &[b])?);
+    out.insert("node_feats".into(), node_feats.clone());
+    if cfg.family == ModelFamily::CtdgNeighbors {
+        pack_train_neighbors(&mut out, batch, profile, cfg, b_real)?;
+    }
+    Ok(out)
+}
+
+/// Gather per-slot neighbor tensors from the dedup'd unique lookup.
+struct UniqueFanout<'a> {
+    k: usize,
+    d: usize,
+    de: usize,
+    ids: &'a [i32],
+    ts: &'a [f32],
+    mask: &'a [f32],
+    feats: &'a [f32],
+    k2: usize,
+    ids2: &'a [i32],
+    ts2: &'a [f32],
+    mask2: &'a [f32],
+    feats2: &'a [f32],
+}
+
+impl UniqueFanout<'_> {
+    /// Copy unique row `urow` into destination slot `slot` with delta
+    /// times against prediction time `t_pred`.
+    #[allow(clippy::too_many_arguments)]
+    fn emit(
+        &self,
+        urow: usize,
+        slot: usize,
+        t_pred: f32,
+        ids: &mut [i32],
+        dt: &mut [f32],
+        mask: &mut [f32],
+        feats: &mut [f32],
+        two_hop: Option<(&mut Vec<i32>, &mut Vec<f32>, &mut Vec<f32>, &mut Vec<f32>)>,
+    ) {
+        let (k, de) = (self.k, self.de);
+        for j in 0..k {
+            let u = urow * k + j;
+            let o = slot * k + j;
+            if self.mask[u] > 0.0 {
+                ids[o] = self.ids[u];
+                dt[o] = (t_pred - self.ts[u]).max(0.0);
+                mask[o] = 1.0;
+                let copy = self.d.min(de);
+                feats[o * de..o * de + copy]
+                    .copy_from_slice(&self.feats[u * self.d..u * self.d + copy]);
+            }
+        }
+        if let Some((ids2, dt2, mask2, feats2)) = two_hop {
+            let k2 = self.k2;
+            for j in 0..k {
+                let u1 = urow * k + j;
+                let o1 = slot * k + j;
+                for j2 in 0..k2 {
+                    let u = u1 * k2 + j2;
+                    let o = o1 * k2 + j2;
+                    if self.mask2[u] > 0.0 {
+                        ids2[o] = self.ids2[u];
+                        // Hop-2 deltas are relative to the hop-1 time.
+                        dt2[o] = (self.ts[u1] - self.ts2[u]).max(0.0);
+                        mask2[o] = 1.0;
+                        let copy = self.d.min(de);
+                        feats2[o * de..o * de + copy]
+                            .copy_from_slice(&self.feats2[u * self.d..u * self.d + copy]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack a CTDG link-prediction *evaluation* batch (one-vs-many).
+///
+/// `cand[:, 0]` is the true destination; columns `1..C` are the
+/// deterministic eval negatives. Candidate neighborhoods are fanned out
+/// from the unique-node lookup (sample-once-per-batch, Table 9).
+pub fn pack_link_predict(
+    batch: &MaterializedBatch,
+    profile: &Profile,
+    cfg: &PackConfig,
+    node_feats: &Tensor,
+) -> Result<Packed> {
+    let mut out = Packed::new();
+    let b_real = pack_seeds(&mut out, batch, profile)?;
+    let (b, c) = (profile.b, profile.c);
+    let q = c - 1;
+    out.insert("node_feats".into(), node_feats.clone());
+
+    // Candidate matrix.
+    let evals = batch.get(attr::EVAL_NEGATIVES)?;
+    let eq = evals.shape()[1];
+    if eq < q {
+        return Err(TgmError::Model(format!("eval negatives {eq} < profile q={q}")));
+    }
+    let ev = evals.as_i32()?;
+    let mut cand = vec![0i32; b * c];
+    for i in 0..b_real {
+        cand[i * c] = batch.dst[i] as i32;
+        cand[i * c + 1..i * c + 1 + q].copy_from_slice(&ev[i * eq..i * eq + q]);
+    }
+    out.insert("cand".into(), Tensor::i32(cand.clone(), &[b, c])?);
+
+    if cfg.family != ModelFamily::CtdgNeighbors {
+        return Ok(out);
+    }
+
+    // Unique-node fanout.
+    let k = cfg.k;
+    let de = profile.d_edge;
+    let uids = batch.get(uq::UNIQUE_NBR_IDS)?;
+    let d = batch.get(uq::UNIQUE_NBR_FEATS)?.shape()[2];
+    let k2 = cfg.k2.unwrap_or(0);
+    let empty_i: Vec<i32> = vec![];
+    let empty_f: Vec<f32> = vec![];
+    let fan = UniqueFanout {
+        k,
+        d,
+        de,
+        ids: uids.as_i32()?,
+        ts: batch.get(uq::UNIQUE_NBR_TS)?.as_f32()?,
+        mask: batch.get(uq::UNIQUE_NBR_MASK)?.as_f32()?,
+        feats: batch.get(uq::UNIQUE_NBR_FEATS)?.as_f32()?,
+        k2,
+        ids2: if k2 > 0 { batch.get(uq::UNIQUE_NBR2_IDS)?.as_i32()? } else { &empty_i },
+        ts2: if k2 > 0 { batch.get(uq::UNIQUE_NBR2_TS)?.as_f32()? } else { &empty_f },
+        mask2: if k2 > 0 { batch.get(uq::UNIQUE_NBR2_MASK)?.as_f32()? } else { &empty_f },
+        feats2: if k2 > 0 { batch.get(uq::UNIQUE_NBR2_FEATS)?.as_f32()? } else { &empty_f },
+    };
+
+    // Inverse layout from DedupHook: [src(b_real) | dst(b_real) | evals(b_real*eq)].
+    let inverse = batch.get(attr::UNIQUE_INVERSE)?.as_i32()?;
+
+    let mut pack_rows = |rows: usize| {
+        (
+            vec![0i32; rows * k],
+            vec![0.0f32; rows * k],
+            vec![0.0f32; rows * k],
+            vec![0.0f32; rows * k * de],
+            vec![0i32; rows * k * k2],
+            vec![0.0f32; rows * k * k2],
+            vec![0.0f32; rows * k * k2],
+            vec![0.0f32; rows * k * k2 * de],
+        )
+    };
+
+    // src rows [B].
+    let (mut si, mut sd, mut sm, mut sf, mut si2, mut sd2, mut sm2, mut sf2) = pack_rows(b);
+    for i in 0..b_real {
+        let t_pred = batch.ts[i] as f32;
+        let two = (k2 > 0).then(|| (&mut si2, &mut sd2, &mut sm2, &mut sf2));
+        fan.emit(inverse[i] as usize, i, t_pred, &mut si, &mut sd, &mut sm, &mut sf, two);
+    }
+    out.insert("src_nbr_ids".into(), Tensor::i32(si, &[b, k])?);
+    out.insert("src_nbr_dt".into(), Tensor::f32(sd, &[b, k])?);
+    out.insert("src_nbr_mask".into(), Tensor::f32(sm, &[b, k])?);
+    out.insert("src_nbr_feats".into(), Tensor::f32(sf, &[b, k, de])?);
+    if k2 > 0 {
+        out.insert("src_nbr2_ids".into(), Tensor::i32(si2, &[b * k, k2])?);
+        out.insert("src_nbr2_dt".into(), Tensor::f32(sd2, &[b * k, k2])?);
+        out.insert("src_nbr2_mask".into(), Tensor::f32(sm2, &[b * k, k2])?);
+        out.insert("src_nbr2_feats".into(), Tensor::f32(sf2, &[b * k, k2, de])?);
+    }
+
+    // cand rows [B*C]: slot (i, j) -> unique row of cand[i*c + j].
+    let (mut ci, mut cd, mut cmk, mut cf, mut ci2, mut cd2, mut cm2, mut cf2) = pack_rows(b * c);
+    for i in 0..b_real {
+        let t_pred = batch.ts[i] as f32;
+        for j in 0..c {
+            let urow = if j == 0 {
+                inverse[b_real + i] // dst segment
+            } else {
+                inverse[2 * b_real + i * eq + (j - 1)] // eval-negative segment
+            } as usize;
+            let slot = i * c + j;
+            let two = (k2 > 0).then(|| (&mut ci2, &mut cd2, &mut cm2, &mut cf2));
+            fan.emit(urow, slot, t_pred, &mut ci, &mut cd, &mut cmk, &mut cf, two);
+        }
+    }
+    out.insert("cand_nbr_ids".into(), Tensor::i32(ci, &[b * c, k])?);
+    out.insert("cand_nbr_dt".into(), Tensor::f32(cd, &[b * c, k])?);
+    out.insert("cand_nbr_mask".into(), Tensor::f32(cmk, &[b * c, k])?);
+    out.insert("cand_nbr_feats".into(), Tensor::f32(cf, &[b * c, k, de])?);
+    if k2 > 0 {
+        out.insert("cand_nbr2_ids".into(), Tensor::i32(ci2, &[b * c * k, k2])?);
+        out.insert("cand_nbr2_dt".into(), Tensor::f32(cd2, &[b * c * k, k2])?);
+        out.insert("cand_nbr2_mask".into(), Tensor::f32(cm2, &[b * c * k, k2])?);
+        out.insert("cand_nbr2_feats".into(), Tensor::f32(cf2, &[b * c * k, k2, de])?);
+    }
+    Ok(out)
+}
+
+/// Pack a node-property batch (train when `target` given, else predict).
+/// Node seeds are the batch's source nodes; neighbor rows come from the
+/// sampler's src segment.
+pub fn pack_node_batch(
+    batch: &MaterializedBatch,
+    profile: &Profile,
+    cfg: &PackConfig,
+    node_feats: &Tensor,
+    target: Option<&Tensor>,
+) -> Result<Packed> {
+    let mut out = Packed::new();
+    let b_real = pack_seeds(&mut out, batch, profile)?;
+    let b = profile.b;
+    out.insert("node_feats".into(), node_feats.clone());
+    out.insert("nodes".into(), Tensor::i32(pad_ids(&batch.src, b), &[b])?);
+    if let Some(t) = target {
+        if t.shape() != [b, profile.p] {
+            return Err(TgmError::Model(format!(
+                "target shape {:?} != [{b}, {}]",
+                t.shape(),
+                profile.p
+            )));
+        }
+        out.insert("target".into(), t.clone());
+    }
+    if cfg.family == ModelFamily::CtdgNeighbors {
+        // Take only the src segment (first b_real rows) of the sampler.
+        let (k, de) = (cfg.k, profile.d_edge);
+        let ids = batch.get(attr::NEIGHBORS)?;
+        let d_in = batch.get(attr::NEIGHBOR_FEATS)?.shape()[2];
+        let take = |data: &[i32]| {
+            let mut v = data[..b_real * k].to_vec();
+            v.resize(b * k, 0);
+            v
+        };
+        let take_f = |data: &[f32], inner: usize| {
+            let mut v = data[..b_real * inner].to_vec();
+            v.resize(b * inner, 0.0);
+            v
+        };
+        out.insert("nbr_ids".into(), Tensor::i32(take(ids.as_i32()?), &[b, k])?);
+        out.insert(
+            "nbr_dt".into(),
+            Tensor::f32(take_f(batch.get(attr::NEIGHBOR_TIMES)?.as_f32()?, k), &[b, k])?,
+        );
+        out.insert(
+            "nbr_mask".into(),
+            Tensor::f32(take_f(batch.get(attr::NEIGHBOR_MASK)?.as_f32()?, k), &[b, k])?,
+        );
+        let widened = widen_feats(
+            batch.get(attr::NEIGHBOR_FEATS)?.as_f32()?,
+            b_real * k,
+            d_in,
+            b * k,
+            de,
+        );
+        out.insert("nbr_feats".into(), Tensor::f32(widened, &[b, k, de])?);
+    }
+    Ok(out)
+}
+
+/// Pack a snapshot adjacency (embedding the `n x n` hook output into the
+/// profile's `N x N`).
+pub fn pack_snapshot_adj(
+    batch: &MaterializedBatch,
+    profile: &Profile,
+    node_feats: &Tensor,
+) -> Result<Packed> {
+    let adj = batch.get(attr::SNAPSHOT_ADJ)?;
+    let n_in = adj.shape()[0];
+    let n = profile.n;
+    if n_in > n {
+        return Err(TgmError::Model(format!("snapshot n={n_in} exceeds profile N={n}")));
+    }
+    let src = adj.as_f32()?;
+    let mut data = vec![0.0f32; n * n];
+    for r in 0..n_in {
+        data[r * n..r * n + n_in].copy_from_slice(&src[r * n_in..(r + 1) * n_in]);
+    }
+    let mut out = Packed::new();
+    out.insert("adj".into(), Tensor::f32(data, &[n, n])?);
+    out.insert("node_feats".into(), node_feats.clone());
+    Ok(out)
+}
+
+/// Add link queries (src/dst/neg/valid) from a *later* snapshot batch to
+/// a snapshot-adjacency pack (DTDG training pairs).
+pub fn add_link_queries(out: &mut Packed, query: &MaterializedBatch, profile: &Profile) -> Result<()> {
+    let b = profile.b;
+    let real = query.num_edges().min(b);
+    out.insert("src".into(), Tensor::i32(pad_ids(&query.src[..real], b), &[b])?);
+    out.insert("dst".into(), Tensor::i32(pad_ids(&query.dst[..real], b), &[b])?);
+    let negs = query.get(attr::NEGATIVES)?.as_i32()?;
+    let mut neg = negs[..real.min(negs.len())].to_vec();
+    neg.resize(b, 0);
+    out.insert("neg".into(), Tensor::i32(neg, &[b])?);
+    out.insert("valid".into(), Tensor::f32(valid_mask(real, b), &[b])?);
+    Ok(())
+}
+
+/// Add one-vs-many candidate queries from a later snapshot batch.
+pub fn add_cand_queries(out: &mut Packed, query: &MaterializedBatch, profile: &Profile) -> Result<()> {
+    let (b, c) = (profile.b, profile.c);
+    let q = c - 1;
+    let real = query.num_edges().min(b);
+    out.insert("src".into(), Tensor::i32(pad_ids(&query.src[..real], b), &[b])?);
+    let evals = query.get(attr::EVAL_NEGATIVES)?;
+    let eq = evals.shape()[1];
+    let ev = evals.as_i32()?;
+    let mut cand = vec![0i32; b * c];
+    for i in 0..real {
+        cand[i * c] = query.dst[i] as i32;
+        cand[i * c + 1..i * c + 1 + q.min(eq)].copy_from_slice(&ev[i * eq..i * eq + q.min(eq)]);
+    }
+    out.insert("cand".into(), Tensor::i32(cand, &[b, c])?);
+    out.insert("valid".into(), Tensor::f32(valid_mask(real, b), &[b])?);
+    Ok(())
+}
+
+/// Add node queries (+optional targets) to a snapshot pack.
+pub fn add_node_queries(
+    out: &mut Packed,
+    nodes: &[u32],
+    target: Option<&Tensor>,
+    profile: &Profile,
+) -> Result<()> {
+    let b = profile.b;
+    let real = nodes.len().min(b);
+    out.insert("nodes".into(), Tensor::i32(pad_ids(&nodes[..real], b), &[b])?);
+    out.insert("valid".into(), Tensor::f32(valid_mask(real, b), &[b])?);
+    if let Some(t) = target {
+        out.insert("target".into(), t.clone());
+    }
+    Ok(())
+}
+
+/// Add a scalar graph-property label.
+pub fn add_graph_label(out: &mut Packed, label: f32) {
+    out.insert("label".into(), Tensor::scalar_f32(label));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeEvent, GraphStorage};
+    use crate::hooks::{HookContext, SamplerConfig};
+    use crate::hooks::hook::Hook;
+
+    fn profile() -> Profile {
+        Profile {
+            name: "tiny".into(),
+            n: 16,
+            b: 4,
+            k: 3,
+            k2: 2,
+            seq: 4,
+            c: 3,
+            d_edge: 4,
+            d_static: 4,
+            p: 4,
+        }
+    }
+
+    fn storage() -> GraphStorage {
+        let edges = (0..20)
+            .map(|i| EdgeEvent {
+                t: i as i64,
+                src: (i % 3) as u32,
+                dst: 4 + (i % 2) as u32,
+                features: vec![i as f32, 1.0],
+            })
+            .collect();
+        GraphStorage::from_events(edges, vec![], 8, Some((2, vec![0.5; 16])), None).unwrap()
+    }
+
+    fn batch(st: &GraphStorage, r: std::ops::Range<usize>) -> MaterializedBatch {
+        let mut b = MaterializedBatch::new(st.edge_ts()[r.start], st.edge_ts()[r.end - 1] + 1);
+        let n = r.len();
+        for i in r {
+            b.src.push(st.edge_src()[i]);
+            b.dst.push(st.edge_dst()[i]);
+            b.ts.push(st.edge_ts()[i]);
+            b.edge_indices.push(i as u32);
+        }
+        let feats: Vec<f32> = b.edge_indices.iter().flat_map(|&i| st.edge_feat_row(i as usize).to_vec()).collect();
+        b.set(attr::EDGE_FEATS, Tensor::f32(feats, &[n, 2]).unwrap());
+        b
+    }
+
+    #[test]
+    fn node_feats_padded_and_widened() {
+        let st = storage();
+        let p = profile();
+        let t = pack_node_feats(&st, &p).unwrap();
+        assert_eq!(t.shape(), &[16, 4]);
+        let v = t.as_f32().unwrap();
+        assert_eq!(v[0], 0.5); // real feature copied
+        assert_eq!(v[2], 0.0); // widened dim zero
+        assert_eq!(v[8 * 4], 0.0); // padded node rows zero
+    }
+
+    #[test]
+    fn link_train_pack_shapes_and_masks() {
+        let st = storage();
+        let p = profile();
+        let cfg = PackConfig::for_model("tgn_link", &p).unwrap();
+        let ctx = HookContext { storage: &st, key: "train" };
+
+        let mut b = batch(&st, 10..13); // 3 real edges < B=4
+        b.set(attr::NEGATIVES, Tensor::i32(vec![5, 6, 7], &[3]).unwrap());
+        let mut sampler = crate::hooks::RecencySampler::new(SamplerConfig {
+            num_neighbors: 3,
+            two_hop: None,
+            include_features: true,
+            seed_negatives: true,
+        });
+        // Warm with an earlier batch so neighborhoods are non-empty.
+        let mut warm = batch(&st, 0..10);
+        warm.set(attr::NEGATIVES, Tensor::i32(vec![5; 10], &[10]).unwrap());
+        sampler.apply(&mut warm, &ctx).unwrap();
+        sampler.apply(&mut b, &ctx).unwrap();
+
+        let nf = pack_node_feats(&st, &p).unwrap();
+        let packed = pack_link_train(&b, &p, &cfg, &nf).unwrap();
+        assert_eq!(packed["src"].shape(), &[4]);
+        assert_eq!(packed["nbr_ids"].shape(), &[12, 3]);
+        assert_eq!(packed["nbr_feats"].shape(), &[12, 3, 4]);
+        let valid = packed["valid"].as_f32().unwrap();
+        assert_eq!(valid, &[1.0, 1.0, 1.0, 0.0]);
+        // Segment re-layout: dst segment starts at row B=4, matching the
+        // sampler's row b_real=3.
+        let ids_in = b.get(attr::NEIGHBORS).unwrap().as_i32().unwrap();
+        let ids_out = packed["nbr_ids"].as_i32().unwrap();
+        assert_eq!(&ids_in[3 * 3..4 * 3], &ids_out[4 * 3..5 * 3]);
+        // Padded row at end of src segment is zero.
+        assert!(ids_out[3 * 3..4 * 3].iter().all(|&x| x == 0));
+        // Mask padded rows are zero.
+        let m = packed["nbr_mask"].as_f32().unwrap();
+        assert!(m[3 * 3..4 * 3].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn link_predict_pack_fans_out_unique_rows() {
+        let st = storage();
+        let p = profile();
+        let cfg = PackConfig::for_model("tgn_link", &p).unwrap();
+        let ctx = HookContext { storage: &st, key: "val" };
+        let mut b = batch(&st, 15..18);
+        // Recipe steps: eval negatives -> dedup -> unique lookup.
+        let mut h1 = crate::hooks::negatives::EvalNegativeSampler::new(
+            crate::hooks::DstRange::Range(4, 8),
+            2,
+            1,
+        );
+        h1.apply(&mut b, &ctx).unwrap();
+        let mut h2 = crate::hooks::dedup::DedupHook::new(false, true);
+        h2.apply(&mut b, &ctx).unwrap();
+        let mut h3 = crate::hooks::eval_sampler::UniqueRecencyLookup::new(3);
+        h3.apply(&mut b, &ctx).unwrap();
+
+        let nf = pack_node_feats(&st, &p).unwrap();
+        let packed = pack_link_predict(&b, &p, &cfg, &nf).unwrap();
+        assert_eq!(packed["cand"].shape(), &[4, 3]);
+        assert_eq!(packed["cand_nbr_ids"].shape(), &[12, 3]);
+        // cand[:,0] is the true destination.
+        let cand = packed["cand"].as_i32().unwrap();
+        assert_eq!(cand[0], b.dst[0] as i32);
+        // Candidate slot 0's neighborhood equals dst's unique row.
+        let inv = b.get(attr::UNIQUE_INVERSE).unwrap().as_i32().unwrap().to_vec();
+        let urow = inv[3] as usize; // dst segment, i=0 (b_real = 3)
+        let uids = b.get(uq::UNIQUE_NBR_IDS).unwrap().as_i32().unwrap().to_vec();
+        let cids = packed["cand_nbr_ids"].as_i32().unwrap();
+        let umask = b.get(uq::UNIQUE_NBR_MASK).unwrap().as_f32().unwrap().to_vec();
+        for j in 0..3 {
+            if umask[urow * 3 + j] > 0.0 {
+                assert_eq!(cids[j], uids[urow * 3 + j]);
+            }
+        }
+        // Delta times non-negative.
+        assert!(packed["cand_nbr_dt"].as_f32().unwrap().iter().all(|&d| d >= 0.0));
+    }
+
+    #[test]
+    fn snapshot_pack_embeds_adjacency() {
+        let st = storage();
+        let p = profile();
+        let ctx = HookContext { storage: &st, key: "train" };
+        let mut b = batch(&st, 0..10);
+        let mut hook = crate::hooks::analytics::SnapshotAdjHook;
+        hook.apply(&mut b, &ctx).unwrap();
+        let nf = pack_node_feats(&st, &p).unwrap();
+        let mut packed = pack_snapshot_adj(&b, &p, &nf).unwrap();
+        assert_eq!(packed["adj"].shape(), &[16, 16]);
+        let a = packed["adj"].as_f32().unwrap();
+        // Padded rows/cols zero.
+        assert!(a[8 * 16 + 8] == 0.0);
+        // Real diagonal nonzero (self-loops).
+        assert!(a[0] > 0.0);
+
+        let mut q = batch(&st, 10..13);
+        q.set(attr::NEGATIVES, Tensor::i32(vec![1, 2, 3], &[3]).unwrap());
+        add_link_queries(&mut packed, &q, &p).unwrap();
+        assert_eq!(packed["src"].shape(), &[4]);
+        add_graph_label(&mut packed, 1.0);
+        assert_eq!(packed["label"].shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn oversized_batch_rejected() {
+        let st = storage();
+        let p = profile();
+        let cfg = PackConfig::for_model("tpnet_link", &p).unwrap();
+        let mut b = batch(&st, 0..10); // 10 > B=4
+        b.set(attr::NEGATIVES, Tensor::i32(vec![0; 10], &[10]).unwrap());
+        let nf = pack_node_feats(&st, &p).unwrap();
+        assert!(pack_link_train(&b, &p, &cfg, &nf).is_err());
+    }
+
+    #[test]
+    fn pack_config_families() {
+        let p = profile();
+        assert_eq!(PackConfig::for_model("tgat_link", &p).unwrap().k2, Some(2));
+        assert_eq!(PackConfig::for_model("dygformer_link", &p).unwrap().k, p.seq);
+        assert_eq!(PackConfig::for_model("tpnet_link", &p).unwrap().family, ModelFamily::CtdgSketch);
+        assert_eq!(PackConfig::for_model("gclstm_node", &p).unwrap().family, ModelFamily::Snapshot);
+        assert!(PackConfig::for_model("bogus_x", &p).is_err());
+    }
+}

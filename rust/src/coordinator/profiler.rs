@@ -1,0 +1,117 @@
+//! Runtime-breakdown profiler (paper Appendix A.3, Table 11).
+//!
+//! Accumulates wall-clock per pipeline category so `tgm profile` and the
+//! `table11_profile` bench can print the same decomposition the paper
+//! reports for TGAT (data loading / hooks / forward / backward / ...).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Category timer.
+#[derive(Debug, Default, Clone)]
+pub struct Profiler {
+    totals: HashMap<&'static str, Duration>,
+    started: Option<Instant>,
+}
+
+impl Profiler {
+    /// Fresh profiler.
+    pub fn new() -> Profiler {
+        Profiler::default()
+    }
+
+    /// Time a closure under a category.
+    pub fn record<T>(&mut self, category: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        *self.totals.entry(category).or_default() += t0.elapsed();
+        out
+    }
+
+    /// Add an externally measured duration.
+    pub fn add(&mut self, category: &'static str, d: Duration) {
+        *self.totals.entry(category).or_default() += d;
+    }
+
+    /// Start the wall-clock for percentage reporting.
+    pub fn start_wall(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    /// Total across categories.
+    pub fn total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    /// Duration of one category.
+    pub fn get(&self, category: &str) -> Duration {
+        self.totals.get(category).copied().unwrap_or_default()
+    }
+
+    /// (category, seconds, percent) rows, descending, plus an "other"
+    /// row when wall-clock exceeds the categorized total.
+    pub fn report(&self) -> Vec<(String, f64, f64)> {
+        let wall = self
+            .started
+            .map(|s| s.elapsed())
+            .unwrap_or_else(|| self.total())
+            .max(self.total());
+        let denom = wall.as_secs_f64().max(1e-12);
+        let mut rows: Vec<(String, f64, f64)> = self
+            .totals
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.as_secs_f64(), 100.0 * v.as_secs_f64() / denom))
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let categorized: f64 = rows.iter().map(|r| r.1).sum();
+        if wall.as_secs_f64() > categorized {
+            let other = wall.as_secs_f64() - categorized;
+            rows.push(("other".into(), other, 100.0 * other / denom));
+        }
+        rows
+    }
+
+    /// Clear all counters.
+    pub fn reset(&mut self) {
+        self.totals.clear();
+        self.started = None;
+    }
+}
+
+impl std::fmt::Display for Profiler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "{:<24} {:>10} {:>8}", "category", "seconds", "percent")?;
+        for (name, secs, pct) in self.report() {
+            writeln!(f, "{name:<24} {secs:>10.4} {pct:>7.2}%")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut p = Profiler::new();
+        p.record("a", || std::thread::sleep(Duration::from_millis(12)));
+        p.record("b", || std::thread::sleep(Duration::from_millis(4)));
+        p.record("a", || std::thread::sleep(Duration::from_millis(4)));
+        let rows = p.report();
+        assert_eq!(rows[0].0, "a");
+        assert!(rows[0].1 >= 0.015);
+        let pct_sum: f64 = rows.iter().map(|r| r.2).sum();
+        assert!((pct_sum - 100.0).abs() < 1.0, "{pct_sum}");
+        assert!(p.get("a") > p.get("b"));
+    }
+
+    #[test]
+    fn closure_value_passes_through() {
+        let mut p = Profiler::new();
+        let v = p.record("x", || 42);
+        assert_eq!(v, 42);
+        p.reset();
+        assert_eq!(p.total(), Duration::ZERO);
+    }
+}

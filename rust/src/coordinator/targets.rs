@@ -1,0 +1,190 @@
+//! Task target construction (node / graph property prediction).
+//!
+//! TGB's node-property tasks (Trade, Genre) predict each node's
+//! *interaction distribution over property classes in the next period*.
+//! Items are hashed into `P` classes; a node's target is the normalized
+//! class histogram of its interactions inside a future window. Graph
+//! property targets (RQ1) label whether the next snapshot grows.
+
+use crate::error::Result;
+use crate::graph::GraphStorage;
+use crate::runtime::Profile;
+use crate::util::{Tensor, Timestamp};
+
+/// Deterministic item -> property-class hash.
+pub fn property_class(item: u32, p: usize) -> usize {
+    (item as u64).wrapping_mul(2654435761) as usize % p
+}
+
+/// Normalized class histogram of `node`'s interactions in `[t0, t1)`.
+pub fn node_target(storage: &GraphStorage, node: u32, t0: Timestamp, t1: Timestamp, p: usize) -> Vec<f32> {
+    let mut hist = vec![0.0f32; p];
+    let range = storage.edge_range(t0, t1);
+    let src = storage.edge_src();
+    let dst = storage.edge_dst();
+    let mut total = 0.0f32;
+    for i in range {
+        if src[i] == node {
+            hist[property_class(dst[i], p)] += 1.0;
+            total += 1.0;
+        }
+    }
+    if total > 0.0 {
+        hist.iter_mut().for_each(|h| *h /= total);
+    }
+    hist
+}
+
+/// Batched targets tensor `[B, P]` for `nodes` over a future window.
+/// Returns the tensor plus a per-node "has future activity" mask.
+pub fn node_targets(
+    storage: &GraphStorage,
+    nodes: &[u32],
+    t0: Timestamp,
+    t1: Timestamp,
+    profile: &Profile,
+) -> Result<(Tensor, Vec<f32>)> {
+    let p = profile.p;
+    let b = profile.b;
+    let mut data = vec![0.0f32; b * p];
+    let mut active = vec![0.0f32; b];
+
+    // One pass over the window: per-node histograms.
+    let range = storage.edge_range(t0, t1);
+    let src = storage.edge_src();
+    let dst = storage.edge_dst();
+    let mut row_of = std::collections::HashMap::with_capacity(nodes.len());
+    for (row, &n) in nodes.iter().enumerate().take(b) {
+        row_of.entry(n).or_insert(row);
+    }
+    for i in range {
+        if let Some(&row) = row_of.get(&src[i]) {
+            data[row * p + property_class(dst[i], p)] += 1.0;
+            active[row] = 1.0;
+        }
+    }
+    // Normalize + copy shared rows for duplicate nodes.
+    for (row, &n) in nodes.iter().enumerate().take(b) {
+        let canon = row_of[&n];
+        if canon != row {
+            let (a, b2) = (canon * p, row * p);
+            let src_row: Vec<f32> = data[a..a + p].to_vec();
+            data[b2..b2 + p].copy_from_slice(&src_row);
+            active[row] = active[canon];
+        }
+    }
+    for row in 0..b {
+        let total: f32 = data[row * p..(row + 1) * p].iter().sum();
+        if total > 0.0 {
+            data[row * p..(row + 1) * p].iter_mut().for_each(|v| *v /= total);
+        }
+    }
+    Ok((Tensor::f32(data, &[b, p])?, active))
+}
+
+/// Distinct source nodes active in `[t0, t1)`, in first-seen order.
+pub fn active_sources(storage: &GraphStorage, t0: Timestamp, t1: Timestamp, cap: usize) -> Vec<u32> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for i in storage.edge_range(t0, t1) {
+        let s = storage.edge_src()[i];
+        if seen.insert(s) {
+            out.push(s);
+            if out.len() >= cap {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// RQ1 label: does the next snapshot have strictly more edges?
+pub fn growth_label(cur_edges: usize, next_edges: usize) -> f32 {
+    if next_edges > cur_edges {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeEvent;
+
+    fn storage() -> GraphStorage {
+        // node 0 interacts with items 4,5,4 in [0,30); node 1 with 5.
+        let edges = vec![
+            EdgeEvent { t: 0, src: 0, dst: 4, features: vec![] },
+            EdgeEvent { t: 10, src: 0, dst: 5, features: vec![] },
+            EdgeEvent { t: 20, src: 0, dst: 4, features: vec![] },
+            EdgeEvent { t: 25, src: 1, dst: 5, features: vec![] },
+            EdgeEvent { t: 40, src: 1, dst: 4, features: vec![] },
+        ];
+        GraphStorage::from_events(edges, vec![], 6, None, None).unwrap()
+    }
+
+    fn profile() -> Profile {
+        Profile {
+            name: "t".into(),
+            n: 8,
+            b: 4,
+            k: 2,
+            k2: 2,
+            seq: 2,
+            c: 2,
+            d_edge: 1,
+            d_static: 1,
+            p: 4,
+        }
+    }
+
+    #[test]
+    fn single_node_target_normalized() {
+        let st = storage();
+        let t = node_target(&st, 0, 0, 30, 4);
+        assert!((t.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        let c4 = property_class(4, 4);
+        let c5 = property_class(5, 4);
+        assert!((t[c4] - 2.0 / 3.0).abs() < 1e-6 || c4 == c5);
+        // Node with no activity -> zero vector.
+        let z = node_target(&st, 3, 0, 30, 4);
+        assert!(z.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn batched_targets_match_single() {
+        let st = storage();
+        let p = profile();
+        let (t, active) = node_targets(&st, &[0, 1, 3], 0, 30, &p).unwrap();
+        assert_eq!(t.shape(), &[4, 4]);
+        let rows = t.as_f32().unwrap();
+        let single0 = node_target(&st, 0, 0, 30, 4);
+        assert_eq!(&rows[0..4], single0.as_slice());
+        assert_eq!(active, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn duplicate_nodes_share_rows() {
+        let st = storage();
+        let p = profile();
+        let (t, _) = node_targets(&st, &[0, 0], 0, 30, &p).unwrap();
+        let rows = t.as_f32().unwrap();
+        assert_eq!(&rows[0..4], &rows[4..8]);
+    }
+
+    #[test]
+    fn active_sources_ordered_and_capped() {
+        let st = storage();
+        assert_eq!(active_sources(&st, 0, 50, 10), vec![0, 1]);
+        assert_eq!(active_sources(&st, 0, 50, 1), vec![0]);
+        assert_eq!(active_sources(&st, 35, 50, 10), vec![1]);
+    }
+
+    #[test]
+    fn growth() {
+        assert_eq!(growth_label(5, 6), 1.0);
+        assert_eq!(growth_label(5, 5), 0.0);
+        assert_eq!(growth_label(5, 2), 0.0);
+    }
+}

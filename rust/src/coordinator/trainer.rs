@@ -1,0 +1,339 @@
+//! Training coordination: the paper's Fig. 5 workflow, natively in Rust.
+//!
+//! A [`Pipeline`] binds a dataset, a hook recipe, and a compiled model
+//! runtime, then drives epochs:
+//!
+//! * **CTDG tasks** iterate by events (fixed-size batches); memory/sketch
+//!   state updates happen inside the AOT `train` artifact.
+//! * **DTDG tasks** iterate by time (one batch per snapshot bucket) and
+//!   train on (snapshot_t, queries_{t+1}) pairs; recurrent state advances
+//!   inside the artifact with truncated BPTT.
+//!
+//! Everything is instrumented through [`super::profiler::Profiler`] so
+//! Table 11's breakdown can be reproduced.
+
+use crate::coordinator::packing::{self, ModelFamily, PackConfig, Packed};
+use crate::coordinator::profiler::Profiler;
+use crate::coordinator::targets;
+use crate::error::{Result, TgmError};
+use crate::graph::{DGData, Splits, Task};
+use crate::hooks::recipes::{RecipeConfig, RecipeRegistry, SamplerKind, RECIPE_TGB_LINK};
+use crate::hooks::{DstRange, HookManager};
+use crate::loader::{BatchBy, DGDataLoader};
+use crate::runtime::{ModelRuntime, XlaEngine};
+use crate::util::{Tensor, TimeGranularity};
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Artifact model name, e.g. `tgat_link`, `gclstm_node`.
+    pub model: String,
+    /// Neighbor sampler implementation (Recency is TGM's default;
+    /// Naive is the DyGLib-style baseline for benches).
+    pub sampler: SamplerKind,
+    /// Snapshot granularity for DTDG models.
+    pub granularity: TimeGranularity,
+    /// RNG seed for hooks.
+    pub seed: u64,
+}
+
+impl PipelineConfig {
+    /// Defaults for a model name.
+    pub fn new(model: impl Into<String>) -> PipelineConfig {
+        PipelineConfig {
+            model: model.into(),
+            sampler: SamplerKind::Recency,
+            granularity: TimeGranularity::Day,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-epoch training report.
+#[derive(Debug, Clone)]
+pub struct EpochReport {
+    pub mean_loss: f64,
+    pub batches: usize,
+    pub seconds: f64,
+}
+
+/// A bound (dataset × recipe × model runtime) workflow.
+pub struct Pipeline<'e> {
+    pub runtime: ModelRuntime<'e>,
+    pub pack: PackConfig,
+    pub manager: HookManager,
+    pub node_feats: Tensor,
+    pub data: DGData,
+    pub splits: Splits,
+    pub cfg: PipelineConfig,
+    pub profiler: Profiler,
+    pub loss_history: Vec<f64>,
+}
+
+impl<'e> Pipeline<'e> {
+    /// Build a pipeline: loads the model, validates the profile against
+    /// the dataset, and wires the task-appropriate hook recipe.
+    pub fn new(engine: &'e XlaEngine, data: DGData, cfg: PipelineConfig) -> Result<Pipeline<'e>> {
+        let runtime = engine.load_model(&cfg.model)?;
+        let profile = runtime.profile.clone();
+        let pack = PackConfig::for_model(&cfg.model, &profile)?;
+        let node_feats = packing::pack_node_feats(data.storage(), &profile)?;
+        let splits = data.split()?;
+
+        let rc = RecipeConfig {
+            sampler: cfg.sampler,
+            num_neighbors: pack.k.max(1),
+            two_hop: pack.k2,
+            include_features: true,
+            dst_range: DstRange::InferFromData,
+            eval_negatives: profile.c - 1,
+            seed: cfg.seed,
+        };
+        let manager = match (data.task(), pack.family) {
+            (Task::LinkPrediction, ModelFamily::CtdgNeighbors) => {
+                RecipeRegistry::build_with(RECIPE_TGB_LINK, &rc)?
+            }
+            (Task::LinkPrediction, ModelFamily::CtdgSketch) => {
+                // TPNet needs negatives but no neighborhoods.
+                let mut m = HookManager::new();
+                m.register(
+                    "train",
+                    Box::new(crate::hooks::negatives::NegativeSampler::new(rc.dst_range, rc.seed)),
+                );
+                m.register(
+                    "val",
+                    Box::new(crate::hooks::negatives::EvalNegativeSampler::new(
+                        rc.dst_range,
+                        rc.eval_negatives,
+                        rc.seed,
+                    )),
+                );
+                m
+            }
+            (Task::NodeProperty, ModelFamily::CtdgNeighbors) => {
+                let mut m = HookManager::new();
+                let sc = crate::hooks::SamplerConfig {
+                    num_neighbors: rc.num_neighbors,
+                    two_hop: rc.two_hop,
+                    include_features: true,
+                    seed_negatives: false,
+                };
+                let mk = || -> Box<dyn crate::hooks::Hook> {
+                    match cfg.sampler {
+                        SamplerKind::Recency => {
+                            Box::new(crate::hooks::RecencySampler::new(sc.clone()))
+                        }
+                        SamplerKind::Uniform => {
+                            Box::new(crate::hooks::UniformSampler::new(sc.clone(), cfg.seed))
+                        }
+                        SamplerKind::Naive => Box::new(crate::hooks::NaiveSampler::new(sc.clone())),
+                    }
+                };
+                m.register("train", mk());
+                m.register("val", mk());
+                m
+            }
+            (_, ModelFamily::Snapshot) => {
+                let mut m = HookManager::new();
+                m.register("train", Box::new(crate::hooks::analytics::SnapshotAdjHook));
+                m.register("val", Box::new(crate::hooks::analytics::SnapshotAdjHook));
+                if data.task() == Task::LinkPrediction {
+                    m.register(
+                        "train",
+                        Box::new(crate::hooks::negatives::NegativeSampler::new(rc.dst_range, rc.seed)),
+                    );
+                    m.register(
+                        "val",
+                        Box::new(crate::hooks::negatives::EvalNegativeSampler::new(
+                            rc.dst_range,
+                            rc.eval_negatives,
+                            rc.seed,
+                        )),
+                    );
+                }
+                m
+            }
+            (task, fam) => {
+                return Err(TgmError::Config(format!(
+                    "unsupported task/family combination: {task:?} / {fam:?}"
+                )))
+            }
+        };
+
+        Ok(Pipeline {
+            runtime,
+            pack,
+            manager,
+            node_feats,
+            data,
+            splits,
+            cfg,
+            profiler: Profiler::new(),
+            loss_history: Vec::new(),
+        })
+    }
+
+    /// Batch-size-B event iteration strategy for CTDG models.
+    fn event_batching(&self) -> BatchBy {
+        BatchBy::Events(self.runtime.profile.b)
+    }
+
+    /// Train one epoch over the training split. Returns loss stats.
+    pub fn train_epoch(&mut self) -> Result<EpochReport> {
+        let t0 = std::time::Instant::now();
+        let report = match self.pack.family {
+            ModelFamily::Snapshot => self.train_epoch_snapshot(),
+            _ => self.train_epoch_ctdg(),
+        }?;
+        self.loss_history.push(report.mean_loss);
+        Ok(EpochReport { seconds: t0.elapsed().as_secs_f64(), ..report })
+    }
+
+    fn train_epoch_ctdg(&mut self) -> Result<EpochReport> {
+        self.manager.activate("train")?;
+        let view = self.splits.train.clone();
+        let by = self.event_batching();
+        let task = self.data.task();
+        let profile = self.runtime.profile.clone();
+        let horizon = self.cfg.granularity.seconds().unwrap_or(86_400);
+
+        let mut losses = Vec::new();
+        let mut loader = DGDataLoader::new(view, by, &mut self.manager)?;
+        loop {
+            let t_load = std::time::Instant::now();
+            let Some(batch) = loader.next() else { break };
+            let batch = batch?;
+            self.profiler.add("data_loading", t_load.elapsed());
+
+            let packed = match task {
+                Task::LinkPrediction => self.profiler.record("packing", || {
+                    packing::pack_link_train(&batch, &profile, &self.pack, &self.node_feats)
+                })?,
+                Task::NodeProperty => {
+                    let t_pack = std::time::Instant::now();
+                    let (target, active) = targets::node_targets(
+                        self.data.storage(),
+                        &batch.src,
+                        batch.end,
+                        batch.end + horizon,
+                        &profile,
+                    )?;
+                    let mut packed = packing::pack_node_batch(
+                        &batch,
+                        &profile,
+                        &self.pack,
+                        &self.node_feats,
+                        Some(&target),
+                    )?;
+                    // Only nodes with future activity contribute loss.
+                    let valid = packed["valid"].as_f32()?.to_vec();
+                    let merged: Vec<f32> =
+                        valid.iter().zip(&active).map(|(&v, &a)| v * a).collect();
+                    packed.insert("valid".into(), Tensor::f32(merged, &[profile.b])?);
+                    self.profiler.add("packing", t_pack.elapsed());
+                    packed
+                }
+                Task::GraphProperty => {
+                    return Err(TgmError::Config(
+                        "graph property task requires a snapshot model".into(),
+                    ))
+                }
+            };
+            let out = self.profiler.record("train_execute", || self.runtime.run("train", &packed))?;
+            if let Some(loss) = out.loss {
+                losses.push(loss as f64);
+            }
+        }
+        self.drain_hook_timings();
+        Ok(EpochReport {
+            mean_loss: crate::util::stats::mean(&losses),
+            batches: losses.len(),
+            seconds: 0.0,
+        })
+    }
+
+    fn train_epoch_snapshot(&mut self) -> Result<EpochReport> {
+        self.manager.activate("train")?;
+        let view = self.splits.train.clone();
+        let by = BatchBy::Time(self.cfg.granularity);
+        let task = self.data.task();
+        let profile = self.runtime.profile.clone();
+
+        let mut losses = Vec::new();
+        let mut prev: Option<(Packed, usize)> = None;
+        let mut loader = DGDataLoader::new(view, by, &mut self.manager)?;
+        loop {
+            let t_load = std::time::Instant::now();
+            let Some(batch) = loader.next() else { break };
+            let batch = batch?;
+            self.profiler.add("data_loading", t_load.elapsed());
+
+            let t_pack = std::time::Instant::now();
+            let adj_pack =
+                packing::pack_snapshot_adj(&batch, &profile, &self.node_feats)?;
+            let cur_edges = batch.num_edges();
+
+            if let Some((mut train_pack, prev_edges)) = prev.take() {
+                match task {
+                    Task::LinkPrediction => {
+                        packing::add_link_queries(&mut train_pack, &batch, &profile)?
+                    }
+                    Task::NodeProperty => {
+                        let nodes =
+                            targets::active_sources(self.data.storage(), batch.start, batch.end, profile.b);
+                        let (target, _) = targets::node_targets(
+                            self.data.storage(),
+                            &nodes,
+                            batch.start,
+                            batch.end,
+                            &profile,
+                        )?;
+                        packing::add_node_queries(&mut train_pack, &nodes, Some(&target), &profile)?;
+                    }
+                    Task::GraphProperty => {
+                        packing::add_graph_label(
+                            &mut train_pack,
+                            targets::growth_label(prev_edges, cur_edges),
+                        );
+                    }
+                }
+                self.profiler.add("packing", t_pack.elapsed());
+                let out =
+                    self.profiler.record("train_execute", || self.runtime.run("train", &train_pack))?;
+                if let Some(loss) = out.loss {
+                    losses.push(loss as f64);
+                }
+            } else {
+                self.profiler.add("packing", t_pack.elapsed());
+            }
+            prev = Some((adj_pack, cur_edges));
+        }
+        self.drain_hook_timings();
+        Ok(EpochReport {
+            mean_loss: crate::util::stats::mean(&losses),
+            batches: losses.len(),
+            seconds: 0.0,
+        })
+    }
+
+    /// Fold the hook manager's per-hook timings into the profiler.
+    fn drain_hook_timings(&mut self) {
+        let timings: Vec<(&'static str, std::time::Duration)> =
+            self.manager.timings().iter().map(|(k, v)| (*k, *v)).collect();
+        for (name, d) in timings {
+            self.profiler.add(name, d);
+        }
+        self.manager.reset_timings();
+    }
+
+    /// Train for `epochs` epochs, resetting hook state between epochs
+    /// (paper Fig. 5: `manager.reset_state()`).
+    pub fn fit(&mut self, epochs: usize) -> Result<Vec<EpochReport>> {
+        let mut reports = Vec::with_capacity(epochs);
+        for _ in 0..epochs {
+            self.manager.reset_state();
+            reports.push(self.train_epoch()?);
+        }
+        Ok(reports)
+    }
+}

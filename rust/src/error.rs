@@ -1,0 +1,80 @@
+//! Error types for the TGM library.
+//!
+//! All fallible public APIs return [`Result<T>`](crate::Result) with
+//! [`TgmError`]. Runtime (PJRT) errors from the `xla` crate are wrapped so
+//! callers never need a direct `xla` dependency.
+
+use thiserror::Error;
+
+/// Library-wide error type.
+#[derive(Debug, Error)]
+pub enum TgmError {
+    /// The requested time range or granularity is invalid.
+    #[error("invalid time operation: {0}")]
+    Time(String),
+
+    /// A graph construction or query precondition was violated.
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    /// A hook contract (requires/produces) could not be satisfied.
+    #[error("hook error: {0}")]
+    Hook(String),
+
+    /// A recipe's dependency graph is cyclic or has unmet requirements.
+    #[error("recipe error: {0}")]
+    Recipe(String),
+
+    /// Batch attribute missing or of the wrong type/shape.
+    #[error("batch error: {0}")]
+    Batch(String),
+
+    /// Dataset loading / parsing failure.
+    #[error("io error: {0}")]
+    Io(String),
+
+    /// Artifact manifest parsing or lookup failure.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Model configuration / state mismatch.
+    #[error("model error: {0}")]
+    Model(String),
+
+    /// Configuration error (CLI or experiment config).
+    #[error("config error: {0}")]
+    Config(String),
+}
+
+impl From<std::io::Error> for TgmError {
+    fn from(e: std::io::Error) -> Self {
+        TgmError::Io(e.to_string())
+    }
+}
+
+/// Convenient alias used across the crate.
+pub type Result<T> = std::result::Result<T, TgmError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = TgmError::Graph("bad node id".into());
+        assert!(e.to_string().contains("bad node id"));
+        assert!(e.to_string().contains("graph"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "missing.csv");
+        let e: TgmError = ioe.into();
+        assert!(matches!(e, TgmError::Io(_)));
+        assert!(e.to_string().contains("missing.csv"));
+    }
+}

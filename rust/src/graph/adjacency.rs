@@ -1,0 +1,169 @@
+//! Temporal adjacency index (CSR), the substrate for neighbor sampling.
+//!
+//! Built once per storage: for every node, the list of (neighbor,
+//! timestamp, edge index) pairs sorted by time. Because the storage's edge
+//! columns are already time-sorted, a counting-sort fill yields per-node
+//! time-sorted lists in `O(E)` with no comparison sort. Interactions are
+//! treated as undirected for neighborhood purposes (both endpoints see the
+//! event), matching TGAT/TGN semantics.
+
+use crate::graph::storage::GraphStorage;
+use crate::util::Timestamp;
+
+/// CSR over (neighbor, time, edge-index) triples, time-sorted per node.
+#[derive(Debug, Clone)]
+pub struct TemporalAdjacency {
+    offsets: Vec<u32>,
+    nbr: Vec<u32>,
+    ts: Vec<Timestamp>,
+    eidx: Vec<u32>,
+    /// Edge count of the storage this index was built from (staleness check).
+    built_from_edges: usize,
+}
+
+impl TemporalAdjacency {
+    /// Build the index from storage (undirected).
+    pub fn build(storage: &GraphStorage) -> TemporalAdjacency {
+        let n = storage.num_nodes();
+        let e = storage.num_edges();
+        let src = storage.edge_src();
+        let dst = storage.edge_dst();
+        let ets = storage.edge_ts();
+
+        let mut degree = vec![0u32; n];
+        for i in 0..e {
+            degree[src[i] as usize] += 1;
+            degree[dst[i] as usize] += 1;
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + degree[i];
+        }
+        let total = offsets[n] as usize;
+        let mut nbr = vec![0u32; total];
+        let mut ts = vec![0i64; total];
+        let mut eidx = vec![0u32; total];
+        let mut cursor = offsets[..n].to_vec();
+        // Edges are time-sorted, so sequential fill keeps per-node lists
+        // time-sorted too.
+        for i in 0..e {
+            let (s, d, t) = (src[i] as usize, dst[i] as usize, ets[i]);
+            let cs = cursor[s] as usize;
+            nbr[cs] = d as u32;
+            ts[cs] = t;
+            eidx[cs] = i as u32;
+            cursor[s] += 1;
+            let cd = cursor[d] as usize;
+            nbr[cd] = s as u32;
+            ts[cd] = t;
+            eidx[cd] = i as u32;
+            cursor[d] += 1;
+        }
+        TemporalAdjacency { offsets, nbr, ts, eidx, built_from_edges: e }
+    }
+
+    /// True if this index matches `storage` (cheap staleness check).
+    pub fn matches(&self, storage: &GraphStorage) -> bool {
+        self.built_from_edges == storage.num_edges()
+            && self.offsets.len() == storage.num_nodes() + 1
+    }
+
+    /// Full (time-sorted) neighbor list of `node`.
+    pub fn neighbors(&self, node: u32) -> (&[u32], &[Timestamp], &[u32]) {
+        let lo = self.offsets[node as usize] as usize;
+        let hi = self.offsets[node as usize + 1] as usize;
+        (&self.nbr[lo..hi], &self.ts[lo..hi], &self.eidx[lo..hi])
+    }
+
+    /// Neighbors of `node` strictly before `t` (temporal neighborhood
+    /// `N_t(s)`, paper Eq. 4 with strict inequality to prevent leakage).
+    pub fn neighbors_before(&self, node: u32, t: Timestamp) -> (&[u32], &[Timestamp], &[u32]) {
+        let lo = self.offsets[node as usize] as usize;
+        let hi = self.offsets[node as usize + 1] as usize;
+        let cut = lo + self.ts[lo..hi].partition_point(|&u| u < t);
+        (&self.nbr[lo..cut], &self.ts[lo..cut], &self.eidx[lo..cut])
+    }
+
+    /// Degree of `node` (all time).
+    pub fn degree(&self, node: u32) -> usize {
+        (self.offsets[node as usize + 1] - self.offsets[node as usize]) as usize
+    }
+
+    /// Total stored triples (2 × edges).
+    pub fn len(&self) -> usize {
+        self.nbr.len()
+    }
+
+    /// True when the index holds no triples.
+    pub fn is_empty(&self) -> bool {
+        self.nbr.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::events::EdgeEvent;
+
+    fn storage() -> GraphStorage {
+        let edges = vec![
+            EdgeEvent { t: 10, src: 0, dst: 1, features: vec![] },
+            EdgeEvent { t: 20, src: 0, dst: 2, features: vec![] },
+            EdgeEvent { t: 30, src: 1, dst: 2, features: vec![] },
+            EdgeEvent { t: 40, src: 0, dst: 1, features: vec![] },
+        ];
+        GraphStorage::from_events(edges, vec![], 4, None, None).unwrap()
+    }
+
+    #[test]
+    fn csr_structure() {
+        let adj = TemporalAdjacency::build(&storage());
+        assert_eq!(adj.len(), 8);
+        assert_eq!(adj.degree(0), 3);
+        assert_eq!(adj.degree(3), 0);
+        let (n, t, e) = adj.neighbors(0);
+        assert_eq!(n, &[1, 2, 1]);
+        assert_eq!(t, &[10, 20, 40]);
+        assert_eq!(e, &[0, 1, 3]);
+    }
+
+    #[test]
+    fn undirected_symmetry() {
+        let adj = TemporalAdjacency::build(&storage());
+        let (n1, _, _) = adj.neighbors(1);
+        assert_eq!(n1, &[0, 2, 0]);
+    }
+
+    #[test]
+    fn temporal_cut_is_strict() {
+        let adj = TemporalAdjacency::build(&storage());
+        let (n, t, _) = adj.neighbors_before(0, 20);
+        assert_eq!(n, &[1]);
+        assert_eq!(t, &[10]);
+        // Exactly at an event time: that event is excluded (no leakage).
+        let (n2, _, _) = adj.neighbors_before(0, 10);
+        assert!(n2.is_empty());
+        let (n3, _, _) = adj.neighbors_before(0, 1_000);
+        assert_eq!(n3.len(), 3);
+    }
+
+    #[test]
+    fn per_node_lists_time_sorted_randomized() {
+        let mut rng = crate::util::Rng::new(77);
+        let edges: Vec<EdgeEvent> = (0..300)
+            .map(|_| EdgeEvent {
+                t: rng.range(0, 1000),
+                src: rng.below(10) as u32,
+                dst: rng.below(10) as u32,
+                features: vec![],
+            })
+            .collect();
+        let st = GraphStorage::from_events(edges, vec![], 10, None, None).unwrap();
+        let adj = TemporalAdjacency::build(&st);
+        for node in 0..10 {
+            let (_, ts, _) = adj.neighbors(node);
+            assert!(ts.windows(2).all(|w| w[0] <= w[1]), "node {node} unsorted");
+        }
+        assert!(adj.matches(&st));
+    }
+}

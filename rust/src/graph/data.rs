@@ -1,0 +1,239 @@
+//! Dataset container and chronological splits (paper §4, "IO Adaptors").
+//!
+//! [`DGData`] owns one immutable [`GraphStorage`] plus task metadata and
+//! produces train/validation/test [`DGraph`] views via chronological
+//! splitting (the TGB protocol: 70/15/15 by time).
+
+use crate::error::{Result, TgmError};
+use crate::graph::storage::GraphStorage;
+use crate::graph::view::DGraph;
+use crate::util::Timestamp;
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// Prediction task attached to a dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// Dynamic link property prediction (one-vs-many evaluation).
+    LinkPrediction,
+    /// Dynamic node property prediction (NDCG@10 evaluation).
+    NodeProperty,
+    /// Dynamic graph property prediction (AUC evaluation).
+    GraphProperty,
+}
+
+/// Train/validation/test views sharing one storage.
+#[derive(Debug, Clone)]
+pub struct Splits {
+    pub train: DGraph,
+    pub val: DGraph,
+    pub test: DGraph,
+}
+
+/// A loaded dataset: storage + name + task.
+#[derive(Debug, Clone)]
+pub struct DGData {
+    storage: Arc<GraphStorage>,
+    name: String,
+    task: Task,
+}
+
+impl DGData {
+    /// Wrap storage with a dataset name and task.
+    pub fn new(storage: GraphStorage, name: impl Into<String>, task: Task) -> DGData {
+        DGData { storage: storage.into_shared(), name: name.into(), task }
+    }
+
+    /// Dataset name (e.g. `wiki-small`).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Attached task.
+    pub fn task(&self) -> Task {
+        self.task
+    }
+
+    /// Shared storage.
+    pub fn storage(&self) -> &Arc<GraphStorage> {
+        &self.storage
+    }
+
+    /// View over the full dataset.
+    pub fn full(&self) -> DGraph {
+        DGraph::full(Arc::clone(&self.storage))
+    }
+
+    /// Chronological split at the given ratios (must sum to <= 1).
+    ///
+    /// Split boundaries are timestamps, so events sharing a timestamp are
+    /// never divided across splits (TGB protocol).
+    pub fn split_ratios(&self, train: f64, val: f64) -> Result<Splits> {
+        if !(0.0..=1.0).contains(&train) || !(0.0..=1.0).contains(&val) || train + val > 1.0 {
+            return Err(TgmError::Config(format!("bad split ratios ({train}, {val})")));
+        }
+        let n = self.storage.num_edges();
+        let ts = self.storage.edge_ts();
+        let t_begin = self.storage.start_time();
+        let t_end = self.storage.end_time() + 1;
+
+        // Timestamp at the split quantiles; clamp to event boundaries.
+        let train_idx = ((n as f64 * train) as usize).min(n - 1);
+        let val_idx = ((n as f64 * (train + val)) as usize).min(n - 1);
+        let t_train_end = ts[train_idx];
+        let t_val_end = ts[val_idx].max(t_train_end);
+
+        let train = DGraph::slice_of(Arc::clone(&self.storage), t_begin, t_train_end)?;
+        let val = DGraph::slice_of(Arc::clone(&self.storage), t_train_end, t_val_end)?;
+        let test = DGraph::slice_of(Arc::clone(&self.storage), t_val_end, t_end)?;
+        Ok(Splits { train, val, test })
+    }
+
+    /// Default TGB split: 70% train, 15% validation, 15% test.
+    pub fn split(&self) -> Result<Splits> {
+        self.split_ratios(0.70, 0.15)
+    }
+
+    /// Dataset statistics (Table 13 columns).
+    pub fn stats(&self) -> DatasetStats {
+        DatasetStats::compute(&self.storage, &self.name)
+    }
+}
+
+/// Summary statistics matching the paper's Table 13.
+#[derive(Debug, Clone)]
+pub struct DatasetStats {
+    pub name: String,
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    pub num_unique_edges: usize,
+    pub num_unique_steps: usize,
+    /// Fraction of test-period edges never seen during the train period
+    /// (Poursafaei et al. 2022's "surprise" index, on the default split).
+    pub surprise: f64,
+    pub duration: Timestamp,
+    pub num_node_events: usize,
+}
+
+impl DatasetStats {
+    fn compute(storage: &Arc<GraphStorage>, name: &str) -> DatasetStats {
+        let src = storage.edge_src();
+        let dst = storage.edge_dst();
+        let n = storage.num_edges();
+
+        let mut unique: HashSet<(u32, u32)> = HashSet::with_capacity(n);
+        for i in 0..n {
+            unique.insert((src[i], dst[i]));
+        }
+
+        // Surprise on the default 85/15 boundary (train+val vs test).
+        let split_idx = (n as f64 * 0.85) as usize;
+        let mut train_edges: HashSet<(u32, u32)> = HashSet::with_capacity(split_idx);
+        for i in 0..split_idx {
+            train_edges.insert((src[i], dst[i]));
+        }
+        let test_n = n - split_idx;
+        let surprise = if test_n == 0 {
+            0.0
+        } else {
+            let unseen =
+                (split_idx..n).filter(|&i| !train_edges.contains(&(src[i], dst[i]))).count();
+            unseen as f64 / test_n as f64
+        };
+
+        DatasetStats {
+            name: name.to_string(),
+            num_nodes: storage.num_nodes(),
+            num_edges: n,
+            num_unique_edges: unique.len(),
+            num_unique_steps: storage.num_unique_timestamps(),
+            surprise,
+            duration: storage.end_time() - storage.start_time(),
+            num_node_events: storage.num_node_events(),
+        }
+    }
+}
+
+impl std::fmt::Display for DatasetStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: nodes={} edges={} unique_edges={} unique_steps={} surprise={:.3} duration={}s node_events={}",
+            self.name,
+            self.num_nodes,
+            self.num_edges,
+            self.num_unique_edges,
+            self.num_unique_steps,
+            self.surprise,
+            self.duration,
+            self.num_node_events
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::events::EdgeEvent;
+
+    fn data(n_edges: usize) -> DGData {
+        let edges = (0..n_edges)
+            .map(|i| EdgeEvent {
+                t: i as i64,
+                src: (i % 4) as u32,
+                dst: ((i + 1) % 4) as u32,
+                features: vec![],
+            })
+            .collect();
+        let st = GraphStorage::from_events(edges, vec![], 4, None, None).unwrap();
+        DGData::new(st, "toy", Task::LinkPrediction)
+    }
+
+    #[test]
+    fn split_is_chronological_and_complete() {
+        let d = data(100);
+        let s = d.split().unwrap();
+        assert_eq!(s.train.num_edges() + s.val.num_edges() + s.test.num_edges(), 100);
+        assert!(s.train.end_time() <= s.val.start_time() + 1);
+        assert!(s.val.end_time() <= s.test.start_time() + 1);
+        // Roughly 70/15/15.
+        assert!((65..=75).contains(&s.train.num_edges()), "{}", s.train.num_edges());
+        assert!((10..=20).contains(&s.val.num_edges()));
+        assert!((10..=20).contains(&s.test.num_edges()));
+    }
+
+    #[test]
+    fn split_never_divides_a_timestamp() {
+        // All events share one timestamp: everything must land in one split.
+        let edges = (0..10)
+            .map(|i| EdgeEvent { t: 5, src: (i % 3) as u32, dst: ((i + 1) % 3) as u32, features: vec![] })
+            .collect();
+        let st = GraphStorage::from_events(edges, vec![], 3, None, None).unwrap();
+        let d = DGData::new(st, "same-ts", Task::LinkPrediction);
+        let s = d.split().unwrap();
+        let counts =
+            [s.train.num_edges(), s.val.num_edges(), s.test.num_edges()];
+        assert_eq!(counts.iter().sum::<usize>(), 10);
+        assert_eq!(counts.iter().filter(|&&c| c > 0).count(), 1);
+    }
+
+    #[test]
+    fn bad_ratios_rejected() {
+        let d = data(10);
+        assert!(d.split_ratios(0.8, 0.3).is_err());
+        assert!(d.split_ratios(-0.1, 0.5).is_err());
+    }
+
+    #[test]
+    fn stats_fields() {
+        let d = data(100);
+        let st = d.stats();
+        assert_eq!(st.num_edges, 100);
+        assert_eq!(st.num_nodes, 4);
+        assert_eq!(st.num_unique_edges, 4); // cycle of 4 pairs
+        assert_eq!(st.num_unique_steps, 100);
+        assert_eq!(st.duration, 99);
+        // Every test edge was seen in train -> surprise 0.
+        assert_eq!(st.surprise, 0.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! Event types (paper Definition 3.1).
+//!
+//! Events are the fundamental unit of a temporal graph. TGM distinguishes
+//! *edge events* — a timestamped interaction `(t, src, dst, x_edge)` — and
+//! *node events* — the arrival of new features `(t, node, x_node)` at a
+//! node. Both carry optional feature payloads; in columnar storage the
+//! payload is a row index into a feature matrix (see
+//! [`super::storage::GraphStorage`]).
+
+use crate::util::Timestamp;
+
+/// Node identifier. Graphs are re-indexed to a compact `0..num_nodes` range
+/// at construction time.
+pub type NodeId = u32;
+
+/// A timestamped interaction between two nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeEvent {
+    pub t: Timestamp,
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Edge feature vector (may be empty for unattributed graphs).
+    pub features: Vec<f32>,
+}
+
+/// Arrival of new dynamic features at a node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeEvent {
+    pub t: Timestamp,
+    pub node: NodeId,
+    pub features: Vec<f32>,
+}
+
+/// Union of the two event kinds, ordered by time (ties: edge before node,
+/// then insertion order — a total order that iteration relies on).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Edge(EdgeEvent),
+    Node(NodeEvent),
+}
+
+impl Event {
+    /// Timestamp of the event.
+    pub fn t(&self) -> Timestamp {
+        match self {
+            Event::Edge(e) => e.t,
+            Event::Node(n) => n.t,
+        }
+    }
+
+    /// True for edge events.
+    pub fn is_edge(&self) -> bool {
+        matches!(self, Event::Edge(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_accessors() {
+        let e = Event::Edge(EdgeEvent { t: 5, src: 1, dst: 2, features: vec![] });
+        let n = Event::Node(NodeEvent { t: 7, node: 3, features: vec![1.0] });
+        assert_eq!(e.t(), 5);
+        assert_eq!(n.t(), 7);
+        assert!(e.is_edge());
+        assert!(!n.is_edge());
+    }
+}

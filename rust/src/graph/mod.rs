@@ -1,0 +1,16 @@
+//! Data layer: events, immutable time-sorted COO storage, lightweight
+//! views, discretization, dataset containers and statistics (paper §3-4).
+
+pub mod adjacency;
+pub mod data;
+pub mod discretize;
+pub mod events;
+pub mod storage;
+pub mod view;
+
+pub use adjacency::TemporalAdjacency;
+pub use data::{DGData, DatasetStats, Splits, Task};
+pub use discretize::{discretize, discretize_utg, ReduceOp};
+pub use events::{EdgeEvent, Event, NodeEvent, NodeId};
+pub use storage::GraphStorage;
+pub use view::DGraph;

@@ -1,0 +1,472 @@
+//! Immutable, time-sorted COO graph storage (paper §4, "Graph Storage").
+//!
+//! The backend is a columnar structure-of-arrays: edge timestamps, sources,
+//! destinations and a flattened edge-feature matrix, all sorted by
+//! timestamp (stable, so same-timestamp events keep insertion order).
+//! Node events live in a parallel set of sorted columns. A *cached
+//! timestamp index* (unique timestamp → first event offset) accelerates
+//! time-slicing and recent-neighbor retrieval: lookups are a binary search
+//! over unique timestamps instead of the full event array.
+//!
+//! The storage is read-only after construction (the paper sidesteps
+//! insertion/deletion complexity by assuming a read-only event log), which
+//! makes views concurrency-safe by construction: they share the storage
+//! through an `Arc` and carry only time bounds.
+
+use crate::error::{Result, TgmError};
+use crate::graph::events::{EdgeEvent, NodeEvent, NodeId};
+use crate::util::{infer_native_granularity, TimeGranularity, Timestamp};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Immutable columnar storage for one temporal graph.
+#[derive(Debug)]
+pub struct GraphStorage {
+    // --- edge events, sorted by ts (stable) ---
+    ts: Vec<Timestamp>,
+    src: Vec<NodeId>,
+    dst: Vec<NodeId>,
+    edge_feat_dim: usize,
+    edge_feats: Vec<f32>,
+    // --- node events, sorted by ts (stable) ---
+    node_ev_ts: Vec<Timestamp>,
+    node_ev_id: Vec<NodeId>,
+    node_feat_dim: usize,
+    node_ev_feats: Vec<f32>,
+    // --- static node features ---
+    static_feat_dim: usize,
+    static_feats: Vec<f32>,
+    // --- metadata ---
+    num_nodes: usize,
+    granularity: TimeGranularity,
+    /// Cached index: (unique timestamp, offset of its first edge event).
+    ts_index: Vec<(Timestamp, u32)>,
+}
+
+impl GraphStorage {
+    /// Build storage from (possibly unsorted) edge and node events.
+    ///
+    /// `num_nodes` must exceed every referenced node id. If `granularity`
+    /// is `None`, the native granularity is inferred from edge timestamps
+    /// (paper §3).
+    pub fn from_events(
+        mut edges: Vec<EdgeEvent>,
+        mut node_events: Vec<NodeEvent>,
+        num_nodes: usize,
+        static_feats: Option<(usize, Vec<f32>)>,
+        granularity: Option<TimeGranularity>,
+    ) -> Result<GraphStorage> {
+        if edges.is_empty() {
+            return Err(TgmError::Graph("graph must contain at least one edge event".into()));
+        }
+        edges.sort_by_key(|e| e.t);
+        node_events.sort_by_key(|e| e.t);
+
+        let edge_feat_dim = edges[0].features.len();
+        let node_feat_dim = node_events.first().map_or(0, |e| e.features.len());
+
+        let n = edges.len();
+        let mut ts = Vec::with_capacity(n);
+        let mut src = Vec::with_capacity(n);
+        let mut dst = Vec::with_capacity(n);
+        let mut edge_feats = Vec::with_capacity(n * edge_feat_dim);
+        for e in &edges {
+            if e.src as usize >= num_nodes || e.dst as usize >= num_nodes {
+                return Err(TgmError::Graph(format!(
+                    "edge ({}, {}) references node >= num_nodes={num_nodes}",
+                    e.src, e.dst
+                )));
+            }
+            if e.features.len() != edge_feat_dim {
+                return Err(TgmError::Graph(format!(
+                    "inconsistent edge feature dim: {} vs {edge_feat_dim}",
+                    e.features.len()
+                )));
+            }
+            ts.push(e.t);
+            src.push(e.src);
+            dst.push(e.dst);
+            edge_feats.extend_from_slice(&e.features);
+        }
+
+        let mut node_ev_ts = Vec::with_capacity(node_events.len());
+        let mut node_ev_id = Vec::with_capacity(node_events.len());
+        let mut node_ev_feats = Vec::with_capacity(node_events.len() * node_feat_dim);
+        for e in &node_events {
+            if e.node as usize >= num_nodes {
+                return Err(TgmError::Graph(format!(
+                    "node event references node {} >= num_nodes={num_nodes}",
+                    e.node
+                )));
+            }
+            if e.features.len() != node_feat_dim {
+                return Err(TgmError::Graph(format!(
+                    "inconsistent node feature dim: {} vs {node_feat_dim}",
+                    e.features.len()
+                )));
+            }
+            node_ev_ts.push(e.t);
+            node_ev_id.push(e.node);
+            node_ev_feats.extend_from_slice(&e.features);
+        }
+
+        let (static_feat_dim, static_feats) = match static_feats {
+            Some((dim, feats)) => {
+                if feats.len() != dim * num_nodes {
+                    return Err(TgmError::Graph(format!(
+                        "static feature matrix has {} values, expected {}",
+                        feats.len(),
+                        dim * num_nodes
+                    )));
+                }
+                (dim, feats)
+            }
+            None => (0, Vec::new()),
+        };
+
+        let granularity = granularity.unwrap_or_else(|| infer_native_granularity(&ts));
+        let ts_index = build_ts_index(&ts);
+
+        Ok(GraphStorage {
+            ts,
+            src,
+            dst,
+            edge_feat_dim,
+            edge_feats,
+            node_ev_ts,
+            node_ev_id,
+            node_feat_dim,
+            node_ev_feats,
+            static_feat_dim,
+            static_feats,
+            num_nodes,
+            granularity,
+            ts_index,
+        })
+    }
+
+    /// Build directly from sorted columns (used by discretization, which
+    /// produces already-sorted output). Callers must guarantee `ts` is
+    /// non-decreasing; this is checked in debug builds.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_sorted_columns(
+        ts: Vec<Timestamp>,
+        src: Vec<NodeId>,
+        dst: Vec<NodeId>,
+        edge_feat_dim: usize,
+        edge_feats: Vec<f32>,
+        num_nodes: usize,
+        static_feat_dim: usize,
+        static_feats: Vec<f32>,
+        granularity: TimeGranularity,
+    ) -> GraphStorage {
+        debug_assert!(ts.windows(2).all(|w| w[0] <= w[1]), "columns must be time-sorted");
+        let ts_index = build_ts_index(&ts);
+        GraphStorage {
+            ts,
+            src,
+            dst,
+            edge_feat_dim,
+            edge_feats,
+            node_ev_ts: Vec::new(),
+            node_ev_id: Vec::new(),
+            node_feat_dim: 0,
+            node_ev_feats: Vec::new(),
+            static_feat_dim,
+            static_feats,
+            num_nodes,
+            granularity,
+            ts_index,
+        }
+    }
+
+    /// Wrap in an `Arc` for sharing with views.
+    pub fn into_shared(self) -> Arc<GraphStorage> {
+        Arc::new(self)
+    }
+
+    // ------------------------------------------------------------------
+    // metadata
+    // ------------------------------------------------------------------
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.ts.len()
+    }
+
+    pub fn num_node_events(&self) -> usize {
+        self.node_ev_ts.len()
+    }
+
+    pub fn edge_feat_dim(&self) -> usize {
+        self.edge_feat_dim
+    }
+
+    pub fn node_feat_dim(&self) -> usize {
+        self.node_feat_dim
+    }
+
+    pub fn static_feat_dim(&self) -> usize {
+        self.static_feat_dim
+    }
+
+    /// Native time granularity of the stored graph.
+    pub fn granularity(&self) -> TimeGranularity {
+        self.granularity
+    }
+
+    /// Timestamp of the first edge event.
+    pub fn start_time(&self) -> Timestamp {
+        self.ts[0]
+    }
+
+    /// Timestamp of the last edge event.
+    pub fn end_time(&self) -> Timestamp {
+        *self.ts.last().unwrap()
+    }
+
+    /// Number of distinct edge timestamps ("unique steps" in Table 13).
+    pub fn num_unique_timestamps(&self) -> usize {
+        self.ts_index.len()
+    }
+
+    // ------------------------------------------------------------------
+    // columnar accessors (zero-copy)
+    // ------------------------------------------------------------------
+
+    pub fn edge_ts(&self) -> &[Timestamp] {
+        &self.ts
+    }
+
+    pub fn edge_src(&self) -> &[NodeId] {
+        &self.src
+    }
+
+    pub fn edge_dst(&self) -> &[NodeId] {
+        &self.dst
+    }
+
+    /// Flattened edge feature matrix (`num_edges x edge_feat_dim`).
+    pub fn edge_feats(&self) -> &[f32] {
+        &self.edge_feats
+    }
+
+    /// Feature row of edge `i` (empty slice when unattributed).
+    pub fn edge_feat_row(&self, i: usize) -> &[f32] {
+        &self.edge_feats[i * self.edge_feat_dim..(i + 1) * self.edge_feat_dim]
+    }
+
+    pub fn node_event_ts(&self) -> &[Timestamp] {
+        &self.node_ev_ts
+    }
+
+    pub fn node_event_ids(&self) -> &[NodeId] {
+        &self.node_ev_id
+    }
+
+    pub fn node_event_feats(&self) -> &[f32] {
+        &self.node_ev_feats
+    }
+
+    pub fn node_event_feat_row(&self, i: usize) -> &[f32] {
+        &self.node_ev_feats[i * self.node_feat_dim..(i + 1) * self.node_feat_dim]
+    }
+
+    /// Static node feature matrix (`num_nodes x static_feat_dim`).
+    pub fn static_feats(&self) -> &[f32] {
+        &self.static_feats
+    }
+
+    // ------------------------------------------------------------------
+    // time queries (binary search over the cached index)
+    // ------------------------------------------------------------------
+
+    /// Index range of edge events with `t0 <= t < t1`.
+    ///
+    /// Uses the cached unique-timestamp index — two binary searches over
+    /// `O(U)` unique timestamps — when it actually shrinks the search
+    /// space. With near-unique timestamps (U ≈ E, e.g. wiki's 152k steps
+    /// over 157k events) the indirection costs more than it saves
+    /// (measured in `benches/ablations.rs`), so we fall back to a direct
+    /// search over the raw column.
+    pub fn edge_range(&self, t0: Timestamp, t1: Timestamp) -> Range<usize> {
+        if t1 <= t0 {
+            return 0..0;
+        }
+        if self.ts_index.len() * 4 > self.ts.len() * 3 {
+            let lo = self.ts.partition_point(|&u| u < t0);
+            let hi = self.ts.partition_point(|&u| u < t1);
+            return lo..hi;
+        }
+        let lo = self.index_lower_bound(t0);
+        let hi = self.index_lower_bound(t1);
+        lo..hi
+    }
+
+    /// Offset of the first edge with timestamp >= t.
+    fn index_lower_bound(&self, t: Timestamp) -> usize {
+        let pos = self.ts_index.partition_point(|&(u, _)| u < t);
+        if pos == self.ts_index.len() {
+            self.ts.len()
+        } else {
+            self.ts_index[pos].1 as usize
+        }
+    }
+
+    /// Index range of node events with `t0 <= t < t1` (plain binary search;
+    /// node events are typically far fewer than edges).
+    pub fn node_event_range(&self, t0: Timestamp, t1: Timestamp) -> Range<usize> {
+        if t1 <= t0 {
+            return 0..0;
+        }
+        let lo = self.node_ev_ts.partition_point(|&u| u < t0);
+        let hi = self.node_ev_ts.partition_point(|&u| u < t1);
+        lo..hi
+    }
+
+    /// Latest dynamic feature row for `node` strictly before `t`, falling
+    /// back to `None` when no node event precedes `t`.
+    pub fn latest_node_features_before(&self, node: NodeId, t: Timestamp) -> Option<&[f32]> {
+        let hi = self.node_ev_ts.partition_point(|&u| u < t);
+        self.node_ev_id[..hi]
+            .iter()
+            .rposition(|&n| n == node)
+            .map(|i| self.node_event_feat_row(i))
+    }
+
+    /// Total bytes held by this storage (memory accounting, Table 10).
+    pub fn byte_size(&self) -> usize {
+        self.ts.len() * 8
+            + self.src.len() * 4
+            + self.dst.len() * 4
+            + self.edge_feats.len() * 4
+            + self.node_ev_ts.len() * 8
+            + self.node_ev_id.len() * 4
+            + self.node_ev_feats.len() * 4
+            + self.static_feats.len() * 4
+            + self.ts_index.len() * 12
+    }
+}
+
+/// Build the cached unique-timestamp index from a sorted timestamp column.
+fn build_ts_index(ts: &[Timestamp]) -> Vec<(Timestamp, u32)> {
+    let mut index = Vec::new();
+    let mut prev: Option<Timestamp> = None;
+    for (i, &t) in ts.iter().enumerate() {
+        if prev != Some(t) {
+            index.push((t, i as u32));
+            prev = Some(t);
+        }
+    }
+    index
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edge(t: Timestamp, src: NodeId, dst: NodeId) -> EdgeEvent {
+        EdgeEvent { t, src, dst, features: vec![t as f32] }
+    }
+
+    fn sample() -> GraphStorage {
+        // Unsorted on purpose; duplicates at t=10.
+        let edges = vec![edge(20, 2, 3), edge(10, 0, 1), edge(10, 1, 2), edge(40, 3, 0)];
+        let nodes = vec![
+            NodeEvent { t: 15, node: 1, features: vec![1.0, 2.0] },
+            NodeEvent { t: 35, node: 1, features: vec![3.0, 4.0] },
+        ];
+        GraphStorage::from_events(edges, nodes, 4, None, None).unwrap()
+    }
+
+    #[test]
+    fn construction_sorts_and_indexes() {
+        let g = sample();
+        assert_eq!(g.edge_ts(), &[10, 10, 20, 40]);
+        assert_eq!(g.edge_src(), &[0, 1, 2, 3]);
+        assert_eq!(g.num_unique_timestamps(), 3);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.start_time(), 10);
+        assert_eq!(g.end_time(), 40);
+        // Feature rows follow the sort.
+        assert_eq!(g.edge_feat_row(0), &[10.0]);
+        assert_eq!(g.edge_feat_row(3), &[40.0]);
+    }
+
+    #[test]
+    fn edge_range_boundaries() {
+        let g = sample();
+        assert_eq!(g.edge_range(10, 11), 0..2);
+        assert_eq!(g.edge_range(10, 10), 0..0); // empty interval
+        assert_eq!(g.edge_range(0, 100), 0..4);
+        assert_eq!(g.edge_range(11, 20), 2..2);
+        assert_eq!(g.edge_range(11, 21), 2..3);
+        assert_eq!(g.edge_range(41, 50), 4..4);
+        assert_eq!(g.edge_range(20, 10), 0..0); // inverted interval
+    }
+
+    #[test]
+    fn edge_range_matches_linear_scan() {
+        // Property check: index-based range == brute-force filter.
+        let mut rng = crate::util::Rng::new(123);
+        let edges: Vec<EdgeEvent> =
+            (0..500).map(|_| edge(rng.range(0, 50), 0, 1)).collect();
+        let g = GraphStorage::from_events(edges, vec![], 2, None, None).unwrap();
+        for _ in 0..200 {
+            let a = rng.range(-5, 60);
+            let b = rng.range(-5, 60);
+            let r = g.edge_range(a, b);
+            let expect =
+                g.edge_ts().iter().filter(|&&t| t >= a && t < b).count();
+            assert_eq!(r.len(), expect, "range [{a},{b})");
+            for i in r {
+                assert!(g.edge_ts()[i] >= a && g.edge_ts()[i] < b);
+            }
+        }
+    }
+
+    #[test]
+    fn node_event_queries() {
+        let g = sample();
+        assert_eq!(g.node_event_range(0, 100), 0..2);
+        assert_eq!(g.node_event_range(16, 100), 1..2);
+        assert_eq!(g.latest_node_features_before(1, 15), None);
+        assert_eq!(g.latest_node_features_before(1, 16).unwrap(), &[1.0, 2.0]);
+        assert_eq!(g.latest_node_features_before(1, 100).unwrap(), &[3.0, 4.0]);
+        assert_eq!(g.latest_node_features_before(0, 100), None);
+    }
+
+    #[test]
+    fn validation_errors() {
+        // Node id out of range.
+        assert!(GraphStorage::from_events(vec![edge(1, 0, 9)], vec![], 4, None, None).is_err());
+        // Inconsistent feature dims.
+        let bad = vec![
+            EdgeEvent { t: 1, src: 0, dst: 1, features: vec![1.0] },
+            EdgeEvent { t: 2, src: 0, dst: 1, features: vec![1.0, 2.0] },
+        ];
+        assert!(GraphStorage::from_events(bad, vec![], 2, None, None).is_err());
+        // Empty graph.
+        assert!(GraphStorage::from_events(vec![], vec![], 2, None, None).is_err());
+        // Static feature size mismatch.
+        assert!(GraphStorage::from_events(
+            vec![edge(1, 0, 1)],
+            vec![],
+            2,
+            Some((3, vec![0.0; 5])),
+            None
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn granularity_inferred() {
+        let edges = vec![edge(0, 0, 1), edge(3600, 1, 0), edge(7200, 0, 1)];
+        let g = GraphStorage::from_events(edges, vec![], 2, None, None).unwrap();
+        assert_eq!(g.granularity(), TimeGranularity::Hour);
+    }
+}

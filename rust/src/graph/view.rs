@@ -1,0 +1,220 @@
+//! Lightweight, concurrency-safe temporal sub-graph views (paper §4).
+//!
+//! A [`DGraph`] is a time-bounded window `[start, end)` over shared,
+//! immutable [`GraphStorage`], plus a *read granularity* that encodes how
+//! the window is iterated: the event-ordered granularity gives CTDG-style
+//! fixed-size event batches, any coarser wall-clock granularity gives
+//! DTDG-style snapshots (Definitions 3.3/3.4). Views are cheap to clone
+//! and share the storage through an `Arc`.
+
+use crate::error::{Result, TgmError};
+use crate::graph::storage::GraphStorage;
+use crate::util::{TimeGranularity, Timestamp};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// A time-sliced view over shared graph storage.
+#[derive(Debug, Clone)]
+pub struct DGraph {
+    storage: Arc<GraphStorage>,
+    /// Inclusive start of the window.
+    start: Timestamp,
+    /// Exclusive end of the window.
+    end: Timestamp,
+    /// Read granularity for iteration (see module docs).
+    granularity: TimeGranularity,
+}
+
+impl DGraph {
+    /// View covering the entire storage at its native granularity.
+    pub fn full(storage: Arc<GraphStorage>) -> DGraph {
+        let start = storage.start_time();
+        let end = storage.end_time() + 1;
+        let granularity = storage.granularity();
+        DGraph { storage, start, end, granularity }
+    }
+
+    /// View over `[start, end)` at the storage's native granularity.
+    pub fn slice_of(storage: Arc<GraphStorage>, start: Timestamp, end: Timestamp) -> Result<DGraph> {
+        if end < start {
+            return Err(TgmError::Time(format!("invalid window [{start}, {end})")));
+        }
+        let granularity = storage.granularity();
+        Ok(DGraph { storage, start, end, granularity })
+    }
+
+    /// Narrow this view to `[t0, t1)` (must be inside the current window).
+    pub fn slice(&self, t0: Timestamp, t1: Timestamp) -> Result<DGraph> {
+        if t0 < self.start || t1 > self.end || t1 < t0 {
+            return Err(TgmError::Time(format!(
+                "slice [{t0}, {t1}) outside view window [{}, {})",
+                self.start, self.end
+            )));
+        }
+        Ok(DGraph {
+            storage: Arc::clone(&self.storage),
+            start: t0,
+            end: t1,
+            granularity: self.granularity,
+        })
+    }
+
+    /// Change the read granularity. The new granularity must be coarser
+    /// than or equal to the storage's native granularity, or the special
+    /// event-ordered granularity (always permitted).
+    pub fn with_granularity(&self, g: TimeGranularity) -> Result<DGraph> {
+        if g != TimeGranularity::Event && !g.is_coarser_or_equal(&self.storage.granularity()) {
+            return Err(TgmError::Time(format!(
+                "granularity {} finer than native {}",
+                g.as_str(),
+                self.storage.granularity().as_str()
+            )));
+        }
+        let mut v = self.clone();
+        v.granularity = g;
+        Ok(v)
+    }
+
+    /// Shared storage backing this view.
+    pub fn storage(&self) -> &Arc<GraphStorage> {
+        &self.storage
+    }
+
+    /// Inclusive window start.
+    pub fn start_time(&self) -> Timestamp {
+        self.start
+    }
+
+    /// Exclusive window end.
+    pub fn end_time(&self) -> Timestamp {
+        self.end
+    }
+
+    /// Current read granularity.
+    pub fn granularity(&self) -> TimeGranularity {
+        self.granularity
+    }
+
+    /// Edge index range of this window in the underlying storage.
+    pub fn edge_indices(&self) -> Range<usize> {
+        self.storage.edge_range(self.start, self.end)
+    }
+
+    /// Node-event index range of this window.
+    pub fn node_event_indices(&self) -> Range<usize> {
+        self.storage.node_event_range(self.start, self.end)
+    }
+
+    /// Number of edge events in the window.
+    pub fn num_edges(&self) -> usize {
+        self.edge_indices().len()
+    }
+
+    /// Number of node events in the window.
+    pub fn num_node_events(&self) -> usize {
+        self.node_event_indices().len()
+    }
+
+    /// Number of nodes in the underlying storage (ids are global).
+    pub fn num_nodes(&self) -> usize {
+        self.storage.num_nodes()
+    }
+
+    /// Timestamps of edges in the window (borrowed from storage).
+    pub fn edge_ts(&self) -> &[Timestamp] {
+        &self.storage.edge_ts()[self.edge_indices()]
+    }
+
+    /// Sources of edges in the window.
+    pub fn edge_src(&self) -> &[u32] {
+        &self.storage.edge_src()[self.edge_indices()]
+    }
+
+    /// Destinations of edges in the window.
+    pub fn edge_dst(&self) -> &[u32] {
+        &self.storage.edge_dst()[self.edge_indices()]
+    }
+
+    /// Number of snapshot buckets the window spans at the read
+    /// granularity. Errors for the event-ordered granularity.
+    pub fn num_snapshots(&self) -> Result<usize> {
+        if self.end <= self.start {
+            return Ok(0);
+        }
+        let first = self.granularity.bucket_of(self.start, 0)?;
+        let last = self.granularity.bucket_of(self.end - 1, 0)?;
+        Ok((last - first + 1) as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::events::EdgeEvent;
+
+    fn storage() -> Arc<GraphStorage> {
+        let edges = (0..100)
+            .map(|i| EdgeEvent {
+                t: i * 60, // one event per minute
+                src: (i % 5) as u32,
+                dst: ((i + 1) % 5) as u32,
+                features: vec![],
+            })
+            .collect();
+        GraphStorage::from_events(edges, vec![], 5, None, None).unwrap().into_shared()
+    }
+
+    #[test]
+    fn full_view_covers_everything() {
+        let v = DGraph::full(storage());
+        assert_eq!(v.num_edges(), 100);
+        assert_eq!(v.granularity(), TimeGranularity::Minute);
+        assert_eq!(v.edge_ts().len(), 100);
+    }
+
+    #[test]
+    fn slicing_narrows_and_validates() {
+        let v = DGraph::full(storage());
+        let s = v.slice(60, 180).unwrap();
+        assert_eq!(s.num_edges(), 2); // t=60, t=120
+        assert_eq!(s.edge_ts(), &[60, 120]);
+        // Out-of-window slice rejected.
+        assert!(s.slice(0, 100).is_err());
+        // Inverted rejected.
+        assert!(v.slice(100, 50).is_err());
+    }
+
+    #[test]
+    fn views_share_storage() {
+        let st = storage();
+        let a = DGraph::full(Arc::clone(&st));
+        let b = a.slice(0, 600).unwrap();
+        assert!(Arc::ptr_eq(a.storage(), b.storage()));
+        assert_eq!(Arc::strong_count(&st), 3);
+    }
+
+    #[test]
+    fn granularity_rules() {
+        let v = DGraph::full(storage()); // native = Minute
+        assert!(v.with_granularity(TimeGranularity::Hour).is_ok());
+        assert!(v.with_granularity(TimeGranularity::Minute).is_ok());
+        assert!(v.with_granularity(TimeGranularity::Second).is_err());
+        assert!(v.with_granularity(TimeGranularity::Event).is_ok());
+    }
+
+    #[test]
+    fn snapshot_counting() {
+        let v = DGraph::full(storage()); // spans [0, 99*60+1)
+        let hourly = v.with_granularity(TimeGranularity::Hour).unwrap();
+        // 99 minutes -> buckets 0 and 1.
+        assert_eq!(hourly.num_snapshots().unwrap(), 2);
+        let ev = v.with_granularity(TimeGranularity::Event).unwrap();
+        assert!(ev.num_snapshots().is_err());
+    }
+
+    #[test]
+    fn views_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<DGraph>();
+    }
+}

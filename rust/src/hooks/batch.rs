@@ -1,0 +1,180 @@
+//! Materialized batches (paper Definition 3.6).
+//!
+//! A [`MaterializedBatch`] is the data slice `B|_{T,A}`: the edge/node
+//! events of a temporal sub-graph window plus a set of named *attributes*
+//! `A` — tensors produced by hooks (sampled neighborhoods, negatives,
+//! analytics) that enrich the slice for the model. The seed columns
+//! (`src`, `dst`, `time`, edge features) are materialized by the loader;
+//! everything else arrives through hook `produces` contracts.
+
+use crate::error::{Result, TgmError};
+use crate::util::{Tensor, Timestamp};
+use std::collections::HashMap;
+
+/// Canonical attribute keys (Table 2). Hooks may also define custom keys.
+pub mod attr {
+    /// Seed source node ids, shape `[B]` i32.
+    pub const SRC: &str = "src";
+    /// Seed destination node ids, shape `[B]` i32.
+    pub const DST: &str = "dst";
+    /// Seed event times, shape `[B]` f32.
+    pub const TIME: &str = "time";
+    /// Seed edge features, shape `[B, D_edge]` f32.
+    pub const EDGE_FEATS: &str = "edge_feats";
+    /// Training negatives, shape `[B]` i32.
+    pub const NEGATIVES: &str = "negatives";
+    /// One-vs-many evaluation negatives, shape `[B, Q]` i32.
+    pub const EVAL_NEGATIVES: &str = "eval_negatives";
+    /// Sampled neighbor ids, shape `[S, K]` i32 (S = seeds per batch).
+    pub const NEIGHBORS: &str = "neighbors";
+    /// Sampled neighbor interaction times, shape `[S, K]` f32.
+    pub const NEIGHBOR_TIMES: &str = "neighbor_times";
+    /// Neighbor validity mask, shape `[S, K]` f32 (1 = valid).
+    pub const NEIGHBOR_MASK: &str = "neighbor_mask";
+    /// Neighbor edge features, shape `[S, K, D_edge]` f32.
+    pub const NEIGHBOR_FEATS: &str = "neighbor_feats";
+    /// Two-hop neighbor ids, shape `[S, K, K2]` i32.
+    pub const NEIGHBORS_2: &str = "neighbors2";
+    /// Two-hop neighbor times, shape `[S, K, K2]` f32.
+    pub const NEIGHBOR_TIMES_2: &str = "neighbor_times2";
+    /// Two-hop mask, shape `[S, K, K2]` f32.
+    pub const NEIGHBOR_MASK_2: &str = "neighbor_mask2";
+    /// Two-hop neighbor edge features, shape `[S, K, K2, D_edge]` f32.
+    pub const NEIGHBOR_FEATS_2: &str = "neighbor_feats2";
+    /// Deduplicated seed node list, shape `[U]` i32.
+    pub const UNIQUE_NODES: &str = "unique_nodes";
+    /// Map from each seed slot to its unique-node row, shape `[S]` i32.
+    pub const UNIQUE_INVERSE: &str = "unique_inverse";
+    /// Density-of-states spectral moment estimates, shape `[M]` f32.
+    pub const DOS: &str = "dos";
+    /// Dense normalized snapshot adjacency, shape `[N, N]` f32.
+    pub const SNAPSHOT_ADJ: &str = "snapshot_adj";
+}
+
+/// The materialized batch `B|_{T,A}`.
+#[derive(Debug, Clone)]
+pub struct MaterializedBatch {
+    /// Inclusive window start.
+    pub start: Timestamp,
+    /// Exclusive window end.
+    pub end: Timestamp,
+    /// Source node of each seed edge event.
+    pub src: Vec<u32>,
+    /// Destination node of each seed edge event.
+    pub dst: Vec<u32>,
+    /// Timestamp of each seed edge event.
+    pub ts: Vec<Timestamp>,
+    /// Storage index of each seed edge event.
+    pub edge_indices: Vec<u32>,
+    /// Node events in the window: (time, node, feature row offset).
+    pub node_events: Vec<(Timestamp, u32)>,
+    attrs: HashMap<&'static str, Tensor>,
+    /// Custom string-keyed attributes (user hooks).
+    custom: HashMap<String, Tensor>,
+}
+
+impl MaterializedBatch {
+    /// Empty batch over a window.
+    pub fn new(start: Timestamp, end: Timestamp) -> MaterializedBatch {
+        MaterializedBatch {
+            start,
+            end,
+            src: Vec::new(),
+            dst: Vec::new(),
+            ts: Vec::new(),
+            edge_indices: Vec::new(),
+            node_events: Vec::new(),
+            attrs: HashMap::new(),
+            custom: HashMap::new(),
+        }
+    }
+
+    /// Number of seed edge events.
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    /// Attribute names currently present (the set `A`).
+    pub fn attr_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.attrs.keys().copied().collect();
+        v.extend(self.custom.keys().map(|s| s.as_str()));
+        v.sort_unstable();
+        v
+    }
+
+    /// True when attribute `key` is present.
+    pub fn has(&self, key: &str) -> bool {
+        self.attrs.contains_key(key) || self.custom.contains_key(key)
+    }
+
+    /// Insert / overwrite an attribute tensor under a canonical key.
+    pub fn set(&mut self, key: &'static str, value: Tensor) {
+        self.attrs.insert(key, value);
+    }
+
+    /// Insert under a custom (string) key.
+    pub fn set_custom(&mut self, key: impl Into<String>, value: Tensor) {
+        self.custom.insert(key.into(), value);
+    }
+
+    /// Fetch an attribute; errors with the missing key name.
+    pub fn get(&self, key: &str) -> Result<&Tensor> {
+        self.attrs
+            .get(key)
+            .or_else(|| self.custom.get(key))
+            .ok_or_else(|| TgmError::Batch(format!("missing batch attribute `{key}`")))
+    }
+
+    /// Remove and return an attribute.
+    pub fn take(&mut self, key: &str) -> Result<Tensor> {
+        self.attrs
+            .remove(key)
+            .or_else(|| self.custom.remove(key))
+            .ok_or_else(|| TgmError::Batch(format!("missing batch attribute `{key}`")))
+    }
+
+    /// Total bytes across seed columns and attributes (memory accounting).
+    pub fn byte_size(&self) -> usize {
+        let seeds = self.src.len() * 4
+            + self.dst.len() * 4
+            + self.ts.len() * 8
+            + self.edge_indices.len() * 4
+            + self.node_events.len() * 12;
+        let attrs: usize = self.attrs.values().map(|t| t.byte_size()).sum();
+        let custom: usize = self.custom.values().map(|t| t.byte_size()).sum();
+        seeds + attrs + custom
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_take() {
+        let mut b = MaterializedBatch::new(0, 10);
+        assert!(!b.has(attr::NEGATIVES));
+        b.set(attr::NEGATIVES, Tensor::zeros_i32(&[4]));
+        assert!(b.has(attr::NEGATIVES));
+        assert_eq!(b.get(attr::NEGATIVES).unwrap().shape(), &[4]);
+        let t = b.take(attr::NEGATIVES).unwrap();
+        assert_eq!(t.len(), 4);
+        assert!(b.get(attr::NEGATIVES).is_err());
+    }
+
+    #[test]
+    fn custom_attrs_coexist() {
+        let mut b = MaterializedBatch::new(0, 10);
+        b.set(attr::DOS, Tensor::zeros_f32(&[8]));
+        b.set_custom("my_hook_output", Tensor::zeros_f32(&[2]));
+        assert!(b.has("my_hook_output"));
+        assert_eq!(b.attr_names(), vec!["dos", "my_hook_output"]);
+    }
+
+    #[test]
+    fn missing_attr_error_names_key() {
+        let b = MaterializedBatch::new(0, 1);
+        let err = b.get("neighbors").unwrap_err().to_string();
+        assert!(err.contains("neighbors"), "{err}");
+    }
+}

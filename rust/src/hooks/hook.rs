@@ -1,0 +1,52 @@
+//! The hook trait (paper Definition 3.7).
+//!
+//! A hook `φ_{R,P}` is a transformation on a materialized batch declaring
+//! a typed contract: the attributes it *requires* on input (`R`) and the
+//! attributes it *produces* (`P`). Recipes (ordered hook sets) are valid
+//! exactly when the contracts compose — validated by
+//! [`super::manager::HookManager`] via topological sort (Definition 3.8).
+
+use crate::error::Result;
+use crate::graph::GraphStorage;
+use crate::hooks::batch::MaterializedBatch;
+
+/// Execution context passed to hooks: shared immutable storage plus the
+/// split tag (hooks like negative samplers behave differently between
+/// train and eval).
+pub struct HookContext<'a> {
+    /// The storage backing the view being iterated.
+    pub storage: &'a GraphStorage,
+    /// Active manager key (e.g. "train", "val") — see
+    /// [`super::manager::HookManager::activate`].
+    pub key: &'a str,
+}
+
+/// A typed transformation on a materialized batch.
+///
+/// Implementations may carry state across batches (e.g. the recency
+/// sampler's circular buffer); `reset` clears it between epochs/splits.
+pub trait Hook: Send {
+    /// Stable name for diagnostics and profiling.
+    fn name(&self) -> &'static str;
+
+    /// Attributes the hook requires on the input batch (`R`).
+    fn requires(&self) -> Vec<&'static str>;
+
+    /// Attributes the hook produces (`P`).
+    fn produces(&self) -> Vec<&'static str>;
+
+    /// Apply the transformation: `B|_{T,A} -> B|_{T, A ∪ P}`.
+    fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()>;
+
+    /// Clear accumulated state (no-op for stateless hooks).
+    fn reset(&mut self) {}
+}
+
+/// Attributes the loader always materializes before hooks run (the base
+/// set `A₀` that recipe validation seeds from).
+pub const BASE_ATTRS: &[&str] = &[
+    crate::hooks::batch::attr::SRC,
+    crate::hooks::batch::attr::DST,
+    crate::hooks::batch::attr::TIME,
+    crate::hooks::batch::attr::EDGE_FEATS,
+];

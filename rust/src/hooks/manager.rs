@@ -1,0 +1,312 @@
+//! Hook registry and recipe validation (paper §4, Definition 3.8).
+//!
+//! The [`HookManager`] owns hooks under string keys ("train", "val",
+//! "analytics", ...). Activating a key validates that the hook set forms a
+//! *recipe*: the dependency relation `φ_i → φ_j ⟺ P_i ∩ R_j ≠ ∅` must be
+//! acyclic and every requirement must be met by the base attributes or an
+//! earlier hook's products. Valid recipes are re-ordered topologically and
+//! executed transparently during data loading; per-hook wall-clock is
+//! recorded for the profiler (Table 11).
+
+use crate::error::{Result, TgmError};
+use crate::hooks::batch::MaterializedBatch;
+use crate::hooks::hook::{Hook, HookContext, BASE_ATTRS};
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Keyed hook registry with recipe validation and execution.
+#[derive(Default)]
+pub struct HookManager {
+    groups: HashMap<String, Vec<Box<dyn Hook>>>,
+    /// Execution order per key, computed at activation.
+    orders: HashMap<String, Vec<usize>>,
+    active: Option<String>,
+    /// Cumulative wall-clock per hook name (for profiling).
+    timings: HashMap<&'static str, Duration>,
+}
+
+impl HookManager {
+    /// Empty manager.
+    pub fn new() -> HookManager {
+        HookManager::default()
+    }
+
+    /// Register a hook under `key`. Invalidates any cached order for the
+    /// key (re-validated on next activation).
+    pub fn register(&mut self, key: impl Into<String>, hook: Box<dyn Hook>) {
+        let key = key.into();
+        self.orders.remove(&key);
+        self.groups.entry(key).or_default().push(hook);
+    }
+
+    /// Names of hooks registered under `key`, in registration order.
+    pub fn hook_names(&self, key: &str) -> Vec<&'static str> {
+        self.groups.get(key).map(|hs| hs.iter().map(|h| h.name()).collect()).unwrap_or_default()
+    }
+
+    /// Activate a key: validates the recipe (Definition 3.8) and caches
+    /// its topological execution order.
+    pub fn activate(&mut self, key: &str) -> Result<()> {
+        let hooks = self
+            .groups
+            .get(key)
+            .ok_or_else(|| TgmError::Hook(format!("no hooks registered under key `{key}`")))?;
+        if !self.orders.contains_key(key) {
+            let order = resolve_recipe_order(hooks, BASE_ATTRS)?;
+            self.orders.insert(key.to_string(), order);
+        }
+        self.active = Some(key.to_string());
+        Ok(())
+    }
+
+    /// Currently active key.
+    pub fn active_key(&self) -> Option<&str> {
+        self.active.as_deref()
+    }
+
+    /// Run the active recipe over a batch.
+    pub fn run(&mut self, batch: &mut MaterializedBatch, storage: &crate::graph::GraphStorage) -> Result<()> {
+        let key = self
+            .active
+            .clone()
+            .ok_or_else(|| TgmError::Hook("no active hook key; call activate() first".into()))?;
+        let order = self.orders.get(&key).cloned().unwrap_or_default();
+        let hooks = self.groups.get_mut(&key).unwrap();
+        let ctx = HookContext { storage, key: &key };
+        for &i in &order {
+            let hook = &mut hooks[i];
+            let t0 = std::time::Instant::now();
+            hook.apply(batch, &ctx).map_err(|e| {
+                TgmError::Hook(format!("hook `{}` failed: {e}", hook.name()))
+            })?;
+            // Post-condition: everything the hook promised must exist.
+            for p in hook.produces() {
+                if !batch.has(p) {
+                    return Err(TgmError::Hook(format!(
+                        "hook `{}` declared `{p}` in produces() but did not set it",
+                        hook.name()
+                    )));
+                }
+            }
+            *self.timings.entry(hook.name()).or_default() += t0.elapsed();
+        }
+        Ok(())
+    }
+
+    /// Single API to clear the state of all hooks under all keys
+    /// (between epochs / splits — paper §4, "reset method").
+    pub fn reset_state(&mut self) {
+        for hooks in self.groups.values_mut() {
+            for h in hooks.iter_mut() {
+                h.reset();
+            }
+        }
+    }
+
+    /// Cumulative per-hook wall-clock (profiling, Table 11).
+    pub fn timings(&self) -> &HashMap<&'static str, Duration> {
+        &self.timings
+    }
+
+    /// Clear profiling counters.
+    pub fn reset_timings(&mut self) {
+        self.timings.clear();
+    }
+}
+
+/// Compute a valid execution order for a hook set (Kahn's algorithm over
+/// attribute availability), or explain why the set is not a recipe.
+pub fn resolve_recipe_order(hooks: &[Box<dyn Hook>], base: &[&str]) -> Result<Vec<usize>> {
+    let n = hooks.len();
+    let mut available: Vec<&str> = base.to_vec();
+    let mut placed = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+
+    for _round in 0..n {
+        let mut progressed = false;
+        for (i, h) in hooks.iter().enumerate() {
+            if placed[i] {
+                continue;
+            }
+            let reqs = h.requires();
+            if reqs.iter().all(|r| available.contains(r)) {
+                placed[i] = true;
+                order.push(i);
+                for p in h.produces() {
+                    if !available.contains(&p) {
+                        available.push(p);
+                    }
+                }
+                progressed = true;
+            }
+        }
+        if order.len() == n {
+            return Ok(order);
+        }
+        if !progressed {
+            break;
+        }
+    }
+
+    // Diagnose: name the stuck hooks and their missing requirements.
+    let mut missing = Vec::new();
+    for (i, h) in hooks.iter().enumerate() {
+        if !placed[i] {
+            let unmet: Vec<&str> =
+                h.requires().into_iter().filter(|r| !available.contains(r)).collect();
+            missing.push(format!("`{}` missing {{{}}}", h.name(), unmet.join(", ")));
+        }
+    }
+    Err(TgmError::Recipe(format!(
+        "hook set is not a valid recipe (cycle or unmet requirement): {}",
+        missing.join("; ")
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hooks::batch::MaterializedBatch;
+    use crate::util::Tensor;
+
+    /// Test hook producing `out` from `reqs`.
+    struct Fake {
+        name: &'static str,
+        reqs: Vec<&'static str>,
+        outs: Vec<&'static str>,
+        applied: usize,
+        honest: bool,
+    }
+
+    impl Fake {
+        fn boxed(name: &'static str, reqs: &[&'static str], outs: &[&'static str]) -> Box<dyn Hook> {
+            Box::new(Fake { name, reqs: reqs.to_vec(), outs: outs.to_vec(), applied: 0, honest: true })
+        }
+    }
+
+    impl Hook for Fake {
+        fn name(&self) -> &'static str {
+            self.name
+        }
+        fn requires(&self) -> Vec<&'static str> {
+            self.reqs.clone()
+        }
+        fn produces(&self) -> Vec<&'static str> {
+            self.outs.clone()
+        }
+        fn apply(&mut self, batch: &mut MaterializedBatch, _ctx: &HookContext<'_>) -> Result<()> {
+            self.applied += 1;
+            if self.honest {
+                for o in &self.outs {
+                    batch.set_custom(*o, Tensor::scalar_f32(1.0));
+                }
+            }
+            Ok(())
+        }
+        fn reset(&mut self) {
+            self.applied = 0;
+        }
+    }
+
+    fn storage() -> crate::graph::GraphStorage {
+        crate::graph::GraphStorage::from_events(
+            vec![crate::graph::EdgeEvent { t: 0, src: 0, dst: 1, features: vec![] }],
+            vec![],
+            2,
+            None,
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn topo_order_respects_dependencies() {
+        // c needs b's output, b needs a's; registered in reverse order.
+        let hooks: Vec<Box<dyn Hook>> = vec![
+            Fake::boxed("c", &["B"], &["C"]),
+            Fake::boxed("b", &["A"], &["B"]),
+            Fake::boxed("a", &[], &["A"]),
+        ];
+        let order = resolve_recipe_order(&hooks, BASE_ATTRS).unwrap();
+        assert_eq!(order, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn base_attrs_satisfy_requirements() {
+        let hooks: Vec<Box<dyn Hook>> = vec![Fake::boxed("n", &["src", "time"], &["X"])];
+        assert!(resolve_recipe_order(&hooks, BASE_ATTRS).is_ok());
+    }
+
+    #[test]
+    fn cycle_is_rejected_with_names() {
+        let hooks: Vec<Box<dyn Hook>> = vec![
+            Fake::boxed("x", &["Y"], &["X"]),
+            Fake::boxed("y", &["X"], &["Y"]),
+        ];
+        let err = resolve_recipe_order(&hooks, BASE_ATTRS).unwrap_err().to_string();
+        assert!(err.contains('x') && err.contains('y'), "{err}");
+    }
+
+    #[test]
+    fn unmet_requirement_rejected() {
+        let hooks: Vec<Box<dyn Hook>> = vec![Fake::boxed("z", &["nonexistent"], &["Z"])];
+        let err = resolve_recipe_order(&hooks, BASE_ATTRS).unwrap_err().to_string();
+        assert!(err.contains("nonexistent"), "{err}");
+    }
+
+    #[test]
+    fn manager_runs_in_order_and_times() {
+        let mut m = HookManager::new();
+        m.register("train", Fake::boxed("second", &["A"], &["B"]));
+        m.register("train", Fake::boxed("first", &[], &["A"]));
+        m.activate("train").unwrap();
+        let st = storage();
+        let mut b = MaterializedBatch::new(0, 1);
+        m.run(&mut b, &st).unwrap();
+        assert!(b.has("A") && b.has("B"));
+        assert!(m.timings().contains_key("first"));
+        assert!(m.timings().contains_key("second"));
+    }
+
+    #[test]
+    fn dishonest_hook_caught() {
+        let mut m = HookManager::new();
+        m.register(
+            "train",
+            Box::new(Fake { name: "liar", reqs: vec![], outs: vec!["L"], applied: 0, honest: false }),
+        );
+        m.activate("train").unwrap();
+        let st = storage();
+        let mut b = MaterializedBatch::new(0, 1);
+        let err = m.run(&mut b, &st).unwrap_err().to_string();
+        assert!(err.contains("liar") && err.contains('L'), "{err}");
+    }
+
+    #[test]
+    fn activation_of_unknown_key_fails() {
+        let mut m = HookManager::new();
+        assert!(m.activate("nope").is_err());
+        assert!(m.active_key().is_none());
+    }
+
+    #[test]
+    fn keys_are_isolated() {
+        let mut m = HookManager::new();
+        m.register("train", Fake::boxed("t", &[], &["T"]));
+        m.register("analytics", Fake::boxed("a", &[], &["A"]));
+        m.activate("analytics").unwrap();
+        let st = storage();
+        let mut b = MaterializedBatch::new(0, 1);
+        m.run(&mut b, &st).unwrap();
+        assert!(b.has("A") && !b.has("T"));
+    }
+
+    #[test]
+    fn run_without_activation_errors() {
+        let mut m = HookManager::new();
+        m.register("train", Fake::boxed("t", &[], &["T"]));
+        let st = storage();
+        let mut b = MaterializedBatch::new(0, 1);
+        assert!(m.run(&mut b, &st).is_err());
+    }
+}

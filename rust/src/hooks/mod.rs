@@ -1,0 +1,25 @@
+//! Execution layer: materialized batches, the typed hook formalism, the
+//! hook manager with recipe validation, and the built-in hook library
+//! (samplers, negatives, dedup, analytics) — paper §3-4.
+
+pub mod analytics;
+pub mod batch;
+pub mod dedup;
+pub mod eval_sampler;
+pub mod hook;
+pub mod manager;
+pub mod negatives;
+pub mod neighbor;
+pub mod neighbor_naive;
+pub mod recipes;
+
+pub use batch::{attr, MaterializedBatch};
+pub use hook::{Hook, HookContext, BASE_ATTRS};
+pub use manager::{resolve_recipe_order, HookManager};
+pub use negatives::DstRange;
+pub use neighbor::{RecencySampler, SamplerConfig, UniformSampler};
+pub use neighbor_naive::NaiveSampler;
+pub use recipes::{
+    RecipeConfig, RecipeRegistry, SamplerKind, RECIPE_ANALYTICS_DOS, RECIPE_SNAPSHOT,
+    RECIPE_TGB_LINK, RECIPE_TGB_NODE,
+};

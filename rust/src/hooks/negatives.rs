@@ -1,0 +1,266 @@
+//! Negative edge construction hooks (paper §1: "negative edge
+//! construction [is] implemented inconsistently" — TGM standardizes it).
+//!
+//! * [`NegativeSampler`] — one random negative destination per positive
+//!   edge (training). Supports restricting draws to the destination
+//!   id range (bipartite graphs) and *historical* negatives (destinations
+//!   the source interacted with before, but not at this timestamp —
+//!   Poursafaei et al. 2022).
+//! * [`EvalNegativeSampler`] — `Q` negatives per positive for the TGB
+//!   one-vs-many evaluation protocol (Table 9), deterministic per edge so
+//!   every model ranks against the same candidates.
+
+use crate::error::Result;
+use crate::graph::GraphStorage;
+use crate::hooks::batch::{attr, MaterializedBatch};
+use crate::hooks::hook::{Hook, HookContext};
+use crate::util::{Rng, Tensor};
+
+/// Destination-id range negatives are drawn from.
+#[derive(Debug, Clone, Copy)]
+pub enum DstRange {
+    /// All node ids `0..num_nodes`.
+    AllNodes,
+    /// Explicit `[lo, hi)` id range (bipartite item side).
+    Range(u32, u32),
+    /// Infer `[min(dst), max(dst)+1]` from storage (cached per storage).
+    InferFromData,
+}
+
+fn resolve_range(range: DstRange, storage: &GraphStorage) -> (u32, u32) {
+    match range {
+        DstRange::AllNodes => (0, storage.num_nodes() as u32),
+        DstRange::Range(lo, hi) => (lo, hi),
+        DstRange::InferFromData => {
+            let dst = storage.edge_dst();
+            let lo = dst.iter().copied().min().unwrap_or(0);
+            let hi = dst.iter().copied().max().map(|m| m + 1).unwrap_or(1);
+            (lo, hi)
+        }
+    }
+}
+
+/// Training negative sampler: one negative per seed edge.
+pub struct NegativeSampler {
+    range: DstRange,
+    /// Probability of drawing a *historical* negative (a past destination
+    /// of some edge) instead of a uniform one.
+    historical_prob: f64,
+    rng: Rng,
+    seed: u64,
+    cached_range: Option<(u32, u32)>,
+}
+
+impl NegativeSampler {
+    /// Uniform negatives over `range`.
+    pub fn new(range: DstRange, seed: u64) -> NegativeSampler {
+        NegativeSampler { range, historical_prob: 0.0, rng: Rng::new(seed), seed, cached_range: None }
+    }
+
+    /// Mix in historical negatives with probability `p`.
+    pub fn with_historical(mut self, p: f64) -> NegativeSampler {
+        self.historical_prob = p;
+        self
+    }
+}
+
+impl Hook for NegativeSampler {
+    fn name(&self) -> &'static str {
+        "negative_sampler"
+    }
+
+    fn requires(&self) -> Vec<&'static str> {
+        vec![]
+    }
+
+    fn produces(&self) -> Vec<&'static str> {
+        vec![attr::NEGATIVES]
+    }
+
+    fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
+        let (lo, hi) = *self
+            .cached_range
+            .get_or_insert_with(|| resolve_range(self.range, ctx.storage));
+        let b = batch.num_edges();
+        let mut negs = Vec::with_capacity(b);
+        for i in 0..b {
+            let neg = if self.historical_prob > 0.0 && self.rng.bool(self.historical_prob) {
+                // Historical: destination of a uniformly random past edge.
+                let past = ctx.storage.edge_range(ctx.storage.start_time(), batch.ts[i]);
+                if past.is_empty() {
+                    self.rng.range(lo as i64, hi as i64) as i32
+                } else {
+                    let j = past.start + self.rng.below(past.len() as u64) as usize;
+                    ctx.storage.edge_dst()[j] as i32
+                }
+            } else {
+                self.rng.range(lo as i64, hi as i64) as i32
+            };
+            negs.push(neg);
+        }
+        batch.set(attr::NEGATIVES, Tensor::i32(negs, &[b])?);
+        Ok(())
+    }
+
+    fn reset(&mut self) {
+        self.rng = Rng::new(self.seed);
+        self.cached_range = None;
+    }
+}
+
+/// One-vs-many evaluation negatives: `Q` candidates per positive,
+/// deterministic per (src, dst, t) triple so rankings are reproducible
+/// and identical across models (the TGB protocol).
+pub struct EvalNegativeSampler {
+    range: DstRange,
+    num_negatives: usize,
+    seed: u64,
+    cached_range: Option<(u32, u32)>,
+}
+
+impl EvalNegativeSampler {
+    /// `Q` negatives per positive edge over `range`.
+    pub fn new(range: DstRange, num_negatives: usize, seed: u64) -> EvalNegativeSampler {
+        EvalNegativeSampler { range, num_negatives, seed, cached_range: None }
+    }
+}
+
+impl Hook for EvalNegativeSampler {
+    fn name(&self) -> &'static str {
+        "eval_negative_sampler"
+    }
+
+    fn requires(&self) -> Vec<&'static str> {
+        vec![]
+    }
+
+    fn produces(&self) -> Vec<&'static str> {
+        vec![attr::EVAL_NEGATIVES]
+    }
+
+    fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
+        let (lo, hi) = *self
+            .cached_range
+            .get_or_insert_with(|| resolve_range(self.range, ctx.storage));
+        let b = batch.num_edges();
+        let q = self.num_negatives;
+        let mut negs = Vec::with_capacity(b * q);
+        for i in 0..b {
+            // Deterministic per-edge stream: seed from the edge identity.
+            let tag = (batch.src[i] as u64) << 40
+                ^ (batch.dst[i] as u64) << 20
+                ^ batch.ts[i] as u64;
+            let mut rng = Rng::new(self.seed ^ tag.wrapping_mul(0x9E3779B97F4A7C15));
+            for _ in 0..q {
+                // Avoid sampling the true destination.
+                let mut cand = rng.range(lo as i64, hi as i64) as u32;
+                if cand == batch.dst[i] {
+                    cand = if cand + 1 < hi { cand + 1 } else { lo };
+                }
+                negs.push(cand as i32);
+            }
+        }
+        batch.set(attr::EVAL_NEGATIVES, Tensor::i32(negs, &[b, q])?);
+        Ok(())
+    }
+
+    fn reset(&mut self) {
+        self.cached_range = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeEvent;
+
+    fn storage() -> GraphStorage {
+        let edges = (0..50)
+            .map(|i| EdgeEvent { t: i as i64, src: (i % 3) as u32, dst: 5 + (i % 4) as u32, features: vec![] })
+            .collect();
+        GraphStorage::from_events(edges, vec![], 9, None, None).unwrap()
+    }
+
+    fn batch(st: &GraphStorage) -> MaterializedBatch {
+        let mut b = MaterializedBatch::new(10, 20);
+        for i in 10..20 {
+            b.src.push(st.edge_src()[i]);
+            b.dst.push(st.edge_dst()[i]);
+            b.ts.push(st.edge_ts()[i]);
+            b.edge_indices.push(i as u32);
+        }
+        b
+    }
+
+    #[test]
+    fn uniform_negatives_in_range() {
+        let st = storage();
+        let ctx = HookContext { storage: &st, key: "train" };
+        let mut h = NegativeSampler::new(DstRange::Range(5, 9), 1);
+        let mut b = batch(&st);
+        h.apply(&mut b, &ctx).unwrap();
+        let negs = b.get(attr::NEGATIVES).unwrap().as_i32().unwrap();
+        assert_eq!(negs.len(), 10);
+        assert!(negs.iter().all(|&n| (5..9).contains(&n)));
+    }
+
+    #[test]
+    fn inferred_range_matches_data() {
+        let st = storage();
+        let ctx = HookContext { storage: &st, key: "train" };
+        let mut h = NegativeSampler::new(DstRange::InferFromData, 1);
+        let mut b = batch(&st);
+        h.apply(&mut b, &ctx).unwrap();
+        let negs = b.get(attr::NEGATIVES).unwrap().as_i32().unwrap();
+        assert!(negs.iter().all(|&n| (5..9).contains(&n)));
+    }
+
+    #[test]
+    fn historical_negatives_are_past_destinations() {
+        let st = storage();
+        let ctx = HookContext { storage: &st, key: "train" };
+        let mut h = NegativeSampler::new(DstRange::AllNodes, 1).with_historical(1.0);
+        let mut b = batch(&st);
+        h.apply(&mut b, &ctx).unwrap();
+        let negs = b.get(attr::NEGATIVES).unwrap().as_i32().unwrap();
+        // All destinations in this storage are >= 5.
+        assert!(negs.iter().all(|&n| n >= 5));
+    }
+
+    #[test]
+    fn reset_restores_stream() {
+        let st = storage();
+        let ctx = HookContext { storage: &st, key: "train" };
+        let mut h = NegativeSampler::new(DstRange::AllNodes, 7);
+        let mut b1 = batch(&st);
+        h.apply(&mut b1, &ctx).unwrap();
+        h.reset();
+        let mut b2 = batch(&st);
+        h.apply(&mut b2, &ctx).unwrap();
+        assert_eq!(
+            b1.get(attr::NEGATIVES).unwrap().as_i32().unwrap(),
+            b2.get(attr::NEGATIVES).unwrap().as_i32().unwrap()
+        );
+    }
+
+    #[test]
+    fn eval_negatives_deterministic_and_exclude_positive() {
+        let st = storage();
+        let ctx = HookContext { storage: &st, key: "val" };
+        let mut h = EvalNegativeSampler::new(DstRange::Range(5, 9), 20, 3);
+        let mut b1 = batch(&st);
+        h.apply(&mut b1, &ctx).unwrap();
+        let t1 = b1.get(attr::EVAL_NEGATIVES).unwrap();
+        assert_eq!(t1.shape(), &[10, 20]);
+        let n1 = t1.as_i32().unwrap();
+        // No candidate equals its row's positive destination.
+        for (row, &d) in b1.dst.iter().enumerate() {
+            assert!(n1[row * 20..(row + 1) * 20].iter().all(|&c| c != d as i32));
+        }
+        // Re-running yields identical candidates (protocol determinism).
+        let mut h2 = EvalNegativeSampler::new(DstRange::Range(5, 9), 20, 3);
+        let mut b2 = batch(&st);
+        h2.apply(&mut b2, &ctx).unwrap();
+        assert_eq!(n1, b2.get(attr::EVAL_NEGATIVES).unwrap().as_i32().unwrap());
+    }
+}

@@ -1,0 +1,223 @@
+//! Pre-defined hook recipes (paper §4, "Hook Registry and Management").
+//!
+//! Recipes package the hook combinations common TGL workflows need, so
+//! new practitioners avoid pitfalls like mismanaging sampler state across
+//! splits or using the wrong negatives. Each builder returns a
+//! [`HookManager`] with `train` and `val` groups registered; custom hooks
+//! can still be added before activation.
+
+use crate::error::Result;
+use crate::hooks::analytics::{DosEstimateHook, SnapshotAdjHook};
+use crate::hooks::dedup::DedupHook;
+use crate::hooks::eval_sampler::UniqueRecencyLookup;
+use crate::hooks::manager::HookManager;
+use crate::hooks::negatives::{DstRange, EvalNegativeSampler, NegativeSampler};
+use crate::hooks::neighbor::{RecencySampler, SamplerConfig, UniformSampler};
+use crate::hooks::neighbor_naive::NaiveSampler;
+
+/// Recipe identifiers (mirrors `tgm.constants` in the paper's Fig. 5).
+pub const RECIPE_TGB_LINK: &str = "tgb_link";
+pub const RECIPE_TGB_NODE: &str = "tgb_node";
+pub const RECIPE_SNAPSHOT: &str = "snapshot";
+pub const RECIPE_ANALYTICS_DOS: &str = "analytics_dos";
+
+/// Which neighbor sampler a recipe wires in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// TGM's circular-buffer recency sampler (default).
+    Recency,
+    /// Uniform draws over the temporal neighborhood.
+    Uniform,
+    /// DyGLib-style per-seed history copies (baseline for benches).
+    Naive,
+}
+
+/// Options shared by the recipe builders.
+#[derive(Debug, Clone)]
+pub struct RecipeConfig {
+    pub sampler: SamplerKind,
+    pub num_neighbors: usize,
+    pub two_hop: Option<usize>,
+    pub include_features: bool,
+    /// Negative-candidate id range (bipartite item side for TGB links).
+    pub dst_range: DstRange,
+    /// One-vs-many candidates per positive at evaluation.
+    pub eval_negatives: usize,
+    pub seed: u64,
+}
+
+impl Default for RecipeConfig {
+    fn default() -> Self {
+        RecipeConfig {
+            sampler: SamplerKind::Recency,
+            num_neighbors: 10,
+            two_hop: None,
+            include_features: true,
+            dst_range: DstRange::InferFromData,
+            eval_negatives: 20,
+            seed: 0,
+        }
+    }
+}
+
+fn sampler_boxed(cfg: &RecipeConfig, seed_negatives: bool) -> Box<dyn crate::hooks::hook::Hook> {
+    let sc = SamplerConfig {
+        num_neighbors: cfg.num_neighbors,
+        two_hop: cfg.two_hop,
+        include_features: cfg.include_features,
+        seed_negatives,
+    };
+    match cfg.sampler {
+        SamplerKind::Recency => Box::new(RecencySampler::new(sc)),
+        SamplerKind::Uniform => Box::new(UniformSampler::new(sc, cfg.seed ^ 0xA5A5)),
+        SamplerKind::Naive => Box::new(NaiveSampler::new(sc)),
+    }
+}
+
+/// Registry of named recipes (paper Fig. 5: `RecipeRegistry.build(...)`).
+pub struct RecipeRegistry;
+
+impl RecipeRegistry {
+    /// Build a manager for a named recipe with default options.
+    pub fn build(name: &str) -> Result<HookManager> {
+        Self::build_with(name, &RecipeConfig::default())
+    }
+
+    /// Build a manager for a named recipe.
+    pub fn build_with(name: &str, cfg: &RecipeConfig) -> Result<HookManager> {
+        let mut m = HookManager::new();
+        match name {
+            RECIPE_TGB_LINK => {
+                // train: negatives -> sampler(seeds incl. negatives)
+                m.register("train", Box::new(NegativeSampler::new(cfg.dst_range, cfg.seed)));
+                m.register("train", sampler_boxed(cfg, true));
+                // val: deterministic one-vs-many negatives -> dedup ->
+                // one recency lookup per unique node (the Table-9
+                // optimization; the packer fans unique rows out to slots).
+                m.register(
+                    "val",
+                    Box::new(EvalNegativeSampler::new(cfg.dst_range, cfg.eval_negatives, cfg.seed)),
+                );
+                m.register("val", Box::new(DedupHook::new(false, true)));
+                let mut lookup = UniqueRecencyLookup::new(cfg.num_neighbors);
+                if let Some(k2) = cfg.two_hop {
+                    lookup = lookup.with_two_hop(k2);
+                }
+                m.register("val", Box::new(lookup));
+            }
+            RECIPE_TGB_NODE => {
+                // Node tasks: no negatives; sample src/dst neighborhoods.
+                m.register("train", sampler_boxed(cfg, false));
+                m.register("val", sampler_boxed(cfg, false));
+            }
+            RECIPE_SNAPSHOT => {
+                // DTDG: dense normalized snapshot adjacency per batch.
+                m.register("train", Box::new(SnapshotAdjHook));
+                m.register("val", Box::new(SnapshotAdjHook));
+            }
+            RECIPE_ANALYTICS_DOS => {
+                m.register("analytics", Box::new(DosEstimateHook::new(8, 16, cfg.seed)));
+            }
+            other => {
+                return Err(crate::error::TgmError::Recipe(format!("unknown recipe `{other}`")))
+            }
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeEvent, GraphStorage};
+    use crate::hooks::batch::{attr, MaterializedBatch};
+
+    fn storage() -> GraphStorage {
+        let edges = (0..30)
+            .map(|i| EdgeEvent {
+                t: i as i64,
+                src: (i % 3) as u32,
+                dst: 3 + (i % 2) as u32,
+                features: vec![1.0],
+            })
+            .collect();
+        GraphStorage::from_events(edges, vec![], 5, None, None).unwrap()
+    }
+
+    fn batch(st: &GraphStorage, r: std::ops::Range<usize>) -> MaterializedBatch {
+        let mut b = MaterializedBatch::new(st.edge_ts()[r.start], st.edge_ts()[r.end - 1] + 1);
+        for i in r {
+            b.src.push(st.edge_src()[i]);
+            b.dst.push(st.edge_dst()[i]);
+            b.ts.push(st.edge_ts()[i]);
+            b.edge_indices.push(i as u32);
+        }
+        b
+    }
+
+    #[test]
+    fn tgb_link_train_recipe_composes() {
+        let st = storage();
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate("train").unwrap();
+        let mut b = batch(&st, 10..15);
+        m.run(&mut b, &st).unwrap();
+        assert!(b.has(attr::NEGATIVES));
+        assert!(b.has(attr::NEIGHBORS));
+        // Sampler covered src+dst+neg seeds.
+        assert_eq!(b.get(attr::NEIGHBORS).unwrap().shape()[0], 15);
+    }
+
+    #[test]
+    fn tgb_link_val_recipe_composes() {
+        let st = storage();
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate("val").unwrap();
+        let mut b = batch(&st, 10..15);
+        m.run(&mut b, &st).unwrap();
+        assert!(b.has(attr::EVAL_NEGATIVES));
+        assert!(b.has(attr::UNIQUE_NODES));
+        assert!(b.has(crate::hooks::eval_sampler::UNIQUE_NBR_IDS));
+        // One lookup row per unique node.
+        let u = b.get(attr::UNIQUE_NODES).unwrap().len();
+        assert_eq!(b.get(crate::hooks::eval_sampler::UNIQUE_NBR_IDS).unwrap().shape()[0], u);
+    }
+
+    #[test]
+    fn snapshot_recipe_produces_adjacency() {
+        let st = storage();
+        let mut m = RecipeRegistry::build(RECIPE_SNAPSHOT).unwrap();
+        m.activate("train").unwrap();
+        let mut b = batch(&st, 0..10);
+        m.run(&mut b, &st).unwrap();
+        assert_eq!(b.get(attr::SNAPSHOT_ADJ).unwrap().shape(), &[5, 5]);
+    }
+
+    #[test]
+    fn analytics_recipe() {
+        let st = storage();
+        let mut m = RecipeRegistry::build(RECIPE_ANALYTICS_DOS).unwrap();
+        m.activate("analytics").unwrap();
+        let mut b = batch(&st, 0..10);
+        m.run(&mut b, &st).unwrap();
+        assert!(b.has(attr::DOS));
+    }
+
+    #[test]
+    fn unknown_recipe_rejected() {
+        assert!(RecipeRegistry::build("nonsense").is_err());
+    }
+
+    #[test]
+    fn all_sampler_kinds_wire_up() {
+        let st = storage();
+        for kind in [SamplerKind::Recency, SamplerKind::Uniform, SamplerKind::Naive] {
+            let cfg = RecipeConfig { sampler: kind, ..Default::default() };
+            let mut m = RecipeRegistry::build_with(RECIPE_TGB_LINK, &cfg).unwrap();
+            m.activate("train").unwrap();
+            let mut b = batch(&st, 5..10);
+            m.run(&mut b, &st).unwrap();
+            assert!(b.has(attr::NEIGHBORS), "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! IO adaptors: CSV loading/export and synthetic TGB-surrogate generators
+//! (paper §4, "IO Adaptors and Data Preprocessing").
+
+pub mod csv;
+pub mod gen;
+
+pub use csv::{from_csv, to_csv, CsvLoad};
+pub use gen::{bipartite, by_name, trade, GenConfig};

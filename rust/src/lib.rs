@@ -1,0 +1,45 @@
+//! # TGM — Temporal Graph Modelling
+//!
+//! A modular and efficient library for machine learning on temporal
+//! graphs, reproducing Chmura, Huang et al. (2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the data/execution layers: immutable
+//!   time-sorted COO storage, lightweight graph views, vectorized
+//!   discretization, the typed hook/recipe system, CTDG/DTDG data
+//!   loaders, samplers, evaluation, and the training coordinator.
+//! * **Layer 2 (`python/compile`)** — JAX model definitions (TGAT, TGN,
+//!   GCN, GCLSTM, T-GCN, GraphMixer, DyGFormer, TPNet) AOT-lowered to HLO
+//!   text artifacts with the optimizer inside the training step.
+//! * **Layer 1 (`python/compile/kernels`)** — Pallas kernels for the
+//!   compute hot-spots (temporal attention, time encoding, snapshot GCN
+//!   aggregation, TPNet propagation), validated against pure-jnp oracles.
+//!
+//! Python runs only at build time (`make artifacts`); the `tgm` binary
+//! executes the compiled artifacts through the PJRT C API (`xla` crate)
+//! and never touches Python.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use tgm::io::gen;
+//!
+//! let data = gen::by_name("wiki", 0.1, 42).unwrap();
+//! let splits = data.split().unwrap();
+//! println!("{}", data.stats());
+//! println!("train edges: {}", splits.train.num_edges());
+//! ```
+//!
+//! See `examples/quickstart.rs` for the full end-to-end training driver.
+
+pub mod coordinator;
+pub mod error;
+pub mod graph;
+pub mod hooks;
+pub mod io;
+pub mod loader;
+pub mod models;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Result, TgmError};

@@ -1,0 +1,371 @@
+//! `tgm` — leader binary: train/evaluate models, run the paper's
+//! research experiments (Tables 6/7/8/12), profile pipelines (Table 11),
+//! and report memory (Table 10). Python is never invoked here; all model
+//! compute goes through the AOT artifacts via PJRT.
+//!
+//! ```text
+//! tgm stats      --dataset wiki --scale 0.4
+//! tgm train      --model tgat_link --dataset wiki --scale 0.4 --epochs 3
+//! tgm discretize --dataset lastfm --scale 0.5 [--baseline true]
+//! tgm profile    --model tgat_link --dataset wiki --scale 0.2
+//! tgm memory
+//! tgm exp granularity|graphprop|batchsize|correctness [--scale S]
+//! ```
+
+use std::collections::HashMap;
+
+use tgm::coordinator::{
+    evaluate_edgebank, evaluate_persistent_graph, Pipeline, PipelineConfig, Split,
+};
+use tgm::graph::{discretize, discretize_utg, ReduceOp, Task};
+use tgm::hooks::SamplerKind;
+use tgm::io::gen;
+use tgm::loader::BatchBy;
+use tgm::models::EdgeBankMode;
+use tgm::runtime::XlaEngine;
+use tgm::util::TimeGranularity;
+use tgm::{Result, TgmError};
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn bool(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+fn engine() -> Result<XlaEngine> {
+    let dir = std::env::var("TGM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    XlaEngine::cpu(dir)
+}
+
+fn pipeline_cfg(model: &str, args: &Args) -> Result<PipelineConfig> {
+    let mut cfg = PipelineConfig::new(model);
+    cfg.sampler = match args.get("sampler", "recency").as_str() {
+        "recency" => SamplerKind::Recency,
+        "uniform" => SamplerKind::Uniform,
+        "naive" => SamplerKind::Naive,
+        other => return Err(TgmError::Config(format!("unknown sampler `{other}`"))),
+    };
+    cfg.granularity = TimeGranularity::parse(&args.get("granularity", "day"))?;
+    cfg.seed = args.usize("seed", 0) as u64;
+    Ok(cfg)
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let data = gen::by_name(&args.get("dataset", "wiki"), args.f64("scale", 0.4), 42)?;
+    println!("{}", data.stats());
+    let s = data.split()?;
+    println!(
+        "splits: train={} val={} test={}",
+        s.train.num_edges(),
+        s.val.num_edges(),
+        s.test.num_edges()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let eng = engine()?;
+    let model = args.get("model", "tpnet_link");
+    let data = gen::by_name(&args.get("dataset", "wiki"), args.f64("scale", 0.4), 42)?;
+    let mut pipe = Pipeline::new(&eng, data, pipeline_cfg(&model, args)?)?;
+    let epochs = args.usize("epochs", 3);
+    for e in 0..epochs {
+        let r = pipe.train_epoch()?;
+        println!("epoch {e}: loss={:.4} batches={} {:.2}s", r.mean_loss, r.batches, r.seconds);
+    }
+    let fmt = |r: &tgm::coordinator::EvalReport| {
+        r.mrr
+            .map(|m| format!("MRR={m:.4}"))
+            .or(r.ndcg.map(|n| format!("NDCG@10={n:.4}")))
+            .or(r.auc.map(|a| format!("AUC={a:.4}")))
+            .unwrap_or_default()
+    };
+    let val = pipe.evaluate(Split::Val)?;
+    let test = pipe.evaluate(Split::Test)?;
+    println!(
+        "val {} ({} queries) | test {} ({} queries)",
+        fmt(&val),
+        val.queries,
+        fmt(&test),
+        test.queries
+    );
+    Ok(())
+}
+
+fn cmd_discretize(args: &Args) -> Result<()> {
+    let data = gen::by_name(&args.get("dataset", "lastfm"), args.f64("scale", 0.5), 42)?;
+    let g = TimeGranularity::parse(&args.get("granularity", "hour"))?;
+    let storage = data.storage();
+    let t0 = std::time::Instant::now();
+    let out = if args.bool("baseline") {
+        discretize_utg(storage, g, ReduceOp::Count)?
+    } else {
+        discretize(storage, g, ReduceOp::Count)?
+    };
+    let dt = t0.elapsed();
+    println!(
+        "{} ({} edges) -> {} snapshot edges at {} in {:.4}s ({})",
+        data.name(),
+        storage.num_edges(),
+        out.num_edges(),
+        g.as_str(),
+        dt.as_secs_f64(),
+        if args.bool("baseline") { "UTG baseline" } else { "TGM vectorized" }
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let eng = engine()?;
+    let model = args.get("model", "tgat_link");
+    let data = gen::by_name(&args.get("dataset", "wiki"), args.f64("scale", 0.2), 42)?;
+    let mut pipe = Pipeline::new(&eng, data, pipeline_cfg(&model, args)?)?;
+    pipe.profiler.start_wall();
+    let r = pipe.train_epoch()?;
+    println!("{model}: loss={:.4} over {} batches\n", r.mean_loss, r.batches);
+    println!("{}", pipe.profiler);
+    Ok(())
+}
+
+fn cmd_memory(_args: &Args) -> Result<()> {
+    let eng = engine()?;
+    let manifest = eng.manifest();
+    println!("{:<18} {:>12} {:>10}", "model", "state (MB)", "tensors");
+    let mut names: Vec<&String> = manifest.models.keys().collect();
+    names.sort();
+    for name in names {
+        let spec = &manifest.models[name];
+        println!(
+            "{:<18} {:>12.2} {:>10}",
+            name,
+            spec.state_bytes() as f64 / 1e6,
+            spec.state_shapes.len()
+        );
+    }
+    Ok(())
+}
+
+/// Table 6 / RQ2: snapshot granularity vs DTDG link MRR.
+fn exp_granularity(args: &Args) -> Result<()> {
+    let eng = engine()?;
+    let scale = args.f64("scale", 0.25);
+    let epochs = args.usize("epochs", 3);
+    println!("RQ2 (Table 6): snapshot granularity vs link MRR");
+    println!("{:<10} {:<12} {:<8} {:>8}", "dataset", "model", "gran", "MRR");
+    for ds in ["wiki", "reddit"] {
+        for model in ["gcn_link", "tgcn_link", "gclstm_link"] {
+            for gran in [TimeGranularity::Hour, TimeGranularity::Day, TimeGranularity::Week] {
+                let data = gen::by_name(ds, scale, 42)?;
+                let mut cfg = PipelineConfig::new(model);
+                cfg.granularity = gran;
+                let mut pipe = Pipeline::new(&eng, data, cfg)?;
+                for _ in 0..epochs {
+                    pipe.train_epoch()?;
+                }
+                let r = pipe.evaluate(Split::Test)?;
+                println!(
+                    "{:<10} {:<12} {:<8} {:>8.4}",
+                    ds,
+                    model,
+                    gran.as_str(),
+                    r.mrr.unwrap_or(0.0)
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Table 7 / RQ1: graph growth prediction AUC.
+fn exp_graphprop(args: &Args) -> Result<()> {
+    let eng = engine()?;
+    let scale = args.f64("scale", 0.25);
+    let epochs = args.usize("epochs", 3);
+    println!("RQ1 (Table 7): next-snapshot growth AUC (daily snapshots)");
+    println!("{:<10} {:<14} {:>8}", "dataset", "model", "AUC");
+    for ds in ["wiki", "reddit"] {
+        // Persistent-forecast baseline.
+        let data = gen::by_name(ds, scale, 42)?;
+        let splits = data.split()?;
+        let pf = evaluate_persistent_graph(&splits.test, TimeGranularity::Day)?;
+        println!("{:<10} {:<14} {:>8.4}", ds, "P.F.", pf.auc.unwrap_or(0.5));
+        for model in ["tgcn_graph", "gclstm_graph", "gcn_graph"] {
+            let raw = gen::by_name(ds, scale, 42)?;
+            // DTDG substrate: hourly-discretized view, graph task tag.
+            let data = tgm::graph::DGData::new(
+                discretize(raw.storage(), TimeGranularity::Hour, ReduceOp::Count)?,
+                ds,
+                Task::GraphProperty,
+            );
+            let mut cfg = PipelineConfig::new(model);
+            cfg.granularity = TimeGranularity::Day;
+            let mut pipe = Pipeline::new(&eng, data, cfg)?;
+            for _ in 0..epochs {
+                pipe.train_epoch()?;
+            }
+            let r = pipe.evaluate(Split::Test)?;
+            println!("{:<10} {:<14} {:>8.4}", ds, model, r.auc.unwrap_or(0.5));
+        }
+    }
+    Ok(())
+}
+
+/// Table 8 / RQ3: validation batch size & unit vs link MRR.
+fn exp_batchsize(args: &Args) -> Result<()> {
+    let eng = engine()?;
+    let scale = args.f64("scale", 0.2);
+    let epochs = args.usize("epochs", 2);
+    let model = args.get("model", "tpnet_link");
+    println!("RQ3 (Table 8): eval batching vs link MRR ({model}, wiki)");
+    let data = gen::by_name("wiki", scale, 42)?;
+    let mut pipe = Pipeline::new(&eng, data, PipelineConfig::new(&model))?;
+    for _ in 0..epochs {
+        pipe.train_epoch()?;
+    }
+    println!("{:<16} {:>8}", "batching", "MRR");
+    for bs in [50usize, 100, 200] {
+        let r = pipe.evaluate_link_with(Split::Test, BatchBy::Events(bs))?;
+        println!("{:<16} {:>8.4}", format!("size {bs}"), r.mrr.unwrap_or(0.0));
+    }
+    for unit in [TimeGranularity::Hour, TimeGranularity::Day] {
+        let r = pipe.evaluate_link_with(Split::Test, BatchBy::Time(unit))?;
+        println!("{:<16} {:>8.4}", format!("unit {}", unit.as_str()), r.mrr.unwrap_or(0.0));
+    }
+    Ok(())
+}
+
+/// Table 12: correctness sweep over the model zoo.
+fn exp_correctness(args: &Args) -> Result<()> {
+    let eng = engine()?;
+    let scale = args.f64("scale", 0.2);
+    let epochs = args.usize("epochs", 2);
+    println!("Table 12: model zoo on wiki (link MRR) and trade (node NDCG@10)");
+    println!("{:<16} {:<8} {:>10} {:>10}", "model", "task", "val", "test");
+
+    let wiki = gen::by_name("wiki", scale, 42)?;
+    let splits = wiki.split()?;
+    let eb = evaluate_edgebank(&wiki, &splits.val, EdgeBankMode::Unlimited, 10, 0)?;
+    let ebt = evaluate_edgebank(&wiki, &splits.test, EdgeBankMode::Unlimited, 10, 0)?;
+    println!(
+        "{:<16} {:<8} {:>10.4} {:>10.4}",
+        "edgebank",
+        "link",
+        eb.mrr.unwrap(),
+        ebt.mrr.unwrap()
+    );
+
+    for model in [
+        "tpnet_link",
+        "tgn_link",
+        "graphmixer_link",
+        "tgat_link",
+        "dygformer_link",
+        "gcn_link",
+        "gclstm_link",
+        "tgcn_link",
+    ] {
+        let mut cfg = PipelineConfig::new(model);
+        cfg.granularity = TimeGranularity::Day;
+        let mut pipe = Pipeline::new(&eng, wiki.clone(), cfg)?;
+        for _ in 0..epochs {
+            pipe.train_epoch()?;
+        }
+        let v = pipe.evaluate(Split::Val)?;
+        let t = pipe.evaluate(Split::Test)?;
+        println!(
+            "{:<16} {:<8} {:>10.4} {:>10.4}",
+            model,
+            "link",
+            v.mrr.unwrap_or(0.0),
+            t.mrr.unwrap_or(0.0)
+        );
+    }
+
+    let trade = gen::by_name("trade", args.f64("trade-scale", 0.5), 42)?;
+    for model in ["tgn_node", "dygformer_node", "gcn_node", "gclstm_node", "tgcn_node"] {
+        let mut cfg = PipelineConfig::new(model);
+        cfg.granularity = TimeGranularity::Year;
+        let mut pipe = Pipeline::new(&eng, trade.clone(), cfg)?;
+        for _ in 0..epochs {
+            pipe.train_epoch()?;
+        }
+        let v = pipe.evaluate(Split::Val)?;
+        let t = pipe.evaluate(Split::Test)?;
+        println!(
+            "{:<16} {:<8} {:>10.4} {:>10.4}",
+            model,
+            "node",
+            v.ndcg.unwrap_or(0.0),
+            t.ndcg.unwrap_or(0.0)
+        );
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let result = match cmd {
+        "stats" => cmd_stats(&args),
+        "train" => cmd_train(&args),
+        "discretize" => cmd_discretize(&args),
+        "profile" => cmd_profile(&args),
+        "memory" => cmd_memory(&args),
+        "exp" => match argv.get(1).map(String::as_str) {
+            Some("granularity") => exp_granularity(&args),
+            Some("graphprop") => exp_graphprop(&args),
+            Some("batchsize") => exp_batchsize(&args),
+            Some("correctness") => exp_correctness(&args),
+            other => Err(TgmError::Config(format!("unknown experiment {other:?}"))),
+        },
+        "help" | "--help" | "-h" => {
+            println!(
+                "tgm <stats|train|discretize|profile|memory|exp> [--flags]\n\
+                 experiments: exp granularity | graphprop | batchsize | correctness"
+            );
+            Ok(())
+        }
+        other => Err(TgmError::Config(format!("unknown command `{other}`"))),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

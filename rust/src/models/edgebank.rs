@@ -1,0 +1,104 @@
+//! EdgeBank (Poursafaei et al., 2022): non-parametric link-prediction
+//! baseline. Memorizes observed edges and predicts 1 for previously seen
+//! (src, dst) pairs. Two memory modes from the paper: unlimited (all
+//! history) and time-window (only edges within a trailing window).
+
+use crate::util::Timestamp;
+use std::collections::HashMap;
+
+/// Memory policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeBankMode {
+    /// Remember every edge ever seen (Table 14 "Memory Mode: Unlimited").
+    Unlimited,
+    /// Remember edges whose last occurrence is within the window.
+    TimeWindow(i64),
+}
+
+/// The EdgeBank predictor.
+#[derive(Debug, Clone)]
+pub struct EdgeBank {
+    mode: EdgeBankMode,
+    /// (src, dst) -> last seen timestamp.
+    memory: HashMap<(u32, u32), Timestamp>,
+}
+
+impl EdgeBank {
+    /// Empty bank with the given memory mode.
+    pub fn new(mode: EdgeBankMode) -> EdgeBank {
+        EdgeBank { mode, memory: HashMap::new() }
+    }
+
+    /// Absorb a batch of observed edges.
+    pub fn update(&mut self, src: &[u32], dst: &[u32], ts: &[Timestamp]) {
+        for i in 0..src.len() {
+            self.memory.insert((src[i], dst[i]), ts[i]);
+        }
+    }
+
+    /// Score a candidate link at time `t`: 1.0 if remembered, else 0.0.
+    pub fn score(&self, src: u32, dst: u32, t: Timestamp) -> f64 {
+        match self.memory.get(&(src, dst)) {
+            None => 0.0,
+            Some(&last) => match self.mode {
+                EdgeBankMode::Unlimited => 1.0,
+                EdgeBankMode::TimeWindow(w) => {
+                    if t - last <= w {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+            },
+        }
+    }
+
+    /// Number of remembered pairs.
+    pub fn len(&self) -> usize {
+        self.memory.len()
+    }
+
+    /// True when nothing has been memorized yet.
+    pub fn is_empty(&self) -> bool {
+        self.memory.is_empty()
+    }
+
+    /// Forget everything (epoch/split reset).
+    pub fn reset(&mut self) {
+        self.memory.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_remembers_forever() {
+        let mut eb = EdgeBank::new(EdgeBankMode::Unlimited);
+        eb.update(&[1, 2], &[10, 20], &[100, 200]);
+        assert_eq!(eb.score(1, 10, 1_000_000), 1.0);
+        assert_eq!(eb.score(1, 20, 1_000_000), 0.0);
+        assert_eq!(eb.len(), 2);
+    }
+
+    #[test]
+    fn window_mode_expires() {
+        let mut eb = EdgeBank::new(EdgeBankMode::TimeWindow(50));
+        eb.update(&[1], &[10], &[100]);
+        assert_eq!(eb.score(1, 10, 120), 1.0);
+        assert_eq!(eb.score(1, 10, 151), 0.0);
+        // Re-observation refreshes the window.
+        eb.update(&[1], &[10], &[160]);
+        assert_eq!(eb.score(1, 10, 200), 1.0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut eb = EdgeBank::new(EdgeBankMode::Unlimited);
+        eb.update(&[1], &[2], &[3]);
+        eb.reset();
+        assert!(eb.is_empty());
+        assert_eq!(eb.score(1, 2, 10), 0.0);
+    }
+}

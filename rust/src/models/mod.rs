@@ -1,0 +1,9 @@
+//! Non-parametric baselines implemented natively in Rust (no artifacts):
+//! EdgeBank and Persistent Forecast. Learned models live in the AOT
+//! artifacts and are driven through [`crate::runtime`].
+
+pub mod edgebank;
+pub mod persistent;
+
+pub use edgebank::{EdgeBank, EdgeBankMode};
+pub use persistent::{PersistentForecast, PersistentGraphForecast};

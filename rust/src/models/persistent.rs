@@ -1,0 +1,84 @@
+//! Persistent Forecast (paper Appendix D): predicts that the future
+//! equals the most recent observation. Strong baseline for dynamic node
+//! property prediction (Table 4) and graph property prediction (Table 7).
+
+use std::collections::HashMap;
+
+/// Node-property persistent forecaster: last observed distribution wins.
+#[derive(Debug, Clone, Default)]
+pub struct PersistentForecast {
+    last: HashMap<u32, Vec<f64>>,
+    num_classes: usize,
+}
+
+impl PersistentForecast {
+    /// Forecaster over `num_classes` property classes.
+    pub fn new(num_classes: usize) -> PersistentForecast {
+        PersistentForecast { last: HashMap::new(), num_classes }
+    }
+
+    /// Record the observed property vector for `node`.
+    pub fn observe(&mut self, node: u32, value: &[f64]) {
+        debug_assert_eq!(value.len(), self.num_classes);
+        self.last.insert(node, value.to_vec());
+    }
+
+    /// Predict `node`'s next property vector (uniform if never seen).
+    pub fn predict(&self, node: u32) -> Vec<f64> {
+        self.last
+            .get(&node)
+            .cloned()
+            .unwrap_or_else(|| vec![1.0 / self.num_classes as f64; self.num_classes])
+    }
+
+    /// Clear state.
+    pub fn reset(&mut self) {
+        self.last.clear();
+    }
+}
+
+/// Graph-property persistent forecaster: predicts the previous label.
+#[derive(Debug, Clone, Default)]
+pub struct PersistentGraphForecast {
+    last_label: Option<f64>,
+}
+
+impl PersistentGraphForecast {
+    /// Fresh forecaster.
+    pub fn new() -> PersistentGraphForecast {
+        PersistentGraphForecast::default()
+    }
+
+    /// Predict the next label (0.5 before any observation), then record
+    /// the true label.
+    pub fn predict_then_observe(&mut self, truth: f64) -> f64 {
+        let pred = self.last_label.unwrap_or(0.5);
+        self.last_label = Some(truth);
+        pred
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_pf_returns_last_seen() {
+        let mut pf = PersistentForecast::new(3);
+        assert_eq!(pf.predict(7), vec![1.0 / 3.0; 3]);
+        pf.observe(7, &[0.5, 0.25, 0.25]);
+        assert_eq!(pf.predict(7), vec![0.5, 0.25, 0.25]);
+        pf.observe(7, &[0.0, 1.0, 0.0]);
+        assert_eq!(pf.predict(7), vec![0.0, 1.0, 0.0]);
+        pf.reset();
+        assert_eq!(pf.predict(7), vec![1.0 / 3.0; 3]);
+    }
+
+    #[test]
+    fn graph_pf_lags_by_one() {
+        let mut pf = PersistentGraphForecast::new();
+        assert_eq!(pf.predict_then_observe(1.0), 0.5);
+        assert_eq!(pf.predict_then_observe(0.0), 1.0);
+        assert_eq!(pf.predict_then_observe(1.0), 0.0);
+    }
+}

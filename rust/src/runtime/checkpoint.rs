@@ -1,0 +1,86 @@
+//! Model checkpointing: persist/restore a [`ModelRuntime`]'s live state
+//! (params + Adam slots + memory/recurrent state) between runs.
+//!
+//! Format mirrors the AOT `.state.bin` blobs (f32 LE in canonical
+//! tree-flatten order) with a small header binding the checkpoint to its
+//! model and state layout, so loading a checkpoint into the wrong model
+//! or an artifact rebuilt with different shapes fails loudly.
+
+use crate::error::{Result, TgmError};
+use crate::runtime::engine::ModelRuntime;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"TGMCKPT1";
+
+/// Save the runtime's current state to `path`.
+pub fn save(runtime: &ModelRuntime<'_>, path: impl AsRef<Path>) -> Result<()> {
+    let state = runtime.state_to_host()?;
+    let name = runtime.name().as_bytes();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name)?;
+    f.write_all(&(state.len() as u64).to_le_bytes())?;
+    for v in &state {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Restore a checkpoint into the runtime (model name and state size must
+/// match the manifest the runtime was loaded from).
+pub fn load(runtime: &mut ModelRuntime<'_>, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(TgmError::Runtime("not a TGM checkpoint (bad magic)".into()));
+    }
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let name_len = u32::from_le_bytes(len4) as usize;
+    let mut name = vec![0u8; name_len];
+    f.read_exact(&mut name)?;
+    let name = String::from_utf8(name)
+        .map_err(|_| TgmError::Runtime("corrupt checkpoint name".into()))?;
+    if name != runtime.name() {
+        return Err(TgmError::Runtime(format!(
+            "checkpoint is for model `{name}`, runtime is `{}`",
+            runtime.name()
+        )));
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let n = u64::from_le_bytes(len8) as usize;
+    if n != runtime.spec.state_elements() {
+        return Err(TgmError::Runtime(format!(
+            "checkpoint has {n} state elements, manifest expects {} — artifacts rebuilt?",
+            runtime.spec.state_elements()
+        )));
+    }
+    let mut bytes = vec![0u8; n * 4];
+    f.read_exact(&mut bytes)?;
+    let state: Vec<f32> =
+        bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+    runtime.load_host_state(&state)
+}
+
+#[cfg(test)]
+mod tests {
+    // Round-trip behaviour is exercised in rust/tests/integration.rs
+    // (needs compiled artifacts); here we only check header rejection.
+    use super::*;
+
+    #[test]
+    fn rejects_garbage_files() {
+        let dir = std::env::temp_dir().join("tgm_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        let mut f = std::io::BufReader::new(std::fs::File::open(&path).unwrap());
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic).unwrap();
+        assert_ne!(&magic, MAGIC);
+    }
+}

@@ -1,0 +1,250 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute
+//! from the coordinator's hot path. Python is never involved here.
+
+use crate::error::{Result, TgmError};
+use crate::runtime::literal::{literal_scalar_f32, literal_to_tensor, tensor_to_literal};
+use crate::runtime::manifest::{ArtifactSpec, Manifest, ModelSpec, OutSpec, Profile};
+use crate::util::Tensor;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+fn rt(e: xla::Error) -> TgmError {
+    TgmError::Runtime(e.to_string())
+}
+
+/// Owns the PJRT client and the parsed manifest.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl XlaEngine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<XlaEngine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(rt)?;
+        Ok(XlaEngine { client, dir: artifacts_dir.as_ref().to_path_buf(), manifest })
+    }
+
+    /// Parsed manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, hlo_file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(|| {
+            TgmError::Runtime(format!("non-utf8 path {}", path.display()))
+        })?)
+        .map_err(rt)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(rt)
+    }
+
+    /// Load a model: reads its initial state blob and compiles all of its
+    /// artifacts.
+    pub fn load_model(&self, name: &str) -> Result<ModelRuntime<'_>> {
+        let spec = self.manifest.model(name)?.clone();
+        let init = self.read_state_blob(&spec)?;
+        let mut executables = HashMap::new();
+        for (kind, art) in &spec.artifacts {
+            executables.insert(kind.clone(), Rc::new(self.compile(&art.hlo_file)?));
+        }
+        let state = blob_to_literals(&init, &spec)?;
+        Ok(ModelRuntime {
+            engine: self,
+            profile: self.manifest.profile_of(&spec).clone(),
+            spec,
+            executables,
+            state,
+            init_blob: init,
+            calls: 0,
+        })
+    }
+
+    fn read_state_blob(&self, spec: &ModelSpec) -> Result<Vec<f32>> {
+        let path = self.dir.join(&spec.state_file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| TgmError::Runtime(format!("read {}: {e}", path.display())))?;
+        if bytes.len() != spec.state_bytes() {
+            return Err(TgmError::Runtime(format!(
+                "{}: blob has {} bytes, manifest expects {}",
+                spec.state_file,
+                bytes.len(),
+                spec.state_bytes()
+            )));
+        }
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+}
+
+fn blob_to_literals(blob: &[f32], spec: &ModelSpec) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::with_capacity(spec.state_shapes.len());
+    let mut offset = 0usize;
+    for shape in &spec.state_shapes {
+        let n: usize = shape.iter().product();
+        let lit = crate::runtime::literal::f32_to_literal(&blob[offset..offset + n], shape)?;
+        out.push(lit);
+        offset += n;
+    }
+    Ok(out)
+}
+
+/// Output of one artifact execution.
+#[derive(Debug, Default)]
+pub struct RunOutput {
+    /// Scalar loss (train artifacts).
+    pub loss: Option<f32>,
+    /// Named tensor outputs (e.g. `scores`).
+    pub tensors: HashMap<String, Tensor>,
+}
+
+/// A loaded model: compiled executables + live state literals.
+///
+/// `run` threads the state automatically: artifacts declaring `out state`
+/// replace the runtime's state in place, exactly mirroring the functional
+/// state threading of the JAX side.
+pub struct ModelRuntime<'e> {
+    engine: &'e XlaEngine,
+    pub spec: ModelSpec,
+    pub profile: Profile,
+    executables: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+    state: Vec<xla::Literal>,
+    init_blob: Vec<f32>,
+    calls: u64,
+}
+
+impl ModelRuntime<'_> {
+    /// Model name.
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Number of artifact executions so far.
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    /// Reset state to the initial blob (fresh training run).
+    pub fn reset_state(&mut self) -> Result<()> {
+        self.state = blob_to_literals(&self.init_blob, &self.spec)?;
+        Ok(())
+    }
+
+    /// Artifact input spec (for batch packers).
+    pub fn artifact(&self, kind: &str) -> Result<&ArtifactSpec> {
+        self.spec.artifacts.get(kind).ok_or_else(|| {
+            TgmError::Runtime(format!("model `{}` has no `{kind}` artifact", self.spec.name))
+        })
+    }
+
+    /// Execute one artifact. `batch` must contain every input the
+    /// artifact's manifest spec declares (shape-checked here).
+    pub fn run(&mut self, kind: &str, batch: &HashMap<String, Tensor>) -> Result<RunOutput> {
+        let art = self.artifact(kind)?.clone();
+        let exe = Rc::clone(self.executables.get(kind).unwrap());
+
+        // Assemble inputs: state first, then batch tensors in spec order.
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.state.len() + art.inputs.len());
+        inputs.extend(self.state.iter());
+        let mut batch_literals = Vec::with_capacity(art.inputs.len());
+        for spec in &art.inputs {
+            let t = batch.get(&spec.name).ok_or_else(|| {
+                TgmError::Runtime(format!(
+                    "{}.{kind}: missing batch input `{}`",
+                    self.spec.name, spec.name
+                ))
+            })?;
+            if t.shape() != spec.shape.as_slice() || t.dtype() != spec.dtype {
+                return Err(TgmError::Runtime(format!(
+                    "{}.{kind}: input `{}` is {:?}/{:?}, manifest expects {:?}/{:?}",
+                    self.spec.name,
+                    spec.name,
+                    t.shape(),
+                    t.dtype(),
+                    spec.shape,
+                    spec.dtype
+                )));
+            }
+            batch_literals.push(tensor_to_literal(t)?);
+        }
+        inputs.extend(batch_literals.iter());
+
+        let result = exe.execute::<&xla::Literal>(&inputs).map_err(rt)?;
+        let tuple = result[0][0].to_literal_sync().map_err(rt)?;
+        let mut outs = tuple.to_tuple().map_err(rt)?;
+        self.calls += 1;
+
+        // Distribute outputs per the manifest.
+        let mut out = RunOutput::default();
+        let mut cursor = 0usize;
+        for ospec in &art.outputs {
+            match ospec {
+                OutSpec::State => {
+                    let n = self.spec.state_shapes.len();
+                    if cursor + n > outs.len() {
+                        return Err(TgmError::Runtime(format!(
+                            "{}.{kind}: output tuple too short for state",
+                            self.spec.name
+                        )));
+                    }
+                    self.state = outs.drain(..n).collect();
+                    // Note: drain from the front keeps `cursor` at 0 for
+                    // the remaining tensor outputs.
+                }
+                OutSpec::Tensor(t) => {
+                    if cursor >= outs.len() {
+                        return Err(TgmError::Runtime(format!(
+                            "{}.{kind}: missing output `{}`",
+                            self.spec.name, t.name
+                        )));
+                    }
+                    let lit = &outs[cursor];
+                    if t.name == "loss" && t.shape.is_empty() {
+                        out.loss = Some(literal_scalar_f32(lit)?);
+                    } else {
+                        out.tensors.insert(t.name.clone(), literal_to_tensor(lit, &t.shape)?);
+                    }
+                    cursor += 1;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Replace the live state from a host f32 vector in canonical order
+    /// (checkpoint restore). Length must match the manifest layout.
+    pub fn load_host_state(&mut self, state: &[f32]) -> Result<()> {
+        if state.len() != self.spec.state_elements() {
+            return Err(TgmError::Runtime(format!(
+                "state has {} elements, manifest expects {}",
+                state.len(),
+                self.spec.state_elements()
+            )));
+        }
+        self.state = blob_to_literals(state, &self.spec)?;
+        Ok(())
+    }
+
+    /// Copy the current state back to host f32 (testing / checkpointing).
+    pub fn state_to_host(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.spec.state_elements());
+        for (lit, shape) in self.state.iter().zip(&self.spec.state_shapes) {
+            let t = literal_to_tensor(lit, shape)?;
+            out.extend_from_slice(t.as_f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Engine backing this runtime.
+    pub fn engine(&self) -> &XlaEngine {
+        self.engine
+    }
+}

@@ -1,0 +1,87 @@
+//! Host `Tensor` <-> `xla::Literal` conversion at the device boundary.
+
+use crate::error::{Result, TgmError};
+use crate::util::{DType, Tensor};
+
+fn rt(e: xla::Error) -> TgmError {
+    TgmError::Runtime(e.to_string())
+}
+
+/// Reinterpret a 4-byte-element slice as raw bytes (zero-copy).
+///
+/// Safe on this target: x86-64 is little-endian and `f32`/`i32` have
+/// alignment >= 1, so the byte view matches the wire format the XLA
+/// literal constructor expects. This replaced a per-element
+/// `to_le_bytes` collect that dominated the device boundary on multi-MB
+/// predict batches (see EXPERIMENTS.md §Perf).
+fn as_bytes<T>(data: &[T]) -> &[u8] {
+    // SAFETY: plain-old-data elements; length scaled by size_of::<T>().
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+/// Convert a host tensor into an XLA literal (one bulk copy).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let (ty, bytes): (xla::ElementType, &[u8]) = match t.dtype() {
+        DType::F32 => (xla::ElementType::F32, as_bytes(t.as_f32()?)),
+        DType::I32 => (xla::ElementType::S32, as_bytes(t.as_i32()?)),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, t.shape(), bytes).map_err(rt)
+}
+
+/// Convert an f32 slice (with shape) into a literal.
+pub fn f32_to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, as_bytes(data))
+        .map_err(rt)
+}
+
+/// Read a literal back into a host tensor.
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let ty = lit.ty().map_err(rt)?;
+    match ty {
+        xla::ElementType::F32 => {
+            let v: Vec<f32> = lit.to_vec().map_err(rt)?;
+            Tensor::f32(v, shape)
+        }
+        xla::ElementType::S32 => {
+            let v: Vec<i32> = lit.to_vec().map_err(rt)?;
+            Tensor::i32(v, shape)
+        }
+        other => Err(TgmError::Runtime(format!("unsupported literal type {other:?}"))),
+    }
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(rt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trip() {
+        let t = Tensor::f32(vec![1.0, -2.5, 3.25, 0.0, 7.0, 8.0], &[2, 3]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        let back = literal_to_tensor(&lit, &[2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_round_trip() {
+        let t = Tensor::i32(vec![5, -7, 0, 123], &[4]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit, &[4]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let t = Tensor::scalar_f32(42.5);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(literal_scalar_f32(&lit).unwrap(), 42.5);
+    }
+}

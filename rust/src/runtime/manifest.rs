@@ -1,0 +1,333 @@
+//! Artifact manifest parsing.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.txt` in a simple
+//! line format (one token stream per line) describing, for every model:
+//! the size *profile* it was compiled against, the canonical state-tensor
+//! list (shapes in tree-flatten order) with the `.state.bin` initializer
+//! blob, and per-artifact (`train`/`predict`/`update`) input and output
+//! specs. This module is the Rust half of that contract.
+
+use crate::error::{Result, TgmError};
+use crate::util::DType;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Static-shape envelope (mirrors `python/compile/config.py::Profile`).
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub name: String,
+    pub n: usize,
+    pub b: usize,
+    pub k: usize,
+    pub k2: usize,
+    pub seq: usize,
+    pub c: usize,
+    pub d_edge: usize,
+    pub d_static: usize,
+    pub p: usize,
+}
+
+/// One named tensor input.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+/// Artifact output description.
+#[derive(Debug, Clone)]
+pub enum OutSpec {
+    /// The full state list, in canonical order.
+    State,
+    /// A named tensor (loss scalar, score matrix...).
+    Tensor(IoSpec),
+}
+
+/// One compiled function of a model.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub kind: String,
+    pub hlo_file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<OutSpec>,
+}
+
+/// One model: state layout + artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub profile: String,
+    pub state_file: String,
+    pub state_shapes: Vec<Vec<usize>>,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl ModelSpec {
+    /// Total f32 element count of the state.
+    pub fn state_elements(&self) -> usize {
+        self.state_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    /// Bytes the state occupies (f32).
+    pub fn state_bytes(&self) -> usize {
+        self.state_elements() * 4
+    }
+}
+
+/// Parsed manifest: profiles + models.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub profiles: HashMap<String, Profile>,
+    pub models: HashMap<String, ModelSpec>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "-" {
+        return Ok(vec![]);
+    }
+    s.split(',')
+        .map(|d| {
+            d.parse::<usize>()
+                .map_err(|_| TgmError::Manifest(format!("bad shape dim `{d}`")))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        let mut cur_model: Option<ModelSpec> = None;
+        let mut cur_artifact: Option<ArtifactSpec> = None;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let err = |msg: &str| TgmError::Manifest(format!("line {}: {msg}", lineno + 1));
+            match toks[0] {
+                "profile" => {
+                    // profile <name> n <v> b <v> ...
+                    if toks.len() < 2 || toks.len() % 2 != 0 {
+                        return Err(err("malformed profile line"));
+                    }
+                    let mut kv = HashMap::new();
+                    for pair in toks[2..].chunks(2) {
+                        let v = pair[1]
+                            .parse::<usize>()
+                            .map_err(|_| err(&format!("bad profile value `{}`", pair[1])))?;
+                        kv.insert(pair[0].to_string(), v);
+                    }
+                    let get = |k: &str| {
+                        kv.get(k).copied().ok_or_else(|| err(&format!("profile missing `{k}`")))
+                    };
+                    m.profiles.insert(
+                        toks[1].to_string(),
+                        Profile {
+                            name: toks[1].to_string(),
+                            n: get("n")?,
+                            b: get("b")?,
+                            k: get("k")?,
+                            k2: get("k2")?,
+                            seq: get("seq")?,
+                            c: get("c")?,
+                            d_edge: get("d_edge")?,
+                            d_static: get("d_static")?,
+                            p: get("p")?,
+                        },
+                    );
+                }
+                "model" => {
+                    if toks.len() != 4 || toks[2] != "profile" {
+                        return Err(err("expected `model <name> profile <profile>`"));
+                    }
+                    cur_model = Some(ModelSpec {
+                        name: toks[1].to_string(),
+                        profile: toks[3].to_string(),
+                        state_file: String::new(),
+                        state_shapes: Vec::new(),
+                        artifacts: HashMap::new(),
+                    });
+                }
+                "state_file" => {
+                    cur_model.as_mut().ok_or_else(|| err("state_file outside model"))?.state_file =
+                        toks[1].to_string();
+                }
+                "state" => {
+                    let model = cur_model.as_mut().ok_or_else(|| err("state outside model"))?;
+                    if toks.len() != 3 || toks[1] != "f32" {
+                        return Err(err("state lines must be `state f32 <shape>`"));
+                    }
+                    model.state_shapes.push(parse_shape(toks[2])?);
+                }
+                "artifact" => {
+                    if toks.len() != 3 {
+                        return Err(err("expected `artifact <kind> <file>`"));
+                    }
+                    cur_artifact = Some(ArtifactSpec {
+                        kind: toks[1].to_string(),
+                        hlo_file: toks[2].to_string(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    });
+                }
+                "in" => {
+                    let a = cur_artifact.as_mut().ok_or_else(|| err("in outside artifact"))?;
+                    if toks.len() != 4 {
+                        return Err(err("expected `in <name> <dtype> <shape>`"));
+                    }
+                    a.inputs.push(IoSpec {
+                        name: toks[1].to_string(),
+                        dtype: DType::parse(toks[2])?,
+                        shape: parse_shape(toks[3])?,
+                    });
+                }
+                "out" => {
+                    let a = cur_artifact.as_mut().ok_or_else(|| err("out outside artifact"))?;
+                    if toks.len() == 2 && toks[1] == "state" {
+                        a.outputs.push(OutSpec::State);
+                    } else if toks.len() == 4 {
+                        a.outputs.push(OutSpec::Tensor(IoSpec {
+                            name: toks[1].to_string(),
+                            dtype: DType::parse(toks[2])?,
+                            shape: parse_shape(toks[3])?,
+                        }));
+                    } else {
+                        return Err(err("malformed out line"));
+                    }
+                }
+                "end" => {
+                    let a = cur_artifact.take().ok_or_else(|| err("end outside artifact"))?;
+                    cur_model
+                        .as_mut()
+                        .ok_or_else(|| err("artifact outside model"))?
+                        .artifacts
+                        .insert(a.kind.clone(), a);
+                }
+                "endmodel" => {
+                    let model = cur_model.take().ok_or_else(|| err("endmodel outside model"))?;
+                    if !m.profiles.contains_key(&model.profile) {
+                        return Err(err(&format!("unknown profile `{}`", model.profile)));
+                    }
+                    m.models.insert(model.name.clone(), model);
+                }
+                other => return Err(err(&format!("unknown directive `{other}`"))),
+            }
+        }
+        if cur_model.is_some() || cur_artifact.is_some() {
+            return Err(TgmError::Manifest("unterminated model/artifact section".into()));
+        }
+        Ok(m)
+    }
+
+    /// Load and parse `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            TgmError::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Manifest::parse(&text)
+    }
+
+    /// Model spec lookup with a helpful error.
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).ok_or_else(|| {
+            let mut known: Vec<&str> = self.models.keys().map(|s| s.as_str()).collect();
+            known.sort_unstable();
+            TgmError::Manifest(format!("unknown model `{name}`; built: {}", known.join(", ")))
+        })
+    }
+
+    /// Profile lookup for a model.
+    pub fn profile_of(&self, model: &ModelSpec) -> &Profile {
+        &self.profiles[&model.profile]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# TGM artifact manifest v1
+profile tiny n 32 b 8 k 4 k2 2 seq 8 c 3 d_edge 4 d_static 4 p 4
+
+model toy_link profile tiny
+state_file toy_link.state.bin
+state f32 4,4
+state f32 -
+artifact train toy_link.train.hlo.txt
+in src i32 8
+in t f32 8
+out state
+out loss f32 -
+end
+artifact predict toy_link.predict.hlo.txt
+in src i32 8
+out scores f32 8,3
+end
+endmodel
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.profiles["tiny"].n, 32);
+        assert_eq!(m.profiles["tiny"].c, 3);
+        let spec = m.model("toy_link").unwrap();
+        assert_eq!(spec.state_shapes, vec![vec![4, 4], vec![]]);
+        assert_eq!(spec.state_elements(), 17);
+        let train = &spec.artifacts["train"];
+        assert_eq!(train.inputs.len(), 2);
+        assert_eq!(train.inputs[0].dtype, DType::I32);
+        assert!(matches!(train.outputs[0], OutSpec::State));
+        match &train.outputs[1] {
+            OutSpec::Tensor(t) => {
+                assert_eq!(t.name, "loss");
+                assert!(t.shape.is_empty());
+            }
+            _ => panic!("expected tensor out"),
+        }
+        let predict = &spec.artifacts["predict"];
+        match &predict.outputs[0] {
+            OutSpec::Tensor(t) => assert_eq!(t.shape, vec![8, 3]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn unknown_model_error_lists_known() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = m.model("nope").unwrap_err().to_string();
+        assert!(err.contains("toy_link"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("model x profile missing\nendmodel\n").is_err());
+        assert!(Manifest::parse("state f32 3\n").is_err());
+        assert!(Manifest::parse("bogus line\n").is_err());
+        assert!(Manifest::parse("model x profile p\n").is_err()); // unterminated
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.models.contains_key("tgat_link"));
+            assert_eq!(m.models.len(), 16);
+            for spec in m.models.values() {
+                assert!(spec.artifacts.contains_key("train"), "{}", spec.name);
+                assert!(spec.artifacts.contains_key("predict"), "{}", spec.name);
+                assert!(dir.join(&spec.state_file).exists());
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT client wrapper that loads `artifacts/*.hlo.txt`
+//! (AOT-lowered by `python/compile/aot.py`), compiles them once, and
+//! executes them from the coordinator hot path with automatic state
+//! threading. See /opt/xla-example/load_hlo for the pattern this adapts.
+
+pub mod checkpoint;
+pub mod engine;
+pub mod literal;
+pub mod manifest;
+
+pub use engine::{ModelRuntime, RunOutput, XlaEngine};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelSpec, OutSpec, Profile};

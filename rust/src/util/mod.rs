@@ -1,0 +1,11 @@
+//! Shared utilities: deterministic RNG, host tensors, time-granularity
+//! algebra, and numeric helpers.
+
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+pub mod time;
+
+pub use rng::Rng;
+pub use tensor::{DType, Tensor, TensorData};
+pub use time::{infer_native_granularity, TimeGranularity, Timestamp};

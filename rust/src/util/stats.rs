@@ -1,0 +1,175 @@
+//! Small numeric helpers shared by evaluators and the bench harness.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (0.0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (by copy+sort; fine for bench-sized inputs).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Numerically stable sigmoid.
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Area under the ROC curve for binary labels, with tie handling
+/// (average rank of tied scores). Returns 0.5 when a class is absent.
+pub fn auc(scores: &[f64], labels: &[bool]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let pos = labels.iter().filter(|&&l| l).count();
+    let neg = labels.len() - pos;
+    if pos == 0 || neg == 0 {
+        return 0.5;
+    }
+    // Rank-sum (Mann-Whitney U) formulation with average ranks for ties.
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let mut ranks = vec![0.0f64; scores.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = avg_rank;
+        }
+        i = j + 1;
+    }
+    let rank_sum_pos: f64 =
+        labels.iter().zip(&ranks).filter(|(l, _)| **l).map(|(_, r)| *r).sum();
+    let u = rank_sum_pos - (pos * (pos + 1)) as f64 / 2.0;
+    u / (pos as f64 * neg as f64)
+}
+
+/// Reciprocal rank of the positive score among negatives (one-vs-many,
+/// TGB protocol). `optimistic=false` uses the pessimistic tie rule that
+/// TGB applies: ties rank below the positive.
+pub fn reciprocal_rank(pos_score: f64, neg_scores: &[f64]) -> f64 {
+    let higher = neg_scores.iter().filter(|&&s| s > pos_score).count();
+    let ties = neg_scores.iter().filter(|&&s| s == pos_score).count();
+    // TGB-style: rank = 1 + #better + #ties/2 (expected rank under random
+    // tie-breaking).
+    let rank = 1.0 + higher as f64 + ties as f64 * 0.5;
+    1.0 / rank
+}
+
+/// NDCG@k for a predicted score vector against non-negative relevance
+/// targets (dynamic node property prediction protocol, Trade/Genre).
+pub fn ndcg_at_k(pred: &[f64], target: &[f64], k: usize) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let k = k.min(pred.len());
+    let mut by_pred: Vec<usize> = (0..pred.len()).collect();
+    by_pred.sort_by(|&a, &b| pred[b].partial_cmp(&pred[a]).unwrap());
+    let dcg: f64 = by_pred[..k]
+        .iter()
+        .enumerate()
+        .map(|(i, &j)| target[j] / ((i + 2) as f64).log2())
+        .sum();
+    let mut by_target: Vec<usize> = (0..target.len()).collect();
+    by_target.sort_by(|&a, &b| target[b].partial_cmp(&target[a]).unwrap());
+    let idcg: f64 = by_target[..k]
+        .iter()
+        .enumerate()
+        .map(|(i, &j)| target[j] / ((i + 2) as f64).log2())
+        .sum();
+    if idcg == 0.0 {
+        0.0
+    } else {
+        dcg / idcg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_median() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - 1.2909944).abs() < 1e-6);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn sigmoid_bounds_and_symmetry() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigmoid(50.0) > 0.999999);
+        assert!(sigmoid(-50.0) < 1e-6);
+        assert!((sigmoid(2.0) + sigmoid(-2.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        // Perfect separation.
+        let s = [0.9, 0.8, 0.2, 0.1];
+        let l = [true, true, false, false];
+        assert!((auc(&s, &l) - 1.0).abs() < 1e-12);
+        // Inverted.
+        let l2 = [false, false, true, true];
+        assert!((auc(&s, &l2) - 0.0).abs() < 1e-12);
+        // All ties -> 0.5.
+        let s3 = [0.5, 0.5, 0.5, 0.5];
+        assert!((auc(&s3, &l) - 0.5).abs() < 1e-12);
+        // Degenerate single class -> 0.5.
+        assert_eq!(auc(&[0.1, 0.2], &[true, true]), 0.5);
+    }
+
+    #[test]
+    fn mrr_ranks() {
+        // Positive beats all 9 negatives -> rank 1.
+        assert!((reciprocal_rank(1.0, &[0.0; 9]) - 1.0).abs() < 1e-12);
+        // Positive below 3 negatives -> rank 4.
+        assert!((reciprocal_rank(0.5, &[0.9, 0.8, 0.7, 0.1]) - 0.25).abs() < 1e-12);
+        // Full tie with one negative -> expected rank 1.5.
+        assert!((reciprocal_rank(0.5, &[0.5]) - (1.0 / 1.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ndcg_perfect_is_one() {
+        let t = [3.0, 2.0, 1.0, 0.0];
+        assert!((ndcg_at_k(&t, &t, 4) - 1.0).abs() < 1e-12);
+        // Reversed prediction is worse.
+        let p = [0.0, 1.0, 2.0, 3.0];
+        assert!(ndcg_at_k(&p, &t, 4) < 1.0);
+        // Zero relevance -> 0.
+        assert_eq!(ndcg_at_k(&p, &[0.0; 4], 4), 0.0);
+    }
+}

@@ -1,0 +1,259 @@
+//! Minimal host-side tensor used throughout the data path.
+//!
+//! TGM batches are bags of named tensors (see [`crate::hooks::batch`]); the
+//! runtime converts them to `xla::Literal`s at the device boundary. We only
+//! need two dtypes on the host path: `f32` (features, times-as-float,
+//! scores) and `i32` (indices, masks).
+
+use crate::error::{Result, TgmError};
+
+/// Data payload of a [`Tensor`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Dtype tag, matching the artifact manifest's dtype strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    /// Parse a manifest dtype string.
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(TgmError::Manifest(format!("unknown dtype `{other}`"))),
+        }
+    }
+
+    /// Manifest dtype string.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    /// Bytes per element.
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+/// A dense host tensor: shape + row-major data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: TensorData,
+}
+
+impl Tensor {
+    /// f32 tensor from data and shape. Errors if element count mismatches.
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            return Err(TgmError::Batch(format!(
+                "f32 tensor: {} elements for shape {:?} (need {n})",
+                data.len(),
+                shape
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: TensorData::F32(data) })
+    }
+
+    /// i32 tensor from data and shape.
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            return Err(TgmError::Batch(format!(
+                "i32 tensor: {} elements for shape {:?} (need {n})",
+                data.len(),
+                shape
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: TensorData::I32(data) })
+    }
+
+    /// Zero-filled f32 tensor.
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    /// Zero-filled i32 tensor.
+    pub fn zeros_i32(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: TensorData::I32(vec![0; n]) }
+    }
+
+    /// Constant-filled f32 tensor.
+    pub fn full_f32(shape: &[usize], v: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(vec![v; n]) }
+    }
+
+    /// Scalar f32.
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    /// Scalar i32.
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor { shape: vec![], data: TensorData::I32(vec![v]) }
+    }
+
+    /// Shape (row-major).
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// True if the tensor has zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dtype tag.
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    /// Byte size of the payload (for memory accounting, Table 10).
+    pub fn byte_size(&self) -> usize {
+        self.len() * self.dtype().size()
+    }
+
+    /// Borrow as f32 slice; errors on dtype mismatch.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(TgmError::Batch("expected f32 tensor, got i32".into())),
+        }
+    }
+
+    /// Borrow as i32 slice; errors on dtype mismatch.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => Err(TgmError::Batch("expected i32 tensor, got f32".into())),
+        }
+    }
+
+    /// Mutable f32 view.
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(TgmError::Batch("expected f32 tensor, got i32".into())),
+        }
+    }
+
+    /// Mutable i32 view.
+    pub fn as_i32_mut(&mut self) -> Result<&mut [i32]> {
+        match &mut self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => Err(TgmError::Batch("expected i32 tensor, got f32".into())),
+        }
+    }
+
+    /// Consume into the f32 payload.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(TgmError::Batch("expected f32 tensor, got i32".into())),
+        }
+    }
+
+    /// Consume into the i32 payload.
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => Err(TgmError::Batch("expected i32 tensor, got f32".into())),
+        }
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(&mut self, shape: &[usize]) -> Result<()> {
+        let n: usize = shape.iter().product();
+        if n != self.len() {
+            return Err(TgmError::Batch(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.shape, shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(())
+    }
+
+    /// Row `i` of a rank-2 f32 tensor.
+    pub fn row_f32(&self, i: usize) -> Result<&[f32]> {
+        if self.shape.len() != 2 {
+            return Err(TgmError::Batch(format!("row_f32 on rank-{} tensor", self.shape.len())));
+        }
+        let cols = self.shape[1];
+        let data = self.as_f32()?;
+        data.get(i * cols..(i + 1) * cols)
+            .ok_or_else(|| TgmError::Batch(format!("row {i} out of bounds")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.as_f32().unwrap()[3], 4.0);
+        assert_eq!(t.byte_size(), 16);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::f32(vec![1.0; 3], &[2, 2]).is_err());
+        assert!(Tensor::i32(vec![1; 5], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let t = Tensor::zeros_i32(&[2]);
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_ok());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let mut t = Tensor::zeros_f32(&[4]);
+        assert!(t.reshape(&[2, 2]).is_ok());
+        assert_eq!(t.shape(), &[2, 2]);
+        assert!(t.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn rows() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[3, 2]).unwrap();
+        assert_eq!(t.row_f32(1).unwrap(), &[3.0, 4.0]);
+        assert!(t.row_f32(3).is_err());
+    }
+
+    #[test]
+    fn scalars_have_empty_shape() {
+        let s = Tensor::scalar_f32(7.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.len(), 1);
+    }
+}

@@ -1,0 +1,187 @@
+//! Time-granularity algebra (paper §3).
+//!
+//! TGM treats time as a first-class signal. Every temporal graph has a
+//! *native* granularity τ — the coarsest unit that still discriminates all
+//! event timestamps — and supports iteration/discretization at any coarser
+//! granularity τ̂ ≥ τ. When wall-clock time is unavailable the special
+//! *event-ordered* granularity preserves only relative order and is
+//! excluded from real-time operations (Definition 3.3).
+
+use crate::error::{Result, TgmError};
+
+/// Raw timestamp unit: seconds since an arbitrary epoch.
+pub type Timestamp = i64;
+
+/// Time granularity: event-ordered or a wall-clock unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TimeGranularity {
+    /// Only relative order is meaningful (Definition 3.3, τ_event).
+    Event,
+    Second,
+    Minute,
+    Hour,
+    Day,
+    Week,
+    /// 365-day year (matches the Trade dataset's yearly steps).
+    Year,
+}
+
+impl TimeGranularity {
+    /// Length in seconds; `None` for the event-ordered granularity.
+    pub fn seconds(&self) -> Option<i64> {
+        match self {
+            TimeGranularity::Event => None,
+            TimeGranularity::Second => Some(1),
+            TimeGranularity::Minute => Some(60),
+            TimeGranularity::Hour => Some(3_600),
+            TimeGranularity::Day => Some(86_400),
+            TimeGranularity::Week => Some(604_800),
+            TimeGranularity::Year => Some(31_536_000),
+        }
+    }
+
+    /// True when `self` is at least as coarse as `other`.
+    ///
+    /// The event-ordered granularity is incomparable with wall-clock units
+    /// (it carries no duration), so any mixed comparison returns `false`.
+    pub fn is_coarser_or_equal(&self, other: &TimeGranularity) -> bool {
+        match (self.seconds(), other.seconds()) {
+            (Some(a), Some(b)) => a >= b,
+            _ => self == other,
+        }
+    }
+
+    /// Parse a CLI/config string.
+    pub fn parse(s: &str) -> Result<TimeGranularity> {
+        match s.to_ascii_lowercase().as_str() {
+            "event" | "e" => Ok(TimeGranularity::Event),
+            "second" | "s" | "sec" => Ok(TimeGranularity::Second),
+            "minute" | "m" | "min" => Ok(TimeGranularity::Minute),
+            "hour" | "h" => Ok(TimeGranularity::Hour),
+            "day" | "d" => Ok(TimeGranularity::Day),
+            "week" | "w" => Ok(TimeGranularity::Week),
+            "year" | "y" => Ok(TimeGranularity::Year),
+            other => Err(TgmError::Time(format!("unknown granularity `{other}`"))),
+        }
+    }
+
+    /// Human-readable name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TimeGranularity::Event => "event",
+            TimeGranularity::Second => "second",
+            TimeGranularity::Minute => "minute",
+            TimeGranularity::Hour => "hour",
+            TimeGranularity::Day => "day",
+            TimeGranularity::Week => "week",
+            TimeGranularity::Year => "year",
+        }
+    }
+
+    /// Bucket index of `t` relative to origin `t0` at this granularity.
+    ///
+    /// Errors for the event-ordered granularity, which carries no duration.
+    pub fn bucket_of(&self, t: Timestamp, t0: Timestamp) -> Result<i64> {
+        let secs = self.seconds().ok_or_else(|| {
+            TgmError::Time("event-ordered granularity has no wall-clock buckets".into())
+        })?;
+        Ok((t - t0).div_euclid(secs))
+    }
+
+    /// Inclusive start timestamp of bucket `b` relative to origin `t0`.
+    pub fn bucket_start(&self, b: i64, t0: Timestamp) -> Result<Timestamp> {
+        let secs = self.seconds().ok_or_else(|| {
+            TgmError::Time("event-ordered granularity has no wall-clock buckets".into())
+        })?;
+        Ok(t0 + b * secs)
+    }
+}
+
+/// Infer the native granularity of a sorted timestamp stream: the coarsest
+/// wall-clock unit that still discriminates between all *distinct*
+/// timestamps (paper §3, "native time granularity").
+pub fn infer_native_granularity(sorted_ts: &[Timestamp]) -> TimeGranularity {
+    use TimeGranularity::*;
+    let mut min_gap: Option<i64> = None;
+    for w in sorted_ts.windows(2) {
+        let gap = w[1] - w[0];
+        if gap > 0 {
+            min_gap = Some(min_gap.map_or(gap, |m: i64| m.min(gap)));
+        }
+    }
+    let Some(gap) = min_gap else { return Event };
+    for g in [Year, Week, Day, Hour, Minute, Second] {
+        if gap >= g.seconds().unwrap() {
+            return g;
+        }
+    }
+    Second
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coarseness_ordering() {
+        use TimeGranularity::*;
+        assert!(Day.is_coarser_or_equal(&Hour));
+        assert!(Hour.is_coarser_or_equal(&Hour));
+        assert!(!Hour.is_coarser_or_equal(&Day));
+        assert!(Year.is_coarser_or_equal(&Second));
+    }
+
+    #[test]
+    fn event_granularity_incomparable() {
+        use TimeGranularity::*;
+        assert!(!Event.is_coarser_or_equal(&Second));
+        assert!(!Second.is_coarser_or_equal(&Event));
+        assert!(Event.is_coarser_or_equal(&Event));
+    }
+
+    #[test]
+    fn bucketing_with_negative_offsets() {
+        let g = TimeGranularity::Hour;
+        assert_eq!(g.bucket_of(0, 0).unwrap(), 0);
+        assert_eq!(g.bucket_of(3599, 0).unwrap(), 0);
+        assert_eq!(g.bucket_of(3600, 0).unwrap(), 1);
+        // div_euclid keeps buckets monotone across the origin.
+        assert_eq!(g.bucket_of(-1, 0).unwrap(), -1);
+        assert_eq!(g.bucket_start(1, 100).unwrap(), 3700);
+    }
+
+    #[test]
+    fn event_buckets_are_errors() {
+        assert!(TimeGranularity::Event.bucket_of(5, 0).is_err());
+        assert!(TimeGranularity::Event.bucket_start(5, 0).is_err());
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for g in [
+            TimeGranularity::Event,
+            TimeGranularity::Second,
+            TimeGranularity::Minute,
+            TimeGranularity::Hour,
+            TimeGranularity::Day,
+            TimeGranularity::Week,
+            TimeGranularity::Year,
+        ] {
+            assert_eq!(TimeGranularity::parse(g.as_str()).unwrap(), g);
+        }
+        assert!(TimeGranularity::parse("fortnight").is_err());
+    }
+
+    #[test]
+    fn native_granularity_inference() {
+        // Gaps of exactly one hour -> Hour.
+        let ts: Vec<i64> = (0..10).map(|i| i * 3600).collect();
+        assert_eq!(infer_native_granularity(&ts), TimeGranularity::Hour);
+        // Mixed gaps, min 1s -> Second.
+        assert_eq!(infer_native_granularity(&[0, 1, 3600]), TimeGranularity::Second);
+        // All identical timestamps -> Event (no discriminating unit).
+        assert_eq!(infer_native_granularity(&[5, 5, 5]), TimeGranularity::Event);
+        // Empty -> Event.
+        assert_eq!(infer_native_granularity(&[]), TimeGranularity::Event);
+    }
+}
