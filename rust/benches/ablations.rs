@@ -7,17 +7,22 @@
 //!    Count under the vectorized path.
 //! 3. Cached timestamp index: storage `edge_range` via the unique-ts
 //!    index vs a full binary search over the raw event array.
+//! 4. Device-boundary packing: bulk byte view vs per-element copies.
+//! 5. Serial vs prefetch batch materialization at varying worker counts
+//!    (the parallel pipeline's end-to-end win on the data path).
 
 #[path = "common.rs"]
 mod common;
 
 use tgm::graph::{discretize, GraphStorage, ReduceOp};
-use tgm::hooks::{
-    HookContext, MaterializedBatch, NaiveSampler, RecencySampler, SamplerConfig, UniformSampler,
-};
-use tgm::hooks::hook::Hook;
+use tgm::hooks::hook::{Hook, StatelessHook};
 use tgm::hooks::batch::attr;
+use tgm::hooks::{
+    HookContext, MaterializedBatch, NaiveSampler, RecencySampler, RecipeRegistry, SamplerConfig,
+    UniformSampler, RECIPE_TGB_LINK,
+};
 use tgm::io::gen;
+use tgm::loader::{BatchBy, DGDataLoader, PrefetchConfig, PrefetchLoader};
 use tgm::util::{Tensor, TimeGranularity};
 
 fn batches_of(storage: &GraphStorage, bsz: usize) -> Vec<MaterializedBatch> {
@@ -49,27 +54,34 @@ fn main() {
     let edges = storage.num_edges();
     println!("Ablations on lastfm surrogate ({edges} edges)");
 
-    // 1. Sampler microbench: full pass over all batches, K=10.
+    // 1. Sampler microbench: full pass over all batches, K=10. The
+    //    recency sampler is stateful (Hook); uniform/naive are stateless
+    //    worker-phase hooks (StatelessHook).
     let cfg = SamplerConfig {
         num_neighbors: 10,
         two_hop: None,
         include_features: true,
         seed_negatives: false,
     };
-    let ctx = HookContext { storage, key: "bench" };
-    let run_sampler = |hook: &mut dyn Hook| {
-        hook.reset();
+    let ctx = HookContext::new(storage, "bench");
+    let run_stateless = |hook: &dyn StatelessHook| {
         for b in &batches {
             let mut b = b.clone();
             hook.apply(&mut b, &ctx).unwrap();
         }
     };
     let mut recency = RecencySampler::new(cfg.clone());
-    let mut uniform = UniformSampler::new(cfg.clone(), 7);
-    let mut naive = NaiveSampler::new(cfg.clone());
-    let r = common::time_runs(1, 3, || run_sampler(&mut recency));
-    let u = common::time_runs(1, 3, || run_sampler(&mut uniform));
-    let nv = common::time_runs(1, 3, || run_sampler(&mut naive));
+    let uniform = UniformSampler::new(cfg.clone(), 7);
+    let naive = NaiveSampler::new(cfg.clone());
+    let r = common::time_runs(1, 3, || {
+        recency.reset();
+        for b in &batches {
+            let mut b = b.clone();
+            Hook::apply(&mut recency, &mut b, &ctx).unwrap();
+        }
+    });
+    let u = common::time_runs(1, 3, || run_stateless(&uniform));
+    let nv = common::time_runs(1, 3, || run_stateless(&naive));
     common::report("ablation.sampler", "recency (circular buffer)", &r);
     common::report("ablation.sampler", "uniform (CSR)", &u);
     common::report("ablation.sampler", "naive (DyGLib history copies)", &nv);
@@ -141,4 +153,38 @@ fn main() {
         "ablation.literal | speedup {:.2}x on a 1.4MB batch tensor",
         common::mean(&perelem) / common::mean(&bulk).max(1e-12)
     );
+
+    // 5. Serial vs prefetch batch materialization on the wiki surrogate
+    //    (tgb_link "val" recipe: eval negatives -> dedup -> unique
+    //    lookup, fully stateless, batch size 200). The consumer does no
+    //    model work here, so this measures raw materialization
+    //    throughput; the speedup target is >= 1.5x at 4 workers.
+    let wiki = gen::by_name("wiki", scale, 42).unwrap();
+    let view = wiki.full();
+    let serial = common::time_runs(1, 3, || {
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate("val").unwrap();
+        let mut l = DGDataLoader::new(view.clone(), BatchBy::Events(200), &mut m).unwrap();
+        l.collect_all().unwrap().len()
+    });
+    common::report("ablation.prefetch", "serial loader (baseline)", &serial);
+    for workers in [1usize, 2, 4] {
+        let secs = common::time_runs(1, 3, || {
+            let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+            m.activate("val").unwrap();
+            let mut l = PrefetchLoader::new(
+                view.clone(),
+                BatchBy::Events(200),
+                &mut m,
+                PrefetchConfig::default().with_workers(workers).with_queue_depth(2 * workers),
+            )
+            .unwrap();
+            l.collect_all().unwrap().len()
+        });
+        common::report("ablation.prefetch", &format!("prefetch workers={workers}"), &secs);
+        println!(
+            "ablation.prefetch | speedup vs serial at {workers} workers: {:.2}x",
+            common::mean(&serial) / common::mean(&secs).max(1e-12)
+        );
+    }
 }

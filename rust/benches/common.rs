@@ -1,6 +1,9 @@
 //! Shared bench harness (criterion is unavailable offline; this provides
 //! warmup + repeated timing with mean/std reporting in a stable format).
 
+// Included via `#[path]` by every bench; not all benches use every item.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Time `f` over `reps` runs after `warmup` runs; returns per-run secs.

@@ -7,10 +7,11 @@ use crate::coordinator::targets;
 use crate::error::{Result, TgmError};
 use crate::graph::{DGraph, Task, TemporalAdjacency};
 use crate::hooks::batch::attr;
-use crate::loader::{BatchBy, DGDataLoader};
+use crate::loader::{BatchBy, DGDataLoader, PrefetchConfig, PrefetchLoader};
 use crate::models::{EdgeBank, PersistentGraphForecast};
 use crate::util::stats;
 use crate::util::Tensor;
+use std::sync::Arc;
 
 use super::trainer::Pipeline;
 
@@ -90,8 +91,17 @@ impl Pipeline<'_> {
 
         let t_start = std::time::Instant::now();
         let mut rrs = Vec::new();
-        let mut loader =
-            DGDataLoader::new(view, by, &mut self.manager)?.with_event_cap(profile.b);
+        // The val recipe (eval negatives -> dedup -> unique lookup) is
+        // fully stateless, so the entire materialization overlaps with
+        // predict/update execution on the worker pool.
+        let mut loader = PrefetchLoader::new(
+            view,
+            by,
+            &mut self.manager,
+            PrefetchConfig::default()
+                .with_workers(self.cfg.prefetch_workers)
+                .with_event_cap(profile.b),
+        )?;
         loop {
             let t_load = std::time::Instant::now();
             let Some(batch) = loader.next() else { break };
@@ -117,6 +127,9 @@ impl Pipeline<'_> {
                 self.profiler.record("update_execute", || self.runtime.run("update", &upd))?;
             }
         }
+        let pstats = loader.stats();
+        drop(loader);
+        self.profiler.add_overlap(pstats.worker_busy, pstats.consumer_blocked);
         self.drain_hook_timings_pub();
         Ok(EvalReport {
             mrr: Some(stats::mean(&rrs)),
@@ -449,9 +462,9 @@ pub fn evaluate_edgebank(
     );
 
     let mut mgr = crate::hooks::HookManager::new();
-    mgr.register(
+    mgr.register_stateless(
         "val",
-        Box::new(crate::hooks::negatives::EvalNegativeSampler::new(
+        Arc::new(crate::hooks::negatives::EvalNegativeSampler::new(
             DstRange::InferFromData,
             eval_negatives,
             seed,
@@ -492,7 +505,7 @@ pub fn evaluate_persistent_graph(
 ) -> Result<EvalReport> {
     let t0 = std::time::Instant::now();
     let mut mgr = crate::hooks::HookManager::new();
-    mgr.register("val", Box::new(crate::hooks::analytics::DegreeStatsHook));
+    mgr.register_stateless("val", Arc::new(crate::hooks::analytics::DegreeStatsHook));
     mgr.activate("val")?;
     let mut loader = DGDataLoader::new(view.clone(), BatchBy::Time(granularity), &mut mgr)?;
     let mut pf = PersistentGraphForecast::new();

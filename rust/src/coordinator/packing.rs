@@ -581,7 +581,7 @@ mod tests {
     use super::*;
     use crate::graph::{EdgeEvent, GraphStorage};
     use crate::hooks::{HookContext, SamplerConfig};
-    use crate::hooks::hook::Hook;
+    use crate::hooks::hook::{Hook, StatelessHook};
 
     fn profile() -> Profile {
         Profile {
@@ -641,7 +641,7 @@ mod tests {
         let st = storage();
         let p = profile();
         let cfg = PackConfig::for_model("tgn_link", &p).unwrap();
-        let ctx = HookContext { storage: &st, key: "train" };
+        let ctx = HookContext::new(&st, "train");
 
         let mut b = batch(&st, 10..13); // 3 real edges < B=4
         b.set(attr::NEGATIVES, Tensor::i32(vec![5, 6, 7], &[3]).unwrap());
@@ -681,18 +681,18 @@ mod tests {
         let st = storage();
         let p = profile();
         let cfg = PackConfig::for_model("tgn_link", &p).unwrap();
-        let ctx = HookContext { storage: &st, key: "val" };
+        let ctx = HookContext::new(&st, "val");
         let mut b = batch(&st, 15..18);
         // Recipe steps: eval negatives -> dedup -> unique lookup.
-        let mut h1 = crate::hooks::negatives::EvalNegativeSampler::new(
+        let h1 = crate::hooks::negatives::EvalNegativeSampler::new(
             crate::hooks::DstRange::Range(4, 8),
             2,
             1,
         );
         h1.apply(&mut b, &ctx).unwrap();
-        let mut h2 = crate::hooks::dedup::DedupHook::new(false, true);
+        let h2 = crate::hooks::dedup::DedupHook::new(false, true);
         h2.apply(&mut b, &ctx).unwrap();
-        let mut h3 = crate::hooks::eval_sampler::UniqueRecencyLookup::new(3);
+        let h3 = crate::hooks::eval_sampler::UniqueRecencyLookup::new(3);
         h3.apply(&mut b, &ctx).unwrap();
 
         let nf = pack_node_feats(&st, &p).unwrap();
@@ -721,9 +721,9 @@ mod tests {
     fn snapshot_pack_embeds_adjacency() {
         let st = storage();
         let p = profile();
-        let ctx = HookContext { storage: &st, key: "train" };
+        let ctx = HookContext::new(&st, "train");
         let mut b = batch(&st, 0..10);
-        let mut hook = crate::hooks::analytics::SnapshotAdjHook;
+        let hook = crate::hooks::analytics::SnapshotAdjHook;
         hook.apply(&mut b, &ctx).unwrap();
         let nf = pack_node_feats(&st, &p).unwrap();
         let mut packed = pack_snapshot_adj(&b, &p, &nf).unwrap();

@@ -12,12 +12,36 @@ use std::time::{Duration, Instant};
 pub struct Profiler {
     totals: HashMap<&'static str, Duration>,
     started: Option<Instant>,
+    /// Prefetch overlap accounting: total worker-side materialization
+    /// time vs how much of it leaked into the consumer's critical path.
+    overlap_busy: Duration,
+    overlap_blocked: Duration,
 }
 
 impl Profiler {
     /// Fresh profiler.
     pub fn new() -> Profiler {
         Profiler::default()
+    }
+
+    /// Record one prefetch run: workers spent `busy` materializing, of
+    /// which only `blocked` stalled the consumer. The difference is hook
+    /// time hidden behind engine execution — the pipeline's win over the
+    /// serial loader.
+    pub fn add_overlap(&mut self, busy: Duration, blocked: Duration) {
+        self.overlap_busy += busy;
+        self.overlap_blocked += blocked;
+    }
+
+    /// `(worker_busy, consumer_blocked, hidden)` if any prefetch run was
+    /// recorded; `hidden = busy - blocked` clamped at zero.
+    pub fn overlap(&self) -> Option<(Duration, Duration, Duration)> {
+        if self.overlap_busy.is_zero() && self.overlap_blocked.is_zero() {
+            None
+        } else {
+            let hidden = self.overlap_busy.saturating_sub(self.overlap_blocked);
+            Some((self.overlap_busy, self.overlap_blocked, hidden))
+        }
     }
 
     /// Time a closure under a category.
@@ -75,6 +99,8 @@ impl Profiler {
     pub fn reset(&mut self) {
         self.totals.clear();
         self.started = None;
+        self.overlap_busy = Duration::ZERO;
+        self.overlap_blocked = Duration::ZERO;
     }
 }
 
@@ -83,6 +109,16 @@ impl std::fmt::Display for Profiler {
         writeln!(f, "{:<24} {:>10} {:>8}", "category", "seconds", "percent")?;
         for (name, secs, pct) in self.report() {
             writeln!(f, "{name:<24} {secs:>10.4} {pct:>7.2}%")?;
+        }
+        if let Some((busy, blocked, hidden)) = self.overlap() {
+            writeln!(
+                f,
+                "prefetch overlap: workers busy {:.4}s, consumer blocked {:.4}s, hidden {:.4}s ({:.0}% overlapped)",
+                busy.as_secs_f64(),
+                blocked.as_secs_f64(),
+                hidden.as_secs_f64(),
+                100.0 * hidden.as_secs_f64() / busy.as_secs_f64().max(1e-12)
+            )?;
         }
         Ok(())
     }
@@ -113,5 +149,23 @@ mod tests {
         assert_eq!(v, 42);
         p.reset();
         assert_eq!(p.total(), Duration::ZERO);
+    }
+
+    #[test]
+    fn overlap_clamps_and_resets() {
+        let mut p = Profiler::new();
+        assert!(p.overlap().is_none());
+        p.add_overlap(Duration::from_millis(100), Duration::from_millis(30));
+        p.add_overlap(Duration::from_millis(50), Duration::from_millis(90));
+        let (busy, blocked, hidden) = p.overlap().unwrap();
+        assert_eq!(busy, Duration::from_millis(150));
+        assert_eq!(blocked, Duration::from_millis(120));
+        assert_eq!(hidden, Duration::from_millis(30));
+        // Blocked beyond busy never goes negative.
+        p.add_overlap(Duration::ZERO, Duration::from_millis(500));
+        assert_eq!(p.overlap().unwrap().2, Duration::ZERO);
+        p.reset();
+        assert!(p.overlap().is_none());
+        assert!(format!("{p}").contains("category"));
     }
 }

@@ -18,10 +18,11 @@ use crate::coordinator::targets;
 use crate::error::{Result, TgmError};
 use crate::graph::{DGData, Splits, Task};
 use crate::hooks::recipes::{RecipeConfig, RecipeRegistry, SamplerKind, RECIPE_TGB_LINK};
-use crate::hooks::{DstRange, HookManager};
-use crate::loader::{BatchBy, DGDataLoader};
+use crate::hooks::{DstRange, HookEntry, HookManager};
+use crate::loader::{BatchBy, DGDataLoader, PrefetchConfig, PrefetchLoader};
 use crate::runtime::{ModelRuntime, XlaEngine};
 use crate::util::{Tensor, TimeGranularity};
+use std::sync::Arc;
 
 /// Pipeline configuration.
 #[derive(Debug, Clone)]
@@ -35,6 +36,10 @@ pub struct PipelineConfig {
     pub granularity: TimeGranularity,
     /// RNG seed for hooks.
     pub seed: u64,
+    /// Worker threads for the prefetching batch pipeline (0 = serial
+    /// materialization on the training thread). Output is identical for
+    /// any value; only the hook/compute overlap changes.
+    pub prefetch_workers: usize,
 }
 
 impl PipelineConfig {
@@ -45,6 +50,7 @@ impl PipelineConfig {
             sampler: SamplerKind::Recency,
             granularity: TimeGranularity::Day,
             seed: 0,
+            prefetch_workers: 2,
         }
     }
 }
@@ -94,15 +100,17 @@ impl<'e> Pipeline<'e> {
                 RecipeRegistry::build_with(RECIPE_TGB_LINK, &rc)?
             }
             (Task::LinkPrediction, ModelFamily::CtdgSketch) => {
-                // TPNet needs negatives but no neighborhoods.
+                // TPNet needs negatives but no neighborhoods; both
+                // samplers are stateless, so the full data path
+                // prefetches on workers.
                 let mut m = HookManager::new();
-                m.register(
+                m.register_stateless(
                     "train",
-                    Box::new(crate::hooks::negatives::NegativeSampler::new(rc.dst_range, rc.seed)),
+                    Arc::new(crate::hooks::negatives::NegativeSampler::new(rc.dst_range, rc.seed)),
                 );
-                m.register(
+                m.register_stateless(
                     "val",
-                    Box::new(crate::hooks::negatives::EvalNegativeSampler::new(
+                    Arc::new(crate::hooks::negatives::EvalNegativeSampler::new(
                         rc.dst_range,
                         rc.eval_negatives,
                         rc.seed,
@@ -118,33 +126,38 @@ impl<'e> Pipeline<'e> {
                     include_features: true,
                     seed_negatives: false,
                 };
-                let mk = || -> Box<dyn crate::hooks::Hook> {
+                let mk = || -> HookEntry {
                     match cfg.sampler {
-                        SamplerKind::Recency => {
-                            Box::new(crate::hooks::RecencySampler::new(sc.clone()))
-                        }
-                        SamplerKind::Uniform => {
-                            Box::new(crate::hooks::UniformSampler::new(sc.clone(), cfg.seed))
-                        }
-                        SamplerKind::Naive => Box::new(crate::hooks::NaiveSampler::new(sc.clone())),
+                        SamplerKind::Recency => HookEntry::Stateful(Box::new(
+                            crate::hooks::RecencySampler::new(sc.clone()),
+                        )),
+                        SamplerKind::Uniform => HookEntry::Stateless(Arc::new(
+                            crate::hooks::UniformSampler::new(sc.clone(), cfg.seed),
+                        )),
+                        SamplerKind::Naive => HookEntry::Stateless(Arc::new(
+                            crate::hooks::NaiveSampler::new(sc.clone()),
+                        )),
                     }
                 };
-                m.register("train", mk());
-                m.register("val", mk());
+                m.register_entry("train", mk());
+                m.register_entry("val", mk());
                 m
             }
             (_, ModelFamily::Snapshot) => {
                 let mut m = HookManager::new();
-                m.register("train", Box::new(crate::hooks::analytics::SnapshotAdjHook));
-                m.register("val", Box::new(crate::hooks::analytics::SnapshotAdjHook));
+                m.register_stateless("train", Arc::new(crate::hooks::analytics::SnapshotAdjHook));
+                m.register_stateless("val", Arc::new(crate::hooks::analytics::SnapshotAdjHook));
                 if data.task() == Task::LinkPrediction {
-                    m.register(
+                    m.register_stateless(
                         "train",
-                        Box::new(crate::hooks::negatives::NegativeSampler::new(rc.dst_range, rc.seed)),
+                        Arc::new(crate::hooks::negatives::NegativeSampler::new(
+                            rc.dst_range,
+                            rc.seed,
+                        )),
                     );
-                    m.register(
+                    m.register_stateless(
                         "val",
-                        Box::new(crate::hooks::negatives::EvalNegativeSampler::new(
+                        Arc::new(crate::hooks::negatives::EvalNegativeSampler::new(
                             rc.dst_range,
                             rc.eval_negatives,
                             rc.seed,
@@ -198,7 +211,15 @@ impl<'e> Pipeline<'e> {
         let horizon = self.cfg.granularity.seconds().unwrap_or(86_400);
 
         let mut losses = Vec::new();
-        let mut loader = DGDataLoader::new(view, by, &mut self.manager)?;
+        // Prefetch: stateless hooks run on workers and overlap with the
+        // engine execution below; the stateful phase is applied in batch
+        // order inside `next()`. Output is identical to the serial path.
+        let mut loader = PrefetchLoader::new(
+            view,
+            by,
+            &mut self.manager,
+            PrefetchConfig::default().with_workers(self.cfg.prefetch_workers),
+        )?;
         loop {
             let t_load = std::time::Instant::now();
             let Some(batch) = loader.next() else { break };
@@ -244,6 +265,9 @@ impl<'e> Pipeline<'e> {
                 losses.push(loss as f64);
             }
         }
+        let pstats = loader.stats();
+        drop(loader);
+        self.profiler.add_overlap(pstats.worker_busy, pstats.consumer_blocked);
         self.drain_hook_timings();
         Ok(EpochReport {
             mean_loss: crate::util::stats::mean(&losses),

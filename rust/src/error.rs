@@ -2,53 +2,61 @@
 //!
 //! All fallible public APIs return [`Result<T>`](crate::Result) with
 //! [`TgmError`]. Runtime (PJRT) errors from the `xla` crate are wrapped so
-//! callers never need a direct `xla` dependency.
-
-use thiserror::Error;
+//! callers never need a direct `xla` dependency. The display/`Error`
+//! plumbing is hand-written to keep the crate dependency-free offline.
 
 /// Library-wide error type.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum TgmError {
     /// The requested time range or granularity is invalid.
-    #[error("invalid time operation: {0}")]
     Time(String),
 
     /// A graph construction or query precondition was violated.
-    #[error("graph error: {0}")]
     Graph(String),
 
     /// A hook contract (requires/produces) could not be satisfied.
-    #[error("hook error: {0}")]
     Hook(String),
 
     /// A recipe's dependency graph is cyclic or has unmet requirements.
-    #[error("recipe error: {0}")]
     Recipe(String),
 
     /// Batch attribute missing or of the wrong type/shape.
-    #[error("batch error: {0}")]
     Batch(String),
 
     /// Dataset loading / parsing failure.
-    #[error("io error: {0}")]
     Io(String),
 
     /// Artifact manifest parsing or lookup failure.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Model configuration / state mismatch.
-    #[error("model error: {0}")]
     Model(String),
 
     /// Configuration error (CLI or experiment config).
-    #[error("config error: {0}")]
     Config(String),
 }
+
+impl std::fmt::Display for TgmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TgmError::Time(m) => write!(f, "invalid time operation: {m}"),
+            TgmError::Graph(m) => write!(f, "graph error: {m}"),
+            TgmError::Hook(m) => write!(f, "hook error: {m}"),
+            TgmError::Recipe(m) => write!(f, "recipe error: {m}"),
+            TgmError::Batch(m) => write!(f, "batch error: {m}"),
+            TgmError::Io(m) => write!(f, "io error: {m}"),
+            TgmError::Manifest(m) => write!(f, "manifest error: {m}"),
+            TgmError::Runtime(m) => write!(f, "runtime error: {m}"),
+            TgmError::Model(m) => write!(f, "model error: {m}"),
+            TgmError::Config(m) => write!(f, "config error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TgmError {}
 
 impl From<std::io::Error> for TgmError {
     fn from(e: std::io::Error) -> Self {

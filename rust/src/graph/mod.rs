@@ -8,7 +8,7 @@ pub mod events;
 pub mod storage;
 pub mod view;
 
-pub use adjacency::TemporalAdjacency;
+pub use adjacency::{AdjacencyCache, TemporalAdjacency};
 pub use data::{DGData, DatasetStats, Splits, Task};
 pub use discretize::{discretize, discretize_utg, ReduceOp};
 pub use events::{EdgeEvent, Event, NodeEvent, NodeId};

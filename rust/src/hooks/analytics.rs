@@ -14,7 +14,7 @@
 
 use crate::error::Result;
 use crate::hooks::batch::{attr, MaterializedBatch};
-use crate::hooks::hook::{Hook, HookContext};
+use crate::hooks::hook::{HookContext, StatelessHook};
 use crate::util::{Rng, Tensor};
 
 /// Multiply the symmetric-normalized batch adjacency against `x`:
@@ -49,22 +49,23 @@ fn batch_degrees(batch: &MaterializedBatch, n: usize) -> Vec<f32> {
     deg
 }
 
-/// DOS spectral-moment estimator (Hutchinson probes).
+/// DOS spectral-moment estimator (Hutchinson probes). Stateless: probes
+/// are drawn from a per-batch RNG (`seed ^ ctx.batch_seed`), so estimates
+/// are reproducible under out-of-order prefetch materialization.
 pub struct DosEstimateHook {
     num_moments: usize,
     num_probes: usize,
-    rng: Rng,
     seed: u64,
 }
 
 impl DosEstimateHook {
     /// Estimate `num_moments` moments with `num_probes` Rademacher probes.
     pub fn new(num_moments: usize, num_probes: usize, seed: u64) -> DosEstimateHook {
-        DosEstimateHook { num_moments, num_probes, rng: Rng::new(seed), seed }
+        DosEstimateHook { num_moments, num_probes, seed }
     }
 }
 
-impl Hook for DosEstimateHook {
+impl StatelessHook for DosEstimateHook {
     fn name(&self) -> &'static str {
         "dos_estimate"
     }
@@ -77,18 +78,19 @@ impl Hook for DosEstimateHook {
         vec![attr::DOS]
     }
 
-    fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
+    fn apply(&self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
         let n = ctx.storage.num_nodes();
         let deg = batch_degrees(batch, n);
         let dis: Vec<f32> = deg.iter().map(|&d| 1.0 / d.sqrt()).collect();
 
+        let mut rng = Rng::new(self.seed ^ ctx.batch_seed);
         let mut moments = vec![0.0f64; self.num_moments];
         let mut x = vec![0.0f32; n];
         let mut y = vec![0.0f32; n];
         for _ in 0..self.num_probes {
             // Rademacher probe z.
             let z: Vec<f32> =
-                (0..n).map(|_| if self.rng.bool(0.5) { 1.0 } else { -1.0 }).collect();
+                (0..n).map(|_| if rng.bool(0.5) { 1.0 } else { -1.0 }).collect();
             x.copy_from_slice(&z);
             for m in 0..self.num_moments {
                 normalized_matvec(&batch.src, &batch.dst, &dis, &x, &mut y);
@@ -104,16 +106,13 @@ impl Hook for DosEstimateHook {
         batch.set(attr::DOS, Tensor::f32(out, &[self.num_moments])?);
         Ok(())
     }
-
-    fn reset(&mut self) {
-        self.rng = Rng::new(self.seed);
-    }
 }
 
 /// Dense symmetric-normalized snapshot adjacency for DTDG models.
+/// Stateless and deterministic.
 pub struct SnapshotAdjHook;
 
-impl Hook for SnapshotAdjHook {
+impl StatelessHook for SnapshotAdjHook {
     fn name(&self) -> &'static str {
         "snapshot_adj"
     }
@@ -126,7 +125,7 @@ impl Hook for SnapshotAdjHook {
         vec![attr::SNAPSHOT_ADJ]
     }
 
-    fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
+    fn apply(&self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
         let n = ctx.storage.num_nodes();
         let deg = batch_degrees(batch, n);
         let dis: Vec<f32> = deg.iter().map(|&d| 1.0 / d.sqrt()).collect();
@@ -147,9 +146,10 @@ impl Hook for SnapshotAdjHook {
 }
 
 /// Cheap per-batch degree statistics (example custom analytics hook).
+/// Stateless and deterministic.
 pub struct DegreeStatsHook;
 
-impl Hook for DegreeStatsHook {
+impl StatelessHook for DegreeStatsHook {
     fn name(&self) -> &'static str {
         "degree_stats"
     }
@@ -162,7 +162,7 @@ impl Hook for DegreeStatsHook {
         vec!["degree_stats"]
     }
 
-    fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
+    fn apply(&self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
         let n = ctx.storage.num_nodes();
         let mut deg = vec![0.0f32; n];
         for (&s, &d) in batch.src.iter().zip(&batch.dst) {
@@ -207,9 +207,9 @@ mod tests {
     #[test]
     fn snapshot_adjacency_is_symmetric_normalized() {
         let st = storage(3);
-        let ctx = HookContext { storage: &st, key: "analytics" };
+        let ctx = HookContext::new(&st, "analytics");
         let mut b = batch(&[(0, 1)]);
-        let mut h = SnapshotAdjHook;
+        let h = SnapshotAdjHook;
         h.apply(&mut b, &ctx).unwrap();
         let a = b.get(attr::SNAPSHOT_ADJ).unwrap();
         assert_eq!(a.shape(), &[3, 3]);
@@ -231,9 +231,9 @@ mod tests {
         // For Â = D^{-1/2}(A+I)D^{-1/2}, tr(Â) = sum_i 1/deg_i; moment_1
         // = tr(Â)/n. Use enough probes for a tight estimate.
         let st = storage(4);
-        let ctx = HookContext { storage: &st, key: "analytics" };
+        let ctx = HookContext::new(&st, "analytics");
         let mut b = batch(&[(0, 1), (1, 2)]);
-        let mut h = DosEstimateHook::new(3, 600, 9);
+        let h = DosEstimateHook::new(3, 600, 9);
         h.apply(&mut b, &ctx).unwrap();
         let dos = b.get(attr::DOS).unwrap().as_f32().unwrap().to_vec();
         assert_eq!(dos.len(), 3);
@@ -244,13 +244,14 @@ mod tests {
     }
 
     #[test]
-    fn dos_is_deterministic_after_reset() {
+    fn dos_is_deterministic_per_batch_index() {
+        // Stateless contract: the estimate is a pure function of
+        // (batch, batch_index), with no reset needed in between.
         let st = storage(4);
-        let ctx = HookContext { storage: &st, key: "analytics" };
-        let mut h = DosEstimateHook::new(4, 8, 3);
+        let ctx = HookContext::for_batch(&st, "analytics", 5);
+        let h = DosEstimateHook::new(4, 8, 3);
         let mut b1 = batch(&[(0, 1), (2, 3)]);
         h.apply(&mut b1, &ctx).unwrap();
-        h.reset();
         let mut b2 = batch(&[(0, 1), (2, 3)]);
         h.apply(&mut b2, &ctx).unwrap();
         assert_eq!(
@@ -262,9 +263,9 @@ mod tests {
     #[test]
     fn degree_stats() {
         let st = storage(4);
-        let ctx = HookContext { storage: &st, key: "analytics" };
+        let ctx = HookContext::new(&st, "analytics");
         let mut b = batch(&[(0, 1), (0, 2), (0, 3)]);
-        let mut h = DegreeStatsHook;
+        let h = DegreeStatsHook;
         h.apply(&mut b, &ctx).unwrap();
         let s = b.get("degree_stats").unwrap().as_f32().unwrap().to_vec();
         assert_eq!(s[1], 3.0); // max degree (node 0)

@@ -10,11 +10,12 @@
 
 use crate::error::Result;
 use crate::hooks::batch::{attr, MaterializedBatch};
-use crate::hooks::hook::{Hook, HookContext};
+use crate::hooks::hook::{HookContext, StatelessHook};
 use crate::util::Tensor;
 use std::collections::HashMap;
 
 /// Deduplicate `src ++ dst [++ negatives] [++ eval_negatives]` seeds.
+/// Stateless: a pure function of the batch, safe on any prefetch worker.
 pub struct DedupHook {
     include_negatives: bool,
     include_eval_negatives: bool,
@@ -27,7 +28,7 @@ impl DedupHook {
     }
 }
 
-impl Hook for DedupHook {
+impl StatelessHook for DedupHook {
     fn name(&self) -> &'static str {
         "dedup"
     }
@@ -47,7 +48,7 @@ impl Hook for DedupHook {
         vec![attr::UNIQUE_NODES, attr::UNIQUE_INVERSE]
     }
 
-    fn apply(&mut self, batch: &mut MaterializedBatch, _ctx: &HookContext<'_>) -> Result<()> {
+    fn apply(&self, batch: &mut MaterializedBatch, _ctx: &HookContext<'_>) -> Result<()> {
         let mut seeds: Vec<i32> = Vec::new();
         seeds.extend(batch.src.iter().map(|&n| n as i32));
         seeds.extend(batch.dst.iter().map(|&n| n as i32));
@@ -95,14 +96,14 @@ mod tests {
     #[test]
     fn dedup_round_trips_every_seed() {
         let st = storage();
-        let ctx = HookContext { storage: &st, key: "val" };
+        let ctx = HookContext::new(&st, "val");
         let mut b = MaterializedBatch::new(0, 1);
         b.src = vec![0, 1, 0];
         b.dst = vec![2, 2, 3];
         b.ts = vec![0, 0, 0];
         b.edge_indices = vec![0, 0, 0];
         b.set(attr::NEGATIVES, Tensor::i32(vec![3, 0, 5], &[3]).unwrap());
-        let mut h = DedupHook::new(true, false);
+        let h = DedupHook::new(true, false);
         h.apply(&mut b, &ctx).unwrap();
 
         let unique = b.get(attr::UNIQUE_NODES).unwrap().as_i32().unwrap().to_vec();
@@ -120,7 +121,7 @@ mod tests {
     fn dedup_shrinks_eval_fanout() {
         // 4 positives x 8 candidates drawn from a pool of 3 -> huge shrink.
         let st = storage();
-        let ctx = HookContext { storage: &st, key: "val" };
+        let ctx = HookContext::new(&st, "val");
         let mut b = MaterializedBatch::new(0, 1);
         b.src = vec![0; 4];
         b.dst = vec![1; 4];
@@ -128,7 +129,7 @@ mod tests {
         b.edge_indices = vec![0; 4];
         let cands: Vec<i32> = (0..32).map(|i| 5 + (i % 3)).collect();
         b.set(attr::EVAL_NEGATIVES, Tensor::i32(cands, &[4, 8]).unwrap());
-        let mut h = DedupHook::new(false, true);
+        let h = DedupHook::new(false, true);
         h.apply(&mut b, &ctx).unwrap();
         let unique = b.get(attr::UNIQUE_NODES).unwrap();
         assert_eq!(unique.len(), 5); // {0, 1, 5, 6, 7}

@@ -12,9 +12,9 @@
 //! per-slot deltas against each slot's own prediction time.
 
 use crate::error::Result;
-use crate::graph::TemporalAdjacency;
+use crate::graph::AdjacencyCache;
 use crate::hooks::batch::{attr, MaterializedBatch};
-use crate::hooks::hook::{Hook, HookContext};
+use crate::hooks::hook::{HookContext, StatelessHook};
 use crate::util::Tensor;
 
 /// Unique-node attribute keys (consumed by the batch packer).
@@ -29,16 +29,18 @@ pub const UNIQUE_NBR2_MASK: &str = "unique_nbr2_mask";
 pub const UNIQUE_NBR2_FEATS: &str = "unique_nbr2_feats";
 
 /// Most-recent-K lookup for each unique batch node, cut at batch start.
+/// Stateless: the cut depends only on the batch window, and the CSR index
+/// is a shared per-storage cache — safe on any prefetch worker.
 pub struct UniqueRecencyLookup {
     num_neighbors: usize,
     two_hop: Option<usize>,
-    adj: Option<TemporalAdjacency>,
+    adj: AdjacencyCache,
 }
 
 impl UniqueRecencyLookup {
     /// Look up the K most recent interactions per unique node.
     pub fn new(num_neighbors: usize) -> UniqueRecencyLookup {
-        UniqueRecencyLookup { num_neighbors, two_hop: None, adj: None }
+        UniqueRecencyLookup { num_neighbors, two_hop: None, adj: AdjacencyCache::new() }
     }
 
     /// Also look up K2 hop-2 interactions per hop-1 slot (TGAT eval).
@@ -48,7 +50,7 @@ impl UniqueRecencyLookup {
     }
 }
 
-impl Hook for UniqueRecencyLookup {
+impl StatelessHook for UniqueRecencyLookup {
     fn name(&self) -> &'static str {
         "unique_recency_lookup"
     }
@@ -65,12 +67,8 @@ impl Hook for UniqueRecencyLookup {
         p
     }
 
-    fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
-        let stale = self.adj.as_ref().map(|a| !a.matches(ctx.storage)).unwrap_or(true);
-        if stale {
-            self.adj = Some(TemporalAdjacency::build(ctx.storage));
-        }
-        let adj = self.adj.as_ref().unwrap();
+    fn apply(&self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
+        let adj = self.adj.get(ctx.storage);
 
         let unique = batch.get(attr::UNIQUE_NODES)?.as_i32()?.to_vec();
         let u = unique.len();
@@ -129,10 +127,6 @@ impl Hook for UniqueRecencyLookup {
         batch.set(UNIQUE_NBR_FEATS, Tensor::f32(feats, &[u, k, d])?);
         Ok(())
     }
-
-    fn reset(&mut self) {
-        self.adj = None;
-    }
 }
 
 #[cfg(test)]
@@ -155,14 +149,14 @@ mod tests {
     #[test]
     fn lookup_is_recent_and_strictly_past() {
         let st = storage();
-        let ctx = HookContext { storage: &st, key: "val" };
+        let ctx = HookContext::new(&st, "val");
         let mut b = MaterializedBatch::new(20, 25);
         b.src = vec![0];
         b.dst = vec![3];
         b.ts = vec![20];
         b.edge_indices = vec![20];
         b.set(attr::UNIQUE_NODES, Tensor::i32(vec![0, 3, 5], &[3]).unwrap());
-        let mut h = UniqueRecencyLookup::new(4);
+        let h = UniqueRecencyLookup::new(4);
         h.apply(&mut b, &ctx).unwrap();
         let ts = b.get(UNIQUE_NBR_TS).unwrap().as_f32().unwrap();
         let mask = b.get(UNIQUE_NBR_MASK).unwrap().as_f32().unwrap();
@@ -184,14 +178,14 @@ mod tests {
     #[test]
     fn feats_follow_edges() {
         let st = storage();
-        let ctx = HookContext { storage: &st, key: "val" };
+        let ctx = HookContext::new(&st, "val");
         let mut b = MaterializedBatch::new(10, 12);
         b.src = vec![1];
         b.dst = vec![4];
         b.ts = vec![10];
         b.edge_indices = vec![10];
         b.set(attr::UNIQUE_NODES, Tensor::i32(vec![1], &[1]).unwrap());
-        let mut h = UniqueRecencyLookup::new(2);
+        let h = UniqueRecencyLookup::new(2);
         h.apply(&mut b, &ctx).unwrap();
         // Node 1's latest pre-10 interactions: t=7 and t=4; features == t.
         let f = b.get(UNIQUE_NBR_FEATS).unwrap().as_f32().unwrap();

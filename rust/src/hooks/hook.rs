@@ -1,30 +1,72 @@
-//! The hook trait (paper Definition 3.7).
+//! The hook traits (paper Definition 3.7), split by execution phase.
 //!
 //! A hook `φ_{R,P}` is a transformation on a materialized batch declaring
 //! a typed contract: the attributes it *requires* on input (`R`) and the
 //! attributes it *produces* (`P`). Recipes (ordered hook sets) are valid
 //! exactly when the contracts compose — validated by
 //! [`super::manager::HookManager`] via topological sort (Definition 3.8).
+//!
+//! TGM materializes batches on a pool of prefetch workers (see
+//! [`crate::loader::PrefetchLoader`]), which splits the hook formalism
+//! into two phases:
+//!
+//! * [`StatelessHook`] — transformations with no cross-batch state
+//!   (negative sampling, uniform/naive neighbor sampling, dedup,
+//!   analytics). They take `&self`, are `Send + Sync`, and may run on any
+//!   worker thread in any batch order. Randomized stateless hooks draw
+//!   from a per-batch RNG seeded by [`HookContext::batch_seed`] so the
+//!   stream depends only on the batch's position, never on which worker
+//!   (or in which order) the batch was materialized.
+//! * [`Hook`] — stateful transformations (the recency sampler's circular
+//!   buffers) that must observe batches in order. They take `&mut self`
+//!   and always run on the consumer side, after the worker phase.
+//!
+//! [`super::manager::HookManager::activate`] validates the combined
+//! recipe, then partitions the topological order into the two phases.
 
 use crate::error::Result;
 use crate::graph::GraphStorage;
 use crate::hooks::batch::MaterializedBatch;
 
-/// Execution context passed to hooks: shared immutable storage plus the
-/// split tag (hooks like negative samplers behave differently between
-/// train and eval).
+/// Execution context passed to hooks: shared immutable storage, the split
+/// tag (hooks like negative samplers behave differently between train and
+/// eval), and the batch's position in the iteration plus the RNG seed
+/// derived from it.
 pub struct HookContext<'a> {
     /// The storage backing the view being iterated.
     pub storage: &'a GraphStorage,
     /// Active manager key (e.g. "train", "val") — see
     /// [`super::manager::HookManager::activate`].
     pub key: &'a str,
+    /// Ordinal of this batch within the current iteration plan (0-based).
+    pub batch_index: usize,
+    /// Deterministic per-batch seed (`mix64(batch_index)`). Stateless
+    /// hooks that need randomness must fold this into their own seed so
+    /// out-of-order materialization reproduces the serial stream.
+    pub batch_seed: u64,
 }
 
-/// A typed transformation on a materialized batch.
+impl<'a> HookContext<'a> {
+    /// Context for the first batch of an iteration.
+    pub fn new(storage: &'a GraphStorage, key: &'a str) -> HookContext<'a> {
+        HookContext::for_batch(storage, key, 0)
+    }
+
+    /// Context for the batch at `batch_index` in the iteration plan.
+    pub fn for_batch(storage: &'a GraphStorage, key: &'a str, batch_index: usize) -> HookContext<'a> {
+        HookContext {
+            storage,
+            key,
+            batch_index,
+            batch_seed: crate::util::mix64(batch_index as u64),
+        }
+    }
+}
+
+/// A stateful, batch-order-dependent transformation (consumer phase).
 ///
-/// Implementations may carry state across batches (e.g. the recency
-/// sampler's circular buffer); `reset` clears it between epochs/splits.
+/// Implementations carry state across batches (e.g. the recency sampler's
+/// circular buffer); `reset` clears it between epochs/splits.
 pub trait Hook: Send {
     /// Stable name for diagnostics and profiling.
     fn name(&self) -> &'static str;
@@ -38,8 +80,29 @@ pub trait Hook: Send {
     /// Apply the transformation: `B|_{T,A} -> B|_{T, A ∪ P}`.
     fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()>;
 
-    /// Clear accumulated state (no-op for stateless hooks).
+    /// Clear accumulated state (between epochs / splits).
     fn reset(&mut self) {}
+}
+
+/// A stateless transformation safe to run on any prefetch worker.
+///
+/// No cross-batch state is allowed: the output must be a pure function of
+/// `(batch, storage, ctx)`. Internal memoization of per-storage derived
+/// structures (e.g. a CSR adjacency via
+/// [`crate::graph::AdjacencyCache`]) is fine — it changes cost, never
+/// output.
+pub trait StatelessHook: Send + Sync {
+    /// Stable name for diagnostics and profiling.
+    fn name(&self) -> &'static str;
+
+    /// Attributes the hook requires on the input batch (`R`).
+    fn requires(&self) -> Vec<&'static str>;
+
+    /// Attributes the hook produces (`P`).
+    fn produces(&self) -> Vec<&'static str>;
+
+    /// Apply the transformation: `B|_{T,A} -> B|_{T, A ∪ P}`.
+    fn apply(&self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()>;
 }
 
 /// Attributes the loader always materializes before hooks run (the base

@@ -1,28 +1,105 @@
-//! Hook registry and recipe validation (paper §4, Definition 3.8).
+//! Hook registry, recipe validation, and phase partitioning (paper §4,
+//! Definition 3.8).
 //!
 //! The [`HookManager`] owns hooks under string keys ("train", "val",
 //! "analytics", ...). Activating a key validates that the hook set forms a
 //! *recipe*: the dependency relation `φ_i → φ_j ⟺ P_i ∩ R_j ≠ ∅` must be
 //! acyclic and every requirement must be met by the base attributes or an
 //! earlier hook's products. Valid recipes are re-ordered topologically and
-//! executed transparently during data loading; per-hook wall-clock is
-//! recorded for the profiler (Table 11).
+//! then *partitioned into two phases*:
+//!
+//! * a **worker phase** of [`StatelessHook`]s whose requirements are
+//!   satisfiable without any stateful product — safe to run on prefetch
+//!   worker threads in any batch order (see
+//!   [`crate::loader::PrefetchLoader`]);
+//! * a **consumer phase** of stateful [`Hook`]s (plus any stateless hook
+//!   that depends on a stateful product, which is demoted to preserve
+//!   correctness) — always executed in batch order on the consumer side.
+//!
+//! Running both phases back-to-back on one thread (the serial loader) and
+//! running the worker phase remotely followed by the consumer phase
+//! locally (the prefetch loader) produce identical batches, because the
+//! combined `worker ++ consumer` sequence is itself a valid topological
+//! order and per-batch RNG seeds depend only on the batch index.
+//!
+//! Per-hook wall-clock is recorded for the profiler (Table 11) behind a
+//! shared mutex so worker threads contribute to the same totals.
 
 use crate::error::{Result, TgmError};
 use crate::hooks::batch::MaterializedBatch;
-use crate::hooks::hook::{Hook, HookContext, BASE_ATTRS};
+use crate::hooks::hook::{Hook, HookContext, StatelessHook, BASE_ATTRS};
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Keyed hook registry with recipe validation and execution.
+/// A registered hook: stateful (consumer-only) or stateless (worker-safe).
+pub enum HookEntry {
+    /// Batch-order-dependent hook; runs on the consumer side.
+    Stateful(Box<dyn Hook>),
+    /// Order-independent hook; may run on any prefetch worker.
+    Stateless(Arc<dyn StatelessHook>),
+}
+
+impl HookEntry {
+    /// Stable hook name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            HookEntry::Stateful(h) => h.name(),
+            HookEntry::Stateless(h) => h.name(),
+        }
+    }
+
+    /// Required attributes (`R`).
+    pub fn requires(&self) -> Vec<&'static str> {
+        match self {
+            HookEntry::Stateful(h) => h.requires(),
+            HookEntry::Stateless(h) => h.requires(),
+        }
+    }
+
+    /// Produced attributes (`P`).
+    pub fn produces(&self) -> Vec<&'static str> {
+        match self {
+            HookEntry::Stateful(h) => h.produces(),
+            HookEntry::Stateless(h) => h.produces(),
+        }
+    }
+
+    /// True for worker-safe hooks.
+    pub fn is_stateless(&self) -> bool {
+        matches!(self, HookEntry::Stateless(_))
+    }
+}
+
+/// A validated recipe order split into the two execution phases. Indices
+/// point into the registration list; concatenating `worker ++ consumer`
+/// yields a valid topological order of the full recipe.
+#[derive(Debug, Clone, Default)]
+pub struct PhasedOrder {
+    /// Stateless hooks whose inputs never depend on a stateful product.
+    pub worker: Vec<usize>,
+    /// Everything else, in topological order.
+    pub consumer: Vec<usize>,
+}
+
+type Timings = Arc<Mutex<HashMap<&'static str, Duration>>>;
+
+/// Keyed hook registry with recipe validation and phased execution.
 #[derive(Default)]
 pub struct HookManager {
-    groups: HashMap<String, Vec<Box<dyn Hook>>>,
-    /// Execution order per key, computed at activation.
-    orders: HashMap<String, Vec<usize>>,
+    groups: HashMap<String, Vec<HookEntry>>,
+    /// Phased execution order per key, resolved lazily and invalidated by
+    /// registration.
+    orders: HashMap<String, PhasedOrder>,
     active: Option<String>,
-    /// Cumulative wall-clock per hook name (for profiling).
-    timings: HashMap<&'static str, Duration>,
+    /// Cumulative wall-clock per hook name (shared with worker threads).
+    timings: Timings,
+    /// Ordinal handed to the next `run` call (serial iteration).
+    next_index: usize,
+    /// Bumped on every registration; lets long-lived snapshots (e.g. a
+    /// prefetch loader's worker pipeline) detect that the recipe changed
+    /// under them.
+    epoch: u64,
 }
 
 impl HookManager {
@@ -31,12 +108,31 @@ impl HookManager {
         HookManager::default()
     }
 
-    /// Register a hook under `key`. Invalidates any cached order for the
-    /// key (re-validated on next activation).
+    /// Register a stateful hook under `key`. Invalidates any cached order
+    /// for the key (re-validated lazily on the next activation or run).
     pub fn register(&mut self, key: impl Into<String>, hook: Box<dyn Hook>) {
+        self.register_entry(key, HookEntry::Stateful(hook));
+    }
+
+    /// Register a stateless (worker-safe) hook under `key`.
+    pub fn register_stateless(&mut self, key: impl Into<String>, hook: Arc<dyn StatelessHook>) {
+        self.register_entry(key, HookEntry::Stateless(hook));
+    }
+
+    /// Register a pre-wrapped entry under `key`.
+    pub fn register_entry(&mut self, key: impl Into<String>, entry: HookEntry) {
         let key = key.into();
         self.orders.remove(&key);
-        self.groups.entry(key).or_default().push(hook);
+        self.groups.entry(key).or_default().push(entry);
+        self.epoch += 1;
+    }
+
+    /// Monotonic counter of registrations. A snapshot taken at epoch `e`
+    /// (see [`HookManager::stateless_pipeline`]) is stale once this
+    /// differs from `e`; [`crate::loader::PrefetchLoader`] uses it to
+    /// fail loudly instead of silently skipping late-registered hooks.
+    pub fn registration_epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// Names of hooks registered under `key`, in registration order.
@@ -44,18 +140,26 @@ impl HookManager {
         self.groups.get(key).map(|hs| hs.iter().map(|h| h.name()).collect()).unwrap_or_default()
     }
 
-    /// Activate a key: validates the recipe (Definition 3.8) and caches
-    /// its topological execution order.
-    pub fn activate(&mut self, key: &str) -> Result<()> {
-        let hooks = self
-            .groups
-            .get(key)
-            .ok_or_else(|| TgmError::Hook(format!("no hooks registered under key `{key}`")))?;
+    /// Resolve and cache the phased order for `key` if missing.
+    fn ensure_order(&mut self, key: &str) -> Result<()> {
         if !self.orders.contains_key(key) {
-            let order = resolve_recipe_order(hooks, BASE_ATTRS)?;
-            self.orders.insert(key.to_string(), order);
+            let entries = self
+                .groups
+                .get(key)
+                .ok_or_else(|| TgmError::Hook(format!("no hooks registered under key `{key}`")))?;
+            let order = resolve_entry_order(entries, BASE_ATTRS)?;
+            let phased = partition_phases(entries, &order, BASE_ATTRS);
+            self.orders.insert(key.to_string(), phased);
         }
+        Ok(())
+    }
+
+    /// Activate a key: validates the recipe (Definition 3.8), caches its
+    /// phased execution order, and restarts batch numbering.
+    pub fn activate(&mut self, key: &str) -> Result<()> {
+        self.ensure_order(key)?;
         self.active = Some(key.to_string());
+        self.next_index = 0;
         Ok(())
     }
 
@@ -64,75 +168,241 @@ impl HookManager {
         self.active.as_deref()
     }
 
-    /// Run the active recipe over a batch.
-    pub fn run(&mut self, batch: &mut MaterializedBatch, storage: &crate::graph::GraphStorage) -> Result<()> {
+    /// Run the active recipe over a batch, assigning it the next serial
+    /// batch ordinal.
+    pub fn run(
+        &mut self,
+        batch: &mut MaterializedBatch,
+        storage: &crate::graph::GraphStorage,
+    ) -> Result<()> {
+        let index = self.next_index;
+        self.next_index += 1;
+        self.run_indexed(batch, storage, index)
+    }
+
+    /// Run both phases of the active recipe over the batch at `index` in
+    /// the iteration plan.
+    pub fn run_indexed(
+        &mut self,
+        batch: &mut MaterializedBatch,
+        storage: &crate::graph::GraphStorage,
+        index: usize,
+    ) -> Result<()> {
+        self.run_phases(batch, storage, index, true)
+    }
+
+    /// Run only the consumer (stateful) phase — the worker phase has
+    /// already been applied by a prefetch worker.
+    pub fn run_stateful_indexed(
+        &mut self,
+        batch: &mut MaterializedBatch,
+        storage: &crate::graph::GraphStorage,
+        index: usize,
+    ) -> Result<()> {
+        self.run_phases(batch, storage, index, false)
+    }
+
+    /// Execute the active recipe's phases over one batch. Re-resolves
+    /// the order lazily when a registration invalidated the cache (a
+    /// `register` under the active key no longer silently runs zero
+    /// hooks).
+    fn run_phases(
+        &mut self,
+        batch: &mut MaterializedBatch,
+        storage: &crate::graph::GraphStorage,
+        index: usize,
+        include_worker_phase: bool,
+    ) -> Result<()> {
         let key = self
             .active
             .clone()
             .ok_or_else(|| TgmError::Hook("no active hook key; call activate() first".into()))?;
-        let order = self.orders.get(&key).cloned().unwrap_or_default();
-        let hooks = self.groups.get_mut(&key).unwrap();
-        let ctx = HookContext { storage, key: &key };
-        for &i in &order {
-            let hook = &mut hooks[i];
-            let t0 = std::time::Instant::now();
-            hook.apply(batch, &ctx).map_err(|e| {
-                TgmError::Hook(format!("hook `{}` failed: {e}", hook.name()))
-            })?;
-            // Post-condition: everything the hook promised must exist.
-            for p in hook.produces() {
-                if !batch.has(p) {
-                    return Err(TgmError::Hook(format!(
-                        "hook `{}` declared `{p}` in produces() but did not set it",
-                        hook.name()
-                    )));
-                }
+        self.ensure_order(&key)?;
+        // The order is cloned (two small Vec<usize>) because `entries`
+        // below needs a disjoint `&mut` borrow of the groups map.
+        let phased = self.orders.get(&key).cloned().unwrap_or_default();
+        let ctx = HookContext::for_batch(storage, &key, index);
+        let entries = self.groups.get_mut(&key).ok_or_else(|| {
+            TgmError::Hook(format!("no hooks registered under key `{key}`"))
+        })?;
+        // Collect timings locally and fold under one lock per batch, so
+        // the shared mutex never serializes per-hook work.
+        let mut local: Vec<(&'static str, Duration)> =
+            Vec::with_capacity(phased.worker.len() + phased.consumer.len());
+        let phases: [&[usize]; 2] = if include_worker_phase {
+            [&phased.worker, &phased.consumer]
+        } else {
+            [&[], &phased.consumer]
+        };
+        for phase in phases {
+            for &i in phase {
+                let entry = &mut entries[i];
+                let name = entry.name();
+                let t0 = std::time::Instant::now();
+                let applied = match entry {
+                    HookEntry::Stateful(h) => h.apply(batch, &ctx),
+                    HookEntry::Stateless(h) => h.apply(batch, &ctx),
+                };
+                applied.map_err(|e| TgmError::Hook(format!("hook `{name}` failed: {e}")))?;
+                check_produces(batch, name, &entry.produces())?;
+                local.push((name, t0.elapsed()));
             }
-            *self.timings.entry(hook.name()).or_default() += t0.elapsed();
         }
+        fold_timings(&self.timings, &local);
         Ok(())
     }
 
-    /// Single API to clear the state of all hooks under all keys
-    /// (between epochs / splits — paper §4, "reset method").
+    /// Snapshot of the active key's worker phase for prefetch workers:
+    /// cheap to clone, `Send + Sync`, and records into the same timing
+    /// totals as the manager.
+    pub fn stateless_pipeline(&mut self) -> Result<StatelessPipeline> {
+        let key = self
+            .active
+            .clone()
+            .ok_or_else(|| TgmError::Hook("no active hook key; call activate() first".into()))?;
+        self.ensure_order(&key)?;
+        let phased = self.orders.get(&key).cloned().unwrap_or_default();
+        let entries = self.groups.get(&key).unwrap();
+        let hooks = phased
+            .worker
+            .iter()
+            .map(|&i| match &entries[i] {
+                HookEntry::Stateless(h) => Arc::clone(h),
+                HookEntry::Stateful(_) => {
+                    unreachable!("worker phase contains only stateless hooks")
+                }
+            })
+            .collect();
+        Ok(StatelessPipeline {
+            hooks,
+            key: Arc::from(key.as_str()),
+            timings: Arc::clone(&self.timings),
+        })
+    }
+
+    /// Single API to clear the state of all stateful hooks under all keys
+    /// (between epochs / splits — paper §4, "reset method"). Stateless
+    /// hooks carry no cross-batch state by contract. Batch numbering
+    /// restarts too, so per-batch RNG streams repeat each epoch.
     pub fn reset_state(&mut self) {
         for hooks in self.groups.values_mut() {
             for h in hooks.iter_mut() {
-                h.reset();
+                if let HookEntry::Stateful(h) = h {
+                    h.reset();
+                }
             }
         }
+        self.next_index = 0;
     }
 
-    /// Cumulative per-hook wall-clock (profiling, Table 11).
-    pub fn timings(&self) -> &HashMap<&'static str, Duration> {
-        &self.timings
+    /// Cumulative per-hook wall-clock (profiling, Table 11), including
+    /// time spent by prefetch workers.
+    pub fn timings(&self) -> HashMap<&'static str, Duration> {
+        self.timings.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Clear profiling counters.
     pub fn reset_timings(&mut self) {
-        self.timings.clear();
+        self.timings.lock().unwrap_or_else(|e| e.into_inner()).clear();
     }
 }
 
-/// Compute a valid execution order for a hook set (Kahn's algorithm over
-/// attribute availability), or explain why the set is not a recipe.
-pub fn resolve_recipe_order(hooks: &[Box<dyn Hook>], base: &[&str]) -> Result<Vec<usize>> {
-    let n = hooks.len();
+/// The worker-phase slice of an activated recipe: applies the stateless
+/// hooks to one batch, independent of every other batch.
+#[derive(Clone)]
+pub struct StatelessPipeline {
+    hooks: Vec<Arc<dyn StatelessHook>>,
+    key: Arc<str>,
+    timings: Timings,
+}
+
+impl StatelessPipeline {
+    /// Apply all worker-phase hooks to `batch` at plan position
+    /// `batch_index`.
+    pub fn run(
+        &self,
+        batch: &mut MaterializedBatch,
+        storage: &crate::graph::GraphStorage,
+        batch_index: usize,
+    ) -> Result<()> {
+        let ctx = HookContext::for_batch(storage, &self.key, batch_index);
+        let mut local: Vec<(&'static str, Duration)> = Vec::with_capacity(self.hooks.len());
+        for h in &self.hooks {
+            let t0 = std::time::Instant::now();
+            h.apply(batch, &ctx)
+                .map_err(|e| TgmError::Hook(format!("hook `{}` failed: {e}", h.name())))?;
+            check_produces(batch, h.name(), &h.produces())?;
+            local.push((h.name(), t0.elapsed()));
+        }
+        // One lock per batch keeps worker threads off each other's necks.
+        fold_timings(&self.timings, &local);
+        Ok(())
+    }
+
+    /// Number of worker-phase hooks.
+    pub fn len(&self) -> usize {
+        self.hooks.len()
+    }
+
+    /// True when no hook can be offloaded to workers.
+    pub fn is_empty(&self) -> bool {
+        self.hooks.is_empty()
+    }
+}
+
+/// Fold locally accumulated per-hook durations into the shared totals
+/// under a single lock acquisition.
+fn fold_timings(timings: &Timings, local: &[(&'static str, Duration)]) {
+    if local.is_empty() {
+        return;
+    }
+    let mut totals = timings.lock().unwrap_or_else(|e| e.into_inner());
+    for &(name, d) in local {
+        *totals.entry(name).or_default() += d;
+    }
+}
+
+/// Post-condition: everything the hook promised must exist on the batch.
+fn check_produces(
+    batch: &MaterializedBatch,
+    name: &'static str,
+    produces: &[&'static str],
+) -> Result<()> {
+    for p in produces {
+        if !batch.has(p) {
+            return Err(TgmError::Hook(format!(
+                "hook `{name}` declared `{p}` in produces() but did not set it"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// One hook's contract, extracted for order resolution.
+struct Contract {
+    name: &'static str,
+    requires: Vec<&'static str>,
+    produces: Vec<&'static str>,
+}
+
+/// Kahn's algorithm over attribute availability: compute a valid
+/// execution order, or explain why the set is not a recipe.
+fn resolve_contract_order(contracts: &[Contract], base: &[&str]) -> Result<Vec<usize>> {
+    let n = contracts.len();
     let mut available: Vec<&str> = base.to_vec();
     let mut placed = vec![false; n];
     let mut order = Vec::with_capacity(n);
 
     for _round in 0..n {
         let mut progressed = false;
-        for (i, h) in hooks.iter().enumerate() {
+        for (i, c) in contracts.iter().enumerate() {
             if placed[i] {
                 continue;
             }
-            let reqs = h.requires();
-            if reqs.iter().all(|r| available.contains(r)) {
+            if c.requires.iter().all(|r| available.contains(r)) {
                 placed[i] = true;
                 order.push(i);
-                for p in h.produces() {
+                for &p in &c.produces {
                     if !available.contains(&p) {
                         available.push(p);
                     }
@@ -150,11 +420,11 @@ pub fn resolve_recipe_order(hooks: &[Box<dyn Hook>], base: &[&str]) -> Result<Ve
 
     // Diagnose: name the stuck hooks and their missing requirements.
     let mut missing = Vec::new();
-    for (i, h) in hooks.iter().enumerate() {
+    for (i, c) in contracts.iter().enumerate() {
         if !placed[i] {
             let unmet: Vec<&str> =
-                h.requires().into_iter().filter(|r| !available.contains(r)).collect();
-            missing.push(format!("`{}` missing {{{}}}", h.name(), unmet.join(", ")));
+                c.requires.iter().copied().filter(|r| !available.contains(r)).collect();
+            missing.push(format!("`{}` missing {{{}}}", c.name, unmet.join(", ")));
         }
     }
     Err(TgmError::Recipe(format!(
@@ -163,13 +433,58 @@ pub fn resolve_recipe_order(hooks: &[Box<dyn Hook>], base: &[&str]) -> Result<Ve
     )))
 }
 
+/// Compute a valid execution order for a stateful hook set (kept for
+/// callers predating the phase split).
+pub fn resolve_recipe_order(hooks: &[Box<dyn Hook>], base: &[&str]) -> Result<Vec<usize>> {
+    let contracts: Vec<Contract> = hooks
+        .iter()
+        .map(|h| Contract { name: h.name(), requires: h.requires(), produces: h.produces() })
+        .collect();
+    resolve_contract_order(&contracts, base)
+}
+
+/// Compute a valid execution order for a mixed (stateful + stateless)
+/// hook set.
+pub fn resolve_entry_order(entries: &[HookEntry], base: &[&str]) -> Result<Vec<usize>> {
+    let contracts: Vec<Contract> = entries
+        .iter()
+        .map(|e| Contract { name: e.name(), requires: e.requires(), produces: e.produces() })
+        .collect();
+    resolve_contract_order(&contracts, base)
+}
+
+/// Split a topological order into worker/consumer phases. A stateless
+/// hook joins the worker phase only while its requirements are covered by
+/// the base attributes plus earlier worker products; once a stateful hook
+/// intervenes in its dependency chain it is demoted to the consumer phase
+/// (correctness over parallelism). Relative order inside each phase
+/// follows the input order, so `worker ++ consumer` stays topological.
+pub fn partition_phases(entries: &[HookEntry], order: &[usize], base: &[&str]) -> PhasedOrder {
+    let mut available: Vec<&str> = base.to_vec();
+    let mut phased = PhasedOrder::default();
+    for &i in order {
+        let e = &entries[i];
+        if e.is_stateless() && e.requires().iter().all(|r| available.contains(r)) {
+            for p in e.produces() {
+                if !available.contains(&p) {
+                    available.push(p);
+                }
+            }
+            phased.worker.push(i);
+        } else {
+            phased.consumer.push(i);
+        }
+    }
+    phased
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::hooks::batch::MaterializedBatch;
     use crate::util::Tensor;
 
-    /// Test hook producing `out` from `reqs`.
+    /// Stateful test hook producing `outs` from `reqs`.
     struct Fake {
         name: &'static str,
         reqs: Vec<&'static str>,
@@ -205,6 +520,41 @@ mod tests {
         }
         fn reset(&mut self) {
             self.applied = 0;
+        }
+    }
+
+    /// Stateless test hook stamping the batch seed into its output.
+    struct FakeStateless {
+        name: &'static str,
+        reqs: Vec<&'static str>,
+        outs: Vec<&'static str>,
+    }
+
+    impl FakeStateless {
+        fn shared(
+            name: &'static str,
+            reqs: &[&'static str],
+            outs: &[&'static str],
+        ) -> Arc<dyn StatelessHook> {
+            Arc::new(FakeStateless { name, reqs: reqs.to_vec(), outs: outs.to_vec() })
+        }
+    }
+
+    impl StatelessHook for FakeStateless {
+        fn name(&self) -> &'static str {
+            self.name
+        }
+        fn requires(&self) -> Vec<&'static str> {
+            self.reqs.clone()
+        }
+        fn produces(&self) -> Vec<&'static str> {
+            self.outs.clone()
+        }
+        fn apply(&self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
+            for o in &self.outs {
+                batch.set_custom(*o, Tensor::scalar_f32(ctx.batch_seed as f32));
+            }
+            Ok(())
         }
     }
 
@@ -308,5 +658,135 @@ mod tests {
         let st = storage();
         let mut b = MaterializedBatch::new(0, 1);
         assert!(m.run(&mut b, &st).is_err());
+    }
+
+    #[test]
+    fn register_under_active_key_re_resolves_lazily() {
+        // Regression: registering under the currently active key used to
+        // drop the cached order while leaving the key active, so the next
+        // run silently executed zero hooks.
+        let mut m = HookManager::new();
+        m.register("train", Fake::boxed("a", &[], &["A"]));
+        m.activate("train").unwrap();
+        m.register("train", Fake::boxed("b", &["A"], &["B"]));
+        let st = storage();
+        let mut batch = MaterializedBatch::new(0, 1);
+        m.run(&mut batch, &st).unwrap();
+        assert!(batch.has("A"), "pre-existing hook must still run");
+        assert!(batch.has("B"), "late-registered hook must run too");
+    }
+
+    #[test]
+    fn register_under_active_key_surfaces_invalid_recipes() {
+        let mut m = HookManager::new();
+        m.register("train", Fake::boxed("a", &[], &["A"]));
+        m.activate("train").unwrap();
+        m.register("train", Fake::boxed("broken", &["missing_attr"], &["B"]));
+        let st = storage();
+        let mut batch = MaterializedBatch::new(0, 1);
+        let err = m.run(&mut batch, &st).unwrap_err().to_string();
+        assert!(err.contains("missing_attr"), "{err}");
+    }
+
+    #[test]
+    fn stateless_hooks_partition_to_worker_phase() {
+        let mut m = HookManager::new();
+        m.register("train", Fake::boxed("stateful", &["S"], &["T"]));
+        m.register_stateless("train", FakeStateless::shared("sless", &[], &["S"]));
+        m.activate("train").unwrap();
+        let p = m.stateless_pipeline().unwrap();
+        assert_eq!(p.len(), 1, "only the stateless hook may run on workers");
+        let st = storage();
+        let mut b = MaterializedBatch::new(0, 1);
+        m.run(&mut b, &st).unwrap();
+        assert!(b.has("S") && b.has("T"));
+    }
+
+    #[test]
+    fn stateless_depending_on_stateful_is_demoted() {
+        let mut m = HookManager::new();
+        m.register("train", Fake::boxed("stateful", &[], &["T"]));
+        m.register_stateless("train", FakeStateless::shared("sless", &["T"], &["U"]));
+        m.activate("train").unwrap();
+        let p = m.stateless_pipeline().unwrap();
+        assert!(p.is_empty(), "a stateless hook behind a stateful one must not prefetch");
+        let st = storage();
+        let mut b = MaterializedBatch::new(0, 1);
+        m.run(&mut b, &st).unwrap();
+        assert!(b.has("T") && b.has("U"));
+    }
+
+    #[test]
+    fn split_execution_matches_combined_run() {
+        // Running the worker phase via the pipeline then the stateful
+        // phase via the manager must equal one combined run.
+        let build = || {
+            let mut m = HookManager::new();
+            m.register_stateless("train", FakeStateless::shared("w", &[], &["W"]));
+            m.register("train", Fake::boxed("c", &["W"], &["C"]));
+            m.activate("train").unwrap();
+            m
+        };
+        let st = storage();
+
+        let mut combined = build();
+        let mut b1 = MaterializedBatch::new(0, 1);
+        combined.run_indexed(&mut b1, &st, 3).unwrap();
+
+        let mut split = build();
+        let pipeline = split.stateless_pipeline().unwrap();
+        let mut b2 = MaterializedBatch::new(0, 1);
+        pipeline.run(&mut b2, &st, 3).unwrap();
+        split.run_stateful_indexed(&mut b2, &st, 3).unwrap();
+
+        assert_eq!(
+            b1.get("W").unwrap(),
+            b2.get("W").unwrap(),
+            "worker output must not depend on where it ran"
+        );
+        assert!(b2.has("C"));
+    }
+
+    #[test]
+    fn stateless_pipeline_is_send_sync_and_threadable() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<StatelessPipeline>();
+
+        let mut m = HookManager::new();
+        m.register_stateless("train", FakeStateless::shared("w", &[], &["W"]));
+        m.activate("train").unwrap();
+        let pipeline = m.stateless_pipeline().unwrap();
+        let st = std::sync::Arc::new(storage());
+
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let p = pipeline.clone();
+                let st = std::sync::Arc::clone(&st);
+                std::thread::spawn(move || {
+                    let mut b = MaterializedBatch::new(0, 1);
+                    p.run(&mut b, &st, i).unwrap();
+                    b.get("W").unwrap().as_f32().unwrap()[0]
+                })
+            })
+            .collect();
+        let outs: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Each thread saw its own batch's seed.
+        for (i, &o) in outs.iter().enumerate() {
+            assert_eq!(o, crate::util::mix64(i as u64) as f32, "batch {i}");
+        }
+    }
+
+    #[test]
+    fn timings_aggregate_across_pipeline_and_manager() {
+        let mut m = HookManager::new();
+        m.register_stateless("train", FakeStateless::shared("w", &[], &["W"]));
+        m.activate("train").unwrap();
+        let pipeline = m.stateless_pipeline().unwrap();
+        let st = storage();
+        let mut b = MaterializedBatch::new(0, 1);
+        pipeline.run(&mut b, &st, 0).unwrap();
+        assert!(m.timings().contains_key("w"), "worker-side time lands in the manager totals");
+        m.reset_timings();
+        assert!(m.timings().is_empty());
     }
 }

@@ -1,6 +1,7 @@
-//! Execution layer: materialized batches, the typed hook formalism, the
-//! hook manager with recipe validation, and the built-in hook library
-//! (samplers, negatives, dedup, analytics) — paper §3-4.
+//! Execution layer: materialized batches, the phased hook formalism
+//! (stateless worker hooks vs stateful consumer hooks), the hook manager
+//! with recipe validation and phase partitioning, and the built-in hook
+//! library (samplers, negatives, dedup, analytics) — paper §3-4.
 
 pub mod analytics;
 pub mod batch;
@@ -14,12 +15,12 @@ pub mod neighbor_naive;
 pub mod recipes;
 
 pub use batch::{attr, MaterializedBatch};
-pub use hook::{Hook, HookContext, BASE_ATTRS};
-pub use manager::{resolve_recipe_order, HookManager};
+pub use hook::{Hook, HookContext, StatelessHook, BASE_ATTRS};
+pub use manager::{resolve_recipe_order, HookEntry, HookManager, PhasedOrder, StatelessPipeline};
 pub use negatives::DstRange;
 pub use neighbor::{RecencySampler, SamplerConfig, UniformSampler};
 pub use neighbor_naive::NaiveSampler;
 pub use recipes::{
-    RecipeConfig, RecipeRegistry, SamplerKind, RECIPE_ANALYTICS_DOS, RECIPE_SNAPSHOT,
-    RECIPE_TGB_LINK, RECIPE_TGB_NODE,
+    sampler_entry, RecipeConfig, RecipeRegistry, SamplerKind, RECIPE_ANALYTICS_DOS,
+    RECIPE_SNAPSHOT, RECIPE_TGB_LINK, RECIPE_TGB_NODE,
 };

@@ -9,12 +9,18 @@
 //! * [`EvalNegativeSampler`] — `Q` negatives per positive for the TGB
 //!   one-vs-many evaluation protocol (Table 9), deterministic per edge so
 //!   every model ranks against the same candidates.
+//!
+//! Both are [`StatelessHook`]s: the training sampler draws from a
+//! per-batch RNG seeded by `seed ^ ctx.batch_seed`, so a batch
+//! materialized on any prefetch worker receives exactly the negatives the
+//! serial loader would have produced for that batch position.
 
 use crate::error::Result;
 use crate::graph::GraphStorage;
 use crate::hooks::batch::{attr, MaterializedBatch};
-use crate::hooks::hook::{Hook, HookContext};
+use crate::hooks::hook::{HookContext, StatelessHook};
 use crate::util::{Rng, Tensor};
+use std::sync::Mutex;
 
 /// Destination-id range negatives are drawn from.
 #[derive(Debug, Clone, Copy)]
@@ -40,21 +46,60 @@ fn resolve_range(range: DstRange, storage: &GraphStorage) -> (u32, u32) {
     }
 }
 
+/// Interior-mutable per-storage cache of the resolved id range, so
+/// `InferFromData` scans the destination column once instead of once per
+/// batch. Keyed by the storage's column address, counts, and time span:
+/// the address disambiguates distinct live storages that happen to share
+/// counts (e.g. two generator outputs at the same scale with different
+/// seeds); the counts + span make a false hit after allocator address
+/// reuse require an identically-shaped, identically-spanned graph —
+/// accepted as vanishingly unlikely for an O(E) rescan-avoidance cache.
+#[derive(Debug, Default)]
+struct RangeCache {
+    slot: Mutex<Option<(StorageKey, (u32, u32))>>,
+}
+
+type StorageKey = (usize, usize, usize, i64, i64);
+
+fn storage_key(storage: &GraphStorage) -> StorageKey {
+    (
+        storage.edge_ts().as_ptr() as usize,
+        storage.num_edges(),
+        storage.num_nodes(),
+        storage.start_time(),
+        storage.end_time(),
+    )
+}
+
+impl RangeCache {
+    fn get(&self, range: DstRange, storage: &GraphStorage) -> (u32, u32) {
+        let key = storage_key(storage);
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some((k, r)) = *slot {
+            if k == key {
+                return r;
+            }
+        }
+        let r = resolve_range(range, storage);
+        *slot = Some((key, r));
+        r
+    }
+}
+
 /// Training negative sampler: one negative per seed edge.
 pub struct NegativeSampler {
     range: DstRange,
     /// Probability of drawing a *historical* negative (a past destination
     /// of some edge) instead of a uniform one.
     historical_prob: f64,
-    rng: Rng,
     seed: u64,
-    cached_range: Option<(u32, u32)>,
+    cache: RangeCache,
 }
 
 impl NegativeSampler {
     /// Uniform negatives over `range`.
     pub fn new(range: DstRange, seed: u64) -> NegativeSampler {
-        NegativeSampler { range, historical_prob: 0.0, rng: Rng::new(seed), seed, cached_range: None }
+        NegativeSampler { range, historical_prob: 0.0, seed, cache: RangeCache::default() }
     }
 
     /// Mix in historical negatives with probability `p`.
@@ -64,7 +109,7 @@ impl NegativeSampler {
     }
 }
 
-impl Hook for NegativeSampler {
+impl StatelessHook for NegativeSampler {
     fn name(&self) -> &'static str {
         "negative_sampler"
     }
@@ -77,34 +122,28 @@ impl Hook for NegativeSampler {
         vec![attr::NEGATIVES]
     }
 
-    fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
-        let (lo, hi) = *self
-            .cached_range
-            .get_or_insert_with(|| resolve_range(self.range, ctx.storage));
+    fn apply(&self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
+        let (lo, hi) = self.cache.get(self.range, ctx.storage);
+        let mut rng = Rng::new(self.seed ^ ctx.batch_seed);
         let b = batch.num_edges();
         let mut negs = Vec::with_capacity(b);
         for i in 0..b {
-            let neg = if self.historical_prob > 0.0 && self.rng.bool(self.historical_prob) {
+            let neg = if self.historical_prob > 0.0 && rng.bool(self.historical_prob) {
                 // Historical: destination of a uniformly random past edge.
                 let past = ctx.storage.edge_range(ctx.storage.start_time(), batch.ts[i]);
                 if past.is_empty() {
-                    self.rng.range(lo as i64, hi as i64) as i32
+                    rng.range(lo as i64, hi as i64) as i32
                 } else {
-                    let j = past.start + self.rng.below(past.len() as u64) as usize;
+                    let j = past.start + rng.below(past.len() as u64) as usize;
                     ctx.storage.edge_dst()[j] as i32
                 }
             } else {
-                self.rng.range(lo as i64, hi as i64) as i32
+                rng.range(lo as i64, hi as i64) as i32
             };
             negs.push(neg);
         }
         batch.set(attr::NEGATIVES, Tensor::i32(negs, &[b])?);
         Ok(())
-    }
-
-    fn reset(&mut self) {
-        self.rng = Rng::new(self.seed);
-        self.cached_range = None;
     }
 }
 
@@ -115,17 +154,17 @@ pub struct EvalNegativeSampler {
     range: DstRange,
     num_negatives: usize,
     seed: u64,
-    cached_range: Option<(u32, u32)>,
+    cache: RangeCache,
 }
 
 impl EvalNegativeSampler {
     /// `Q` negatives per positive edge over `range`.
     pub fn new(range: DstRange, num_negatives: usize, seed: u64) -> EvalNegativeSampler {
-        EvalNegativeSampler { range, num_negatives, seed, cached_range: None }
+        EvalNegativeSampler { range, num_negatives, seed, cache: RangeCache::default() }
     }
 }
 
-impl Hook for EvalNegativeSampler {
+impl StatelessHook for EvalNegativeSampler {
     fn name(&self) -> &'static str {
         "eval_negative_sampler"
     }
@@ -138,10 +177,8 @@ impl Hook for EvalNegativeSampler {
         vec![attr::EVAL_NEGATIVES]
     }
 
-    fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
-        let (lo, hi) = *self
-            .cached_range
-            .get_or_insert_with(|| resolve_range(self.range, ctx.storage));
+    fn apply(&self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
+        let (lo, hi) = self.cache.get(self.range, ctx.storage);
         let b = batch.num_edges();
         let q = self.num_negatives;
         let mut negs = Vec::with_capacity(b * q);
@@ -162,10 +199,6 @@ impl Hook for EvalNegativeSampler {
         }
         batch.set(attr::EVAL_NEGATIVES, Tensor::i32(negs, &[b, q])?);
         Ok(())
-    }
-
-    fn reset(&mut self) {
-        self.cached_range = None;
     }
 }
 
@@ -195,8 +228,8 @@ mod tests {
     #[test]
     fn uniform_negatives_in_range() {
         let st = storage();
-        let ctx = HookContext { storage: &st, key: "train" };
-        let mut h = NegativeSampler::new(DstRange::Range(5, 9), 1);
+        let ctx = HookContext::new(&st, "train");
+        let h = NegativeSampler::new(DstRange::Range(5, 9), 1);
         let mut b = batch(&st);
         h.apply(&mut b, &ctx).unwrap();
         let negs = b.get(attr::NEGATIVES).unwrap().as_i32().unwrap();
@@ -207,19 +240,66 @@ mod tests {
     #[test]
     fn inferred_range_matches_data() {
         let st = storage();
-        let ctx = HookContext { storage: &st, key: "train" };
-        let mut h = NegativeSampler::new(DstRange::InferFromData, 1);
+        let ctx = HookContext::new(&st, "train");
+        let h = NegativeSampler::new(DstRange::InferFromData, 1);
         let mut b = batch(&st);
         h.apply(&mut b, &ctx).unwrap();
         let negs = b.get(attr::NEGATIVES).unwrap().as_i32().unwrap();
         assert!(negs.iter().all(|&n| (5..9).contains(&n)));
+        // A second apply hits the cached range and stays in bounds.
+        let mut b2 = batch(&st);
+        h.apply(&mut b2, &ctx).unwrap();
+        assert!(b2.get(attr::NEGATIVES).unwrap().as_i32().unwrap().iter().all(|&n| (5..9).contains(&n)));
+    }
+
+    #[test]
+    fn inferred_range_not_aliased_across_same_shape_storages() {
+        // Two storages with identical (num_edges, num_nodes) but
+        // different destination populations must not share a cached
+        // range (the cache keys on column identity, not just counts).
+        let mk = |base: u32| {
+            let edges = (0..50)
+                .map(|i| EdgeEvent {
+                    t: i as i64,
+                    src: (i % 3) as u32,
+                    dst: base + (i % 4) as u32,
+                    features: vec![],
+                })
+                .collect();
+            GraphStorage::from_events(edges, vec![], 9, None, None).unwrap()
+        };
+        let st_hi = mk(5); // destinations 5..=8
+        let st_lo = mk(1); // destinations 1..=4
+        let h = NegativeSampler::new(DstRange::InferFromData, 3);
+
+        let ctx_hi = HookContext::new(&st_hi, "train");
+        let mut b_hi = batch(&st_hi);
+        h.apply(&mut b_hi, &ctx_hi).unwrap();
+        assert!(b_hi
+            .get(attr::NEGATIVES)
+            .unwrap()
+            .as_i32()
+            .unwrap()
+            .iter()
+            .all(|&n| (5..9).contains(&n)));
+
+        let ctx_lo = HookContext::new(&st_lo, "train");
+        let mut b_lo = batch(&st_lo);
+        h.apply(&mut b_lo, &ctx_lo).unwrap();
+        assert!(b_lo
+            .get(attr::NEGATIVES)
+            .unwrap()
+            .as_i32()
+            .unwrap()
+            .iter()
+            .all(|&n| (1..5).contains(&n)));
     }
 
     #[test]
     fn historical_negatives_are_past_destinations() {
         let st = storage();
-        let ctx = HookContext { storage: &st, key: "train" };
-        let mut h = NegativeSampler::new(DstRange::AllNodes, 1).with_historical(1.0);
+        let ctx = HookContext::new(&st, "train");
+        let h = NegativeSampler::new(DstRange::AllNodes, 1).with_historical(1.0);
         let mut b = batch(&st);
         h.apply(&mut b, &ctx).unwrap();
         let negs = b.get(attr::NEGATIVES).unwrap().as_i32().unwrap();
@@ -228,15 +308,20 @@ mod tests {
     }
 
     #[test]
-    fn reset_restores_stream() {
+    fn negatives_depend_only_on_batch_index() {
+        // The stream is a pure function of (hook seed, batch index): two
+        // applies at the same index agree, regardless of history.
         let st = storage();
-        let ctx = HookContext { storage: &st, key: "train" };
-        let mut h = NegativeSampler::new(DstRange::AllNodes, 7);
+        let h = NegativeSampler::new(DstRange::AllNodes, 7);
+        let ctx3 = HookContext::for_batch(&st, "train", 3);
         let mut b1 = batch(&st);
-        h.apply(&mut b1, &ctx).unwrap();
-        h.reset();
+        h.apply(&mut b1, &ctx3).unwrap();
+        // Interleave an unrelated batch at another index.
+        let ctx9 = HookContext::for_batch(&st, "train", 9);
+        let mut other = batch(&st);
+        h.apply(&mut other, &ctx9).unwrap();
         let mut b2 = batch(&st);
-        h.apply(&mut b2, &ctx).unwrap();
+        h.apply(&mut b2, &ctx3).unwrap();
         assert_eq!(
             b1.get(attr::NEGATIVES).unwrap().as_i32().unwrap(),
             b2.get(attr::NEGATIVES).unwrap().as_i32().unwrap()
@@ -246,8 +331,8 @@ mod tests {
     #[test]
     fn eval_negatives_deterministic_and_exclude_positive() {
         let st = storage();
-        let ctx = HookContext { storage: &st, key: "val" };
-        let mut h = EvalNegativeSampler::new(DstRange::Range(5, 9), 20, 3);
+        let ctx = HookContext::new(&st, "val");
+        let h = EvalNegativeSampler::new(DstRange::Range(5, 9), 20, 3);
         let mut b1 = batch(&st);
         h.apply(&mut b1, &ctx).unwrap();
         let t1 = b1.get(attr::EVAL_NEGATIVES).unwrap();
@@ -257,10 +342,12 @@ mod tests {
         for (row, &d) in b1.dst.iter().enumerate() {
             assert!(n1[row * 20..(row + 1) * 20].iter().all(|&c| c != d as i32));
         }
-        // Re-running yields identical candidates (protocol determinism).
-        let mut h2 = EvalNegativeSampler::new(DstRange::Range(5, 9), 20, 3);
+        // Re-running yields identical candidates (protocol determinism),
+        // even at a different batch index: the stream is per-edge.
+        let h2 = EvalNegativeSampler::new(DstRange::Range(5, 9), 20, 3);
+        let ctx5 = HookContext::for_batch(&st, "val", 5);
         let mut b2 = batch(&st);
-        h2.apply(&mut b2, &ctx).unwrap();
+        h2.apply(&mut b2, &ctx5).unwrap();
         assert_eq!(n1, b2.get(attr::EVAL_NEGATIVES).unwrap().as_i32().unwrap());
     }
 }

@@ -26,9 +26,9 @@
 //! * the `*2` two-hop variants `[S, K, K2]` when `two_hop` is set.
 
 use crate::error::{Result, TgmError};
-use crate::graph::{GraphStorage, TemporalAdjacency};
+use crate::graph::{AdjacencyCache, GraphStorage};
 use crate::hooks::batch::{attr, MaterializedBatch};
-use crate::hooks::hook::{Hook, HookContext};
+use crate::hooks::hook::{Hook, HookContext, StatelessHook};
 use crate::util::{Rng, Tensor, Timestamp};
 
 /// Shared sampler configuration.
@@ -324,28 +324,25 @@ impl Hook for RecencySampler {
 // ---------------------------------------------------------------------
 
 /// Uniform temporal-neighborhood sampler over the CSR adjacency index.
+///
+/// Stateless: the CSR index is a shared per-storage cache and every batch
+/// draws from a fresh RNG seeded by `seed ^ ctx.batch_seed`, so prefetch
+/// workers reproduce the serial stream regardless of materialization
+/// order.
 pub struct UniformSampler {
     cfg: SamplerConfig,
-    adj: Option<TemporalAdjacency>,
-    rng: Rng,
+    adj: AdjacencyCache,
     seed: u64,
 }
 
 impl UniformSampler {
     /// Create with the given config and RNG seed.
     pub fn new(cfg: SamplerConfig, seed: u64) -> UniformSampler {
-        UniformSampler { cfg, adj: None, rng: Rng::new(seed), seed }
-    }
-
-    fn ensure_adj(&mut self, storage: &GraphStorage) {
-        let stale = self.adj.as_ref().map(|a| !a.matches(storage)).unwrap_or(true);
-        if stale {
-            self.adj = Some(TemporalAdjacency::build(storage));
-        }
+        UniformSampler { cfg, adj: AdjacencyCache::new(), seed }
     }
 }
 
-impl Hook for UniformSampler {
+impl StatelessHook for UniformSampler {
     fn name(&self) -> &'static str {
         "uniform_sampler"
     }
@@ -358,9 +355,9 @@ impl Hook for UniformSampler {
         produces_list(&self.cfg)
     }
 
-    fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
-        self.ensure_adj(ctx.storage);
-        let adj = self.adj.as_ref().unwrap();
+    fn apply(&self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
+        let adj = self.adj.get(ctx.storage);
+        let mut rng = Rng::new(self.seed ^ ctx.batch_seed);
         let (nodes, times) = collect_seeds(batch, self.cfg.seed_negatives)?;
         let s = nodes.len();
         let k = self.cfg.num_neighbors;
@@ -371,7 +368,7 @@ impl Hook for UniformSampler {
             let (nbrs, ts, eidx) = adj.neighbors_before(node, t);
             let avail = nbrs.len();
             for slot in 0..k.min(avail) {
-                let j = self.rng.below(avail as u64) as usize;
+                let j = rng.below(avail as u64) as usize;
                 hop1.write(row, slot, nbrs[j], ts[j], t, eidx[j]);
             }
         }
@@ -385,7 +382,7 @@ impl Hook for UniformSampler {
                     let (nbrs, ts, eidx) = adj.neighbors_before(n1, t1);
                     let avail = nbrs.len();
                     for slot in 0..k2.min(avail) {
-                        let j = self.rng.below(avail as u64) as usize;
+                        let j = rng.below(avail as u64) as usize;
                         h2.write(o, slot, nbrs[j], ts[j], t1, eidx[j]);
                     }
                 }
@@ -394,11 +391,6 @@ impl Hook for UniformSampler {
             h2
         });
         store_outputs(batch, s, hop1, hop2)
-    }
-
-    fn reset(&mut self) {
-        self.rng = Rng::new(self.seed);
-        self.adj = None;
     }
 }
 
@@ -442,7 +434,7 @@ mod tests {
     fn recency_first_batch_has_no_neighbors() {
         let st = storage();
         let mut h = RecencySampler::new(cfg());
-        let ctx = HookContext { storage: &st, key: "train" };
+        let ctx = HookContext::new(&st, "train");
         let mut b = batch_from(&st, 0..5);
         h.apply(&mut b, &ctx).unwrap();
         let mask = b.get(attr::NEIGHBOR_MASK).unwrap().as_f32().unwrap();
@@ -453,7 +445,7 @@ mod tests {
     fn recency_returns_most_recent_first() {
         let st = storage();
         let mut h = RecencySampler::new(cfg());
-        let ctx = HookContext { storage: &st, key: "train" };
+        let ctx = HookContext::new(&st, "train");
         let mut b1 = batch_from(&st, 0..10);
         h.apply(&mut b1, &ctx).unwrap();
         let mut b2 = batch_from(&st, 10..15);
@@ -477,7 +469,7 @@ mod tests {
     fn recency_never_leaks_current_batch() {
         let st = storage();
         let mut h = RecencySampler::new(cfg());
-        let ctx = HookContext { storage: &st, key: "train" };
+        let ctx = HookContext::new(&st, "train");
         let mut b = batch_from(&st, 0..20);
         h.apply(&mut b, &ctx).unwrap();
         // Single batch covering everything: all samples must be empty.
@@ -489,7 +481,7 @@ mod tests {
     fn recency_reset_clears_history() {
         let st = storage();
         let mut h = RecencySampler::new(cfg());
-        let ctx = HookContext { storage: &st, key: "train" };
+        let ctx = HookContext::new(&st, "train");
         let mut b1 = batch_from(&st, 0..10);
         h.apply(&mut b1, &ctx).unwrap();
         h.reset();
@@ -503,7 +495,7 @@ mod tests {
     fn two_hop_shapes_and_masks() {
         let st = storage();
         let mut h = RecencySampler::new(SamplerConfig { two_hop: Some(2), ..cfg() });
-        let ctx = HookContext { storage: &st, key: "train" };
+        let ctx = HookContext::new(&st, "train");
         let mut b1 = batch_from(&st, 0..10);
         h.apply(&mut b1, &ctx).unwrap();
         let mut b2 = batch_from(&st, 10..15);
@@ -526,9 +518,9 @@ mod tests {
     #[test]
     fn uniform_sampler_respects_time_and_determinism() {
         let st = storage();
-        let ctx = HookContext { storage: &st, key: "train" };
+        let ctx = HookContext::new(&st, "train");
         let run = |seed| {
-            let mut h = UniformSampler::new(cfg(), seed);
+            let h = UniformSampler::new(cfg(), seed);
             let mut b = batch_from(&st, 10..15);
             h.apply(&mut b, &ctx).unwrap();
             (
@@ -554,7 +546,7 @@ mod tests {
     fn seed_negatives_layout() {
         let st = storage();
         let mut h = RecencySampler::new(SamplerConfig { seed_negatives: true, ..cfg() });
-        let ctx = HookContext { storage: &st, key: "train" };
+        let ctx = HookContext::new(&st, "train");
         let mut b = batch_from(&st, 10..15);
         b.set(attr::NEGATIVES, Tensor::i32(vec![6; 5], &[5]).unwrap());
         // Warm the buffers first.
@@ -571,7 +563,7 @@ mod tests {
     fn feature_gather_matches_storage() {
         let st = storage();
         let mut h = RecencySampler::new(cfg());
-        let ctx = HookContext { storage: &st, key: "train" };
+        let ctx = HookContext::new(&st, "train");
         let mut b1 = batch_from(&st, 0..10);
         h.apply(&mut b1, &ctx).unwrap();
         let mut b2 = batch_from(&st, 10..12);

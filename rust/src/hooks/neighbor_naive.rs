@@ -12,22 +12,24 @@
 //! [`super::neighbor::RecencySampler`].
 
 use crate::error::Result;
-use crate::graph::TemporalAdjacency;
+use crate::graph::{AdjacencyCache, TemporalAdjacency};
 use crate::hooks::batch::{attr, MaterializedBatch};
-use crate::hooks::hook::{Hook, HookContext};
+use crate::hooks::hook::{HookContext, StatelessHook};
 use crate::hooks::neighbor::SamplerConfig;
 use crate::util::{Tensor, Timestamp};
 
-/// Per-seed history-copy sampler (the DyGLib pattern).
+/// Per-seed history-copy sampler (the DyGLib pattern). Stateless: the
+/// retrieval is a pure function of the batch and the shared CSR index,
+/// so it runs on any prefetch worker.
 pub struct NaiveSampler {
     cfg: SamplerConfig,
-    adj: Option<TemporalAdjacency>,
+    adj: AdjacencyCache,
 }
 
 impl NaiveSampler {
     /// Create with the given config.
     pub fn new(cfg: SamplerConfig) -> NaiveSampler {
-        NaiveSampler { cfg, adj: None }
+        NaiveSampler { cfg, adj: AdjacencyCache::new() }
     }
 
     /// DyGLib-style retrieval: copy the full pre-`t` history, then take
@@ -58,7 +60,7 @@ impl NaiveSampler {
     }
 }
 
-impl Hook for NaiveSampler {
+impl StatelessHook for NaiveSampler {
     fn name(&self) -> &'static str {
         "naive_sampler"
     }
@@ -85,13 +87,11 @@ impl Hook for NaiveSampler {
         p
     }
 
-    fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
-        // DyGLib builds its adjacency once over the *full* dataset.
-        let stale = self.adj.as_ref().map(|a| !a.matches(ctx.storage)).unwrap_or(true);
-        if stale {
-            self.adj = Some(TemporalAdjacency::build(ctx.storage));
-        }
-        let adj = self.adj.as_ref().unwrap();
+    fn apply(&self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
+        // DyGLib builds its adjacency once over the *full* dataset; the
+        // shared cache mirrors that while staying worker-safe.
+        let adj = self.adj.get(ctx.storage);
+        let adj = &*adj;
 
         let b = batch.num_edges();
         let mut nodes: Vec<u32> = Vec::with_capacity(b * 3);
@@ -166,16 +166,13 @@ impl Hook for NaiveSampler {
         }
         Ok(())
     }
-
-    fn reset(&mut self) {
-        self.adj = None;
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::{EdgeEvent, GraphStorage};
+    use crate::hooks::hook::Hook;
     use crate::hooks::neighbor::RecencySampler;
 
     fn storage() -> GraphStorage {
@@ -218,9 +215,9 @@ mod tests {
             include_features: true,
             seed_negatives: false,
         };
-        let mut naive = NaiveSampler::new(cfg.clone());
+        let naive = NaiveSampler::new(cfg.clone());
         let mut recency = RecencySampler::new(cfg);
-        let ctx = HookContext { storage: &st, key: "train" };
+        let ctx = HookContext::new(&st, "train");
 
         // Stream a few small batches; compare outputs on the last one.
         for (lo, hi) in [(0, 3), (3, 6), (6, 9)] {
@@ -256,8 +253,8 @@ mod tests {
             include_features: false,
             seed_negatives: false,
         };
-        let mut naive = NaiveSampler::new(cfg);
-        let ctx = HookContext { storage: &st, key: "train" };
+        let naive = NaiveSampler::new(cfg);
+        let ctx = HookContext::new(&st, "train");
         let mut b = batch_from(&st, 150..155);
         naive.apply(&mut b, &ctx).unwrap();
         let mask = b.get(attr::NEIGHBOR_MASK).unwrap().as_f32().unwrap();

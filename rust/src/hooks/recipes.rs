@@ -10,10 +10,11 @@ use crate::error::Result;
 use crate::hooks::analytics::{DosEstimateHook, SnapshotAdjHook};
 use crate::hooks::dedup::DedupHook;
 use crate::hooks::eval_sampler::UniqueRecencyLookup;
-use crate::hooks::manager::HookManager;
+use crate::hooks::manager::{HookEntry, HookManager};
 use crate::hooks::negatives::{DstRange, EvalNegativeSampler, NegativeSampler};
 use crate::hooks::neighbor::{RecencySampler, SamplerConfig, UniformSampler};
 use crate::hooks::neighbor_naive::NaiveSampler;
+use std::sync::Arc;
 
 /// Recipe identifiers (mirrors `tgm.constants` in the paper's Fig. 5).
 pub const RECIPE_TGB_LINK: &str = "tgb_link";
@@ -60,7 +61,11 @@ impl Default for RecipeConfig {
     }
 }
 
-fn sampler_boxed(cfg: &RecipeConfig, seed_negatives: bool) -> Box<dyn crate::hooks::hook::Hook> {
+/// Wire up the configured neighbor sampler as a phased hook entry: the
+/// recency sampler is stateful (circular buffers must see batches in
+/// order), while the uniform and naive samplers are stateless and safe to
+/// run on prefetch workers.
+pub fn sampler_entry(cfg: &RecipeConfig, seed_negatives: bool) -> HookEntry {
     let sc = SamplerConfig {
         num_neighbors: cfg.num_neighbors,
         two_hop: cfg.two_hop,
@@ -68,9 +73,11 @@ fn sampler_boxed(cfg: &RecipeConfig, seed_negatives: bool) -> Box<dyn crate::hoo
         seed_negatives,
     };
     match cfg.sampler {
-        SamplerKind::Recency => Box::new(RecencySampler::new(sc)),
-        SamplerKind::Uniform => Box::new(UniformSampler::new(sc, cfg.seed ^ 0xA5A5)),
-        SamplerKind::Naive => Box::new(NaiveSampler::new(sc)),
+        SamplerKind::Recency => HookEntry::Stateful(Box::new(RecencySampler::new(sc))),
+        SamplerKind::Uniform => {
+            HookEntry::Stateless(Arc::new(UniformSampler::new(sc, cfg.seed ^ 0xA5A5)))
+        }
+        SamplerKind::Naive => HookEntry::Stateless(Arc::new(NaiveSampler::new(sc))),
     }
 }
 
@@ -88,35 +95,42 @@ impl RecipeRegistry {
         let mut m = HookManager::new();
         match name {
             RECIPE_TGB_LINK => {
-                // train: negatives -> sampler(seeds incl. negatives)
-                m.register("train", Box::new(NegativeSampler::new(cfg.dst_range, cfg.seed)));
-                m.register("train", sampler_boxed(cfg, true));
+                // train: negatives (worker phase) -> sampler(seeds incl.
+                // negatives); the default recency sampler runs in the
+                // stateful consumer phase.
+                m.register_stateless(
+                    "train",
+                    Arc::new(NegativeSampler::new(cfg.dst_range, cfg.seed)),
+                );
+                m.register_entry("train", sampler_entry(cfg, true));
                 // val: deterministic one-vs-many negatives -> dedup ->
                 // one recency lookup per unique node (the Table-9
-                // optimization; the packer fans unique rows out to slots).
-                m.register(
+                // optimization; the packer fans unique rows out to
+                // slots). All three are stateless, so the whole val
+                // recipe prefetches on workers.
+                m.register_stateless(
                     "val",
-                    Box::new(EvalNegativeSampler::new(cfg.dst_range, cfg.eval_negatives, cfg.seed)),
+                    Arc::new(EvalNegativeSampler::new(cfg.dst_range, cfg.eval_negatives, cfg.seed)),
                 );
-                m.register("val", Box::new(DedupHook::new(false, true)));
+                m.register_stateless("val", Arc::new(DedupHook::new(false, true)));
                 let mut lookup = UniqueRecencyLookup::new(cfg.num_neighbors);
                 if let Some(k2) = cfg.two_hop {
                     lookup = lookup.with_two_hop(k2);
                 }
-                m.register("val", Box::new(lookup));
+                m.register_stateless("val", Arc::new(lookup));
             }
             RECIPE_TGB_NODE => {
                 // Node tasks: no negatives; sample src/dst neighborhoods.
-                m.register("train", sampler_boxed(cfg, false));
-                m.register("val", sampler_boxed(cfg, false));
+                m.register_entry("train", sampler_entry(cfg, false));
+                m.register_entry("val", sampler_entry(cfg, false));
             }
             RECIPE_SNAPSHOT => {
                 // DTDG: dense normalized snapshot adjacency per batch.
-                m.register("train", Box::new(SnapshotAdjHook));
-                m.register("val", Box::new(SnapshotAdjHook));
+                m.register_stateless("train", Arc::new(SnapshotAdjHook));
+                m.register_stateless("val", Arc::new(SnapshotAdjHook));
             }
             RECIPE_ANALYTICS_DOS => {
-                m.register("analytics", Box::new(DosEstimateHook::new(8, 16, cfg.seed)));
+                m.register_stateless("analytics", Arc::new(DosEstimateHook::new(8, 16, cfg.seed)));
             }
             other => {
                 return Err(crate::error::TgmError::Recipe(format!("unknown recipe `{other}`")))
@@ -206,6 +220,19 @@ mod tests {
     #[test]
     fn unknown_recipe_rejected() {
         assert!(RecipeRegistry::build("nonsense").is_err());
+    }
+
+    #[test]
+    fn tgb_link_phases_split_as_designed() {
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        // Train: the negative sampler prefetches on workers; the default
+        // recency sampler must stay in the serial consumer phase.
+        m.activate("train").unwrap();
+        assert_eq!(m.stateless_pipeline().unwrap().len(), 1);
+        // Val: negatives -> dedup -> unique lookup are all stateless, so
+        // the entire materialization overlaps with model execution.
+        m.activate("val").unwrap();
+        assert_eq!(m.stateless_pipeline().unwrap().len(), 3);
     }
 
     #[test]

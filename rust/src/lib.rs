@@ -6,8 +6,10 @@
 //!
 //! * **Layer 3 (this crate)** — the data/execution layers: immutable
 //!   time-sorted COO storage, lightweight graph views, vectorized
-//!   discretization, the typed hook/recipe system, CTDG/DTDG data
-//!   loaders, samplers, evaluation, and the training coordinator.
+//!   discretization, the phased hook/recipe system (stateless worker
+//!   hooks + stateful consumer hooks), CTDG/DTDG data loaders with a
+//!   deterministic parallel prefetch pipeline, samplers, evaluation,
+//!   and the training coordinator.
 //! * **Layer 2 (`python/compile`)** — JAX model definitions (TGAT, TGN,
 //!   GCN, GCLSTM, T-GCN, GraphMixer, DyGFormer, TPNet) AOT-lowered to HLO
 //!   text artifacts with the optimizer inside the training step.

@@ -1,8 +1,24 @@
 //! Data loading: unified CTDG/DTDG iteration (paper Definitions 3.3/3.4,
 //! Fig. 2).
 //!
-//! [`DGDataLoader`] turns a [`DGraph`] view into a stream of
-//! [`MaterializedBatch`]es:
+//! Iteration is split into two steps shared by both loaders:
+//!
+//! 1. [`plan_batches`] turns a [`DGraph`] view plus a [`BatchBy`] strategy
+//!    into an explicit list of [`BatchPlan`]s — the batch boundaries
+//!    (event ranges and time windows) are fully determined *before* any
+//!    batch is materialized. Planning is what makes parallel prefetch
+//!    deterministic: every worker sees the same plan, and per-batch RNG
+//!    seeds derive from the plan index.
+//! 2. [`materialize_window`] turns one plan entry into a seed
+//!    [`MaterializedBatch`] (columns + base attributes), after which the
+//!    hook phases run.
+//!
+//! [`DGDataLoader`] executes the plan serially on the calling thread;
+//! [`PrefetchLoader`] materializes plans on a worker pool and applies the
+//! stateful hook phase in order on receive, yielding byte-identical
+//! batches (see `prefetch` module docs).
+//!
+//! Strategies:
 //!
 //! * **By events** (CTDG): fixed-size batches of consecutive events,
 //!   independent of wall-clock time — the view's granularity is the
@@ -10,13 +26,13 @@
 //! * **By time** (DTDG): each batch spans exactly one bucket of a coarser
 //!   wall-clock granularity τ̂, so batch *duration* is fixed while edge
 //!   counts vary — snapshot iteration.
-//!
-//! The loader materializes seed columns, then runs the injected
-//! [`HookManager`]'s active recipe over each batch, so models receive all
-//! declared attributes transparently (paper Fig. 5).
+
+pub mod prefetch;
+
+pub use prefetch::{PrefetchConfig, PrefetchLoader, PrefetchStats};
 
 use crate::error::{Result, TgmError};
-use crate::graph::DGraph;
+use crate::graph::{DGraph, GraphStorage};
 use crate::hooks::batch::{attr, MaterializedBatch};
 use crate::hooks::manager::HookManager;
 use crate::util::{Tensor, TimeGranularity, Timestamp};
@@ -31,67 +47,187 @@ pub enum BatchBy {
     Time(TimeGranularity),
 }
 
-/// Loader over one view. Yields materialized batches with hooks applied.
+/// One planned batch: the storage event range `[lo, hi)` and the time
+/// window `[t0, t1)` it covers, plus its position in the iteration.
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    /// Ordinal within the plan (drives per-batch RNG seeds).
+    pub index: usize,
+    /// First storage event index (inclusive).
+    pub lo: usize,
+    /// Last storage event index (exclusive).
+    pub hi: usize,
+    /// Inclusive window start.
+    pub t0: Timestamp,
+    /// Exclusive window end.
+    pub t1: Timestamp,
+}
+
+impl BatchPlan {
+    /// Number of seed events in this batch.
+    pub fn num_edges(&self) -> usize {
+        self.hi - self.lo
+    }
+}
+
+/// Validate a strategy against a view (strategy errors surface at loader
+/// construction, before any planning).
+fn validate_strategy(view: &DGraph, by: BatchBy) -> Result<()> {
+    match by {
+        BatchBy::Events(b) => {
+            if b == 0 {
+                return Err(TgmError::Config("batch size must be positive".into()));
+            }
+            Ok(())
+        }
+        BatchBy::Time(g) => {
+            if !g.is_coarser_or_equal(&view.storage().granularity()) {
+                return Err(TgmError::Time(format!(
+                    "iteration granularity {} finer than native {}",
+                    g.as_str(),
+                    view.storage().granularity().as_str()
+                )));
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Bucket index range `[first, last)` the view spans at granularity `g`.
+/// A view containing a single timestamp `t` spans exactly one bucket
+/// (the `end_time() - 1` term keeps the exclusive bound from spilling
+/// into the next bucket).
+fn time_bucket_range(view: &DGraph, g: TimeGranularity) -> Result<(i64, i64)> {
+    let first = g.bucket_of(view.start_time(), 0)?;
+    let last = if view.end_time() > view.start_time() {
+        g.bucket_of(view.end_time() - 1, 0)? + 1
+    } else {
+        first
+    };
+    Ok((first, last))
+}
+
+/// Plan all batch boundaries for a view up front.
+///
+/// * `skip_empty` drops time buckets with zero edge events (DTDG
+///   snapshots may be empty); with it unset, one empty batch per empty
+///   bucket is planned.
+/// * `event_cap` splits oversized time buckets into consecutive chunks of
+///   at most `cap` events sharing the bucket's window (used to respect
+///   AOT batch envelopes). Event iteration is already fixed-size.
+pub fn plan_batches(
+    view: &DGraph,
+    by: BatchBy,
+    skip_empty: bool,
+    event_cap: usize,
+) -> Result<Vec<BatchPlan>> {
+    validate_strategy(view, by)?;
+    let cap = event_cap.max(1);
+    let storage = view.storage();
+    let mut plans: Vec<BatchPlan> = Vec::new();
+    match by {
+        BatchBy::Events(bsz) => {
+            let idx = view.edge_indices();
+            let ts = storage.edge_ts();
+            let mut lo = idx.start;
+            while lo < idx.end {
+                let hi = (lo + bsz).min(idx.end);
+                plans.push(BatchPlan {
+                    index: plans.len(),
+                    lo,
+                    hi,
+                    t0: ts[lo],
+                    t1: ts[hi - 1] + 1,
+                });
+                lo = hi;
+            }
+        }
+        BatchBy::Time(g) => {
+            let (first, last) = time_bucket_range(view, g)?;
+            for bkt in first..last {
+                let t0 = g.bucket_start(bkt, 0)?.max(view.start_time());
+                let t1 = g.bucket_start(bkt + 1, 0)?.min(view.end_time());
+                let r = storage.edge_range(t0, t1);
+                if r.is_empty() {
+                    if !skip_empty {
+                        plans.push(BatchPlan { index: plans.len(), lo: r.start, hi: r.start, t0, t1 });
+                    }
+                    continue;
+                }
+                let mut lo = r.start;
+                while lo < r.end {
+                    let hi = lo.saturating_add(cap).min(r.end);
+                    plans.push(BatchPlan { index: plans.len(), lo, hi, t0, t1 });
+                    lo = hi;
+                }
+            }
+        }
+    }
+    Ok(plans)
+}
+
+/// Materialize the seed columns and base attributes (`A₀`) for one
+/// planned batch. Pure function of (storage, plan) — safe on any thread.
+pub fn materialize_window(storage: &GraphStorage, plan: &BatchPlan) -> Result<MaterializedBatch> {
+    let (lo, hi) = (plan.lo, plan.hi);
+    let mut b = MaterializedBatch::new(plan.t0, plan.t1);
+    let n = hi - lo;
+    b.src.reserve(n);
+    b.dst.reserve(n);
+    b.ts.reserve(n);
+    b.edge_indices.reserve(n);
+    b.src.extend_from_slice(&storage.edge_src()[lo..hi]);
+    b.dst.extend_from_slice(&storage.edge_dst()[lo..hi]);
+    b.ts.extend_from_slice(&storage.edge_ts()[lo..hi]);
+    b.edge_indices.extend((lo as u32)..(hi as u32));
+    let ner = storage.node_event_range(plan.t0, plan.t1);
+    for i in ner {
+        b.node_events.push((storage.node_event_ts()[i], storage.node_event_ids()[i]));
+    }
+
+    // Base attributes (the A₀ recipes validate against).
+    b.set(attr::SRC, Tensor::i32(b.src.iter().map(|&x| x as i32).collect(), &[n])?);
+    b.set(attr::DST, Tensor::i32(b.dst.iter().map(|&x| x as i32).collect(), &[n])?);
+    b.set(attr::TIME, Tensor::f32(b.ts.iter().map(|&t| t as f32).collect(), &[n])?);
+    let d = storage.edge_feat_dim();
+    let feats = storage.edge_feats()[lo * d..hi * d].to_vec();
+    b.set(attr::EDGE_FEATS, Tensor::f32(feats, &[n, d])?);
+    Ok(b)
+}
+
+/// Serial loader over one view. Yields materialized batches with both
+/// hook phases applied on the calling thread.
 pub struct DGDataLoader<'a> {
     view: DGraph,
     by: BatchBy,
     manager: &'a mut HookManager,
     /// Skip batches with zero edge events (DTDG snapshots may be empty).
     skip_empty: bool,
-    /// Max edge events per yielded batch for time iteration; oversized
-    /// buckets are split into consecutive chunks sharing the window
-    /// (used to respect AOT batch envelopes).
+    /// Max edge events per yielded batch for time iteration.
     event_cap: usize,
-    cursor_event: usize,
-    cursor_bucket: i64,
-    end_bucket: i64,
-    /// Partially consumed bucket: (remaining range, window).
-    pending_bucket: Option<(std::ops::Range<usize>, Timestamp, Timestamp)>,
+    plans: Option<Vec<BatchPlan>>,
+    pos: usize,
 }
 
 impl<'a> DGDataLoader<'a> {
     /// Create a loader; validates the strategy against the view.
     pub fn new(view: DGraph, by: BatchBy, manager: &'a mut HookManager) -> Result<DGDataLoader<'a>> {
-        let (cursor_bucket, end_bucket) = match by {
-            BatchBy::Events(b) => {
-                if b == 0 {
-                    return Err(TgmError::Config("batch size must be positive".into()));
-                }
-                (0, 0)
-            }
-            BatchBy::Time(g) => {
-                if !g.is_coarser_or_equal(&view.storage().granularity()) {
-                    return Err(TgmError::Time(format!(
-                        "iteration granularity {} finer than native {}",
-                        g.as_str(),
-                        view.storage().granularity().as_str()
-                    )));
-                }
-                let first = g.bucket_of(view.start_time(), 0)?;
-                let last = if view.end_time() > view.start_time() {
-                    g.bucket_of(view.end_time() - 1, 0)? + 1
-                } else {
-                    first
-                };
-                (first, last)
-            }
-        };
+        validate_strategy(&view, by)?;
         Ok(DGDataLoader {
             view,
             by,
             manager,
             skip_empty: true,
             event_cap: usize::MAX,
-            cursor_event: 0,
-            cursor_bucket,
-            end_bucket,
-            pending_bucket: None,
+            plans: None,
+            pos: 0,
         })
     }
 
     /// Include empty snapshots (only meaningful for time iteration).
     pub fn with_empty_batches(mut self) -> Self {
         self.skip_empty = false;
+        self.plans = None;
         self
     }
 
@@ -99,6 +235,7 @@ impl<'a> DGDataLoader<'a> {
     /// `cap` events (same window on every chunk).
     pub fn with_event_cap(mut self, cap: usize) -> Self {
         self.event_cap = cap.max(1);
+        self.plans = None;
         self
     }
 
@@ -107,95 +244,55 @@ impl<'a> DGDataLoader<'a> {
         &self.view
     }
 
-    /// Number of batches this loader will yield (upper bound when
-    /// `skip_empty` is set).
+    /// Number of batches this loader will yield. Exact once the plan is
+    /// forced (after the first `next()`); before that it is an estimate
+    /// for time iteration — the bucket count, which over-counts when
+    /// `skip_empty` drops empty buckets and under-counts when
+    /// `with_event_cap` splits oversized ones.
     pub fn num_batches_hint(&self) -> usize {
+        if let Some(plans) = &self.plans {
+            return plans.len() - self.pos;
+        }
         match self.by {
             BatchBy::Events(b) => self.view.num_edges().div_ceil(b),
-            BatchBy::Time(_) => (self.end_bucket - self.cursor_bucket).max(0) as usize,
+            BatchBy::Time(g) => time_bucket_range(&self.view, g)
+                .map(|(first, last)| (last - first).max(0) as usize)
+                .unwrap_or(0),
         }
     }
 
-    /// Materialize seed columns for a window and run hooks.
-    fn materialize(&mut self, t0: Timestamp, t1: Timestamp, lo: usize, hi: usize) -> Result<MaterializedBatch> {
-        let storage = self.view.storage();
-        let mut b = MaterializedBatch::new(t0, t1);
-        let n = hi - lo;
-        b.src.reserve(n);
-        b.dst.reserve(n);
-        b.ts.reserve(n);
-        b.edge_indices.reserve(n);
-        b.src.extend_from_slice(&storage.edge_src()[lo..hi]);
-        b.dst.extend_from_slice(&storage.edge_dst()[lo..hi]);
-        b.ts.extend_from_slice(&storage.edge_ts()[lo..hi]);
-        b.edge_indices.extend((lo as u32)..(hi as u32));
-        let ner = storage.node_event_range(t0, t1);
-        for i in ner {
-            b.node_events.push((storage.node_event_ts()[i], storage.node_event_ids()[i]));
+    fn ensure_plans(&mut self) -> Result<()> {
+        if self.plans.is_none() {
+            self.plans = Some(plan_batches(&self.view, self.by, self.skip_empty, self.event_cap)?);
         }
-
-        // Base attributes (the A₀ recipes validate against).
-        b.set(attr::SRC, Tensor::i32(b.src.iter().map(|&x| x as i32).collect(), &[n])?);
-        b.set(attr::DST, Tensor::i32(b.dst.iter().map(|&x| x as i32).collect(), &[n])?);
-        b.set(attr::TIME, Tensor::f32(b.ts.iter().map(|&t| t as f32).collect(), &[n])?);
-        let d = storage.edge_feat_dim();
-        let feats = storage.edge_feats()[lo * d..hi * d].to_vec();
-        b.set(attr::EDGE_FEATS, Tensor::f32(feats, &[n, d])?);
-
-        let storage = std::sync::Arc::clone(storage);
-        self.manager.run(&mut b, &storage)?;
-        Ok(b)
+        Ok(())
     }
 
     /// Next batch, or `None` when exhausted.
     #[allow(clippy::should_implement_trait)]
     pub fn next(&mut self) -> Option<Result<MaterializedBatch>> {
-        match self.by {
-            BatchBy::Events(bsz) => {
-                let idx = self.view.edge_indices();
-                let lo = idx.start + self.cursor_event;
-                if lo >= idx.end {
-                    return None;
-                }
-                let hi = (lo + bsz).min(idx.end);
-                self.cursor_event += hi - lo;
-                let storage = self.view.storage();
-                let t0 = storage.edge_ts()[lo];
-                let t1 = storage.edge_ts()[hi - 1] + 1;
-                Some(self.materialize(t0, t1, lo, hi))
-            }
-            BatchBy::Time(g) => {
-                if let Some((rest, t0, t1)) = self.pending_bucket.take() {
-                    let hi = rest.start.saturating_add(self.event_cap).min(rest.end);
-                    if hi < rest.end {
-                        self.pending_bucket = Some((hi..rest.end, t0, t1));
-                    }
-                    return Some(self.materialize(t0, t1, rest.start, hi));
-                }
-                while self.cursor_bucket < self.end_bucket {
-                    let bkt = self.cursor_bucket;
-                    self.cursor_bucket += 1;
-                    let t0 = match g.bucket_start(bkt, 0) {
-                        Ok(t) => t.max(self.view.start_time()),
-                        Err(e) => return Some(Err(e)),
-                    };
-                    let t1 = match g.bucket_start(bkt + 1, 0) {
-                        Ok(t) => t.min(self.view.end_time()),
-                        Err(e) => return Some(Err(e)),
-                    };
-                    let r = self.view.storage().edge_range(t0, t1);
-                    if r.is_empty() && self.skip_empty {
-                        continue;
-                    }
-                    let hi = r.start.saturating_add(self.event_cap).min(r.end);
-                    if hi < r.end {
-                        self.pending_bucket = Some((hi..r.end, t0, t1));
-                    }
-                    return Some(self.materialize(t0, t1, r.start, hi));
-                }
-                None
-            }
+        if let Err(e) = self.ensure_plans() {
+            // Poison the plan so subsequent calls terminate the stream.
+            self.plans = Some(Vec::new());
+            return Some(Err(e));
         }
+        let plan = {
+            let plans = self.plans.as_ref().unwrap();
+            if self.pos >= plans.len() {
+                return None;
+            }
+            plans[self.pos].clone()
+        };
+        self.pos += 1;
+        let storage = std::sync::Arc::clone(self.view.storage());
+        let mut batch = match materialize_window(&storage, &plan) {
+            Ok(b) => b,
+            Err(e) => return Some(Err(e)),
+        };
+        if let Err(e) = self.manager.run_indexed(&mut batch, &storage, plan.index) {
+            return Some(Err(e));
+        }
+        Some(Ok(batch))
     }
 
     /// Drain all remaining batches (convenience for tests/benches).
@@ -284,6 +381,89 @@ mod tests {
         let all = l2.collect_all().unwrap();
         assert_eq!(all.len(), 4);
         assert_eq!(all[1].num_edges(), 0);
+        // Empty batches still carry (empty) base attributes.
+        assert_eq!(all[1].get(attr::SRC).unwrap().shape(), &[0]);
+    }
+
+    #[test]
+    fn event_cap_splits_oversized_buckets() {
+        // Two hour-buckets of 60 events each; cap 25 => 25+25+10 per
+        // bucket => 6 batches total, chunks share their bucket's window.
+        let d = data();
+        let mut m = RecipeRegistry::build(RECIPE_SNAPSHOT).unwrap();
+        m.activate("train").unwrap();
+        let mut loader = DGDataLoader::new(d.full(), BatchBy::Time(TimeGranularity::Hour), &mut m)
+            .unwrap()
+            .with_event_cap(25);
+        let batches = loader.collect_all().unwrap();
+        assert_eq!(batches.len(), 6);
+        assert_eq!(
+            batches.iter().map(|b| b.num_edges()).collect::<Vec<_>>(),
+            vec![25, 25, 10, 25, 25, 10]
+        );
+        assert!(batches.iter().all(|b| b.num_edges() <= 25));
+        // Chunks of one bucket share the window; totals are preserved.
+        assert_eq!(batches[0].start, batches[2].start);
+        assert_eq!(batches[0].end, batches[2].end);
+        assert_ne!(batches[2].start, batches[3].start);
+        assert_eq!(batches.iter().map(|b| b.num_edges()).sum::<usize>(), 120);
+    }
+
+    #[test]
+    fn single_timestamp_view_iterates_once() {
+        // All events share one timestamp: the `end_time() - 1` bucket
+        // math must span exactly one bucket, not zero and not two.
+        let edges = (0..10)
+            .map(|i| EdgeEvent {
+                t: 5000,
+                src: (i % 2) as u32,
+                dst: ((i + 1) % 2) as u32,
+                features: vec![],
+            })
+            .collect();
+        let st =
+            GraphStorage::from_events(edges, vec![], 2, None, Some(TimeGranularity::Second))
+                .unwrap();
+        let d = DGData::new(st, "point", Task::LinkPrediction);
+        let mut m = RecipeRegistry::build(RECIPE_SNAPSHOT).unwrap();
+        m.activate("train").unwrap();
+        let mut loader =
+            DGDataLoader::new(d.full(), BatchBy::Time(TimeGranularity::Hour), &mut m).unwrap();
+        let batches = loader.collect_all().unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].num_edges(), 10);
+        // The window is clamped to the view, inside hour bucket 1.
+        assert_eq!(batches[0].start, 5000);
+        assert_eq!(batches[0].end, 5001);
+    }
+
+    #[test]
+    fn empty_window_view_yields_no_batches() {
+        let d = data();
+        let view = d.full().slice(600, 600).unwrap();
+        let mut m = RecipeRegistry::build(RECIPE_SNAPSHOT).unwrap();
+        m.activate("train").unwrap();
+        let mut by_time =
+            DGDataLoader::new(view.clone(), BatchBy::Time(TimeGranularity::Hour), &mut m).unwrap();
+        assert!(by_time.next().is_none());
+        let mut by_events = DGDataLoader::new(view, BatchBy::Events(10), &mut m).unwrap();
+        assert!(by_events.next().is_none());
+    }
+
+    #[test]
+    fn planner_indices_are_dense_and_ordered() {
+        let d = data();
+        let plans =
+            plan_batches(&d.full(), BatchBy::Time(TimeGranularity::Hour), true, 25).unwrap();
+        for (i, p) in plans.iter().enumerate() {
+            assert_eq!(p.index, i);
+            assert!(p.lo <= p.hi);
+            assert!(p.t0 < p.t1);
+        }
+        // Consecutive chunks tile the event range.
+        for w in plans.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+        }
     }
 
     #[test]

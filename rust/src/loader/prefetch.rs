@@ -1,0 +1,479 @@
+//! Parallel, double-buffered batch materialization.
+//!
+//! [`PrefetchLoader`] executes the same [`super::BatchPlan`] the serial
+//! [`super::DGDataLoader`] would, but pipelines it:
+//!
+//! * a small pool of **worker threads** pulls plan indices from a shared
+//!   counter, materializes seed columns ([`super::materialize_window`])
+//!   and applies the *stateless* hook phase
+//!   ([`crate::hooks::StatelessPipeline`]), then pushes the batch into a
+//!   **bounded channel** (backpressure keeps memory proportional to the
+//!   queue depth, not the epoch);
+//! * the consumer reorders arrivals back into plan order (workers may
+//!   finish out of order) and applies the *stateful* hook phase via
+//!   [`crate::hooks::HookManager::run_stateful_indexed`], so hooks like
+//!   the recency sampler still observe batches strictly in order.
+//!
+//! **Determinism guarantee.** For any worker count, the yielded batches
+//! are byte-identical to the serial loader's: batch boundaries come from
+//! the shared plan, stateless hooks draw per-batch RNG streams seeded by
+//! the plan index (not a shared generator), and the stateful phase runs
+//! in plan order on one thread. The `ablation.prefetch` bench tracks the
+//! wall-clock win; the tests in this module pin the equality.
+
+use crate::error::{Result, TgmError};
+use crate::graph::{DGraph, GraphStorage};
+use crate::hooks::batch::MaterializedBatch;
+use crate::hooks::manager::{HookManager, StatelessPipeline};
+use crate::loader::{materialize_window, plan_batches, BatchBy, BatchPlan};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// One worker-to-consumer message: plan position plus the materialized
+/// batch (or the error that produced it).
+type WorkerMsg = (usize, Result<MaterializedBatch>);
+
+/// Prefetch pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PrefetchConfig {
+    /// Worker threads materializing batches. `0` degrades to a serial
+    /// in-place pipeline (no threads, same output).
+    pub workers: usize,
+    /// Bounded channel capacity: how many finished batches may wait
+    /// ahead of the consumer.
+    pub queue_depth: usize,
+    /// Skip empty time buckets (mirrors the serial loader's default).
+    pub skip_empty: bool,
+    /// Max events per time-iteration batch (see
+    /// [`super::DGDataLoader::with_event_cap`]).
+    pub event_cap: usize,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        PrefetchConfig { workers: 2, queue_depth: 4, skip_empty: true, event_cap: usize::MAX }
+    }
+}
+
+impl PrefetchConfig {
+    /// Set the worker count.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Set the bounded queue depth.
+    pub fn with_queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    /// Keep empty time buckets.
+    pub fn with_empty_batches(mut self) -> Self {
+        self.skip_empty = false;
+        self
+    }
+
+    /// Split oversized time buckets to at most `cap` events.
+    pub fn with_event_cap(mut self, cap: usize) -> Self {
+        self.event_cap = cap.max(1);
+        self
+    }
+}
+
+/// Wall-clock accounting for the overlap report (Table 11 extension).
+#[derive(Debug, Clone, Default)]
+pub struct PrefetchStats {
+    /// Total planned batches.
+    pub batches: usize,
+    /// Worker threads used (0 = serial fallback).
+    pub workers: usize,
+    /// Sum of worker time spent materializing + running stateless hooks.
+    /// With overlap, most of this hides behind consumer compute.
+    pub worker_busy: Duration,
+    /// Time the consumer actually waited on the channel — the part of
+    /// the materialization cost that leaked into the critical path.
+    pub consumer_blocked: Duration,
+}
+
+/// Loader that materializes batches on a worker pool and yields them in
+/// plan order with the stateful hook phase applied.
+pub struct PrefetchLoader<'a> {
+    manager: &'a mut HookManager,
+    storage: Arc<GraphStorage>,
+    plans: Arc<Vec<BatchPlan>>,
+    /// Serial fallback pipeline when `workers == 0`.
+    inline: Option<StatelessPipeline>,
+    rx: Option<Receiver<WorkerMsg>>,
+    /// Reorder buffer for batches that arrived ahead of plan order.
+    pending: HashMap<usize, Result<MaterializedBatch>>,
+    next_index: usize,
+    handles: Vec<thread::JoinHandle<()>>,
+    busy: Arc<Mutex<Duration>>,
+    blocked: Duration,
+    workers: usize,
+    /// Manager registration epoch at snapshot time; a mismatch on
+    /// `next()` means hooks were registered mid-iteration and the worker
+    /// snapshot no longer reflects the recipe.
+    epoch: u64,
+}
+
+impl<'a> PrefetchLoader<'a> {
+    /// Plan the iteration, snapshot the active recipe's stateless phase,
+    /// and launch the worker pool. The manager must be activated first
+    /// (same contract as [`super::DGDataLoader`] + `HookManager::run`).
+    pub fn new(
+        view: DGraph,
+        by: BatchBy,
+        manager: &'a mut HookManager,
+        cfg: PrefetchConfig,
+    ) -> Result<PrefetchLoader<'a>> {
+        let plans = Arc::new(plan_batches(&view, by, cfg.skip_empty, cfg.event_cap)?);
+        let pipeline = manager.stateless_pipeline()?;
+        let epoch = manager.registration_epoch();
+        let storage = Arc::clone(view.storage());
+        let busy = Arc::new(Mutex::new(Duration::ZERO));
+        let workers = if plans.is_empty() { 0 } else { cfg.workers };
+
+        let mut handles = Vec::new();
+        let rx = if workers == 0 {
+            None
+        } else {
+            let (tx, rx) = sync_channel::<WorkerMsg>(cfg.queue_depth.max(workers));
+            let counter = Arc::new(AtomicUsize::new(0));
+            for _ in 0..workers {
+                let plans = Arc::clone(&plans);
+                let storage = Arc::clone(&storage);
+                let pipeline = pipeline.clone();
+                let counter = Arc::clone(&counter);
+                let busy = Arc::clone(&busy);
+                let tx = tx.clone();
+                handles.push(thread::spawn(move || loop {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= plans.len() {
+                        break;
+                    }
+                    let t0 = Instant::now();
+                    let plan = &plans[i];
+                    let res = materialize_window(&storage, plan).and_then(|mut b| {
+                        pipeline.run(&mut b, &storage, plan.index)?;
+                        Ok(b)
+                    });
+                    if let Ok(mut d) = busy.lock() {
+                        *d += t0.elapsed();
+                    }
+                    // A closed channel means the consumer is gone: stop.
+                    if tx.send((i, res)).is_err() {
+                        break;
+                    }
+                }));
+            }
+            // `tx` drops here; only workers hold senders, so `recv`
+            // disconnects exactly when the pool drains or dies.
+            Some(rx)
+        };
+
+        Ok(PrefetchLoader {
+            manager,
+            storage,
+            plans,
+            inline: if workers == 0 { Some(pipeline) } else { None },
+            rx,
+            pending: HashMap::new(),
+            next_index: 0,
+            handles,
+            busy,
+            blocked: Duration::ZERO,
+            workers,
+            epoch,
+        })
+    }
+
+    /// Exact number of batches remaining.
+    pub fn num_batches_hint(&self) -> usize {
+        self.plans.len() - self.next_index
+    }
+
+    /// Overlap accounting so far (read after draining for epoch totals).
+    pub fn stats(&self) -> PrefetchStats {
+        PrefetchStats {
+            batches: self.plans.len(),
+            workers: self.workers,
+            worker_busy: *self.busy.lock().unwrap_or_else(|e| e.into_inner()),
+            consumer_blocked: self.blocked,
+        }
+    }
+
+    /// Next batch in plan order, or `None` when exhausted.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Option<Result<MaterializedBatch>> {
+        if self.next_index >= self.plans.len() {
+            return None;
+        }
+        // The worker pipeline is a point-in-time snapshot of the recipe;
+        // registering hooks mid-iteration would silently diverge from the
+        // serial loader, so fail loudly — and terminate the stream, like
+        // the serial loader's poisoned plan, so error-tolerant consumers
+        // cannot spin on a sticky error.
+        if self.manager.registration_epoch() != self.epoch {
+            self.next_index = self.plans.len();
+            return Some(Err(TgmError::Hook(
+                "hooks were registered while a prefetch iteration was in flight; \
+                 recreate the loader to pick them up"
+                    .into(),
+            )));
+        }
+        let idx = self.next_index;
+        self.next_index += 1;
+
+        // Serial fallback: materialize inline, no threads involved.
+        if self.inline.is_some() {
+            let plan = self.plans[idx].clone();
+            let mut batch = match materialize_window(&self.storage, &plan) {
+                Ok(b) => b,
+                Err(e) => return Some(Err(e)),
+            };
+            if let Some(pipeline) = &self.inline {
+                if let Err(e) = pipeline.run(&mut batch, &self.storage, plan.index) {
+                    return Some(Err(e));
+                }
+            }
+            if let Err(e) = self.manager.run_stateful_indexed(&mut batch, &self.storage, plan.index)
+            {
+                return Some(Err(e));
+            }
+            return Some(Ok(batch));
+        }
+
+        // Pull from the pool, reordering into plan order.
+        let t0 = Instant::now();
+        let res = loop {
+            if let Some(r) = self.pending.remove(&idx) {
+                break r;
+            }
+            let rx = self.rx.as_ref().expect("prefetch pool missing");
+            match rx.recv() {
+                Ok((i, r)) => {
+                    if i == idx {
+                        break r;
+                    }
+                    self.pending.insert(i, r);
+                }
+                Err(_) => {
+                    break Err(TgmError::Hook(
+                        "prefetch worker pool terminated unexpectedly (worker panic?)".into(),
+                    ))
+                }
+            }
+        };
+        self.blocked += t0.elapsed();
+
+        match res {
+            Ok(mut batch) => {
+                let plan_index = self.plans[idx].index;
+                if let Err(e) =
+                    self.manager.run_stateful_indexed(&mut batch, &self.storage, plan_index)
+                {
+                    return Some(Err(e));
+                }
+                Some(Ok(batch))
+            }
+            Err(e) => Some(Err(e)),
+        }
+    }
+
+    /// Drain all remaining batches.
+    pub fn collect_all(&mut self) -> Result<Vec<MaterializedBatch>> {
+        let mut out = Vec::new();
+        while let Some(b) = self.next() {
+            out.push(b?);
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for PrefetchLoader<'_> {
+    fn drop(&mut self) {
+        // Closing the receiver makes any blocked `send` fail, so workers
+        // exit promptly even mid-epoch; then reap them.
+        self.rx.take();
+        self.pending.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hooks::recipes::{RecipeConfig, RecipeRegistry, SamplerKind, RECIPE_TGB_LINK};
+    use crate::io::gen;
+    use crate::loader::DGDataLoader;
+    use crate::util::TimeGranularity;
+
+    /// Full structural equality: seed columns, windows, and every
+    /// attribute tensor byte-for-byte.
+    fn assert_batches_identical(serial: &[MaterializedBatch], prefetched: &[MaterializedBatch]) {
+        assert_eq!(serial.len(), prefetched.len(), "batch counts differ");
+        for (i, (a, b)) in serial.iter().zip(prefetched).enumerate() {
+            assert_eq!(a.start, b.start, "batch {i} window start");
+            assert_eq!(a.end, b.end, "batch {i} window end");
+            assert_eq!(a.src, b.src, "batch {i} src");
+            assert_eq!(a.dst, b.dst, "batch {i} dst");
+            assert_eq!(a.ts, b.ts, "batch {i} ts");
+            assert_eq!(a.edge_indices, b.edge_indices, "batch {i} edge indices");
+            assert_eq!(a.node_events, b.node_events, "batch {i} node events");
+            assert_eq!(a.attr_names(), b.attr_names(), "batch {i} attribute sets");
+            for name in a.attr_names() {
+                assert_eq!(
+                    a.get(name).unwrap(),
+                    b.get(name).unwrap(),
+                    "batch {i} attribute `{name}` differs"
+                );
+            }
+        }
+    }
+
+    fn serial_batches(key: &str, by: BatchBy, cap: usize) -> Vec<MaterializedBatch> {
+        let data = gen::by_name("wiki", 0.05, 1).unwrap();
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate(key).unwrap();
+        let mut l = DGDataLoader::new(data.full(), by, &mut m).unwrap().with_event_cap(cap);
+        l.collect_all().unwrap()
+    }
+
+    fn prefetch_batches(key: &str, by: BatchBy, cap: usize, workers: usize) -> Vec<MaterializedBatch> {
+        let data = gen::by_name("wiki", 0.05, 1).unwrap();
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate(key).unwrap();
+        let cfg = PrefetchConfig::default().with_workers(workers).with_event_cap(cap);
+        let mut l = PrefetchLoader::new(data.full(), by, &mut m, cfg).unwrap();
+        l.collect_all().unwrap()
+    }
+
+    #[test]
+    fn prefetch_matches_serial_for_event_batches() {
+        // "train" exercises the mixed pipeline: stateless negatives on
+        // workers + the stateful recency sampler on the consumer.
+        // "val" exercises an all-stateless pipeline.
+        let by = BatchBy::Events(100);
+        for key in ["train", "val"] {
+            let serial = serial_batches(key, by, usize::MAX);
+            assert!(serial.len() >= 4, "want a multi-batch run, got {}", serial.len());
+            for workers in [2, 4] {
+                let pre = prefetch_batches(key, by, usize::MAX, workers);
+                assert_batches_identical(&serial, &pre);
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_matches_serial_for_time_batches() {
+        let by = BatchBy::Time(TimeGranularity::Day);
+        for key in ["train", "val"] {
+            let serial = serial_batches(key, by, 150);
+            assert!(serial.len() >= 4, "want a multi-batch run, got {}", serial.len());
+            let pre = prefetch_batches(key, by, 150, 3);
+            assert_batches_identical(&serial, &pre);
+        }
+    }
+
+    #[test]
+    fn prefetch_matches_serial_with_uniform_sampler() {
+        // The uniform sampler is RNG-heavy and stateless: per-batch
+        // seeding must reproduce the serial draw order exactly.
+        let data = gen::by_name("wiki", 0.05, 2).unwrap();
+        let cfg = RecipeConfig { sampler: SamplerKind::Uniform, ..Default::default() };
+        let mut m1 = RecipeRegistry::build_with(RECIPE_TGB_LINK, &cfg).unwrap();
+        m1.activate("train").unwrap();
+        let mut l1 = DGDataLoader::new(data.full(), BatchBy::Events(64), &mut m1).unwrap();
+        let serial = l1.collect_all().unwrap();
+
+        let mut m2 = RecipeRegistry::build_with(RECIPE_TGB_LINK, &cfg).unwrap();
+        m2.activate("train").unwrap();
+        let mut l2 = PrefetchLoader::new(
+            data.full(),
+            BatchBy::Events(64),
+            &mut m2,
+            PrefetchConfig::default().with_workers(4).with_queue_depth(2),
+        )
+        .unwrap();
+        let pre = l2.collect_all().unwrap();
+        assert_batches_identical(&serial, &pre);
+    }
+
+    #[test]
+    fn zero_workers_is_a_serial_pipeline() {
+        let serial = serial_batches("val", BatchBy::Events(100), usize::MAX);
+        let pre = prefetch_batches("val", BatchBy::Events(100), usize::MAX, 0);
+        assert_batches_identical(&serial, &pre);
+    }
+
+    #[test]
+    fn stats_account_worker_time() {
+        let data = gen::by_name("wiki", 0.05, 1).unwrap();
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate("val").unwrap();
+        let mut l = PrefetchLoader::new(
+            data.full(),
+            BatchBy::Events(100),
+            &mut m,
+            PrefetchConfig::default().with_workers(2),
+        )
+        .unwrap();
+        let n = l.num_batches_hint();
+        let batches = l.collect_all().unwrap();
+        assert_eq!(batches.len(), n);
+        let stats = l.stats();
+        assert_eq!(stats.batches, n);
+        assert_eq!(stats.workers, 2);
+        assert!(stats.worker_busy > Duration::ZERO, "workers must have done the hook work");
+    }
+
+    #[test]
+    fn mid_iteration_registration_fails_loudly() {
+        use crate::hooks::analytics::DegreeStatsHook;
+        let data = gen::by_name("wiki", 0.05, 1).unwrap();
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate("val").unwrap();
+        let mut l = PrefetchLoader::new(
+            data.full(),
+            BatchBy::Events(100),
+            &mut m,
+            PrefetchConfig::default().with_workers(2),
+        )
+        .unwrap();
+        assert!(l.next().unwrap().is_ok());
+        // Registering under the active key invalidates the snapshot the
+        // workers are running; the loader must error, not silently skip
+        // the new hook.
+        l.manager.register_stateless("val", std::sync::Arc::new(DegreeStatsHook));
+        let err = l.next().unwrap().unwrap_err().to_string();
+        assert!(err.contains("prefetch iteration"), "{err}");
+        // The stream terminates (no sticky-error spin for tolerant consumers).
+        assert!(l.next().is_none());
+    }
+
+    #[test]
+    fn dropping_early_shuts_down_the_pool() {
+        let data = gen::by_name("wiki", 0.05, 1).unwrap();
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate("val").unwrap();
+        let mut l = PrefetchLoader::new(
+            data.full(),
+            BatchBy::Events(50),
+            &mut m,
+            // Tiny queue so workers are blocked on send when we bail.
+            PrefetchConfig::default().with_workers(2).with_queue_depth(1),
+        )
+        .unwrap();
+        let first = l.next().unwrap().unwrap();
+        assert!(first.num_edges() > 0);
+        drop(l); // must join cleanly without deadlock
+    }
+}

@@ -6,6 +6,6 @@ pub mod stats;
 pub mod tensor;
 pub mod time;
 
-pub use rng::Rng;
+pub use rng::{mix64, Rng};
 pub use tensor::{DType, Tensor, TensorData};
 pub use time::{infer_native_granularity, TimeGranularity, Timestamp};

@@ -20,6 +20,15 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// One SplitMix64 step: a stateless 64-bit mixer. Used to derive
+/// independent per-batch RNG seeds from a batch ordinal so that batches
+/// materialized out of order (prefetch workers) still draw the exact
+/// stream the serial loader would have (see `hooks::HookContext`).
+pub fn mix64(x: u64) -> u64 {
+    let mut state = x;
+    splitmix64(&mut state)
+}
+
 impl Rng {
     /// Create a generator from a 64-bit seed.
     pub fn new(seed: u64) -> Self {
@@ -147,6 +156,13 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mix64_is_deterministic_and_spreads() {
+        assert_eq!(mix64(0), mix64(0));
+        assert_ne!(mix64(0), mix64(1));
+        assert_ne!(mix64(1), mix64(2));
+    }
 
     #[test]
     fn deterministic_across_instances() {

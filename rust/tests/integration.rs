@@ -5,8 +5,9 @@
 use tgm::coordinator::{evaluate_edgebank, Pipeline, PipelineConfig, Split};
 use tgm::graph::{discretize, discretize_utg, DGData, ReduceOp, Task};
 use tgm::hooks::recipes::{RecipeRegistry, RECIPE_TGB_LINK};
+use tgm::hooks::MaterializedBatch;
 use tgm::io::gen;
-use tgm::loader::{BatchBy, DGDataLoader};
+use tgm::loader::{BatchBy, DGDataLoader, PrefetchConfig, PrefetchLoader};
 use tgm::models::EdgeBankMode;
 use tgm::runtime::XlaEngine;
 use tgm::util::TimeGranularity;
@@ -31,6 +32,54 @@ fn full_data_path_without_runtime() {
     for b in &batches {
         assert!(b.has(tgm::hooks::attr::NEGATIVES));
         assert!(b.has(tgm::hooks::attr::NEIGHBORS));
+    }
+}
+
+/// Acceptance check for the prefetch pipeline: byte-identical
+/// `MaterializedBatch` contents vs the serial loader, for both event and
+/// time iteration, with >= 2 workers, through the public API.
+#[test]
+fn prefetch_loader_is_deterministic_end_to_end() {
+    fn identical(a: &[MaterializedBatch], b: &[MaterializedBatch]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!((x.start, x.end), (y.start, y.end));
+            assert_eq!(x.src, y.src);
+            assert_eq!(x.dst, y.dst);
+            assert_eq!(x.ts, y.ts);
+            assert_eq!(x.edge_indices, y.edge_indices);
+            assert_eq!(x.attr_names(), y.attr_names());
+            for name in x.attr_names() {
+                assert_eq!(x.get(name).unwrap(), y.get(name).unwrap(), "attr `{name}`");
+            }
+        }
+    }
+
+    let data = gen::by_name("wiki", 0.05, 21).unwrap();
+    for by in [BatchBy::Events(100), BatchBy::Time(TimeGranularity::Day)] {
+        for key in ["train", "val"] {
+            let mut ms = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+            ms.activate(key).unwrap();
+            let serial = DGDataLoader::new(data.full(), by, &mut ms)
+                .unwrap()
+                .with_event_cap(150)
+                .collect_all()
+                .unwrap();
+            assert!(serial.len() > 2, "{by:?}/{key}: want several batches");
+
+            let mut mp = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+            mp.activate(key).unwrap();
+            let prefetched = PrefetchLoader::new(
+                data.full(),
+                by,
+                &mut mp,
+                PrefetchConfig::default().with_workers(3).with_event_cap(150),
+            )
+            .unwrap()
+            .collect_all()
+            .unwrap();
+            identical(&serial, &prefetched);
+        }
     }
 }
 

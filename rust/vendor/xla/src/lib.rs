@@ -1,0 +1,276 @@
+//! Offline stub of the `xla` (PJRT) bindings the `tgm` runtime layer is
+//! written against.
+//!
+//! The real crate wraps the XLA/PJRT C API and needs a multi-gigabyte
+//! native library that cannot be fetched in this environment. This stub
+//! keeps the same API surface so the rest of the crate compiles and the
+//! *host-side* pieces ([`Literal`] construction, byte round-trips, dtype
+//! checks) behave exactly like the real thing — they are plain memory
+//! operations. Device-side entry points ([`PjRtClient::cpu`],
+//! compilation, execution) return a descriptive [`Error`] instead, so
+//! every pipeline that needs compiled artifacts skips gracefully (the
+//! integration tests and benches already probe for this).
+//!
+//! Swapping in the real bindings is a one-line change in
+//! `rust/Cargo.toml`; no `tgm` source references differ.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring the real crate's.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    /// Create an error with a message.
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+
+    fn unavailable(what: &str) -> Error {
+        Error(format!("{what}: PJRT is unavailable in this offline build (xla stub)"))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-local result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types we can represent. Only `F32`/`S32` carry data in the
+/// stub; the remaining variants exist so dtype dispatch in callers stays
+/// exhaustive-with-fallback, as with the real bindings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    fn byte_size(self) -> Option<usize> {
+        match self {
+            ElementType::Pred => Some(1),
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => Some(4),
+            ElementType::S64 | ElementType::F64 => Some(8),
+        }
+    }
+}
+
+/// Host-native element types a [`Literal`] can be viewed as.
+pub trait NativeType: Copy {
+    /// The dtype tag of this native type.
+    const TY: ElementType;
+    /// Bytes per element.
+    const SIZE: usize;
+    /// Decode one element from little-endian bytes.
+    fn from_le_slice(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    const SIZE: usize = 4;
+    fn from_le_slice(bytes: &[u8]) -> f32 {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    const SIZE: usize = 4;
+    fn from_le_slice(bytes: &[u8]) -> i32 {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+/// A host literal: dtype + shape + row-major little-endian bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Build a literal from a dtype, shape and raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elem = ty
+            .byte_size()
+            .ok_or_else(|| Error::new(format!("unsupported element type {ty:?}")))?;
+        let expect: usize = shape.iter().product::<usize>() * elem;
+        if data.len() != expect {
+            return Err(Error::new(format!(
+                "literal data has {} bytes, shape {shape:?} of {ty:?} needs {expect}",
+            )));
+        }
+        Ok(Literal { ty, shape: shape.to_vec(), data: data.to_vec() })
+    }
+
+    /// Element type of the literal.
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.ty)
+    }
+
+    /// Shape of the literal.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total number of elements.
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Copy the data out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error::new(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self.data.chunks_exact(T::SIZE).map(T::from_le_slice).collect())
+    }
+
+    /// First element of the literal, typed.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        if T::TY != self.ty {
+            return Err(Error::new(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        if self.data.len() < T::SIZE {
+            return Err(Error::new("empty literal has no first element"));
+        }
+        Ok(T::from_le_slice(&self.data[..T::SIZE]))
+    }
+
+    /// Decompose a tuple literal. The stub never constructs tuples (they
+    /// only arise from device execution), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::new("stub literal is not a tuple (no device execution available)"))
+    }
+}
+
+/// Parsed HLO module (device-side only; unavailable in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Unavailable offline.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client handle. Construction fails in the stub.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Unavailable offline — callers are expected to
+    /// treat this as "no runtime present" and skip device work.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    /// Platform name of the client.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation. Unavailable offline.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals. Unavailable offline.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal. Unavailable offline.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let data: Vec<u8> = [1.0f32, -2.5, 3.25].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &data).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.ty().unwrap(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_size_validation() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0; 4])
+            .is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0; 8])
+            .is_ok());
+    }
+
+    #[test]
+    fn device_paths_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
