@@ -5,7 +5,7 @@
 use crate::coordinator::packing::{self, ModelFamily, Packed};
 use crate::coordinator::targets;
 use crate::error::{Result, TgmError};
-use crate::graph::{DGraph, Task, TemporalAdjacency};
+use crate::graph::{DGraph, MergedAdjacency, Task};
 use crate::hooks::batch::attr;
 use crate::loader::{BatchBy, DGDataLoader, PrefetchConfig, PrefetchLoader};
 use crate::models::{EdgeBank, PersistentGraphForecast};
@@ -359,7 +359,7 @@ impl Pipeline<'_> {
         let profile = self.runtime.profile.clone();
         let (b, c, k) = (profile.b, profile.c, self.pack.k);
         let de = profile.d_edge;
-        let adj = TemporalAdjacency::build(self.data.storage());
+        let adj = MergedAdjacency::build(self.data.storage());
         let storage = std::sync::Arc::clone(self.data.storage());
         let d_in = storage.edge_feat_dim();
 
@@ -385,11 +385,8 @@ impl Pipeline<'_> {
                 let cut = batch.start;
                 for j in 0..c {
                     let node = cand[i * c + j] as u32;
-                    let (nbrs, times, eidx) = adj.neighbors_before(node, cut);
                     // Deliberate full copies (the baseline's cost model).
-                    let nbrs = nbrs.to_vec();
-                    let times = times.to_vec();
-                    let eidx = eidx.to_vec();
+                    let (nbrs, times, eidx) = adj.neighbors_before(node, cut).to_vecs();
                     let avail = nbrs.len();
                     for slot in 0..k.min(avail) {
                         let src_i = avail - 1 - slot;
@@ -455,11 +452,13 @@ pub fn evaluate_edgebank(
     let storage = data.storage();
     let mut bank = EdgeBank::new(mode);
     let warm = storage.edge_range(storage.start_time(), view.start_time());
-    bank.update(
-        &storage.edge_src()[warm.clone()],
-        &storage.edge_dst()[warm.clone()],
-        &storage.edge_ts()[warm],
-    );
+    for (seg, local) in storage.edge_chunks(warm) {
+        bank.update(
+            &seg.edge_src()[local.clone()],
+            &seg.edge_dst()[local.clone()],
+            &seg.edge_ts()[local],
+        );
+    }
 
     let mut mgr = crate::hooks::HookManager::new();
     mgr.register_stateless(
@@ -489,7 +488,9 @@ pub fn evaluate_edgebank(
         bank.update(&batch.src, &batch.dst, &batch.ts);
     }
     Ok(EvalReport {
-        mrr: Some(stats::mean(&rrs)),
+        // `None` (not a fake 0.0) when the split held no ranked edges, so
+        // callers surface a typed error instead of a silent zero or panic.
+        mrr: (!rrs.is_empty()).then(|| stats::mean(&rrs)),
         queries: rrs.len(),
         seconds: t0.elapsed().as_secs_f64(),
         ..Default::default()

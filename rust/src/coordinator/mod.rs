@@ -1,13 +1,16 @@
-//! L3 coordinator: batch packing, training orchestration, evaluation
-//! protocols, task targets, and the runtime-breakdown profiler.
+//! L3 coordinator: batch packing, training orchestration (epoch and
+//! streaming), evaluation protocols, task targets, and the
+//! runtime-breakdown profiler.
 
 pub mod evaluator;
 pub mod packing;
 pub mod profiler;
+pub mod streaming;
 pub mod targets;
 pub mod trainer;
 
 pub use evaluator::{evaluate_edgebank, evaluate_persistent_graph, EvalReport, Split};
 pub use packing::{ModelFamily, PackConfig, Packed};
 pub use profiler::Profiler;
+pub use streaming::{CycleReport, StreamingConfig, StreamingTrainer};
 pub use trainer::{EpochReport, Pipeline, PipelineConfig};

@@ -9,7 +9,7 @@
 //! inputs each artifact's manifest declares.
 
 use crate::error::{Result, TgmError};
-use crate::graph::GraphStorage;
+use crate::graph::StorageSnapshot;
 use crate::hooks::batch::{attr, MaterializedBatch};
 use crate::hooks::eval_sampler as uq;
 use crate::runtime::Profile;
@@ -89,7 +89,7 @@ fn widen_feats(data: &[f32], rows_in: usize, d_in: usize, rows_out: usize, d_out
 }
 
 /// Pack the static node-feature matrix once per dataset.
-pub fn pack_node_feats(storage: &GraphStorage, profile: &Profile) -> Result<Tensor> {
+pub fn pack_node_feats(storage: &StorageSnapshot, profile: &Profile) -> Result<Tensor> {
     if storage.num_nodes() > profile.n {
         return Err(TgmError::Model(format!(
             "dataset has {} nodes; profile `{}` supports {}",
@@ -598,7 +598,7 @@ mod tests {
         }
     }
 
-    fn storage() -> GraphStorage {
+    fn storage() -> crate::graph::StorageSnapshot {
         let edges = (0..20)
             .map(|i| EdgeEvent {
                 t: i as i64,
@@ -607,16 +607,18 @@ mod tests {
                 features: vec![i as f32, 1.0],
             })
             .collect();
-        GraphStorage::from_events(edges, vec![], 8, Some((2, vec![0.5; 16])), None).unwrap()
+        GraphStorage::from_events(edges, vec![], 8, Some((2, vec![0.5; 16])), None)
+            .unwrap()
+            .into_snapshot()
     }
 
-    fn batch(st: &GraphStorage, r: std::ops::Range<usize>) -> MaterializedBatch {
-        let mut b = MaterializedBatch::new(st.edge_ts()[r.start], st.edge_ts()[r.end - 1] + 1);
+    fn batch(st: &crate::graph::StorageSnapshot, r: std::ops::Range<usize>) -> MaterializedBatch {
+        let mut b = MaterializedBatch::new(st.edge_ts_at(r.start), st.edge_ts_at(r.end - 1) + 1);
         let n = r.len();
         for i in r {
-            b.src.push(st.edge_src()[i]);
-            b.dst.push(st.edge_dst()[i]);
-            b.ts.push(st.edge_ts()[i]);
+            b.src.push(st.edge_src_at(i));
+            b.dst.push(st.edge_dst_at(i));
+            b.ts.push(st.edge_ts_at(i));
             b.edge_indices.push(i as u32);
         }
         let feats: Vec<f32> = b.edge_indices.iter().flat_map(|&i| st.edge_feat_row(i as usize).to_vec()).collect();

@@ -7,7 +7,7 @@
 //! property targets (RQ1) label whether the next snapshot grows.
 
 use crate::error::Result;
-use crate::graph::GraphStorage;
+use crate::graph::StorageSnapshot;
 use crate::runtime::Profile;
 use crate::util::{Tensor, Timestamp};
 
@@ -17,16 +17,24 @@ pub fn property_class(item: u32, p: usize) -> usize {
 }
 
 /// Normalized class histogram of `node`'s interactions in `[t0, t1)`.
-pub fn node_target(storage: &GraphStorage, node: u32, t0: Timestamp, t1: Timestamp, p: usize) -> Vec<f32> {
+pub fn node_target(
+    storage: &StorageSnapshot,
+    node: u32,
+    t0: Timestamp,
+    t1: Timestamp,
+    p: usize,
+) -> Vec<f32> {
     let mut hist = vec![0.0f32; p];
     let range = storage.edge_range(t0, t1);
-    let src = storage.edge_src();
-    let dst = storage.edge_dst();
     let mut total = 0.0f32;
-    for i in range {
-        if src[i] == node {
-            hist[property_class(dst[i], p)] += 1.0;
-            total += 1.0;
+    for (seg, local) in storage.edge_chunks(range) {
+        let src = &seg.edge_src()[local.clone()];
+        let dst = &seg.edge_dst()[local];
+        for i in 0..src.len() {
+            if src[i] == node {
+                hist[property_class(dst[i], p)] += 1.0;
+                total += 1.0;
+            }
         }
     }
     if total > 0.0 {
@@ -38,7 +46,7 @@ pub fn node_target(storage: &GraphStorage, node: u32, t0: Timestamp, t1: Timesta
 /// Batched targets tensor `[B, P]` for `nodes` over a future window.
 /// Returns the tensor plus a per-node "has future activity" mask.
 pub fn node_targets(
-    storage: &GraphStorage,
+    storage: &StorageSnapshot,
     nodes: &[u32],
     t0: Timestamp,
     t1: Timestamp,
@@ -51,16 +59,18 @@ pub fn node_targets(
 
     // One pass over the window: per-node histograms.
     let range = storage.edge_range(t0, t1);
-    let src = storage.edge_src();
-    let dst = storage.edge_dst();
     let mut row_of = std::collections::HashMap::with_capacity(nodes.len());
     for (row, &n) in nodes.iter().enumerate().take(b) {
         row_of.entry(n).or_insert(row);
     }
-    for i in range {
-        if let Some(&row) = row_of.get(&src[i]) {
-            data[row * p + property_class(dst[i], p)] += 1.0;
-            active[row] = 1.0;
+    for (seg, local) in storage.edge_chunks(range) {
+        let src = &seg.edge_src()[local.clone()];
+        let dst = &seg.edge_dst()[local];
+        for i in 0..src.len() {
+            if let Some(&row) = row_of.get(&src[i]) {
+                data[row * p + property_class(dst[i], p)] += 1.0;
+                active[row] = 1.0;
+            }
         }
     }
     // Normalize + copy shared rows for duplicate nodes.
@@ -83,15 +93,21 @@ pub fn node_targets(
 }
 
 /// Distinct source nodes active in `[t0, t1)`, in first-seen order.
-pub fn active_sources(storage: &GraphStorage, t0: Timestamp, t1: Timestamp, cap: usize) -> Vec<u32> {
+pub fn active_sources(
+    storage: &StorageSnapshot,
+    t0: Timestamp,
+    t1: Timestamp,
+    cap: usize,
+) -> Vec<u32> {
     let mut seen = std::collections::HashSet::new();
     let mut out = Vec::new();
-    for i in storage.edge_range(t0, t1) {
-        let s = storage.edge_src()[i];
-        if seen.insert(s) {
-            out.push(s);
-            if out.len() >= cap {
-                break;
+    'chunks: for (seg, local) in storage.edge_chunks(storage.edge_range(t0, t1)) {
+        for &s in &seg.edge_src()[local] {
+            if seen.insert(s) {
+                out.push(s);
+                if out.len() >= cap {
+                    break 'chunks;
+                }
             }
         }
     }
@@ -112,7 +128,7 @@ mod tests {
     use super::*;
     use crate::graph::EdgeEvent;
 
-    fn storage() -> GraphStorage {
+    fn storage() -> StorageSnapshot {
         // node 0 interacts with items 4,5,4 in [0,30); node 1 with 5.
         let edges = vec![
             EdgeEvent { t: 0, src: 0, dst: 4, features: vec![] },
@@ -121,7 +137,9 @@ mod tests {
             EdgeEvent { t: 25, src: 1, dst: 5, features: vec![] },
             EdgeEvent { t: 40, src: 1, dst: 4, features: vec![] },
         ];
-        GraphStorage::from_events(edges, vec![], 6, None, None).unwrap()
+        crate::graph::GraphStorage::from_events(edges, vec![], 6, None, None)
+            .unwrap()
+            .into_snapshot()
     }
 
     fn profile() -> Profile {

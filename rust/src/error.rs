@@ -23,6 +23,11 @@ pub enum TgmError {
     /// Batch attribute missing or of the wrong type/shape.
     Batch(String),
 
+    /// An append into a segmented storage arrived older than the last
+    /// sealed segment (streaming ingestion only accepts forward-in-time
+    /// events once a segment has been sealed).
+    StaleAppend(String),
+
     /// Dataset loading / parsing failure.
     Io(String),
 
@@ -47,6 +52,7 @@ impl std::fmt::Display for TgmError {
             TgmError::Hook(m) => write!(f, "hook error: {m}"),
             TgmError::Recipe(m) => write!(f, "recipe error: {m}"),
             TgmError::Batch(m) => write!(f, "batch error: {m}"),
+            TgmError::StaleAppend(m) => write!(f, "stale append: {m}"),
             TgmError::Io(m) => write!(f, "io error: {m}"),
             TgmError::Manifest(m) => write!(f, "manifest error: {m}"),
             TgmError::Runtime(m) => write!(f, "runtime error: {m}"),

@@ -1,29 +1,43 @@
 //! Temporal adjacency index (CSR), the substrate for neighbor sampling.
 //!
-//! Built once per storage: for every node, the list of (neighbor,
-//! timestamp, edge index) pairs sorted by time. Because the storage's edge
-//! columns are already time-sorted, a counting-sort fill yields per-node
-//! time-sorted lists in `O(E)` with no comparison sort. Interactions are
-//! treated as undirected for neighborhood purposes (both endpoints see the
-//! event), matching TGAT/TGN semantics.
+//! [`TemporalAdjacency`] is built once per **segment**: for every node,
+//! the list of (neighbor, timestamp, edge index) pairs sorted by time.
+//! Because a segment's edge columns are already time-sorted, a
+//! counting-sort fill yields per-node time-sorted lists in `O(E)` with no
+//! comparison sort. Interactions are treated as undirected for
+//! neighborhood purposes (both endpoints see the event), matching
+//! TGAT/TGN semantics.
+//!
+//! With segmented storage the CSR layer is **incremental**:
+//! [`MergedAdjacency`] stacks one immutable per-segment index per
+//! snapshot segment and merges on read — per-node per-segment lists are
+//! time-sorted and segments are time-ordered, so concatenation preserves
+//! global time order. [`AdjacencyCache`] keys on the snapshot's explicit
+//! [`SnapshotId`] (generation id) and reuses per-segment indices across
+//! generations by their globally unique segment ids, so appending and
+//! sealing a new segment only ever builds the delta index for that
+//! segment. The old pointer-address `StorageFingerprint` heuristic (which
+//! could false-hit when a dropped storage's allocation was recycled) is
+//! gone entirely.
 
+use crate::graph::segment::{SnapshotId, StorageSnapshot};
 use crate::graph::storage::GraphStorage;
 use crate::util::Timestamp;
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 /// CSR over (neighbor, time, edge-index) triples, time-sorted per node.
+/// Edge indices are local to the segment the index was built from.
 #[derive(Debug, Clone)]
 pub struct TemporalAdjacency {
     offsets: Vec<u32>,
     nbr: Vec<u32>,
     ts: Vec<Timestamp>,
     eidx: Vec<u32>,
-    /// Edge count of the storage this index was built from (staleness check).
-    built_from_edges: usize,
 }
 
 impl TemporalAdjacency {
-    /// Build the index from storage (undirected).
+    /// Build the index from one segment (undirected).
     pub fn build(storage: &GraphStorage) -> TemporalAdjacency {
         let n = storage.num_nodes();
         let e = storage.num_edges();
@@ -60,13 +74,7 @@ impl TemporalAdjacency {
             eidx[cd] = i as u32;
             cursor[d] += 1;
         }
-        TemporalAdjacency { offsets, nbr, ts, eidx, built_from_edges: e }
-    }
-
-    /// True if this index matches `storage` (cheap staleness check).
-    pub fn matches(&self, storage: &GraphStorage) -> bool {
-        self.built_from_edges == storage.num_edges()
-            && self.offsets.len() == storage.num_nodes() + 1
+        TemporalAdjacency { offsets, nbr, ts, eidx }
     }
 
     /// Full (time-sorted) neighbor list of `node`.
@@ -106,31 +114,189 @@ impl TemporalAdjacency {
     }
 }
 
-/// Memoized, thread-safe CSR index shared by stateless hooks.
-///
-/// Building the CSR costs `O(E)`; several hooks (uniform sampler, naive
-/// sampler, unique-recency lookup) each used to carry their own private
-/// copy. With the prefetch pipeline one hook instance is applied from
-/// many worker threads concurrently, so the cache is interior-mutable:
-/// the first caller builds (under the lock, so concurrent first calls
-/// build once) and everyone else clones the `Arc`. Staleness is detected
-/// by a fingerprint of the storage: its column address (distinguishes
-/// distinct live storages with equal counts) plus event counts and time
-/// span via [`TemporalAdjacency::matches`] and the window fields. A
-/// false hit would need a dropped storage's allocation to be recycled by
-/// another graph with identical edge count, node count, start time and
-/// end time — accepted as vanishingly unlikely, since full content
-/// hashing would cost more than the `O(E)` rebuild the cache avoids.
-#[derive(Debug, Default)]
-pub struct AdjacencyCache {
-    slot: Mutex<Option<(StorageFingerprint, Arc<TemporalAdjacency>)>>,
+/// Merge-on-read view over one immutable [`TemporalAdjacency`] per
+/// snapshot segment. Edge indices returned by lookups are **logical**
+/// (segment base + local index), matching `MaterializedBatch` and
+/// [`StorageSnapshot::edge_feat_row`].
+#[derive(Debug)]
+pub struct MergedAdjacency {
+    /// (per-segment index, logical edge base), oldest segment first.
+    parts: Vec<(Arc<TemporalAdjacency>, u32)>,
 }
 
-/// Cheap O(1) identity for a storage: column address + time span.
-type StorageFingerprint = (usize, i64, i64);
+impl MergedAdjacency {
+    /// Build fresh indices for every segment of `snapshot` (no cache).
+    pub fn build(snapshot: &StorageSnapshot) -> MergedAdjacency {
+        let parts = snapshot
+            .segments()
+            .iter()
+            .enumerate()
+            .map(|(s, seg)| {
+                (TemporalAdjacency::build(seg).into_shared(), snapshot.segment_edge_base(s) as u32)
+            })
+            .collect();
+        MergedAdjacency { parts }
+    }
 
-fn fingerprint(storage: &GraphStorage) -> StorageFingerprint {
-    (storage.edge_ts().as_ptr() as usize, storage.start_time(), storage.end_time())
+    /// Assemble from cached per-segment indices (used by
+    /// [`AdjacencyCache`]).
+    fn from_parts(parts: Vec<(Arc<TemporalAdjacency>, u32)>) -> MergedAdjacency {
+        MergedAdjacency { parts }
+    }
+
+    /// Number of segment indices merged on read.
+    pub fn num_segments(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Full (time-sorted) neighbor view of `node` across all segments.
+    pub fn neighbors(&self, node: u32) -> MergedNeighbors<'_> {
+        MergedNeighbors::collect(self.parts.iter().map(|(adj, base)| {
+            let (n, t, e) = adj.neighbors(node);
+            (n, t, e, *base)
+        }))
+    }
+
+    /// Neighbors of `node` strictly before `t`, across all segments, in
+    /// global time order (oldest first).
+    pub fn neighbors_before(&self, node: u32, t: Timestamp) -> MergedNeighbors<'_> {
+        MergedNeighbors::collect(self.parts.iter().map(|(adj, base)| {
+            let (n, ts, e) = adj.neighbors_before(node, t);
+            (n, ts, e, *base)
+        }))
+    }
+
+    /// All-time degree of `node`.
+    pub fn degree(&self, node: u32) -> usize {
+        self.parts.iter().map(|(a, _)| a.degree(node)).sum()
+    }
+
+    /// Total stored triples (2 × edges).
+    pub fn len(&self) -> usize {
+        self.parts.iter().map(|(a, _)| a.len()).sum()
+    }
+
+    /// True when no segment holds any triple.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One per-segment slice of a node's neighbor list:
+/// (neighbors, times, segment-local edge indices, logical edge base).
+type NeighborPart<'a> = (&'a [u32], &'a [Timestamp], &'a [u32], u32);
+
+/// A node's neighbor list assembled from per-segment slices — zero-copy,
+/// globally time-sorted (oldest first, index `len()-1` is the newest).
+/// The common ≤1-non-empty-part case (every single-segment snapshot, and
+/// most nodes of multi-segment ones) is stored inline with no heap
+/// allocation, so samplers on one-shot datasets pay nothing over the old
+/// direct slice API.
+pub struct MergedNeighbors<'a> {
+    parts: PartStore<'a>,
+    len: usize,
+}
+
+enum PartStore<'a> {
+    None,
+    One(NeighborPart<'a>),
+    Many(Vec<NeighborPart<'a>>),
+}
+
+impl<'a> MergedNeighbors<'a> {
+    fn collect(parts: impl Iterator<Item = NeighborPart<'a>>) -> MergedNeighbors<'a> {
+        let mut store = PartStore::None;
+        let mut len = 0;
+        for p in parts {
+            if p.0.is_empty() {
+                continue;
+            }
+            len += p.0.len();
+            store = match store {
+                PartStore::None => PartStore::One(p),
+                PartStore::One(first) => PartStore::Many(vec![first, p]),
+                PartStore::Many(mut v) => {
+                    v.push(p);
+                    PartStore::Many(v)
+                }
+            };
+        }
+        MergedNeighbors { parts: store, len }
+    }
+
+    fn parts(&self) -> &[NeighborPart<'a>] {
+        match &self.parts {
+            PartStore::None => &[],
+            PartStore::One(p) => std::slice::from_ref(p),
+            PartStore::Many(v) => v,
+        }
+    }
+
+    /// Number of (neighbor, time, edge) triples in the view.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The `i`-th triple in global time order:
+    /// `(neighbor, time, logical edge index)`.
+    pub fn get(&self, i: usize) -> (u32, Timestamp, u32) {
+        let mut i = i;
+        for (n, t, e, base) in self.parts() {
+            if i < n.len() {
+                return (n[i], t[i], e[i] + base);
+            }
+            i -= n.len();
+        }
+        panic!("MergedNeighbors index {i} out of bounds (len {})", self.len);
+    }
+
+    /// Iterate triples oldest-first.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, Timestamp, u32)> + '_ {
+        self.parts().iter().flat_map(|(n, t, e, base)| {
+            (0..n.len()).map(move |i| (n[i], t[i], e[i] + base))
+        })
+    }
+
+    /// Copy the view into owned columns (the DyGLib-baseline cost model).
+    pub fn to_vecs(&self) -> (Vec<u32>, Vec<Timestamp>, Vec<u32>) {
+        let mut n = Vec::with_capacity(self.len);
+        let mut t = Vec::with_capacity(self.len);
+        let mut e = Vec::with_capacity(self.len);
+        for (ns, ts, es, base) in self.parts() {
+            n.extend_from_slice(ns);
+            t.extend_from_slice(ts);
+            e.extend(es.iter().map(|&x| x + base));
+        }
+        (n, t, e)
+    }
+}
+
+/// Memoized, thread-safe adjacency shared by stateless hooks.
+///
+/// Staleness is decided by the snapshot's explicit [`SnapshotId`]
+/// (store id + monotonic generation) — ids are globally unique and never
+/// reused, so no allocator recycling can cause a false hit. Per-segment
+/// indices are cached by their globally unique segment ids and survive
+/// across generations: when a writer seals a new segment, the next `get`
+/// builds only that segment's **delta index** and merges it with the
+/// cached ones on read. Indices for segments no longer present (after
+/// compaction) are dropped.
+#[derive(Debug, Default)]
+pub struct AdjacencyCache {
+    inner: Mutex<CacheInner>,
+}
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    /// The merged view of the most recent snapshot seen.
+    merged: Option<(SnapshotId, Arc<MergedAdjacency>)>,
+    /// Immutable per-segment indices, keyed by globally unique segment id.
+    per_segment: HashMap<u64, Arc<TemporalAdjacency>>,
 }
 
 impl AdjacencyCache {
@@ -139,18 +305,34 @@ impl AdjacencyCache {
         AdjacencyCache::default()
     }
 
-    /// Shared index for `storage`, building it on first use.
-    pub fn get(&self, storage: &GraphStorage) -> Arc<TemporalAdjacency> {
-        let key = fingerprint(storage);
-        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
-        match slot.as_ref() {
-            Some((k, adj)) if *k == key && adj.matches(storage) => Arc::clone(adj),
-            _ => {
-                let adj = TemporalAdjacency::build(storage).into_shared();
-                *slot = Some((key, Arc::clone(&adj)));
-                adj
+    /// Shared merged index for `snapshot`, building only what is missing.
+    pub fn get(&self, snapshot: &StorageSnapshot) -> Arc<MergedAdjacency> {
+        let id = snapshot.id();
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some((k, merged)) = &inner.merged {
+            if *k == id {
+                return Arc::clone(merged);
             }
         }
+        let mut fresh: HashMap<u64, Arc<TemporalAdjacency>> =
+            HashMap::with_capacity(snapshot.num_segments());
+        let mut parts = Vec::with_capacity(snapshot.num_segments());
+        for (s, seg) in snapshot.segments().iter().enumerate() {
+            let seg_id = snapshot.segment_ids()[s];
+            let adj = inner
+                .per_segment
+                .get(&seg_id)
+                .cloned()
+                .unwrap_or_else(|| TemporalAdjacency::build(seg).into_shared());
+            fresh.insert(seg_id, Arc::clone(&adj));
+            parts.push((adj, snapshot.segment_edge_base(s) as u32));
+        }
+        // Retain only the current snapshot's segments (drops compacted-away
+        // or superseded indices).
+        inner.per_segment = fresh;
+        let merged = Arc::new(MergedAdjacency::from_parts(parts));
+        inner.merged = Some((id, Arc::clone(&merged)));
+        merged
     }
 }
 
@@ -158,6 +340,7 @@ impl AdjacencyCache {
 mod tests {
     use super::*;
     use crate::graph::events::EdgeEvent;
+    use crate::graph::segment::{SealPolicy, SegmentedStorage};
 
     fn storage() -> GraphStorage {
         let edges = vec![
@@ -206,18 +389,19 @@ mod tests {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<GraphStorage>();
         assert_send_sync::<TemporalAdjacency>();
+        assert_send_sync::<MergedAdjacency>();
         assert_send_sync::<AdjacencyCache>();
         assert_send_sync::<Arc<TemporalAdjacency>>();
     }
 
     #[test]
-    fn cache_builds_once_and_detects_staleness() {
-        let st = storage();
+    fn cache_builds_once_and_detects_generations() {
+        let snap = storage().into_snapshot();
         let cache = AdjacencyCache::new();
-        let a = cache.get(&st);
-        let b = cache.get(&st);
+        let a = cache.get(&snap);
+        let b = cache.get(&snap);
         assert!(Arc::ptr_eq(&a, &b), "second lookup must reuse the build");
-        // A different storage invalidates the slot.
+        // A different snapshot (fresh store id) invalidates the slot.
         let other = GraphStorage::from_events(
             vec![EdgeEvent { t: 1, src: 0, dst: 1, features: vec![] }],
             vec![],
@@ -225,10 +409,88 @@ mod tests {
             None,
             None,
         )
-        .unwrap();
+        .unwrap()
+        .into_snapshot();
         let c = cache.get(&other);
         assert!(!Arc::ptr_eq(&a, &c));
-        assert!(c.matches(&other));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn merged_view_matches_single_segment_build() {
+        // Stream the same edges through a segmented store; the merged
+        // adjacency must agree with the single-storage CSR, with logical
+        // edge indices.
+        let edges: Vec<EdgeEvent> = (0..60)
+            .map(|i| EdgeEvent {
+                t: (i as i64 / 2) * 5,
+                src: (i % 4) as u32,
+                dst: 4 + (i % 3) as u32,
+                features: vec![],
+            })
+            .collect();
+        let single = TemporalAdjacency::build(
+            &GraphStorage::from_events(edges.clone(), vec![], 7, None, None).unwrap(),
+        );
+        let mut st = SegmentedStorage::new(7, SealPolicy { max_events: 7, max_span: None });
+        for e in &edges {
+            st.append_edge(e.clone()).unwrap();
+        }
+        let snap = st.snapshot().unwrap();
+        assert!(snap.num_segments() > 4);
+        let merged = MergedAdjacency::build(&snap);
+        assert_eq!(merged.len(), single.len());
+        for node in 0..7u32 {
+            assert_eq!(merged.degree(node), single.degree(node));
+            let (sn, st_, se) = single.neighbors(node);
+            let mv = merged.neighbors(node);
+            assert_eq!(mv.len(), sn.len());
+            for (i, got) in mv.iter().enumerate() {
+                assert_eq!(got, (sn[i], st_[i], se[i]), "node {node} slot {i}");
+            }
+            // Time cuts agree too.
+            for t in [0i64, 3, 50, 100, 1000] {
+                let (cn, _, _) = single.neighbors_before(node, t);
+                assert_eq!(merged.neighbors_before(node, t).len(), cn.len());
+            }
+        }
+    }
+
+    #[test]
+    fn cache_reuses_segment_indices_across_generations() {
+        let mut st = SegmentedStorage::new(4, SealPolicy { max_events: 2, max_span: None });
+        st.append_edge(EdgeEvent { t: 1, src: 0, dst: 1, features: vec![] }).unwrap();
+        st.append_edge(EdgeEvent { t: 2, src: 1, dst: 2, features: vec![] }).unwrap();
+        let cache = AdjacencyCache::new();
+        let snap1 = st.snapshot().unwrap();
+        let m1 = cache.get(&snap1);
+        assert_eq!(m1.num_segments(), 1);
+
+        // Seal a second segment: only the delta index is new.
+        st.append_edge(EdgeEvent { t: 3, src: 2, dst: 3, features: vec![] }).unwrap();
+        st.append_edge(EdgeEvent { t: 4, src: 3, dst: 0, features: vec![] }).unwrap();
+        let snap2 = st.snapshot().unwrap();
+        let m2 = cache.get(&snap2);
+        assert_eq!(m2.num_segments(), 2);
+        assert!(
+            Arc::ptr_eq(&m1.parts[0].0, &m2.parts[0].0),
+            "first segment's index must be reused, not rebuilt"
+        );
+        // Old merged view still answers for the old snapshot's data.
+        assert_eq!(m1.len(), 4);
+        assert_eq!(m2.len(), 8);
+    }
+
+    #[test]
+    fn merged_neighbors_to_vecs_and_get_agree() {
+        let snap = storage().into_snapshot();
+        let merged = MergedAdjacency::build(&snap);
+        let view = merged.neighbors_before(0, 1000);
+        let (n, t, e) = view.to_vecs();
+        assert_eq!(n.len(), view.len());
+        for i in 0..view.len() {
+            assert_eq!(view.get(i), (n[i], t[i], e[i]));
+        }
     }
 
     #[test]
@@ -248,6 +510,5 @@ mod tests {
             let (_, ts, _) = adj.neighbors(node);
             assert!(ts.windows(2).all(|w| w[0] <= w[1]), "node {node} unsorted");
         }
-        assert!(adj.matches(&st));
     }
 }

@@ -1,10 +1,14 @@
 //! Dataset container and chronological splits (paper §4, "IO Adaptors").
 //!
-//! [`DGData`] owns one immutable [`GraphStorage`] plus task metadata and
+//! [`DGData`] owns one immutable [`StorageSnapshot`] plus task metadata and
 //! produces train/validation/test [`DGraph`] views via chronological
-//! splitting (the TGB protocol: 70/15/15 by time).
+//! splitting (the TGB protocol: 70/15/15 by time). One-shot datasets wrap
+//! a freshly built [`GraphStorage`] into a single-segment snapshot;
+//! streamed datasets pass a [`super::segment::SegmentedStorage`] snapshot
+//! directly via [`DGData::from_snapshot`].
 
 use crate::error::{Result, TgmError};
+use crate::graph::segment::StorageSnapshot;
 use crate::graph::storage::GraphStorage;
 use crate::graph::view::DGraph;
 use crate::util::Timestamp;
@@ -22,7 +26,7 @@ pub enum Task {
     GraphProperty,
 }
 
-/// Train/validation/test views sharing one storage.
+/// Train/validation/test views sharing one snapshot.
 #[derive(Debug, Clone)]
 pub struct Splits {
     pub train: DGraph,
@@ -30,18 +34,27 @@ pub struct Splits {
     pub test: DGraph,
 }
 
-/// A loaded dataset: storage + name + task.
+/// A loaded dataset: snapshot + name + task.
 #[derive(Debug, Clone)]
 pub struct DGData {
-    storage: Arc<GraphStorage>,
+    storage: Arc<StorageSnapshot>,
     name: String,
     task: Task,
 }
 
 impl DGData {
-    /// Wrap storage with a dataset name and task.
+    /// Wrap a one-shot storage with a dataset name and task.
     pub fn new(storage: GraphStorage, name: impl Into<String>, task: Task) -> DGData {
-        DGData { storage: storage.into_shared(), name: name.into(), task }
+        DGData { storage: storage.into_shared_snapshot(), name: name.into(), task }
+    }
+
+    /// Wrap an existing snapshot (e.g. from a streaming store).
+    pub fn from_snapshot(
+        storage: Arc<StorageSnapshot>,
+        name: impl Into<String>,
+        task: Task,
+    ) -> DGData {
+        DGData { storage, name: name.into(), task }
     }
 
     /// Dataset name (e.g. `wiki-small`).
@@ -54,8 +67,8 @@ impl DGData {
         self.task
     }
 
-    /// Shared storage.
-    pub fn storage(&self) -> &Arc<GraphStorage> {
+    /// Shared snapshot.
+    pub fn storage(&self) -> &Arc<StorageSnapshot> {
         &self.storage
     }
 
@@ -73,15 +86,14 @@ impl DGData {
             return Err(TgmError::Config(format!("bad split ratios ({train}, {val})")));
         }
         let n = self.storage.num_edges();
-        let ts = self.storage.edge_ts();
         let t_begin = self.storage.start_time();
         let t_end = self.storage.end_time() + 1;
 
         // Timestamp at the split quantiles; clamp to event boundaries.
         let train_idx = ((n as f64 * train) as usize).min(n - 1);
         let val_idx = ((n as f64 * (train + val)) as usize).min(n - 1);
-        let t_train_end = ts[train_idx];
-        let t_val_end = ts[val_idx].max(t_train_end);
+        let t_train_end = self.storage.edge_ts_at(train_idx);
+        let t_val_end = self.storage.edge_ts_at(val_idx).max(t_train_end);
 
         let train = DGraph::slice_of(Arc::clone(&self.storage), t_begin, t_train_end)?;
         let val = DGraph::slice_of(Arc::clone(&self.storage), t_train_end, t_val_end)?;
@@ -116,30 +128,31 @@ pub struct DatasetStats {
 }
 
 impl DatasetStats {
-    fn compute(storage: &Arc<GraphStorage>, name: &str) -> DatasetStats {
-        let src = storage.edge_src();
-        let dst = storage.edge_dst();
+    fn compute(storage: &Arc<StorageSnapshot>, name: &str) -> DatasetStats {
         let n = storage.num_edges();
-
-        let mut unique: HashSet<(u32, u32)> = HashSet::with_capacity(n);
-        for i in 0..n {
-            unique.insert((src[i], dst[i]));
-        }
-
         // Surprise on the default 85/15 boundary (train+val vs test).
         let split_idx = (n as f64 * 0.85) as usize;
+
+        let mut unique: HashSet<(u32, u32)> = HashSet::with_capacity(n);
         let mut train_edges: HashSet<(u32, u32)> = HashSet::with_capacity(split_idx);
-        for i in 0..split_idx {
-            train_edges.insert((src[i], dst[i]));
+        let mut unseen = 0usize;
+        let mut i = 0usize;
+        for (seg, local) in storage.edge_chunks(0..n) {
+            let src = &seg.edge_src()[local.clone()];
+            let dst = &seg.edge_dst()[local];
+            for k in 0..src.len() {
+                let pair = (src[k], dst[k]);
+                unique.insert(pair);
+                if i < split_idx {
+                    train_edges.insert(pair);
+                } else if !train_edges.contains(&pair) {
+                    unseen += 1;
+                }
+                i += 1;
+            }
         }
         let test_n = n - split_idx;
-        let surprise = if test_n == 0 {
-            0.0
-        } else {
-            let unseen =
-                (split_idx..n).filter(|&i| !train_edges.contains(&(src[i], dst[i]))).count();
-            unseen as f64 / test_n as f64
-        };
+        let surprise = if test_n == 0 { 0.0 } else { unseen as f64 / test_n as f64 };
 
         DatasetStats {
             name: name.to_string(),
@@ -175,6 +188,7 @@ impl std::fmt::Display for DatasetStats {
 mod tests {
     use super::*;
     use crate::graph::events::EdgeEvent;
+    use crate::graph::segment::{SealPolicy, SegmentedStorage};
 
     fn data(n_edges: usize) -> DGData {
         let edges = (0..n_edges)
@@ -235,5 +249,33 @@ mod tests {
         assert_eq!(st.duration, 99);
         // Every test edge was seen in train -> surprise 0.
         assert_eq!(st.surprise, 0.0);
+    }
+
+    #[test]
+    fn streamed_dataset_matches_one_shot() {
+        // Identical stats and splits whether the data was built one-shot
+        // or appended through a segmented store.
+        let one_shot = data(100);
+        let mut st = SegmentedStorage::new(4, SealPolicy { max_events: 23, max_span: None });
+        for i in 0..100usize {
+            st.append_edge(EdgeEvent {
+                t: i as i64,
+                src: (i % 4) as u32,
+                dst: ((i + 1) % 4) as u32,
+                features: vec![],
+            })
+            .unwrap();
+        }
+        let streamed = DGData::from_snapshot(st.snapshot().unwrap(), "toy", Task::LinkPrediction);
+        assert!(streamed.storage().num_segments() > 1);
+        let (a, b) = (one_shot.stats(), streamed.stats());
+        assert_eq!(a.num_edges, b.num_edges);
+        assert_eq!(a.num_unique_edges, b.num_unique_edges);
+        assert_eq!(a.num_unique_steps, b.num_unique_steps);
+        assert_eq!(a.surprise, b.surprise);
+        let (sa, sb) = (one_shot.split().unwrap(), streamed.split().unwrap());
+        assert_eq!(sa.train.num_edges(), sb.train.num_edges());
+        assert_eq!(sa.val.num_edges(), sb.val.num_edges());
+        assert_eq!(sa.test.num_edges(), sb.test.num_edges());
     }
 }

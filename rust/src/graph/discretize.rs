@@ -17,6 +17,7 @@
 //!   2024). Kept as a first-class comparator for `benches/table5_*`.
 
 use crate::error::{Result, TgmError};
+use crate::graph::segment::StorageSnapshot;
 use crate::graph::storage::GraphStorage;
 use crate::util::{TimeGranularity, Timestamp};
 use std::collections::HashMap;
@@ -72,12 +73,16 @@ fn check_coarser(storage: &GraphStorage, target: TimeGranularity) -> Result<i64>
 /// Vectorized discretization: TGM's fast path.
 ///
 /// Complexity: `O(E)` key computation + `O(E log E)` index sort +
-/// `O(E · d)` grouped reduction; zero per-event heap allocation.
+/// `O(E · d)` grouped reduction; zero per-event heap allocation. The
+/// input snapshot is coalesced first (free for single-segment snapshots,
+/// i.e. every one-shot dataset), so the scan runs over contiguous columns.
 pub fn discretize(
-    storage: &GraphStorage,
+    snapshot: &StorageSnapshot,
     target: TimeGranularity,
     reduce: ReduceOp,
 ) -> Result<GraphStorage> {
+    let storage = snapshot.coalesce();
+    let storage = storage.as_ref();
     let secs = check_coarser(storage, target)?;
     let t0 = storage.start_time();
     let ts = storage.edge_ts();
@@ -182,6 +187,10 @@ pub fn discretize(
         dst2,
         out_dim,
         feats2,
+        Vec::new(),
+        Vec::new(),
+        0,
+        Vec::new(),
         storage.num_nodes(),
         storage.static_feat_dim(),
         storage.static_feats().to_vec(),
@@ -198,10 +207,12 @@ pub fn discretize(
 /// per-event boxed allocations and pointer-chasing hash lookups are the
 /// costs TGM's vectorized path eliminates.
 pub fn discretize_utg(
-    storage: &GraphStorage,
+    snapshot: &StorageSnapshot,
     target: TimeGranularity,
     reduce: ReduceOp,
 ) -> Result<GraphStorage> {
+    let storage = snapshot.coalesce();
+    let storage = storage.as_ref();
     let secs = check_coarser(storage, target)?;
     let t0 = storage.start_time();
     let d = storage.edge_feat_dim();
@@ -268,6 +279,10 @@ pub fn discretize_utg(
         dst,
         out_dim,
         fx,
+        Vec::new(),
+        Vec::new(),
+        0,
+        Vec::new(),
         storage.num_nodes(),
         storage.static_feat_dim(),
         storage.static_feats().to_vec(),
@@ -285,7 +300,7 @@ mod tests {
         EdgeEvent { t, src, dst, features: vec![f, 2.0 * f] }
     }
 
-    fn hourly_graph() -> GraphStorage {
+    fn hourly_graph() -> StorageSnapshot {
         // Duplicate (0,1) within the first hour, one (1,2) in hour 1.
         let edges = vec![
             edge(0, 0, 1, 1.0),
@@ -293,7 +308,9 @@ mod tests {
             edge(1200, 2, 3, 5.0),
             edge(4000, 1, 2, 7.0),
         ];
-        GraphStorage::from_events(edges, vec![], 4, None, Some(TimeGranularity::Second)).unwrap()
+        GraphStorage::from_events(edges, vec![], 4, None, Some(TimeGranularity::Second))
+            .unwrap()
+            .into_snapshot()
     }
 
     #[test]
@@ -332,7 +349,7 @@ mod tests {
     #[test]
     fn rejects_finer_target_and_event_graphs() {
         let g = hourly_graph();
-        let daily = discretize(&g, TimeGranularity::Day, ReduceOp::Mean).unwrap();
+        let daily = discretize(&g, TimeGranularity::Day, ReduceOp::Mean).unwrap().into_snapshot();
         assert_eq!(daily.num_edges(), 3); // all distinct (s,d) pairs, one day
         // Finer than native of the daily graph:
         assert!(discretize(&daily, TimeGranularity::Hour, ReduceOp::Mean).is_err());
@@ -355,7 +372,8 @@ mod tests {
                 })
                 .collect();
             let g = GraphStorage::from_events(edges, vec![], 20, None, Some(TimeGranularity::Second))
-                .unwrap();
+                .unwrap()
+                .into_snapshot();
             for op in [ReduceOp::Sum, ReduceOp::Mean, ReduceOp::Last, ReduceOp::Max, ReduceOp::Count]
             {
                 let a = discretize(&g, TimeGranularity::Hour, op).unwrap();
@@ -382,7 +400,9 @@ mod tests {
     #[test]
     fn idempotent_at_same_granularity_when_no_duplicates() {
         let edges = vec![edge(0, 0, 1, 1.0), edge(3600, 1, 2, 2.0), edge(7200, 2, 0, 3.0)];
-        let g = GraphStorage::from_events(edges, vec![], 3, None, Some(TimeGranularity::Hour)).unwrap();
+        let g = GraphStorage::from_events(edges, vec![], 3, None, Some(TimeGranularity::Hour))
+            .unwrap()
+            .into_snapshot();
         let h = discretize(&g, TimeGranularity::Hour, ReduceOp::Mean).unwrap();
         assert_eq!(h.num_edges(), 3);
         assert_eq!(h.edge_ts(), g.edge_ts());

@@ -1,16 +1,20 @@
-//! Data layer: events, immutable time-sorted COO storage, lightweight
-//! views, discretization, dataset containers and statistics (paper §3-4).
+//! Data layer: events, immutable time-sorted segment storage, the
+//! append-only segmented store with epoch snapshots, lightweight views,
+//! discretization, dataset containers and statistics (paper §3-4 plus the
+//! streaming-ingestion extension).
 
 pub mod adjacency;
 pub mod data;
 pub mod discretize;
 pub mod events;
+pub mod segment;
 pub mod storage;
 pub mod view;
 
-pub use adjacency::{AdjacencyCache, TemporalAdjacency};
+pub use adjacency::{AdjacencyCache, MergedAdjacency, MergedNeighbors, TemporalAdjacency};
 pub use data::{DGData, DatasetStats, Splits, Task};
 pub use discretize::{discretize, discretize_utg, ReduceOp};
 pub use events::{EdgeEvent, Event, NodeEvent, NodeId};
+pub use segment::{SealPolicy, SegmentedStorage, SnapshotId, StorageSnapshot};
 pub use storage::GraphStorage;
 pub use view::DGraph;

@@ -1,0 +1,1211 @@
+//! Segmented append-only storage with epoch snapshots (streaming
+//! ingestion).
+//!
+//! The paper assumes a read-only event log; this module lifts that
+//! restriction without giving up any of its concurrency guarantees. A
+//! [`SegmentedStorage`] is a stack of **sealed segments** — each one an
+//! ordinary immutable [`GraphStorage`] (the existing SoA layout with its
+//! own timestamp index) — plus one **mutable active segment** that accepts
+//! [`SegmentedStorage::append`]. The active segment is sealed (sorted and
+//! frozen into a new `GraphStorage`) when it reaches the [`SealPolicy`]
+//! size/span threshold or on an explicit [`SegmentedStorage::seal`].
+//!
+//! Readers never see the mutable state: [`SegmentedStorage::snapshot`]
+//! returns an [`Arc<StorageSnapshot>`] — an immutable, versioned view over
+//! the sealed segments plus a frozen copy of the current active tail. The
+//! snapshot exposes the `GraphStorage` read API over **logical offsets**
+//! (global indices into the concatenation of its segments), so `DGraph`
+//! views, the batch planner, `materialize_window` and the prefetch loader
+//! all work unchanged on a graph that keeps growing while it trains.
+//!
+//! Ordering invariants that make the logical-offset layer a plain
+//! concatenation:
+//!
+//! * within the active segment, out-of-order appends are allowed and are
+//!   stably sorted at seal time (same semantics as
+//!   [`GraphStorage::from_events`]);
+//! * appends older than the last *sealed* timestamp of their kind are
+//!   rejected with [`TgmError::StaleAppend`], so sealed segments cover
+//!   non-overlapping, non-decreasing time spans and the concatenated
+//!   columns are globally time-sorted.
+//!
+//! Because an event stream fed in the same order produces the same stable
+//! sort, a fully appended-then-sealed stream yields byte-identical batches
+//! to a one-shot [`GraphStorage::from_events`] build (pinned by the
+//! determinism tests here and in `tests/integration.rs`).
+//!
+//! [`SegmentedStorage::compact`] merges the sealed segments (their columns
+//! are already globally sorted, so the merge is a linear concatenation)
+//! into a single segment, bounding per-read segment fan-out; the
+//! `streaming` case in `benches/ablations.rs` tracks the segmented-read
+//! overhead against the compacted baseline. Compaction is invoked
+//! synchronously (e.g. between training windows via
+//! [`SegmentedStorage::maybe_compact`]) to keep the pipeline
+//! deterministic; nothing in the design prevents moving it to a background
+//! thread later, since it only touches sealed (immutable) segments.
+
+use crate::error::{Result, TgmError};
+use crate::graph::events::{EdgeEvent, Event, NodeEvent, NodeId};
+use crate::graph::storage::GraphStorage;
+use crate::util::{granularity_for_min_gap, min_positive_gap, TimeGranularity, Timestamp};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Global allocator for store and segment ids. Ids are never reused, so
+/// caches keyed on them (adjacency, inferred destination ranges) cannot
+/// false-hit the way the old pointer-address fingerprints could when an
+/// allocation was recycled.
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Identity of one immutable snapshot: the owning store's id plus the
+/// store's monotonic generation at snapshot time. Two snapshots with the
+/// same `SnapshotId` are guaranteed to hold identical data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SnapshotId {
+    /// Globally unique id of the producing store (or standalone storage).
+    pub store: u64,
+    /// Monotonic mutation counter of the store at snapshot time.
+    pub generation: u64,
+}
+
+/// When the active segment seals automatically.
+#[derive(Debug, Clone)]
+pub struct SealPolicy {
+    /// Seal once the active segment holds this many edge events.
+    pub max_events: usize,
+    /// Seal once the active segment's edge timestamps span more than this
+    /// many native time units (`None` = unbounded).
+    pub max_span: Option<i64>,
+}
+
+impl Default for SealPolicy {
+    fn default() -> Self {
+        SealPolicy { max_events: 4096, max_span: None }
+    }
+}
+
+/// Append-only segmented storage: sealed immutable segments + one mutable
+/// active segment. Produces immutable [`StorageSnapshot`]s for readers.
+pub struct SegmentedStorage {
+    num_nodes: usize,
+    policy: SealPolicy,
+    /// Explicit granularity override (`with_granularity`). When unset,
+    /// granularity is inferred from the *whole* stream seen so far via
+    /// the incrementally folded [`Self::min_sealed_gap`], matching what
+    /// `GraphStorage::from_events` would infer over the same prefix — so
+    /// it may refine (grow finer) as bursts give way to spaced events.
+    fixed_granularity: Option<TimeGranularity>,
+    /// Minimum positive adjacent gap across the globally sorted sealed
+    /// stream (segment-internal gaps + inter-segment boundary gaps).
+    min_sealed_gap: Option<i64>,
+    static_feat_dim: usize,
+    static_feats: Arc<Vec<f32>>,
+    sealed: Vec<Arc<GraphStorage>>,
+    sealed_ids: Vec<u64>,
+    active_edges: Vec<EdgeEvent>,
+    active_nodes: Vec<NodeEvent>,
+    /// Edge/node feature dims, fixed by the first appended event of each
+    /// kind.
+    edge_feat_dim: Option<usize>,
+    node_feat_dim: Option<usize>,
+    /// Min/max edge timestamp of the active segment (span sealing).
+    active_min_t: Option<Timestamp>,
+    active_max_t: Option<Timestamp>,
+    /// Newest timestamp ever sealed, per event kind; older appends are
+    /// rejected so sealed segments stay globally time-sorted.
+    last_sealed_edge_ts: Option<Timestamp>,
+    last_sealed_node_ts: Option<Timestamp>,
+    store_id: u64,
+    generation: u64,
+    /// Memoized snapshot of the current generation (tail freezes are a
+    /// copy; repeated `snapshot()` calls without writes reuse it).
+    cached_snapshot: Option<(u64, Arc<StorageSnapshot>)>,
+}
+
+impl SegmentedStorage {
+    /// Empty store over `num_nodes` ids with the given seal policy.
+    pub fn new(num_nodes: usize, policy: SealPolicy) -> SegmentedStorage {
+        SegmentedStorage {
+            num_nodes,
+            policy,
+            fixed_granularity: None,
+            min_sealed_gap: None,
+            static_feat_dim: 0,
+            static_feats: Arc::new(Vec::new()),
+            sealed: Vec::new(),
+            sealed_ids: Vec::new(),
+            active_edges: Vec::new(),
+            active_nodes: Vec::new(),
+            edge_feat_dim: None,
+            node_feat_dim: None,
+            active_min_t: None,
+            active_max_t: None,
+            last_sealed_edge_ts: None,
+            last_sealed_node_ts: None,
+            store_id: next_id(),
+            generation: 0,
+            cached_snapshot: None,
+        }
+    }
+
+    /// Fix the native granularity up front. Without this, granularity is
+    /// inferred from all edge timestamps appended so far (exactly as
+    /// `GraphStorage::from_events` would infer it over the same stream)
+    /// and may refine as more data arrives.
+    pub fn with_granularity(mut self, g: TimeGranularity) -> SegmentedStorage {
+        self.fixed_granularity = Some(g);
+        self
+    }
+
+    /// Attach a static node-feature matrix (`num_nodes x dim`).
+    pub fn with_static_feats(mut self, dim: usize, feats: Vec<f32>) -> Result<SegmentedStorage> {
+        if feats.len() != dim * self.num_nodes {
+            return Err(TgmError::Graph(format!(
+                "static feature matrix has {} values, expected {}",
+                feats.len(),
+                dim * self.num_nodes
+            )));
+        }
+        self.static_feat_dim = dim;
+        self.static_feats = Arc::new(feats);
+        Ok(self)
+    }
+
+    // ------------------------------------------------------------------
+    // metadata
+    // ------------------------------------------------------------------
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    /// Number of sealed (immutable) segments.
+    pub fn num_sealed_segments(&self) -> usize {
+        self.sealed.len()
+    }
+
+    /// Edge events buffered in the mutable active segment.
+    pub fn pending_edges(&self) -> usize {
+        self.active_edges.len()
+    }
+
+    /// Node events buffered in the mutable active segment.
+    pub fn pending_node_events(&self) -> usize {
+        self.active_nodes.len()
+    }
+
+    /// Total edge events (sealed + active).
+    pub fn total_edges(&self) -> usize {
+        self.sealed.iter().map(|s| s.num_edges()).sum::<usize>() + self.active_edges.len()
+    }
+
+    /// Monotonic mutation counter (bumps on append/seal/compact).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Newest sealed edge timestamp, if any segment has been sealed.
+    pub fn last_sealed_edge_ts(&self) -> Option<Timestamp> {
+        self.last_sealed_edge_ts
+    }
+
+    // ------------------------------------------------------------------
+    // writes
+    // ------------------------------------------------------------------
+
+    /// Append one event. Returns `true` when the append triggered an
+    /// automatic seal of the active segment.
+    pub fn append(&mut self, ev: Event) -> Result<bool> {
+        match ev {
+            Event::Edge(e) => self.append_edge(e),
+            Event::Node(n) => {
+                self.append_node_event(n)?;
+                Ok(false)
+            }
+        }
+    }
+
+    /// Append one edge event (see [`SegmentedStorage::append`]).
+    pub fn append_edge(&mut self, e: EdgeEvent) -> Result<bool> {
+        if e.src as usize >= self.num_nodes || e.dst as usize >= self.num_nodes {
+            return Err(TgmError::Graph(format!(
+                "edge ({}, {}) references node >= num_nodes={}",
+                e.src, e.dst, self.num_nodes
+            )));
+        }
+        if let Some(last) = self.last_sealed_edge_ts {
+            if e.t < last {
+                return Err(TgmError::StaleAppend(format!(
+                    "edge event at t={} precedes the last sealed edge timestamp {last}",
+                    e.t
+                )));
+            }
+        }
+        match self.edge_feat_dim {
+            Some(d) => {
+                if e.features.len() != d {
+                    return Err(TgmError::Graph(format!(
+                        "inconsistent edge feature dim: {} vs {d}",
+                        e.features.len()
+                    )));
+                }
+            }
+            None => self.edge_feat_dim = Some(e.features.len()),
+        }
+        self.active_min_t = Some(self.active_min_t.map_or(e.t, |m| m.min(e.t)));
+        self.active_max_t = Some(self.active_max_t.map_or(e.t, |m| m.max(e.t)));
+        self.active_edges.push(e);
+        self.generation += 1;
+        if self.should_seal() {
+            self.seal()?;
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
+    /// Append one node (dynamic-feature) event.
+    pub fn append_node_event(&mut self, e: NodeEvent) -> Result<()> {
+        if e.node as usize >= self.num_nodes {
+            return Err(TgmError::Graph(format!(
+                "node event references node {} >= num_nodes={}",
+                e.node, self.num_nodes
+            )));
+        }
+        if let Some(last) = self.last_sealed_node_ts {
+            if e.t < last {
+                return Err(TgmError::StaleAppend(format!(
+                    "node event at t={} precedes the last sealed node-event timestamp {last}",
+                    e.t
+                )));
+            }
+        }
+        match self.node_feat_dim {
+            Some(d) => {
+                if e.features.len() != d {
+                    return Err(TgmError::Graph(format!(
+                        "inconsistent node feature dim: {} vs {d}",
+                        e.features.len()
+                    )));
+                }
+            }
+            None => self.node_feat_dim = Some(e.features.len()),
+        }
+        self.active_nodes.push(e);
+        self.generation += 1;
+        Ok(())
+    }
+
+    fn should_seal(&self) -> bool {
+        if self.active_edges.len() >= self.policy.max_events {
+            return true;
+        }
+        if let (Some(span), Some(lo), Some(hi)) =
+            (self.policy.max_span, self.active_min_t, self.active_max_t)
+        {
+            if hi - lo > span {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Minimum positive gap a batch of (about-to-be-appended) edges
+    /// contributes to the globally sorted stream: its internal gaps plus
+    /// the boundary gap against the last sealed edge timestamp.
+    fn gap_contribution(&self, edges: &[EdgeEvent]) -> Option<i64> {
+        let mut ts: Vec<Timestamp> = edges.iter().map(|e| e.t).collect();
+        ts.sort_unstable();
+        let mut gap = min_positive_gap(&ts);
+        if let (Some(last), Some(&first)) = (self.last_sealed_edge_ts, ts.first()) {
+            let boundary = first - last;
+            if boundary > 0 {
+                gap = Some(gap.map_or(boundary, |g| g.min(boundary)));
+            }
+        }
+        gap
+    }
+
+    fn fold_gap(a: Option<i64>, b: Option<i64>) -> Option<i64> {
+        match (a, b) {
+            (Some(x), Some(y)) => Some(x.min(y)),
+            (x, None) => x,
+            (None, y) => y,
+        }
+    }
+
+    /// Granularity given an extra (tail) gap contribution on top of the
+    /// sealed stream's folded minimum gap.
+    fn granularity_with(&self, extra: Option<i64>) -> TimeGranularity {
+        self.fixed_granularity
+            .unwrap_or_else(|| granularity_for_min_gap(Self::fold_gap(self.min_sealed_gap, extra)))
+    }
+
+    /// Native granularity inferred (or fixed) for the stream so far.
+    pub fn granularity(&self) -> TimeGranularity {
+        self.granularity_with(None)
+    }
+
+    /// Seal the active segment: stably sort it by time and freeze it into
+    /// a new immutable [`GraphStorage`]. Returns `false` (and keeps any
+    /// buffered node events pending) when no edge events are buffered — a
+    /// segment needs at least one edge to carry a time span.
+    pub fn seal(&mut self) -> Result<bool> {
+        if self.active_edges.is_empty() {
+            return Ok(false);
+        }
+        let edges = std::mem::take(&mut self.active_edges);
+        let nodes = std::mem::take(&mut self.active_nodes);
+        let contribution = self.gap_contribution(&edges);
+        self.min_sealed_gap = Self::fold_gap(self.min_sealed_gap, contribution);
+        let g = self.granularity_with(None);
+        let seg = GraphStorage::from_events(edges, nodes, self.num_nodes, None, Some(g))?;
+        self.last_sealed_edge_ts =
+            Some(self.last_sealed_edge_ts.map_or(seg.end_time(), |l| l.max(seg.end_time())));
+        if seg.num_node_events() > 0 {
+            let last = *seg.node_event_ts().last().unwrap();
+            self.last_sealed_node_ts =
+                Some(self.last_sealed_node_ts.map_or(last, |l| l.max(last)));
+        }
+        self.sealed.push(Arc::new(seg));
+        self.sealed_ids.push(next_id());
+        self.active_min_t = None;
+        self.active_max_t = None;
+        self.generation += 1;
+        Ok(true)
+    }
+
+    /// Merge all sealed segments (and, implicitly, their per-segment
+    /// indices: the next [`crate::graph::AdjacencyCache`] lookup builds
+    /// one index for the merged segment) into a single segment. The
+    /// active segment is untouched. Returns `false` when there is nothing
+    /// to merge.
+    pub fn compact(&mut self) -> Result<bool> {
+        if self.sealed.len() <= 1 {
+            return Ok(false);
+        }
+        let g = self.granularity_with(None);
+        let merged = merge_segments(&self.sealed, self.num_nodes, g, 0, Vec::new());
+        self.sealed = vec![Arc::new(merged)];
+        self.sealed_ids = vec![next_id()];
+        self.generation += 1;
+        Ok(true)
+    }
+
+    /// Compact when more than `max_sealed` sealed segments have piled up.
+    pub fn maybe_compact(&mut self, max_sealed: usize) -> Result<bool> {
+        if self.sealed.len() > max_sealed.max(1) {
+            self.compact()
+        } else {
+            Ok(false)
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // reads
+    // ------------------------------------------------------------------
+
+    /// Immutable, versioned view over the sealed segments plus a frozen
+    /// copy of the current active tail. Cheap when nothing changed since
+    /// the last call (memoized per generation); otherwise the only copy
+    /// made is the active tail's events.
+    pub fn snapshot(&mut self) -> Result<Arc<StorageSnapshot>> {
+        if let Some((gen, snap)) = &self.cached_snapshot {
+            if *gen == self.generation {
+                return Ok(Arc::clone(snap));
+            }
+        }
+        let mut segments = self.sealed.clone();
+        let mut ids = self.sealed_ids.clone();
+        // Granularity covers the tail too, so a snapshot always matches
+        // what `from_events` would infer over the full stream so far.
+        let g = self.granularity_with(self.gap_contribution(&self.active_edges));
+        if !self.active_edges.is_empty() {
+            let tail = GraphStorage::from_events(
+                self.active_edges.clone(),
+                self.active_nodes.clone(),
+                self.num_nodes,
+                None,
+                Some(g),
+            )?;
+            segments.push(Arc::new(tail));
+            ids.push(next_id());
+        }
+        if segments.is_empty() {
+            return Err(TgmError::Graph(
+                "cannot snapshot an empty segmented storage (append at least one edge)".into(),
+            ));
+        }
+        let snap = Arc::new(StorageSnapshot::from_parts(
+            segments,
+            ids,
+            self.num_nodes,
+            g,
+            self.static_feat_dim,
+            Arc::clone(&self.static_feats),
+            SnapshotId { store: self.store_id, generation: self.generation },
+        ));
+        self.cached_snapshot = Some((self.generation, Arc::clone(&snap)));
+        Ok(snap)
+    }
+}
+
+/// Concatenate globally time-sorted segments into one `GraphStorage`.
+fn merge_segments(
+    segments: &[Arc<GraphStorage>],
+    num_nodes: usize,
+    granularity: TimeGranularity,
+    static_feat_dim: usize,
+    static_feats: Vec<f32>,
+) -> GraphStorage {
+    let e: usize = segments.iter().map(|s| s.num_edges()).sum();
+    let ne: usize = segments.iter().map(|s| s.num_node_events()).sum();
+    let d = segments.first().map_or(0, |s| s.edge_feat_dim());
+    let nd = segments
+        .iter()
+        .find(|s| s.num_node_events() > 0)
+        .map_or(0, |s| s.node_feat_dim());
+    let mut ts = Vec::with_capacity(e);
+    let mut src = Vec::with_capacity(e);
+    let mut dst = Vec::with_capacity(e);
+    let mut feats = Vec::with_capacity(e * d);
+    let mut nts = Vec::with_capacity(ne);
+    let mut nid = Vec::with_capacity(ne);
+    let mut nfeats = Vec::with_capacity(ne * nd);
+    for s in segments {
+        ts.extend_from_slice(s.edge_ts());
+        src.extend_from_slice(s.edge_src());
+        dst.extend_from_slice(s.edge_dst());
+        feats.extend_from_slice(s.edge_feats());
+        nts.extend_from_slice(s.node_event_ts());
+        nid.extend_from_slice(s.node_event_ids());
+        nfeats.extend_from_slice(s.node_event_feats());
+    }
+    GraphStorage::from_sorted_columns(
+        ts,
+        src,
+        dst,
+        d,
+        feats,
+        nts,
+        nid,
+        nd,
+        nfeats,
+        num_nodes,
+        static_feat_dim,
+        static_feats,
+        granularity,
+    )
+}
+
+/// Immutable, versioned view over one or more time-sorted segments,
+/// exposing the [`GraphStorage`] read API through a logical-offset layer.
+///
+/// Logical edge index `i` addresses the `i`-th event of the concatenation
+/// of all segments; because sealed segments cover non-decreasing time
+/// spans, the concatenated timestamp column is globally sorted and every
+/// time query resolves to one contiguous logical range.
+#[derive(Debug, Clone)]
+pub struct StorageSnapshot {
+    segments: Vec<Arc<GraphStorage>>,
+    /// Globally unique, never-reused segment ids (adjacency-cache keys).
+    segment_ids: Vec<u64>,
+    /// Prefix sums of segment edge counts (`len == segments.len() + 1`).
+    edge_bases: Vec<usize>,
+    /// Prefix sums of segment node-event counts.
+    node_bases: Vec<usize>,
+    num_nodes: usize,
+    granularity: TimeGranularity,
+    static_feat_dim: usize,
+    static_feats: Arc<Vec<f32>>,
+    id: SnapshotId,
+}
+
+impl StorageSnapshot {
+    /// Wrap a single standalone storage (one-shot datasets). The snapshot
+    /// gets a fresh store id and generation 0. Static features stay in
+    /// the wrapped segment (no copy); [`Self::static_feats`] falls back
+    /// to it.
+    pub fn from_storage(storage: GraphStorage) -> StorageSnapshot {
+        let static_feat_dim = storage.static_feat_dim();
+        let num_nodes = storage.num_nodes();
+        let granularity = storage.granularity();
+        StorageSnapshot::from_parts(
+            vec![Arc::new(storage)],
+            vec![next_id()],
+            num_nodes,
+            granularity,
+            static_feat_dim,
+            Arc::new(Vec::new()),
+            SnapshotId { store: next_id(), generation: 0 },
+        )
+    }
+
+    pub(crate) fn from_parts(
+        segments: Vec<Arc<GraphStorage>>,
+        segment_ids: Vec<u64>,
+        num_nodes: usize,
+        granularity: TimeGranularity,
+        static_feat_dim: usize,
+        static_feats: Arc<Vec<f32>>,
+        id: SnapshotId,
+    ) -> StorageSnapshot {
+        debug_assert_eq!(segments.len(), segment_ids.len());
+        let mut edge_bases = Vec::with_capacity(segments.len() + 1);
+        let mut node_bases = Vec::with_capacity(segments.len() + 1);
+        let (mut e, mut ne) = (0usize, 0usize);
+        edge_bases.push(0);
+        node_bases.push(0);
+        for s in &segments {
+            e += s.num_edges();
+            ne += s.num_node_events();
+            edge_bases.push(e);
+            node_bases.push(ne);
+        }
+        StorageSnapshot {
+            segments,
+            segment_ids,
+            edge_bases,
+            node_bases,
+            num_nodes,
+            granularity,
+            static_feat_dim,
+            static_feats,
+            id,
+        }
+    }
+
+    /// Wrap in an `Arc` for sharing with views.
+    pub fn into_shared(self) -> Arc<StorageSnapshot> {
+        Arc::new(self)
+    }
+
+    // ------------------------------------------------------------------
+    // identity & segments
+    // ------------------------------------------------------------------
+
+    /// Versioned identity (cache key: replaces pointer fingerprints).
+    pub fn id(&self) -> SnapshotId {
+        self.id
+    }
+
+    /// Generation of the producing store at snapshot time.
+    pub fn generation(&self) -> u64 {
+        self.id.generation
+    }
+
+    /// Number of segments behind this snapshot.
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// The underlying immutable segments, oldest first.
+    pub fn segments(&self) -> &[Arc<GraphStorage>] {
+        &self.segments
+    }
+
+    /// Globally unique segment ids, parallel to [`Self::segments`].
+    pub fn segment_ids(&self) -> &[u64] {
+        &self.segment_ids
+    }
+
+    /// Logical edge offset of segment `s`'s first event.
+    pub fn segment_edge_base(&self, s: usize) -> usize {
+        self.edge_bases[s]
+    }
+
+    /// Coalesce into one contiguous `GraphStorage`. Free for
+    /// single-segment snapshots that already carry the static features
+    /// and the snapshot's granularity (the common one-shot dataset case);
+    /// otherwise a linear merge.
+    pub fn coalesce(&self) -> Arc<GraphStorage> {
+        if self.segments.len() == 1
+            && self.segments[0].static_feat_dim() == self.static_feat_dim
+            && self.segments[0].granularity() == self.granularity
+        {
+            return Arc::clone(&self.segments[0]);
+        }
+        Arc::new(merge_segments(
+            &self.segments,
+            self.num_nodes,
+            self.granularity,
+            self.static_feat_dim,
+            self.static_feats().to_vec(),
+        ))
+    }
+
+    // ------------------------------------------------------------------
+    // metadata (mirrors GraphStorage)
+    // ------------------------------------------------------------------
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        *self.edge_bases.last().unwrap()
+    }
+
+    pub fn num_node_events(&self) -> usize {
+        *self.node_bases.last().unwrap()
+    }
+
+    pub fn edge_feat_dim(&self) -> usize {
+        self.segments[0].edge_feat_dim()
+    }
+
+    pub fn node_feat_dim(&self) -> usize {
+        self.segments
+            .iter()
+            .find(|s| s.num_node_events() > 0)
+            .map_or(0, |s| s.node_feat_dim())
+    }
+
+    pub fn static_feat_dim(&self) -> usize {
+        self.static_feat_dim
+    }
+
+    /// Static node feature matrix (`num_nodes x static_feat_dim`).
+    /// Owned by the snapshot for streamed stores; single-segment wraps of
+    /// a standalone storage delegate to the segment's matrix (no copy).
+    pub fn static_feats(&self) -> &[f32] {
+        if self.static_feats.is_empty() && self.static_feat_dim > 0 {
+            return self.segments[0].static_feats();
+        }
+        &self.static_feats
+    }
+
+    /// Native time granularity (shared by all segments).
+    pub fn granularity(&self) -> TimeGranularity {
+        self.granularity
+    }
+
+    /// Timestamp of the first edge event.
+    pub fn start_time(&self) -> Timestamp {
+        self.segments[0].start_time()
+    }
+
+    /// Timestamp of the last edge event.
+    pub fn end_time(&self) -> Timestamp {
+        self.segments.last().unwrap().end_time()
+    }
+
+    /// Number of distinct edge timestamps across all segments (boundary
+    /// timestamps shared by adjacent segments are counted once).
+    pub fn num_unique_timestamps(&self) -> usize {
+        let mut total = 0usize;
+        let mut prev: Option<Timestamp> = None;
+        for s in &self.segments {
+            total += s.num_unique_timestamps();
+            if prev == Some(s.start_time()) {
+                total -= 1;
+            }
+            prev = Some(s.end_time());
+        }
+        total
+    }
+
+    /// Total bytes held by the snapshot's segments.
+    pub fn byte_size(&self) -> usize {
+        self.segments.iter().map(|s| s.byte_size()).sum::<usize>()
+            + self.static_feats.len() * 4
+            + (self.edge_bases.len() + self.node_bases.len()) * 8
+    }
+
+    // ------------------------------------------------------------------
+    // logical-offset layer
+    // ------------------------------------------------------------------
+
+    /// Segment index owning logical edge offset `i`.
+    fn edge_segment_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.num_edges());
+        self.edge_bases.partition_point(|&b| b <= i) - 1
+    }
+
+    fn node_segment_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.num_node_events());
+        self.node_bases.partition_point(|&b| b <= i) - 1
+    }
+
+    /// Source node of the logical `i`-th edge event.
+    pub fn edge_src_at(&self, i: usize) -> NodeId {
+        let s = self.edge_segment_of(i);
+        self.segments[s].edge_src()[i - self.edge_bases[s]]
+    }
+
+    /// Destination node of the logical `i`-th edge event.
+    pub fn edge_dst_at(&self, i: usize) -> NodeId {
+        let s = self.edge_segment_of(i);
+        self.segments[s].edge_dst()[i - self.edge_bases[s]]
+    }
+
+    /// Timestamp of the logical `i`-th edge event.
+    pub fn edge_ts_at(&self, i: usize) -> Timestamp {
+        let s = self.edge_segment_of(i);
+        self.segments[s].edge_ts()[i - self.edge_bases[s]]
+    }
+
+    /// Feature row of the logical `i`-th edge event.
+    pub fn edge_feat_row(&self, i: usize) -> &[f32] {
+        let s = self.edge_segment_of(i);
+        self.segments[s].edge_feat_row(i - self.edge_bases[s])
+    }
+
+    /// `(timestamp, node)` of the logical `i`-th node event.
+    pub fn node_event_at(&self, i: usize) -> (Timestamp, NodeId) {
+        let s = self.node_segment_of(i);
+        let local = i - self.node_bases[s];
+        (self.segments[s].node_event_ts()[local], self.segments[s].node_event_ids()[local])
+    }
+
+    /// Feature row of the logical `i`-th node event.
+    pub fn node_event_feat_row(&self, i: usize) -> &[f32] {
+        let s = self.node_segment_of(i);
+        self.segments[s].node_event_feat_row(i - self.node_bases[s])
+    }
+
+    /// Map a logical edge range onto per-segment slices: yields
+    /// `(segment, local_range)` pairs in logical order. This is the bulk
+    /// read path (`materialize_window`, stats, target construction).
+    pub fn edge_chunks(&self, range: Range<usize>) -> Vec<(&GraphStorage, Range<usize>)> {
+        let mut out = Vec::new();
+        let mut lo = range.start;
+        while lo < range.end {
+            let s = self.edge_bases.partition_point(|&b| b <= lo) - 1;
+            let base = self.edge_bases[s];
+            let seg = self.segments[s].as_ref();
+            let hi = range.end.min(base + seg.num_edges());
+            out.push((seg, (lo - base)..(hi - base)));
+            lo = hi;
+        }
+        out
+    }
+
+    /// Map a logical node-event range onto per-segment slices.
+    pub fn node_event_chunks(&self, range: Range<usize>) -> Vec<(&GraphStorage, Range<usize>)> {
+        let mut out = Vec::new();
+        let mut lo = range.start;
+        while lo < range.end {
+            let s = self.node_bases.partition_point(|&b| b <= lo) - 1;
+            let base = self.node_bases[s];
+            let seg = self.segments[s].as_ref();
+            let hi = range.end.min(base + seg.num_node_events());
+            out.push((seg, (lo - base)..(hi - base)));
+            lo = hi;
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // full-column copies (compat / tests; hot paths use the chunk APIs)
+    // ------------------------------------------------------------------
+
+    /// Copy one per-event column over a logical edge range, chunked by
+    /// segment (also backs the [`crate::graph::DGraph`] window accessors).
+    pub fn copy_edge_column<T, F>(&self, range: Range<usize>, col: F) -> Vec<T>
+    where
+        T: Copy,
+        F: for<'a> Fn(&'a GraphStorage) -> &'a [T],
+    {
+        let mut out = Vec::with_capacity(range.len());
+        for (seg, local) in self.edge_chunks(range) {
+            out.extend_from_slice(&col(seg)[local]);
+        }
+        out
+    }
+
+    /// Concatenated edge timestamp column (a copy for multi-segment
+    /// snapshots; prefer [`Self::edge_chunks`] on hot paths).
+    pub fn edge_ts(&self) -> Vec<Timestamp> {
+        self.copy_edge_column(0..self.num_edges(), GraphStorage::edge_ts)
+    }
+
+    /// Concatenated edge source column.
+    pub fn edge_src(&self) -> Vec<NodeId> {
+        self.copy_edge_column(0..self.num_edges(), GraphStorage::edge_src)
+    }
+
+    /// Concatenated edge destination column.
+    pub fn edge_dst(&self) -> Vec<NodeId> {
+        self.copy_edge_column(0..self.num_edges(), GraphStorage::edge_dst)
+    }
+
+    /// Concatenated flattened edge feature matrix.
+    pub fn edge_feats(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_edges() * self.edge_feat_dim());
+        for s in &self.segments {
+            out.extend_from_slice(s.edge_feats());
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // time queries
+    // ------------------------------------------------------------------
+
+    /// Logical offset of the first edge event with timestamp `>= t`.
+    pub fn edge_lower_bound(&self, t: Timestamp) -> usize {
+        // Segment end times are non-decreasing, so the first segment that
+        // can contain `t` is found by binary search.
+        let s = self.segments.partition_point(|seg| seg.end_time() < t);
+        if s == self.segments.len() {
+            return self.num_edges();
+        }
+        self.edge_bases[s] + self.segments[s].edge_lower_bound(t)
+    }
+
+    /// Logical index range of edge events with `t0 <= t < t1`.
+    pub fn edge_range(&self, t0: Timestamp, t1: Timestamp) -> Range<usize> {
+        if t1 <= t0 {
+            return 0..0;
+        }
+        self.edge_lower_bound(t0)..self.edge_lower_bound(t1)
+    }
+
+    /// Logical offset of the first node event with timestamp `>= t`.
+    pub fn node_event_lower_bound(&self, t: Timestamp) -> usize {
+        // Node events are sparse; a linear scan over segments suffices
+        // (segments with no node events are skipped).
+        for (s, seg) in self.segments.iter().enumerate() {
+            if seg.num_node_events() == 0 {
+                continue;
+            }
+            let last = *seg.node_event_ts().last().unwrap();
+            if last < t {
+                continue;
+            }
+            return self.node_bases[s] + seg.node_event_lower_bound(t);
+        }
+        self.num_node_events()
+    }
+
+    /// Logical index range of node events with `t0 <= t < t1`.
+    pub fn node_event_range(&self, t0: Timestamp, t1: Timestamp) -> Range<usize> {
+        if t1 <= t0 {
+            return 0..0;
+        }
+        self.node_event_lower_bound(t0)..self.node_event_lower_bound(t1)
+    }
+
+    /// Latest dynamic feature row for `node` strictly before `t` (newest
+    /// segment first; `O(segments + log k)` via the per-segment per-node
+    /// indices).
+    pub fn latest_node_features_before(&self, node: NodeId, t: Timestamp) -> Option<&[f32]> {
+        for seg in self.segments.iter().rev() {
+            if let Some(row) = seg.latest_node_features_before(node, t) {
+                return Some(row);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edge(t: Timestamp, src: NodeId, dst: NodeId) -> EdgeEvent {
+        EdgeEvent { t, src, dst, features: vec![t as f32, src as f32] }
+    }
+
+    /// A deterministic event stream with duplicate timestamps and bursts.
+    fn stream(n: usize) -> Vec<EdgeEvent> {
+        (0..n)
+            .map(|i| edge((i as i64 / 3) * 10, (i % 5) as u32, 5 + (i % 3) as u32))
+            .collect()
+    }
+
+    fn build_segmented(events: &[EdgeEvent], seal_every: usize) -> SegmentedStorage {
+        let mut st = SegmentedStorage::new(8, SealPolicy { max_events: seal_every, max_span: None });
+        for e in events {
+            st.append_edge(e.clone()).unwrap();
+        }
+        st
+    }
+
+    #[test]
+    fn appended_stream_matches_from_events() {
+        let events = stream(100);
+        let reference =
+            GraphStorage::from_events(events.clone(), vec![], 8, None, None).unwrap();
+        let mut st = build_segmented(&events, 16);
+        st.seal().unwrap();
+        assert!(st.num_sealed_segments() > 4, "want several segments");
+        let snap = st.snapshot().unwrap();
+        assert_eq!(snap.num_edges(), reference.num_edges());
+        assert_eq!(snap.edge_ts(), reference.edge_ts());
+        assert_eq!(snap.edge_src(), reference.edge_src());
+        assert_eq!(snap.edge_dst(), reference.edge_dst());
+        assert_eq!(snap.edge_feats(), reference.edge_feats());
+        assert_eq!(snap.start_time(), reference.start_time());
+        assert_eq!(snap.end_time(), reference.end_time());
+        assert_eq!(snap.num_unique_timestamps(), reference.num_unique_timestamps());
+    }
+
+    #[test]
+    fn snapshot_includes_frozen_tail() {
+        let events = stream(50);
+        let mut st = build_segmented(&events, 32); // 32 sealed + 18 active
+        assert_eq!(st.num_sealed_segments(), 1);
+        assert_eq!(st.pending_edges(), 18);
+        let snap = st.snapshot().unwrap();
+        assert_eq!(snap.num_edges(), 50, "tail must be frozen into the snapshot");
+        assert_eq!(snap.num_segments(), 2);
+        let reference = GraphStorage::from_events(events, vec![], 8, None, None).unwrap();
+        assert_eq!(snap.edge_ts(), reference.edge_ts());
+    }
+
+    #[test]
+    fn logical_time_queries_match_single_storage() {
+        let events = stream(120);
+        let reference =
+            GraphStorage::from_events(events.clone(), vec![], 8, None, None).unwrap();
+        let mut st = build_segmented(&events, 13);
+        let snap = st.snapshot().unwrap();
+        for t0 in (-10i64..420).step_by(7) {
+            for span in [0i64, 5, 10, 50, 1000] {
+                let a = reference.edge_range(t0, t0 + span);
+                let b = snap.edge_range(t0, t0 + span);
+                assert_eq!(a, b, "range [{t0}, {})", t0 + span);
+            }
+        }
+        for i in 0..reference.num_edges() {
+            assert_eq!(snap.edge_ts_at(i), reference.edge_ts()[i]);
+            assert_eq!(snap.edge_src_at(i), reference.edge_src()[i]);
+            assert_eq!(snap.edge_dst_at(i), reference.edge_dst()[i]);
+            assert_eq!(snap.edge_feat_row(i), reference.edge_feat_row(i));
+        }
+    }
+
+    #[test]
+    fn edge_chunks_tile_ranges() {
+        let events = stream(90);
+        let mut st = build_segmented(&events, 17);
+        let snap = st.snapshot().unwrap();
+        for (lo, hi) in [(0usize, 90usize), (5, 40), (16, 18), (89, 90), (30, 30)] {
+            let chunks = snap.edge_chunks(lo..hi);
+            let total: usize = chunks.iter().map(|(_, r)| r.len()).sum();
+            assert_eq!(total, hi - lo, "chunks must tile [{lo}, {hi})");
+            // Chunk contents match per-index reads.
+            let mut i = lo;
+            for (seg, r) in chunks {
+                for local in r {
+                    assert_eq!(seg.edge_ts()[local], snap.edge_ts_at(i));
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_order_within_active_sorts_on_seal() {
+        let mut st = SegmentedStorage::new(4, SealPolicy::default());
+        st.append_edge(edge(30, 0, 1)).unwrap();
+        st.append_edge(edge(10, 1, 2)).unwrap();
+        st.append_edge(edge(20, 2, 3)).unwrap();
+        st.seal().unwrap();
+        let snap = st.snapshot().unwrap();
+        assert_eq!(snap.edge_ts(), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn stale_appends_rejected_with_typed_error() {
+        let mut st = SegmentedStorage::new(4, SealPolicy::default());
+        st.append_edge(edge(10, 0, 1)).unwrap();
+        st.append_edge(edge(30, 1, 2)).unwrap();
+        st.seal().unwrap();
+        // Older than the last sealed edge timestamp: rejected.
+        let err = st.append_edge(edge(29, 0, 1)).unwrap_err();
+        assert!(matches!(err, TgmError::StaleAppend(_)), "{err}");
+        // Equal to the boundary: accepted (stable order keeps it after).
+        st.append_edge(edge(30, 2, 3)).unwrap();
+        st.seal().unwrap();
+        let snap = st.snapshot().unwrap();
+        assert_eq!(snap.edge_ts(), vec![10, 30, 30]);
+        assert_eq!(snap.edge_src_at(1), 1, "sealed event stays first at the tied boundary");
+    }
+
+    #[test]
+    fn snapshot_isolation_under_concurrent_writes() {
+        let events = stream(60);
+        let mut st = build_segmented(&events[..40], 16);
+        let old = st.snapshot().unwrap();
+        let old_ts = old.edge_ts();
+        let old_gen = old.generation();
+        // Writer keeps appending and sealing a new generation.
+        for e in &events[40..] {
+            st.append_edge(e.clone()).unwrap();
+        }
+        st.seal().unwrap();
+        let new = st.snapshot().unwrap();
+        assert!(new.generation() > old_gen);
+        assert_eq!(new.num_edges(), 60);
+        // The old snapshot is untouched: same length, same bytes.
+        assert_eq!(old.num_edges(), 40);
+        assert_eq!(old.edge_ts(), old_ts);
+        assert_ne!(old.id(), new.id());
+    }
+
+    #[test]
+    fn snapshot_memoized_per_generation() {
+        let mut st = build_segmented(&stream(20), 8);
+        let a = st.snapshot().unwrap();
+        let b = st.snapshot().unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "no writes -> same snapshot");
+        st.append_edge(edge(1000, 0, 1)).unwrap();
+        let c = st.snapshot().unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(c.num_edges(), 21);
+    }
+
+    #[test]
+    fn auto_seal_on_size_and_span() {
+        let mut st = SegmentedStorage::new(4, SealPolicy { max_events: 3, max_span: None });
+        assert!(!st.append_edge(edge(1, 0, 1)).unwrap());
+        assert!(!st.append_edge(edge(2, 0, 1)).unwrap());
+        assert!(st.append_edge(edge(3, 0, 1)).unwrap(), "size threshold seals");
+        assert_eq!(st.num_sealed_segments(), 1);
+        assert_eq!(st.pending_edges(), 0);
+
+        let mut st2 =
+            SegmentedStorage::new(4, SealPolicy { max_events: usize::MAX, max_span: Some(100) });
+        assert!(!st2.append_edge(edge(0, 0, 1)).unwrap());
+        assert!(!st2.append_edge(edge(100, 0, 1)).unwrap());
+        assert!(st2.append_edge(edge(101, 0, 1)).unwrap(), "span threshold seals");
+    }
+
+    #[test]
+    fn compaction_preserves_content() {
+        let events = stream(80);
+        let mut st = build_segmented(&events, 11);
+        st.seal().unwrap();
+        let before = st.snapshot().unwrap();
+        let before_ts = before.edge_ts();
+        let segs = st.num_sealed_segments();
+        assert!(segs > 3);
+        assert!(st.compact().unwrap());
+        assert_eq!(st.num_sealed_segments(), 1);
+        let after = st.snapshot().unwrap();
+        assert_eq!(after.num_segments(), 1);
+        assert_eq!(after.edge_ts(), before_ts);
+        assert_eq!(after.edge_src(), before.edge_src());
+        assert_eq!(after.edge_feats(), before.edge_feats());
+        assert_ne!(before.id(), after.id(), "compaction is a new generation");
+        // Nothing further to compact.
+        assert!(!st.compact().unwrap());
+    }
+
+    #[test]
+    fn node_events_stream_and_lookup_across_segments() {
+        let mut st = SegmentedStorage::new(4, SealPolicy { max_events: 2, max_span: None });
+        st.append_node_event(NodeEvent { t: 5, node: 1, features: vec![1.0] }).unwrap();
+        st.append_edge(edge(10, 0, 1)).unwrap();
+        st.append_edge(edge(20, 1, 2)).unwrap(); // seals segment 1
+        st.append_node_event(NodeEvent { t: 25, node: 1, features: vec![2.0] }).unwrap();
+        st.append_edge(edge(30, 2, 3)).unwrap();
+        st.append_edge(edge(40, 3, 0)).unwrap(); // seals segment 2
+        let snap = st.snapshot().unwrap();
+        assert_eq!(snap.num_node_events(), 2);
+        assert_eq!(snap.node_event_range(0, 100), 0..2);
+        assert_eq!(snap.node_event_range(6, 100), 1..2);
+        assert_eq!(snap.node_event_at(0), (5, 1));
+        assert_eq!(snap.node_event_at(1), (25, 1));
+        assert_eq!(snap.latest_node_features_before(1, 6).unwrap(), &[1.0]);
+        assert_eq!(snap.latest_node_features_before(1, 100).unwrap(), &[2.0]);
+        assert_eq!(snap.latest_node_features_before(1, 5), None);
+        assert_eq!(snap.latest_node_features_before(0, 100), None);
+        // Stale node-event appends are rejected once sealed.
+        let err = st.append_node_event(NodeEvent { t: 1, node: 0, features: vec![0.0] });
+        assert!(matches!(err.unwrap_err(), TgmError::StaleAppend(_)));
+    }
+
+    #[test]
+    fn empty_and_node_only_states() {
+        let mut st = SegmentedStorage::new(4, SealPolicy::default());
+        assert!(st.snapshot().is_err(), "empty store has no snapshot");
+        assert!(!st.seal().unwrap(), "empty seal is a no-op");
+        // Node events alone do not seal; they wait for an edge.
+        st.append_node_event(NodeEvent { t: 1, node: 0, features: vec![] }).unwrap();
+        assert!(!st.seal().unwrap());
+        assert_eq!(st.pending_node_events(), 1);
+        st.append_edge(edge(2, 0, 1)).unwrap();
+        assert!(st.seal().unwrap());
+        let snap = st.snapshot().unwrap();
+        assert_eq!(snap.num_node_events(), 1);
+        assert_eq!(snap.num_edges(), 1);
+    }
+
+    #[test]
+    fn append_validation() {
+        let mut st = SegmentedStorage::new(4, SealPolicy::default());
+        // Out-of-range node id.
+        assert!(st.append_edge(edge(1, 0, 9)).is_err());
+        // Inconsistent feature dims (first append fixes the dim).
+        st.append_edge(EdgeEvent { t: 1, src: 0, dst: 1, features: vec![1.0] }).unwrap();
+        assert!(st
+            .append_edge(EdgeEvent { t: 2, src: 0, dst: 1, features: vec![1.0, 2.0] })
+            .is_err());
+    }
+
+    #[test]
+    fn from_storage_snapshot_round_trip() {
+        let reference =
+            GraphStorage::from_events(stream(30), vec![], 8, Some((2, vec![0.5; 16])), None)
+                .unwrap();
+        let n = reference.num_edges();
+        let snap = reference.into_snapshot();
+        assert_eq!(snap.num_segments(), 1);
+        assert_eq!(snap.num_edges(), n);
+        assert_eq!(snap.static_feat_dim(), 2);
+        assert_eq!(snap.static_feats().len(), 16);
+        // Single-segment coalesce is free (same allocation).
+        let co = snap.coalesce();
+        assert!(Arc::ptr_eq(&co, &snap.segments()[0]));
+    }
+
+    #[test]
+    fn granularity_refines_with_the_stream_like_from_events() {
+        // First segment is one burst of ties: a prefix-only inference
+        // would pin the event-ordered granularity forever. The store must
+        // instead track the whole stream, exactly like `from_events`.
+        let mut st = SegmentedStorage::new(4, SealPolicy { max_events: 3, max_span: None });
+        for _ in 0..3 {
+            st.append_edge(edge(100, 0, 1)).unwrap(); // auto-seals at 3
+        }
+        assert_eq!(st.snapshot().unwrap().granularity(), TimeGranularity::Event);
+        // Spaced events arrive: inference refines to the minute unit.
+        st.append_edge(edge(160, 1, 2)).unwrap();
+        st.append_edge(edge(220, 2, 3)).unwrap();
+        st.seal().unwrap();
+        let snap = st.snapshot().unwrap();
+        let all = vec![edge(100, 0, 1), edge(100, 0, 1), edge(100, 0, 1), edge(160, 1, 2), edge(220, 2, 3)];
+        let reference = GraphStorage::from_events(all, vec![], 4, None, None).unwrap();
+        assert_eq!(snap.granularity(), reference.granularity());
+        assert_eq!(snap.granularity(), TimeGranularity::Minute);
+        // The tail contributes to inference before sealing, too.
+        let mut st2 = SegmentedStorage::new(4, SealPolicy::default());
+        st2.append_edge(edge(0, 0, 1)).unwrap();
+        st2.append_edge(edge(3600, 1, 2)).unwrap();
+        assert_eq!(st2.snapshot().unwrap().granularity(), TimeGranularity::Hour);
+    }
+
+    #[test]
+    fn snapshot_ids_are_unique_across_stores() {
+        let mut a = build_segmented(&stream(10), 4);
+        let mut b = build_segmented(&stream(10), 4);
+        assert_ne!(a.snapshot().unwrap().id(), b.snapshot().unwrap().id());
+    }
+
+    #[test]
+    fn snapshot_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<StorageSnapshot>();
+        assert_send_sync::<Arc<StorageSnapshot>>();
+        assert_send_sync::<SegmentedStorage>();
+    }
+}

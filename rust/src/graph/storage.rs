@@ -1,4 +1,4 @@
-//! Immutable, time-sorted COO graph storage (paper §4, "Graph Storage").
+//! Immutable, time-sorted COO segment storage (paper §4, "Graph Storage").
 //!
 //! The backend is a columnar structure-of-arrays: edge timestamps, sources,
 //! destinations and a flattened edge-feature matrix, all sorted by
@@ -8,16 +8,21 @@
 //! time-slicing and recent-neighbor retrieval: lookups are a binary search
 //! over unique timestamps instead of the full event array.
 //!
-//! The storage is read-only after construction (the paper sidesteps
-//! insertion/deletion complexity by assuming a read-only event log), which
-//! makes views concurrency-safe by construction: they share the storage
-//! through an `Arc` and carry only time bounds.
+//! A `GraphStorage` is read-only after construction, which makes readers
+//! concurrency-safe by construction. Since the segmented-storage refactor
+//! it plays the role of **one sealed segment**: the streaming layer
+//! ([`super::segment::SegmentedStorage`]) stacks several of these behind
+//! an immutable [`super::segment::StorageSnapshot`] that exposes the same
+//! read API over logical offsets, so everything downstream (views,
+//! loaders, hooks) works identically on one-shot and streamed graphs.
 
 use crate::error::{Result, TgmError};
 use crate::graph::events::{EdgeEvent, NodeEvent, NodeId};
+use crate::graph::segment::StorageSnapshot;
 use crate::util::{infer_native_granularity, TimeGranularity, Timestamp};
+use std::collections::HashMap;
 use std::ops::Range;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Immutable columnar storage for one temporal graph.
 #[derive(Debug)]
@@ -41,6 +46,11 @@ pub struct GraphStorage {
     granularity: TimeGranularity,
     /// Cached index: (unique timestamp, offset of its first edge event).
     ts_index: Vec<(Timestamp, u32)>,
+    /// Lazily built per-node index into the node-event columns (positions
+    /// are ascending, hence time-sorted). Makes
+    /// [`GraphStorage::latest_node_features_before`] an `O(log k)` lookup
+    /// instead of a reverse linear scan over all node events.
+    node_index: OnceLock<HashMap<NodeId, Vec<u32>>>,
 }
 
 impl GraphStorage {
@@ -142,12 +152,14 @@ impl GraphStorage {
             num_nodes,
             granularity,
             ts_index,
+            node_index: OnceLock::new(),
         })
     }
 
-    /// Build directly from sorted columns (used by discretization, which
-    /// produces already-sorted output). Callers must guarantee `ts` is
-    /// non-decreasing; this is checked in debug builds.
+    /// Build directly from sorted columns (used by discretization and
+    /// segment compaction, which produce already-sorted output). Callers
+    /// must guarantee both timestamp columns are non-decreasing; this is
+    /// checked in debug builds.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn from_sorted_columns(
         ts: Vec<Timestamp>,
@@ -155,12 +167,20 @@ impl GraphStorage {
         dst: Vec<NodeId>,
         edge_feat_dim: usize,
         edge_feats: Vec<f32>,
+        node_ev_ts: Vec<Timestamp>,
+        node_ev_id: Vec<NodeId>,
+        node_feat_dim: usize,
+        node_ev_feats: Vec<f32>,
         num_nodes: usize,
         static_feat_dim: usize,
         static_feats: Vec<f32>,
         granularity: TimeGranularity,
     ) -> GraphStorage {
         debug_assert!(ts.windows(2).all(|w| w[0] <= w[1]), "columns must be time-sorted");
+        debug_assert!(
+            node_ev_ts.windows(2).all(|w| w[0] <= w[1]),
+            "node-event columns must be time-sorted"
+        );
         let ts_index = build_ts_index(&ts);
         GraphStorage {
             ts,
@@ -168,21 +188,33 @@ impl GraphStorage {
             dst,
             edge_feat_dim,
             edge_feats,
-            node_ev_ts: Vec::new(),
-            node_ev_id: Vec::new(),
-            node_feat_dim: 0,
-            node_ev_feats: Vec::new(),
+            node_ev_ts,
+            node_ev_id,
+            node_feat_dim,
+            node_ev_feats,
             static_feat_dim,
             static_feats,
             num_nodes,
             granularity,
             ts_index,
+            node_index: OnceLock::new(),
         }
     }
 
     /// Wrap in an `Arc` for sharing with views.
     pub fn into_shared(self) -> Arc<GraphStorage> {
         Arc::new(self)
+    }
+
+    /// Wrap as a single-segment [`StorageSnapshot`] — the type views,
+    /// loaders and hooks read from.
+    pub fn into_snapshot(self) -> StorageSnapshot {
+        StorageSnapshot::from_storage(self)
+    }
+
+    /// Wrap as a shared single-segment snapshot.
+    pub fn into_shared_snapshot(self) -> Arc<StorageSnapshot> {
+        Arc::new(self.into_snapshot())
     }
 
     // ------------------------------------------------------------------
@@ -296,14 +328,17 @@ impl GraphStorage {
         if t1 <= t0 {
             return 0..0;
         }
+        self.edge_lower_bound(t0)..self.edge_lower_bound(t1)
+    }
+
+    /// Offset of the first edge event with timestamp `>= t` (also the
+    /// segment-local entry point for [`StorageSnapshot`] range mapping).
+    pub fn edge_lower_bound(&self, t: Timestamp) -> usize {
         if self.ts_index.len() * 4 > self.ts.len() * 3 {
-            let lo = self.ts.partition_point(|&u| u < t0);
-            let hi = self.ts.partition_point(|&u| u < t1);
-            return lo..hi;
+            self.ts.partition_point(|&u| u < t)
+        } else {
+            self.index_lower_bound(t)
         }
-        let lo = self.index_lower_bound(t0);
-        let hi = self.index_lower_bound(t1);
-        lo..hi
     }
 
     /// Offset of the first edge with timestamp >= t.
@@ -322,19 +357,39 @@ impl GraphStorage {
         if t1 <= t0 {
             return 0..0;
         }
-        let lo = self.node_ev_ts.partition_point(|&u| u < t0);
-        let hi = self.node_ev_ts.partition_point(|&u| u < t1);
-        lo..hi
+        self.node_event_lower_bound(t0)..self.node_event_lower_bound(t1)
+    }
+
+    /// Offset of the first node event with timestamp `>= t`.
+    pub fn node_event_lower_bound(&self, t: Timestamp) -> usize {
+        self.node_ev_ts.partition_point(|&u| u < t)
+    }
+
+    /// Lazily built per-node positions into the node-event columns.
+    fn node_index(&self) -> &HashMap<NodeId, Vec<u32>> {
+        self.node_index.get_or_init(|| {
+            let mut index: HashMap<NodeId, Vec<u32>> = HashMap::new();
+            for (i, &n) in self.node_ev_id.iter().enumerate() {
+                index.entry(n).or_default().push(i as u32);
+            }
+            index
+        })
     }
 
     /// Latest dynamic feature row for `node` strictly before `t`, falling
     /// back to `None` when no node event precedes `t`.
+    ///
+    /// `O(log k)` in the node's own event count `k` via the lazily built
+    /// per-node index (the positions are ascending, hence time-sorted),
+    /// replacing the old `O(num_node_events)` reverse linear scan.
     pub fn latest_node_features_before(&self, node: NodeId, t: Timestamp) -> Option<&[f32]> {
-        let hi = self.node_ev_ts.partition_point(|&u| u < t);
-        self.node_ev_id[..hi]
-            .iter()
-            .rposition(|&n| n == node)
-            .map(|i| self.node_event_feat_row(i))
+        let positions = self.node_index().get(&node)?;
+        let cut = positions.partition_point(|&i| self.node_ev_ts[i as usize] < t);
+        if cut == 0 {
+            None
+        } else {
+            Some(self.node_event_feat_row(positions[cut - 1] as usize))
+        }
     }
 
     /// Total bytes held by this storage (memory accounting, Table 10).

@@ -1,22 +1,26 @@
 //! Lightweight, concurrency-safe temporal sub-graph views (paper §4).
 //!
-//! A [`DGraph`] is a time-bounded window `[start, end)` over shared,
-//! immutable [`GraphStorage`], plus a *read granularity* that encodes how
-//! the window is iterated: the event-ordered granularity gives CTDG-style
-//! fixed-size event batches, any coarser wall-clock granularity gives
-//! DTDG-style snapshots (Definitions 3.3/3.4). Views are cheap to clone
-//! and share the storage through an `Arc`.
+//! A [`DGraph`] is a time-bounded window `[start, end)` over a shared,
+//! immutable [`StorageSnapshot`], plus a *read granularity* that encodes
+//! how the window is iterated: the event-ordered granularity gives
+//! CTDG-style fixed-size event batches, any coarser wall-clock granularity
+//! gives DTDG-style snapshots (Definitions 3.3/3.4). Views are cheap to
+//! clone and share the snapshot through an `Arc`. Because snapshots are
+//! versioned and immutable, a view stays byte-stable even while the
+//! producing [`super::segment::SegmentedStorage`] keeps ingesting new
+//! events.
 
 use crate::error::{Result, TgmError};
+use crate::graph::segment::StorageSnapshot;
 use crate::graph::storage::GraphStorage;
 use crate::util::{TimeGranularity, Timestamp};
 use std::ops::Range;
 use std::sync::Arc;
 
-/// A time-sliced view over shared graph storage.
+/// A time-sliced view over a shared storage snapshot.
 #[derive(Debug, Clone)]
 pub struct DGraph {
-    storage: Arc<GraphStorage>,
+    storage: Arc<StorageSnapshot>,
     /// Inclusive start of the window.
     start: Timestamp,
     /// Exclusive end of the window.
@@ -26,16 +30,20 @@ pub struct DGraph {
 }
 
 impl DGraph {
-    /// View covering the entire storage at its native granularity.
-    pub fn full(storage: Arc<GraphStorage>) -> DGraph {
+    /// View covering the entire snapshot at its native granularity.
+    pub fn full(storage: Arc<StorageSnapshot>) -> DGraph {
         let start = storage.start_time();
         let end = storage.end_time() + 1;
         let granularity = storage.granularity();
         DGraph { storage, start, end, granularity }
     }
 
-    /// View over `[start, end)` at the storage's native granularity.
-    pub fn slice_of(storage: Arc<GraphStorage>, start: Timestamp, end: Timestamp) -> Result<DGraph> {
+    /// View over `[start, end)` at the snapshot's native granularity.
+    pub fn slice_of(
+        storage: Arc<StorageSnapshot>,
+        start: Timestamp,
+        end: Timestamp,
+    ) -> Result<DGraph> {
         if end < start {
             return Err(TgmError::Time(format!("invalid window [{start}, {end})")));
         }
@@ -60,7 +68,7 @@ impl DGraph {
     }
 
     /// Change the read granularity. The new granularity must be coarser
-    /// than or equal to the storage's native granularity, or the special
+    /// than or equal to the snapshot's native granularity, or the special
     /// event-ordered granularity (always permitted).
     pub fn with_granularity(&self, g: TimeGranularity) -> Result<DGraph> {
         if g != TimeGranularity::Event && !g.is_coarser_or_equal(&self.storage.granularity()) {
@@ -75,8 +83,8 @@ impl DGraph {
         Ok(v)
     }
 
-    /// Shared storage backing this view.
-    pub fn storage(&self) -> &Arc<GraphStorage> {
+    /// Shared snapshot backing this view.
+    pub fn storage(&self) -> &Arc<StorageSnapshot> {
         &self.storage
     }
 
@@ -95,12 +103,12 @@ impl DGraph {
         self.granularity
     }
 
-    /// Edge index range of this window in the underlying storage.
+    /// Logical edge index range of this window in the snapshot.
     pub fn edge_indices(&self) -> Range<usize> {
         self.storage.edge_range(self.start, self.end)
     }
 
-    /// Node-event index range of this window.
+    /// Logical node-event index range of this window.
     pub fn node_event_indices(&self) -> Range<usize> {
         self.storage.node_event_range(self.start, self.end)
     }
@@ -115,24 +123,25 @@ impl DGraph {
         self.node_event_indices().len()
     }
 
-    /// Number of nodes in the underlying storage (ids are global).
+    /// Number of nodes in the underlying snapshot (ids are global).
     pub fn num_nodes(&self) -> usize {
         self.storage.num_nodes()
     }
 
-    /// Timestamps of edges in the window (borrowed from storage).
-    pub fn edge_ts(&self) -> &[Timestamp] {
-        &self.storage.edge_ts()[self.edge_indices()]
+    /// Timestamps of edges in the window (copied out of the snapshot's
+    /// segments; prefer chunked reads on hot paths).
+    pub fn edge_ts(&self) -> Vec<Timestamp> {
+        self.storage.copy_edge_column(self.edge_indices(), GraphStorage::edge_ts)
     }
 
     /// Sources of edges in the window.
-    pub fn edge_src(&self) -> &[u32] {
-        &self.storage.edge_src()[self.edge_indices()]
+    pub fn edge_src(&self) -> Vec<u32> {
+        self.storage.copy_edge_column(self.edge_indices(), GraphStorage::edge_src)
     }
 
     /// Destinations of edges in the window.
-    pub fn edge_dst(&self) -> &[u32] {
-        &self.storage.edge_dst()[self.edge_indices()]
+    pub fn edge_dst(&self) -> Vec<u32> {
+        self.storage.copy_edge_column(self.edge_indices(), GraphStorage::edge_dst)
     }
 
     /// Number of snapshot buckets the window spans at the read
@@ -151,8 +160,10 @@ impl DGraph {
 mod tests {
     use super::*;
     use crate::graph::events::EdgeEvent;
+    use crate::graph::segment::{SealPolicy, SegmentedStorage};
+    use crate::graph::storage::GraphStorage;
 
-    fn storage() -> Arc<GraphStorage> {
+    fn storage() -> Arc<StorageSnapshot> {
         let edges = (0..100)
             .map(|i| EdgeEvent {
                 t: i * 60, // one event per minute
@@ -161,7 +172,7 @@ mod tests {
                 features: vec![],
             })
             .collect();
-        GraphStorage::from_events(edges, vec![], 5, None, None).unwrap().into_shared()
+        GraphStorage::from_events(edges, vec![], 5, None, None).unwrap().into_shared_snapshot()
     }
 
     #[test]
@@ -191,6 +202,33 @@ mod tests {
         let b = a.slice(0, 600).unwrap();
         assert!(Arc::ptr_eq(a.storage(), b.storage()));
         assert_eq!(Arc::strong_count(&st), 3);
+    }
+
+    #[test]
+    fn views_window_multi_segment_snapshots() {
+        // The same columns streamed through a segmented store: windows
+        // resolve to identical logical ranges and columns.
+        let mut st = SegmentedStorage::new(5, SealPolicy { max_events: 16, max_span: None })
+            .with_granularity(TimeGranularity::Minute);
+        for i in 0..100i64 {
+            st.append_edge(EdgeEvent {
+                t: i * 60,
+                src: (i % 5) as u32,
+                dst: ((i + 1) % 5) as u32,
+                features: vec![],
+            })
+            .unwrap();
+        }
+        let seg_view = DGraph::full(st.snapshot().unwrap());
+        let flat_view = DGraph::full(storage());
+        assert!(seg_view.storage().num_segments() > 4);
+        assert_eq!(seg_view.num_edges(), flat_view.num_edges());
+        let s1 = seg_view.slice(60, 1800).unwrap();
+        let s2 = flat_view.slice(60, 1800).unwrap();
+        assert_eq!(s1.edge_indices(), s2.edge_indices());
+        assert_eq!(s1.edge_ts(), s2.edge_ts());
+        assert_eq!(s1.edge_src(), s2.edge_src());
+        assert_eq!(s1.edge_dst(), s2.edge_dst());
     }
 
     #[test]

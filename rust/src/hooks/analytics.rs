@@ -182,7 +182,7 @@ mod tests {
     use super::*;
     use crate::graph::{EdgeEvent, GraphStorage};
 
-    fn storage(n: usize) -> GraphStorage {
+    fn storage(n: usize) -> crate::graph::StorageSnapshot {
         GraphStorage::from_events(
             vec![EdgeEvent { t: 0, src: 0, dst: 1, features: vec![] }],
             vec![],
@@ -191,6 +191,7 @@ mod tests {
             None,
         )
         .unwrap()
+        .into_snapshot()
     }
 
     fn batch(edges: &[(u32, u32)]) -> MaterializedBatch {

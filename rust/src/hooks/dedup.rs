@@ -82,7 +82,7 @@ mod tests {
     use super::*;
     use crate::graph::{EdgeEvent, GraphStorage};
 
-    fn storage() -> GraphStorage {
+    fn storage() -> crate::graph::StorageSnapshot {
         GraphStorage::from_events(
             vec![EdgeEvent { t: 0, src: 0, dst: 1, features: vec![] }],
             vec![],
@@ -91,6 +91,7 @@ mod tests {
             None,
         )
         .unwrap()
+        .into_snapshot()
     }
 
     #[test]

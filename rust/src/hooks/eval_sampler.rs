@@ -81,17 +81,17 @@ impl StatelessHook for UniqueRecencyLookup {
         let mut mask = vec![0.0f32; u * k];
         let mut feats = vec![0.0f32; u * k * d];
         for (row, &node) in unique.iter().enumerate() {
-            let (nbrs, times, eidx) = adj.neighbors_before(node as u32, cut);
-            let avail = nbrs.len();
+            let view = adj.neighbors_before(node as u32, cut);
+            let avail = view.len();
             let take = k.min(avail);
             for slot in 0..take {
-                let i = avail - 1 - slot; // newest first
+                let (nbr, time, eidx) = view.get(avail - 1 - slot); // newest first
                 let o = row * k + slot;
-                ids[o] = nbrs[i] as i32;
-                ts[o] = times[i] as f32;
+                ids[o] = nbr as i32;
+                ts[o] = time as f32;
                 mask[o] = 1.0;
                 feats[o * d..(o + 1) * d]
-                    .copy_from_slice(ctx.storage.edge_feat_row(eidx[i] as usize));
+                    .copy_from_slice(ctx.storage.edge_feat_row(eidx as usize));
             }
         }
         if let Some(k2) = self.two_hop {
@@ -102,17 +102,16 @@ impl StatelessHook for UniqueRecencyLookup {
             let mut feats2 = vec![0.0f32; rows * k2 * d];
             for o in 0..rows {
                 if mask[o] > 0.0 {
-                    let (nbrs, times, eidx) =
-                        adj.neighbors_before(ids[o] as u32, ts[o] as i64);
-                    let avail = nbrs.len();
+                    let view = adj.neighbors_before(ids[o] as u32, ts[o] as i64);
+                    let avail = view.len();
                     for slot in 0..k2.min(avail) {
-                        let i = avail - 1 - slot;
+                        let (nbr, time, eidx) = view.get(avail - 1 - slot);
                         let q = o * k2 + slot;
-                        ids2[q] = nbrs[i] as i32;
-                        ts2[q] = times[i] as f32;
+                        ids2[q] = nbr as i32;
+                        ts2[q] = time as f32;
                         mask2[q] = 1.0;
                         feats2[q * d..(q + 1) * d]
-                            .copy_from_slice(ctx.storage.edge_feat_row(eidx[i] as usize));
+                            .copy_from_slice(ctx.storage.edge_feat_row(eidx as usize));
                     }
                 }
             }
@@ -134,7 +133,7 @@ mod tests {
     use super::*;
     use crate::graph::{EdgeEvent, GraphStorage};
 
-    fn storage() -> GraphStorage {
+    fn storage() -> crate::graph::StorageSnapshot {
         let edges = (0..30)
             .map(|i| EdgeEvent {
                 t: i as i64,
@@ -143,7 +142,7 @@ mod tests {
                 features: vec![i as f32],
             })
             .collect();
-        GraphStorage::from_events(edges, vec![], 6, None, None).unwrap()
+        GraphStorage::from_events(edges, vec![], 6, None, None).unwrap().into_snapshot()
     }
 
     #[test]

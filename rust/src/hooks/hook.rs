@@ -25,16 +25,16 @@
 //! recipe, then partitions the topological order into the two phases.
 
 use crate::error::Result;
-use crate::graph::GraphStorage;
+use crate::graph::StorageSnapshot;
 use crate::hooks::batch::MaterializedBatch;
 
-/// Execution context passed to hooks: shared immutable storage, the split
-/// tag (hooks like negative samplers behave differently between train and
-/// eval), and the batch's position in the iteration plus the RNG seed
-/// derived from it.
+/// Execution context passed to hooks: the shared immutable storage
+/// snapshot, the split tag (hooks like negative samplers behave
+/// differently between train and eval), and the batch's position in the
+/// iteration plus the RNG seed derived from it.
 pub struct HookContext<'a> {
-    /// The storage backing the view being iterated.
-    pub storage: &'a GraphStorage,
+    /// The versioned snapshot backing the view being iterated.
+    pub storage: &'a StorageSnapshot,
     /// Active manager key (e.g. "train", "val") — see
     /// [`super::manager::HookManager::activate`].
     pub key: &'a str,
@@ -48,12 +48,16 @@ pub struct HookContext<'a> {
 
 impl<'a> HookContext<'a> {
     /// Context for the first batch of an iteration.
-    pub fn new(storage: &'a GraphStorage, key: &'a str) -> HookContext<'a> {
+    pub fn new(storage: &'a StorageSnapshot, key: &'a str) -> HookContext<'a> {
         HookContext::for_batch(storage, key, 0)
     }
 
     /// Context for the batch at `batch_index` in the iteration plan.
-    pub fn for_batch(storage: &'a GraphStorage, key: &'a str, batch_index: usize) -> HookContext<'a> {
+    pub fn for_batch(
+        storage: &'a StorageSnapshot,
+        key: &'a str,
+        batch_index: usize,
+    ) -> HookContext<'a> {
         HookContext {
             storage,
             key,

@@ -173,7 +173,7 @@ impl HookManager {
     pub fn run(
         &mut self,
         batch: &mut MaterializedBatch,
-        storage: &crate::graph::GraphStorage,
+        storage: &crate::graph::StorageSnapshot,
     ) -> Result<()> {
         let index = self.next_index;
         self.next_index += 1;
@@ -185,7 +185,7 @@ impl HookManager {
     pub fn run_indexed(
         &mut self,
         batch: &mut MaterializedBatch,
-        storage: &crate::graph::GraphStorage,
+        storage: &crate::graph::StorageSnapshot,
         index: usize,
     ) -> Result<()> {
         self.run_phases(batch, storage, index, true)
@@ -196,7 +196,7 @@ impl HookManager {
     pub fn run_stateful_indexed(
         &mut self,
         batch: &mut MaterializedBatch,
-        storage: &crate::graph::GraphStorage,
+        storage: &crate::graph::StorageSnapshot,
         index: usize,
     ) -> Result<()> {
         self.run_phases(batch, storage, index, false)
@@ -209,7 +209,7 @@ impl HookManager {
     fn run_phases(
         &mut self,
         batch: &mut MaterializedBatch,
-        storage: &crate::graph::GraphStorage,
+        storage: &crate::graph::StorageSnapshot,
         index: usize,
         include_worker_phase: bool,
     ) -> Result<()> {
@@ -322,7 +322,7 @@ impl StatelessPipeline {
     pub fn run(
         &self,
         batch: &mut MaterializedBatch,
-        storage: &crate::graph::GraphStorage,
+        storage: &crate::graph::StorageSnapshot,
         batch_index: usize,
     ) -> Result<()> {
         let ctx = HookContext::for_batch(storage, &self.key, batch_index);
@@ -558,7 +558,7 @@ mod tests {
         }
     }
 
-    fn storage() -> crate::graph::GraphStorage {
+    fn storage() -> crate::graph::StorageSnapshot {
         crate::graph::GraphStorage::from_events(
             vec![crate::graph::EdgeEvent { t: 0, src: 0, dst: 1, features: vec![] }],
             vec![],
@@ -567,6 +567,7 @@ mod tests {
             None,
         )
         .unwrap()
+        .into_snapshot()
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! serial loader would have produced for that batch position.
 
 use crate::error::Result;
-use crate::graph::GraphStorage;
+use crate::graph::{SnapshotId, StorageSnapshot};
 use crate::hooks::batch::{attr, MaterializedBatch};
 use crate::hooks::hook::{HookContext, StatelessHook};
 use crate::util::{Rng, Tensor};
@@ -33,55 +33,63 @@ pub enum DstRange {
     InferFromData,
 }
 
-fn resolve_range(range: DstRange, storage: &GraphStorage) -> (u32, u32) {
-    match range {
-        DstRange::AllNodes => (0, storage.num_nodes() as u32),
-        DstRange::Range(lo, hi) => (lo, hi),
-        DstRange::InferFromData => {
-            let dst = storage.edge_dst();
-            let lo = dst.iter().copied().min().unwrap_or(0);
-            let hi = dst.iter().copied().max().map(|m| m + 1).unwrap_or(1);
-            (lo, hi)
-        }
+/// `[min(dst), max(dst)+1)` of one segment's destination column.
+fn segment_dst_range(seg: &crate::graph::GraphStorage) -> (u32, u32) {
+    let (mut lo, mut hi) = (u32::MAX, 0u32);
+    for &d in seg.edge_dst() {
+        lo = lo.min(d);
+        hi = hi.max(d + 1);
     }
+    (lo, hi)
 }
 
-/// Interior-mutable per-storage cache of the resolved id range, so
-/// `InferFromData` scans the destination column once instead of once per
-/// batch. Keyed by the storage's column address, counts, and time span:
-/// the address disambiguates distinct live storages that happen to share
-/// counts (e.g. two generator outputs at the same scale with different
-/// seeds); the counts + span make a false hit after allocator address
-/// reuse require an identically-shaped, identically-spanned graph —
-/// accepted as vanishingly unlikely for an O(E) rescan-avoidance cache.
+/// Interior-mutable per-snapshot cache of the resolved id range, so
+/// `InferFromData` scans each destination column once instead of once per
+/// batch. Keyed by the snapshot's explicit [`SnapshotId`] (store id +
+/// generation) — globally unique and never reused, so no allocator
+/// recycling can alias two graphs the way the old pointer-address key
+/// could. Like the adjacency cache, per-segment ranges are cached by
+/// never-reused segment ids and folded across generations, so a growing
+/// streamed graph only ever scans each sealed segment once (not the whole
+/// history per generation).
 #[derive(Debug, Default)]
 struct RangeCache {
-    slot: Mutex<Option<(StorageKey, (u32, u32))>>,
+    inner: Mutex<RangeInner>,
 }
 
-type StorageKey = (usize, usize, usize, i64, i64);
-
-fn storage_key(storage: &GraphStorage) -> StorageKey {
-    (
-        storage.edge_ts().as_ptr() as usize,
-        storage.num_edges(),
-        storage.num_nodes(),
-        storage.start_time(),
-        storage.end_time(),
-    )
+#[derive(Debug, Default)]
+struct RangeInner {
+    snapshot: Option<(SnapshotId, (u32, u32))>,
+    per_segment: std::collections::HashMap<u64, (u32, u32)>,
 }
 
 impl RangeCache {
-    fn get(&self, range: DstRange, storage: &GraphStorage) -> (u32, u32) {
-        let key = storage_key(storage);
-        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
-        if let Some((k, r)) = *slot {
+    fn get(&self, range: DstRange, storage: &StorageSnapshot) -> (u32, u32) {
+        match range {
+            DstRange::AllNodes => return (0, storage.num_nodes() as u32),
+            DstRange::Range(lo, hi) => return (lo, hi),
+            DstRange::InferFromData => {}
+        }
+        let key = storage.id();
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some((k, r)) = inner.snapshot {
             if k == key {
                 return r;
             }
         }
-        let r = resolve_range(range, storage);
-        *slot = Some((key, r));
+        let (mut lo, mut hi) = (u32::MAX, 0u32);
+        let mut fresh = std::collections::HashMap::with_capacity(storage.num_segments());
+        for (s, seg) in storage.segments().iter().enumerate() {
+            let sid = storage.segment_ids()[s];
+            let (slo, shi) =
+                inner.per_segment.get(&sid).copied().unwrap_or_else(|| segment_dst_range(seg));
+            fresh.insert(sid, (slo, shi));
+            lo = lo.min(slo);
+            hi = hi.max(shi);
+        }
+        inner.per_segment = fresh;
+        let r = if hi == 0 { (0, 1) } else { (lo, hi) };
+        inner.snapshot = Some((key, r));
         r
     }
 }
@@ -135,7 +143,7 @@ impl StatelessHook for NegativeSampler {
                     rng.range(lo as i64, hi as i64) as i32
                 } else {
                     let j = past.start + rng.below(past.len() as u64) as usize;
-                    ctx.storage.edge_dst()[j] as i32
+                    ctx.storage.edge_dst_at(j) as i32
                 }
             } else {
                 rng.range(lo as i64, hi as i64) as i32
@@ -207,19 +215,21 @@ mod tests {
     use super::*;
     use crate::graph::EdgeEvent;
 
-    fn storage() -> GraphStorage {
+    fn storage() -> StorageSnapshot {
         let edges = (0..50)
             .map(|i| EdgeEvent { t: i as i64, src: (i % 3) as u32, dst: 5 + (i % 4) as u32, features: vec![] })
             .collect();
-        GraphStorage::from_events(edges, vec![], 9, None, None).unwrap()
+        crate::graph::GraphStorage::from_events(edges, vec![], 9, None, None)
+            .unwrap()
+            .into_snapshot()
     }
 
-    fn batch(st: &GraphStorage) -> MaterializedBatch {
+    fn batch(st: &StorageSnapshot) -> MaterializedBatch {
         let mut b = MaterializedBatch::new(10, 20);
         for i in 10..20 {
-            b.src.push(st.edge_src()[i]);
-            b.dst.push(st.edge_dst()[i]);
-            b.ts.push(st.edge_ts()[i]);
+            b.src.push(st.edge_src_at(i));
+            b.dst.push(st.edge_dst_at(i));
+            b.ts.push(st.edge_ts_at(i));
             b.edge_indices.push(i as u32);
         }
         b
@@ -256,7 +266,7 @@ mod tests {
     fn inferred_range_not_aliased_across_same_shape_storages() {
         // Two storages with identical (num_edges, num_nodes) but
         // different destination populations must not share a cached
-        // range (the cache keys on column identity, not just counts).
+        // range (snapshot ids are globally unique, never shape-derived).
         let mk = |base: u32| {
             let edges = (0..50)
                 .map(|i| EdgeEvent {
@@ -266,7 +276,9 @@ mod tests {
                     features: vec![],
                 })
                 .collect();
-            GraphStorage::from_events(edges, vec![], 9, None, None).unwrap()
+            crate::graph::GraphStorage::from_events(edges, vec![], 9, None, None)
+                .unwrap()
+                .into_snapshot()
         };
         let st_hi = mk(5); // destinations 5..=8
         let st_lo = mk(1); // destinations 1..=4

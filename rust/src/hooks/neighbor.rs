@@ -26,7 +26,7 @@
 //! * the `*2` two-hop variants `[S, K, K2]` when `two_hop` is set.
 
 use crate::error::{Result, TgmError};
-use crate::graph::{AdjacencyCache, GraphStorage};
+use crate::graph::{AdjacencyCache, StorageSnapshot};
 use crate::hooks::batch::{attr, MaterializedBatch};
 use crate::hooks::hook::{Hook, HookContext, StatelessHook};
 use crate::util::{Rng, Tensor, Timestamp};
@@ -113,7 +113,7 @@ impl SampleOut {
         self.eidx[o] = eidx;
     }
 
-    fn gather_features(&mut self, storage: &GraphStorage) {
+    fn gather_features(&mut self, storage: &StorageSnapshot) {
         if let Some((d, feats)) = &mut self.feats {
             let d = *d;
             for (o, (&m, &e)) in self.mask.iter().zip(&self.eidx).enumerate() {
@@ -251,7 +251,12 @@ impl RecencySampler {
         RecencySampler { cfg, buffers: CircularBuffers::default(), cap }
     }
 
-    fn sample_all(&self, storage: &GraphStorage, nodes: &[u32], times: &[Timestamp]) -> (SampleOut, Option<SampleOut>) {
+    fn sample_all(
+        &self,
+        storage: &StorageSnapshot,
+        nodes: &[u32],
+        times: &[Timestamp],
+    ) -> (SampleOut, Option<SampleOut>) {
         let s = nodes.len();
         let k = self.cfg.num_neighbors;
         let fd = self.cfg.include_features.then(|| storage.edge_feat_dim());
@@ -325,10 +330,12 @@ impl Hook for RecencySampler {
 
 /// Uniform temporal-neighborhood sampler over the CSR adjacency index.
 ///
-/// Stateless: the CSR index is a shared per-storage cache and every batch
-/// draws from a fresh RNG seeded by `seed ^ ctx.batch_seed`, so prefetch
-/// workers reproduce the serial stream regardless of materialization
-/// order.
+/// Stateless: the merged CSR index is a shared generation-keyed cache and
+/// every batch draws from a fresh RNG seeded by `seed ^ ctx.batch_seed`,
+/// so prefetch workers reproduce the serial stream regardless of
+/// materialization order — and the draw sequence is identical whether the
+/// snapshot holds one segment or many (the merged view preserves global
+/// time order).
 pub struct UniformSampler {
     cfg: SamplerConfig,
     adj: AdjacencyCache,
@@ -365,11 +372,12 @@ impl StatelessHook for UniformSampler {
 
         let mut hop1 = SampleOut::new(s, k, fd);
         for (row, (&node, &t)) in nodes.iter().zip(&times).enumerate() {
-            let (nbrs, ts, eidx) = adj.neighbors_before(node, t);
-            let avail = nbrs.len();
+            let view = adj.neighbors_before(node, t);
+            let avail = view.len();
             for slot in 0..k.min(avail) {
                 let j = rng.below(avail as u64) as usize;
-                hop1.write(row, slot, nbrs[j], ts[j], t, eidx[j]);
+                let (nbr, nbr_t, eidx) = view.get(j);
+                hop1.write(row, slot, nbr, nbr_t, t, eidx);
             }
         }
         hop1.gather_features(ctx.storage);
@@ -379,11 +387,12 @@ impl StatelessHook for UniformSampler {
             for o in 0..s * k {
                 if hop1.mask[o] > 0.0 {
                     let (n1, t1) = (hop1.ids[o] as u32, hop1.abs_ts[o]);
-                    let (nbrs, ts, eidx) = adj.neighbors_before(n1, t1);
-                    let avail = nbrs.len();
+                    let view = adj.neighbors_before(n1, t1);
+                    let avail = view.len();
                     for slot in 0..k2.min(avail) {
                         let j = rng.below(avail as u64) as usize;
-                        h2.write(o, slot, nbrs[j], ts[j], t1, eidx[j]);
+                        let (nbr, nbr_t, eidx) = view.get(j);
+                        h2.write(o, slot, nbr, nbr_t, t1, eidx);
                     }
                 }
             }
@@ -400,7 +409,7 @@ mod tests {
     use crate::graph::EdgeEvent;
     use crate::hooks::batch::MaterializedBatch;
 
-    fn storage() -> GraphStorage {
+    fn storage() -> StorageSnapshot {
         let edges = (0..20)
             .map(|i| EdgeEvent {
                 t: i as i64 * 10,
@@ -409,18 +418,20 @@ mod tests {
                 features: vec![i as f32, 1.0],
             })
             .collect();
-        GraphStorage::from_events(edges, vec![], 7, None, None).unwrap()
+        crate::graph::GraphStorage::from_events(edges, vec![], 7, None, None)
+            .unwrap()
+            .into_snapshot()
     }
 
-    fn batch_from(storage: &GraphStorage, range: std::ops::Range<usize>) -> MaterializedBatch {
+    fn batch_from(storage: &StorageSnapshot, range: std::ops::Range<usize>) -> MaterializedBatch {
         let mut b = MaterializedBatch::new(
-            storage.edge_ts()[range.start],
-            storage.edge_ts()[range.end - 1] + 1,
+            storage.edge_ts_at(range.start),
+            storage.edge_ts_at(range.end - 1) + 1,
         );
         for i in range {
-            b.src.push(storage.edge_src()[i]);
-            b.dst.push(storage.edge_dst()[i]);
-            b.ts.push(storage.edge_ts()[i]);
+            b.src.push(storage.edge_src_at(i));
+            b.dst.push(storage.edge_dst_at(i));
+            b.ts.push(storage.edge_ts_at(i));
             b.edge_indices.push(i as u32);
         }
         b

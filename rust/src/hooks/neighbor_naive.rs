@@ -12,7 +12,7 @@
 //! [`super::neighbor::RecencySampler`].
 
 use crate::error::Result;
-use crate::graph::{AdjacencyCache, TemporalAdjacency};
+use crate::graph::{AdjacencyCache, MergedAdjacency};
 use crate::hooks::batch::{attr, MaterializedBatch};
 use crate::hooks::hook::{HookContext, StatelessHook};
 use crate::hooks::neighbor::SamplerConfig;
@@ -35,16 +35,13 @@ impl NaiveSampler {
     /// DyGLib-style retrieval: copy the full pre-`t` history, then take
     /// the last K entries (newest first).
     fn recent_copy(
-        adj: &TemporalAdjacency,
+        adj: &MergedAdjacency,
         node: u32,
         t: Timestamp,
         k: usize,
     ) -> (Vec<u32>, Vec<Timestamp>, Vec<u32>) {
-        let (nbrs, ts, eidx) = adj.neighbors_before(node, t);
         // Deliberate full-history copies (the NumPy slicing cost).
-        let nbrs: Vec<u32> = nbrs.to_vec();
-        let ts: Vec<Timestamp> = ts.to_vec();
-        let eidx: Vec<u32> = eidx.to_vec();
+        let (nbrs, ts, eidx) = adj.neighbors_before(node, t).to_vecs();
         let n = nbrs.len();
         let take = k.min(n);
         let mut out_n = Vec::with_capacity(take);
@@ -175,7 +172,7 @@ mod tests {
     use crate::hooks::hook::Hook;
     use crate::hooks::neighbor::RecencySampler;
 
-    fn storage() -> GraphStorage {
+    fn storage() -> crate::graph::StorageSnapshot {
         // Events arrive three-at-a-time with a shared timestamp, so
         // batch-level (recency buffer) and event-level (naive/DyGLib)
         // sampling semantics coincide: same-time events are excluded by
@@ -189,15 +186,18 @@ mod tests {
                 features: vec![i as f32],
             })
             .collect();
-        GraphStorage::from_events(edges, vec![], 10, None, None).unwrap()
+        GraphStorage::from_events(edges, vec![], 10, None, None).unwrap().into_snapshot()
     }
 
-    fn batch_from(st: &GraphStorage, r: std::ops::Range<usize>) -> MaterializedBatch {
-        let mut b = MaterializedBatch::new(st.edge_ts()[r.start], st.edge_ts()[r.end - 1] + 1);
+    fn batch_from(
+        st: &crate::graph::StorageSnapshot,
+        r: std::ops::Range<usize>,
+    ) -> MaterializedBatch {
+        let mut b = MaterializedBatch::new(st.edge_ts_at(r.start), st.edge_ts_at(r.end - 1) + 1);
         for i in r {
-            b.src.push(st.edge_src()[i]);
-            b.dst.push(st.edge_dst()[i]);
-            b.ts.push(st.edge_ts()[i]);
+            b.src.push(st.edge_src_at(i));
+            b.dst.push(st.edge_dst_at(i));
+            b.ts.push(st.edge_ts_at(i));
             b.edge_indices.push(i as u32);
         }
         b

@@ -146,7 +146,7 @@ mod tests {
     use crate::graph::{EdgeEvent, GraphStorage};
     use crate::hooks::batch::{attr, MaterializedBatch};
 
-    fn storage() -> GraphStorage {
+    fn storage() -> crate::graph::StorageSnapshot {
         let edges = (0..30)
             .map(|i| EdgeEvent {
                 t: i as i64,
@@ -155,15 +155,15 @@ mod tests {
                 features: vec![1.0],
             })
             .collect();
-        GraphStorage::from_events(edges, vec![], 5, None, None).unwrap()
+        GraphStorage::from_events(edges, vec![], 5, None, None).unwrap().into_snapshot()
     }
 
-    fn batch(st: &GraphStorage, r: std::ops::Range<usize>) -> MaterializedBatch {
-        let mut b = MaterializedBatch::new(st.edge_ts()[r.start], st.edge_ts()[r.end - 1] + 1);
+    fn batch(st: &crate::graph::StorageSnapshot, r: std::ops::Range<usize>) -> MaterializedBatch {
+        let mut b = MaterializedBatch::new(st.edge_ts_at(r.start), st.edge_ts_at(r.end - 1) + 1);
         for i in r {
-            b.src.push(st.edge_src()[i]);
-            b.dst.push(st.edge_dst()[i]);
-            b.ts.push(st.edge_ts()[i]);
+            b.src.push(st.edge_src_at(i));
+            b.dst.push(st.edge_dst_at(i));
+            b.ts.push(st.edge_ts_at(i));
             b.edge_indices.push(i as u32);
         }
         b

@@ -92,7 +92,7 @@ pub fn to_csv(data: &DGData, path: impl AsRef<Path>) -> Result<()> {
     })?;
     for i in 0..st.num_edges() {
         let mut line =
-            format!("{},{},{}", st.edge_src()[i], st.edge_dst()[i], st.edge_ts()[i]);
+            format!("{},{},{}", st.edge_src_at(i), st.edge_dst_at(i), st.edge_ts_at(i));
         for v in st.edge_feat_row(i) {
             line.push_str(&format!(",{v}"));
         }

@@ -1,8 +1,11 @@
-//! IO adaptors: CSV loading/export and synthetic TGB-surrogate generators
-//! (paper §4, "IO Adaptors and Data Preprocessing").
+//! IO adaptors: CSV loading/export, synthetic TGB-surrogate generators
+//! (paper §4, "IO Adaptors and Data Preprocessing"), and streaming event
+//! sources for online ingestion.
 
 pub mod csv;
 pub mod gen;
+pub mod stream;
 
 pub use csv::{from_csv, to_csv, CsvLoad};
 pub use gen::{bipartite, by_name, trade, GenConfig};
+pub use stream::{EventSource, ReplaySource};

@@ -4,12 +4,13 @@
 //! graphs, reproducing Chmura, Huang et al. (2025) as a three-layer
 //! Rust + JAX + Pallas system:
 //!
-//! * **Layer 3 (this crate)** — the data/execution layers: immutable
-//!   time-sorted COO storage, lightweight graph views, vectorized
+//! * **Layer 3 (this crate)** — the data/execution layers: segmented
+//!   append-only storage with immutable time-sorted segments and
+//!   versioned epoch snapshots, lightweight graph views, vectorized
 //!   discretization, the phased hook/recipe system (stateless worker
 //!   hooks + stateful consumer hooks), CTDG/DTDG data loaders with a
 //!   deterministic parallel prefetch pipeline, samplers, evaluation,
-//!   and the training coordinator.
+//!   and the epoch + streaming training coordinators.
 //! * **Layer 2 (`python/compile`)** — JAX model definitions (TGAT, TGN,
 //!   GCN, GCLSTM, T-GCN, GraphMixer, DyGFormer, TPNet) AOT-lowered to HLO
 //!   text artifacts with the optimizer inside the training step.

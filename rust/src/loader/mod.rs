@@ -32,7 +32,7 @@ pub mod prefetch;
 pub use prefetch::{PrefetchConfig, PrefetchLoader, PrefetchStats};
 
 use crate::error::{Result, TgmError};
-use crate::graph::{DGraph, GraphStorage};
+use crate::graph::{DGraph, StorageSnapshot};
 use crate::hooks::batch::{attr, MaterializedBatch};
 use crate::hooks::manager::HookManager;
 use crate::util::{Tensor, TimeGranularity, Timestamp};
@@ -128,7 +128,6 @@ pub fn plan_batches(
     match by {
         BatchBy::Events(bsz) => {
             let idx = view.edge_indices();
-            let ts = storage.edge_ts();
             let mut lo = idx.start;
             while lo < idx.end {
                 let hi = (lo + bsz).min(idx.end);
@@ -136,8 +135,8 @@ pub fn plan_batches(
                     index: plans.len(),
                     lo,
                     hi,
-                    t0: ts[lo],
-                    t1: ts[hi - 1] + 1,
+                    t0: storage.edge_ts_at(lo),
+                    t1: storage.edge_ts_at(hi - 1) + 1,
                 });
                 lo = hi;
             }
@@ -167,30 +166,38 @@ pub fn plan_batches(
 }
 
 /// Materialize the seed columns and base attributes (`A₀`) for one
-/// planned batch. Pure function of (storage, plan) — safe on any thread.
-pub fn materialize_window(storage: &GraphStorage, plan: &BatchPlan) -> Result<MaterializedBatch> {
+/// planned batch. Pure function of (snapshot, plan) — safe on any thread.
+/// The logical event range is copied segment-chunk by segment-chunk, so
+/// the cost is identical for single- and multi-segment snapshots up to
+/// one extra `memcpy` split per segment boundary inside the window.
+pub fn materialize_window(storage: &StorageSnapshot, plan: &BatchPlan) -> Result<MaterializedBatch> {
     let (lo, hi) = (plan.lo, plan.hi);
     let mut b = MaterializedBatch::new(plan.t0, plan.t1);
     let n = hi - lo;
+    let d = storage.edge_feat_dim();
     b.src.reserve(n);
     b.dst.reserve(n);
     b.ts.reserve(n);
     b.edge_indices.reserve(n);
-    b.src.extend_from_slice(&storage.edge_src()[lo..hi]);
-    b.dst.extend_from_slice(&storage.edge_dst()[lo..hi]);
-    b.ts.extend_from_slice(&storage.edge_ts()[lo..hi]);
+    let mut feats = Vec::with_capacity(n * d);
+    for (seg, local) in storage.edge_chunks(lo..hi) {
+        b.src.extend_from_slice(&seg.edge_src()[local.clone()]);
+        b.dst.extend_from_slice(&seg.edge_dst()[local.clone()]);
+        b.ts.extend_from_slice(&seg.edge_ts()[local.clone()]);
+        feats.extend_from_slice(&seg.edge_feats()[local.start * d..local.end * d]);
+    }
     b.edge_indices.extend((lo as u32)..(hi as u32));
     let ner = storage.node_event_range(plan.t0, plan.t1);
-    for i in ner {
-        b.node_events.push((storage.node_event_ts()[i], storage.node_event_ids()[i]));
+    for (seg, local) in storage.node_event_chunks(ner) {
+        for i in local {
+            b.node_events.push((seg.node_event_ts()[i], seg.node_event_ids()[i]));
+        }
     }
 
     // Base attributes (the A₀ recipes validate against).
     b.set(attr::SRC, Tensor::i32(b.src.iter().map(|&x| x as i32).collect(), &[n])?);
     b.set(attr::DST, Tensor::i32(b.dst.iter().map(|&x| x as i32).collect(), &[n])?);
     b.set(attr::TIME, Tensor::f32(b.ts.iter().map(|&t| t as f32).collect(), &[n])?);
-    let d = storage.edge_feat_dim();
-    let feats = storage.edge_feats()[lo * d..hi * d].to_vec();
     b.set(attr::EDGE_FEATS, Tensor::f32(feats, &[n, d])?);
     Ok(b)
 }
@@ -205,6 +212,11 @@ pub struct DGDataLoader<'a> {
     skip_empty: bool,
     /// Max edge events per yielded batch for time iteration.
     event_cap: usize,
+    /// Added to every plan index when running hooks: lets a caller that
+    /// iterates one logical epoch through several loaders (e.g. the
+    /// streaming trainer's per-cycle windows) keep per-batch RNG seeds
+    /// globally unique instead of restarting at 0 each window.
+    index_offset: usize,
     plans: Option<Vec<BatchPlan>>,
     pos: usize,
 }
@@ -219,6 +231,7 @@ impl<'a> DGDataLoader<'a> {
             manager,
             skip_empty: true,
             event_cap: usize::MAX,
+            index_offset: 0,
             plans: None,
             pos: 0,
         })
@@ -236,6 +249,13 @@ impl<'a> DGDataLoader<'a> {
     pub fn with_event_cap(mut self, cap: usize) -> Self {
         self.event_cap = cap.max(1);
         self.plans = None;
+        self
+    }
+
+    /// Offset added to every plan index when hooks run (continuing one
+    /// logical epoch across several windowed loaders).
+    pub fn with_index_offset(mut self, offset: usize) -> Self {
+        self.index_offset = offset;
         self
     }
 
@@ -289,7 +309,9 @@ impl<'a> DGDataLoader<'a> {
             Ok(b) => b,
             Err(e) => return Some(Err(e)),
         };
-        if let Err(e) = self.manager.run_indexed(&mut batch, &storage, plan.index) {
+        if let Err(e) =
+            self.manager.run_indexed(&mut batch, &storage, self.index_offset + plan.index)
+        {
             return Some(Err(e));
         }
         Some(Ok(batch))

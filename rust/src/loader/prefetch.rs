@@ -22,7 +22,7 @@
 //! wall-clock win; the tests in this module pin the equality.
 
 use crate::error::{Result, TgmError};
-use crate::graph::{DGraph, GraphStorage};
+use crate::graph::{DGraph, StorageSnapshot};
 use crate::hooks::batch::MaterializedBatch;
 use crate::hooks::manager::{HookManager, StatelessPipeline};
 use crate::loader::{materialize_window, plan_batches, BatchBy, BatchPlan};
@@ -104,7 +104,7 @@ pub struct PrefetchStats {
 /// plan order with the stateful hook phase applied.
 pub struct PrefetchLoader<'a> {
     manager: &'a mut HookManager,
-    storage: Arc<GraphStorage>,
+    storage: Arc<StorageSnapshot>,
     plans: Arc<Vec<BatchPlan>>,
     /// Serial fallback pipeline when `workers == 0`.
     inline: Option<StatelessPipeline>,

@@ -282,12 +282,17 @@ fn exp_correctness(args: &Args) -> Result<()> {
     let splits = wiki.split()?;
     let eb = evaluate_edgebank(&wiki, &splits.val, EdgeBankMode::Unlimited, 10, 0)?;
     let ebt = evaluate_edgebank(&wiki, &splits.test, EdgeBankMode::Unlimited, 10, 0)?;
+    let ranked_mrr = |r: &tgm::coordinator::EvalReport, split: &str| -> Result<f64> {
+        r.mrr.ok_or_else(|| {
+            TgmError::Model(format!("edgebank evaluator returned no ranked edges on {split}"))
+        })
+    };
     println!(
         "{:<16} {:<8} {:>10.4} {:>10.4}",
         "edgebank",
         "link",
-        eb.mrr.unwrap(),
-        ebt.mrr.unwrap()
+        ranked_mrr(&eb, "val")?,
+        ranked_mrr(&ebt, "test")?
     );
 
     for model in [

@@ -8,4 +8,7 @@ pub mod time;
 
 pub use rng::{mix64, Rng};
 pub use tensor::{DType, Tensor, TensorData};
-pub use time::{infer_native_granularity, TimeGranularity, Timestamp};
+pub use time::{
+    granularity_for_min_gap, infer_native_granularity, min_positive_gap, TimeGranularity,
+    Timestamp,
+};

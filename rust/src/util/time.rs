@@ -97,11 +97,11 @@ impl TimeGranularity {
     }
 }
 
-/// Infer the native granularity of a sorted timestamp stream: the coarsest
-/// wall-clock unit that still discriminates between all *distinct*
-/// timestamps (paper §3, "native time granularity").
-pub fn infer_native_granularity(sorted_ts: &[Timestamp]) -> TimeGranularity {
-    use TimeGranularity::*;
+/// Minimum positive gap between adjacent entries of a sorted timestamp
+/// stream (`None` when all timestamps tie). This is the statistic native
+/// granularity is derived from, exposed so streaming storage can fold it
+/// incrementally per sealed segment instead of re-scanning history.
+pub fn min_positive_gap(sorted_ts: &[Timestamp]) -> Option<i64> {
     let mut min_gap: Option<i64> = None;
     for w in sorted_ts.windows(2) {
         let gap = w[1] - w[0];
@@ -109,6 +109,13 @@ pub fn infer_native_granularity(sorted_ts: &[Timestamp]) -> TimeGranularity {
             min_gap = Some(min_gap.map_or(gap, |m: i64| m.min(gap)));
         }
     }
+    min_gap
+}
+
+/// Map a stream's minimum positive adjacent gap to its native granularity
+/// (`None` = only ties = event-ordered).
+pub fn granularity_for_min_gap(min_gap: Option<i64>) -> TimeGranularity {
+    use TimeGranularity::*;
     let Some(gap) = min_gap else { return Event };
     for g in [Year, Week, Day, Hour, Minute, Second] {
         if gap >= g.seconds().unwrap() {
@@ -116,6 +123,13 @@ pub fn infer_native_granularity(sorted_ts: &[Timestamp]) -> TimeGranularity {
         }
     }
     Second
+}
+
+/// Infer the native granularity of a sorted timestamp stream: the coarsest
+/// wall-clock unit that still discriminates between all *distinct*
+/// timestamps (paper §3, "native time granularity").
+pub fn infer_native_granularity(sorted_ts: &[Timestamp]) -> TimeGranularity {
+    granularity_for_min_gap(min_positive_gap(sorted_ts))
 }
 
 #[cfg(test)]
