@@ -34,7 +34,7 @@ fn main() -> tgm::Result<()> {
 
     let store = SegmentedStorage::new(
         data.storage().num_nodes(),
-        SealPolicy { max_events: 512, max_span: None },
+        SealPolicy::by_events(512),
     )
     .with_granularity(data.storage().granularity());
     let source = ReplaySource::from_data(&data);

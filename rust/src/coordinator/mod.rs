@@ -12,5 +12,7 @@ pub mod trainer;
 pub use evaluator::{evaluate_edgebank, evaluate_persistent_graph, EvalReport, Split};
 pub use packing::{ModelFamily, PackConfig, Packed};
 pub use profiler::Profiler;
-pub use streaming::{CycleReport, StreamingConfig, StreamingTrainer};
+pub use streaming::{
+    CycleReport, MultiTenantIngestor, StreamingConfig, StreamingTrainer, TenantCycleReport,
+};
 pub use trainer::{EpochReport, Pipeline, PipelineConfig};

@@ -27,6 +27,7 @@ use crate::hooks::manager::HookManager;
 use crate::hooks::MaterializedBatch;
 use crate::io::stream::EventSource;
 use crate::loader::{BatchBy, DGDataLoader};
+use crate::serving::{TenantId, TenantRouter};
 use crate::util::Timestamp;
 use std::sync::Arc;
 
@@ -238,6 +239,155 @@ impl<S: EventSource> StreamingTrainer<S> {
     }
 }
 
+/// What one tenant did during one multi-tenant ingest cycle.
+#[derive(Debug, Clone)]
+pub struct TenantCycleReport {
+    /// Which tenant this row describes.
+    pub tenant: TenantId,
+    /// Events appended this cycle (0 on an error row: a failing chunk's
+    /// partial-append count is not reported).
+    pub ingested: usize,
+    /// Generation published after the cycle (0 if nothing is published
+    /// yet — e.g. the tenant has only edge-free node events).
+    pub generation: u64,
+    /// Sealed segments behind the tenant's writer after the cycle.
+    pub sealed_segments: usize,
+    /// Edge events still buffered in the tenant's active segment.
+    pub pending_edges: usize,
+    /// The error that terminated this tenant's ingestion, if any. A
+    /// failing tenant's source is dropped from subsequent cycles (its
+    /// stream position has advanced past the failed chunk, so resuming
+    /// would leave a gap); every other tenant keeps cycling.
+    pub error: Option<String>,
+}
+
+/// Round-robin per-tenant ingest cycles over a shared [`TenantRouter`]:
+/// each cycle pulls one chunk per tenant from that tenant's own
+/// [`EventSource`], appends it through the tenant's writer (auto-sealing
+/// and compacting per the tenant's policies), and publishes a fresh
+/// snapshot generation so concurrent serving picks it up on the next
+/// pin. Tenants are fully independent: one tenant's backlog, policy, or
+/// append error never blocks or halts the others — an ingest failure
+/// becomes an error row in that cycle's reports
+/// ([`TenantCycleReport::error`]) and retires only the failing tenant's
+/// source, while every other tenant keeps cycling to completion.
+/// Error semantics for the failing tenant: events of its chunk before
+/// the offending one are appended, the rest of that chunk is dropped
+/// (the source has already advanced), so the error is terminal for that
+/// tenant's stream — recoverable flows should drive
+/// [`crate::serving::TenantHandle::ingest`] directly with their own
+/// retry buffer.
+///
+/// This is the multi-graph counterpart of [`StreamingTrainer`]'s
+/// ingest half; serving happens elsewhere, against pinned snapshots, so
+/// the ingestor thread and any number of serving threads only meet at
+/// each tenant's publication cell.
+pub struct MultiTenantIngestor<S: EventSource> {
+    router: Arc<TenantRouter>,
+    streams: Vec<(TenantId, S)>,
+    chunk: usize,
+}
+
+impl<S: EventSource> MultiTenantIngestor<S> {
+    /// Bind a router and a per-cycle, per-tenant chunk size.
+    pub fn new(router: Arc<TenantRouter>, chunk: usize) -> MultiTenantIngestor<S> {
+        MultiTenantIngestor { router, streams: Vec::new(), chunk: chunk.max(1) }
+    }
+
+    /// Attach a tenant's event source. The tenant must already be
+    /// registered with the router.
+    pub fn add_stream(&mut self, id: impl Into<TenantId>, source: S) -> Result<()> {
+        let id = id.into();
+        self.router.tenant(&id)?;
+        self.streams.push((id, source));
+        Ok(())
+    }
+
+    /// The shared router.
+    pub fn router(&self) -> &Arc<TenantRouter> {
+        &self.router
+    }
+
+    /// Run one ingest cycle across all tenants. Returns `None` when
+    /// every still-attached source yielded an empty chunk (for replay
+    /// sources: all drained; for live sources: call again later). A
+    /// failing tenant produces an error row and is detached; the cycle
+    /// itself only errs on infrastructure-level failures (currently
+    /// none), so healthy tenants are never halted by a sick one.
+    pub fn run_cycle(&mut self) -> Result<Option<Vec<TenantCycleReport>>> {
+        let mut reports = Vec::new();
+        let mut failed: Vec<TenantId> = Vec::new();
+        let mut any = false;
+        for (id, source) in &mut self.streams {
+            let chunk = source.next_chunk(self.chunk);
+            if chunk.is_empty() {
+                continue;
+            }
+            any = true;
+            match Self::ingest_one(&self.router, id, chunk) {
+                Ok(r) => reports.push(r),
+                Err(e) => {
+                    // Per-tenant isolation: report the failure in-band
+                    // (best-effort metadata) and retire only this
+                    // tenant's source.
+                    let h = self.router.tenant(id).ok();
+                    reports.push(TenantCycleReport {
+                        tenant: id.clone(),
+                        ingested: 0,
+                        generation: h
+                            .as_ref()
+                            .and_then(|h| h.published_generation())
+                            .unwrap_or(0),
+                        sealed_segments: h.as_ref().map_or(0, |h| h.num_sealed_segments()),
+                        pending_edges: h.as_ref().map_or(0, |h| h.pending_edges()),
+                        error: Some(e.to_string()),
+                    });
+                    failed.push(id.clone());
+                }
+            }
+        }
+        if !failed.is_empty() {
+            self.streams.retain(|(id, _)| !failed.contains(id));
+        }
+        Ok(if any { Some(reports) } else { None })
+    }
+
+    /// One tenant's slice of a cycle: append the chunk, publish a fresh
+    /// generation (once the tenant has any edge), report.
+    fn ingest_one(
+        router: &TenantRouter,
+        id: &TenantId,
+        chunk: Vec<crate::graph::Event>,
+    ) -> Result<TenantCycleReport> {
+        let handle = router.tenant(id)?;
+        let ingested = handle.ingest(chunk)?;
+        let generation = if handle.total_edges() > 0 {
+            handle.publish()?.generation()
+        } else {
+            handle.published_generation().unwrap_or(0)
+        };
+        Ok(TenantCycleReport {
+            tenant: id.clone(),
+            ingested,
+            generation,
+            sealed_segments: handle.num_sealed_segments(),
+            pending_edges: handle.pending_edges(),
+            error: None,
+        })
+    }
+
+    /// Drain every source, cycling until all are empty or retired.
+    /// Returns one report row per (cycle, active tenant), error rows
+    /// included — a failing tenant never halts the healthy ones.
+    pub fn run_to_completion(&mut self) -> Result<Vec<TenantCycleReport>> {
+        let mut all = Vec::new();
+        while let Some(mut rows) = self.run_cycle()? {
+            all.append(&mut rows);
+        }
+        Ok(all)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +395,105 @@ mod tests {
     use crate::hooks::recipes::{RecipeRegistry, RECIPE_TGB_LINK};
     use crate::io::gen;
     use crate::io::stream::ReplaySource;
+    use crate::serving::TenantConfig;
+
+    #[test]
+    fn multi_tenant_ingest_cycles_publish_per_tenant_generations() {
+        let mut router = TenantRouter::new();
+        let seeds = [11u64, 12, 13];
+        let datasets: Vec<_> =
+            seeds.iter().map(|&s| gen::by_name("wiki", 0.05, s).unwrap()).collect();
+        for (i, d) in datasets.iter().enumerate() {
+            router
+                .add_tenant(
+                    format!("t{i}"),
+                    TenantConfig::new(d.storage().num_nodes())
+                        .with_seal(SealPolicy::by_events(150))
+                        .with_granularity(d.storage().granularity()),
+                )
+                .unwrap();
+        }
+        let router = Arc::new(router);
+        let mut ingestor = MultiTenantIngestor::new(Arc::clone(&router), 200);
+        for (i, d) in datasets.iter().enumerate() {
+            ingestor.add_stream(format!("t{i}"), ReplaySource::from_data(d)).unwrap();
+        }
+        // Unknown tenants are rejected up front.
+        assert!(ingestor
+            .add_stream("ghost", ReplaySource::new(vec![]))
+            .is_err());
+
+        let rows = ingestor.run_to_completion().unwrap();
+        assert!(rows.len() >= datasets.len() * 2, "want multiple cycles per tenant");
+        for (i, d) in datasets.iter().enumerate() {
+            let id = crate::serving::TenantId::from(format!("t{i}"));
+            let total: usize =
+                rows.iter().filter(|r| r.tenant == id).map(|r| r.ingested).sum();
+            assert_eq!(
+                total,
+                d.storage().num_edges() + d.storage().num_node_events(),
+                "tenant {i} must ingest its whole stream"
+            );
+            // Every tenant finished published, with all its edges visible.
+            let snap = router.pin(&id).unwrap();
+            assert_eq!(snap.num_edges(), d.storage().num_edges());
+            assert_eq!(snap.edge_ts(), d.storage().edge_ts());
+            // Generations advanced across cycles.
+            let gens: Vec<u64> =
+                rows.iter().filter(|r| r.tenant == id).map(|r| r.generation).collect();
+            assert!(gens.windows(2).all(|w| w[0] < w[1]), "{gens:?}");
+        }
+    }
+
+    #[test]
+    fn one_tenants_failure_does_not_halt_the_others() {
+        use crate::graph::{EdgeEvent, Event};
+        use crate::serving::TenantId;
+        use crate::util::TimeGranularity;
+
+        let edge = |t: i64| {
+            Event::Edge(EdgeEvent { t, src: 0, dst: 1, features: vec![] })
+        };
+        let mut router = TenantRouter::new();
+        for (name, seal) in
+            [("good", SealPolicy::default()), ("bad", SealPolicy::by_events(1))]
+        {
+            router
+                .add_tenant(
+                    name,
+                    crate::serving::TenantConfig::new(4)
+                        .with_seal(seal)
+                        .with_granularity(TimeGranularity::Second),
+                )
+                .unwrap();
+        }
+        let router = Arc::new(router);
+        let mut ing = MultiTenantIngestor::new(Arc::clone(&router), 2);
+        ing.add_stream("good", ReplaySource::new((0..6).map(|i| edge(i * 10)).collect()))
+            .unwrap();
+        // The bad tenant seals per event, so its second (older) edge is
+        // a stale append: terminal for `bad`, invisible to `good`.
+        ing.add_stream("bad", ReplaySource::new(vec![edge(100), edge(10)])).unwrap();
+
+        let rows = ing.run_to_completion().unwrap();
+        let bad: Vec<_> = rows.iter().filter(|r| r.tenant == TenantId::from("bad")).collect();
+        assert_eq!(bad.len(), 1, "one error row, then the bad tenant is retired");
+        let msg = bad[0].error.as_deref().unwrap();
+        assert!(msg.contains("stale"), "{msg}");
+
+        // The healthy tenant drained its whole stream regardless.
+        let good_total: usize = rows
+            .iter()
+            .filter(|r| r.tenant == TenantId::from("good"))
+            .map(|r| r.ingested)
+            .sum();
+        assert_eq!(good_total, 6);
+        assert!(rows
+            .iter()
+            .filter(|r| r.tenant == TenantId::from("good"))
+            .all(|r| r.error.is_none()));
+        assert_eq!(router.pin(&TenantId::from("good")).unwrap().num_edges(), 6);
+    }
 
     #[test]
     fn cycles_tile_the_stream_exactly_once() {
@@ -252,7 +501,7 @@ mod tests {
         let total_edges = data.storage().num_edges();
         let store = SegmentedStorage::new(
             data.storage().num_nodes(),
-            SealPolicy { max_events: 200, max_span: None },
+            SealPolicy::by_events(200),
         );
         let source = ReplaySource::from_data(&data);
         let cfg = StreamingConfig {

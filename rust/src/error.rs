@@ -28,6 +28,15 @@ pub enum TgmError {
     /// events once a segment has been sealed).
     StaleAppend(String),
 
+    /// A writer outran a hard buffering limit (e.g. node events pending
+    /// in an active segment with no edge to seal behind); the producer
+    /// must seal/ingest edges or drop events before appending more.
+    Backpressure(String),
+
+    /// Multi-tenant serving error: unknown/duplicate tenant, or a tenant
+    /// that has not published a snapshot yet.
+    Serving(String),
+
     /// Dataset loading / parsing failure.
     Io(String),
 
@@ -53,6 +62,8 @@ impl std::fmt::Display for TgmError {
             TgmError::Recipe(m) => write!(f, "recipe error: {m}"),
             TgmError::Batch(m) => write!(f, "batch error: {m}"),
             TgmError::StaleAppend(m) => write!(f, "stale append: {m}"),
+            TgmError::Backpressure(m) => write!(f, "backpressure: {m}"),
+            TgmError::Serving(m) => write!(f, "serving error: {m}"),
             TgmError::Io(m) => write!(f, "io error: {m}"),
             TgmError::Manifest(m) => write!(f, "manifest error: {m}"),
             TgmError::Runtime(m) => write!(f, "runtime error: {m}"),

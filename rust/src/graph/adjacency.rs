@@ -432,7 +432,7 @@ mod tests {
         let single = TemporalAdjacency::build(
             &GraphStorage::from_events(edges.clone(), vec![], 7, None, None).unwrap(),
         );
-        let mut st = SegmentedStorage::new(7, SealPolicy { max_events: 7, max_span: None });
+        let mut st = SegmentedStorage::new(7, SealPolicy::by_events(7));
         for e in &edges {
             st.append_edge(e.clone()).unwrap();
         }
@@ -458,7 +458,7 @@ mod tests {
 
     #[test]
     fn cache_reuses_segment_indices_across_generations() {
-        let mut st = SegmentedStorage::new(4, SealPolicy { max_events: 2, max_span: None });
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(2));
         st.append_edge(EdgeEvent { t: 1, src: 0, dst: 1, features: vec![] }).unwrap();
         st.append_edge(EdgeEvent { t: 2, src: 1, dst: 2, features: vec![] }).unwrap();
         let cache = AdjacencyCache::new();

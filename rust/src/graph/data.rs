@@ -256,7 +256,7 @@ mod tests {
         // Identical stats and splits whether the data was built one-shot
         // or appended through a segmented store.
         let one_shot = data(100);
-        let mut st = SegmentedStorage::new(4, SealPolicy { max_events: 23, max_span: None });
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(23));
         for i in 0..100usize {
             st.append_edge(EdgeEvent {
                 t: i as i64,

@@ -15,6 +15,6 @@ pub use adjacency::{AdjacencyCache, MergedAdjacency, MergedNeighbors, TemporalAd
 pub use data::{DGData, DatasetStats, Splits, Task};
 pub use discretize::{discretize, discretize_utg, ReduceOp};
 pub use events::{EdgeEvent, Event, NodeEvent, NodeId};
-pub use segment::{SealPolicy, SegmentedStorage, SnapshotId, StorageSnapshot};
+pub use segment::{SealPolicy, SegmentedStorage, SnapshotCell, SnapshotId, StorageSnapshot};
 pub use storage::GraphStorage;
 pub use view::DGraph;

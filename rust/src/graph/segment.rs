@@ -76,16 +76,44 @@ pub struct SnapshotId {
 /// When the active segment seals automatically.
 #[derive(Debug, Clone)]
 pub struct SealPolicy {
-    /// Seal once the active segment holds this many edge events.
+    /// Seal once the active segment buffers this many events (edge plus
+    /// node events — a node-event-heavy stream must not grow the active
+    /// segment unboundedly just because edges are rare).
     pub max_events: usize,
-    /// Seal once the active segment's edge timestamps span more than this
-    /// many native time units (`None` = unbounded).
+    /// Seal once the active segment's timestamps (edge *and* node
+    /// events) span more than this many native time units
+    /// (`None` = unbounded).
     pub max_span: Option<i64>,
+    /// Hard cap on node events buffered while the active segment holds
+    /// **no edge** (a segment needs at least one edge to carry a time
+    /// span, so edge-free node events cannot seal; this bound turns the
+    /// would-be unbounded buffer into a typed
+    /// [`TgmError::Backpressure`] error).
+    pub max_pending_node_events: usize,
 }
 
 impl Default for SealPolicy {
     fn default() -> Self {
-        SealPolicy { max_events: 4096, max_span: None }
+        SealPolicy { max_events: 4096, max_span: None, max_pending_node_events: 65_536 }
+    }
+}
+
+impl SealPolicy {
+    /// Policy sealing after `n` buffered events, otherwise default.
+    pub fn by_events(n: usize) -> SealPolicy {
+        SealPolicy { max_events: n, ..Default::default() }
+    }
+
+    /// Additionally seal once the active span exceeds `span` time units.
+    pub fn with_max_span(mut self, span: i64) -> SealPolicy {
+        self.max_span = Some(span);
+        self
+    }
+
+    /// Set the edge-free pending node-event cap.
+    pub fn with_node_event_cap(mut self, cap: usize) -> SealPolicy {
+        self.max_pending_node_events = cap.max(1);
+        self
     }
 }
 
@@ -223,10 +251,7 @@ impl SegmentedStorage {
     pub fn append(&mut self, ev: Event) -> Result<bool> {
         match ev {
             Event::Edge(e) => self.append_edge(e),
-            Event::Node(n) => {
-                self.append_node_event(n)?;
-                Ok(false)
-            }
+            Event::Node(n) => self.append_node_event(n),
         }
     }
 
@@ -269,8 +294,15 @@ impl SegmentedStorage {
         }
     }
 
-    /// Append one node (dynamic-feature) event.
-    pub fn append_node_event(&mut self, e: NodeEvent) -> Result<()> {
+    /// Append one node (dynamic-feature) event. Node events count toward
+    /// the [`SealPolicy`] size/span thresholds like edge events, so a
+    /// node-event-heavy stream still seals; returns `true` when the
+    /// append triggered an automatic seal. A segment needs at least one
+    /// edge to seal, so with an edge-free active segment node events
+    /// stay pending — bounded by
+    /// [`SealPolicy::max_pending_node_events`], past which the append is
+    /// rejected with [`TgmError::Backpressure`].
+    pub fn append_node_event(&mut self, e: NodeEvent) -> Result<bool> {
         if e.node as usize >= self.num_nodes {
             return Err(TgmError::Graph(format!(
                 "node event references node {} >= num_nodes={}",
@@ -285,6 +317,16 @@ impl SegmentedStorage {
                 )));
             }
         }
+        if self.active_edges.is_empty()
+            && self.active_nodes.len() >= self.policy.max_pending_node_events
+        {
+            return Err(TgmError::Backpressure(format!(
+                "{} node events are already pending with no edge to seal behind \
+                 (SealPolicy::max_pending_node_events = {}); ingest an edge or raise the cap",
+                self.active_nodes.len(),
+                self.policy.max_pending_node_events
+            )));
+        }
         match self.node_feat_dim {
             Some(d) => {
                 if e.features.len() != d {
@@ -296,13 +338,22 @@ impl SegmentedStorage {
             }
             None => self.node_feat_dim = Some(e.features.len()),
         }
+        // Node events participate in the active span: a node event
+        // outside the edge span must still be able to trip `max_span`.
+        self.active_min_t = Some(self.active_min_t.map_or(e.t, |m| m.min(e.t)));
+        self.active_max_t = Some(self.active_max_t.map_or(e.t, |m| m.max(e.t)));
         self.active_nodes.push(e);
         self.generation += 1;
-        Ok(())
+        if !self.active_edges.is_empty() && self.should_seal() {
+            self.seal()?;
+            Ok(true)
+        } else {
+            Ok(false)
+        }
     }
 
     fn should_seal(&self) -> bool {
-        if self.active_edges.len() >= self.policy.max_events {
+        if self.active_edges.len() + self.active_nodes.len() >= self.policy.max_events {
             return true;
         }
         if let (Some(span), Some(lo), Some(hi)) =
@@ -452,6 +503,51 @@ impl SegmentedStorage {
         ));
         self.cached_snapshot = Some((self.generation, Arc::clone(&snap)));
         Ok(snap)
+    }
+
+    /// Snapshot the current generation and publish it into `cell` (the
+    /// serving layer's atomic swap point): readers already pinned to an
+    /// older generation keep it; new pins observe this one.
+    pub fn publish_to(&mut self, cell: &SnapshotCell) -> Result<Arc<StorageSnapshot>> {
+        let snap = self.snapshot()?;
+        cell.publish(Arc::clone(&snap));
+        Ok(snap)
+    }
+}
+
+/// Atomic publication point for [`StorageSnapshot`] generations.
+///
+/// A writer ([`SegmentedStorage::publish_to`]) swaps in new generations;
+/// readers [`SnapshotCell::pin`] the latest at request time and keep the
+/// returned `Arc` for the whole request, so a concurrent swap never
+/// tears an in-flight read — the reader finishes its pinned generation,
+/// the next request observes the new one. Cloning the cell clones the
+/// *handle*; all clones share one slot.
+#[derive(Clone, Default)]
+pub struct SnapshotCell {
+    slot: Arc<std::sync::RwLock<Option<Arc<StorageSnapshot>>>>,
+}
+
+impl SnapshotCell {
+    /// Empty cell (nothing published yet).
+    pub fn new() -> SnapshotCell {
+        SnapshotCell::default()
+    }
+
+    /// Atomically replace the published snapshot.
+    pub fn publish(&self, snap: Arc<StorageSnapshot>) {
+        *self.slot.write().unwrap_or_else(|e| e.into_inner()) = Some(snap);
+    }
+
+    /// Pin the latest published generation (`None` before the first
+    /// publish). The returned `Arc` stays byte-stable forever.
+    pub fn pin(&self) -> Option<Arc<StorageSnapshot>> {
+        self.slot.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Generation of the currently published snapshot, if any.
+    pub fn generation(&self) -> Option<u64> {
+        self.slot.read().unwrap_or_else(|e| e.into_inner()).as_ref().map(|s| s.generation())
     }
 }
 
@@ -921,7 +1017,7 @@ mod tests {
     }
 
     fn build_segmented(events: &[EdgeEvent], seal_every: usize) -> SegmentedStorage {
-        let mut st = SegmentedStorage::new(8, SealPolicy { max_events: seal_every, max_span: None });
+        let mut st = SegmentedStorage::new(8, SealPolicy::by_events(seal_every));
         for e in events {
             st.append_edge(e.clone()).unwrap();
         }
@@ -1065,7 +1161,7 @@ mod tests {
 
     #[test]
     fn auto_seal_on_size_and_span() {
-        let mut st = SegmentedStorage::new(4, SealPolicy { max_events: 3, max_span: None });
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(3));
         assert!(!st.append_edge(edge(1, 0, 1)).unwrap());
         assert!(!st.append_edge(edge(2, 0, 1)).unwrap());
         assert!(st.append_edge(edge(3, 0, 1)).unwrap(), "size threshold seals");
@@ -1073,7 +1169,7 @@ mod tests {
         assert_eq!(st.pending_edges(), 0);
 
         let mut st2 =
-            SegmentedStorage::new(4, SealPolicy { max_events: usize::MAX, max_span: Some(100) });
+            SegmentedStorage::new(4, SealPolicy::by_events(usize::MAX).with_max_span(100));
         assert!(!st2.append_edge(edge(0, 0, 1)).unwrap());
         assert!(!st2.append_edge(edge(100, 0, 1)).unwrap());
         assert!(st2.append_edge(edge(101, 0, 1)).unwrap(), "span threshold seals");
@@ -1102,13 +1198,13 @@ mod tests {
 
     #[test]
     fn node_events_stream_and_lookup_across_segments() {
-        let mut st = SegmentedStorage::new(4, SealPolicy { max_events: 2, max_span: None });
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(2));
         st.append_node_event(NodeEvent { t: 5, node: 1, features: vec![1.0] }).unwrap();
-        st.append_edge(edge(10, 0, 1)).unwrap();
-        st.append_edge(edge(20, 1, 2)).unwrap(); // seals segment 1
-        st.append_node_event(NodeEvent { t: 25, node: 1, features: vec![2.0] }).unwrap();
+        st.append_edge(edge(10, 0, 1)).unwrap(); // 1 node + 1 edge: seals segment 1
+        st.append_edge(edge(20, 1, 2)).unwrap();
+        st.append_node_event(NodeEvent { t: 25, node: 1, features: vec![2.0] }).unwrap(); // seals 2
         st.append_edge(edge(30, 2, 3)).unwrap();
-        st.append_edge(edge(40, 3, 0)).unwrap(); // seals segment 2
+        st.append_edge(edge(40, 3, 0)).unwrap(); // seals segment 3
         let snap = st.snapshot().unwrap();
         assert_eq!(snap.num_node_events(), 2);
         assert_eq!(snap.node_event_range(0, 100), 0..2);
@@ -1173,7 +1269,7 @@ mod tests {
         // First segment is one burst of ties: a prefix-only inference
         // would pin the event-ordered granularity forever. The store must
         // instead track the whole stream, exactly like `from_events`.
-        let mut st = SegmentedStorage::new(4, SealPolicy { max_events: 3, max_span: None });
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(3));
         for _ in 0..3 {
             st.append_edge(edge(100, 0, 1)).unwrap(); // auto-seals at 3
         }
@@ -1207,5 +1303,89 @@ mod tests {
         assert_send_sync::<StorageSnapshot>();
         assert_send_sync::<Arc<StorageSnapshot>>();
         assert_send_sync::<SegmentedStorage>();
+        assert_send_sync::<SnapshotCell>();
+    }
+
+    /// Regression: `should_seal` used to count only edge events, so a
+    /// node-event-heavy stream never tripped `max_events` and the active
+    /// segment grew without bound.
+    #[test]
+    fn node_events_count_toward_the_seal_threshold() {
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(4));
+        st.append_edge(edge(10, 0, 1)).unwrap();
+        assert!(!st.append_node_event(NodeEvent { t: 11, node: 0, features: vec![] }).unwrap());
+        assert!(!st.append_node_event(NodeEvent { t: 12, node: 1, features: vec![] }).unwrap());
+        // The 4th buffered event is a node event: it must seal.
+        assert!(st.append_node_event(NodeEvent { t: 13, node: 2, features: vec![] }).unwrap());
+        assert_eq!(st.num_sealed_segments(), 1);
+        assert_eq!(st.pending_edges(), 0);
+        assert_eq!(st.pending_node_events(), 0);
+        let snap = st.snapshot().unwrap();
+        assert_eq!(snap.num_edges(), 1);
+        assert_eq!(snap.num_node_events(), 3);
+    }
+
+    /// Regression: an edge-free active segment cannot seal, so pending
+    /// node events must hit a typed backpressure cap instead of growing
+    /// forever.
+    #[test]
+    fn edge_free_node_events_hit_the_backpressure_cap() {
+        let mut st =
+            SegmentedStorage::new(4, SealPolicy::by_events(2).with_node_event_cap(3));
+        for t in 0..3 {
+            st.append_node_event(NodeEvent { t, node: 0, features: vec![] }).unwrap();
+        }
+        let err = st
+            .append_node_event(NodeEvent { t: 9, node: 0, features: vec![] })
+            .unwrap_err();
+        assert!(matches!(err, TgmError::Backpressure(_)), "{err}");
+        // An edge unblocks the buffer: it seals (4 pending >= 2) and
+        // subsequent node events append again.
+        assert!(st.append_edge(edge(10, 0, 1)).unwrap());
+        st.append_node_event(NodeEvent { t: 11, node: 1, features: vec![] }).unwrap();
+        st.append_edge(edge(12, 1, 2)).unwrap();
+        assert_eq!(st.snapshot().unwrap().num_node_events(), 4);
+    }
+
+    /// Regression: `max_span` used to watch only edge timestamps, so a
+    /// node event far outside the edge span landed in a segment whose
+    /// recorded span excluded it instead of tripping the seal.
+    #[test]
+    fn node_event_timestamps_fold_into_the_active_span() {
+        let mut st = SegmentedStorage::new(
+            4,
+            SealPolicy::by_events(usize::MAX).with_max_span(100),
+        );
+        assert!(!st.append_edge(edge(0, 0, 1)).unwrap());
+        // An edge-only tracker would see span 0 here; the node event at
+        // t=150 stretches it past 100 and must seal.
+        assert!(st.append_node_event(NodeEvent { t: 150, node: 1, features: vec![] }).unwrap());
+        assert_eq!(st.num_sealed_segments(), 1);
+        // The span tracker reset with the seal: fresh appends start over.
+        assert!(!st.append_edge(edge(200, 1, 2)).unwrap());
+        assert!(!st.append_edge(edge(290, 2, 3)).unwrap());
+        assert!(st.append_edge(edge(301, 3, 0)).unwrap(), "span threshold re-arms after seal");
+    }
+
+    #[test]
+    fn snapshot_cell_publishes_atomically_and_pins_stably() {
+        let cell = SnapshotCell::new();
+        assert!(cell.pin().is_none());
+        assert!(cell.generation().is_none());
+        let mut st = build_segmented(&stream(30), 8);
+        let first = st.publish_to(&cell).unwrap();
+        let pinned = cell.pin().unwrap();
+        assert!(Arc::ptr_eq(&first, &pinned));
+        let pinned_ts = pinned.edge_ts();
+
+        // Writer publishes a newer generation through a cloned handle.
+        let handle = cell.clone();
+        st.append_edge(edge(10_000, 0, 1)).unwrap();
+        let second = st.publish_to(&handle).unwrap();
+        assert!(second.generation() > pinned.generation());
+        assert_eq!(cell.generation(), Some(second.generation()));
+        // The old pin is untouched; a fresh pin sees the new generation.
+        assert_eq!(pinned.edge_ts(), pinned_ts);
+        assert_eq!(cell.pin().unwrap().num_edges(), 31);
     }
 }

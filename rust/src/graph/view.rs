@@ -208,7 +208,7 @@ mod tests {
     fn views_window_multi_segment_snapshots() {
         // The same columns streamed through a segmented store: windows
         // resolve to identical logical ranges and columns.
-        let mut st = SegmentedStorage::new(5, SealPolicy { max_events: 16, max_span: None })
+        let mut st = SegmentedStorage::new(5, SealPolicy::by_events(16))
             .with_granularity(TimeGranularity::Minute);
         for i in 0..100i64 {
             st.append_edge(EdgeEvent {

@@ -146,6 +146,32 @@ impl MaterializedBatch {
     }
 }
 
+/// Test-only full structural equality between two batch streams: seed
+/// columns, windows, node events, and every attribute tensor
+/// byte-for-byte. One shared copy so loader/serving determinism tests
+/// cannot drift apart field-by-field.
+#[cfg(test)]
+pub(crate) fn assert_batches_identical(a: &[MaterializedBatch], b: &[MaterializedBatch]) {
+    assert_eq!(a.len(), b.len(), "batch counts differ");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.start, y.start, "batch {i} window start");
+        assert_eq!(x.end, y.end, "batch {i} window end");
+        assert_eq!(x.src, y.src, "batch {i} src");
+        assert_eq!(x.dst, y.dst, "batch {i} dst");
+        assert_eq!(x.ts, y.ts, "batch {i} ts");
+        assert_eq!(x.edge_indices, y.edge_indices, "batch {i} edge indices");
+        assert_eq!(x.node_events, y.node_events, "batch {i} node events");
+        assert_eq!(x.attr_names(), y.attr_names(), "batch {i} attribute sets");
+        for name in x.attr_names() {
+            assert_eq!(
+                x.get(name).unwrap(),
+                y.get(name).unwrap(),
+                "batch {i} attribute `{name}` differs"
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -227,11 +227,19 @@ pub fn bipartite(cfg: &GenConfig) -> Result<DGData> {
 /// year's trade proportions.
 pub fn trade(num_countries: usize, num_years: usize, seed: u64) -> Result<DGData> {
     let mut rng = Rng::new(seed);
+    // Fallible lookup: only wall-clock granularities have a fixed
+    // length, and threading a non-fixed one through here must surface
+    // as an error, never a panic.
+    let year_secs = TimeGranularity::Year.seconds().ok_or_else(|| {
+        crate::error::TgmError::Time(
+            "generator stepping requires a fixed-length granularity (got event-ordered)".into(),
+        )
+    })?;
     // Latent country "sizes" drive a gravity-model trade volume.
     let sizes: Vec<f64> = (0..num_countries).map(|_| rng.exponential(1.0) + 0.1).collect();
     let mut edges = Vec::new();
     for year in 0..num_years {
-        let t = year as i64 * TimeGranularity::Year.seconds().unwrap();
+        let t = year as i64 * year_secs;
         let drift = 1.0 + 0.05 * (year as f64).sin();
         for s in 0..num_countries {
             for d in 0..num_countries {
@@ -323,6 +331,16 @@ mod tests {
         assert_eq!(a.storage().edge_feats(), b.storage().edge_feats());
         let c = bipartite(&wiki_config().scale(0.05).with_seed(999)).unwrap();
         assert_ne!(a.storage().edge_src(), c.storage().edge_src());
+    }
+
+    #[test]
+    fn year_stepping_is_fallible_not_panicking() {
+        // Regression for the old `Year.seconds().unwrap()` at the top of
+        // `trade`: non-fixed granularities must be unrepresentable as
+        // panics on the generator path (the lookup is threaded through
+        // the fallible result instead).
+        assert!(TimeGranularity::Event.seconds().is_none());
+        assert!(trade(8, 4, 1).is_ok());
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //!   versioned epoch snapshots, lightweight graph views, vectorized
 //!   discretization, the phased hook/recipe system (stateless worker
 //!   hooks + stateful consumer hooks), CTDG/DTDG data loaders with a
-//!   deterministic parallel prefetch pipeline, samplers, evaluation,
-//!   and the epoch + streaming training coordinators.
+//!   deterministic parallel prefetch pipeline over a shared serving
+//!   pool, a sharded multi-tenant tenant router with atomic snapshot
+//!   pinning, samplers, evaluation, and the epoch + streaming training
+//!   coordinators.
 //! * **Layer 2 (`python/compile`)** — JAX model definitions (TGAT, TGN,
 //!   GCN, GCLSTM, T-GCN, GraphMixer, DyGFormer, TPNet) AOT-lowered to HLO
 //!   text artifacts with the optimizer inside the training step.
@@ -43,6 +45,7 @@ pub mod io;
 pub mod loader;
 pub mod models;
 pub mod runtime;
+pub mod serving;
 pub mod util;
 
 pub use error::{Result, TgmError};

@@ -16,7 +16,11 @@
 //! [`DGDataLoader`] executes the plan serially on the calling thread;
 //! [`PrefetchLoader`] materializes plans on a worker pool and applies the
 //! stateful hook phase in order on receive, yielding byte-identical
-//! batches (see `prefetch` module docs).
+//! batches (see `prefetch` module docs). The pool itself is a standalone
+//! [`ServingPool`]: many concurrent iterations ([`PooledStream`]s — one
+//! per tenant graph under [`crate::serving::TenantRouter`]) multiplex
+//! over one fixed set of workers, while `PrefetchLoader` remains the
+//! exclusive single-stream façade over a dedicated pool.
 //!
 //! Strategies:
 //!
@@ -27,8 +31,10 @@
 //!   wall-clock granularity τ̂, so batch *duration* is fixed while edge
 //!   counts vary — snapshot iteration.
 
+pub mod pool;
 pub mod prefetch;
 
+pub use pool::{PooledStream, ServingPool, StreamConfig};
 pub use prefetch::{PrefetchConfig, PrefetchLoader, PrefetchStats};
 
 use crate::error::{Result, TgmError};

@@ -1,0 +1,689 @@
+//! Shared batch-materialization worker pool (multi-tenant serving).
+//!
+//! [`ServingPool`] owns the worker threads that used to live inside
+//! [`super::PrefetchLoader`]. Lifting them out lets **many concurrent
+//! iterations** — typically one per tenant graph in a
+//! [`crate::serving::TenantRouter`] — multiplex their materialization
+//! jobs over one fixed set of threads instead of spawning a pool per
+//! loader:
+//!
+//! * every iteration is a [`PooledStream`]: it plans its batches up
+//!   front, snapshots its manager's stateless phase, and submits
+//!   materialization jobs into the pool's shared FIFO queue;
+//! * each stream keeps at most `queue_depth` jobs in flight (a sliding
+//!   window over its plan), so one tenant can never flood the queue and
+//!   starve the others, and total queued work stays proportional to the
+//!   sum of the active streams' depths;
+//! * workers execute jobs in submission order (materialize seed columns,
+//!   run the stateless hook phase) and send each result back over the
+//!   submitting stream's private bounded channel — results never cross
+//!   between streams;
+//! * the consumer side of each stream reorders arrivals into plan order
+//!   and applies its own *stateful* hook phase, so per-tenant stateful
+//!   hooks (e.g. the recency sampler) still observe batches strictly in
+//!   order even though tenants share workers.
+//!
+//! **Determinism guarantee.** Exactly the [`super::PrefetchLoader`]
+//! guarantee, per stream: batch boundaries come from the plan computed at
+//! stream creation, stateless hooks draw per-batch RNG streams seeded by
+//! the plan index, and the stateful phase runs in plan order on the
+//! consuming thread. Because a stream holds its own
+//! `Arc<StorageSnapshot>`, a tenant publishing a newer generation
+//! mid-iteration never perturbs the stream pinned to the older one.
+//!
+//! Dropping a stream cancels its not-yet-executed jobs (workers skip
+//! them via a shared flag). Dropping the pool enqueues one shutdown
+//! token per worker behind the backlog and joins them; streams that
+//! outlive their pool do not hang — already-delivered results drain,
+//! and any further submission or wait surfaces a typed error (a racy
+//! shutdown-while-serving may drop an in-flight result, but it reports
+//! as an error, never silently).
+
+use crate::error::{Result, TgmError};
+use crate::graph::{DGraph, StorageSnapshot};
+use crate::hooks::batch::MaterializedBatch;
+use crate::hooks::manager::{HookManager, StatelessPipeline};
+use crate::loader::{materialize_window, plan_batches, BatchBy, BatchPlan};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// One worker-to-consumer message: plan position plus the materialized
+/// batch (or the error that produced it).
+type WorkerMsg = (usize, Result<MaterializedBatch>);
+
+/// How long a blocked consumer waits between pool-liveness checks. Only
+/// paid when the pool died under a stream (or a worker is genuinely this
+/// slow); the normal path never sees the timeout.
+const POOL_LIVENESS_POLL: Duration = Duration::from_millis(50);
+
+/// One unit of pool work: materialize one planned batch of one stream
+/// and run that stream's stateless hook phase over it.
+struct Job {
+    storage: Arc<StorageSnapshot>,
+    plan: BatchPlan,
+    pipeline: StatelessPipeline,
+    /// Plan position; echoed back so the consumer can reorder.
+    seq: usize,
+    /// Set when the submitting stream is dropped: skip without running.
+    cancelled: Arc<AtomicBool>,
+    /// Per-stream worker-busy accounting (for [`super::PrefetchStats`]).
+    busy: Arc<Mutex<Duration>>,
+    /// The submitting stream's private result channel.
+    reply: SyncSender<WorkerMsg>,
+}
+
+/// Queue message: work, or an orderly per-worker shutdown token. Tokens
+/// are enqueued by [`ServingPool::drop`] AFTER the backlog, so already
+/// submitted jobs still execute; each worker consumes exactly one token
+/// and exits. Boxed so the token variant stays word-sized.
+enum Msg {
+    Job(Box<Job>),
+    Shutdown,
+}
+
+/// Per-stream configuration (the pool itself only fixes the worker
+/// count; everything batch-shaped is chosen per iteration).
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Sliding-window size: how many of this stream's jobs may be queued
+    /// or finished-but-unconsumed at once.
+    pub queue_depth: usize,
+    /// Skip empty time buckets (mirrors the serial loader's default).
+    pub skip_empty: bool,
+    /// Max events per time-iteration batch (see
+    /// [`super::DGDataLoader::with_event_cap`]).
+    pub event_cap: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig { queue_depth: 4, skip_empty: true, event_cap: usize::MAX }
+    }
+}
+
+impl StreamConfig {
+    /// Set the in-flight window size.
+    pub fn with_queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    /// Keep empty time buckets.
+    pub fn with_empty_batches(mut self) -> Self {
+        self.skip_empty = false;
+        self
+    }
+
+    /// Split oversized time buckets to at most `cap` events.
+    pub fn with_event_cap(mut self, cap: usize) -> Self {
+        self.event_cap = cap.max(1);
+        self
+    }
+}
+
+/// A fixed set of worker threads multiplexing batch-materialization jobs
+/// from any number of concurrent [`PooledStream`]s.
+///
+/// The pool may be dropped while streams are still alive: workers finish
+/// the already-queued backlog, and surviving streams surface a typed
+/// error (never a hang) on their next submission or wait.
+pub struct ServingPool {
+    /// Job queue entry point. `None` for a 0-worker pool (streams run
+    /// their serial fallback). Wrapped in a `Mutex` so the pool is
+    /// `Sync` and streams can be opened from any thread.
+    tx: Mutex<Option<Sender<Msg>>>,
+    /// Raised by `drop` before workers are joined; streams poll it so a
+    /// wait on a dead pool fails fast instead of blocking forever.
+    closed: Arc<AtomicBool>,
+    handles: Vec<thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl ServingPool {
+    /// Spawn `workers` threads. `0` creates an inert pool whose streams
+    /// all run the serial in-place fallback (no threads, same output).
+    pub fn new(workers: usize) -> ServingPool {
+        let closed = Arc::new(AtomicBool::new(false));
+        if workers == 0 {
+            return ServingPool { tx: Mutex::new(None), closed, handles: Vec::new(), workers: 0 };
+        }
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    // Hold the lock only while dequeueing; execution runs
+                    // unlocked so workers overlap.
+                    let msg = {
+                        let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+                        guard.recv()
+                    };
+                    let job = match msg {
+                        Ok(Msg::Job(job)) => job,
+                        // One shutdown token per worker, or every sender
+                        // (pool + all streams) is gone: exit.
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    };
+                    if job.cancelled.load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    let t0 = Instant::now();
+                    // A panicking hook must not strand the consumer
+                    // waiting for a reply that will never come: convert
+                    // the panic into a typed per-batch error.
+                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        materialize_window(&job.storage, &job.plan).and_then(|mut b| {
+                            job.pipeline.run(&mut b, &job.storage, job.plan.index)?;
+                            Ok(b)
+                        })
+                    }))
+                    .unwrap_or_else(|_| {
+                        Err(TgmError::Hook(
+                            "a worker hook panicked while materializing this batch".into(),
+                        ))
+                    });
+                    if let Ok(mut d) = job.busy.lock() {
+                        *d += t0.elapsed();
+                    }
+                    // A closed reply channel means the stream is gone;
+                    // keep serving the other streams.
+                    let _ = job.reply.send((job.seq, res));
+                })
+            })
+            .collect();
+        ServingPool { tx: Mutex::new(Some(tx)), closed, handles, workers }
+    }
+
+    /// Worker threads owned by the pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// A clone of the job-queue entry point (`None` once shut down or
+    /// for a 0-worker pool).
+    fn sender(&self) -> Option<Sender<Msg>> {
+        self.tx.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Open one pooled iteration over `view`. Plans the batches,
+    /// snapshots the active recipe's stateless phase, and submits the
+    /// first window of jobs. The manager must be activated first (same
+    /// contract as [`super::DGDataLoader`]).
+    pub fn stream<'a>(
+        &self,
+        view: DGraph,
+        by: BatchBy,
+        manager: &'a mut HookManager,
+        cfg: StreamConfig,
+    ) -> Result<PooledStream<'a>> {
+        let plans = plan_batches(&view, by, cfg.skip_empty, cfg.event_cap)?;
+        let pipeline = manager.stateless_pipeline()?;
+        let epoch = manager.registration_epoch();
+        let storage = Arc::clone(view.storage());
+        // Clamped so `depth + 1` and window arithmetic cannot overflow
+        // (and a silly depth cannot pre-materialize a whole epoch).
+        let depth = cfg.queue_depth.clamp(1, 1 << 20);
+        // An empty plan or an inert pool degrades to the serial path.
+        let job_tx = if plans.is_empty() { None } else { self.sender() };
+        let workers = if job_tx.is_some() { self.workers } else { 0 };
+        // The window invariant (`submitted <= next_index + depth`, with
+        // `next_index` advanced before topping up) allows `depth + 1`
+        // unconsumed results at once; sizing the reply channel to hold
+        // all of them means a worker NEVER blocks sending a result, so
+        // one slow stream cannot stall workers other streams need.
+        let (reply_tx, reply_rx) = sync_channel::<WorkerMsg>(depth + 1);
+        let mut stream = PooledStream {
+            manager,
+            storage,
+            plans,
+            pipeline,
+            job_tx,
+            pool_closed: Arc::clone(&self.closed),
+            reply_tx,
+            reply_rx,
+            cancelled: Arc::new(AtomicBool::new(false)),
+            busy: Arc::new(Mutex::new(Duration::ZERO)),
+            pending: HashMap::new(),
+            submitted: 0,
+            next_index: 0,
+            blocked: Duration::ZERO,
+            depth,
+            workers,
+            epoch,
+        };
+        stream.submit_window()?;
+        Ok(stream)
+    }
+}
+
+impl Drop for ServingPool {
+    fn drop(&mut self) {
+        // Surviving streams may still hold queue senders, so a plain
+        // channel disconnect would never arrive: flag the shutdown (so
+        // blocked/submitting streams error out fast), enqueue one token
+        // per worker AFTER the backlog, then reap. Already-queued jobs
+        // still execute and reply before the tokens are reached.
+        self.closed.store(true, Ordering::SeqCst);
+        if let Some(tx) = self.tx.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            for _ in 0..self.handles.len() {
+                let _ = tx.send(Msg::Shutdown);
+            }
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One iteration multiplexed over a [`ServingPool`]: yields batches in
+/// plan order with the submitting manager's stateful phase applied on
+/// the consuming thread.
+pub struct PooledStream<'a> {
+    manager: &'a mut HookManager,
+    storage: Arc<StorageSnapshot>,
+    plans: Vec<BatchPlan>,
+    /// Stateless worker phase; also the serial fallback pipeline.
+    pipeline: StatelessPipeline,
+    /// `None` degrades to the serial in-place path.
+    job_tx: Option<Sender<Msg>>,
+    /// Shared with the producing pool; true once the pool shut down.
+    pool_closed: Arc<AtomicBool>,
+    reply_tx: SyncSender<WorkerMsg>,
+    reply_rx: Receiver<WorkerMsg>,
+    cancelled: Arc<AtomicBool>,
+    busy: Arc<Mutex<Duration>>,
+    /// Reorder buffer for batches that arrived ahead of plan order.
+    pending: HashMap<usize, Result<MaterializedBatch>>,
+    /// Plan positions submitted to the pool so far.
+    submitted: usize,
+    next_index: usize,
+    blocked: Duration,
+    depth: usize,
+    workers: usize,
+    /// Manager registration epoch at stream creation; see
+    /// [`PooledStream::next`].
+    epoch: u64,
+}
+
+impl<'a> PooledStream<'a> {
+    /// Top up the sliding window: submit jobs while fewer than `depth`
+    /// of this stream's plans are in flight.
+    fn submit_window(&mut self) -> Result<()> {
+        let Some(tx) = &self.job_tx else { return Ok(()) };
+        while self.submitted < self.plans.len()
+            && self.submitted < self.next_index.saturating_add(self.depth)
+        {
+            // The closed check keeps a job from landing behind the
+            // pool's shutdown tokens (where no worker would ever reach
+            // it); the send error covers the fully-torn-down queue.
+            if self.pool_closed.load(Ordering::SeqCst) {
+                return Err(TgmError::Hook(
+                    "serving pool shut down while a stream was still submitting".into(),
+                ));
+            }
+            let job = Job {
+                storage: Arc::clone(&self.storage),
+                plan: self.plans[self.submitted].clone(),
+                pipeline: self.pipeline.clone(),
+                seq: self.submitted,
+                cancelled: Arc::clone(&self.cancelled),
+                busy: Arc::clone(&self.busy),
+                reply: self.reply_tx.clone(),
+            };
+            if tx.send(Msg::Job(Box::new(job))).is_err() {
+                return Err(TgmError::Hook(
+                    "serving pool shut down while a stream was still submitting".into(),
+                ));
+            }
+            self.submitted += 1;
+        }
+        Ok(())
+    }
+
+    /// Exact number of batches remaining.
+    pub fn num_batches_hint(&self) -> usize {
+        self.plans.len() - self.next_index
+    }
+
+    /// The snapshot this stream is pinned to.
+    pub fn storage(&self) -> &Arc<StorageSnapshot> {
+        &self.storage
+    }
+
+    /// The borrowed hook manager (stateful phase owner).
+    pub fn manager_mut(&mut self) -> &mut HookManager {
+        self.manager
+    }
+
+    /// Overlap accounting so far (read after draining for totals).
+    pub fn stats(&self) -> super::PrefetchStats {
+        super::PrefetchStats {
+            batches: self.plans.len(),
+            workers: self.workers,
+            worker_busy: *self.busy.lock().unwrap_or_else(|e| e.into_inner()),
+            consumer_blocked: self.blocked,
+        }
+    }
+
+    /// Next batch in plan order, or `None` when exhausted.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Option<Result<MaterializedBatch>> {
+        if self.next_index >= self.plans.len() {
+            return None;
+        }
+        // The worker pipeline is a point-in-time snapshot of the recipe;
+        // registering hooks mid-iteration would silently diverge from
+        // the serial loader, so fail loudly — and terminate the stream,
+        // so error-tolerant consumers cannot spin on a sticky error.
+        if self.manager.registration_epoch() != self.epoch {
+            self.next_index = self.plans.len();
+            return Some(Err(TgmError::Hook(
+                "hooks were registered while a prefetch iteration was in flight; \
+                 recreate the loader to pick them up"
+                    .into(),
+            )));
+        }
+        let idx = self.next_index;
+        self.next_index += 1;
+
+        // Serial fallback: materialize inline, no pool involved.
+        if self.job_tx.is_none() {
+            let plan = self.plans[idx].clone();
+            let mut batch = match materialize_window(&self.storage, &plan) {
+                Ok(b) => b,
+                Err(e) => return Some(Err(e)),
+            };
+            if let Err(e) = self.pipeline.run(&mut batch, &self.storage, plan.index) {
+                return Some(Err(e));
+            }
+            if let Err(e) = self.manager.run_stateful_indexed(&mut batch, &self.storage, plan.index)
+            {
+                return Some(Err(e));
+            }
+            return Some(Ok(batch));
+        }
+
+        // Advancing the consumer index freed a window slot.
+        if let Err(e) = self.submit_window() {
+            self.next_index = self.plans.len();
+            return Some(Err(e));
+        }
+
+        // Pull from the pool, reordering into plan order. The stream
+        // holds its own `reply_tx`, so the reply channel cannot
+        // disconnect while we wait — pool death is detected via the
+        // shared `closed` flag instead (bounded by the liveness poll).
+        let t0 = Instant::now();
+        let res = loop {
+            if let Some(r) = self.pending.remove(&idx) {
+                break r;
+            }
+            match self.reply_rx.recv_timeout(POOL_LIVENESS_POLL) {
+                Ok((i, r)) => {
+                    if i == idx {
+                        break r;
+                    }
+                    self.pending.insert(i, r);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    // Flag first, then one final drain attempt: results
+                    // that landed before the shutdown are still valid.
+                    if self.pool_closed.load(Ordering::SeqCst) {
+                        if let Ok((i, r)) = self.reply_rx.try_recv() {
+                            if i == idx {
+                                break r;
+                            }
+                            self.pending.insert(i, r);
+                            continue;
+                        }
+                        break Err(TgmError::Hook(
+                            "serving pool shut down while this stream was waiting for a batch"
+                                .into(),
+                        ));
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Unreachable in practice: the stream itself owns a
+                    // reply sender, so the channel cannot disconnect
+                    // while it waits. Defensive error, not a panic.
+                    break Err(TgmError::Hook(
+                        "prefetch reply channel disconnected unexpectedly".into(),
+                    ));
+                }
+            }
+        };
+        self.blocked += t0.elapsed();
+
+        match res {
+            Ok(mut batch) => {
+                let plan_index = self.plans[idx].index;
+                if let Err(e) =
+                    self.manager.run_stateful_indexed(&mut batch, &self.storage, plan_index)
+                {
+                    return Some(Err(e));
+                }
+                Some(Ok(batch))
+            }
+            Err(e) => Some(Err(e)),
+        }
+    }
+
+    /// Drain all remaining batches.
+    pub fn collect_all(&mut self) -> Result<Vec<MaterializedBatch>> {
+        let mut out = Vec::new();
+        while let Some(b) = self.next() {
+            out.push(b?);
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for PooledStream<'_> {
+    fn drop(&mut self) {
+        // Not-yet-executed jobs of this stream are skipped by workers;
+        // already-executing ones fail their reply send harmlessly.
+        self.cancelled.store(true, Ordering::Relaxed);
+        self.pending.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hooks::batch::assert_batches_identical as identical;
+    use crate::hooks::recipes::{RecipeRegistry, RECIPE_TGB_LINK};
+    use crate::io::gen;
+    use crate::loader::DGDataLoader;
+
+    fn serial(key: &str, seed: u64) -> Vec<MaterializedBatch> {
+        let data = gen::by_name("wiki", 0.05, seed).unwrap();
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate(key).unwrap();
+        DGDataLoader::new(data.full(), BatchBy::Events(100), &mut m)
+            .unwrap()
+            .collect_all()
+            .unwrap()
+    }
+
+    #[test]
+    fn two_streams_share_one_pool_deterministically() {
+        // Two independent iterations (distinct datasets and stateful
+        // managers) interleaved over the same 3-worker pool must each be
+        // byte-identical to their serial runs.
+        let pool = ServingPool::new(3);
+        let d1 = gen::by_name("wiki", 0.05, 1).unwrap();
+        let d2 = gen::by_name("wiki", 0.05, 2).unwrap();
+        let mut m1 = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        let mut m2 = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m1.activate("train").unwrap();
+        m2.activate("train").unwrap();
+        let mut s1 = pool
+            .stream(d1.full(), BatchBy::Events(100), &mut m1, StreamConfig::default())
+            .unwrap();
+        let mut s2 = pool
+            .stream(d2.full(), BatchBy::Events(100), &mut m2, StreamConfig::default())
+            .unwrap();
+
+        // Interleave consumption so both windows stay in flight at once.
+        let mut got1 = Vec::new();
+        let mut got2 = Vec::new();
+        loop {
+            let a = s1.next();
+            let b = s2.next();
+            if let Some(x) = a {
+                got1.push(x.unwrap());
+            }
+            if let Some(y) = b {
+                got2.push(y.unwrap());
+            }
+            if got1.len() + got2.len() >= s1.stats().batches + s2.stats().batches {
+                break;
+            }
+        }
+        identical(&serial("train", 1), &got1);
+        identical(&serial("train", 2), &got2);
+    }
+
+    #[test]
+    fn pool_outlives_streams_and_serves_again() {
+        let pool = ServingPool::new(2);
+        for seed in [1u64, 2, 3] {
+            let data = gen::by_name("wiki", 0.05, seed).unwrap();
+            let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+            m.activate("val").unwrap();
+            let mut s = pool
+                .stream(data.full(), BatchBy::Events(100), &mut m, StreamConfig::default())
+                .unwrap();
+            let got = s.collect_all().unwrap();
+            drop(s);
+            identical(&serial("val", seed), &got);
+        }
+    }
+
+    #[test]
+    fn dropping_a_stream_mid_iteration_leaves_the_pool_healthy() {
+        let pool = ServingPool::new(2);
+        let data = gen::by_name("wiki", 0.05, 4).unwrap();
+        {
+            let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+            m.activate("val").unwrap();
+            let mut s = pool
+                .stream(
+                    data.full(),
+                    BatchBy::Events(50),
+                    &mut m,
+                    StreamConfig::default().with_queue_depth(1),
+                )
+                .unwrap();
+            assert!(s.next().unwrap().is_ok());
+            // Dropped with most of the plan unconsumed.
+        }
+        // The pool still serves a fresh stream to completion.
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate("val").unwrap();
+        let mut s = pool
+            .stream(data.full(), BatchBy::Events(100), &mut m, StreamConfig::default())
+            .unwrap();
+        let got = s.collect_all().unwrap();
+        identical(&serial("val", 4), &got);
+    }
+
+    #[test]
+    fn pool_drop_with_live_stream_fails_fast_instead_of_hanging() {
+        let data = gen::by_name("wiki", 0.05, 6).unwrap();
+
+        // Every plan fits in the window: the backlog executes before the
+        // pool's shutdown tokens, so the orphaned stream still completes.
+        let mut m1 = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m1.activate("val").unwrap();
+        let mut small = {
+            let pool = ServingPool::new(2);
+            pool.stream(
+                data.full(),
+                BatchBy::Events(100),
+                &mut m1,
+                StreamConfig::default().with_queue_depth(64),
+            )
+            .unwrap()
+            // The pool is dropped here, while the stream lives on.
+        };
+        let got = small.collect_all().unwrap();
+        identical(&serial("val", 6), &got);
+
+        // More plans than the window: the stream must surface a typed
+        // error promptly, not block forever on the dead pool.
+        let mut m2 = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m2.activate("val").unwrap();
+        let mut big = {
+            let pool = ServingPool::new(2);
+            pool.stream(
+                data.full(),
+                BatchBy::Events(20),
+                &mut m2,
+                StreamConfig::default().with_queue_depth(2),
+            )
+            .unwrap()
+        };
+        let mut saw_error = false;
+        while let Some(b) = big.next() {
+            if let Err(e) = b {
+                assert!(e.to_string().contains("shut down"), "{e}");
+                saw_error = true;
+                break;
+            }
+        }
+        assert!(saw_error, "a dead pool must surface as an error, not a hang");
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_serially() {
+        let pool = ServingPool::new(0);
+        assert_eq!(pool.workers(), 0);
+        let data = gen::by_name("wiki", 0.05, 5).unwrap();
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate("val").unwrap();
+        let mut s = pool
+            .stream(data.full(), BatchBy::Events(100), &mut m, StreamConfig::default())
+            .unwrap();
+        assert_eq!(s.stats().workers, 0);
+        let got = s.collect_all().unwrap();
+        identical(&serial("val", 5), &got);
+    }
+
+    #[test]
+    fn streams_open_from_other_threads() {
+        // The pool is Sync: scoped threads open and drain their own
+        // streams concurrently against one shared pool.
+        let pool = ServingPool::new(4);
+        let results: Vec<Vec<MaterializedBatch>> = thread::scope(|scope| {
+            let handles: Vec<_> = (1u64..=3)
+                .map(|seed| {
+                    let pool = &pool;
+                    scope.spawn(move || {
+                        let data = gen::by_name("wiki", 0.05, seed).unwrap();
+                        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+                        m.activate("train").unwrap();
+                        let mut s = pool
+                            .stream(
+                                data.full(),
+                                BatchBy::Events(100),
+                                &mut m,
+                                StreamConfig::default(),
+                            )
+                            .unwrap();
+                        s.collect_all().unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (seed, got) in (1u64..=3).zip(&results) {
+            identical(&serial("train", seed), got);
+        }
+    }
+}

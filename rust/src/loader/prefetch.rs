@@ -1,14 +1,18 @@
 //! Parallel, double-buffered batch materialization.
 //!
 //! [`PrefetchLoader`] executes the same [`super::BatchPlan`] the serial
-//! [`super::DGDataLoader`] would, but pipelines it:
+//! [`super::DGDataLoader`] would, but pipelines it over worker threads.
+//! Since the serving-pool extraction it is a thin façade: it owns a
+//! dedicated single-stream [`super::ServingPool`] and drives one
+//! [`super::PooledStream`] over it, so the exclusive-loader API keeps
+//! working unchanged while multi-tenant callers share one pool across
+//! many streams (see [`crate::serving`]):
 //!
-//! * a small pool of **worker threads** pulls plan indices from a shared
-//!   counter, materializes seed columns ([`super::materialize_window`])
-//!   and applies the *stateless* hook phase
-//!   ([`crate::hooks::StatelessPipeline`]), then pushes the batch into a
-//!   **bounded channel** (backpressure keeps memory proportional to the
-//!   queue depth, not the epoch);
+//! * the pool's **worker threads** materialize planned batches
+//!   ([`super::materialize_window`]) and apply the *stateless* hook
+//!   phase ([`crate::hooks::StatelessPipeline`]); the stream's bounded
+//!   in-flight window gives backpressure, keeping memory proportional
+//!   to the queue depth, not the epoch;
 //! * the consumer reorders arrivals back into plan order (workers may
 //!   finish out of order) and applies the *stateful* hook phase via
 //!   [`crate::hooks::HookManager::run_stateful_indexed`], so hooks like
@@ -21,21 +25,12 @@
 //! in plan order on one thread. The `ablation.prefetch` bench tracks the
 //! wall-clock win; the tests in this module pin the equality.
 
-use crate::error::{Result, TgmError};
-use crate::graph::{DGraph, StorageSnapshot};
+use crate::error::Result;
+use crate::graph::DGraph;
 use crate::hooks::batch::MaterializedBatch;
-use crate::hooks::manager::{HookManager, StatelessPipeline};
-use crate::loader::{materialize_window, plan_batches, BatchBy, BatchPlan};
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::{Arc, Mutex};
-use std::thread;
-use std::time::{Duration, Instant};
-
-/// One worker-to-consumer message: plan position plus the materialized
-/// batch (or the error that produced it).
-type WorkerMsg = (usize, Result<MaterializedBatch>);
+use crate::hooks::manager::HookManager;
+use crate::loader::{BatchBy, PooledStream, ServingPool, StreamConfig};
+use std::time::Duration;
 
 /// Prefetch pipeline configuration.
 #[derive(Debug, Clone)]
@@ -43,7 +38,7 @@ pub struct PrefetchConfig {
     /// Worker threads materializing batches. `0` degrades to a serial
     /// in-place pipeline (no threads, same output).
     pub workers: usize,
-    /// Bounded channel capacity: how many finished batches may wait
+    /// Bounded in-flight window: how many finished batches may wait
     /// ahead of the consumer.
     pub queue_depth: usize,
     /// Skip empty time buckets (mirrors the serial loader's default).
@@ -83,6 +78,17 @@ impl PrefetchConfig {
         self.event_cap = cap.max(1);
         self
     }
+
+    /// The per-stream slice of this config (everything but the worker
+    /// count, which belongs to the pool). The window is widened to the
+    /// worker count so a dedicated pool never idles for queue space.
+    pub fn stream_config(&self) -> StreamConfig {
+        StreamConfig {
+            queue_depth: self.queue_depth.max(self.workers).max(1),
+            skip_empty: self.skip_empty,
+            event_cap: self.event_cap,
+        }
+    }
 }
 
 /// Wall-clock accounting for the overlap report (Table 11 extension).
@@ -100,244 +106,66 @@ pub struct PrefetchStats {
     pub consumer_blocked: Duration,
 }
 
-/// Loader that materializes batches on a worker pool and yields them in
-/// plan order with the stateful hook phase applied.
+/// Loader that materializes batches on a dedicated worker pool and
+/// yields them in plan order with the stateful hook phase applied.
 pub struct PrefetchLoader<'a> {
-    manager: &'a mut HookManager,
-    storage: Arc<StorageSnapshot>,
-    plans: Arc<Vec<BatchPlan>>,
-    /// Serial fallback pipeline when `workers == 0`.
-    inline: Option<StatelessPipeline>,
-    rx: Option<Receiver<WorkerMsg>>,
-    /// Reorder buffer for batches that arrived ahead of plan order.
-    pending: HashMap<usize, Result<MaterializedBatch>>,
-    next_index: usize,
-    handles: Vec<thread::JoinHandle<()>>,
-    busy: Arc<Mutex<Duration>>,
-    blocked: Duration,
-    workers: usize,
-    /// Manager registration epoch at snapshot time; a mismatch on
-    /// `next()` means hooks were registered mid-iteration and the worker
-    /// snapshot no longer reflects the recipe.
-    epoch: u64,
+    /// Declared before the pool so the stream's cancellation flag is set
+    /// before the pool joins its workers.
+    stream: PooledStream<'a>,
+    _pool: ServingPool,
 }
 
 impl<'a> PrefetchLoader<'a> {
     /// Plan the iteration, snapshot the active recipe's stateless phase,
-    /// and launch the worker pool. The manager must be activated first
-    /// (same contract as [`super::DGDataLoader`] + `HookManager::run`).
+    /// and launch a dedicated worker pool. The manager must be activated
+    /// first (same contract as [`super::DGDataLoader`] +
+    /// `HookManager::run`).
     pub fn new(
         view: DGraph,
         by: BatchBy,
         manager: &'a mut HookManager,
         cfg: PrefetchConfig,
     ) -> Result<PrefetchLoader<'a>> {
-        let plans = Arc::new(plan_batches(&view, by, cfg.skip_empty, cfg.event_cap)?);
-        let pipeline = manager.stateless_pipeline()?;
-        let epoch = manager.registration_epoch();
-        let storage = Arc::clone(view.storage());
-        let busy = Arc::new(Mutex::new(Duration::ZERO));
-        let workers = if plans.is_empty() { 0 } else { cfg.workers };
-
-        let mut handles = Vec::new();
-        let rx = if workers == 0 {
-            None
-        } else {
-            let (tx, rx) = sync_channel::<WorkerMsg>(cfg.queue_depth.max(workers));
-            let counter = Arc::new(AtomicUsize::new(0));
-            for _ in 0..workers {
-                let plans = Arc::clone(&plans);
-                let storage = Arc::clone(&storage);
-                let pipeline = pipeline.clone();
-                let counter = Arc::clone(&counter);
-                let busy = Arc::clone(&busy);
-                let tx = tx.clone();
-                handles.push(thread::spawn(move || loop {
-                    let i = counter.fetch_add(1, Ordering::Relaxed);
-                    if i >= plans.len() {
-                        break;
-                    }
-                    let t0 = Instant::now();
-                    let plan = &plans[i];
-                    let res = materialize_window(&storage, plan).and_then(|mut b| {
-                        pipeline.run(&mut b, &storage, plan.index)?;
-                        Ok(b)
-                    });
-                    if let Ok(mut d) = busy.lock() {
-                        *d += t0.elapsed();
-                    }
-                    // A closed channel means the consumer is gone: stop.
-                    if tx.send((i, res)).is_err() {
-                        break;
-                    }
-                }));
-            }
-            // `tx` drops here; only workers hold senders, so `recv`
-            // disconnects exactly when the pool drains or dies.
-            Some(rx)
-        };
-
-        Ok(PrefetchLoader {
-            manager,
-            storage,
-            plans,
-            inline: if workers == 0 { Some(pipeline) } else { None },
-            rx,
-            pending: HashMap::new(),
-            next_index: 0,
-            handles,
-            busy,
-            blocked: Duration::ZERO,
-            workers,
-            epoch,
-        })
+        let pool = ServingPool::new(cfg.workers);
+        let stream = pool.stream(view, by, manager, cfg.stream_config())?;
+        Ok(PrefetchLoader { stream, _pool: pool })
     }
 
     /// Exact number of batches remaining.
     pub fn num_batches_hint(&self) -> usize {
-        self.plans.len() - self.next_index
+        self.stream.num_batches_hint()
+    }
+
+    /// The borrowed hook manager (stateful phase owner).
+    pub fn manager_mut(&mut self) -> &mut HookManager {
+        self.stream.manager_mut()
     }
 
     /// Overlap accounting so far (read after draining for epoch totals).
     pub fn stats(&self) -> PrefetchStats {
-        PrefetchStats {
-            batches: self.plans.len(),
-            workers: self.workers,
-            worker_busy: *self.busy.lock().unwrap_or_else(|e| e.into_inner()),
-            consumer_blocked: self.blocked,
-        }
+        self.stream.stats()
     }
 
     /// Next batch in plan order, or `None` when exhausted.
     #[allow(clippy::should_implement_trait)]
     pub fn next(&mut self) -> Option<Result<MaterializedBatch>> {
-        if self.next_index >= self.plans.len() {
-            return None;
-        }
-        // The worker pipeline is a point-in-time snapshot of the recipe;
-        // registering hooks mid-iteration would silently diverge from the
-        // serial loader, so fail loudly — and terminate the stream, like
-        // the serial loader's poisoned plan, so error-tolerant consumers
-        // cannot spin on a sticky error.
-        if self.manager.registration_epoch() != self.epoch {
-            self.next_index = self.plans.len();
-            return Some(Err(TgmError::Hook(
-                "hooks were registered while a prefetch iteration was in flight; \
-                 recreate the loader to pick them up"
-                    .into(),
-            )));
-        }
-        let idx = self.next_index;
-        self.next_index += 1;
-
-        // Serial fallback: materialize inline, no threads involved.
-        if self.inline.is_some() {
-            let plan = self.plans[idx].clone();
-            let mut batch = match materialize_window(&self.storage, &plan) {
-                Ok(b) => b,
-                Err(e) => return Some(Err(e)),
-            };
-            if let Some(pipeline) = &self.inline {
-                if let Err(e) = pipeline.run(&mut batch, &self.storage, plan.index) {
-                    return Some(Err(e));
-                }
-            }
-            if let Err(e) = self.manager.run_stateful_indexed(&mut batch, &self.storage, plan.index)
-            {
-                return Some(Err(e));
-            }
-            return Some(Ok(batch));
-        }
-
-        // Pull from the pool, reordering into plan order.
-        let t0 = Instant::now();
-        let res = loop {
-            if let Some(r) = self.pending.remove(&idx) {
-                break r;
-            }
-            let rx = self.rx.as_ref().expect("prefetch pool missing");
-            match rx.recv() {
-                Ok((i, r)) => {
-                    if i == idx {
-                        break r;
-                    }
-                    self.pending.insert(i, r);
-                }
-                Err(_) => {
-                    break Err(TgmError::Hook(
-                        "prefetch worker pool terminated unexpectedly (worker panic?)".into(),
-                    ))
-                }
-            }
-        };
-        self.blocked += t0.elapsed();
-
-        match res {
-            Ok(mut batch) => {
-                let plan_index = self.plans[idx].index;
-                if let Err(e) =
-                    self.manager.run_stateful_indexed(&mut batch, &self.storage, plan_index)
-                {
-                    return Some(Err(e));
-                }
-                Some(Ok(batch))
-            }
-            Err(e) => Some(Err(e)),
-        }
+        self.stream.next()
     }
 
     /// Drain all remaining batches.
     pub fn collect_all(&mut self) -> Result<Vec<MaterializedBatch>> {
-        let mut out = Vec::new();
-        while let Some(b) = self.next() {
-            out.push(b?);
-        }
-        Ok(out)
-    }
-}
-
-impl Drop for PrefetchLoader<'_> {
-    fn drop(&mut self) {
-        // Closing the receiver makes any blocked `send` fail, so workers
-        // exit promptly even mid-epoch; then reap them.
-        self.rx.take();
-        self.pending.clear();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.stream.collect_all()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hooks::batch::assert_batches_identical;
     use crate::hooks::recipes::{RecipeConfig, RecipeRegistry, SamplerKind, RECIPE_TGB_LINK};
     use crate::io::gen;
     use crate::loader::DGDataLoader;
     use crate::util::TimeGranularity;
-
-    /// Full structural equality: seed columns, windows, and every
-    /// attribute tensor byte-for-byte.
-    fn assert_batches_identical(serial: &[MaterializedBatch], prefetched: &[MaterializedBatch]) {
-        assert_eq!(serial.len(), prefetched.len(), "batch counts differ");
-        for (i, (a, b)) in serial.iter().zip(prefetched).enumerate() {
-            assert_eq!(a.start, b.start, "batch {i} window start");
-            assert_eq!(a.end, b.end, "batch {i} window end");
-            assert_eq!(a.src, b.src, "batch {i} src");
-            assert_eq!(a.dst, b.dst, "batch {i} dst");
-            assert_eq!(a.ts, b.ts, "batch {i} ts");
-            assert_eq!(a.edge_indices, b.edge_indices, "batch {i} edge indices");
-            assert_eq!(a.node_events, b.node_events, "batch {i} node events");
-            assert_eq!(a.attr_names(), b.attr_names(), "batch {i} attribute sets");
-            for name in a.attr_names() {
-                assert_eq!(
-                    a.get(name).unwrap(),
-                    b.get(name).unwrap(),
-                    "batch {i} attribute `{name}` differs"
-                );
-            }
-        }
-    }
 
     fn serial_batches(key: &str, by: BatchBy, cap: usize) -> Vec<MaterializedBatch> {
         let data = gen::by_name("wiki", 0.05, 1).unwrap();
@@ -452,7 +280,7 @@ mod tests {
         // Registering under the active key invalidates the snapshot the
         // workers are running; the loader must error, not silently skip
         // the new hook.
-        l.manager.register_stateless("val", std::sync::Arc::new(DegreeStatsHook));
+        l.manager_mut().register_stateless("val", std::sync::Arc::new(DegreeStatsHook));
         let err = l.next().unwrap().unwrap_err().to_string();
         assert!(err.contains("prefetch iteration"), "{err}");
         // The stream terminates (no sticky-error spin for tolerant consumers).
@@ -468,7 +296,7 @@ mod tests {
             data.full(),
             BatchBy::Events(50),
             &mut m,
-            // Tiny queue so workers are blocked on send when we bail.
+            // Tiny queue so the in-flight window is as tight as it gets.
             PrefetchConfig::default().with_workers(2).with_queue_depth(1),
         )
         .unwrap();

@@ -2,6 +2,7 @@
 //! coordinator. Tests needing compiled artifacts skip gracefully when
 //! `make artifacts` hasn't run (CI without the Python toolchain).
 
+use std::sync::Arc;
 use tgm::coordinator::{evaluate_edgebank, Pipeline, PipelineConfig, Split};
 use tgm::graph::{
     discretize, discretize_utg, DGData, ReduceOp, SealPolicy, SegmentedStorage, Task,
@@ -10,9 +11,10 @@ use tgm::hooks::recipes::{RecipeRegistry, RECIPE_TGB_LINK};
 use tgm::hooks::MaterializedBatch;
 use tgm::io::gen;
 use tgm::io::stream::{EventSource, ReplaySource};
-use tgm::loader::{BatchBy, DGDataLoader, PrefetchConfig, PrefetchLoader};
+use tgm::loader::{BatchBy, DGDataLoader, PrefetchConfig, PrefetchLoader, ServingPool, StreamConfig};
 use tgm::models::EdgeBankMode;
 use tgm::runtime::XlaEngine;
+use tgm::serving::{TenantConfig, TenantId, TenantRouter};
 use tgm::util::TimeGranularity;
 
 fn engine() -> Option<XlaEngine> {
@@ -107,7 +109,7 @@ fn assert_identical(a: &[MaterializedBatch], b: &[MaterializedBatch]) {
 fn streamed_copy(data: &DGData, seal_every: usize) -> DGData {
     let mut store = SegmentedStorage::new(
         data.storage().num_nodes(),
-        SealPolicy { max_events: seal_every, max_span: None },
+        SealPolicy::by_events(seal_every),
     )
     .with_granularity(data.storage().granularity());
     let mut source = ReplaySource::from_data(data);
@@ -203,6 +205,122 @@ fn streamed_node_events_match_one_shot() {
         .collect_all()
         .unwrap();
     assert_identical(&a, &b);
+}
+
+/// Acceptance criterion for the sharded-serving tentpole: a reader that
+/// pinned generation *G* must yield byte-identical batches — serial and
+/// pooled — even when the tenant publishes *G+1* mid-epoch, and a fresh
+/// serve must observe *G+1*.
+#[test]
+fn pinned_generation_streams_are_immune_to_mid_epoch_publishes() {
+    let data = gen::by_name("wiki", 0.05, 55).unwrap();
+    let mut source = ReplaySource::from_data(&data);
+    let total = source.len();
+    let first = source.next_chunk((total * 3) / 5);
+    let rest = source.next_chunk(usize::MAX);
+    assert!(!rest.is_empty());
+
+    let mut router = TenantRouter::new();
+    let id = TenantId::from("wiki");
+    router
+        .add_tenant(
+            id.clone(),
+            TenantConfig::new(data.storage().num_nodes())
+                .with_seal(SealPolicy::by_events(120))
+                .with_granularity(data.storage().granularity()),
+        )
+        .unwrap();
+    router.ingest(&id, first).unwrap();
+    let pinned = router.publish(&id).unwrap();
+
+    // Serial reference over generation G.
+    let gd = DGData::from_snapshot(Arc::clone(&pinned), "wiki-g", Task::LinkPrediction);
+    let mut ms = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+    ms.activate("val").unwrap();
+    let reference =
+        DGDataLoader::new(gd.full(), BatchBy::Events(64), &mut ms).unwrap().collect_all().unwrap();
+    assert!(reference.len() > 4, "want a multi-batch epoch, got {}", reference.len());
+
+    // Pooled stream pinned to G: consume part of the epoch...
+    let pool = ServingPool::new(3);
+    let mut mp = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+    mp.activate("val").unwrap();
+    let mut stream = router
+        .serve(&pool, &id, BatchBy::Events(64), &mut mp, StreamConfig::default())
+        .unwrap();
+    let mut got = Vec::new();
+    for _ in 0..3 {
+        got.push(stream.next().unwrap().unwrap());
+    }
+
+    // ...then swap the published snapshot mid-epoch.
+    router.ingest(&id, rest).unwrap();
+    let newer = router.publish(&id).unwrap();
+    assert!(newer.generation() > pinned.generation());
+    assert_eq!(router.pin(&id).unwrap().generation(), newer.generation());
+
+    // The in-flight stream still yields generation-G bytes only.
+    while let Some(b) = stream.next() {
+        got.push(b.unwrap());
+    }
+    drop(stream);
+    assert_identical(&reference, &got);
+
+    // The still-held pin replays the identical serial epoch, too.
+    let gd2 = DGData::from_snapshot(Arc::clone(&pinned), "wiki-g2", Task::LinkPrediction);
+    let mut m2 = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+    m2.activate("val").unwrap();
+    let replay =
+        DGDataLoader::new(gd2.full(), BatchBy::Events(64), &mut m2).unwrap().collect_all().unwrap();
+    assert_identical(&reference, &replay);
+
+    // A fresh serve pins G+1 and sees the whole graph.
+    let mut mf = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+    mf.activate("val").unwrap();
+    let mut s2 = router
+        .serve(&pool, &id, BatchBy::Events(64), &mut mf, StreamConfig::default())
+        .unwrap();
+    let served: usize = s2.collect_all().unwrap().iter().map(|b| b.num_edges()).sum();
+    assert_eq!(served, data.storage().num_edges());
+}
+
+/// Regressions for the streaming-ingestion bugfix sweep, through the
+/// public API: (a) node events count toward `SealPolicy::max_events`,
+/// (b) node-event timestamps fold into the `max_span` tracker, (c)
+/// edge-free pending node events hit a typed backpressure cap, (d) the
+/// generator's year stepping is fallible rather than panicking.
+#[test]
+fn streaming_bugfix_sweep_regressions() {
+    use tgm::graph::{EdgeEvent, NodeEvent};
+    use tgm::TgmError;
+
+    // (a) A node-event-heavy stream still seals at the size threshold.
+    let mut st = SegmentedStorage::new(4, SealPolicy::by_events(3));
+    st.append_edge(EdgeEvent { t: 0, src: 0, dst: 1, features: vec![] }).unwrap();
+    assert!(!st.append_node_event(NodeEvent { t: 1, node: 0, features: vec![] }).unwrap());
+    assert!(
+        st.append_node_event(NodeEvent { t: 2, node: 1, features: vec![] }).unwrap(),
+        "the third buffered event is a node event and must trip the seal"
+    );
+    assert_eq!(st.num_sealed_segments(), 1);
+
+    // (b) A node event outside the edge span trips `max_span`.
+    let mut st2 =
+        SegmentedStorage::new(4, SealPolicy::by_events(usize::MAX).with_max_span(10));
+    st2.append_edge(EdgeEvent { t: 0, src: 0, dst: 1, features: vec![] }).unwrap();
+    assert!(st2.append_node_event(NodeEvent { t: 100, node: 0, features: vec![] }).unwrap());
+    assert_eq!(st2.num_sealed_segments(), 1);
+
+    // (c) Edge-free node events are bounded by a typed error, not OOM.
+    let mut st3 =
+        SegmentedStorage::new(4, SealPolicy::by_events(2).with_node_event_cap(2));
+    st3.append_node_event(NodeEvent { t: 0, node: 0, features: vec![] }).unwrap();
+    st3.append_node_event(NodeEvent { t: 1, node: 1, features: vec![] }).unwrap();
+    let err = st3.append_node_event(NodeEvent { t: 2, node: 2, features: vec![] }).unwrap_err();
+    assert!(matches!(err, TgmError::Backpressure(_)), "{err}");
+
+    // (d) The yearly generator path builds through the fallible lookup.
+    assert!(gen::by_name("trade", 0.2, 1).is_ok());
 }
 
 #[test]
