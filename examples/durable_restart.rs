@@ -1,0 +1,250 @@
+//! Durability end-to-end: ingest → kill → recover → byte-identical
+//! serving.
+//!
+//! The orchestrator (default mode) spawns a child copy of itself
+//! (`TGM_ROLE=ingest`) that ingests a surrogate event stream into a
+//! durable `SegmentedStorage` — WAL on — and dies abruptly
+//! (`std::process::abort`, the in-process equivalent of a SIGKILL: no
+//! destructors, no flushes) after a configured number of acknowledged
+//! appends, mid-active-segment. The orchestrator then:
+//!
+//! 1. **recovers** the store from the directory and verifies it holds
+//!    *exactly the acknowledged prefix* (byte-compared against an
+//!    in-memory store fed the same events);
+//! 2. **resumes** ingestion of the remaining stream through the
+//!    recovered store while a background `Compactor` merges sealed
+//!    segment files off the write path, publishing generations through
+//!    a `SnapshotCell`;
+//! 3. verifies the final snapshot is **byte-identical** to an
+//!    uninterrupted run, and that the prequential EdgeBank MRR over the
+//!    recovered store matches the uninterrupted run's exactly.
+//!
+//! ```text
+//! cargo run --release --example durable_restart
+//! TGM_SCALE=0.05 cargo run --release --example durable_restart   # CI smoke
+//! ```
+//!
+//! Environment knobs: `TGM_SCALE` (default 0.2), `TGM_KILL_AT`
+//! (acknowledged events before the kill; default 640 = 2.5 segments).
+
+use std::sync::{Arc, Mutex};
+use tgm::graph::{DGData, SealPolicy, SegmentedStorage, SnapshotCell, StorageSnapshot, Task};
+use tgm::hooks::batch::attr;
+use tgm::hooks::negatives::EvalNegativeSampler;
+use tgm::hooks::{DstRange, HookManager};
+use tgm::io::gen;
+use tgm::io::stream::{EventSource, ReplaySource};
+use tgm::loader::{BatchBy, DGDataLoader};
+use tgm::models::{EdgeBank, EdgeBankMode};
+use tgm::persist::{self, Compactor, CompactorConfig, DurabilityPolicy};
+use tgm::util::stats;
+
+const SEAL_EVERY: usize = 256;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn dataset() -> tgm::Result<DGData> {
+    gen::by_name("wiki", env_f64("TGM_SCALE", 0.2), 7)
+}
+
+fn fresh_store(data: &DGData) -> SegmentedStorage {
+    SegmentedStorage::new(data.storage().num_nodes(), SealPolicy::by_events(SEAL_EVERY))
+        .with_granularity(data.storage().granularity())
+}
+
+/// Prequential (test-then-train) EdgeBank MRR over one snapshot: every
+/// edge is scored against the pre-update bank, then learned. A pure
+/// function of the snapshot bytes, so equal snapshots => equal MRR.
+fn prequential_mrr(snap: Arc<StorageSnapshot>) -> tgm::Result<f64> {
+    let data = DGData::from_snapshot(snap, "wiki-mrr", Task::LinkPrediction);
+    let mut manager = HookManager::new();
+    manager.register_stateless(
+        "stream",
+        Arc::new(EvalNegativeSampler::new(DstRange::InferFromData, 20, 0)),
+    );
+    manager.activate("stream")?;
+    let mut loader = DGDataLoader::new(data.full(), BatchBy::Events(256), &mut manager)?;
+    let mut bank = EdgeBank::new(EdgeBankMode::Unlimited);
+    let mut rrs: Vec<f64> = Vec::new();
+    while let Some(batch) = loader.next() {
+        let batch = batch?;
+        let negs = batch.get(attr::EVAL_NEGATIVES)?;
+        let q = negs.shape()[1];
+        let nv = negs.as_i32()?;
+        for i in 0..batch.num_edges() {
+            let pos = bank.score(batch.src[i], batch.dst[i], batch.ts[i]);
+            let neg: Vec<f64> = (0..q)
+                .map(|j| bank.score(batch.src[i], nv[i * q + j] as u32, batch.ts[i]))
+                .collect();
+            rrs.push(stats::reciprocal_rank(pos, &neg));
+        }
+        bank.update(&batch.src, &batch.dst, &batch.ts);
+    }
+    Ok(stats::mean(&rrs))
+}
+
+/// Child role: ingest durably, then die without warning.
+fn ingest_and_die(dir: &str, kill_at: usize) -> tgm::Result<()> {
+    let data = dataset()?;
+    let mut store = fresh_store(&data).with_durability(DurabilityPolicy::new(dir))?;
+    let mut source = ReplaySource::from_data(&data);
+    let mut appended = 0usize;
+    loop {
+        let chunk = source.next_chunk(64);
+        if chunk.is_empty() {
+            break;
+        }
+        for ev in chunk {
+            store.append(ev)?;
+            appended += 1;
+            if appended == kill_at {
+                println!(
+                    "child: {appended} events acknowledged ({} sealed segments, {} in WAL) — dying now",
+                    store.num_sealed_segments(),
+                    store.pending_edges() + store.pending_node_events()
+                );
+                // Simulated SIGKILL: no destructors, no flushes.
+                std::process::abort();
+            }
+        }
+    }
+    Err(tgm::TgmError::Config(format!(
+        "TGM_KILL_AT={kill_at} exceeds the stream length {appended}; lower it"
+    )))
+}
+
+fn main() -> tgm::Result<()> {
+    if std::env::var("TGM_ROLE").as_deref() == Ok("ingest") {
+        let dir = std::env::var("TGM_DIR")
+            .map_err(|_| tgm::TgmError::Config("child needs TGM_DIR".into()))?;
+        let kill_at = env_usize("TGM_KILL_AT", 640);
+        return ingest_and_die(&dir, kill_at);
+    }
+
+    let data = dataset()?;
+    let total_events = data.storage().num_edges() + data.storage().num_node_events();
+    let kill_at =
+        env_usize("TGM_KILL_AT", 640).clamp(1, total_events.saturating_sub(1).max(1));
+    println!(
+        "stream: {} ({} events; child will be killed after {kill_at})",
+        data.stats(),
+        total_events
+    );
+
+    // Uninterrupted reference: the one-shot snapshot and its MRR.
+    let reference = Arc::clone(data.storage());
+    let reference_mrr = prequential_mrr(Arc::clone(&reference))?;
+
+    // 1. Spawn the child ingester and let it die mid-ingest.
+    let dir = std::env::temp_dir().join(format!("tgm_durable_restart_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let exe = std::env::current_exe()?;
+    let status = std::process::Command::new(exe)
+        .env("TGM_ROLE", "ingest")
+        .env("TGM_DIR", &dir)
+        .env("TGM_KILL_AT", kill_at.to_string())
+        .status()?;
+    assert!(!status.success(), "the child must die abnormally, got {status}");
+    println!("child died as planned ({status})");
+
+    // 2. Recover: exactly the acknowledged prefix comes back.
+    let (mut recovered, report) = persist::recover_with_report(
+        SealPolicy::by_events(SEAL_EVERY),
+        DurabilityPolicy::new(&dir),
+    )?;
+    println!(
+        "recovery report: {} sealed segments, {} WAL events replayed, torn tail: {} \
+         ({} bytes dropped)",
+        report.sealed_segments, report.replayed_events, report.torn_tail, report.dropped_bytes
+    );
+    let mut expected_prefix = fresh_store(&data);
+    let mut source = ReplaySource::from_data(&data);
+    for ev in source.next_chunk(kill_at) {
+        expected_prefix.append(ev)?;
+    }
+    {
+        let rec = recovered.snapshot()?;
+        let exp = expected_prefix.snapshot()?;
+        assert_eq!(rec.num_edges(), exp.num_edges(), "recovered edge count");
+        assert_eq!(rec.edge_ts(), exp.edge_ts(), "recovered timestamps");
+        assert_eq!(rec.edge_src(), exp.edge_src(), "recovered sources");
+        assert_eq!(rec.edge_dst(), exp.edge_dst(), "recovered destinations");
+        assert_eq!(rec.edge_feats(), exp.edge_feats(), "recovered features");
+        assert_eq!(rec.num_node_events(), exp.num_node_events(), "recovered node events");
+        println!(
+            "recovered the acknowledged prefix: {} edges across {} segments + WAL tail",
+            rec.num_edges(),
+            recovered.num_sealed_segments(),
+        );
+    }
+
+    // 3. Resume ingestion of the rest while a background compactor
+    //    merges sealed segment files and publishes generations.
+    let cell = SnapshotCell::new();
+    let store = Arc::new(Mutex::new(recovered));
+    let compactor = Compactor::spawn(
+        Arc::clone(&store),
+        cell.clone(),
+        // Low threshold so even the small CI-scale run compacts.
+        CompactorConfig { min_sealed: 2, ..Default::default() },
+    );
+    loop {
+        let chunk = source.next_chunk(512);
+        if chunk.is_empty() {
+            break;
+        }
+        let mut w = store.lock().unwrap_or_else(|p| p.into_inner());
+        for ev in chunk {
+            w.append(ev)?;
+        }
+        w.publish_to(&cell)?;
+    }
+    // Give the compactor a moment to drain the sealed backlog so the
+    // smoke run demonstrably exercises a background round.
+    let t0 = std::time::Instant::now();
+    while t0.elapsed() < std::time::Duration::from_secs(5) {
+        let sealed = store.lock().unwrap_or_else(|p| p.into_inner()).num_sealed_segments();
+        if compactor.compactions() > 0 || sealed <= 2 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let rounds = compactor.compactions();
+    if let Some(e) = compactor.last_error() {
+        return Err(tgm::TgmError::Persist(format!("background compaction failed: {e}")));
+    }
+    compactor.stop();
+    let mut store = Arc::try_unwrap(store)
+        .map_err(|_| tgm::TgmError::Persist("compactor still holds the store".into()))?
+        .into_inner()
+        .unwrap_or_else(|p| p.into_inner());
+
+    // 4. Byte-identical serving + identical MRR vs the uninterrupted run.
+    let final_snap = store.snapshot()?;
+    assert_eq!(final_snap.num_edges(), reference.num_edges());
+    assert_eq!(final_snap.edge_ts(), reference.edge_ts());
+    assert_eq!(final_snap.edge_src(), reference.edge_src());
+    assert_eq!(final_snap.edge_dst(), reference.edge_dst());
+    assert_eq!(final_snap.edge_feats(), reference.edge_feats());
+    let recovered_mrr = prequential_mrr(Arc::clone(&final_snap))?;
+    println!(
+        "MRR uninterrupted = {reference_mrr:.6}, recovered+resumed = {recovered_mrr:.6} \
+         ({rounds} background compaction rounds, {} segments at the end)",
+        final_snap.num_segments()
+    );
+    assert_eq!(
+        reference_mrr.to_bits(),
+        recovered_mrr.to_bits(),
+        "recovered serving must reproduce the uninterrupted MRR bit-for-bit"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("durable_restart OK");
+    Ok(())
+}

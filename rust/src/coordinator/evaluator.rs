@@ -7,7 +7,7 @@ use crate::coordinator::targets;
 use crate::error::{Result, TgmError};
 use crate::graph::{DGraph, MergedAdjacency, Task};
 use crate::hooks::batch::attr;
-use crate::loader::{BatchBy, DGDataLoader, PrefetchConfig, PrefetchLoader};
+use crate::loader::{BatchBy, DGDataLoader, PrefetchLoader};
 use crate::models::{EdgeBank, PersistentGraphForecast};
 use crate::util::stats;
 use crate::util::Tensor;
@@ -94,14 +94,8 @@ impl Pipeline<'_> {
         // The val recipe (eval negatives -> dedup -> unique lookup) is
         // fully stateless, so the entire materialization overlaps with
         // predict/update execution on the worker pool.
-        let mut loader = PrefetchLoader::new(
-            view,
-            by,
-            &mut self.manager,
-            PrefetchConfig::default()
-                .with_workers(self.cfg.prefetch_workers)
-                .with_event_cap(profile.b),
-        )?;
+        let cfg = self.prefetch_config().with_event_cap(profile.b);
+        let mut loader = PrefetchLoader::new(view, by, &mut self.manager, cfg)?;
         loop {
             let t_load = std::time::Instant::now();
             let Some(batch) = loader.next() else { break };

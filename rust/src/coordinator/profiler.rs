@@ -44,6 +44,27 @@ impl Profiler {
         }
     }
 
+    /// Initial prefetch window suggested by the overlap recorded so far:
+    /// the consumer-blocked share of worker-busy time, mapped linearly
+    /// into `[2, 16]` — a fully overlapped pipeline (nothing leaked into
+    /// the critical path) needs only a shallow window, a consumer that
+    /// mostly waited wants workers running far ahead. `None` before any
+    /// prefetch run was recorded. Seeds
+    /// [`crate::loader::QueueDepth::Adaptive`]'s floor for the next
+    /// epoch; the per-stream tuner refines from there.
+    pub fn suggested_queue_depth(&self) -> Option<usize> {
+        if self.overlap_busy.is_zero() && self.overlap_blocked.is_zero() {
+            return None;
+        }
+        let busy = self.overlap_busy.as_secs_f64();
+        let ratio = if busy <= 0.0 {
+            1.0
+        } else {
+            (self.overlap_blocked.as_secs_f64() / busy).clamp(0.0, 1.0)
+        };
+        Some(2 + (ratio * 14.0).round() as usize)
+    }
+
     /// Time a closure under a category.
     pub fn record<T>(&mut self, category: &'static str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
@@ -149,6 +170,20 @@ mod tests {
         assert_eq!(v, 42);
         p.reset();
         assert_eq!(p.total(), Duration::ZERO);
+    }
+
+    #[test]
+    fn suggested_depth_tracks_the_blocked_share() {
+        let mut p = Profiler::new();
+        assert_eq!(p.suggested_queue_depth(), None, "no overlap recorded yet");
+        // Fully overlapped: shallow window.
+        p.add_overlap(Duration::from_millis(100), Duration::ZERO);
+        assert_eq!(p.suggested_queue_depth(), Some(2));
+        // Mostly blocked: deep window.
+        p.add_overlap(Duration::ZERO, Duration::from_millis(400));
+        assert_eq!(p.suggested_queue_depth(), Some(16));
+        p.reset();
+        assert_eq!(p.suggested_queue_depth(), None);
     }
 
     #[test]

@@ -191,6 +191,22 @@ impl<'e> Pipeline<'e> {
         BatchBy::Events(self.runtime.profile.b)
     }
 
+    /// Prefetch config for the next pass: worker count from the pipeline
+    /// config, and — once a pass has recorded overlap — the adaptive
+    /// window's floor seeded from the profiler's observed
+    /// consumer-blocked vs worker-busy ratio. Output is identical for
+    /// any depth; only the hook/compute overlap changes.
+    pub(crate) fn prefetch_config(&self) -> PrefetchConfig {
+        let mut cfg = PrefetchConfig::default().with_workers(self.cfg.prefetch_workers);
+        if let Some(depth) = self.profiler.suggested_queue_depth() {
+            cfg = cfg.with_queue(crate::loader::QueueDepth::Adaptive {
+                min: depth,
+                max: depth.max(32),
+            });
+        }
+        cfg
+    }
+
     /// Train one epoch over the training split. Returns loss stats.
     pub fn train_epoch(&mut self) -> Result<EpochReport> {
         let t0 = std::time::Instant::now();
@@ -214,12 +230,8 @@ impl<'e> Pipeline<'e> {
         // Prefetch: stateless hooks run on workers and overlap with the
         // engine execution below; the stateful phase is applied in batch
         // order inside `next()`. Output is identical to the serial path.
-        let mut loader = PrefetchLoader::new(
-            view,
-            by,
-            &mut self.manager,
-            PrefetchConfig::default().with_workers(self.cfg.prefetch_workers),
-        )?;
+        let cfg = self.prefetch_config();
+        let mut loader = PrefetchLoader::new(view, by, &mut self.manager, cfg)?;
         loop {
             let t_load = std::time::Instant::now();
             let Some(batch) = loader.next() else { break };

@@ -37,6 +37,11 @@ pub enum TgmError {
     /// that has not published a snapshot yet.
     Serving(String),
 
+    /// Durable-store failure: segment/WAL/manifest encode or decode,
+    /// checksum mismatch, torn file, or a recovery-time invariant
+    /// violation (see `crate::persist`).
+    Persist(String),
+
     /// Dataset loading / parsing failure.
     Io(String),
 
@@ -64,6 +69,7 @@ impl std::fmt::Display for TgmError {
             TgmError::StaleAppend(m) => write!(f, "stale append: {m}"),
             TgmError::Backpressure(m) => write!(f, "backpressure: {m}"),
             TgmError::Serving(m) => write!(f, "serving error: {m}"),
+            TgmError::Persist(m) => write!(f, "persist error: {m}"),
             TgmError::Io(m) => write!(f, "io error: {m}"),
             TgmError::Manifest(m) => write!(f, "manifest error: {m}"),
             TgmError::Runtime(m) => write!(f, "runtime error: {m}"),

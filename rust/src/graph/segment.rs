@@ -47,6 +47,7 @@
 use crate::error::{Result, TgmError};
 use crate::graph::events::{EdgeEvent, Event, NodeEvent, NodeId};
 use crate::graph::storage::GraphStorage;
+use crate::persist::{Durability, DurabilityPolicy, StoreMeta};
 use crate::util::{granularity_for_min_gap, min_positive_gap, TimeGranularity, Timestamp};
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -153,6 +154,10 @@ pub struct SegmentedStorage {
     /// Memoized snapshot of the current generation (tail freezes are a
     /// copy; repeated `snapshot()` calls without writes reuse it).
     cached_snapshot: Option<(u64, Arc<StorageSnapshot>)>,
+    /// Disk-side state when durability is enabled (see [`crate::persist`]):
+    /// appends are WAL-recorded before acknowledgment, seals write
+    /// immutable segment files, compactions replace them atomically.
+    durability: Option<Durability>,
 }
 
 impl SegmentedStorage {
@@ -178,15 +183,19 @@ impl SegmentedStorage {
             store_id: next_id(),
             generation: 0,
             cached_snapshot: None,
+            durability: None,
         }
     }
 
     /// Fix the native granularity up front. Without this, granularity is
     /// inferred from all edge timestamps appended so far (exactly as
     /// `GraphStorage::from_events` would infer it over the same stream)
-    /// and may refine as more data arrives.
+    /// and may refine as more data arrives. On an already-durable store
+    /// the manifest is refreshed in place (a refresh failure poisons
+    /// durability rather than silently diverging memory from disk).
     pub fn with_granularity(mut self, g: TimeGranularity) -> SegmentedStorage {
         self.fixed_granularity = Some(g);
+        self.refresh_durable_metadata();
         self
     }
 
@@ -201,12 +210,173 @@ impl SegmentedStorage {
         }
         self.static_feat_dim = dim;
         self.static_feats = Arc::new(feats);
+        self.refresh_durable_metadata();
         Ok(self)
+    }
+
+    /// Re-persist manifest-level metadata after a builder call on an
+    /// already-durable store (`with_granularity`/`with_static_feats`
+    /// after `with_durability`), so the directory always recovers to
+    /// what memory serves. Infallible signature for the builder chain:
+    /// a persistence failure poisons durability instead.
+    fn refresh_durable_metadata(&mut self) {
+        if let Some(mut d) = self.durability.take() {
+            let res = d.refresh_metadata(&self.store_meta(self.generation));
+            if res.is_err() {
+                d.poison("failed to persist a metadata change");
+            }
+            self.durability = Some(d);
+        }
+    }
+
+    /// Enable durability (see [`crate::persist`]): every subsequent
+    /// append is WAL-recorded before it is acknowledged, every seal
+    /// writes an immutable on-disk segment file, and compactions replace
+    /// segment files atomically. Must be called on a store that has not
+    /// ingested anything yet; metadata builders
+    /// ([`SegmentedStorage::with_granularity`],
+    /// [`SegmentedStorage::with_static_feats`]) may run before or after
+    /// — later calls refresh the manifest in place. Use
+    /// [`crate::persist::recover`] to reopen a directory that already
+    /// holds a store.
+    pub fn with_durability(mut self, policy: DurabilityPolicy) -> Result<SegmentedStorage> {
+        if self.generation != 0
+            || !self.sealed.is_empty()
+            || !self.active_edges.is_empty()
+            || !self.active_nodes.is_empty()
+        {
+            return Err(TgmError::Persist(
+                "durability must be enabled on an empty store (before any append/seal); \
+                 recover an existing directory with persist::recover"
+                    .into(),
+            ));
+        }
+        let meta = StoreMeta {
+            num_nodes: self.num_nodes,
+            fixed_granularity: self.fixed_granularity,
+            static_feat_dim: self.static_feat_dim,
+            static_feats: self.static_feats.as_slice(),
+            generation: 0,
+        };
+        let durability = Durability::init(policy, &meta)?;
+        self.durability = Some(durability);
+        Ok(self)
+    }
+
+    /// Rebuild a store from recovered parts (the [`crate::persist::recover`]
+    /// entry point; everything derivable from the sealed segments —
+    /// boundary gaps, last sealed timestamps, feature dims — is
+    /// recomputed here rather than persisted).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_recovered(
+        num_nodes: usize,
+        policy: SealPolicy,
+        fixed_granularity: Option<TimeGranularity>,
+        static_feat_dim: usize,
+        static_feats: Vec<f32>,
+        sealed: Vec<Arc<GraphStorage>>,
+        generation: u64,
+        durability: Durability,
+    ) -> SegmentedStorage {
+        let mut min_sealed_gap: Option<i64> = None;
+        let mut last_sealed_edge_ts: Option<Timestamp> = None;
+        let mut last_sealed_node_ts: Option<Timestamp> = None;
+        let mut edge_feat_dim = None;
+        let mut node_feat_dim = None;
+        for seg in &sealed {
+            let ts = seg.edge_ts();
+            let mut gap = min_positive_gap(ts);
+            if let (Some(last), Some(&first)) = (last_sealed_edge_ts, ts.first()) {
+                let boundary = first - last;
+                if boundary > 0 {
+                    gap = Some(gap.map_or(boundary, |g: i64| g.min(boundary)));
+                }
+            }
+            min_sealed_gap = Self::fold_gap(min_sealed_gap, gap);
+            last_sealed_edge_ts =
+                Some(last_sealed_edge_ts.map_or(seg.end_time(), |l| l.max(seg.end_time())));
+            if let Some(&last) = seg.node_event_ts().last() {
+                last_sealed_node_ts =
+                    Some(last_sealed_node_ts.map_or(last, |l: Timestamp| l.max(last)));
+            }
+            edge_feat_dim.get_or_insert(seg.edge_feat_dim());
+            if node_feat_dim.is_none() && seg.num_node_events() > 0 {
+                node_feat_dim = Some(seg.node_feat_dim());
+            }
+        }
+        let sealed_ids = sealed.iter().map(|_| next_id()).collect();
+        SegmentedStorage {
+            num_nodes,
+            policy,
+            fixed_granularity,
+            min_sealed_gap,
+            static_feat_dim,
+            static_feats: Arc::new(static_feats),
+            sealed,
+            sealed_ids,
+            active_edges: Vec::new(),
+            active_nodes: Vec::new(),
+            edge_feat_dim,
+            node_feat_dim,
+            active_min_t: None,
+            active_max_t: None,
+            last_sealed_edge_ts,
+            last_sealed_node_ts,
+            store_id: next_id(),
+            generation,
+            cached_snapshot: None,
+            durability: Some(durability),
+        }
     }
 
     // ------------------------------------------------------------------
     // metadata
     // ------------------------------------------------------------------
+
+    /// True when this store persists itself (see
+    /// [`SegmentedStorage::with_durability`]).
+    pub fn is_durable(&self) -> bool {
+        self.durability.is_some()
+    }
+
+    /// Directory backing this store when durability is enabled.
+    pub fn durable_dir(&self) -> Option<&std::path::Path> {
+        self.durability.as_ref().map(|d| d.dir())
+    }
+
+    /// The sealed (immutable) segments and their never-reused ids — the
+    /// background compactor's scan point.
+    pub fn sealed_segments(&self) -> (Vec<Arc<GraphStorage>>, Vec<u64>) {
+        (self.sealed.clone(), self.sealed_ids.clone())
+    }
+
+    /// Publish the recovery-time (deferred) WAL at its real path; no-op
+    /// for non-durable stores and committed logs (see
+    /// [`crate::persist::recover`]).
+    pub(crate) fn commit_recovered_wal(&mut self) -> Result<()> {
+        match self.durability.as_mut() {
+            Some(d) => d.commit_wal(),
+            None => Ok(()),
+        }
+    }
+
+    /// True when a failed durable operation has poisoned the store (the
+    /// background compactor checks this before doing any merge work).
+    pub(crate) fn durability_poisoned(&self) -> bool {
+        self.durability.as_ref().is_some_and(Durability::is_poisoned)
+    }
+
+    /// Manifest metadata for a durable operation that will leave the
+    /// store at `generation`.
+    fn store_meta(&self, generation: u64) -> StoreMeta<'_> {
+        StoreMeta {
+            num_nodes: self.num_nodes,
+            fixed_granularity: self.fixed_granularity,
+            static_feat_dim: self.static_feat_dim,
+            static_feats: self.static_feats.as_slice(),
+            generation,
+        }
+    }
 
     pub fn num_nodes(&self) -> usize {
         self.num_nodes
@@ -257,6 +427,40 @@ impl SegmentedStorage {
 
     /// Append one edge event (see [`SegmentedStorage::append`]).
     pub fn append_edge(&mut self, e: EdgeEvent) -> Result<bool> {
+        self.append_edge_with(e, true)
+    }
+
+    /// Recovery-time append: identical bookkeeping, but neither
+    /// auto-seals nor enforces admission policy. Recovery replays the
+    /// surviving WAL tail into a *deferred* log; a seal mid-replay
+    /// would reset the live WAL under the original (still-needed) one,
+    /// so any seal the replayed tail warrants is applied by
+    /// [`SegmentedStorage::seal_if_due`] only after the rewritten log
+    /// is committed. And the events were all admitted (and
+    /// acknowledged) pre-crash, so the go-forward policy's
+    /// backpressure cap must not reject them — it applies to *new*
+    /// appends only (see [`crate::persist::recover`]).
+    pub(crate) fn replay_append(&mut self, ev: Event) -> Result<()> {
+        match ev {
+            Event::Edge(e) => self.append_edge_with(e, false).map(|_| ()),
+            Event::Node(n) => self.append_node_event_with(n, false).map(|_| ()),
+        }
+    }
+
+    /// Seal now if the active segment has outgrown the policy (the
+    /// deferred counterpart of the auto-seal that
+    /// [`SegmentedStorage::replay_append`] suppressed).
+    pub(crate) fn seal_if_due(&mut self) -> Result<bool> {
+        if !self.active_edges.is_empty() && self.should_seal() {
+            self.seal()
+        } else {
+            Ok(false)
+        }
+    }
+
+    /// `live` marks a fresh (non-replay) append: only live appends
+    /// auto-seal and enforce the admission policy.
+    fn append_edge_with(&mut self, e: EdgeEvent, live: bool) -> Result<bool> {
         if e.src as usize >= self.num_nodes || e.dst as usize >= self.num_nodes {
             return Err(TgmError::Graph(format!(
                 "edge ({}, {}) references node >= num_nodes={}",
@@ -282,16 +486,24 @@ impl SegmentedStorage {
             }
             None => self.edge_feat_dim = Some(e.features.len()),
         }
+        // Durable stores acknowledge only what the WAL holds: record
+        // (and flush) before the in-memory append becomes visible.
+        if let Some(d) = self.durability.as_mut() {
+            d.record_edge(&e)?;
+        }
         self.active_min_t = Some(self.active_min_t.map_or(e.t, |m| m.min(e.t)));
         self.active_max_t = Some(self.active_max_t.map_or(e.t, |m| m.max(e.t)));
         self.active_edges.push(e);
         self.generation += 1;
-        if self.should_seal() {
-            self.seal()?;
-            Ok(true)
-        } else {
-            Ok(false)
+        if live && self.should_seal() {
+            // The event is already durably recorded and retained, so a
+            // failing auto-seal must not retract the acknowledgment
+            // (`Ok` from append <=> the event survives): the seal
+            // failure poisons durable state (buffer restored) and
+            // surfaces on the next durable operation instead.
+            return Ok(self.seal().unwrap_or(false));
         }
+        Ok(false)
     }
 
     /// Append one node (dynamic-feature) event. Node events count toward
@@ -303,6 +515,10 @@ impl SegmentedStorage {
     /// [`SealPolicy::max_pending_node_events`], past which the append is
     /// rejected with [`TgmError::Backpressure`].
     pub fn append_node_event(&mut self, e: NodeEvent) -> Result<bool> {
+        self.append_node_event_with(e, true)
+    }
+
+    fn append_node_event_with(&mut self, e: NodeEvent, live: bool) -> Result<bool> {
         if e.node as usize >= self.num_nodes {
             return Err(TgmError::Graph(format!(
                 "node event references node {} >= num_nodes={}",
@@ -317,7 +533,11 @@ impl SegmentedStorage {
                 )));
             }
         }
-        if self.active_edges.is_empty()
+        // Backpressure is admission policy for live appends only:
+        // recovery replay carries events that were already admitted
+        // (and acknowledged) pre-crash, possibly under a looser cap.
+        if live
+            && self.active_edges.is_empty()
             && self.active_nodes.len() >= self.policy.max_pending_node_events
         {
             return Err(TgmError::Backpressure(format!(
@@ -338,18 +558,21 @@ impl SegmentedStorage {
             }
             None => self.node_feat_dim = Some(e.features.len()),
         }
+        if let Some(d) = self.durability.as_mut() {
+            d.record_node(&e)?;
+        }
         // Node events participate in the active span: a node event
         // outside the edge span must still be able to trip `max_span`.
         self.active_min_t = Some(self.active_min_t.map_or(e.t, |m| m.min(e.t)));
         self.active_max_t = Some(self.active_max_t.map_or(e.t, |m| m.max(e.t)));
         self.active_nodes.push(e);
         self.generation += 1;
-        if !self.active_edges.is_empty() && self.should_seal() {
-            self.seal()?;
-            Ok(true)
-        } else {
-            Ok(false)
+        if live && !self.active_edges.is_empty() && self.should_seal() {
+            // See append_edge_with: the acknowledgment stands even when
+            // the triggered seal fails.
+            return Ok(self.seal().unwrap_or(false));
         }
+        Ok(false)
     }
 
     fn should_seal(&self) -> bool {
@@ -406,6 +629,14 @@ impl SegmentedStorage {
     /// a new immutable [`GraphStorage`]. Returns `false` (and keeps any
     /// buffered node events pending) when no edge events are buffered — a
     /// segment needs at least one edge to carry a time span.
+    ///
+    /// On a durable store the segment file, manifest and WAL reset are
+    /// written **before** the in-memory commit; if that IO fails the
+    /// error is returned, the events stay safe on disk, and the store's
+    /// durability is **poisoned** — every later append/seal/compact
+    /// fails with [`TgmError::Persist`] instead of acknowledging writes
+    /// that memory and disk no longer agree on. Reopen the directory
+    /// with [`crate::persist::recover`].
     pub fn seal(&mut self) -> Result<bool> {
         if self.active_edges.is_empty() {
             return Ok(false);
@@ -413,13 +644,29 @@ impl SegmentedStorage {
         let edges = std::mem::take(&mut self.active_edges);
         let nodes = std::mem::take(&mut self.active_nodes);
         let contribution = self.gap_contribution(&edges);
-        self.min_sealed_gap = Self::fold_gap(self.min_sealed_gap, contribution);
-        let g = self.granularity_with(None);
+        let folded = Self::fold_gap(self.min_sealed_gap, contribution);
+        let g = self.fixed_granularity.unwrap_or_else(|| granularity_for_min_gap(folded));
         let seg = GraphStorage::from_events(edges, nodes, self.num_nodes, None, Some(g))?;
+        if let Some(mut d) = self.durability.take() {
+            let res = d.persist_seal(&seg, &self.store_meta(self.generation + 1));
+            if res.is_err() {
+                // The on-disk protocol stopped partway: acknowledging
+                // further appends could silently diverge memory from
+                // disk, so every later durable operation fails until
+                // the operator reopens the directory with
+                // persist::recover. The consumed buffer is restored
+                // (sorted) so in-flight snapshots keep serving every
+                // acknowledged event in the meantime.
+                d.poison("a durable seal failed mid-protocol");
+                self.restore_active_from(&seg);
+            }
+            self.durability = Some(d);
+            res?;
+        }
+        self.min_sealed_gap = folded;
         self.last_sealed_edge_ts =
             Some(self.last_sealed_edge_ts.map_or(seg.end_time(), |l| l.max(seg.end_time())));
-        if seg.num_node_events() > 0 {
-            let last = *seg.node_event_ts().last().unwrap();
+        if let Some(&last) = seg.node_event_ts().last() {
             self.last_sealed_node_ts =
                 Some(self.last_sealed_node_ts.map_or(last, |l| l.max(last)));
         }
@@ -431,19 +678,102 @@ impl SegmentedStorage {
         Ok(true)
     }
 
+    /// Rebuild the active buffers from a segment a failed durable seal
+    /// could not persist. The events come back time-sorted (the stable
+    /// sort already ran), which a later successful seal treats exactly
+    /// like the original insertion order.
+    fn restore_active_from(&mut self, seg: &GraphStorage) {
+        for i in 0..seg.num_edges() {
+            self.active_edges.push(EdgeEvent {
+                t: seg.edge_ts()[i],
+                src: seg.edge_src()[i],
+                dst: seg.edge_dst()[i],
+                features: seg.edge_feat_row(i).to_vec(),
+            });
+        }
+        for i in 0..seg.num_node_events() {
+            self.active_nodes.push(NodeEvent {
+                t: seg.node_event_ts()[i],
+                node: seg.node_event_ids()[i],
+                features: seg.node_event_feat_row(i).to_vec(),
+            });
+        }
+        let mut lo = seg.start_time();
+        let mut hi = seg.end_time();
+        if let (Some(&first), Some(&last)) =
+            (seg.node_event_ts().first(), seg.node_event_ts().last())
+        {
+            lo = lo.min(first);
+            hi = hi.max(last);
+        }
+        self.active_min_t = Some(self.active_min_t.map_or(lo, |m| m.min(lo)));
+        self.active_max_t = Some(self.active_max_t.map_or(hi, |m| m.max(hi)));
+    }
+
     /// Merge all sealed segments (and, implicitly, their per-segment
     /// indices: the next [`crate::graph::AdjacencyCache`] lookup builds
     /// one index for the merged segment) into a single segment. The
     /// active segment is untouched. Returns `false` when there is nothing
-    /// to merge.
+    /// to merge. Durable stores write the merged file and replace the
+    /// manifest before the in-memory swap; the
+    /// [`crate::persist::Compactor`] performs the same merge off the
+    /// write path on a background thread.
     pub fn compact(&mut self) -> Result<bool> {
         if self.sealed.len() <= 1 {
             return Ok(false);
         }
         let g = self.granularity_with(None);
         let merged = merge_segments(&self.sealed, self.num_nodes, g, 0, Vec::new());
-        self.sealed = vec![Arc::new(merged)];
-        self.sealed_ids = vec![next_id()];
+        let ids = self.sealed_ids.clone();
+        self.install_compacted(merged, &ids, None)
+    }
+
+    /// Install `merged` as the replacement for the **oldest**
+    /// `replaced_ids.len()` sealed segments. Written for the background
+    /// compactor: the caller merged (and, for durable stores, pre-wrote
+    /// + synced to `prewritten`) without holding the writer lock, so
+    /// this call is O(1) plus a rename + manifest replace. Returns
+    /// `Ok(false)` — discarding `prewritten` — when the sealed prefix no
+    /// longer matches `replaced_ids` (a concurrent compaction won the
+    /// race); newly sealed segments *behind* the prefix are unaffected.
+    pub fn install_compacted(
+        &mut self,
+        merged: GraphStorage,
+        replaced_ids: &[u64],
+        prewritten: Option<&std::path::Path>,
+    ) -> Result<bool> {
+        let discard = |p: Option<&std::path::Path>| {
+            if let Some(p) = p {
+                let _ = std::fs::remove_file(p);
+            }
+        };
+        if replaced_ids.len() <= 1
+            || self.sealed_ids.len() < replaced_ids.len()
+            || self.sealed_ids[..replaced_ids.len()] != *replaced_ids
+        {
+            discard(prewritten);
+            return Ok(false);
+        }
+        if let Some(mut d) = self.durability.take() {
+            let res = d.persist_compaction(
+                &merged,
+                replaced_ids.len(),
+                prewritten,
+                &self.store_meta(self.generation + 1),
+            );
+            self.durability = Some(d);
+            if res.is_err() {
+                // Nothing was installed; don't leak the pre-synced
+                // merge output (a no-op if the failure came after the
+                // rename — the path no longer exists then).
+                discard(prewritten);
+            }
+            res?;
+        } else {
+            discard(prewritten);
+        }
+        self.sealed.splice(0..replaced_ids.len(), [Arc::new(merged)]);
+        self.sealed_ids.splice(0..replaced_ids.len(), [next_id()]);
         self.generation += 1;
         Ok(true)
     }
@@ -551,8 +881,10 @@ impl SnapshotCell {
     }
 }
 
-/// Concatenate globally time-sorted segments into one `GraphStorage`.
-fn merge_segments(
+/// Concatenate globally time-sorted segments into one `GraphStorage`
+/// (shared with the background compactor, which merges off the write
+/// path).
+pub(crate) fn merge_segments(
     segments: &[Arc<GraphStorage>],
     num_nodes: usize,
     granularity: TimeGranularity,
@@ -744,11 +1076,11 @@ impl StorageSnapshot {
     }
 
     pub fn num_edges(&self) -> usize {
-        *self.edge_bases.last().unwrap()
+        self.edge_bases.last().copied().unwrap_or(0)
     }
 
     pub fn num_node_events(&self) -> usize {
-        *self.node_bases.last().unwrap()
+        self.node_bases.last().copied().unwrap_or(0)
     }
 
     pub fn edge_feat_dim(&self) -> usize {
@@ -968,10 +1300,7 @@ impl StorageSnapshot {
         // Node events are sparse; a linear scan over segments suffices
         // (segments with no node events are skipped).
         for (s, seg) in self.segments.iter().enumerate() {
-            if seg.num_node_events() == 0 {
-                continue;
-            }
-            let last = *seg.node_event_ts().last().unwrap();
+            let Some(&last) = seg.node_event_ts().last() else { continue };
             if last < t {
                 continue;
             }
@@ -1194,6 +1523,39 @@ mod tests {
         assert_ne!(before.id(), after.id(), "compaction is a new generation");
         // Nothing further to compact.
         assert!(!st.compact().unwrap());
+    }
+
+    /// The background compactor installs its merge through
+    /// `install_compacted`: a stale scanned prefix (somebody else
+    /// compacted first) must be discarded, a matching one must swap in
+    /// byte-identically.
+    #[test]
+    fn install_compacted_checks_the_scanned_prefix() {
+        let events = stream(60);
+        let mut st = build_segmented(&events, 10);
+        assert_eq!(st.num_sealed_segments(), 6);
+        let (segs, ids) = st.sealed_segments();
+        let g = st.granularity();
+
+        // Stale prefix ids: refused, nothing changes.
+        let stale = vec![ids[1], ids[0]];
+        let partial = merge_segments(&segs[..2], 8, g, 0, Vec::new());
+        assert!(!st.install_compacted(partial, &stale, None).unwrap());
+        assert_eq!(st.num_sealed_segments(), 6);
+
+        // Matching prefix: installed, bytes preserved, new generation.
+        let before = st.snapshot().unwrap();
+        let merged = merge_segments(&segs, 8, g, 0, Vec::new());
+        assert!(st.install_compacted(merged, &ids, None).unwrap());
+        assert_eq!(st.num_sealed_segments(), 1);
+        let after = st.snapshot().unwrap();
+        assert_eq!(after.edge_ts(), before.edge_ts());
+        assert!(after.generation() > before.generation());
+
+        // A single-segment prefix is nothing to compact.
+        let (solo_segs, solo_ids) = st.sealed_segments();
+        let solo = merge_segments(&solo_segs, 8, g, 0, Vec::new());
+        assert!(!st.install_compacted(solo, &solo_ids, None).unwrap());
     }
 
     #[test]

@@ -262,7 +262,13 @@ impl HookManager {
             .ok_or_else(|| TgmError::Hook("no active hook key; call activate() first".into()))?;
         self.ensure_order(&key)?;
         let phased = self.orders.get(&key).cloned().unwrap_or_default();
-        let entries = self.groups.get(&key).unwrap();
+        // `ensure_order` guarantees the group exists; keep the error
+        // typed anyway — this sits on the serving hot path, where a
+        // panic would take the whole worker down.
+        let entries = self
+            .groups
+            .get(&key)
+            .ok_or_else(|| TgmError::Hook(format!("no hooks registered under key `{key}`")))?;
         let hooks = phased
             .worker
             .iter()
@@ -687,6 +693,18 @@ mod tests {
         let mut batch = MaterializedBatch::new(0, 1);
         let err = m.run(&mut batch, &st).unwrap_err().to_string();
         assert!(err.contains("missing_attr"), "{err}");
+    }
+
+    /// Audit regression: the serving hot path must never panic — an
+    /// unactivated or unknown-key manager surfaces typed errors.
+    #[test]
+    fn stateless_pipeline_errors_are_typed_not_panics() {
+        let mut m = HookManager::new();
+        let err = m.stateless_pipeline().unwrap_err();
+        assert!(matches!(err, crate::error::TgmError::Hook(_)), "{err}");
+        assert!(err.to_string().contains("activate"), "{err}");
+        let err = m.activate("ghost").unwrap_err();
+        assert!(matches!(err, crate::error::TgmError::Hook(_)), "{err}");
     }
 
     #[test]

@@ -6,13 +6,16 @@
 //!
 //! * **Layer 3 (this crate)** — the data/execution layers: segmented
 //!   append-only storage with immutable time-sorted segments and
-//!   versioned epoch snapshots, lightweight graph views, vectorized
-//!   discretization, the phased hook/recipe system (stateless worker
-//!   hooks + stateful consumer hooks), CTDG/DTDG data loaders with a
-//!   deterministic parallel prefetch pipeline over a shared serving
-//!   pool, a sharded multi-tenant tenant router with atomic snapshot
-//!   pinning, samplers, evaluation, and the epoch + streaming training
-//!   coordinators.
+//!   versioned epoch snapshots, a durable segment store (WAL +
+//!   checksummed on-disk columnar segment files, crash recovery to the
+//!   acknowledged prefix, background compaction), lightweight graph
+//!   views, vectorized discretization, the phased hook/recipe system
+//!   (stateless worker hooks + stateful consumer hooks), CTDG/DTDG data
+//!   loaders with a deterministic parallel prefetch pipeline (adaptive
+//!   queue depth) over a shared serving pool, a sharded multi-tenant
+//!   tenant router with atomic snapshot pinning and per-tenant durable
+//!   directories, samplers, evaluation, and the epoch + streaming
+//!   training coordinators.
 //! * **Layer 2 (`python/compile`)** — JAX model definitions (TGAT, TGN,
 //!   GCN, GCLSTM, T-GCN, GraphMixer, DyGFormer, TPNet) AOT-lowered to HLO
 //!   text artifacts with the optimizer inside the training step.
@@ -44,6 +47,7 @@ pub mod hooks;
 pub mod io;
 pub mod loader;
 pub mod models;
+pub mod persist;
 pub mod runtime;
 pub mod serving;
 pub mod util;

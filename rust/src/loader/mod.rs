@@ -34,7 +34,7 @@
 pub mod pool;
 pub mod prefetch;
 
-pub use pool::{PooledStream, ServingPool, StreamConfig};
+pub use pool::{PooledStream, QueueDepth, ServingPool, StreamConfig};
 pub use prefetch::{PrefetchConfig, PrefetchLoader, PrefetchStats};
 
 use crate::error::{Result, TgmError};
@@ -303,7 +303,9 @@ impl<'a> DGDataLoader<'a> {
             return Some(Err(e));
         }
         let plan = {
-            let plans = self.plans.as_ref().unwrap();
+            // `ensure_plans` just populated this; an empty fallback (not
+            // a panic) simply ends the iteration.
+            let plans = self.plans.as_deref().unwrap_or_default();
             if self.pos >= plans.len() {
                 return None;
             }

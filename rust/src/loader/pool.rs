@@ -60,6 +60,14 @@ type WorkerMsg = (usize, Result<MaterializedBatch>);
 /// slow); the normal path never sees the timeout.
 const POOL_LIVENESS_POLL: Duration = Duration::from_millis(50);
 
+/// Adaptive streams reconsider their window every this many consumed
+/// batches.
+const ADAPT_EVERY: usize = 8;
+
+/// Consumer-blocked time below this (per tuning window) counts as "the
+/// queue always had a batch ready" — scheduler noise, not starvation.
+const ADAPT_BLOCK_EPSILON: Duration = Duration::from_micros(200);
+
 /// One unit of pool work: materialize one planned batch of one stream
 /// and run that stream's stateless hook phase over it.
 struct Job {
@@ -85,13 +93,75 @@ enum Msg {
     Shutdown,
 }
 
+/// How a stream sizes its in-flight window (how many of its jobs may be
+/// queued or finished-but-unconsumed at once).
+///
+/// The window only changes *scheduling* — how far ahead of the consumer
+/// the workers may run — never the output: batches always arrive in
+/// plan order with per-plan-index RNG seeds, so serial/pooled
+/// determinism holds for any (even varying) depth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueDepth {
+    /// A fixed window (the escape hatch; the pre-adaptive behavior).
+    Fixed(usize),
+    /// Self-tuning window in `[min, max]`: starts at `min`, widens while
+    /// the consumer is observed blocking on the pool (the same
+    /// consumer-blocked vs worker-busy accounting the profiler reports)
+    /// and narrows back while batches are always ready, bounding
+    /// prefetched-batch memory to what the consumer actually needs.
+    Adaptive {
+        /// Smallest (and initial) window.
+        min: usize,
+        /// Largest window the tuner may grow to.
+        max: usize,
+    },
+}
+
+impl Default for QueueDepth {
+    fn default() -> Self {
+        QueueDepth::Adaptive { min: 2, max: 32 }
+    }
+}
+
+impl QueueDepth {
+    /// Smallest (and initial) window size.
+    pub(crate) fn floor(self) -> usize {
+        match self {
+            QueueDepth::Fixed(d) => d.max(1),
+            QueueDepth::Adaptive { min, .. } => min.max(1),
+        }
+    }
+
+    /// Largest window size (reply channels are provisioned for this).
+    pub(crate) fn cap(self) -> usize {
+        match self {
+            QueueDepth::Fixed(d) => d.max(1),
+            QueueDepth::Adaptive { min, max } => max.max(min).max(1),
+        }
+    }
+
+    pub(crate) fn is_adaptive(self) -> bool {
+        matches!(self, QueueDepth::Adaptive { .. })
+    }
+
+    /// Raise both bounds to at least `n` (a dedicated pool should never
+    /// idle for queue space).
+    pub(crate) fn widened_to(self, n: usize) -> QueueDepth {
+        match self {
+            QueueDepth::Fixed(d) => QueueDepth::Fixed(d.max(n)),
+            QueueDepth::Adaptive { min, max } => {
+                QueueDepth::Adaptive { min: min.max(n), max: max.max(n) }
+            }
+        }
+    }
+}
+
 /// Per-stream configuration (the pool itself only fixes the worker
 /// count; everything batch-shaped is chosen per iteration).
 #[derive(Debug, Clone)]
 pub struct StreamConfig {
-    /// Sliding-window size: how many of this stream's jobs may be queued
-    /// or finished-but-unconsumed at once.
-    pub queue_depth: usize,
+    /// Sliding-window sizing; adaptive by default (see [`QueueDepth`]).
+    pub queue_depth: QueueDepth,
     /// Skip empty time buckets (mirrors the serial loader's default).
     pub skip_empty: bool,
     /// Max events per time-iteration batch (see
@@ -101,14 +171,24 @@ pub struct StreamConfig {
 
 impl Default for StreamConfig {
     fn default() -> Self {
-        StreamConfig { queue_depth: 4, skip_empty: true, event_cap: usize::MAX }
+        StreamConfig {
+            queue_depth: QueueDepth::default(),
+            skip_empty: true,
+            event_cap: usize::MAX,
+        }
     }
 }
 
 impl StreamConfig {
-    /// Set the in-flight window size.
+    /// Fix the in-flight window size (disables the adaptive tuner).
     pub fn with_queue_depth(mut self, depth: usize) -> Self {
-        self.queue_depth = depth.max(1);
+        self.queue_depth = QueueDepth::Fixed(depth.max(1));
+        self
+    }
+
+    /// Self-tune the in-flight window within `[min, max]`.
+    pub fn with_adaptive_depth(mut self, min: usize, max: usize) -> Self {
+        self.queue_depth = QueueDepth::Adaptive { min: min.max(1), max: max.max(min).max(1) };
         self
     }
 
@@ -225,18 +305,21 @@ impl ServingPool {
         let pipeline = manager.stateless_pipeline()?;
         let epoch = manager.registration_epoch();
         let storage = Arc::clone(view.storage());
-        // Clamped so `depth + 1` and window arithmetic cannot overflow
+        // Clamped so `cap + 1` and window arithmetic cannot overflow
         // (and a silly depth cannot pre-materialize a whole epoch).
-        let depth = cfg.queue_depth.clamp(1, 1 << 20);
+        let depth_floor = cfg.queue_depth.floor().clamp(1, 1 << 20);
+        let depth_cap = cfg.queue_depth.cap().clamp(depth_floor, 1 << 20);
         // An empty plan or an inert pool degrades to the serial path.
         let job_tx = if plans.is_empty() { None } else { self.sender() };
         let workers = if job_tx.is_some() { self.workers } else { 0 };
         // The window invariant (`submitted <= next_index + depth`, with
         // `next_index` advanced before topping up) allows `depth + 1`
         // unconsumed results at once; sizing the reply channel to hold
-        // all of them means a worker NEVER blocks sending a result, so
-        // one slow stream cannot stall workers other streams need.
-        let (reply_tx, reply_rx) = sync_channel::<WorkerMsg>(depth + 1);
+        // all of them — at the tuner's CAP, so shrinking the live window
+        // can never strand an in-flight result — means a worker NEVER
+        // blocks sending a result, so one slow stream cannot stall
+        // workers other streams need.
+        let (reply_tx, reply_rx) = sync_channel::<WorkerMsg>(depth_cap + 1);
         let mut stream = PooledStream {
             manager,
             storage,
@@ -252,7 +335,13 @@ impl ServingPool {
             submitted: 0,
             next_index: 0,
             blocked: Duration::ZERO,
-            depth,
+            depth: depth_floor,
+            depth_floor,
+            depth_cap,
+            adaptive: cfg.queue_depth.is_adaptive(),
+            consumed_since_tune: 0,
+            tuned_at_blocked: Duration::ZERO,
+            tuned_at_busy: Duration::ZERO,
             workers,
             epoch,
         };
@@ -303,7 +392,16 @@ pub struct PooledStream<'a> {
     submitted: usize,
     next_index: usize,
     blocked: Duration,
+    /// Live in-flight window size (tuned when `adaptive`).
     depth: usize,
+    depth_floor: usize,
+    depth_cap: usize,
+    adaptive: bool,
+    /// Tuner bookkeeping: batches consumed and the blocked/busy totals
+    /// observed at the last retune.
+    consumed_since_tune: usize,
+    tuned_at_blocked: Duration,
+    tuned_at_busy: Duration,
     workers: usize,
     /// Manager registration epoch at stream creation; see
     /// [`PooledStream::next`].
@@ -367,6 +465,35 @@ impl<'a> PooledStream<'a> {
             workers: self.workers,
             worker_busy: *self.busy.lock().unwrap_or_else(|e| e.into_inner()),
             consumer_blocked: self.blocked,
+            queue_depth: self.depth,
+        }
+    }
+
+    /// Retune the adaptive window from the same counters the profiler's
+    /// overlap report is built on: if the consumer spent a meaningful
+    /// share of the last window blocked on the pool (vs what the
+    /// workers were busy producing), widen so workers run further
+    /// ahead; if every batch was ready on arrival, narrow back toward
+    /// the floor to bound prefetched-batch memory. Scheduling only —
+    /// batch bytes and order are depth-independent.
+    fn maybe_retune(&mut self) {
+        if !self.adaptive {
+            return;
+        }
+        self.consumed_since_tune += 1;
+        if self.consumed_since_tune < ADAPT_EVERY {
+            return;
+        }
+        self.consumed_since_tune = 0;
+        let busy_total = *self.busy.lock().unwrap_or_else(|e| e.into_inner());
+        let blocked_delta = self.blocked.saturating_sub(self.tuned_at_blocked);
+        let busy_delta = busy_total.saturating_sub(self.tuned_at_busy);
+        self.tuned_at_blocked = self.blocked;
+        self.tuned_at_busy = busy_total;
+        if blocked_delta > ADAPT_BLOCK_EPSILON && blocked_delta * 4 > busy_delta {
+            self.depth = (self.depth.saturating_mul(2)).min(self.depth_cap);
+        } else if blocked_delta <= ADAPT_BLOCK_EPSILON && self.depth > self.depth_floor {
+            self.depth -= 1;
         }
     }
 
@@ -458,6 +585,7 @@ impl<'a> PooledStream<'a> {
             }
         };
         self.blocked += t0.elapsed();
+        self.maybe_retune();
 
         match res {
             Ok(mut batch) => {
@@ -638,6 +766,61 @@ mod tests {
             }
         }
         assert!(saw_error, "a dead pool must surface as an error, not a hang");
+    }
+
+    #[test]
+    fn adaptive_depth_is_bounded_and_byte_identical_to_fixed() {
+        let serial = serial("train", 9);
+        let pool = ServingPool::new(3);
+        let data = gen::by_name("wiki", 0.05, 9).unwrap();
+
+        let mut mf = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        mf.activate("train").unwrap();
+        let mut fixed = pool
+            .stream(
+                data.full(),
+                BatchBy::Events(100),
+                &mut mf,
+                StreamConfig::default().with_queue_depth(4),
+            )
+            .unwrap();
+        let fixed_batches = fixed.collect_all().unwrap();
+        assert_eq!(fixed.stats().queue_depth, 4, "fixed depth must not tune");
+        identical(&serial, &fixed_batches);
+
+        let mut ma = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        ma.activate("train").unwrap();
+        let mut adaptive = pool
+            .stream(
+                data.full(),
+                BatchBy::Events(100),
+                &mut ma,
+                StreamConfig::default().with_adaptive_depth(1, 64),
+            )
+            .unwrap();
+        let mut got = Vec::new();
+        while let Some(b) = adaptive.next() {
+            let depth = adaptive.stats().queue_depth;
+            assert!((1..=64).contains(&depth), "tuned depth {depth} out of bounds");
+            got.push(b.unwrap());
+        }
+        identical(&serial, &got);
+    }
+
+    #[test]
+    fn queue_depth_bounds() {
+        assert_eq!(QueueDepth::Fixed(0).floor(), 1);
+        assert_eq!(QueueDepth::Fixed(7).cap(), 7);
+        let a = QueueDepth::Adaptive { min: 3, max: 2 };
+        assert_eq!(a.floor(), 3);
+        assert_eq!(a.cap(), 3, "an inverted range collapses to the floor");
+        assert!(a.is_adaptive());
+        assert_eq!(QueueDepth::Fixed(2).widened_to(5), QueueDepth::Fixed(5));
+        assert_eq!(
+            QueueDepth::Adaptive { min: 2, max: 4 }.widened_to(8),
+            QueueDepth::Adaptive { min: 8, max: 8 }
+        );
+        assert_eq!(QueueDepth::default().floor(), 2);
     }
 
     #[test]

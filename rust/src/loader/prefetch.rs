@@ -29,7 +29,7 @@ use crate::error::Result;
 use crate::graph::DGraph;
 use crate::hooks::batch::MaterializedBatch;
 use crate::hooks::manager::HookManager;
-use crate::loader::{BatchBy, PooledStream, ServingPool, StreamConfig};
+use crate::loader::{BatchBy, PooledStream, QueueDepth, ServingPool, StreamConfig};
 use std::time::Duration;
 
 /// Prefetch pipeline configuration.
@@ -39,8 +39,11 @@ pub struct PrefetchConfig {
     /// in-place pipeline (no threads, same output).
     pub workers: usize,
     /// Bounded in-flight window: how many finished batches may wait
-    /// ahead of the consumer.
-    pub queue_depth: usize,
+    /// ahead of the consumer. Adaptive by default — sized from the
+    /// stream's own consumer-blocked vs worker-busy accounting (see
+    /// [`QueueDepth`]); [`PrefetchConfig::with_queue_depth`] is the
+    /// fixed escape hatch.
+    pub queue_depth: QueueDepth,
     /// Skip empty time buckets (mirrors the serial loader's default).
     pub skip_empty: bool,
     /// Max events per time-iteration batch (see
@@ -50,7 +53,12 @@ pub struct PrefetchConfig {
 
 impl Default for PrefetchConfig {
     fn default() -> Self {
-        PrefetchConfig { workers: 2, queue_depth: 4, skip_empty: true, event_cap: usize::MAX }
+        PrefetchConfig {
+            workers: 2,
+            queue_depth: QueueDepth::default(),
+            skip_empty: true,
+            event_cap: usize::MAX,
+        }
     }
 }
 
@@ -61,9 +69,15 @@ impl PrefetchConfig {
         self
     }
 
-    /// Set the bounded queue depth.
+    /// Fix the queue depth (disables the adaptive tuner).
     pub fn with_queue_depth(mut self, depth: usize) -> Self {
-        self.queue_depth = depth.max(1);
+        self.queue_depth = QueueDepth::Fixed(depth.max(1));
+        self
+    }
+
+    /// Set the full window-sizing policy.
+    pub fn with_queue(mut self, depth: QueueDepth) -> Self {
+        self.queue_depth = depth;
         self
     }
 
@@ -84,7 +98,7 @@ impl PrefetchConfig {
     /// worker count so a dedicated pool never idles for queue space.
     pub fn stream_config(&self) -> StreamConfig {
         StreamConfig {
-            queue_depth: self.queue_depth.max(self.workers).max(1),
+            queue_depth: self.queue_depth.widened_to(self.workers.max(1)),
             skip_empty: self.skip_empty,
             event_cap: self.event_cap,
         }
@@ -104,6 +118,9 @@ pub struct PrefetchStats {
     /// Time the consumer actually waited on the channel — the part of
     /// the materialization cost that leaked into the critical path.
     pub consumer_blocked: Duration,
+    /// In-flight window size at read time (adaptive streams tune this
+    /// between [`QueueDepth::Adaptive`] bounds while they run).
+    pub queue_depth: usize,
 }
 
 /// Loader that materializes batches on a dedicated worker pool and

@@ -1,0 +1,301 @@
+//! Background compaction of sealed segments.
+//!
+//! The synchronous [`SegmentedStorage::compact`] blocks the writer for
+//! the whole merge. Because sealed segments are immutable, the merge
+//! itself needs no lock — only the final swap does. The [`Compactor`]
+//! exploits that split:
+//!
+//! 1. **Scan** (short lock): if more than [`CompactorConfig::min_sealed`]
+//!    sealed segments have piled up, clone their `Arc`s + ids.
+//! 2. **Merge + write** (no lock): concatenate the columns off the
+//!    write path; for a durable store, also encode and write + sync the
+//!    merged segment to a uniquely named pending file.
+//! 3. **Install + publish** (short lock):
+//!    [`SegmentedStorage::install_compacted`] verifies the scanned
+//!    prefix is still in place (appends may have sealed *new* segments
+//!    meanwhile — they are untouched; a concurrent synchronous compact
+//!    makes the check fail and the round is discarded), renames the
+//!    pending file into place, replaces the manifest, swaps the
+//!    in-memory prefix, and bumps the generation. The new generation is
+//!    then published through the [`SnapshotCell`], so pinned readers
+//!    keep their old segments (the `Arc`s stay alive) while new pins
+//!    observe the compacted layout.
+//!
+//! Appends therefore never wait on a merge: the writer lock is held
+//! only for the scan and the O(1) swap + manifest replace.
+//! `append_during_background_compaction_…` in `tests/integration.rs`
+//! pins this.
+
+use crate::error::Result;
+use crate::graph::segment::merge_segments;
+use crate::graph::{SegmentedStorage, SnapshotCell};
+use crate::persist::{format, PENDING_SUFFIX};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Process-wide counter for pending-output names, so two compactors
+/// (e.g. over different tenants sharing a directory tree, or a
+/// mistakenly double-attached one) can never rename each other's bytes
+/// into place.
+static NEXT_PENDING: AtomicU64 = AtomicU64::new(1);
+
+/// Background-compaction policy.
+#[derive(Debug, Clone)]
+pub struct CompactorConfig {
+    /// Compact once more than this many sealed segments have piled up
+    /// (clamped to at least 1 so a compacted store never re-compacts).
+    pub min_sealed: usize,
+    /// Poll period between scans when there is nothing to do.
+    pub interval: Duration,
+}
+
+impl Default for CompactorConfig {
+    fn default() -> Self {
+        CompactorConfig { min_sealed: 4, interval: Duration::from_millis(20) }
+    }
+}
+
+/// Handle over one background compaction thread. Dropping it stops the
+/// thread (joining it); [`Compactor::stop`] does the same explicitly.
+pub struct Compactor {
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+    compactions: Arc<AtomicUsize>,
+    last_error: Arc<Mutex<Option<String>>>,
+}
+
+impl Compactor {
+    /// Spawn a compactor over a shared store, publishing each compacted
+    /// generation through `cell` (pass the same cell the serving layer
+    /// pins from; the published snapshot includes the frozen active
+    /// tail, exactly like any writer-side publish).
+    pub fn spawn(
+        store: Arc<Mutex<SegmentedStorage>>,
+        cell: SnapshotCell,
+        cfg: CompactorConfig,
+    ) -> Compactor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let compactions = Arc::new(AtomicUsize::new(0));
+        let last_error = Arc::new(Mutex::new(None));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let compactions = Arc::clone(&compactions);
+            let last_error = Arc::clone(&last_error);
+            thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    match try_compact(&store, &cell, &cfg) {
+                        Ok(true) => {
+                            compactions.fetch_add(1, Ordering::SeqCst);
+                            // A successful round supersedes any earlier
+                            // transient failure: the health signal
+                            // reflects the *current* state.
+                            *last_error.lock().unwrap_or_else(|p| p.into_inner()) = None;
+                            // Re-scan immediately: a burst of seals may
+                            // have piled up more than one round's worth.
+                        }
+                        Ok(false) => thread::sleep(cfg.interval),
+                        Err(e) => {
+                            *last_error.lock().unwrap_or_else(|p| p.into_inner()) =
+                                Some(e.to_string());
+                            thread::sleep(cfg.interval);
+                        }
+                    }
+                }
+            })
+        };
+        Compactor { stop, handle: Some(handle), compactions, last_error }
+    }
+
+    /// Compaction rounds completed so far.
+    pub fn compactions(&self) -> usize {
+        self.compactions.load(Ordering::SeqCst)
+    }
+
+    /// Error from the most recent *failed* round, if no round has
+    /// succeeded since (a successful round clears it — the signal
+    /// reflects current health, not history). A failed round leaves the
+    /// store exactly as it was; the thread keeps running.
+    pub fn last_error(&self) -> Option<String> {
+        self.last_error.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Stop and join the background thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Compactor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One compaction round; `Ok(true)` when a merged generation was
+/// installed and published.
+fn try_compact(
+    store: &Mutex<SegmentedStorage>,
+    cell: &SnapshotCell,
+    cfg: &CompactorConfig,
+) -> Result<bool> {
+    // Scan under a short lock.
+    let (segs, ids, num_nodes, granularity, dir) = {
+        let s = store.lock().unwrap_or_else(|p| p.into_inner());
+        // A poisoned store refuses every durable install: don't burn a
+        // merge + pending write per poll just to have it rejected.
+        if s.durability_poisoned() || s.num_sealed_segments() <= cfg.min_sealed.max(1) {
+            return Ok(false);
+        }
+        let (segs, ids) = s.sealed_segments();
+        (segs, ids, s.num_nodes(), s.granularity(), s.durable_dir().map(Path::to_path_buf))
+    };
+
+    // Merge (and, durably, write + sync) off the write path.
+    let merged = merge_segments(&segs, num_nodes, granularity, 0, Vec::new());
+    drop(segs);
+    let prewritten = match &dir {
+        Some(d) => Some(write_pending_segment(d, &merged)?),
+        None => None,
+    };
+
+    // Install + publish under the lock: O(1) swap, manifest replace,
+    // atomic cell publish.
+    let mut s = store.lock().unwrap_or_else(|p| p.into_inner());
+    let installed = s.install_compacted(merged, &ids, prewritten.as_deref())?;
+    if installed {
+        s.publish_to(cell)?;
+    }
+    Ok(installed)
+}
+
+/// Write + sync the merged segment to a uniquely named pending file;
+/// the install step renames it into place (same directory, so the
+/// rename is atomic). Stale pending files are swept at recovery.
+fn write_pending_segment(dir: &Path, seg: &crate::graph::GraphStorage) -> Result<PathBuf> {
+    let n = NEXT_PENDING.fetch_add(1, Ordering::Relaxed);
+    let path = dir.join(format!("compact-{n}{PENDING_SUFFIX}"));
+    let write = |path: &Path| -> Result<()> {
+        let bytes = format::encode_segment(seg);
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&bytes)?;
+        f.sync_data()?;
+        Ok(())
+    };
+    if let Err(e) = write(&path) {
+        // Don't let the retry loop accumulate partial files (worst on a
+        // full disk, where each leak worsens the failure itself).
+        let _ = std::fs::remove_file(&path);
+        return Err(e);
+    }
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeEvent, SealPolicy};
+    use crate::persist::{recover, DurabilityPolicy};
+    use std::time::Instant;
+
+    fn edge(t: i64, src: u32, dst: u32) -> EdgeEvent {
+        EdgeEvent { t, src, dst, features: vec![t as f32] }
+    }
+
+    fn wait_until(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < deadline {
+            if cond() {
+                return true;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        cond()
+    }
+
+    #[test]
+    fn background_compactor_merges_and_publishes() {
+        let mut st = SegmentedStorage::new(8, SealPolicy::by_events(4));
+        for i in 0..40i64 {
+            st.append_edge(edge(i * 10, (i % 5) as u32, 5 + (i % 3) as u32)).unwrap();
+        }
+        assert!(st.num_sealed_segments() >= 8);
+        let cell = SnapshotCell::new();
+        let baseline = st.publish_to(&cell).unwrap();
+        let store = Arc::new(Mutex::new(st));
+
+        let compactor = Compactor::spawn(
+            Arc::clone(&store),
+            cell.clone(),
+            CompactorConfig { min_sealed: 2, interval: Duration::from_millis(1) },
+        );
+        assert!(
+            wait_until(Duration::from_secs(10), || compactor.compactions() > 0),
+            "compactor never ran: {:?}",
+            compactor.last_error()
+        );
+        compactor.stop();
+
+        let mut s = store.lock().unwrap();
+        assert_eq!(s.num_sealed_segments(), 1);
+        let latest = cell.pin().expect("a compacted generation was published");
+        assert!(latest.generation() > baseline.generation());
+        assert_eq!(latest.edge_ts(), baseline.edge_ts());
+        assert_eq!(latest.edge_feats(), baseline.edge_feats());
+        assert_eq!(s.snapshot().unwrap().edge_ts(), baseline.edge_ts());
+        // The pinned old generation still reads its own (pre-compaction)
+        // segment stack.
+        assert!(baseline.num_segments() >= 8);
+    }
+
+    #[test]
+    fn durable_background_compaction_survives_recovery() {
+        let dir = std::env::temp_dir()
+            .join(format!("tgm_persist_bg_compact_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut st = SegmentedStorage::new(8, SealPolicy::by_events(4))
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        for i in 0..32i64 {
+            st.append_edge(edge(i * 10, (i % 5) as u32, 5 + (i % 3) as u32)).unwrap();
+        }
+        let expect = st.snapshot().unwrap().edge_ts();
+        let cell = SnapshotCell::new();
+        let store = Arc::new(Mutex::new(st));
+        let compactor = Compactor::spawn(
+            Arc::clone(&store),
+            cell.clone(),
+            CompactorConfig { min_sealed: 1, interval: Duration::from_millis(1) },
+        );
+        assert!(
+            wait_until(Duration::from_secs(10), || {
+                store.lock().unwrap().num_sealed_segments() == 1
+            }),
+            "never compacted down to one segment: {:?}",
+            compactor.last_error()
+        );
+        compactor.stop();
+        drop(store);
+
+        let mut rec = recover(SealPolicy::by_events(4), DurabilityPolicy::new(&dir)).unwrap();
+        assert_eq!(rec.num_sealed_segments(), 1);
+        assert_eq!(rec.snapshot().unwrap().edge_ts(), expect);
+        // No pending compaction file survives recovery.
+        let pending = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(PENDING_SUFFIX))
+            .count();
+        assert_eq!(pending, 0);
+    }
+}

@@ -1,0 +1,662 @@
+//! Versioned binary codecs for the durable segment store.
+//!
+//! Three file kinds share one style: an 8-byte magic, a `u32` format
+//! version, a length-prefixed payload, and a trailing FNV-1a checksum
+//! over the payload. Everything is little-endian. Decoding is strict:
+//! short files, bad magic, unknown versions and checksum mismatches all
+//! surface as [`TgmError::Persist`] — never a panic, never silent
+//! garbage.
+//!
+//! * **Segment files** (`seg-NNNNNN.tgm`) hold one sealed
+//!   [`GraphStorage`] as raw columns: the same SoA layout the in-memory
+//!   segment uses (edge ts/src/dst + flattened edge-feature rows, node
+//!   event ts/id + feature rows), written once at seal time and
+//!   immutable thereafter. The timestamp index and per-node indices are
+//!   *not* stored; they are rebuilt on load (cheap, and keeps the format
+//!   independent of in-memory acceleration structures).
+//! * **The manifest** (`MANIFEST`) names the live segment files (their
+//!   sequence numbers, oldest first), the store metadata that is not
+//!   derivable from the segments (node-id space, fixed granularity,
+//!   static features), the generation at the last durable structural
+//!   change, and the WAL epoch it expects (see [`super::wal`]). It is
+//!   replaced atomically (tmp file + rename) on every seal and
+//!   compaction, so a reader always sees either the old or the new
+//!   store, never a mix.
+
+use crate::error::{Result, TgmError};
+use crate::graph::storage::GraphStorage;
+use crate::util::TimeGranularity;
+use std::io::Write;
+use std::path::Path;
+
+/// On-disk format version shared by all three file kinds.
+pub const FORMAT_VERSION: u32 = 1;
+
+const SEGMENT_MAGIC: &[u8; 8] = b"TGMSEG01";
+const MANIFEST_MAGIC: &[u8; 8] = b"TGMMAN01";
+const STATIC_MAGIC: &[u8; 8] = b"TGMSTA01";
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a 64-bit checksum (dependency-free corruption detection; this
+/// guards against torn writes and bit rot, not adversaries).
+pub fn checksum(bytes: &[u8]) -> u64 {
+    checksum_seeded(FNV_OFFSET, bytes)
+}
+
+/// Fold `bytes` into a running FNV-1a state, so multi-part inputs (the
+/// WAL's kind byte + payload) checksum without concatenating into a
+/// scratch buffer first.
+pub fn checksum_seeded(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Encode a granularity as one byte.
+fn granularity_code(g: TimeGranularity) -> u8 {
+    match g {
+        TimeGranularity::Event => 0,
+        TimeGranularity::Second => 1,
+        TimeGranularity::Minute => 2,
+        TimeGranularity::Hour => 3,
+        TimeGranularity::Day => 4,
+        TimeGranularity::Week => 5,
+        TimeGranularity::Year => 6,
+    }
+}
+
+fn granularity_from_code(c: u8) -> Result<TimeGranularity> {
+    Ok(match c {
+        0 => TimeGranularity::Event,
+        1 => TimeGranularity::Second,
+        2 => TimeGranularity::Minute,
+        3 => TimeGranularity::Hour,
+        4 => TimeGranularity::Day,
+        5 => TimeGranularity::Week,
+        6 => TimeGranularity::Year,
+        other => {
+            return Err(TgmError::Persist(format!("unknown granularity code {other}")));
+        }
+    })
+}
+
+// ----------------------------------------------------------------------
+// byte-level encoder / decoder
+// ----------------------------------------------------------------------
+
+/// Append-only little-endian byte sink.
+#[derive(Default)]
+pub(crate) struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub(crate) fn new() -> Enc {
+        Enc::default()
+    }
+
+    pub(crate) fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub(crate) fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn u32s(&mut self, vs: &[u32]) {
+        for &v in vs {
+            self.u32(v);
+        }
+    }
+
+    pub(crate) fn i64s(&mut self, vs: &[i64]) {
+        for &v in vs {
+            self.i64(v);
+        }
+    }
+
+    pub(crate) fn f32s(&mut self, vs: &[f32]) {
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub(crate) fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Strict little-endian cursor; every read error is a typed
+/// [`TgmError::Persist`].
+pub(crate) struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> Dec<'a> {
+    pub(crate) fn new(buf: &'a [u8], what: &'static str) -> Dec<'a> {
+        Dec { buf, pos: 0, what }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(TgmError::Persist(format!(
+                "{} truncated: wanted {} bytes at offset {}, have {}",
+                self.what,
+                n,
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub(crate) fn i64(&mut self) -> Result<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    /// A length `n` read from the file, validated against what the
+    /// buffer can still hold (guards against allocating garbage sizes).
+    fn checked_len(&self, n: u64, unit: usize) -> Result<usize> {
+        let n = usize::try_from(n)
+            .map_err(|_| TgmError::Persist(format!("{}: count {n} overflows", self.what)))?;
+        if n.saturating_mul(unit) > self.buf.len() - self.pos {
+            return Err(TgmError::Persist(format!(
+                "{}: declared {n} x {unit}-byte values but only {} bytes remain",
+                self.what,
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(n)
+    }
+
+    pub(crate) fn u32s(&mut self, n: u64) -> Result<Vec<u32>> {
+        let n = self.checked_len(n, 4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    pub(crate) fn i64s(&mut self, n: u64) -> Result<Vec<i64>> {
+        let n = self.checked_len(n, 8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.i64()?);
+        }
+        Ok(out)
+    }
+
+    pub(crate) fn f32s(&mut self, n: u64) -> Result<Vec<f32>> {
+        let n = self.checked_len(n, 4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.take(4)?;
+            out.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        Ok(out)
+    }
+
+    pub(crate) fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(TgmError::Persist(format!(
+                "{}: {} trailing bytes after payload",
+                self.what,
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------------
+// framing: magic + version + payload + checksum
+// ----------------------------------------------------------------------
+
+/// Wrap a payload in the shared frame.
+fn frame(magic: &[u8; 8], payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 28);
+    out.extend_from_slice(magic);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    let sum = checksum(&payload);
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Validate the frame and return the payload slice.
+fn unframe<'a>(magic: &[u8; 8], bytes: &'a [u8], what: &'static str) -> Result<&'a [u8]> {
+    if bytes.len() < 28 {
+        return Err(TgmError::Persist(format!("{what} too short ({} bytes)", bytes.len())));
+    }
+    if &bytes[..8] != magic {
+        return Err(TgmError::Persist(format!("{what} has wrong magic (not a TGM file?)")));
+    }
+    let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+    if version != FORMAT_VERSION {
+        return Err(TgmError::Persist(format!(
+            "{what} format version {version} unsupported (this build reads {FORMAT_VERSION})"
+        )));
+    }
+    let len = u64::from_le_bytes([
+        bytes[12], bytes[13], bytes[14], bytes[15], bytes[16], bytes[17], bytes[18], bytes[19],
+    ]);
+    let len = usize::try_from(len)
+        .ok()
+        .filter(|l| l.checked_add(28).is_some())
+        .ok_or_else(|| TgmError::Persist(format!("{what}: absurd payload length {len}")))?;
+    if bytes.len() != 20 + len + 8 {
+        return Err(TgmError::Persist(format!(
+            "{what} torn: header declares {len}-byte payload, file holds {}",
+            bytes.len().saturating_sub(28)
+        )));
+    }
+    let payload = &bytes[20..20 + len];
+    let stored = u64::from_le_bytes([
+        bytes[20 + len],
+        bytes[21 + len],
+        bytes[22 + len],
+        bytes[23 + len],
+        bytes[24 + len],
+        bytes[25 + len],
+        bytes[26 + len],
+        bytes[27 + len],
+    ]);
+    if checksum(payload) != stored {
+        return Err(TgmError::Persist(format!("{what} checksum mismatch (corrupt file)")));
+    }
+    Ok(payload)
+}
+
+/// Write `bytes` to `path` atomically: write + sync a sibling tmp file,
+/// rename over the target (crash leaves either the old file or the new
+/// one, never a torn mix), then sync the parent directory so the rename
+/// itself survives a power loss.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_sibling(path);
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    sync_parent_dir(path)
+}
+
+/// fsync the directory containing `path`: a rename is only durable once
+/// its directory entry reaches disk. Platforms whose directory handles
+/// reject fsync surface the error as [`TgmError::Persist`]-compatible
+/// IO, which callers treat like any other durable-write failure.
+pub(crate) fn sync_parent_dir(path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        let parent = if parent.as_os_str().is_empty() { Path::new(".") } else { parent };
+        std::fs::File::open(parent)?.sync_all()?;
+    }
+    Ok(())
+}
+
+/// Sibling `.tmp` path used by the atomic-write protocol.
+pub(crate) fn tmp_sibling(path: &Path) -> std::path::PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+// ----------------------------------------------------------------------
+// segment files
+// ----------------------------------------------------------------------
+
+/// Encode one sealed segment into the versioned columnar format.
+pub fn encode_segment(seg: &GraphStorage) -> Vec<u8> {
+    let mut p = Enc::new();
+    p.u64(seg.num_nodes() as u64);
+    p.u8(granularity_code(seg.granularity()));
+    p.u64(seg.num_edges() as u64);
+    p.u32(seg.edge_feat_dim() as u32);
+    p.u64(seg.num_node_events() as u64);
+    p.u32(seg.node_feat_dim() as u32);
+    p.i64s(seg.edge_ts());
+    p.u32s(seg.edge_src());
+    p.u32s(seg.edge_dst());
+    p.f32s(seg.edge_feats());
+    p.i64s(seg.node_event_ts());
+    p.u32s(seg.node_event_ids());
+    p.f32s(seg.node_event_feats());
+    frame(SEGMENT_MAGIC, p.into_bytes())
+}
+
+/// Decode a segment file body produced by [`encode_segment`], rebuilding
+/// the in-memory acceleration indices.
+pub fn decode_segment(bytes: &[u8]) -> Result<GraphStorage> {
+    let payload = unframe(SEGMENT_MAGIC, bytes, "segment file")?;
+    let mut d = Dec::new(payload, "segment payload");
+    let num_nodes = d.u64()? as usize;
+    let granularity = granularity_from_code(d.u8()?)?;
+    let e = d.u64()?;
+    let edge_feat_dim = d.u32()? as usize;
+    let ne = d.u64()?;
+    let node_feat_dim = d.u32()? as usize;
+    let ts = d.i64s(e)?;
+    let src = d.u32s(e)?;
+    let dst = d.u32s(e)?;
+    let feats = d.f32s(e.saturating_mul(edge_feat_dim as u64))?;
+    let nts = d.i64s(ne)?;
+    let nid = d.u32s(ne)?;
+    let nfeats = d.f32s(ne.saturating_mul(node_feat_dim as u64))?;
+    d.done()?;
+    if ts.windows(2).any(|w| w[0] > w[1]) || nts.windows(2).any(|w| w[0] > w[1]) {
+        return Err(TgmError::Persist("segment columns are not time-sorted".into()));
+    }
+    if ts.is_empty() {
+        return Err(TgmError::Persist("segment file holds no edge events".into()));
+    }
+    if src.iter().chain(dst.iter()).any(|&n| n as usize >= num_nodes)
+        || nid.iter().any(|&n| n as usize >= num_nodes)
+    {
+        return Err(TgmError::Persist(format!(
+            "segment references a node id >= num_nodes={num_nodes}"
+        )));
+    }
+    Ok(GraphStorage::from_sorted_columns(
+        ts,
+        src,
+        dst,
+        edge_feat_dim,
+        feats,
+        nts,
+        nid,
+        node_feat_dim,
+        nfeats,
+        num_nodes,
+        0,
+        Vec::new(),
+        granularity,
+    ))
+}
+
+/// Read + decode one segment file.
+pub fn read_segment(path: &Path) -> Result<GraphStorage> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| TgmError::Persist(format!("cannot read segment {}: {e}", path.display())))?;
+    decode_segment(&bytes)
+}
+
+/// Write one segment file atomically.
+pub fn write_segment(path: &Path, seg: &GraphStorage) -> Result<()> {
+    write_atomic(path, &encode_segment(seg))
+}
+
+// ----------------------------------------------------------------------
+// the static-feature file
+// ----------------------------------------------------------------------
+
+/// Encode the write-once static node-feature matrix (kept out of the
+/// manifest so seals and compactions never rewrite it).
+pub fn encode_static(dim: usize, feats: &[f32]) -> Vec<u8> {
+    let mut p = Enc::new();
+    p.u32(dim as u32);
+    p.u64(feats.len() as u64);
+    p.f32s(feats);
+    frame(STATIC_MAGIC, p.into_bytes())
+}
+
+/// Decode a static-feature file body: `(dim, feats)`.
+pub fn decode_static(bytes: &[u8]) -> Result<(usize, Vec<f32>)> {
+    let payload = unframe(STATIC_MAGIC, bytes, "static-feature file")?;
+    let mut d = Dec::new(payload, "static-feature payload");
+    let dim = d.u32()? as usize;
+    let n = d.u64()?;
+    let feats = d.f32s(n)?;
+    d.done()?;
+    Ok((dim, feats))
+}
+
+/// Read + decode the static-feature file.
+pub fn read_static(path: &Path) -> Result<(usize, Vec<f32>)> {
+    let bytes = std::fs::read(path).map_err(|e| {
+        TgmError::Persist(format!("cannot read static features {}: {e}", path.display()))
+    })?;
+    decode_static(&bytes)
+}
+
+/// Write the static-feature file atomically.
+pub fn write_static(path: &Path, dim: usize, feats: &[f32]) -> Result<()> {
+    write_atomic(path, &encode_static(dim, feats))
+}
+
+// ----------------------------------------------------------------------
+// the manifest
+// ----------------------------------------------------------------------
+
+/// Store metadata persisted in `MANIFEST`: everything recovery cannot
+/// derive from the segment files themselves. The static node-feature
+/// *matrix* lives in its own write-once file (`static.tgm`) so the
+/// manifest — rewritten on every seal and compaction — stays a few
+/// hundred bytes; only the dimension is recorded here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Node-id space of the store.
+    pub num_nodes: usize,
+    /// Granularity fixed up front (`None` = inferred from the stream).
+    pub fixed_granularity: Option<TimeGranularity>,
+    /// Width of the static node-feature matrix (0 = none; the matrix
+    /// itself is in the static-feature file).
+    pub static_feat_dim: usize,
+    /// Store generation at the last durable structural change
+    /// (seal/compact); recovery adds one per replayed WAL record on top.
+    pub generation: u64,
+    /// WAL incarnation this manifest expects. A WAL header with a lower
+    /// epoch predates the last seal (its events are already in a sealed
+    /// segment file) and is discarded on recovery.
+    pub wal_epoch: u64,
+    /// Next segment sequence number to allocate.
+    pub next_seq: u64,
+    /// Live segment files (sequence numbers, oldest first).
+    pub segments: Vec<u64>,
+}
+
+/// Encode the manifest.
+pub fn encode_manifest(m: &Manifest) -> Vec<u8> {
+    let mut p = Enc::new();
+    p.u64(m.num_nodes as u64);
+    p.u8(match m.fixed_granularity {
+        None => 0xff,
+        Some(g) => granularity_code(g),
+    });
+    p.u32(m.static_feat_dim as u32);
+    p.u64(m.generation);
+    p.u64(m.wal_epoch);
+    p.u64(m.next_seq);
+    p.u64(m.segments.len() as u64);
+    for &s in &m.segments {
+        p.u64(s);
+    }
+    frame(MANIFEST_MAGIC, p.into_bytes())
+}
+
+/// Decode a manifest file body.
+pub fn decode_manifest(bytes: &[u8]) -> Result<Manifest> {
+    let payload = unframe(MANIFEST_MAGIC, bytes, "manifest")?;
+    let mut d = Dec::new(payload, "manifest payload");
+    let num_nodes = d.u64()? as usize;
+    let fixed_granularity = match d.u8()? {
+        0xff => None,
+        code => Some(granularity_from_code(code)?),
+    };
+    let static_feat_dim = d.u32()? as usize;
+    let generation = d.u64()?;
+    let wal_epoch = d.u64()?;
+    let next_seq = d.u64()?;
+    let nsegs = d.u64()?;
+    let mut segments = Vec::new();
+    for _ in 0..nsegs {
+        segments.push(d.u64()?);
+    }
+    d.done()?;
+    Ok(Manifest {
+        num_nodes,
+        fixed_granularity,
+        static_feat_dim,
+        generation,
+        wal_epoch,
+        next_seq,
+        segments,
+    })
+}
+
+/// Read + decode the manifest at `path`.
+pub fn read_manifest(path: &Path) -> Result<Manifest> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| TgmError::Persist(format!("cannot read manifest {}: {e}", path.display())))?;
+    decode_manifest(&bytes)
+}
+
+/// Write the manifest atomically.
+pub fn write_manifest(path: &Path, m: &Manifest) -> Result<()> {
+    write_atomic(path, &encode_manifest(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::events::{EdgeEvent, NodeEvent};
+
+    fn sample_segment() -> GraphStorage {
+        let edges = vec![
+            EdgeEvent { t: 10, src: 0, dst: 1, features: vec![1.0, 2.0] },
+            EdgeEvent { t: 20, src: 1, dst: 2, features: vec![3.0, 4.0] },
+            EdgeEvent { t: 20, src: 2, dst: 0, features: vec![5.0, 6.0] },
+        ];
+        let nodes = vec![NodeEvent { t: 15, node: 1, features: vec![9.0] }];
+        GraphStorage::from_events(edges, nodes, 4, None, None).unwrap()
+    }
+
+    #[test]
+    fn segment_round_trip_is_byte_faithful() {
+        let seg = sample_segment();
+        let bytes = encode_segment(&seg);
+        let back = decode_segment(&bytes).unwrap();
+        assert_eq!(back.num_nodes(), seg.num_nodes());
+        assert_eq!(back.granularity(), seg.granularity());
+        assert_eq!(back.edge_ts(), seg.edge_ts());
+        assert_eq!(back.edge_src(), seg.edge_src());
+        assert_eq!(back.edge_dst(), seg.edge_dst());
+        assert_eq!(back.edge_feats(), seg.edge_feats());
+        assert_eq!(back.node_event_ts(), seg.node_event_ts());
+        assert_eq!(back.node_event_ids(), seg.node_event_ids());
+        assert_eq!(back.node_event_feats(), seg.node_event_feats());
+        assert_eq!(back.num_unique_timestamps(), seg.num_unique_timestamps());
+    }
+
+    #[test]
+    fn corrupt_and_torn_segments_are_typed_errors() {
+        let bytes = encode_segment(&sample_segment());
+        // Flip one payload byte: checksum mismatch.
+        let mut corrupt = bytes.clone();
+        corrupt[25] ^= 0x40;
+        let err = decode_segment(&corrupt).unwrap_err();
+        assert!(matches!(err, TgmError::Persist(_)), "{err}");
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // Truncate: torn file.
+        let err = decode_segment(&bytes[..bytes.len() - 3]).unwrap_err();
+        assert!(matches!(err, TgmError::Persist(_)), "{err}");
+        // Wrong magic.
+        let mut magic = bytes.clone();
+        magic[0] = b'X';
+        assert!(decode_segment(&magic).is_err());
+        // Unsupported version.
+        let mut ver = bytes.clone();
+        ver[8] = 0xee;
+        let err = decode_segment(&ver).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let m = Manifest {
+            num_nodes: 77,
+            fixed_granularity: Some(TimeGranularity::Minute),
+            static_feat_dim: 2,
+            generation: 123,
+            wal_epoch: 9,
+            next_seq: 4,
+            segments: vec![1, 2, 3],
+        };
+        let back = decode_manifest(&encode_manifest(&m)).unwrap();
+        assert_eq!(back, m);
+        let none = Manifest { fixed_granularity: None, ..m };
+        let back = decode_manifest(&encode_manifest(&none)).unwrap();
+        assert_eq!(back.fixed_granularity, None);
+    }
+
+    #[test]
+    fn static_feature_file_round_trips() {
+        let feats = vec![0.5f32; 154];
+        let (dim, back) = decode_static(&encode_static(2, &feats)).unwrap();
+        assert_eq!(dim, 2);
+        assert_eq!(back, feats);
+        let (dim, back) = decode_static(&encode_static(0, &[])).unwrap();
+        assert_eq!((dim, back.len()), (0, 0));
+        // Torn/corrupt static files are typed errors.
+        let mut bytes = encode_static(2, &feats);
+        bytes.truncate(bytes.len() - 2);
+        assert!(matches!(decode_static(&bytes).unwrap_err(), TgmError::Persist(_)));
+    }
+
+    #[test]
+    fn atomic_write_round_trips_through_disk() {
+        let dir = std::env::temp_dir().join("tgm_persist_format_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("MANIFEST");
+        let m = Manifest {
+            num_nodes: 3,
+            fixed_granularity: None,
+            static_feat_dim: 0,
+            generation: 1,
+            wal_epoch: 1,
+            next_seq: 1,
+            segments: vec![],
+        };
+        write_manifest(&path, &m).unwrap();
+        assert_eq!(read_manifest(&path).unwrap(), m);
+        // Overwrite atomically with new content.
+        let m2 = Manifest { generation: 2, segments: vec![1], ..m };
+        write_manifest(&path, &m2).unwrap();
+        assert_eq!(read_manifest(&path).unwrap(), m2);
+        // Missing file is a typed error.
+        assert!(matches!(
+            read_manifest(&dir.join("nope")).unwrap_err(),
+            TgmError::Persist(_)
+        ));
+    }
+}

@@ -1,0 +1,837 @@
+//! Durable segment store: WAL + on-disk columnar segments, crash
+//! recovery, and background compaction.
+//!
+//! Without this module a [`SegmentedStorage`] lives purely in memory: a
+//! restart loses every ingested event and forces a full replay. The
+//! `persist` subsystem gives the store a disk footprint with exactly the
+//! write amplification its in-memory life cycle already implies:
+//!
+//! * **Appends** into the active segment are recorded in a write-ahead
+//!   log ([`wal`]) *before* they are acknowledged — an `Ok` from
+//!   `append` means the event survives a process kill.
+//! * **Seals** freeze the active segment into an immutable on-disk
+//!   columnar segment file ([`format`]) — the same SoA column layout the
+//!   in-memory segment uses — then atomically replace the manifest and
+//!   reset the WAL. Sealed files are never modified, only replaced
+//!   wholesale by compaction.
+//! * **Compaction** merges sealed segment files into one, either
+//!   synchronously ([`SegmentedStorage::compact`]) or on a background
+//!   [`Compactor`] thread that merges off the write path and atomically
+//!   publishes the compacted generation through a
+//!   [`crate::graph::SnapshotCell`] (tmp-file + rename, so a crash
+//!   leaves either the old or the new generation on disk).
+//! * **Recovery** ([`recover`]) rebuilds a store from the manifest +
+//!   segment files + WAL tail: exactly the acknowledged prefix comes
+//!   back, at a generation no lower than any acknowledged one. Torn WAL
+//!   tails (crash mid-write of an unacknowledged record) are dropped;
+//!   corrupt records and segment/manifest checksum mismatches surface
+//!   as typed [`TgmError::Persist`] errors.
+//!
+//! ## Directory layout
+//!
+//! ```text
+//! <dir>/MANIFEST         store metadata + live segment list (atomic replace)
+//! <dir>/wal.log          active segment's write-ahead log
+//! <dir>/static.tgm       write-once static node-feature matrix (if any)
+//! <dir>/seg-000001.tgm   immutable sealed segment files
+//! <dir>/seg-000002.tgm   (manifest order is oldest-first; numeric order
+//! ...                     is allocation order — compaction outputs get
+//!                         fresh, higher numbers)
+//! ```
+//!
+//! ## Crash-consistency protocol
+//!
+//! A seal performs, in order: (1) write + sync the new segment file via
+//! a tmp sibling + rename, (2) atomically replace `MANIFEST` (now
+//! naming the new segment and expecting WAL epoch `E+1`), (3) reset the
+//! WAL to epoch `E+1`. A crash after (2) but before (3) leaves a WAL
+//! whose header epoch `E` is one behind the manifest: its events are
+//! already inside the sealed file, so recovery discards the stale log
+//! instead of double-appending. Compaction renames its pre-synced
+//! output into place and then replaces the manifest; the old files are
+//! deleted only afterwards, so every intermediate crash state decodes
+//! to a complete store.
+
+pub mod compactor;
+pub mod format;
+pub mod wal;
+
+pub use compactor::{Compactor, CompactorConfig};
+pub use format::{Manifest, FORMAT_VERSION};
+pub use wal::{read_wal, WalContents, WalWriter};
+
+use crate::error::{Result, TgmError};
+use crate::graph::events::{EdgeEvent, NodeEvent};
+use crate::graph::storage::GraphStorage;
+use crate::graph::{SealPolicy, SegmentedStorage};
+use crate::util::TimeGranularity;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Manifest file name inside a durable store directory.
+pub const MANIFEST_FILE: &str = "MANIFEST";
+/// WAL file name inside a durable store directory.
+pub const WAL_FILE: &str = "wal.log";
+/// Write-once static node-feature file (kept out of the manifest so
+/// seals and compactions never rewrite the matrix).
+pub const STATIC_FILE: &str = "static.tgm";
+/// Extension of the background compactor's pre-synced pending outputs
+/// (each round writes a uniquely named `compact-N.pending`).
+pub(crate) const PENDING_SUFFIX: &str = ".pending";
+
+/// Path of segment file `seq` inside `dir`.
+pub fn segment_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("seg-{seq:06}.tgm"))
+}
+
+/// True when `dir` already holds a durable store (has a manifest) —
+/// callers use this to choose between a fresh
+/// [`SegmentedStorage::with_durability`] and [`recover`].
+pub fn store_exists(dir: &Path) -> bool {
+    dir.join(MANIFEST_FILE).is_file()
+}
+
+/// How a [`SegmentedStorage`] persists itself.
+#[derive(Debug, Clone)]
+pub struct DurabilityPolicy {
+    /// Directory holding the manifest, WAL and sealed segment files.
+    pub dir: PathBuf,
+    /// fsync the WAL on every acknowledged append. Off (the default),
+    /// appends are flushed to the OS — they survive a process kill but
+    /// not a power loss — at a fraction of the cost; the
+    /// `ablation.persist` bench quantifies both.
+    pub fsync_appends: bool,
+}
+
+impl DurabilityPolicy {
+    /// Policy over `dir` with flush-only (no-fsync) appends.
+    pub fn new(dir: impl Into<PathBuf>) -> DurabilityPolicy {
+        DurabilityPolicy { dir: dir.into(), fsync_appends: false }
+    }
+
+    /// fsync every acknowledged append (power-loss safety).
+    pub fn with_fsync(mut self) -> DurabilityPolicy {
+        self.fsync_appends = true;
+        self
+    }
+}
+
+/// Store metadata a durable operation records in the manifest (borrowed
+/// from the owning [`SegmentedStorage`] at call time).
+pub(crate) struct StoreMeta<'a> {
+    pub num_nodes: usize,
+    pub fixed_granularity: Option<TimeGranularity>,
+    pub static_feat_dim: usize,
+    pub static_feats: &'a [f32],
+    /// Generation the manifest should record (the post-operation value).
+    pub generation: u64,
+}
+
+impl StoreMeta<'_> {
+    fn manifest(&self, wal_epoch: u64, next_seq: u64, segments: Vec<u64>) -> Manifest {
+        Manifest {
+            num_nodes: self.num_nodes,
+            fixed_granularity: self.fixed_granularity,
+            static_feat_dim: self.static_feat_dim,
+            generation: self.generation,
+            wal_epoch,
+            next_seq,
+            segments,
+        }
+    }
+}
+
+/// Disk-side state of one durable [`SegmentedStorage`] (held inside the
+/// store; every mutation of the store calls back into this).
+pub(crate) struct Durability {
+    policy: DurabilityPolicy,
+    wal: WalWriter,
+    wal_epoch: u64,
+    next_seq: u64,
+    /// Live segment sequence numbers, parallel to the store's sealed
+    /// stack (oldest first).
+    seqs: Vec<u64>,
+    /// Set when a durable operation failed mid-protocol: the in-memory
+    /// store may no longer match the disk, so further durable writes
+    /// would be falsely acknowledged. Every operation errors until the
+    /// operator recovers from disk.
+    poisoned: Option<String>,
+}
+
+impl Durability {
+    /// Initialize a fresh durable directory (manifest + static-feature
+    /// file + empty WAL). Refuses to clobber an existing store.
+    pub(crate) fn init(policy: DurabilityPolicy, meta: &StoreMeta<'_>) -> Result<Durability> {
+        std::fs::create_dir_all(&policy.dir)?;
+        let man_path = policy.dir.join(MANIFEST_FILE);
+        if man_path.exists() {
+            return Err(TgmError::Persist(format!(
+                "{} already holds a durable store; use persist::recover to reopen it",
+                policy.dir.display()
+            )));
+        }
+        if meta.static_feat_dim > 0 {
+            format::write_static(
+                &policy.dir.join(STATIC_FILE),
+                meta.static_feat_dim,
+                meta.static_feats,
+            )?;
+        }
+        format::write_manifest(&man_path, &meta.manifest(1, 1, Vec::new()))?;
+        let wal = WalWriter::create(&policy.dir.join(WAL_FILE), 1, policy.fsync_appends)?;
+        Ok(Durability { policy, wal, wal_epoch: 1, next_seq: 1, seqs: Vec::new(), poisoned: None })
+    }
+
+    /// Re-attach to a recovered store: keep the manifest's bookkeeping
+    /// and start a fresh WAL at the manifest's epoch. The new log is
+    /// **deferred** — it accumulates at the tmp sibling while recovery
+    /// replays the surviving tail through the normal append path, and
+    /// only [`Durability::commit_wal`] renames it over the original, so
+    /// a crash mid-replay still finds the old (complete) log intact.
+    fn attach_recovered(policy: DurabilityPolicy, man: &Manifest) -> Result<Durability> {
+        sweep_pending_files(&policy.dir);
+        // Replay records with fsync off even under `with_fsync`: the
+        // original log remains the durable copy until commit (which
+        // syncs the rewrite once), so per-record fsyncs would buy
+        // nothing and cost one disk round-trip per replayed event.
+        // `commit_wal` restores the policy for live appends.
+        let wal = WalWriter::create_deferred(&policy.dir.join(WAL_FILE), man.wal_epoch, false)?;
+        Ok(Durability {
+            policy,
+            wal,
+            wal_epoch: man.wal_epoch,
+            next_seq: man.next_seq,
+            seqs: man.segments.clone(),
+            poisoned: None,
+        })
+    }
+
+    /// Fail every durable operation until recovery (see
+    /// [`Durability::poisoned`]).
+    pub(crate) fn poison(&mut self, why: impl Into<String>) {
+        if self.poisoned.is_none() {
+            self.poisoned = Some(why.into());
+        }
+    }
+
+    /// True once a durable operation has failed mid-protocol.
+    pub(crate) fn is_poisoned(&self) -> bool {
+        self.poisoned.is_some()
+    }
+
+    fn check_poisoned(&self) -> Result<()> {
+        match &self.poisoned {
+            Some(why) => Err(TgmError::Persist(format!(
+                "durable store is poisoned ({why}); reopen it with persist::recover"
+            ))),
+            None => Ok(()),
+        }
+    }
+
+    /// Publish a deferred (recovery-time) WAL at its real path and
+    /// restore the store's per-append fsync policy (replay ran with
+    /// fsync off — see [`Durability::attach_recovered`]).
+    pub(crate) fn commit_wal(&mut self) -> Result<()> {
+        self.wal.commit()?;
+        self.wal.set_fsync(self.policy.fsync_appends);
+        Ok(())
+    }
+
+    /// Re-persist manifest-level metadata (and the static-feature file)
+    /// after a post-`with_durability` builder call changed it. The
+    /// segment list, WAL epoch and sequence allocation are untouched.
+    pub(crate) fn refresh_metadata(&mut self, meta: &StoreMeta<'_>) -> Result<()> {
+        self.check_poisoned()?;
+        if meta.static_feat_dim > 0 {
+            format::write_static(
+                &self.dir().join(STATIC_FILE),
+                meta.static_feat_dim,
+                meta.static_feats,
+            )?;
+        }
+        let man = meta.manifest(self.wal_epoch, self.next_seq, self.seqs.clone());
+        format::write_manifest(&self.dir().join(MANIFEST_FILE), &man)?;
+        Ok(())
+    }
+
+    /// The backing directory.
+    pub(crate) fn dir(&self) -> &Path {
+        &self.policy.dir
+    }
+
+    /// Durably record one edge append (called *before* the in-memory
+    /// push; an error here means the append is not acknowledged). A
+    /// failed write may leave partial record bytes in the log, after
+    /// which appending anything else would bury acknowledged records
+    /// behind garbage — so a WAL IO error poisons the store like a
+    /// failed seal does.
+    pub(crate) fn record_edge(&mut self, e: &EdgeEvent) -> Result<()> {
+        self.check_poisoned()?;
+        let res = self.wal.append_edge(e);
+        if res.is_err() {
+            self.poison("a WAL append failed mid-record (the log tail may be partial)");
+        }
+        res
+    }
+
+    /// Durably record one node-event append (same poisoning contract as
+    /// [`Durability::record_edge`]).
+    pub(crate) fn record_node(&mut self, e: &NodeEvent) -> Result<()> {
+        self.check_poisoned()?;
+        let res = self.wal.append_node(e);
+        if res.is_err() {
+            self.poison("a WAL append failed mid-record (the log tail may be partial)");
+        }
+        res
+    }
+
+    /// Make a seal durable: segment file, then manifest, then WAL reset
+    /// (see the module-level crash-consistency protocol).
+    pub(crate) fn persist_seal(&mut self, seg: &GraphStorage, meta: &StoreMeta<'_>) -> Result<()> {
+        self.check_poisoned()?;
+        let seq = self.next_seq;
+        format::write_segment(&segment_path(self.dir(), seq), seg)?;
+        let mut seqs = self.seqs.clone();
+        seqs.push(seq);
+        let man = meta.manifest(self.wal_epoch + 1, seq + 1, seqs.clone());
+        format::write_manifest(&self.dir().join(MANIFEST_FILE), &man)?;
+        self.wal.reset(self.wal_epoch + 1)?;
+        self.wal_epoch += 1;
+        self.next_seq = seq + 1;
+        self.seqs = seqs;
+        Ok(())
+    }
+
+    /// Make a compaction durable: move the merged segment into place
+    /// (either renaming a pre-synced `prewritten` file — the background
+    /// compactor's path — or encoding + writing it here), replace the
+    /// manifest, then delete the files it superseded. The WAL is
+    /// untouched: compaction never involves the active segment.
+    pub(crate) fn persist_compaction(
+        &mut self,
+        merged: &GraphStorage,
+        replaced: usize,
+        prewritten: Option<&Path>,
+        meta: &StoreMeta<'_>,
+    ) -> Result<()> {
+        self.check_poisoned()?;
+        let seq = self.next_seq;
+        let path = segment_path(self.dir(), seq);
+        match prewritten {
+            Some(tmp) => {
+                std::fs::rename(tmp, &path)?;
+                format::sync_parent_dir(&path)?;
+            }
+            None => format::write_segment(&path, merged)?,
+        }
+        let old: Vec<u64> = self.seqs[..replaced].to_vec();
+        let mut seqs = Vec::with_capacity(self.seqs.len() - replaced + 1);
+        seqs.push(seq);
+        seqs.extend_from_slice(&self.seqs[replaced..]);
+        let man = meta.manifest(self.wal_epoch, seq + 1, seqs.clone());
+        format::write_manifest(&self.dir().join(MANIFEST_FILE), &man)?;
+        self.next_seq = seq + 1;
+        self.seqs = seqs;
+        for s in old {
+            // Best-effort: an undeleted superseded file is unreferenced
+            // by the manifest and gets swept on the next recovery.
+            let _ = std::fs::remove_file(segment_path(self.dir(), s));
+        }
+        Ok(())
+    }
+}
+
+/// What one [`recover_with_report`] run found on disk.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryReport {
+    /// Sealed segment files reopened.
+    pub sealed_segments: usize,
+    /// WAL records replayed into the active segment.
+    pub replayed_events: usize,
+    /// True when a torn trailing record was dropped from the WAL.
+    pub torn_tail: bool,
+    /// Bytes dropped past the last complete WAL record. A genuine
+    /// crash can only tear the final in-flight record, so a value much
+    /// larger than one record suggests a corrupted length prefix
+    /// mid-file — worth alerting on (see
+    /// [`crate::persist::wal::WalContents::dropped_bytes`]).
+    pub dropped_bytes: usize,
+    /// True when a stale pre-seal WAL (epoch one behind the manifest)
+    /// was discarded — its events are inside the last sealed segment.
+    pub stale_wal_discarded: bool,
+}
+
+/// Rebuild a [`SegmentedStorage`] from a durable directory: sealed
+/// segments from the manifest's files, the active tail from the WAL.
+///
+/// * The recovered store holds **exactly the acknowledged prefix**: all
+///   sealed events plus every WAL record that was completely written.
+///   A torn trailing record (killed mid-write, never acknowledged) is
+///   dropped; a checksum-failing complete record or segment file is a
+///   typed [`TgmError::Persist`].
+/// * The store resumes at a generation `>=` every acknowledged
+///   pre-crash generation (manifest generation at the last seal plus
+///   one per replayed WAL record), so republished snapshots are never
+///   mistaken for stale ones.
+/// * `seal` is the recovered store's go-forward policy (it is not
+///   persisted; ingestion policy belongs to the process, not the data).
+///   Replay bypasses its admission checks — acknowledged data always
+///   reopens — and any seal the tail warrants applies afterwards.
+pub fn recover(seal: SealPolicy, policy: DurabilityPolicy) -> Result<SegmentedStorage> {
+    recover_with_report(seal, policy).map(|(store, _)| store)
+}
+
+/// [`recover`], also returning what was found on disk (torn-tail and
+/// stale-WAL diagnostics an operator can alert on).
+pub fn recover_with_report(
+    seal: SealPolicy,
+    policy: DurabilityPolicy,
+) -> Result<(SegmentedStorage, RecoveryReport)> {
+    let man = format::read_manifest(&policy.dir.join(MANIFEST_FILE))?;
+    let mut sealed = Vec::with_capacity(man.segments.len());
+    for &seq in &man.segments {
+        let seg = format::read_segment(&segment_path(&policy.dir, seq))?;
+        if seg.num_nodes() != man.num_nodes {
+            return Err(TgmError::Persist(format!(
+                "segment {seq} spans {} nodes but the manifest says {}",
+                seg.num_nodes(),
+                man.num_nodes
+            )));
+        }
+        sealed.push(Arc::new(seg));
+    }
+    // Sealed segments must cover non-decreasing time spans or the
+    // logical-offset layer's concatenation would not be time-sorted.
+    for w in sealed.windows(2) {
+        if w[1].start_time() < w[0].end_time() {
+            return Err(TgmError::Persist(
+                "manifest orders segments with overlapping time spans".into(),
+            ));
+        }
+    }
+
+    let mut report = RecoveryReport { sealed_segments: sealed.len(), ..Default::default() };
+    let wal_path = policy.dir.join(WAL_FILE);
+    let events = if wal_path.exists() {
+        let contents = wal::read_wal(&wal_path)?;
+        if contents.epoch == man.wal_epoch {
+            report.torn_tail = contents.torn_tail;
+            report.dropped_bytes = contents.dropped_bytes;
+            contents.events
+        } else if contents.epoch + 1 == man.wal_epoch {
+            // Crash between the manifest replace and the WAL reset: the
+            // log's events are already inside the last sealed segment.
+            report.stale_wal_discarded = true;
+            Vec::new()
+        } else {
+            return Err(TgmError::Persist(format!(
+                "wal epoch {} does not match manifest epoch {} (corrupt store)",
+                contents.epoch, man.wal_epoch
+            )));
+        }
+    } else if man.wal_epoch == 1 {
+        // Crash between manifest creation and the first WAL write —
+        // the only window in which no wal.log can legitimately exist
+        // (resets and recovery commits are rename-based).
+        Vec::new()
+    } else {
+        return Err(TgmError::Persist(format!(
+            "wal.log is missing but the manifest expects epoch {} — the log was deleted \
+             or the directory is incomplete; acknowledged tail events would be silently \
+             lost",
+            man.wal_epoch
+        )));
+    };
+    report.replayed_events = events.len();
+
+    let static_feats = if man.static_feat_dim > 0 {
+        let (dim, feats) = format::read_static(&policy.dir.join(STATIC_FILE))?;
+        if dim != man.static_feat_dim || feats.len() != dim * man.num_nodes {
+            return Err(TgmError::Persist(format!(
+                "static-feature file holds {} values at dim {dim}, manifest expects {} x {}",
+                feats.len(),
+                man.num_nodes,
+                man.static_feat_dim
+            )));
+        }
+        feats
+    } else {
+        Vec::new()
+    };
+
+    sweep_unreferenced_segments(&policy.dir, &man.segments);
+    let durability = Durability::attach_recovered(policy, &man)?;
+    let mut store = SegmentedStorage::from_recovered(
+        man.num_nodes,
+        seal,
+        man.fixed_granularity,
+        man.static_feat_dim,
+        static_feats,
+        sealed,
+        man.generation,
+        durability,
+    );
+    // Replay the acknowledged tail: the (deferred) fresh WAL re-records
+    // every event and generations advance one per event exactly as they
+    // did pre-crash, but auto-sealing is suppressed — a seal mid-replay
+    // would reset the live WAL while the original log is still the only
+    // complete copy of the tail. Only after the full replay does the
+    // rewritten log replace the original (so recovery itself can crash
+    // and re-run), and only then is any seal the tail warrants under
+    // the go-forward policy applied through the normal, crash-safe
+    // protocol.
+    for ev in events {
+        store.replay_append(ev)?;
+    }
+    store.commit_recovered_wal()?;
+    store.seal_if_due()?;
+    Ok((store, report))
+}
+
+/// Delete stale `*.pending` compactor outputs left by a crash (each
+/// round uses a unique name, so any survivor is garbage).
+fn sweep_pending_files(dir: &Path) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        if entry.file_name().to_string_lossy().ends_with(PENDING_SUFFIX) {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+/// Delete `seg-*.tgm` files the manifest does not reference (orphans
+/// from a crash between a segment write and its manifest replace).
+fn sweep_unreferenced_segments(dir: &Path, live: &[u64]) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(stem) = name.strip_prefix("seg-").and_then(|s| s.strip_suffix(".tgm")) else {
+            continue;
+        };
+        if let Ok(seq) = stem.parse::<u64>() {
+            if !live.contains(&seq) {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeEvent, Event, NodeEvent};
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tgm_persist_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn edge(t: i64, src: u32, dst: u32) -> EdgeEvent {
+        EdgeEvent { t, src, dst, features: vec![t as f32] }
+    }
+
+    fn stream(n: usize) -> Vec<EdgeEvent> {
+        (0..n).map(|i| edge(i as i64 * 10, (i % 5) as u32, 5 + (i % 3) as u32)).collect()
+    }
+
+    #[test]
+    fn durable_store_round_trips_through_recovery() {
+        let dir = test_dir("round_trip");
+        let mut st = SegmentedStorage::new(8, SealPolicy::by_events(16))
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        for e in stream(50) {
+            st.append_edge(e).unwrap();
+        }
+        st.append_node_event(NodeEvent { t: 500, node: 1, features: vec![7.0] }).unwrap();
+        let gen_before = st.generation();
+        let snap_before = st.snapshot().unwrap();
+        assert!(st.num_sealed_segments() >= 3, "{}", st.num_sealed_segments());
+        assert!(st.pending_edges() > 0, "want a live WAL tail");
+        drop(st); // crash: nothing is flushed on drop that wasn't already on disk
+
+        let mut rec =
+            recover(SealPolicy::by_events(16), DurabilityPolicy::new(&dir)).unwrap();
+        assert!(rec.generation() >= gen_before);
+        let snap = rec.snapshot().unwrap();
+        assert_eq!(snap.num_edges(), snap_before.num_edges());
+        assert_eq!(snap.edge_ts(), snap_before.edge_ts());
+        assert_eq!(snap.edge_src(), snap_before.edge_src());
+        assert_eq!(snap.edge_dst(), snap_before.edge_dst());
+        assert_eq!(snap.edge_feats(), snap_before.edge_feats());
+        assert_eq!(snap.num_node_events(), 1);
+        assert_eq!(snap.granularity(), snap_before.granularity());
+        // The recovered store keeps ingesting durably.
+        rec.append_edge(edge(10_000, 0, 5)).unwrap();
+        drop(rec);
+        let mut again =
+            recover(SealPolicy::by_events(16), DurabilityPolicy::new(&dir)).unwrap();
+        assert_eq!(again.snapshot().unwrap().num_edges(), snap_before.num_edges() + 1);
+    }
+
+    #[test]
+    fn wal_only_store_recovers_its_active_tail() {
+        let dir = test_dir("tail_only");
+        let mut st = SegmentedStorage::new(4, SealPolicy::default())
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        st.append_edge(edge(5, 0, 1)).unwrap();
+        st.append_edge(edge(7, 1, 2)).unwrap();
+        drop(st);
+        let mut rec = recover(SealPolicy::default(), DurabilityPolicy::new(&dir)).unwrap();
+        assert_eq!(rec.num_sealed_segments(), 0);
+        assert_eq!(rec.pending_edges(), 2);
+        assert_eq!(rec.snapshot().unwrap().edge_ts(), vec![5, 7]);
+    }
+
+    #[test]
+    fn stale_wal_epoch_is_discarded_not_double_applied() {
+        let dir = test_dir("stale_epoch");
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(2))
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        st.append_edge(edge(10, 0, 1)).unwrap();
+        st.append_edge(edge(20, 1, 2)).unwrap(); // seals; manifest now expects epoch 2
+        drop(st);
+        // Simulate the crash window between manifest replace and WAL
+        // reset: rewrite the WAL at the PRE-seal epoch holding the very
+        // events the sealed segment already contains.
+        let mut stale = WalWriter::create(&dir.join(WAL_FILE), 1, false).unwrap();
+        stale.append(&Event::Edge(edge(10, 0, 1))).unwrap();
+        stale.append(&Event::Edge(edge(20, 1, 2))).unwrap();
+        drop(stale);
+        let mut rec = recover(SealPolicy::by_events(2), DurabilityPolicy::new(&dir)).unwrap();
+        assert_eq!(rec.snapshot().unwrap().num_edges(), 2, "stale log must not double-apply");
+
+        // An epoch from the future is corruption, not a crash artifact.
+        let mut future = WalWriter::create(&dir.join(WAL_FILE), 99, false).unwrap();
+        future.append(&Event::Edge(edge(30, 0, 1))).unwrap();
+        drop(future);
+        let err =
+            recover(SealPolicy::by_events(2), DurabilityPolicy::new(&dir)).unwrap_err();
+        assert!(matches!(err, TgmError::Persist(_)), "{err}");
+        assert!(err.to_string().contains("epoch"), "{err}");
+    }
+
+    /// Regression: a go-forward seal policy smaller than the WAL tail
+    /// used to let the replay auto-seal mid-recovery, resetting the
+    /// live WAL while the original log was still the only complete copy
+    /// of the tail. The due seal must apply only after the rewritten
+    /// log is committed — and must lose nothing.
+    #[test]
+    fn recovery_with_a_smaller_seal_policy_never_loses_the_tail() {
+        let dir = test_dir("shrink_policy");
+        let mut st = SegmentedStorage::new(8, SealPolicy::by_events(64))
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        for e in stream(20) {
+            st.append_edge(e).unwrap(); // 20 < 64: everything stays in the WAL
+        }
+        drop(st);
+        let mut rec = recover(SealPolicy::by_events(4), DurabilityPolicy::new(&dir)).unwrap();
+        assert_eq!(rec.num_sealed_segments(), 1, "the due seal applies once, post-commit");
+        assert_eq!(rec.snapshot().unwrap().num_edges(), 20);
+        drop(rec);
+        let mut again = recover(SealPolicy::by_events(4), DurabilityPolicy::new(&dir)).unwrap();
+        let expect: Vec<i64> = stream(20).iter().map(|e| e.t).collect();
+        assert_eq!(again.snapshot().unwrap().edge_ts(), expect);
+    }
+
+    /// A WAL can only legitimately be absent before its first creation
+    /// (manifest epoch 1); at any later epoch the log held (or may have
+    /// held) acknowledged tail events, so its absence is corruption.
+    #[test]
+    fn missing_wal_at_a_later_epoch_is_corruption_not_an_empty_tail() {
+        let dir = test_dir("missing_wal");
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(2))
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        st.append_edge(edge(10, 0, 1)).unwrap();
+        st.append_edge(edge(20, 1, 2)).unwrap(); // seals -> manifest expects epoch 2
+        drop(st);
+        std::fs::remove_file(dir.join(WAL_FILE)).unwrap();
+        let err = recover(SealPolicy::by_events(2), DurabilityPolicy::new(&dir)).unwrap_err();
+        assert!(matches!(err, TgmError::Persist(_)), "{err}");
+        assert!(err.to_string().contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn durability_setup_errors_are_typed() {
+        let dir = test_dir("setup_errors");
+        // Enabling durability on a non-empty store is refused.
+        let mut st = SegmentedStorage::new(4, SealPolicy::default());
+        st.append_edge(edge(1, 0, 1)).unwrap();
+        let err = st.with_durability(DurabilityPolicy::new(&dir)).unwrap_err();
+        assert!(matches!(err, TgmError::Persist(_)), "{err}");
+
+        // A fresh store claims the directory; a second fresh store may
+        // not clobber it.
+        let _st = SegmentedStorage::new(4, SealPolicy::default())
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        let err = SegmentedStorage::new(4, SealPolicy::default())
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap_err();
+        assert!(err.to_string().contains("already holds"), "{err}");
+
+        // Recovering a directory that was never a store is typed too.
+        let empty = test_dir("never_a_store");
+        let err = recover(SealPolicy::default(), DurabilityPolicy::new(&empty)).unwrap_err();
+        assert!(matches!(err, TgmError::Persist(_)), "{err}");
+    }
+
+    /// Review regression: replay carries events that were admitted (and
+    /// acknowledged) pre-crash, so a *tighter* go-forward backpressure
+    /// cap must not reject them — acknowledged data must always reopen.
+    /// The new cap still applies to fresh appends.
+    #[test]
+    fn recovery_replays_node_event_tails_past_a_tighter_backpressure_cap() {
+        let dir = test_dir("backpressure_replay");
+        let mut st = SegmentedStorage::new(
+            4,
+            SealPolicy::by_events(1000).with_node_event_cap(50),
+        )
+        .with_durability(DurabilityPolicy::new(&dir))
+        .unwrap();
+        for t in 0..40 {
+            st.append_node_event(NodeEvent { t, node: 0, features: vec![] }).unwrap();
+        }
+        drop(st);
+        let tighter = || SealPolicy::by_events(1000).with_node_event_cap(10);
+        let mut rec = recover(tighter(), DurabilityPolicy::new(&dir)).unwrap();
+        assert_eq!(rec.pending_node_events(), 40, "every acknowledged event reopens");
+        let err = rec
+            .append_node_event(NodeEvent { t: 100, node: 1, features: vec![] })
+            .unwrap_err();
+        assert!(matches!(err, TgmError::Backpressure(_)), "new appends obey the new cap: {err}");
+    }
+
+    /// Review regression: a durable seal that fails mid-protocol must
+    /// not leave the store acknowledging appends that memory and disk
+    /// no longer agree on — it poisons all further durable operations.
+    #[test]
+    fn failed_durable_seal_poisons_the_store() {
+        let dir = test_dir("poison");
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(2))
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        for t in 1..=5 {
+            st.append_edge(edge(t * 10, 0, 1)).unwrap(); // seals twice, one pending
+        }
+        assert_eq!(st.num_sealed_segments(), 2);
+        // Yank the directory out from under the store. The open WAL fd
+        // still accepts the next record (unlinked inode), so the append
+        // itself is acknowledged — but the triggered auto-seal's segment
+        // write fails, which must NOT retract the acknowledgment
+        // (`Ok(false)`: recorded and retained, just not sealed).
+        std::fs::remove_dir_all(&dir).unwrap();
+        assert!(!st.append_edge(edge(60, 1, 2)).unwrap());
+        // The failed seal poisoned the store: later durable operations
+        // are refused instead of acknowledged.
+        let err = st.append_edge(edge(70, 2, 3)).unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        let err = st.compact().unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        // But nothing already ingested vanished from reads: the failed
+        // seal's buffer was restored, so snapshots stay complete.
+        assert_eq!(st.pending_edges(), 2);
+        assert_eq!(st.snapshot().unwrap().edge_ts(), vec![10, 20, 30, 40, 50, 60]);
+    }
+
+    #[test]
+    fn recovered_generation_is_monotonic_over_acknowledged_appends() {
+        let dir = test_dir("generation");
+        let mut st = SegmentedStorage::new(8, SealPolicy::by_events(4))
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        let mut acked = Vec::new();
+        for e in stream(11) {
+            st.append_edge(e).unwrap();
+            acked.push(st.generation());
+        }
+        let last = *acked.last().unwrap();
+        drop(st);
+        let rec = recover(SealPolicy::by_events(4), DurabilityPolicy::new(&dir)).unwrap();
+        assert!(rec.generation() >= last, "{} < {last}", rec.generation());
+    }
+
+    #[test]
+    fn fixed_granularity_and_static_feats_survive_recovery() {
+        let dir = test_dir("meta");
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(2))
+            .with_granularity(TimeGranularity::Hour)
+            .with_static_feats(2, vec![0.25; 8])
+            .unwrap()
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        st.append_edge(edge(0, 0, 1)).unwrap();
+        st.append_edge(edge(3600, 1, 2)).unwrap();
+        drop(st);
+        let mut rec = recover(SealPolicy::by_events(2), DurabilityPolicy::new(&dir)).unwrap();
+        let snap = rec.snapshot().unwrap();
+        assert_eq!(snap.granularity(), TimeGranularity::Hour);
+        assert_eq!(snap.static_feat_dim(), 2);
+        assert_eq!(snap.static_feats(), &[0.25; 8]);
+    }
+
+    /// Review regression: metadata builders called *after*
+    /// `with_durability` used to leave the manifest claiming metadata
+    /// that was never written, making the directory unrecoverable.
+    #[test]
+    fn builder_calls_after_with_durability_stay_persisted() {
+        let dir = test_dir("late_builders");
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(2))
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap()
+            .with_granularity(TimeGranularity::Hour)
+            .with_static_feats(1, vec![0.5; 4])
+            .unwrap();
+        st.append_edge(edge(0, 0, 1)).unwrap();
+        st.append_edge(edge(3600, 1, 2)).unwrap(); // seals
+        drop(st);
+        let mut rec = recover(SealPolicy::by_events(2), DurabilityPolicy::new(&dir)).unwrap();
+        let snap = rec.snapshot().unwrap();
+        assert_eq!(snap.granularity(), TimeGranularity::Hour);
+        assert_eq!(snap.static_feat_dim(), 1);
+        assert_eq!(snap.static_feats(), &[0.5; 4]);
+    }
+
+    #[test]
+    fn synchronous_compaction_is_durable() {
+        let dir = test_dir("sync_compact");
+        let mut st = SegmentedStorage::new(8, SealPolicy::by_events(8))
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        for e in stream(40) {
+            st.append_edge(e).unwrap();
+        }
+        assert!(st.num_sealed_segments() >= 4);
+        let before = st.snapshot().unwrap().edge_ts();
+        assert!(st.compact().unwrap());
+        assert_eq!(st.num_sealed_segments(), 1);
+        drop(st);
+        let mut rec = recover(SealPolicy::by_events(8), DurabilityPolicy::new(&dir)).unwrap();
+        assert_eq!(rec.num_sealed_segments(), 1);
+        assert_eq!(rec.snapshot().unwrap().edge_ts(), before);
+        // Superseded files were deleted; only the compacted one remains.
+        let seg_files = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().starts_with("seg-"))
+            .count();
+        assert_eq!(seg_files, 1);
+    }
+
+    #[test]
+    fn store_exists_reports_the_manifest() {
+        let dir = test_dir("exists");
+        assert!(!store_exists(&dir));
+        let _st = SegmentedStorage::new(4, SealPolicy::default())
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        assert!(store_exists(&dir));
+    }
+}

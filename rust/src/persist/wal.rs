@@ -1,0 +1,510 @@
+//! Write-ahead log for the active segment.
+//!
+//! Every acknowledged append to a durable [`crate::graph::SegmentedStorage`]
+//! is written (and flushed to the OS — optionally fsync'd) to the WAL
+//! *before* the in-memory append happens, so an acknowledged event
+//! survives a process kill. Sealing moves the buffered events into an
+//! immutable segment file, after which the WAL is reset to a fresh
+//! *epoch* (see below) — the log only ever holds the active segment's
+//! tail, so it stays small.
+//!
+//! ## File layout
+//!
+//! A fixed header — magic `TGMWAL01`, `u32` format version, `u64`
+//! epoch — followed by self-delimiting records:
+//!
+//! ```text
+//! [kind u8][len u32][payload len bytes][fnv1a u64 over kind+payload]
+//! ```
+//!
+//! Kinds: `0` = edge event, `1` = node event. The header is written via
+//! tmp-file + rename, so it is never torn; records are appended in
+//! place.
+//!
+//! ## Torn vs corrupt tails
+//!
+//! [`read_wal`] distinguishes two failure shapes:
+//!
+//! * a **torn tail** — the file ends mid-record (the writer was killed
+//!   between acknowledging event *k* and finishing the write of event
+//!   *k+1*, or the tail never reached disk). The partial record was, by
+//!   construction, never acknowledged: it is dropped, and recovery
+//!   yields exactly the acknowledged prefix.
+//! * a **corrupt record** — a record is complete per its length field
+//!   but fails its checksum (bit rot, manual tampering). This is not a
+//!   crash artifact; it surfaces as a typed [`TgmError::Persist`] so the
+//!   operator sees the damage instead of silently losing suffix data.
+//!
+//! ## Epochs
+//!
+//! Seals write the segment file, then the manifest (which records
+//! `wal_epoch = E + 1`), then reset the WAL with header epoch `E + 1`.
+//! A crash between the manifest write and the WAL reset leaves a WAL at
+//! epoch `E` whose events are already inside the just-sealed segment
+//! file; recovery sees `header.epoch < manifest.wal_epoch` and discards
+//! the stale log instead of double-appending. Any other epoch mismatch
+//! is corruption and errors out.
+
+use crate::error::{Result, TgmError};
+use crate::graph::events::{EdgeEvent, Event, NodeEvent};
+use crate::persist::format::{
+    checksum, checksum_seeded, sync_parent_dir, tmp_sibling, Dec, FORMAT_VERSION,
+};
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+const WAL_MAGIC: &[u8; 8] = b"TGMWAL01";
+/// magic + version + epoch.
+const HEADER_LEN: usize = 8 + 4 + 8;
+
+const KIND_EDGE: u8 = 0;
+const KIND_NODE: u8 = 1;
+
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<Event> {
+    let mut d = Dec::new(payload, "wal record");
+    let ev = match kind {
+        KIND_EDGE => {
+            let t = d.i64()?;
+            let src = d.u32()?;
+            let dst = d.u32()?;
+            let n = d.u32()?;
+            let features = d.f32s(n as u64)?;
+            Event::Edge(EdgeEvent { t, src, dst, features })
+        }
+        KIND_NODE => {
+            let t = d.i64()?;
+            let node = d.u32()?;
+            let n = d.u32()?;
+            let features = d.f32s(n as u64)?;
+            Event::Node(NodeEvent { t, node, features })
+        }
+        other => {
+            return Err(TgmError::Persist(format!("wal record has unknown kind {other}")));
+        }
+    };
+    d.done()?;
+    Ok(ev)
+}
+
+/// Append-side handle over the active segment's log.
+pub struct WalWriter {
+    path: PathBuf,
+    file: File,
+    epoch: u64,
+    /// fsync after every record (power-loss safety) instead of relying
+    /// on the OS page cache (process-kill safety).
+    fsync: bool,
+    /// True while the log still lives at the tmp sibling (deferred
+    /// creation, see [`WalWriter::create_deferred`]): `path` itself is
+    /// untouched until [`WalWriter::commit`].
+    pending: bool,
+    /// Reusable record buffer: records encode in place, so the ingest
+    /// hot path makes zero steady-state allocations per append.
+    scratch: Vec<u8>,
+}
+
+impl WalWriter {
+    fn create_inner(path: &Path, epoch: u64, fsync: bool, deferred: bool) -> Result<WalWriter> {
+        let tmp = tmp_sibling(path);
+        let mut file = File::create(&tmp)?;
+        let mut header = Vec::with_capacity(HEADER_LEN);
+        header.extend_from_slice(WAL_MAGIC);
+        header.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        header.extend_from_slice(&epoch.to_le_bytes());
+        file.write_all(&header)?;
+        file.sync_data()?;
+        if !deferred {
+            std::fs::rename(&tmp, path)?;
+            sync_parent_dir(path)?;
+        }
+        // After the rename the inode is the one `file` already holds, so
+        // the handle keeps appending to the live log.
+        Ok(WalWriter {
+            path: path.to_path_buf(),
+            file,
+            epoch,
+            fsync,
+            pending: deferred,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Create a fresh WAL at `path` with the given epoch, atomically
+    /// replacing whatever was there (tmp header + rename), and return an
+    /// append handle positioned after the header.
+    pub fn create(path: &Path, epoch: u64, fsync: bool) -> Result<WalWriter> {
+        WalWriter::create_inner(path, epoch, fsync, false)
+    }
+
+    /// Create a fresh WAL whose bytes accumulate at the tmp sibling;
+    /// whatever currently lives at `path` is untouched until
+    /// [`WalWriter::commit`] renames the new log over it. Recovery
+    /// replays the surviving tail through this, so a second crash
+    /// mid-replay still finds the original (complete) log on disk.
+    pub fn create_deferred(path: &Path, epoch: u64, fsync: bool) -> Result<WalWriter> {
+        WalWriter::create_inner(path, epoch, fsync, true)
+    }
+
+    /// Publish a deferred log at its real path (no-op for committed
+    /// logs, including any log [`WalWriter::reset`] has re-created).
+    pub fn commit(&mut self) -> Result<()> {
+        if self.pending {
+            self.file.sync_data()?;
+            std::fs::rename(tmp_sibling(&self.path), &self.path)?;
+            sync_parent_dir(&self.path)?;
+            self.pending = false;
+        }
+        Ok(())
+    }
+
+    /// Re-open an existing WAL for appending (recovery replays records
+    /// through a fresh [`WalWriter::create`] instead, so this is only
+    /// used by tests).
+    #[cfg(test)]
+    pub fn open_append(path: &Path, epoch: u64, fsync: bool) -> Result<WalWriter> {
+        let file = std::fs::OpenOptions::new().append(true).open(path)?;
+        Ok(WalWriter {
+            path: path.to_path_buf(),
+            file,
+            epoch,
+            fsync,
+            pending: false,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Change the per-append fsync policy. Recovery replays into the
+    /// deferred log with fsync off — the original log remains the
+    /// durable copy until [`WalWriter::commit`] syncs once — and then
+    /// restores the store's policy for live appends.
+    pub fn set_fsync(&mut self, fsync: bool) {
+        self.fsync = fsync;
+    }
+
+    /// Current WAL epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Path of the live log.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Durably record one event. Returns only after the bytes reached
+    /// the OS (or the disk, with fsync on): an `Ok(())` here is what
+    /// makes the subsequent in-memory append *acknowledged*.
+    pub fn append(&mut self, ev: &Event) -> Result<()> {
+        match ev {
+            Event::Edge(e) => self.append_edge(e),
+            Event::Node(n) => self.append_node(n),
+        }
+    }
+
+    /// [`WalWriter::append`] for a borrowed edge event: encodes straight
+    /// into the reusable scratch buffer (no per-append allocation).
+    pub fn append_edge(&mut self, e: &EdgeEvent) -> Result<()> {
+        self.begin_record(KIND_EDGE);
+        self.scratch.extend_from_slice(&e.t.to_le_bytes());
+        self.scratch.extend_from_slice(&e.src.to_le_bytes());
+        self.scratch.extend_from_slice(&e.dst.to_le_bytes());
+        self.scratch.extend_from_slice(&(e.features.len() as u32).to_le_bytes());
+        for &f in &e.features {
+            self.scratch.extend_from_slice(&f.to_le_bytes());
+        }
+        self.finish_record(KIND_EDGE)
+    }
+
+    /// [`WalWriter::append`] for a borrowed node event.
+    pub fn append_node(&mut self, n: &NodeEvent) -> Result<()> {
+        self.begin_record(KIND_NODE);
+        self.scratch.extend_from_slice(&n.t.to_le_bytes());
+        self.scratch.extend_from_slice(&n.node.to_le_bytes());
+        self.scratch.extend_from_slice(&(n.features.len() as u32).to_le_bytes());
+        for &f in &n.features {
+            self.scratch.extend_from_slice(&f.to_le_bytes());
+        }
+        self.finish_record(KIND_NODE)
+    }
+
+    /// Start a record in the scratch buffer (length patched at finish).
+    fn begin_record(&mut self, kind: u8) {
+        self.scratch.clear();
+        self.scratch.push(kind);
+        self.scratch.extend_from_slice(&[0u8; 4]);
+    }
+
+    /// Patch the length prefix, append the checksum, and write the
+    /// whole record in one `write_all`.
+    fn finish_record(&mut self, kind: u8) -> Result<()> {
+        let len = (self.scratch.len() - 5) as u32;
+        self.scratch[1..5].copy_from_slice(&len.to_le_bytes());
+        let sum = checksum_seeded(checksum(&[kind]), &self.scratch[5..]);
+        self.scratch.extend_from_slice(&sum.to_le_bytes());
+        self.file.write_all(&self.scratch)?;
+        if self.fsync {
+            self.file.sync_data()?;
+        }
+        Ok(())
+    }
+
+    /// Truncate to a fresh log at `epoch` (called after a seal has made
+    /// the buffered events durable inside a segment file).
+    pub fn reset(&mut self, epoch: u64) -> Result<()> {
+        let fresh = WalWriter::create(&self.path, epoch, self.fsync)?;
+        *self = fresh;
+        Ok(())
+    }
+}
+
+/// Everything recovery learns from one WAL file.
+#[derive(Debug)]
+pub struct WalContents {
+    /// Epoch recorded in the header.
+    pub epoch: u64,
+    /// Complete, checksum-valid records in append order.
+    pub events: Vec<Event>,
+    /// True when a torn (incomplete) trailing record was dropped.
+    pub torn_tail: bool,
+    /// Bytes past the last complete record (0 when not torn). A genuine
+    /// crash can only tear the final in-flight record, so this is
+    /// normally smaller than one record; a much larger value suggests a
+    /// corrupted length prefix mid-file masquerading as a tear — the
+    /// one corruption shape a per-record checksum cannot separate from
+    /// truncation. Surfaced so operators can alert on it.
+    pub dropped_bytes: usize,
+}
+
+/// Upper bound on a single record's payload; a length prefix above this
+/// is treated as corruption (typed error) rather than a torn tail.
+const MAX_RECORD_PAYLOAD: usize = 1 << 30;
+
+/// Read a WAL file: the acknowledged prefix plus its epoch. A torn tail
+/// is dropped (see module docs); a corrupt complete record is a typed
+/// error.
+pub fn read_wal(path: &Path) -> Result<WalContents> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| TgmError::Persist(format!("cannot read wal {}: {e}", path.display())))?;
+    if bytes.len() < HEADER_LEN {
+        return Err(TgmError::Persist(format!(
+            "wal header torn ({} of {HEADER_LEN} bytes)",
+            bytes.len()
+        )));
+    }
+    if &bytes[..8] != WAL_MAGIC {
+        return Err(TgmError::Persist("wal has wrong magic (not a TGM wal)".into()));
+    }
+    let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+    if version != FORMAT_VERSION {
+        return Err(TgmError::Persist(format!(
+            "wal format version {version} unsupported (this build reads {FORMAT_VERSION})"
+        )));
+    }
+    let epoch = u64::from_le_bytes([
+        bytes[12], bytes[13], bytes[14], bytes[15], bytes[16], bytes[17], bytes[18], bytes[19],
+    ]);
+
+    let mut events = Vec::new();
+    let mut pos = HEADER_LEN;
+    let mut torn_tail = false;
+    while pos < bytes.len() {
+        // kind + len prefix.
+        if pos + 5 > bytes.len() {
+            torn_tail = true;
+            break;
+        }
+        let kind = bytes[pos];
+        let len = u32::from_le_bytes([
+            bytes[pos + 1],
+            bytes[pos + 2],
+            bytes[pos + 3],
+            bytes[pos + 4],
+        ]) as usize;
+        if len > MAX_RECORD_PAYLOAD {
+            return Err(TgmError::Persist(format!(
+                "wal record {} declares an absurd {len}-byte payload (corrupt length prefix)",
+                events.len()
+            )));
+        }
+        let body_end = pos + 5 + len;
+        let rec_end = body_end + 8;
+        if rec_end > bytes.len() {
+            torn_tail = true;
+            break;
+        }
+        let payload = &bytes[pos + 5..body_end];
+        let stored = u64::from_le_bytes([
+            bytes[body_end],
+            bytes[body_end + 1],
+            bytes[body_end + 2],
+            bytes[body_end + 3],
+            bytes[body_end + 4],
+            bytes[body_end + 5],
+            bytes[body_end + 6],
+            bytes[body_end + 7],
+        ]);
+        if checksum_seeded(checksum(&[kind]), payload) != stored {
+            return Err(TgmError::Persist(format!(
+                "wal record {} failed its checksum (corrupt log, not a torn tail)",
+                events.len()
+            )));
+        }
+        events.push(decode_payload(kind, payload)?);
+        pos = rec_end;
+    }
+    Ok(WalContents { epoch, events, torn_tail, dropped_bytes: bytes.len() - pos })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "tgm_wal_test_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn edge(t: i64) -> Event {
+        Event::Edge(EdgeEvent { t, src: 1, dst: 2, features: vec![t as f32, 0.5] })
+    }
+
+    fn node(t: i64) -> Event {
+        Event::Node(NodeEvent { t, node: 3, features: vec![-1.0] })
+    }
+
+    #[test]
+    fn wal_round_trip_and_reset() {
+        let path = dir().join("wal_round_trip.log");
+        let mut w = WalWriter::create(&path, 1, false).unwrap();
+        let evs = vec![edge(10), node(11), edge(12)];
+        for e in &evs {
+            w.append(e).unwrap();
+        }
+        let c = read_wal(&path).unwrap();
+        assert_eq!(c.epoch, 1);
+        assert!(!c.torn_tail);
+        assert_eq!(c.events, evs);
+        // Reset starts a fresh epoch with no records.
+        w.reset(2).unwrap();
+        let c = read_wal(&path).unwrap();
+        assert_eq!(c.epoch, 2);
+        assert!(c.events.is_empty());
+        // And the handle keeps appending into the fresh log.
+        w.append(&edge(20)).unwrap();
+        assert_eq!(read_wal(&path).unwrap().events, vec![edge(20)]);
+    }
+
+    #[test]
+    fn torn_tails_drop_only_the_unacknowledged_record() {
+        let path = dir().join("wal_torn.log");
+        let mut w = WalWriter::create(&path, 1, false).unwrap();
+        for t in 0..5 {
+            w.append(&edge(t)).unwrap();
+        }
+        drop(w);
+        let full = std::fs::read(&path).unwrap();
+        // Truncate at every byte offset: recovery must always yield the
+        // prefix of records fully contained in the surviving bytes.
+        let rec_len = (full.len() - HEADER_LEN) / 5;
+        for cut in HEADER_LEN..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let c = read_wal(&path).unwrap();
+            let complete = (cut - HEADER_LEN) / rec_len;
+            assert_eq!(c.events.len(), complete, "cut at {cut}");
+            assert_eq!(c.torn_tail, (cut - HEADER_LEN) % rec_len != 0, "cut at {cut}");
+            assert_eq!(c.dropped_bytes, (cut - HEADER_LEN) % rec_len, "cut at {cut}");
+            for (i, e) in c.events.iter().enumerate() {
+                assert_eq!(e, &edge(i as i64));
+            }
+        }
+        // Cutting into the header is a typed error.
+        std::fs::write(&path, &full[..HEADER_LEN - 1]).unwrap();
+        assert!(matches!(read_wal(&path).unwrap_err(), TgmError::Persist(_)));
+    }
+
+    /// A flipped high bit in a length prefix must read as corruption,
+    /// not as a torn tail silently swallowing every later record.
+    #[test]
+    fn absurd_length_prefix_is_corruption_not_a_tear() {
+        let path = dir().join("wal_absurd_len.log");
+        let mut w = WalWriter::create(&path, 1, false).unwrap();
+        for t in 0..4 {
+            w.append(&edge(t)).unwrap();
+        }
+        drop(w);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Record 1's length prefix starts one record past the header,
+        // one byte in (after the kind byte); set its high bytes.
+        let rec_len = (bytes.len() - HEADER_LEN) / 4;
+        let len_at = HEADER_LEN + rec_len + 1;
+        bytes[len_at + 3] = 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_wal(&path).unwrap_err();
+        assert!(matches!(err, TgmError::Persist(_)), "{err}");
+        assert!(err.to_string().contains("length"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_records_are_rejected_not_dropped() {
+        let path = dir().join("wal_corrupt.log");
+        let mut w = WalWriter::create(&path, 1, true).unwrap();
+        w.append(&edge(1)).unwrap();
+        w.append(&edge(2)).unwrap();
+        drop(w);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a payload byte of the first record (complete record, bad
+        // checksum): corruption, not a torn tail.
+        bytes[HEADER_LEN + 6] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_wal(&path).unwrap_err();
+        assert!(matches!(err, TgmError::Persist(_)), "{err}");
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn deferred_creation_leaves_the_original_log_until_commit() {
+        let path = dir().join("wal_deferred.log");
+        let mut original = WalWriter::create(&path, 4, false).unwrap();
+        original.append(&edge(1)).unwrap();
+        original.append(&edge(2)).unwrap();
+        drop(original);
+
+        // A deferred rewrite accumulates at the tmp sibling; the real
+        // log still reads the original contents (a crash here would
+        // re-run recovery against it).
+        let mut rewrite = WalWriter::create_deferred(&path, 4, false).unwrap();
+        rewrite.append(&edge(1)).unwrap();
+        let c = read_wal(&path).unwrap();
+        assert_eq!(c.events, vec![edge(1), edge(2)], "original must be untouched");
+
+        // Commit publishes the rewrite atomically; further appends land
+        // in the committed log. A second commit is a no-op.
+        rewrite.append(&edge(2)).unwrap();
+        rewrite.commit().unwrap();
+        rewrite.append(&edge(3)).unwrap();
+        rewrite.commit().unwrap();
+        let c = read_wal(&path).unwrap();
+        assert_eq!(c.events, vec![edge(1), edge(2), edge(3)]);
+        assert_eq!(c.epoch, 4);
+    }
+
+    #[test]
+    fn open_append_continues_an_existing_log() {
+        let path = dir().join("wal_append.log");
+        let mut w = WalWriter::create(&path, 3, false).unwrap();
+        w.append(&edge(1)).unwrap();
+        drop(w);
+        let mut w = WalWriter::open_append(&path, 3, false).unwrap();
+        w.append(&edge(2)).unwrap();
+        assert_eq!(w.epoch(), 3);
+        assert_eq!(w.path(), path.as_path());
+        let c = read_wal(&path).unwrap();
+        assert_eq!(c.events, vec![edge(1), edge(2)]);
+    }
+}

@@ -34,6 +34,7 @@ use crate::graph::{
 };
 use crate::hooks::manager::HookManager;
 use crate::loader::{BatchBy, PooledStream, ServingPool, StreamConfig};
+use crate::persist::{self, Compactor, CompactorConfig, DurabilityPolicy};
 use crate::util::TimeGranularity;
 use std::collections::HashMap;
 use std::fmt;
@@ -82,10 +83,23 @@ pub struct TenantConfig {
     /// When the tenant's active segment auto-seals.
     pub seal: SealPolicy,
     /// Compact once more than this many sealed segments pile up (bounds
-    /// per-request segment fan-out); `usize::MAX` disables compaction.
+    /// per-request segment fan-out); `usize::MAX` disables the
+    /// synchronous path (e.g. when a background
+    /// [`TenantHandle::attach_compactor`] owns compaction instead).
     pub compact_after: usize,
     /// Fixed native granularity; `None` infers from the stream.
     pub granularity: Option<TimeGranularity>,
+    /// Durable backing for the tenant's store (see [`crate::persist`]):
+    /// `None` keeps it in memory only. When the directory already holds
+    /// a store, [`TenantRouter::add_tenant`] **recovers** it and
+    /// publishes the recovered generation so serving resumes
+    /// immediately; `granularity` then defers to the persisted
+    /// metadata, while a `num_nodes` mismatch is rejected with a typed
+    /// [`TgmError::Serving`]. Directories must be exclusive to one
+    /// tenant — the router rejects a duplicate within itself (one
+    /// writer per directory across processes is the operator's
+    /// contract).
+    pub durable: Option<DurabilityPolicy>,
 }
 
 impl TenantConfig {
@@ -97,6 +111,7 @@ impl TenantConfig {
             seal: SealPolicy::default(),
             compact_after: 8,
             granularity: None,
+            durable: None,
         }
     }
 
@@ -117,29 +132,67 @@ impl TenantConfig {
         self.granularity = Some(g);
         self
     }
+
+    /// Persist the tenant's store under `policy.dir` (recovering an
+    /// existing store on restart).
+    pub fn with_durability(mut self, policy: DurabilityPolicy) -> TenantConfig {
+        self.durable = Some(policy);
+        self
+    }
 }
 
 /// One tenant: a locked writer plus the atomic publication cell. Shared
-/// as an `Arc` so ingestors and servers hold it across threads.
+/// as an `Arc` so ingestors and servers hold it across threads (the
+/// writer itself is `Arc`'d so a background [`Compactor`] can share it
+/// without going through the handle).
 pub struct TenantHandle {
     id: TenantId,
-    writer: Mutex<SegmentedStorage>,
+    writer: Arc<Mutex<SegmentedStorage>>,
     published: SnapshotCell,
     compact_after: usize,
 }
 
 impl TenantHandle {
-    fn build(id: TenantId, cfg: TenantConfig) -> TenantHandle {
-        let mut store = SegmentedStorage::new(cfg.num_nodes, cfg.seal);
-        if let Some(g) = cfg.granularity {
-            store = store.with_granularity(g);
-        }
-        TenantHandle {
+    fn build(id: TenantId, cfg: TenantConfig) -> Result<TenantHandle> {
+        let store = match &cfg.durable {
+            Some(policy) if persist::store_exists(&policy.dir) => {
+                let store = persist::recover(cfg.seal.clone(), policy.clone())?;
+                if store.num_nodes() != cfg.num_nodes {
+                    return Err(TgmError::Serving(format!(
+                        "tenant `{id}` recovered {} nodes from {} but was configured \
+                         with num_nodes={}",
+                        store.num_nodes(),
+                        policy.dir.display(),
+                        cfg.num_nodes
+                    )));
+                }
+                store
+            }
+            durable => {
+                let mut store = SegmentedStorage::new(cfg.num_nodes, cfg.seal.clone());
+                if let Some(g) = cfg.granularity {
+                    store = store.with_granularity(g);
+                }
+                if let Some(policy) = durable {
+                    store = store.with_durability(policy.clone())?;
+                }
+                store
+            }
+        };
+        let handle = TenantHandle {
             id,
-            writer: Mutex::new(store),
+            writer: Arc::new(Mutex::new(store)),
             published: SnapshotCell::new(),
             compact_after: cfg.compact_after,
+        };
+        // A recovered tenant serves its pre-crash data immediately.
+        {
+            let mut w = handle.writer();
+            if w.total_edges() > 0 {
+                w.publish_to(&handle.published)?;
+            }
         }
+        Ok(handle)
     }
 
     fn writer(&self) -> std::sync::MutexGuard<'_, SegmentedStorage> {
@@ -203,6 +256,22 @@ impl TenantHandle {
     pub fn num_sealed_segments(&self) -> usize {
         self.writer().num_sealed_segments()
     }
+
+    /// Directory backing this tenant's store when durability is on.
+    pub fn durable_dir(&self) -> Option<std::path::PathBuf> {
+        self.writer().durable_dir().map(|p| p.to_path_buf())
+    }
+
+    /// Spawn a background compactor for this tenant: sealed segments
+    /// merge off the write path, and each compacted generation is
+    /// published through the tenant's cell (readers pinned to older
+    /// generations keep them). Pair with
+    /// [`TenantConfig::with_compact_after`]`(usize::MAX)` to disable the
+    /// synchronous path. The compactor stops when the returned handle is
+    /// dropped.
+    pub fn attach_compactor(&self, cfg: CompactorConfig) -> Compactor {
+        Compactor::spawn(Arc::clone(&self.writer), self.published.clone(), cfg)
+    }
 }
 
 /// Routing layer: tenant ids to handles, plus serving entry points that
@@ -228,7 +297,27 @@ impl TenantRouter {
         if self.tenants.contains_key(&id) {
             return Err(TgmError::Serving(format!("tenant `{id}` already registered")));
         }
-        let handle = Arc::new(TenantHandle::build(id.clone(), cfg));
+        // Two writers over one directory would silently destroy each
+        // other's WAL; reject the misconfiguration at registration.
+        // Paths are canonicalized (when they exist) so non-canonical
+        // spellings of one directory cannot slip past the check.
+        if let Some(policy) = &cfg.durable {
+            let canonical = |p: &std::path::Path| {
+                std::fs::canonicalize(p).unwrap_or_else(|_| p.to_path_buf())
+            };
+            let new_dir = canonical(&policy.dir);
+            for handle in self.tenants.values() {
+                if handle.durable_dir().map(|d| canonical(&d)) == Some(new_dir.clone()) {
+                    return Err(TgmError::Serving(format!(
+                        "tenant `{}` already persists to {}; durable directories must \
+                         be exclusive to one tenant",
+                        handle.id(),
+                        policy.dir.display()
+                    )));
+                }
+            }
+        }
+        let handle = Arc::new(TenantHandle::build(id.clone(), cfg)?);
         self.tenants.insert(id, Arc::clone(&handle));
         Ok(handle)
     }
@@ -392,6 +481,56 @@ mod tests {
         let serial =
             DGDataLoader::new(data.full(), BatchBy::Events(100), &mut ms).unwrap().collect_all().unwrap();
         identical(&serial, &served);
+    }
+
+    #[test]
+    fn durable_tenant_recovers_and_serves_on_restart() {
+        let dir = std::env::temp_dir()
+            .join(format!("tgm_serving_durable_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let data = gen::by_name("wiki", 0.05, 17).unwrap();
+        let cfg = || {
+            TenantConfig::new(data.storage().num_nodes())
+                .with_seal(SealPolicy::by_events(150))
+                .with_granularity(data.storage().granularity())
+                .with_durability(DurabilityPolicy::new(&dir))
+        };
+
+        // First life: ingest + publish, then "crash" (drop everything).
+        {
+            let mut router = TenantRouter::new();
+            let id = TenantId::from("w");
+            router.add_tenant(id.clone(), cfg()).unwrap();
+            let mut source = ReplaySource::from_data(&data);
+            router.ingest(&id, source.next_chunk(usize::MAX)).unwrap();
+            router.publish(&id).unwrap();
+        }
+
+        // Second life: the tenant recovers from the directory and is
+        // already published — serving resumes without re-ingestion.
+        let mut router = TenantRouter::new();
+        let id = TenantId::from("w");
+        let handle = router.add_tenant(id.clone(), cfg()).unwrap();
+        assert!(handle.published_generation().is_some());
+        let snap = router.pin(&id).unwrap();
+        assert_eq!(snap.num_edges(), data.storage().num_edges());
+        assert_eq!(snap.edge_ts(), data.storage().edge_ts());
+        assert_eq!(snap.edge_feats(), data.storage().edge_feats());
+
+        // A second tenant over the same directory is rejected up front
+        // (two writers would destroy each other's WAL).
+        let err = router.add_tenant("w-dup", cfg()).unwrap_err();
+        assert!(err.to_string().contains("exclusive"), "{err}");
+
+        // A num_nodes mismatch on recovery is a typed serving error.
+        let mut router2 = TenantRouter::new();
+        let err = router2
+            .add_tenant(
+                "w2",
+                TenantConfig::new(3).with_durability(DurabilityPolicy::new(&dir)),
+            )
+            .unwrap_err();
+        assert!(matches!(err, TgmError::Serving(_)), "{err}");
     }
 
     #[test]
