@@ -8,16 +8,23 @@
 //! destructors, no flushes) after a configured number of acknowledged
 //! appends, mid-active-segment. The orchestrator then:
 //!
-//! 1. **recovers** the store from the directory and verifies it holds
-//!    *exactly the acknowledged prefix* (byte-compared against an
-//!    in-memory store fed the same events);
-//! 2. **resumes** ingestion of the remaining stream through the
-//!    recovered store while a background `Compactor` merges sealed
-//!    segment files off the write path, publishing generations through
-//!    a `SnapshotCell`;
+//! 1. **recovers** the store from the directory — sealed columns served
+//!    **zero-copy from an mmap** of the segment files
+//!    (`DurabilityPolicy::with_mmap`) — and verifies it holds *exactly
+//!    the acknowledged prefix* (byte-compared against an in-memory
+//!    store fed the same events);
+//! 2. **resumes** ingestion of the remaining stream — appends
+//!    group-committed per chunk — while a background `Compactor`
+//!    merges **tiered** runs of sealed segment files off the write
+//!    path, publishing generations through a `SnapshotCell`;
 //! 3. verifies the final snapshot is **byte-identical** to an
 //!    uninterrupted run, and that the prequential EdgeBank MRR over the
 //!    recovered store matches the uninterrupted run's exactly.
+//!
+//! The child's crash also demonstrates the directory lock's liveness
+//! story: the `LOCK` file the child leaves behind never blocks the
+//! orchestrator's recovery, because the kernel released the child's
+//! flock the instant it died.
 //!
 //! ```text
 //! cargo run --release --example durable_restart
@@ -153,10 +160,13 @@ fn main() -> tgm::Result<()> {
     assert!(!status.success(), "the child must die abnormally, got {status}");
     println!("child died as planned ({status})");
 
-    // 2. Recover: exactly the acknowledged prefix comes back.
+    // 2. Recover: exactly the acknowledged prefix comes back, the
+    //    sealed columns mmap-served, and subsequent appends
+    //    group-committed (the child's stale LOCK file does not block —
+    //    the kernel released its flock at death).
     let (mut recovered, report) = persist::recover_with_report(
         SealPolicy::by_events(SEAL_EVERY),
-        DurabilityPolicy::new(&dir),
+        DurabilityPolicy::new(&dir).with_mmap().with_group_commit(),
     )?;
     println!(
         "recovery report: {} sealed segments, {} WAL events replayed, torn tail: {} \
@@ -203,6 +213,8 @@ fn main() -> tgm::Result<()> {
         for ev in chunk {
             w.append(ev)?;
         }
+        // Group commit: one fsync acknowledges the whole chunk.
+        w.sync_wal()?;
         w.publish_to(&cell)?;
     }
     // Give the compactor a moment to drain the sealed backlog so the
@@ -235,8 +247,9 @@ fn main() -> tgm::Result<()> {
     let recovered_mrr = prequential_mrr(Arc::clone(&final_snap))?;
     println!(
         "MRR uninterrupted = {reference_mrr:.6}, recovered+resumed = {recovered_mrr:.6} \
-         ({rounds} background compaction rounds, {} segments at the end)",
-        final_snap.num_segments()
+         ({rounds} background compaction rounds, {} segments at the end, {} mmap-served)",
+        final_snap.num_segments(),
+        final_snap.num_mapped_segments()
     );
     assert_eq!(
         reference_mrr.to_bits(),

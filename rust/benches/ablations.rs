@@ -14,6 +14,14 @@
 //!    `from_events`, and batch-materialization latency on a multi-segment
 //!    snapshot vs the compacted single-segment baseline (the
 //!    logical-offset layer's read overhead; target < 15%).
+//! 7. Sharded multi-tenant serving: shared pool vs dedicated loaders.
+//! 8. Durable segment store: WAL overhead, recovery vs segment count,
+//!    tiered-vs-full compaction write amplification at 16/64 sealed
+//!    segments, and per-append fsync vs group-commit throughput.
+//!
+//! `TGM_ABLATION=streaming,sharded,persist` runs a comma-selected
+//! subset (CI's bench-regression job does exactly that); unset runs
+//! everything. Rows tagged `BENCH_METRIC` feed `scripts/bench_gate.py`.
 
 #[path = "common.rs"]
 mod common;
@@ -21,8 +29,8 @@ mod common;
 use tgm::graph::{
     discretize, GraphStorage, ReduceOp, SealPolicy, SegmentedStorage, StorageSnapshot,
 };
-use tgm::hooks::hook::{Hook, StatelessHook};
 use tgm::hooks::batch::attr;
+use tgm::hooks::hook::{Hook, StatelessHook};
 use tgm::hooks::{
     HookContext, MaterializedBatch, NaiveSampler, RecencySampler, RecipeRegistry, SamplerConfig,
     UniformSampler, RECIPE_TGB_LINK,
@@ -55,220 +63,269 @@ fn batches_of(storage: &StorageSnapshot, bsz: usize) -> Vec<MaterializedBatch> {
 
 fn main() {
     let scale = common::bench_scale();
-    let data = gen::by_name("lastfm", 0.5 * scale, 42).unwrap();
-    let storage = data.storage();
-    let batches = batches_of(storage, 200);
-    let edges = storage.num_edges();
-    println!("Ablations on lastfm surrogate ({edges} edges)");
+    let sampler_on = common::section_enabled("sampler");
+    let reduce_on = common::section_enabled("reduce");
+    let ts_index_on = common::section_enabled("ts_index");
+    let literal_on = common::section_enabled("literal");
+    let prefetch_on = common::section_enabled("prefetch");
+    let streaming_on = common::section_enabled("streaming");
+    let sharded_on = common::section_enabled("sharded");
+    let persist_on = common::section_enabled("persist");
 
-    // 1. Sampler microbench: full pass over all batches, K=10. The
-    //    recency sampler is stateful (Hook); uniform/naive are stateless
-    //    worker-phase hooks (StatelessHook).
-    let cfg = SamplerConfig {
-        num_neighbors: 10,
-        two_hop: None,
-        include_features: true,
-        seed_negatives: false,
-    };
-    let ctx = HookContext::new(storage, "bench");
-    let run_stateless = |hook: &dyn StatelessHook| {
-        for b in &batches {
-            let mut b = b.clone();
-            hook.apply(&mut b, &ctx).unwrap();
-        }
-    };
-    let mut recency = RecencySampler::new(cfg.clone());
-    let uniform = UniformSampler::new(cfg.clone(), 7);
-    let naive = NaiveSampler::new(cfg.clone());
-    let r = common::time_runs(1, 3, || {
-        recency.reset();
-        for b in &batches {
-            let mut b = b.clone();
-            Hook::apply(&mut recency, &mut b, &ctx).unwrap();
-        }
-    });
-    let u = common::time_runs(1, 3, || run_stateless(&uniform));
-    let nv = common::time_runs(1, 3, || run_stateless(&naive));
-    common::report("ablation.sampler", "recency (circular buffer)", &r);
-    common::report("ablation.sampler", "uniform (CSR)", &u);
-    common::report("ablation.sampler", "naive (DyGLib history copies)", &nv);
-    println!(
-        "ablation.sampler | recency speedup vs naive: {:.2}x ({:.2}M samples/s)",
-        common::mean(&nv) / common::mean(&r).max(1e-12),
-        (2.0 * edges as f64) / common::mean(&r).max(1e-12) / 1e6
-    );
+    if sampler_on || ts_index_on {
+        let data = gen::by_name("lastfm", 0.5 * scale, 42).unwrap();
+        let storage = data.storage();
+        let edges = storage.num_edges();
+        println!("Ablations on lastfm surrogate ({edges} edges)");
 
-    // 2. Reduction operators.
-    for op in [ReduceOp::Count, ReduceOp::Sum, ReduceOp::Mean, ReduceOp::Last, ReduceOp::Max] {
-        let wiki = gen::by_name("wiki", scale, 42).unwrap();
-        let secs = common::time_runs(1, 3, || {
-            discretize(wiki.storage(), TimeGranularity::Hour, op).unwrap()
-        });
-        common::report("ablation.reduce", &format!("{op:?}"), &secs);
+        // 1. Sampler microbench: full pass over all batches, K=10. The
+        //    recency sampler is stateful (Hook); uniform/naive are stateless
+        //    worker-phase hooks (StatelessHook).
+        if sampler_on {
+            let batches = batches_of(storage, 200);
+            let cfg = SamplerConfig {
+                num_neighbors: 10,
+                two_hop: None,
+                include_features: true,
+                seed_negatives: false,
+            };
+            let ctx = HookContext::new(storage, "bench");
+            let run_stateless = |hook: &dyn StatelessHook| {
+                for b in &batches {
+                    let mut b = b.clone();
+                    hook.apply(&mut b, &ctx).unwrap();
+                }
+            };
+            let mut recency = RecencySampler::new(cfg.clone());
+            let uniform = UniformSampler::new(cfg.clone(), 7);
+            let naive = NaiveSampler::new(cfg.clone());
+            let r = common::time_runs(1, 3, || {
+                recency.reset();
+                for b in &batches {
+                    let mut b = b.clone();
+                    Hook::apply(&mut recency, &mut b, &ctx).unwrap();
+                }
+            });
+            let u = common::time_runs(1, 3, || run_stateless(&uniform));
+            let nv = common::time_runs(1, 3, || run_stateless(&naive));
+            common::report("ablation.sampler", "recency (circular buffer)", &r);
+            common::report("ablation.sampler", "uniform (CSR)", &u);
+            common::report("ablation.sampler", "naive (DyGLib history copies)", &nv);
+            println!(
+                "ablation.sampler | recency speedup vs naive: {:.2}x ({:.2}M samples/s)",
+                common::mean(&nv) / common::mean(&r).max(1e-12),
+                (2.0 * edges as f64) / common::mean(&r).max(1e-12) / 1e6
+            );
+        }
+
+        // 3. Cached timestamp index vs raw binary search.
+        if ts_index_on {
+            let ts = storage.edge_ts();
+            let t_lo = storage.start_time();
+            let t_hi = storage.end_time();
+            let queries: Vec<(i64, i64)> = (0..10_000)
+                .map(|i| {
+                    let a = t_lo + (t_hi - t_lo) * (i % 100) / 100;
+                    (a, a + (t_hi - t_lo) / 50)
+                })
+                .collect();
+            let idx_secs = common::time_runs(1, 5, || {
+                let mut acc = 0usize;
+                for &(a, b) in &queries {
+                    acc += storage.edge_range(a, b).len();
+                }
+                acc
+            });
+            let raw_secs = common::time_runs(1, 5, || {
+                let mut acc = 0usize;
+                for &(a, b) in &queries {
+                    let lo = ts.partition_point(|&t| t < a);
+                    let hi = ts.partition_point(|&t| t < b);
+                    acc += hi - lo;
+                }
+                acc
+            });
+            common::report("ablation.ts_index", "cached unique-ts index", &idx_secs);
+            common::report("ablation.ts_index", "raw event binary search", &raw_secs);
+        }
     }
 
-    // 3. Cached timestamp index vs raw binary search.
-    let ts = storage.edge_ts();
-    let t_lo = storage.start_time();
-    let t_hi = storage.end_time();
-    let queries: Vec<(i64, i64)> = (0..10_000)
-        .map(|i| {
-            let a = t_lo + (t_hi - t_lo) * (i % 100) / 100;
-            (a, a + (t_hi - t_lo) / 50)
-        })
-        .collect();
-    let idx_secs = common::time_runs(1, 5, || {
-        let mut acc = 0usize;
-        for &(a, b) in &queries {
-            acc += storage.edge_range(a, b).len();
+    // 2. Reduction operators.
+    if reduce_on {
+        for op in [ReduceOp::Count, ReduceOp::Sum, ReduceOp::Mean, ReduceOp::Last, ReduceOp::Max]
+        {
+            let wiki = gen::by_name("wiki", scale, 42).unwrap();
+            let secs = common::time_runs(1, 3, || {
+                discretize(wiki.storage(), TimeGranularity::Hour, op).unwrap()
+            });
+            common::report("ablation.reduce", &format!("{op:?}"), &secs);
         }
-        acc
-    });
-    let raw_secs = common::time_runs(1, 5, || {
-        let mut acc = 0usize;
-        for &(a, b) in &queries {
-            let lo = ts.partition_point(|&t| t < a);
-            let hi = ts.partition_point(|&t| t < b);
-            acc += hi - lo;
-        }
-        acc
-    });
-    common::report("ablation.ts_index", "cached unique-ts index", &idx_secs);
-    common::report("ablation.ts_index", "raw event binary search", &raw_secs);
+    }
 
     // 4. Device-boundary packing (§Perf): bulk byte view vs the
     //    per-element `to_le_bytes` collect the runtime originally used.
-    let payload = vec![1.5f32; 2200 * 10 * 16]; // a cand_nbr_feats batch
-    let t = tgm::util::Tensor::f32(payload.clone(), &[2200, 10, 16]).unwrap();
-    let bulk = common::time_runs(2, 10, || {
-        tgm::runtime::literal::tensor_to_literal(&t).unwrap()
-    });
-    let perelem = common::time_runs(2, 10, || {
-        // The runtime's original path: per-element byte collect, then
-        // the same literal constructor.
-        let bytes: Vec<u8> = payload.iter().flat_map(|v| v.to_le_bytes()).collect();
-        xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32,
-            &[2200, 10, 16],
-            &bytes,
-        )
-        .unwrap()
-    });
-    common::report("ablation.literal", "bulk byte view (current)", &bulk);
-    common::report("ablation.literal", "per-element to_le_bytes (old)", &perelem);
-    println!(
-        "ablation.literal | speedup {:.2}x on a 1.4MB batch tensor",
-        common::mean(&perelem) / common::mean(&bulk).max(1e-12)
-    );
+    if literal_on {
+        let payload = vec![1.5f32; 2200 * 10 * 16]; // a cand_nbr_feats batch
+        let t = tgm::util::Tensor::f32(payload.clone(), &[2200, 10, 16]).unwrap();
+        let bulk = common::time_runs(2, 10, || {
+            tgm::runtime::literal::tensor_to_literal(&t).unwrap()
+        });
+        let perelem = common::time_runs(2, 10, || {
+            // The runtime's original path: per-element byte collect, then
+            // the same literal constructor.
+            let bytes: Vec<u8> = payload.iter().flat_map(|v| v.to_le_bytes()).collect();
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &[2200, 10, 16],
+                &bytes,
+            )
+            .unwrap()
+        });
+        common::report("ablation.literal", "bulk byte view (current)", &bulk);
+        common::report("ablation.literal", "per-element to_le_bytes (old)", &perelem);
+        println!(
+            "ablation.literal | speedup {:.2}x on a 1.4MB batch tensor",
+            common::mean(&perelem) / common::mean(&bulk).max(1e-12)
+        );
+    }
 
     // 5. Serial vs prefetch batch materialization on the wiki surrogate
     //    (tgb_link "val" recipe: eval negatives -> dedup -> unique
     //    lookup, fully stateless, batch size 200). The consumer does no
     //    model work here, so this measures raw materialization
     //    throughput; the speedup target is >= 1.5x at 4 workers.
-    let wiki = gen::by_name("wiki", scale, 42).unwrap();
-    let view = wiki.full();
-    let serial = common::time_runs(1, 3, || {
-        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
-        m.activate("val").unwrap();
-        let mut l = DGDataLoader::new(view.clone(), BatchBy::Events(200), &mut m).unwrap();
-        l.collect_all().unwrap().len()
-    });
-    common::report("ablation.prefetch", "serial loader (baseline)", &serial);
-    for workers in [1usize, 2, 4] {
-        let secs = common::time_runs(1, 3, || {
+    if prefetch_on {
+        let wiki = gen::by_name("wiki", scale, 42).unwrap();
+        let view = wiki.full();
+        let serial = common::time_runs(1, 3, || {
             let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
             m.activate("val").unwrap();
-            let mut l = PrefetchLoader::new(
-                view.clone(),
-                BatchBy::Events(200),
-                &mut m,
-                PrefetchConfig::default().with_workers(workers).with_queue_depth(2 * workers),
-            )
-            .unwrap();
+            let mut l = DGDataLoader::new(view.clone(), BatchBy::Events(200), &mut m).unwrap();
             l.collect_all().unwrap().len()
         });
-        common::report("ablation.prefetch", &format!("prefetch workers={workers}"), &secs);
-        println!(
-            "ablation.prefetch | speedup vs serial at {workers} workers: {:.2}x",
-            common::mean(&serial) / common::mean(&secs).max(1e-12)
-        );
+        common::report("ablation.prefetch", "serial loader (baseline)", &serial);
+        for workers in [1usize, 2, 4] {
+            let secs = common::time_runs(1, 3, || {
+                let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+                m.activate("val").unwrap();
+                let mut l = PrefetchLoader::new(
+                    view.clone(),
+                    BatchBy::Events(200),
+                    &mut m,
+                    PrefetchConfig::default()
+                        .with_workers(workers)
+                        .with_queue_depth(2 * workers),
+                )
+                .unwrap();
+                l.collect_all().unwrap().len()
+            });
+            common::report("ablation.prefetch", &format!("prefetch workers={workers}"), &secs);
+            println!(
+                "ablation.prefetch | speedup vs serial at {workers} workers: {:.2}x",
+                common::mean(&serial) / common::mean(&secs).max(1e-12)
+            );
+        }
     }
 
-    // 6. Streaming ingestion. (a) ingestion throughput: append+seal+
-    //    snapshot through the segmented store vs a one-shot from_events
-    //    build of the same stream; (b) read overhead: materializing every
-    //    planned batch from a 4-segment snapshot vs the compacted
-    //    1-segment snapshot (acceptance target: segmented overhead < 15%).
-    let wiki = gen::by_name("wiki", scale, 42).unwrap();
-    let snap = wiki.storage();
-    let events: Vec<tgm::graph::EdgeEvent> = (0..snap.num_edges())
-        .map(|i| tgm::graph::EdgeEvent {
-            t: snap.edge_ts_at(i),
-            src: snap.edge_src_at(i),
-            dst: snap.edge_dst_at(i),
-            features: snap.edge_feat_row(i).to_vec(),
-        })
-        .collect();
-    let n_events = events.len();
-    let seal_every = (n_events / 4).max(1);
+    // Shared stream for sections 6 and 8: the wiki surrogate replayed
+    // as an append stream.
+    if streaming_on || persist_on {
+        let wiki = gen::by_name("wiki", scale, 42).unwrap();
+        let snap = wiki.storage();
+        let events: Vec<tgm::graph::EdgeEvent> = (0..snap.num_edges())
+            .map(|i| tgm::graph::EdgeEvent {
+                t: snap.edge_ts_at(i),
+                src: snap.edge_src_at(i),
+                dst: snap.edge_dst_at(i),
+                features: snap.edge_feat_row(i).to_vec(),
+            })
+            .collect();
+        let n_events = events.len();
+        let seal_every = (n_events / 4).max(1);
 
-    let oneshot = common::time_runs(1, 3, || {
-        GraphStorage::from_events(events.clone(), vec![], snap.num_nodes(), None, None).unwrap()
-    });
-    let streamed = common::time_runs(1, 3, || {
-        let mut st = SegmentedStorage::new(
-            snap.num_nodes(),
-            SealPolicy::by_events(seal_every),
-        );
-        for e in &events {
-            st.append_edge(e.clone()).unwrap();
+        // 6. Streaming ingestion. (a) ingestion throughput: append+seal+
+        //    snapshot through the segmented store vs a one-shot from_events
+        //    build of the same stream; (b) read overhead: materializing every
+        //    planned batch from a 4-segment snapshot vs the compacted
+        //    1-segment snapshot (acceptance target: segmented overhead < 15%).
+        if streaming_on {
+            let oneshot = common::time_runs(1, 3, || {
+                GraphStorage::from_events(events.clone(), vec![], snap.num_nodes(), None, None)
+                    .unwrap()
+            });
+            let streamed = common::time_runs(1, 3, || {
+                let mut st = SegmentedStorage::new(
+                    snap.num_nodes(),
+                    SealPolicy::by_events(seal_every),
+                );
+                for e in &events {
+                    st.append_edge(e.clone()).unwrap();
+                }
+                st.seal().unwrap();
+                st.snapshot().unwrap().num_edges()
+            });
+            common::report("ablation.streaming", "one-shot from_events", &oneshot);
+            common::report("ablation.streaming", "append+seal+snapshot (4 segments)", &streamed);
+            let streamed_eps = n_events as f64 / common::mean(&streamed).max(1e-12);
+            println!(
+                "ablation.streaming | ingestion events/s streamed: {:.2}M (one-shot {:.2}M)",
+                streamed_eps / 1e6,
+                n_events as f64 / common::mean(&oneshot).max(1e-12) / 1e6
+            );
+            common::metric("streaming.ingest_events_per_s", streamed_eps);
+            common::metric(
+                "streaming.oneshot_events_per_s",
+                n_events as f64 / common::mean(&oneshot).max(1e-12),
+            );
+
+            let mut segmented_store = SegmentedStorage::new(
+                snap.num_nodes(),
+                SealPolicy::by_events(seal_every),
+            );
+            for e in &events {
+                segmented_store.append_edge(e.clone()).unwrap();
+            }
+            segmented_store.seal().unwrap();
+            let segmented = segmented_store.snapshot().unwrap();
+            segmented_store.compact().unwrap();
+            let compacted = segmented_store.snapshot().unwrap();
+            assert!(segmented.num_segments() >= 4 && compacted.num_segments() == 1);
+
+            let materialize_all = |s: &std::sync::Arc<StorageSnapshot>| {
+                let view = tgm::graph::DGraph::full(std::sync::Arc::clone(s));
+                let plans = plan_batches(&view, BatchBy::Events(200), true, usize::MAX).unwrap();
+                let mut edges = 0usize;
+                for p in &plans {
+                    edges += tgm::loader::materialize_window(s, p).unwrap().num_edges();
+                }
+                edges
+            };
+            let seg_secs = common::time_runs(1, 5, || materialize_all(&segmented));
+            let comp_secs = common::time_runs(1, 5, || materialize_all(&compacted));
+            common::report(
+                "ablation.streaming",
+                &format!("materialize over {} segments", segmented.num_segments()),
+                &seg_secs,
+            );
+            common::report(
+                "ablation.streaming",
+                "materialize over compacted (1 segment)",
+                &comp_secs,
+            );
+            let overhead_pct =
+                (common::mean(&seg_secs) / common::mean(&comp_secs).max(1e-12) - 1.0) * 100.0;
+            println!(
+                "ablation.streaming | segmented-read overhead vs compacted: {overhead_pct:.1}% \
+                 (target < 15%)"
+            );
+            common::metric("streaming.read_overhead_pct", overhead_pct);
         }
-        st.seal().unwrap();
-        st.snapshot().unwrap().num_edges()
-    });
-    common::report("ablation.streaming", "one-shot from_events", &oneshot);
-    common::report("ablation.streaming", "append+seal+snapshot (4 segments)", &streamed);
-    println!(
-        "ablation.streaming | ingestion events/s streamed: {:.2}M (one-shot {:.2}M)",
-        n_events as f64 / common::mean(&streamed).max(1e-12) / 1e6,
-        n_events as f64 / common::mean(&oneshot).max(1e-12) / 1e6
-    );
 
-    let mut segmented_store = SegmentedStorage::new(
-        snap.num_nodes(),
-        SealPolicy::by_events(seal_every),
-    );
-    for e in &events {
-        segmented_store.append_edge(e.clone()).unwrap();
+        // 8. Durable segment store (`ablation.persist`).
+        if persist_on {
+            persist_section(snap.num_nodes(), &events, seal_every);
+        }
     }
-    segmented_store.seal().unwrap();
-    let segmented = segmented_store.snapshot().unwrap();
-    segmented_store.compact().unwrap();
-    let compacted = segmented_store.snapshot().unwrap();
-    assert!(segmented.num_segments() >= 4 && compacted.num_segments() == 1);
-
-    let materialize_all = |s: &std::sync::Arc<StorageSnapshot>| {
-        let view = tgm::graph::DGraph::full(std::sync::Arc::clone(s));
-        let plans = plan_batches(&view, BatchBy::Events(200), true, usize::MAX).unwrap();
-        let mut edges = 0usize;
-        for p in &plans {
-            edges += tgm::loader::materialize_window(s, p).unwrap().num_edges();
-        }
-        edges
-    };
-    let seg_secs = common::time_runs(1, 5, || materialize_all(&segmented));
-    let comp_secs = common::time_runs(1, 5, || materialize_all(&compacted));
-    common::report(
-        "ablation.streaming",
-        &format!("materialize over {} segments", segmented.num_segments()),
-        &seg_secs,
-    );
-    common::report("ablation.streaming", "materialize over compacted (1 segment)", &comp_secs);
-    println!(
-        "ablation.streaming | segmented-read overhead vs compacted: {:.1}% (target < 15%)",
-        (common::mean(&seg_secs) / common::mean(&comp_secs).max(1e-12) - 1.0) * 100.0
-    );
 
     // 7. Sharded multi-tenant serving: aggregate throughput of T tenants
     //    each running a full "val" pass concurrently, (a) multiplexed
@@ -276,118 +333,127 @@ fn main() {
     //    (b) per-tenant dedicated PrefetchLoaders splitting the same
     //    budget. Acceptance target: the shared pool stays within 20% of
     //    the dedicated loaders at 4 tenants.
-    let budget = 4usize;
-    let (warmup, reps) = (1usize, 3usize);
-    let tenant_data: Vec<tgm::graph::DGData> =
-        (0..8u64).map(|i| gen::by_name("wiki", 0.25 * scale, 200 + i).unwrap()).collect();
-    for t in [1usize, 2, 4, 8] {
-        let data = &tenant_data[..t];
-        let shared_batches = std::sync::atomic::AtomicUsize::new(0);
-        let shared = common::time_runs(warmup, reps, || {
-            let pool = tgm::loader::ServingPool::new(budget);
-            std::thread::scope(|scope| {
-                for d in data {
-                    let pool = &pool;
-                    let shared_batches = &shared_batches;
-                    scope.spawn(move || {
-                        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
-                        m.activate("val").unwrap();
-                        let mut s = pool
-                            .stream(
+    if sharded_on {
+        let budget = 4usize;
+        let (warmup, reps) = (1usize, 3usize);
+        let tenant_data: Vec<tgm::graph::DGData> =
+            (0..8u64).map(|i| gen::by_name("wiki", 0.25 * scale, 200 + i).unwrap()).collect();
+        for t in [1usize, 2, 4, 8] {
+            let data = &tenant_data[..t];
+            let shared_batches = std::sync::atomic::AtomicUsize::new(0);
+            let shared = common::time_runs(warmup, reps, || {
+                let pool = tgm::loader::ServingPool::new(budget);
+                std::thread::scope(|scope| {
+                    for d in data {
+                        let pool = &pool;
+                        let shared_batches = &shared_batches;
+                        scope.spawn(move || {
+                            let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+                            m.activate("val").unwrap();
+                            let mut s = pool
+                                .stream(
+                                    d.full(),
+                                    BatchBy::Events(200),
+                                    &mut m,
+                                    tgm::loader::StreamConfig::default().with_queue_depth(4),
+                                )
+                                .unwrap();
+                            let mut batches = 0usize;
+                            while let Some(b) = s.next() {
+                                b.unwrap();
+                                batches += 1;
+                            }
+                            shared_batches
+                                .fetch_add(batches, std::sync::atomic::Ordering::Relaxed);
+                        });
+                    }
+                });
+            });
+            // A worker cannot be split below 1 per loader, so past
+            // `budget` tenants the dedicated side necessarily runs MORE
+            // total threads than the shared pool — labelled explicitly so
+            // the over-budget rows aren't misread as shared-pool overhead.
+            // The 4-tenant acceptance row is exactly budget-fair (4 = 4x1).
+            let dedicated_workers = (budget / t).max(1);
+            let dedicated_total = dedicated_workers * t;
+            let dedicated_batches = std::sync::atomic::AtomicUsize::new(0);
+            let dedicated = common::time_runs(warmup, reps, || {
+                std::thread::scope(|scope| {
+                    for d in data {
+                        let dedicated_batches = &dedicated_batches;
+                        scope.spawn(move || {
+                            let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+                            m.activate("val").unwrap();
+                            let mut l = PrefetchLoader::new(
                                 d.full(),
                                 BatchBy::Events(200),
                                 &mut m,
-                                tgm::loader::StreamConfig::default().with_queue_depth(4),
+                                PrefetchConfig::default()
+                                    .with_workers(dedicated_workers)
+                                    .with_queue_depth(4),
                             )
                             .unwrap();
-                        let mut batches = 0usize;
-                        while let Some(b) = s.next() {
-                            b.unwrap();
-                            batches += 1;
-                        }
-                        shared_batches
-                            .fetch_add(batches, std::sync::atomic::Ordering::Relaxed);
-                    });
-                }
+                            let mut batches = 0usize;
+                            while let Some(b) = l.next() {
+                                b.unwrap();
+                                batches += 1;
+                            }
+                            dedicated_batches
+                                .fetch_add(batches, std::sync::atomic::Ordering::Relaxed);
+                        });
+                    }
+                });
             });
-        });
-        // A worker cannot be split below 1 per loader, so past
-        // `budget` tenants the dedicated side necessarily runs MORE
-        // total threads than the shared pool — labelled explicitly so
-        // the over-budget rows aren't misread as shared-pool overhead.
-        // The 4-tenant acceptance row is exactly budget-fair (4 = 4x1).
-        let dedicated_workers = (budget / t).max(1);
-        let dedicated_total = dedicated_workers * t;
-        let dedicated_batches = std::sync::atomic::AtomicUsize::new(0);
-        let dedicated = common::time_runs(warmup, reps, || {
-            std::thread::scope(|scope| {
-                for d in data {
-                    let dedicated_batches = &dedicated_batches;
-                    scope.spawn(move || {
-                        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
-                        m.activate("val").unwrap();
-                        let mut l = PrefetchLoader::new(
-                            d.full(),
-                            BatchBy::Events(200),
-                            &mut m,
-                            PrefetchConfig::default()
-                                .with_workers(dedicated_workers)
-                                .with_queue_depth(4),
-                        )
-                        .unwrap();
-                        let mut batches = 0usize;
-                        while let Some(b) = l.next() {
-                            b.unwrap();
-                            batches += 1;
-                        }
-                        dedicated_batches
-                            .fetch_add(batches, std::sync::atomic::Ordering::Relaxed);
-                    });
-                }
-            });
-        });
-        // Per timed run, both sides must have served the same batches.
-        let runs = warmup + reps;
-        let per_run = shared_batches.load(std::sync::atomic::Ordering::Relaxed) / runs;
-        assert_eq!(
-            per_run,
-            dedicated_batches.load(std::sync::atomic::Ordering::Relaxed) / runs,
-            "shared and dedicated passes must serve identical batch counts"
-        );
-        common::report(
-            "ablation.sharded",
-            &format!("{t} tenants, shared pool ({budget} workers)"),
-            &shared,
-        );
-        common::report(
-            "ablation.sharded",
-            &format!(
-                "{t} tenants, dedicated loaders ({dedicated_workers}w x {t} = {dedicated_total}w total)"
-            ),
-            &dedicated,
-        );
-        let over_budget =
-            if dedicated_total > budget { " [dedicated over-budget]" } else { "" };
-        println!(
-            "ablation.sharded | {t} tenants: shared {:.0} batches/s vs dedicated {:.0} \
-             batches/s (shared/dedicated = {:.2}x, target >= 0.8x at 4 tenants){over_budget}",
-            per_run as f64 / common::mean(&shared).max(1e-12),
-            per_run as f64 / common::mean(&dedicated).max(1e-12),
-            common::mean(&dedicated) / common::mean(&shared).max(1e-12)
-        );
+            // Per timed run, both sides must have served the same batches.
+            let runs = warmup + reps;
+            let per_run = shared_batches.load(std::sync::atomic::Ordering::Relaxed) / runs;
+            assert_eq!(
+                per_run,
+                dedicated_batches.load(std::sync::atomic::Ordering::Relaxed) / runs,
+                "shared and dedicated passes must serve identical batch counts"
+            );
+            common::report(
+                "ablation.sharded",
+                &format!("{t} tenants, shared pool ({budget} workers)"),
+                &shared,
+            );
+            common::report(
+                "ablation.sharded",
+                &format!(
+                    "{t} tenants, dedicated loaders ({dedicated_workers}w x {t} = {dedicated_total}w total)"
+                ),
+                &dedicated,
+            );
+            let over_budget =
+                if dedicated_total > budget { " [dedicated over-budget]" } else { "" };
+            println!(
+                "ablation.sharded | {t} tenants: shared {:.0} batches/s vs dedicated {:.0} \
+                 batches/s (shared/dedicated = {:.2}x, target >= 0.8x at 4 tenants){over_budget}",
+                per_run as f64 / common::mean(&shared).max(1e-12),
+                per_run as f64 / common::mean(&dedicated).max(1e-12),
+                common::mean(&dedicated) / common::mean(&shared).max(1e-12)
+            );
+            common::metric(
+                &format!("sharded.shared_batches_per_s_{t}t"),
+                per_run as f64 / common::mean(&shared).max(1e-12),
+            );
+        }
     }
+}
 
-    // 8. Durable segment store (`ablation.persist`): (a) ingest
-    //    throughput with the WAL on (flush-only appends; fsync mode
-    //    trades throughput for power-loss safety) vs the in-memory
-    //    baseline, same seal cadence; (b) recovery time vs sealed-
-    //    segment count at 1/4/16 segments over the same event total.
+/// Section 8: the durable segment store. (a) WAL-on vs in-memory ingest;
+/// (b) recovery time vs sealed-segment count; (c) tiered vs full
+/// compaction write amplification under sustained ingest at 16/64
+/// sealed segments; (d) per-append fsync vs group-commit throughput.
+fn persist_section(num_nodes: usize, events: &[tgm::graph::EdgeEvent], seal_every: usize) {
+    let n_events = events.len();
     let bench_dir =
         std::env::temp_dir().join(format!("tgm_ablation_persist_{}", std::process::id()));
+
+    // (a) WAL overhead on the ingest path.
     let mem_ingest = common::time_runs(1, 3, || {
-        let mut st =
-            SegmentedStorage::new(snap.num_nodes(), SealPolicy::by_events(seal_every));
-        for e in &events {
+        let mut st = SegmentedStorage::new(num_nodes, SealPolicy::by_events(seal_every));
+        for e in events {
             st.append_edge(e.clone()).unwrap();
         }
         st.seal().unwrap();
@@ -399,10 +465,10 @@ fn main() {
     let wal_run = std::sync::atomic::AtomicUsize::new(0);
     let wal_ingest = common::time_runs(1, 3, || {
         let run = wal_run.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let mut st = SegmentedStorage::new(snap.num_nodes(), SealPolicy::by_events(seal_every))
+        let mut st = SegmentedStorage::new(num_nodes, SealPolicy::by_events(seal_every))
             .with_durability(DurabilityPolicy::new(bench_dir.join(format!("ingest-{run}"))))
             .unwrap();
-        for e in &events {
+        for e in events {
             st.append_edge(e.clone()).unwrap();
         }
         st.seal().unwrap();
@@ -410,21 +476,28 @@ fn main() {
     });
     common::report("ablation.persist", "in-memory ingest (baseline)", &mem_ingest);
     common::report("ablation.persist", "durable ingest (WAL on)", &wal_ingest);
+    let durable_eps = n_events as f64 / common::mean(&wal_ingest).max(1e-12);
     println!(
         "ablation.persist | ingest events/s: durable {:.2}M vs in-memory {:.2}M \
          ({:.1}% WAL overhead)",
-        n_events as f64 / common::mean(&wal_ingest).max(1e-12) / 1e6,
+        durable_eps / 1e6,
         n_events as f64 / common::mean(&mem_ingest).max(1e-12) / 1e6,
         (common::mean(&wal_ingest) / common::mean(&mem_ingest).max(1e-12) - 1.0) * 100.0
     );
+    common::metric("persist.durable_ingest_events_per_s", durable_eps);
+    common::metric(
+        "persist.mem_ingest_events_per_s",
+        n_events as f64 / common::mean(&mem_ingest).max(1e-12),
+    );
 
+    // (b) Recovery time vs sealed-segment count (heap and mmap backing).
     for target_segs in [1usize, 4, 16] {
         let _ = std::fs::remove_dir_all(&bench_dir);
         let per_seg = n_events.div_ceil(target_segs).max(1);
-        let mut st = SegmentedStorage::new(snap.num_nodes(), SealPolicy::by_events(per_seg))
+        let mut st = SegmentedStorage::new(num_nodes, SealPolicy::by_events(per_seg))
             .with_durability(DurabilityPolicy::new(&bench_dir))
             .unwrap();
-        for e in &events {
+        for e in events {
             st.append_edge(e.clone()).unwrap();
         }
         st.seal().unwrap();
@@ -445,11 +518,145 @@ fn main() {
             &format!("recover ({actual} sealed segments, {n_events} events)"),
             &rec,
         );
+        let rec_mmap = common::time_runs(1, 3, || {
+            tgm::persist::recover(
+                SealPolicy::by_events(per_seg),
+                DurabilityPolicy::new(&bench_dir).with_mmap(),
+            )
+            .unwrap()
+            .total_edges()
+        });
+        common::report(
+            "ablation.persist",
+            &format!("recover mmap-backed ({actual} sealed segments)"),
+            &rec_mmap,
+        );
         println!(
-            "ablation.persist | recovery at {actual} segments: {:.1}ms ({:.2}M events/s)",
+            "ablation.persist | recovery at {actual} segments: heap {:.1}ms, mmap {:.1}ms \
+             ({:.2}M events/s heap)",
             common::mean(&rec) * 1e3,
+            common::mean(&rec_mmap) * 1e3,
             n_events as f64 / common::mean(&rec).max(1e-12) / 1e6
         );
+        common::metric(
+            &format!("persist.recover_events_per_s_{target_segs}segs"),
+            n_events as f64 / common::mean(&rec).max(1e-12),
+        );
+        common::metric(
+            &format!("persist.recover_mmap_events_per_s_{target_segs}segs"),
+            n_events as f64 / common::mean(&rec_mmap).max(1e-12),
+        );
     }
+
+    // (c) Write amplification under sustained ingest: full compaction
+    //     (merge the whole stack whenever > 4 segments pile up) vs
+    //     tiered (fanout 4, driven to its fixpoint after every seal).
+    //     amp = compaction bytes written / logical data bytes; the
+    //     in-memory byte accounting equals what a durable store would
+    //     write to disk for the same rounds.
+    for target_segs in [16usize, 64] {
+        let per_seg = n_events.div_ceil(target_segs).max(1);
+        let data_bytes = {
+            let mut st = SegmentedStorage::new(num_nodes, SealPolicy::by_events(per_seg));
+            for e in events {
+                st.append_edge(e.clone()).unwrap();
+            }
+            st.seal().unwrap();
+            st.snapshot().unwrap().byte_size().max(1)
+        };
+        let mut full = SegmentedStorage::new(num_nodes, SealPolicy::by_events(per_seg));
+        let full_secs = common::time_runs(0, 1, || {
+            for e in events {
+                if full.append_edge(e.clone()).unwrap() {
+                    full.maybe_compact(4).unwrap();
+                }
+            }
+            full.seal().unwrap();
+            full.compact().unwrap();
+        });
+        let mut tiered = SegmentedStorage::new(num_nodes, SealPolicy::by_events(per_seg));
+        let tiered_secs = common::time_runs(0, 1, || {
+            for e in events {
+                if tiered.append_edge(e.clone()).unwrap() {
+                    while tiered.compact_tiered(4).unwrap().is_some() {}
+                }
+            }
+            tiered.seal().unwrap();
+            while tiered.compact_tiered(4).unwrap().is_some() {}
+        });
+        let full_amp = full.compaction_bytes() as f64 / data_bytes as f64;
+        let tiered_amp = tiered.compaction_bytes() as f64 / data_bytes as f64;
+        common::report(
+            "ablation.persist",
+            &format!("full compaction under ingest ({target_segs} seals)"),
+            &full_secs,
+        );
+        common::report(
+            "ablation.persist",
+            &format!("tiered compaction under ingest ({target_segs} seals)"),
+            &tiered_secs,
+        );
+        println!(
+            "ablation.persist | write amplification at {target_segs} seals: \
+             full {full_amp:.2}x vs tiered {tiered_amp:.2}x \
+             ({} vs {} sealed segments at the end)",
+            full.num_sealed_segments(),
+            tiered.num_sealed_segments()
+        );
+        common::metric(&format!("persist.write_amp_full_{target_segs}"), full_amp);
+        common::metric(&format!("persist.write_amp_tiered_{target_segs}"), tiered_amp);
+    }
+
+    // (d) fsync-per-append vs group commit (one barrier per 64-event
+    //     chunk). Small event count: every append costs a disk sync on
+    //     the left side.
+    let n_sync = n_events.min(512);
+    let _ = std::fs::remove_dir_all(&bench_dir);
+    let mut st = SegmentedStorage::new(num_nodes, SealPolicy::by_events(usize::MAX))
+        .with_durability(DurabilityPolicy::new(bench_dir.join("fsync-each")).with_fsync())
+        .unwrap();
+    let each_secs = common::time_runs(0, 1, || {
+        for e in &events[..n_sync] {
+            st.append_edge(e.clone()).unwrap();
+        }
+    });
+    drop(st);
+    let mut st = SegmentedStorage::new(num_nodes, SealPolicy::by_events(usize::MAX))
+        .with_durability(
+            DurabilityPolicy::new(bench_dir.join("group-commit")).with_group_commit(),
+        )
+        .unwrap();
+    let group_secs = common::time_runs(0, 1, || {
+        for (i, e) in events[..n_sync].iter().enumerate() {
+            st.append_edge(e.clone()).unwrap();
+            if i % 64 == 63 {
+                st.sync_wal().unwrap();
+            }
+        }
+        st.sync_wal().unwrap();
+    });
+    drop(st);
+    common::report(
+        "ablation.persist",
+        &format!("fsync per append ({n_sync} events)"),
+        &each_secs,
+    );
+    common::report(
+        "ablation.persist",
+        &format!("group commit, barrier per 64 ({n_sync} events)"),
+        &group_secs,
+    );
+    let each_eps = n_sync as f64 / common::mean(&each_secs).max(1e-12);
+    let group_eps = n_sync as f64 / common::mean(&group_secs).max(1e-12);
+    println!(
+        "ablation.persist | fsync throughput: per-append {:.1}k events/s vs group commit \
+         {:.1}k events/s ({:.1}x)",
+        each_eps / 1e3,
+        group_eps / 1e3,
+        group_eps / each_eps.max(1e-12)
+    );
+    common::metric("persist.fsync_each_events_per_s", each_eps);
+    common::metric("persist.group_commit_events_per_s", group_eps);
+
     let _ = std::fs::remove_dir_all(&bench_dir);
 }

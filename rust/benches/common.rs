@@ -45,6 +45,24 @@ pub fn bench_scale() -> f64 {
     std::env::var("TGM_BENCH_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(1.0)
 }
 
+/// Section filter: `TGM_ABLATION=streaming,persist` runs only those
+/// sections of `benches/ablations.rs` (unset = all). CI's
+/// bench-regression job uses it to run just the gated sections.
+pub fn section_enabled(name: &str) -> bool {
+    match std::env::var("TGM_ABLATION") {
+        Err(_) => true,
+        Ok(list) => list.split(',').any(|s| s.trim().eq_ignore_ascii_case(name)),
+    }
+}
+
+/// Machine-readable metric row for the CI bench-regression gate:
+/// `scripts/bench_gate.py` collects every `BENCH_METRIC <name> <value>`
+/// line into `BENCH_PR5.json` and compares gated names against the
+/// committed `bench-baseline.json`.
+pub fn metric(name: &str, value: f64) {
+    println!("BENCH_METRIC {name} {value:.4}");
+}
+
 /// Skip helper when artifacts are missing (benches needing PJRT).
 pub fn engine_or_skip(table: &str) -> Option<tgm::runtime::XlaEngine> {
     let dir = std::env::var("TGM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());

@@ -149,6 +149,9 @@ impl<S: EventSource> StreamingTrainer<S> {
         for ev in chunk {
             self.store.append(ev)?;
         }
+        // Group-commit stores acknowledge per chunk: one fsync covers
+        // everything appended above (no-op otherwise).
+        self.store.sync_wal()?;
         self.store.seal()?;
         self.store.maybe_compact(self.cfg.compact_after)?;
 

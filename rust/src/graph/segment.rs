@@ -47,7 +47,9 @@
 use crate::error::{Result, TgmError};
 use crate::graph::events::{EdgeEvent, Event, NodeEvent, NodeId};
 use crate::graph::storage::GraphStorage;
-use crate::persist::{Durability, DurabilityPolicy, StoreMeta};
+use crate::persist::format::read_segment_backed;
+use crate::persist::wal::WalSync;
+use crate::persist::{plan_tiered_run, Durability, DurabilityPolicy, SegmentBacking, StoreMeta};
 use crate::util::{granularity_for_min_gap, min_positive_gap, TimeGranularity, Timestamp};
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -154,6 +156,10 @@ pub struct SegmentedStorage {
     /// Memoized snapshot of the current generation (tail freezes are a
     /// copy; repeated `snapshot()` calls without writes reuse it).
     cached_snapshot: Option<(u64, Arc<StorageSnapshot>)>,
+    /// Cumulative bytes of merged segments written by compaction
+    /// (full or tiered) — the write-amplification numerator tracked by
+    /// `ablation.persist`.
+    compaction_bytes: u64,
     /// Disk-side state when durability is enabled (see [`crate::persist`]):
     /// appends are WAL-recorded before acknowledgment, seals write
     /// immutable segment files, compactions replace them atomically.
@@ -183,6 +189,7 @@ impl SegmentedStorage {
             store_id: next_id(),
             generation: 0,
             cached_snapshot: None,
+            compaction_bytes: 0,
             durability: None,
         }
     }
@@ -325,6 +332,7 @@ impl SegmentedStorage {
             store_id: next_id(),
             generation,
             cached_snapshot: None,
+            compaction_bytes: 0,
             durability: Some(durability),
         }
     }
@@ -364,6 +372,44 @@ impl SegmentedStorage {
     /// background compactor checks this before doing any merge work).
     pub(crate) fn durability_poisoned(&self) -> bool {
         self.durability.as_ref().is_some_and(Durability::is_poisoned)
+    }
+
+    /// Group-commit barrier: block until every append acknowledged so
+    /// far is power-loss durable. One fsync covers the whole window, so
+    /// calling this once per ingest chunk amortizes what
+    /// `DurabilityPolicy::with_fsync` pays per record. No-op for
+    /// non-durable stores and non-group policies (their appends are
+    /// already as durable as configured). A failed barrier poisons the
+    /// store — the sync state of buffered records is unknown.
+    pub fn sync_wal(&mut self) -> Result<()> {
+        match self.durability.as_mut() {
+            Some(d) => d.sync_wal(),
+            None => Ok(()),
+        }
+    }
+
+    /// Cloneable group-commit barrier handle ([`WalSync`]), for callers
+    /// that append under a lock and want to wait for durability
+    /// *outside* it (the serving layer's ingest path). `None` unless
+    /// `DurabilityPolicy::with_group_commit` is active.
+    pub fn wal_sync(&self) -> Option<WalSync> {
+        self.durability.as_ref().and_then(Durability::wal_sync)
+    }
+
+    /// Poison durable state from outside the store (the serving layer's
+    /// out-of-lock barrier failed: buffered records' sync state is
+    /// unknown, so later acknowledgments would be unsound).
+    pub(crate) fn poison_durability(&mut self, why: &str) {
+        if let Some(d) = self.durability.as_mut() {
+            d.poison(why);
+        }
+    }
+
+    /// Cumulative bytes of merged segment data written by compaction
+    /// (full + tiered): the write-amplification numerator
+    /// (`ablation.persist` divides it by ingested bytes).
+    pub fn compaction_bytes(&self) -> u64 {
+        self.compaction_bytes
     }
 
     /// Manifest metadata for a durable operation that will leave the
@@ -646,7 +692,7 @@ impl SegmentedStorage {
         let contribution = self.gap_contribution(&edges);
         let folded = Self::fold_gap(self.min_sealed_gap, contribution);
         let g = self.fixed_granularity.unwrap_or_else(|| granularity_for_min_gap(folded));
-        let seg = GraphStorage::from_events(edges, nodes, self.num_nodes, None, Some(g))?;
+        let mut seg = GraphStorage::from_events(edges, nodes, self.num_nodes, None, Some(g))?;
         if let Some(mut d) = self.durability.take() {
             let res = d.persist_seal(&seg, &self.store_meta(self.generation + 1));
             if res.is_err() {
@@ -660,8 +706,18 @@ impl SegmentedStorage {
                 d.poison("a durable seal failed mid-protocol");
                 self.restore_active_from(&seg);
             }
+            let backing = d.backing();
             self.durability = Some(d);
-            res?;
+            let path = res?;
+            if backing == SegmentBacking::Mmap {
+                // Serve the just-written file from the page cache and
+                // drop the heap copy. The bytes are identical by the
+                // encode round trip; if the reopen fails for any reason
+                // the (equivalent) heap segment stands in.
+                if let Ok(mapped) = read_segment_backed(&path, backing) {
+                    seg = mapped;
+                }
+            }
         }
         self.min_sealed_gap = folded;
         self.last_sealed_edge_ts =
@@ -717,7 +773,10 @@ impl SegmentedStorage {
     /// to merge. Durable stores write the merged file and replace the
     /// manifest before the in-memory swap; the
     /// [`crate::persist::Compactor`] performs the same merge off the
-    /// write path on a background thread.
+    /// write path on a background thread — tiered by default
+    /// ([`SegmentedStorage::compact_tiered`] is the synchronous
+    /// equivalent), which keeps write amplification O(log n) where this
+    /// full merge is O(n) per round.
     pub fn compact(&mut self) -> Result<bool> {
         if self.sealed.len() <= 1 {
             return Ok(false);
@@ -728,14 +787,39 @@ impl SegmentedStorage {
         self.install_compacted(merged, &ids, None)
     }
 
-    /// Install `merged` as the replacement for the **oldest**
-    /// `replaced_ids.len()` sealed segments. Written for the background
-    /// compactor: the caller merged (and, for durable stores, pre-wrote
-    /// + synced to `prewritten`) without holding the writer lock, so
-    /// this call is O(1) plus a rename + manifest replace. Returns
-    /// `Ok(false)` — discarding `prewritten` — when the sealed prefix no
-    /// longer matches `replaced_ids` (a concurrent compaction won the
-    /// race); newly sealed segments *behind* the prefix are unaffected.
+    /// One round of **tiered** compaction: pick the lowest-level run of
+    /// `>= fanout` size-adjacent sealed segments
+    /// ([`crate::persist::plan_tiered_run`]), merge just that run, and
+    /// install it in place. Each event is rewritten at most once per
+    /// size level, so sustained ingest pays O(log n) write
+    /// amplification instead of the full merge's O(n) per round.
+    /// Returns the merged bytes written, or `None` when no run is
+    /// currently eligible (call again after more seals). Loop until
+    /// `None` to reach the tiering fixpoint.
+    pub fn compact_tiered(&mut self, fanout: usize) -> Result<Option<usize>> {
+        let sizes: Vec<usize> = self.sealed.iter().map(|s| s.byte_size()).collect();
+        let Some(run) = plan_tiered_run(&sizes, fanout) else {
+            return Ok(None);
+        };
+        let g = self.granularity_with(None);
+        let merged =
+            merge_segments(&self.sealed[run.clone()], self.num_nodes, g, 0, Vec::new());
+        let bytes = merged.byte_size();
+        let ids = self.sealed_ids[run].to_vec();
+        let installed = self.install_compacted(merged, &ids, None)?;
+        Ok(installed.then_some(bytes))
+    }
+
+    /// Install `merged` as the replacement for the contiguous run of
+    /// sealed segments whose ids are exactly `replaced_ids`. Written
+    /// for the background compactor: the caller merged (and, for
+    /// durable stores, pre-wrote + synced to `prewritten`) without
+    /// holding the writer lock, so this call is O(1) plus a rename +
+    /// manifest replace. The run is located **by id** (ids are never
+    /// reused), so concurrent seals appending behind it — or another
+    /// compaction shifting its position — are handled: the install
+    /// succeeds iff the exact run still exists contiguously, and
+    /// returns `Ok(false)` (discarding `prewritten`) otherwise.
     pub fn install_compacted(
         &mut self,
         merged: GraphStorage,
@@ -747,33 +831,53 @@ impl SegmentedStorage {
                 let _ = std::fs::remove_file(p);
             }
         };
-        if replaced_ids.len() <= 1
-            || self.sealed_ids.len() < replaced_ids.len()
-            || self.sealed_ids[..replaced_ids.len()] != *replaced_ids
-        {
+        let len = replaced_ids.len();
+        let start = if len <= 1 || self.sealed_ids.len() < len {
+            None
+        } else {
+            self.sealed_ids.windows(len).position(|w| w == replaced_ids)
+        };
+        let Some(start) = start else {
             discard(prewritten);
             return Ok(false);
-        }
+        };
+        let mut merged = merged;
         if let Some(mut d) = self.durability.take() {
             let res = d.persist_compaction(
                 &merged,
-                replaced_ids.len(),
+                start,
+                len,
                 prewritten,
                 &self.store_meta(self.generation + 1),
             );
+            let backing = d.backing();
             self.durability = Some(d);
-            if res.is_err() {
-                // Nothing was installed; don't leak the pre-synced
-                // merge output (a no-op if the failure came after the
-                // rename — the path no longer exists then).
-                discard(prewritten);
+            match res {
+                Ok(path) => {
+                    if backing == SegmentBacking::Mmap {
+                        // Serve the merged file from the page cache;
+                        // the heap merge output drops here. Identical
+                        // bytes either way, so a failed reopen just
+                        // keeps the heap copy.
+                        if let Ok(mapped) = read_segment_backed(&path, backing) {
+                            merged = mapped;
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Nothing was installed; don't leak the pre-synced
+                    // merge output (a no-op if the failure came after
+                    // the rename — the path no longer exists then).
+                    discard(prewritten);
+                    return Err(e);
+                }
             }
-            res?;
         } else {
             discard(prewritten);
         }
-        self.sealed.splice(0..replaced_ids.len(), [Arc::new(merged)]);
-        self.sealed_ids.splice(0..replaced_ids.len(), [next_id()]);
+        self.compaction_bytes += merged.byte_size() as u64;
+        self.sealed.splice(start..start + len, [Arc::new(merged)]);
+        self.sealed_ids.splice(start..start + len, [next_id()]);
         self.generation += 1;
         Ok(true)
     }
@@ -1030,6 +1134,12 @@ impl StorageSnapshot {
     /// Number of segments behind this snapshot.
     pub fn num_segments(&self) -> usize {
         self.segments.len()
+    }
+
+    /// Segments whose columns are served zero-copy from an mmap'd file
+    /// (`SegmentBacking::Mmap`; the frozen active tail is always heap).
+    pub fn num_mapped_segments(&self) -> usize {
+        self.segments.iter().filter(|s| s.is_mapped()).count()
     }
 
     /// The underlying immutable segments, oldest first.
@@ -1556,6 +1666,29 @@ mod tests {
         let (solo_segs, solo_ids) = st.sealed_segments();
         let solo = merge_segments(&solo_segs, 8, g, 0, Vec::new());
         assert!(!st.install_compacted(solo, &solo_ids, None).unwrap());
+    }
+
+    /// Tiered compaction reaches its fixpoint with the same bytes the
+    /// full merge produces, while rewriting fewer of them per round.
+    #[test]
+    fn tiered_compaction_converges_to_the_same_bytes() {
+        let events = stream(120);
+        let mut full = build_segmented(&events, 10);
+        let mut tiered = build_segmented(&events, 10);
+        assert_eq!(full.num_sealed_segments(), 12);
+        assert!(full.compact().unwrap());
+        while tiered.compact_tiered(3).unwrap().is_some() {}
+        // Fixpoint reached: equal-size leftovers are fewer than fanout.
+        assert!(tiered.num_sealed_segments() < 12);
+        let a = full.snapshot().unwrap();
+        let b = tiered.snapshot().unwrap();
+        assert_eq!(a.edge_ts(), b.edge_ts());
+        assert_eq!(a.edge_src(), b.edge_src());
+        assert_eq!(a.edge_dst(), b.edge_dst());
+        assert_eq!(a.edge_feats(), b.edge_feats());
+        // Both counters moved; the write-amp accounting is exposed.
+        assert!(full.compaction_bytes() > 0);
+        assert!(tiered.compaction_bytes() > 0);
     }
 
     #[test]

@@ -19,25 +19,61 @@
 use crate::error::{Result, TgmError};
 use crate::graph::events::{EdgeEvent, NodeEvent, NodeId};
 use crate::graph::segment::StorageSnapshot;
+use crate::persist::mmap::MappedSlice;
 use crate::util::{infer_native_granularity, TimeGranularity, Timestamp};
 use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::{Arc, OnceLock};
 
+/// One immutable column, either owned on the heap (the default) or
+/// served zero-copy from an mmap'd sealed segment file
+/// (`SegmentBacking::Mmap` — see [`crate::persist`]). Dereferences to a
+/// plain slice, so every read path is backing-agnostic.
+pub(crate) enum Col<T> {
+    Heap(Vec<T>),
+    Mapped(MappedSlice<T>),
+}
+
+impl<T: Copy> std::ops::Deref for Col<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        match self {
+            Col::Heap(v) => v,
+            Col::Mapped(m) => m.as_slice(),
+        }
+    }
+}
+
+impl<T> From<Vec<T>> for Col<T> {
+    fn from(v: Vec<T>) -> Col<T> {
+        Col::Heap(v)
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for Col<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Col::Heap(v) => write!(f, "Col::Heap({} elems)", v.len()),
+            Col::Mapped(m) => write!(f, "Col::Mapped({} elems)", m.as_slice().len()),
+        }
+    }
+}
+
 /// Immutable columnar storage for one temporal graph.
 #[derive(Debug)]
 pub struct GraphStorage {
     // --- edge events, sorted by ts (stable) ---
-    ts: Vec<Timestamp>,
-    src: Vec<NodeId>,
-    dst: Vec<NodeId>,
+    ts: Col<Timestamp>,
+    src: Col<NodeId>,
+    dst: Col<NodeId>,
     edge_feat_dim: usize,
-    edge_feats: Vec<f32>,
+    edge_feats: Col<f32>,
     // --- node events, sorted by ts (stable) ---
-    node_ev_ts: Vec<Timestamp>,
-    node_ev_id: Vec<NodeId>,
+    node_ev_ts: Col<Timestamp>,
+    node_ev_id: Col<NodeId>,
     node_feat_dim: usize,
-    node_ev_feats: Vec<f32>,
+    node_ev_feats: Col<f32>,
     // --- static node features ---
     static_feat_dim: usize,
     static_feats: Vec<f32>,
@@ -138,15 +174,15 @@ impl GraphStorage {
         let ts_index = build_ts_index(&ts);
 
         Ok(GraphStorage {
-            ts,
-            src,
-            dst,
+            ts: ts.into(),
+            src: src.into(),
+            dst: dst.into(),
             edge_feat_dim,
-            edge_feats,
-            node_ev_ts,
-            node_ev_id,
+            edge_feats: edge_feats.into(),
+            node_ev_ts: node_ev_ts.into(),
+            node_ev_id: node_ev_id.into(),
             node_feat_dim,
-            node_ev_feats,
+            node_ev_feats: node_ev_feats.into(),
             static_feat_dim,
             static_feats,
             num_nodes,
@@ -183,6 +219,45 @@ impl GraphStorage {
         );
         let ts_index = build_ts_index(&ts);
         GraphStorage {
+            ts: ts.into(),
+            src: src.into(),
+            dst: dst.into(),
+            edge_feat_dim,
+            edge_feats: edge_feats.into(),
+            node_ev_ts: node_ev_ts.into(),
+            node_ev_id: node_ev_id.into(),
+            node_feat_dim,
+            node_ev_feats: node_ev_feats.into(),
+            static_feat_dim,
+            static_feats,
+            num_nodes,
+            granularity,
+            ts_index,
+            node_index: OnceLock::new(),
+        }
+    }
+
+    /// Build from already-validated, already-sorted backed columns — the
+    /// zero-copy entry point for mmap-served sealed segment files
+    /// ([`crate::persist::format::map_segment`]). The acceleration
+    /// indices are rebuilt on the heap (they are small); the event
+    /// columns stay wherever their [`Col`] backing puts them.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_backed_columns(
+        ts: Col<Timestamp>,
+        src: Col<NodeId>,
+        dst: Col<NodeId>,
+        edge_feat_dim: usize,
+        edge_feats: Col<f32>,
+        node_ev_ts: Col<Timestamp>,
+        node_ev_id: Col<NodeId>,
+        node_feat_dim: usize,
+        node_ev_feats: Col<f32>,
+        num_nodes: usize,
+        granularity: TimeGranularity,
+    ) -> GraphStorage {
+        let ts_index = build_ts_index(&ts);
+        GraphStorage {
             ts,
             src,
             dst,
@@ -192,13 +267,19 @@ impl GraphStorage {
             node_ev_id,
             node_feat_dim,
             node_ev_feats,
-            static_feat_dim,
-            static_feats,
+            static_feat_dim: 0,
+            static_feats: Vec::new(),
             num_nodes,
             granularity,
             ts_index,
             node_index: OnceLock::new(),
         }
+    }
+
+    /// True when the event columns are served from an mmap'd segment
+    /// file rather than heap copies.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.ts, Col::Mapped(_))
     }
 
     /// Wrap in an `Arc` for sharing with views.

@@ -24,13 +24,27 @@
 //!   store, never a mix.
 
 use crate::error::{Result, TgmError};
-use crate::graph::storage::GraphStorage;
+use crate::graph::storage::{Col, GraphStorage};
+use crate::persist::mmap::{self, MappedSlice, Mmap};
+use crate::persist::SegmentBacking;
 use crate::util::TimeGranularity;
 use std::io::Write;
 use std::path::Path;
+use std::sync::Arc;
 
-/// On-disk format version shared by all three file kinds.
+/// On-disk format version of the manifest, WAL and static-feature
+/// files.
 pub const FORMAT_VERSION: u32 = 1;
+
+/// On-disk format version of **segment** files. v1 packed the columns
+/// back-to-back (decodable only into heap copies); v2 pads each column
+/// to its element alignment at file-absolute offsets, so a page-aligned
+/// mmap of the file can serve every column as a typed slice with zero
+/// copies (see [`map_segment`]). v1 files remain readable.
+pub const SEGMENT_FORMAT_VERSION: u32 = 2;
+
+/// Bytes of frame header before the payload (magic + version + length).
+const FRAME_HEADER_LEN: usize = 20;
 
 const SEGMENT_MAGIC: &[u8; 8] = b"TGMSEG01";
 const MANIFEST_MAGIC: &[u8; 8] = b"TGMMAN01";
@@ -132,6 +146,15 @@ impl Enc {
         }
     }
 
+    /// Zero-pad until the **file** offset of the next byte (frame
+    /// header + payload so far) is a multiple of `align` — the v2
+    /// segment layout's column-alignment primitive.
+    pub(crate) fn pad_to_file_align(&mut self, align: usize) {
+        while (FRAME_HEADER_LEN + self.buf.len()) % align != 0 {
+            self.buf.push(0);
+        }
+    }
+
     pub(crate) fn into_bytes(self) -> Vec<u8> {
         self.buf
     }
@@ -226,6 +249,21 @@ impl<'a> Dec<'a> {
         Ok(out)
     }
 
+    /// Skip the zero padding [`Enc::pad_to_file_align`] emitted (the
+    /// cursor's payload position plus the frame header is the file
+    /// offset).
+    pub(crate) fn skip_file_pad(&mut self, align: usize) -> Result<()> {
+        while (FRAME_HEADER_LEN + self.pos) % align != 0 {
+            self.take(1)?;
+        }
+        Ok(())
+    }
+
+    /// Payload-relative cursor position.
+    pub(crate) fn pos(&self) -> usize {
+        self.pos
+    }
+
     pub(crate) fn done(&self) -> Result<()> {
         if self.pos != self.buf.len() {
             return Err(TgmError::Persist(format!(
@@ -242,11 +280,17 @@ impl<'a> Dec<'a> {
 // framing: magic + version + payload + checksum
 // ----------------------------------------------------------------------
 
-/// Wrap a payload in the shared frame.
+/// Wrap a payload in the shared frame at the default format version.
 fn frame(magic: &[u8; 8], payload: Vec<u8>) -> Vec<u8> {
+    frame_versioned(magic, FORMAT_VERSION, payload)
+}
+
+/// Wrap a payload in the shared frame at an explicit version (segment
+/// files write [`SEGMENT_FORMAT_VERSION`]).
+fn frame_versioned(magic: &[u8; 8], version: u32, payload: Vec<u8>) -> Vec<u8> {
     let mut out = Vec::with_capacity(payload.len() + 28);
     out.extend_from_slice(magic);
-    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
     let sum = checksum(&payload);
     out.extend_from_slice(&payload);
@@ -254,8 +298,15 @@ fn frame(magic: &[u8; 8], payload: Vec<u8>) -> Vec<u8> {
     out
 }
 
-/// Validate the frame and return the payload slice.
-fn unframe<'a>(magic: &[u8; 8], bytes: &'a [u8], what: &'static str) -> Result<&'a [u8]> {
+/// Validate the frame and return `(version, payload)`. Versions in
+/// `1..=max_version` are accepted; callers branch on the version for
+/// layout differences.
+fn unframe<'a>(
+    magic: &[u8; 8],
+    bytes: &'a [u8],
+    what: &'static str,
+    max_version: u32,
+) -> Result<(u32, &'a [u8])> {
     if bytes.len() < 28 {
         return Err(TgmError::Persist(format!("{what} too short ({} bytes)", bytes.len())));
     }
@@ -263,9 +314,9 @@ fn unframe<'a>(magic: &[u8; 8], bytes: &'a [u8], what: &'static str) -> Result<&
         return Err(TgmError::Persist(format!("{what} has wrong magic (not a TGM file?)")));
     }
     let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
-    if version != FORMAT_VERSION {
+    if version == 0 || version > max_version {
         return Err(TgmError::Persist(format!(
-            "{what} format version {version} unsupported (this build reads {FORMAT_VERSION})"
+            "{what} format version {version} unsupported (this build reads <= {max_version})"
         )));
     }
     let len = u64::from_le_bytes([
@@ -295,7 +346,7 @@ fn unframe<'a>(magic: &[u8; 8], bytes: &'a [u8], what: &'static str) -> Result<&
     if checksum(payload) != stored {
         return Err(TgmError::Persist(format!("{what} checksum mismatch (corrupt file)")));
     }
-    Ok(payload)
+    Ok((version, payload))
 }
 
 /// Write `bytes` to `path` atomically: write + sync a sibling tmp file,
@@ -336,44 +387,37 @@ pub(crate) fn tmp_sibling(path: &Path) -> std::path::PathBuf {
 // segment files
 // ----------------------------------------------------------------------
 
-/// Encode one sealed segment into the versioned columnar format.
-pub fn encode_segment(seg: &GraphStorage) -> Vec<u8> {
-    let mut p = Enc::new();
-    p.u64(seg.num_nodes() as u64);
-    p.u8(granularity_code(seg.granularity()));
-    p.u64(seg.num_edges() as u64);
-    p.u32(seg.edge_feat_dim() as u32);
-    p.u64(seg.num_node_events() as u64);
-    p.u32(seg.node_feat_dim() as u32);
-    p.i64s(seg.edge_ts());
-    p.u32s(seg.edge_src());
-    p.u32s(seg.edge_dst());
-    p.f32s(seg.edge_feats());
-    p.i64s(seg.node_event_ts());
-    p.u32s(seg.node_event_ids());
-    p.f32s(seg.node_event_feats());
-    frame(SEGMENT_MAGIC, p.into_bytes())
+/// Segment-payload header fields shared by the heap and mmap decoders.
+struct SegmentHeader {
+    num_nodes: usize,
+    granularity: TimeGranularity,
+    num_edges: u64,
+    edge_feat_dim: usize,
+    num_node_events: u64,
+    node_feat_dim: usize,
 }
 
-/// Decode a segment file body produced by [`encode_segment`], rebuilding
-/// the in-memory acceleration indices.
-pub fn decode_segment(bytes: &[u8]) -> Result<GraphStorage> {
-    let payload = unframe(SEGMENT_MAGIC, bytes, "segment file")?;
-    let mut d = Dec::new(payload, "segment payload");
-    let num_nodes = d.u64()? as usize;
-    let granularity = granularity_from_code(d.u8()?)?;
-    let e = d.u64()?;
-    let edge_feat_dim = d.u32()? as usize;
-    let ne = d.u64()?;
-    let node_feat_dim = d.u32()? as usize;
-    let ts = d.i64s(e)?;
-    let src = d.u32s(e)?;
-    let dst = d.u32s(e)?;
-    let feats = d.f32s(e.saturating_mul(edge_feat_dim as u64))?;
-    let nts = d.i64s(ne)?;
-    let nid = d.u32s(ne)?;
-    let nfeats = d.f32s(ne.saturating_mul(node_feat_dim as u64))?;
-    d.done()?;
+fn read_segment_header(d: &mut Dec<'_>) -> Result<SegmentHeader> {
+    Ok(SegmentHeader {
+        num_nodes: d.u64()? as usize,
+        granularity: granularity_from_code(d.u8()?)?,
+        num_edges: d.u64()?,
+        edge_feat_dim: d.u32()? as usize,
+        num_node_events: d.u64()?,
+        node_feat_dim: d.u32()? as usize,
+    })
+}
+
+/// Validate decoded (or mapped) segment columns: time-sorted, non-empty,
+/// node ids in range.
+fn validate_segment_columns(
+    num_nodes: usize,
+    ts: &[i64],
+    src: &[u32],
+    dst: &[u32],
+    nts: &[i64],
+    nid: &[u32],
+) -> Result<()> {
     if ts.windows(2).any(|w| w[0] > w[1]) || nts.windows(2).any(|w| w[0] > w[1]) {
         return Err(TgmError::Persist("segment columns are not time-sorted".into()));
     }
@@ -387,28 +431,178 @@ pub fn decode_segment(bytes: &[u8]) -> Result<GraphStorage> {
             "segment references a node id >= num_nodes={num_nodes}"
         )));
     }
+    Ok(())
+}
+
+/// Encode one sealed segment into the versioned columnar format (v2:
+/// every column starts at a file offset aligned for its element type,
+/// so [`map_segment`] can serve it zero-copy).
+pub fn encode_segment(seg: &GraphStorage) -> Vec<u8> {
+    let mut p = Enc::new();
+    p.u64(seg.num_nodes() as u64);
+    p.u8(granularity_code(seg.granularity()));
+    p.u64(seg.num_edges() as u64);
+    p.u32(seg.edge_feat_dim() as u32);
+    p.u64(seg.num_node_events() as u64);
+    p.u32(seg.node_feat_dim() as u32);
+    p.pad_to_file_align(8);
+    p.i64s(seg.edge_ts());
+    p.u32s(seg.edge_src());
+    p.u32s(seg.edge_dst());
+    p.f32s(seg.edge_feats());
+    p.pad_to_file_align(8);
+    p.i64s(seg.node_event_ts());
+    p.u32s(seg.node_event_ids());
+    p.f32s(seg.node_event_feats());
+    frame_versioned(SEGMENT_MAGIC, SEGMENT_FORMAT_VERSION, p.into_bytes())
+}
+
+/// Decode a segment file body (v1 or v2) into heap-backed columns,
+/// rebuilding the in-memory acceleration indices.
+pub fn decode_segment(bytes: &[u8]) -> Result<GraphStorage> {
+    let (version, payload) =
+        unframe(SEGMENT_MAGIC, bytes, "segment file", SEGMENT_FORMAT_VERSION)?;
+    let mut d = Dec::new(payload, "segment payload");
+    let h = read_segment_header(&mut d)?;
+    if version >= 2 {
+        d.skip_file_pad(8)?;
+    }
+    let ts = d.i64s(h.num_edges)?;
+    let src = d.u32s(h.num_edges)?;
+    let dst = d.u32s(h.num_edges)?;
+    let feats = d.f32s(h.num_edges.saturating_mul(h.edge_feat_dim as u64))?;
+    if version >= 2 {
+        d.skip_file_pad(8)?;
+    }
+    let nts = d.i64s(h.num_node_events)?;
+    let nid = d.u32s(h.num_node_events)?;
+    let nfeats = d.f32s(h.num_node_events.saturating_mul(h.node_feat_dim as u64))?;
+    d.done()?;
+    validate_segment_columns(h.num_nodes, &ts, &src, &dst, &nts, &nid)?;
     Ok(GraphStorage::from_sorted_columns(
         ts,
         src,
         dst,
-        edge_feat_dim,
+        h.edge_feat_dim,
         feats,
         nts,
         nid,
-        node_feat_dim,
+        h.node_feat_dim,
         nfeats,
-        num_nodes,
+        h.num_nodes,
         0,
         Vec::new(),
-        granularity,
+        h.granularity,
     ))
 }
 
-/// Read + decode one segment file.
+/// Open a v2 segment file as an mmap-backed [`GraphStorage`]: the
+/// checksum is verified once through the page cache, then every column
+/// is served as a typed slice straight over the mapping — no heap
+/// copies at recovery or compaction install. v1 files (packed, hence
+/// unaligned) transparently decode into heap columns instead.
+pub fn map_segment(path: &Path) -> Result<GraphStorage> {
+    let map = Arc::new(Mmap::open(path)?);
+    let (version, payload) =
+        unframe(SEGMENT_MAGIC, map.bytes(), "segment file", SEGMENT_FORMAT_VERSION)?;
+    if version < 2 {
+        return decode_segment(map.bytes());
+    }
+    let payload_base = FRAME_HEADER_LEN; // payload starts right after the frame header
+    let mut d = Dec::new(payload, "segment payload");
+    let h = read_segment_header(&mut d)?;
+    d.skip_file_pad(8)?;
+
+    let e = usize::try_from(h.num_edges)
+        .map_err(|_| TgmError::Persist("segment edge count overflows".into()))?;
+    let ne = usize::try_from(h.num_node_events)
+        .map_err(|_| TgmError::Persist("segment node-event count overflows".into()))?;
+    // Guard the offset arithmetic below against declared counts larger
+    // than the payload could possibly hold.
+    let need = (e as u128) * (16 + 4 * h.edge_feat_dim as u128)
+        + (ne as u128) * (12 + 4 * h.node_feat_dim as u128);
+    if need > payload.len() as u128 {
+        return Err(TgmError::Persist(format!(
+            "segment declares {need} column bytes but the payload holds {}",
+            payload.len()
+        )));
+    }
+    let col = |off: usize| payload_base + off;
+
+    let ts_off = d.pos();
+    let src_off = ts_off + e * 8;
+    let dst_off = src_off + e * 4;
+    let feats_off = dst_off + e * 4;
+    let mut after = feats_off + e * h.edge_feat_dim * 4;
+    while (payload_base + after) % 8 != 0 {
+        after += 1;
+    }
+    let nts_off = after;
+    let nid_off = nts_off + ne * 8;
+    let nfeats_off = nid_off + ne * 4;
+    let end = nfeats_off + ne * h.node_feat_dim * 4;
+    if end != payload.len() {
+        return Err(TgmError::Persist(format!(
+            "segment payload is {} bytes but the columns need {end}",
+            payload.len()
+        )));
+    }
+
+    let ts: MappedSlice<i64> = MappedSlice::new(Arc::clone(&map), col(ts_off), e)?;
+    let src: MappedSlice<u32> = MappedSlice::new(Arc::clone(&map), col(src_off), e)?;
+    let dst: MappedSlice<u32> = MappedSlice::new(Arc::clone(&map), col(dst_off), e)?;
+    let feats: MappedSlice<f32> =
+        MappedSlice::new(Arc::clone(&map), col(feats_off), e * h.edge_feat_dim)?;
+    let nts: MappedSlice<i64> = MappedSlice::new(Arc::clone(&map), col(nts_off), ne)?;
+    let nid: MappedSlice<u32> = MappedSlice::new(Arc::clone(&map), col(nid_off), ne)?;
+    let nfeats: MappedSlice<f32> =
+        MappedSlice::new(Arc::clone(&map), col(nfeats_off), ne * h.node_feat_dim)?;
+
+    validate_segment_columns(
+        h.num_nodes,
+        ts.as_slice(),
+        src.as_slice(),
+        dst.as_slice(),
+        nts.as_slice(),
+        nid.as_slice(),
+    )?;
+    Ok(GraphStorage::from_backed_columns(
+        Col::Mapped(ts),
+        Col::Mapped(src),
+        Col::Mapped(dst),
+        h.edge_feat_dim,
+        Col::Mapped(feats),
+        Col::Mapped(nts),
+        Col::Mapped(nid),
+        h.node_feat_dim,
+        Col::Mapped(nfeats),
+        h.num_nodes,
+        h.granularity,
+    ))
+}
+
+/// Read + decode one segment file into heap columns.
 pub fn read_segment(path: &Path) -> Result<GraphStorage> {
     let bytes = std::fs::read(path)
         .map_err(|e| TgmError::Persist(format!("cannot read segment {}: {e}", path.display())))?;
     decode_segment(&bytes)
+}
+
+/// Open one segment file with the requested backing. `Mmap` serves the
+/// columns straight from the page cache ([`map_segment`]); on platforms
+/// without mmap support it degrades to the heap decoder — the served
+/// bytes are identical either way.
+pub fn read_segment_backed(path: &Path, backing: SegmentBacking) -> Result<GraphStorage> {
+    match backing {
+        SegmentBacking::Heap => read_segment(path),
+        SegmentBacking::Mmap => {
+            if mmap::supported() {
+                map_segment(path)
+            } else {
+                read_segment(path)
+            }
+        }
+    }
 }
 
 /// Write one segment file atomically.
@@ -432,7 +626,7 @@ pub fn encode_static(dim: usize, feats: &[f32]) -> Vec<u8> {
 
 /// Decode a static-feature file body: `(dim, feats)`.
 pub fn decode_static(bytes: &[u8]) -> Result<(usize, Vec<f32>)> {
-    let payload = unframe(STATIC_MAGIC, bytes, "static-feature file")?;
+    let (_, payload) = unframe(STATIC_MAGIC, bytes, "static-feature file", FORMAT_VERSION)?;
     let mut d = Dec::new(payload, "static-feature payload");
     let dim = d.u32()? as usize;
     let n = d.u64()?;
@@ -506,7 +700,7 @@ pub fn encode_manifest(m: &Manifest) -> Vec<u8> {
 
 /// Decode a manifest file body.
 pub fn decode_manifest(bytes: &[u8]) -> Result<Manifest> {
-    let payload = unframe(MANIFEST_MAGIC, bytes, "manifest")?;
+    let (_, payload) = unframe(MANIFEST_MAGIC, bytes, "manifest", FORMAT_VERSION)?;
     let mut d = Dec::new(payload, "manifest payload");
     let num_nodes = d.u64()? as usize;
     let fixed_granularity = match d.u8()? {
@@ -599,6 +793,98 @@ mod tests {
         ver[8] = 0xee;
         let err = decode_segment(&ver).unwrap_err();
         assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    /// v1 layout (packed, no alignment padding) kept as a test-only
+    /// encoder so compatibility with PR-4 era files stays pinned.
+    fn encode_segment_v1(seg: &GraphStorage) -> Vec<u8> {
+        let mut p = Enc::new();
+        p.u64(seg.num_nodes() as u64);
+        p.u8(granularity_code(seg.granularity()));
+        p.u64(seg.num_edges() as u64);
+        p.u32(seg.edge_feat_dim() as u32);
+        p.u64(seg.num_node_events() as u64);
+        p.u32(seg.node_feat_dim() as u32);
+        p.i64s(seg.edge_ts());
+        p.u32s(seg.edge_src());
+        p.u32s(seg.edge_dst());
+        p.f32s(seg.edge_feats());
+        p.i64s(seg.node_event_ts());
+        p.u32s(seg.node_event_ids());
+        p.f32s(seg.node_event_feats());
+        frame_versioned(SEGMENT_MAGIC, 1, p.into_bytes())
+    }
+
+    fn assert_same_columns(a: &GraphStorage, b: &GraphStorage) {
+        assert_eq!(a.num_nodes(), b.num_nodes());
+        assert_eq!(a.granularity(), b.granularity());
+        assert_eq!(a.edge_ts(), b.edge_ts());
+        assert_eq!(a.edge_src(), b.edge_src());
+        assert_eq!(a.edge_dst(), b.edge_dst());
+        assert_eq!(a.edge_feats(), b.edge_feats());
+        assert_eq!(a.node_event_ts(), b.node_event_ts());
+        assert_eq!(a.node_event_ids(), b.node_event_ids());
+        assert_eq!(a.node_event_feats(), b.node_event_feats());
+        assert_eq!(a.num_unique_timestamps(), b.num_unique_timestamps());
+    }
+
+    fn seg_file(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("tgm_format_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(tag);
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn v1_segments_stay_readable() {
+        let seg = sample_segment();
+        let bytes = encode_segment_v1(&seg);
+        let back = decode_segment(&bytes).unwrap();
+        assert_same_columns(&back, &seg);
+        assert!(!back.is_mapped());
+        // The mmap entry point degrades v1 files to heap columns.
+        let path = seg_file("v1.tgm", &bytes);
+        let mapped = map_segment(&path).unwrap();
+        assert_same_columns(&mapped, &seg);
+        assert!(!mapped.is_mapped());
+    }
+
+    #[test]
+    fn mapped_segments_serve_byte_identical_columns() {
+        if !crate::persist::mmap::supported() {
+            return;
+        }
+        let seg = sample_segment();
+        let path = seg_file("v2.tgm", &encode_segment(&seg));
+        let mapped = map_segment(&path).unwrap();
+        assert!(mapped.is_mapped(), "v2 files must serve zero-copy");
+        assert_same_columns(&mapped, &seg);
+        // Same result through the backing selector, both ways.
+        let heap = read_segment_backed(&path, SegmentBacking::Heap).unwrap();
+        assert!(!heap.is_mapped());
+        assert_same_columns(&heap, &mapped);
+        let again = read_segment_backed(&path, SegmentBacking::Mmap).unwrap();
+        assert_same_columns(&again, &mapped);
+        // Time queries and per-node lookups run unchanged over the map.
+        assert_eq!(mapped.edge_range(10, 21), seg.edge_range(10, 21));
+        assert_eq!(
+            mapped.latest_node_features_before(1, 100),
+            seg.latest_node_features_before(1, 100)
+        );
+    }
+
+    #[test]
+    fn mapped_segments_reject_corruption_like_the_heap_decoder() {
+        if !crate::persist::mmap::supported() {
+            return;
+        }
+        let mut bytes = encode_segment(&sample_segment());
+        bytes[25] ^= 0x40;
+        let path = seg_file("v2_corrupt.tgm", &bytes);
+        let err = map_segment(&path).unwrap_err();
+        assert!(matches!(err, TgmError::Persist(_)), "{err}");
+        assert!(err.to_string().contains("checksum"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Cross-process exclusive lock on a durable store directory.
+//!
+//! The [`crate::serving::TenantRouter`] already refuses two tenants
+//! over one durable directory *in-process*, but nothing stopped a
+//! second **process** from opening the same directory — two writers
+//! would destroy each other's WAL. [`DirLock`] fences that with a
+//! `LOCK` file held under an exclusive, kernel-managed `flock(2)`:
+//!
+//! * **Liveness is automatic.** The kernel releases the lock the moment
+//!   the holding process exits — cleanly, by crash, or by SIGKILL — so
+//!   a stale `LOCK` file left by a dead process never blocks recovery
+//!   (no pid-file heuristics, no pid-recycling races).
+//! * **Conflicts are diagnosable.** The holder writes its pid into the
+//!   file; a refused acquisition reads it back for the error message.
+//! * **The file is never deleted.** Removing it on drop would race a
+//!   concurrent acquirer that already opened the old inode; leaving it
+//!   in place is harmless (liveness lives in the kernel lock, not the
+//!   file's existence) and recovery's garbage sweeps ignore it.
+//!
+//! Both `Durability::init` and [`crate::persist::recover`] acquire the
+//! lock *before* touching the manifest, so init/recover races between
+//! processes are excluded too.
+//! On platforms without `flock` the lock degrades to O_EXCL creation
+//! with removal on drop (best-effort; the unix path is the supported
+//! deployment target).
+
+use crate::error::{Result, TgmError};
+use std::io::{Read, Seek, Write};
+use std::path::{Path, PathBuf};
+
+/// Lock file name inside a durable store directory.
+pub const LOCK_FILE: &str = "LOCK";
+
+/// Held exclusive lock on one durable directory. Released on drop (or
+/// process death — the kernel owns the release).
+pub struct DirLock {
+    /// Keeping the handle open keeps the flock held (never read back;
+    /// its close is the release).
+    _file: std::fs::File,
+    path: PathBuf,
+    /// Non-flock fallback created the file exclusively and must remove
+    /// it on drop (no kernel liveness on such platforms).
+    remove_on_drop: bool,
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::c_int;
+
+    pub const LOCK_EX: c_int = 2;
+    pub const LOCK_NB: c_int = 4;
+
+    extern "C" {
+        pub fn flock(fd: c_int, operation: c_int) -> c_int;
+    }
+}
+
+impl DirLock {
+    /// Acquire the exclusive lock on `dir` (creating the directory and
+    /// the `LOCK` file as needed). Typed [`TgmError::Persist`] when a
+    /// live process — this one included — already holds it.
+    #[cfg(unix)]
+    pub fn acquire(dir: &Path) -> Result<DirLock> {
+        use std::os::unix::io::AsRawFd;
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(LOCK_FILE);
+        let mut file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&path)?;
+        let rc = unsafe { sys::flock(file.as_raw_fd(), sys::LOCK_EX | sys::LOCK_NB) };
+        if rc != 0 {
+            let err = std::io::Error::last_os_error();
+            let mut holder = String::new();
+            let _ = file.read_to_string(&mut holder);
+            let holder = holder.trim();
+            let holder = if holder.is_empty() { "unknown pid" } else { holder };
+            return Err(TgmError::Persist(format!(
+                "{} is locked by a live process ({holder}) — another store already \
+                 holds this directory open ({err})",
+                dir.display()
+            )));
+        }
+        // Informational only (the kernel lock is the authority);
+        // rewritten in place under the held lock.
+        let _ = file.set_len(0);
+        let _ = file.rewind();
+        let _ = write!(file, "pid {}", std::process::id());
+        Ok(DirLock { _file: file, path, remove_on_drop: false })
+    }
+
+    /// Non-flock fallback: exclusive creation, removed on drop. No
+    /// liveness check is possible, so a leftover file from a crash must
+    /// be removed by the operator (the error says so).
+    #[cfg(not(unix))]
+    pub fn acquire(dir: &Path) -> Result<DirLock> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(LOCK_FILE);
+        match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(mut file) => {
+                let _ = write!(file, "pid {}", std::process::id());
+                Ok(DirLock { _file: file, path, remove_on_drop: true })
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                Err(TgmError::Persist(format!(
+                    "{} has a LOCK file and this platform cannot check holder \
+                     liveness — another store already holds this directory open, \
+                     or a crashed one left the file behind (remove it manually)",
+                    dir.display()
+                )))
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Path of the held lock file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        // Unix: `file` closing releases the flock; the LOCK file stays
+        // (deleting it would race a waiter holding the old inode).
+        if self.remove_on_drop {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+impl std::fmt::Debug for DirLock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DirLock({})", self.path.display())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tgm_dirlock_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn acquire_conflicts_and_releases_on_drop() {
+        let dir = test_dir("conflict");
+        let lock = DirLock::acquire(&dir).unwrap();
+        assert!(lock.path().is_file());
+        // flock conflicts apply between independent opens even within
+        // one process, so the in-process double-acquire is refused too.
+        let err = DirLock::acquire(&dir).unwrap_err();
+        assert!(matches!(err, TgmError::Persist(_)), "{err}");
+        assert!(err.to_string().contains("already holds"), "{err}");
+        drop(lock);
+        // Released: a fresh acquisition succeeds over the same file.
+        let again = DirLock::acquire(&dir).unwrap();
+        drop(again);
+    }
+
+    #[test]
+    fn stale_lock_file_without_a_holder_is_acquirable() {
+        let dir = test_dir("stale");
+        std::fs::create_dir_all(&dir).unwrap();
+        // A LOCK file with no live flock (e.g. left by a killed process;
+        // here simply written by hand) must not block acquisition.
+        std::fs::write(dir.join(LOCK_FILE), b"pid 999999").unwrap();
+        let lock = DirLock::acquire(&dir);
+        #[cfg(unix)]
+        lock.unwrap();
+        #[cfg(not(unix))]
+        lock.unwrap_err(); // no liveness check without flock: refused
+    }
+}

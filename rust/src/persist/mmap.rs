@@ -1,0 +1,261 @@
+//! Read-only memory mapping for sealed segment files.
+//!
+//! The heap read path ([`super::format::decode_segment`]) copies every
+//! column out of the file; on recovery that means re-allocating the
+//! whole store even though the bytes are already sitting in the kernel
+//! page cache. [`Mmap`] maps a sealed file read-only instead, and
+//! [`MappedSlice`] exposes a typed column as a plain `&[T]` straight
+//! over the mapping — zero copies, zero steady-state heap, and pages
+//! that the kernel can evict and fault back on demand. Sealed segment
+//! files are immutable by construction (compaction replaces them
+//! wholesale via rename), so a private read-only mapping can never
+//! observe a torn update.
+//!
+//! The mapping is created through a direct `mmap(2)`/`munmap(2)` FFI
+//! declaration — the crate stays dependency-free offline — and is only
+//! compiled on 64-bit unix targets; everywhere else
+//! [`supported`] reports `false` and callers fall back to the heap
+//! decoder (byte-identical serving either way, pinned by the
+//! `SegmentBacking` tests).
+
+use crate::error::{Result, TgmError};
+use std::path::Path;
+use std::sync::Arc;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// True when this build can serve mmap-backed segments (64-bit unix).
+pub fn supported() -> bool {
+    cfg!(all(unix, target_pointer_width = "64"))
+}
+
+/// A read-only, whole-file memory mapping. Immutable for its lifetime;
+/// unmapped on drop.
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+}
+
+// Safety: the mapping is PROT_READ over an immutable sealed file and is
+// never mutated or remapped after construction; concurrent reads from
+// any thread are therefore safe, and the unmap happens exactly once via
+// the owning Arc's final drop.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only in its entirety.
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn open(path: &Path) -> Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path).map_err(|e| {
+            TgmError::Persist(format!("cannot open {} for mapping: {e}", path.display()))
+        })?;
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len).map_err(|_| {
+            TgmError::Persist(format!("{} is too large to map", path.display()))
+        })?;
+        if len == 0 {
+            return Err(TgmError::Persist(format!(
+                "{} is empty (segment files are never empty)",
+                path.display()
+            )));
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(TgmError::Persist(format!(
+                "mmap of {} failed: {}",
+                path.display(),
+                std::io::Error::last_os_error()
+            )));
+        }
+        // The fd can close now: the mapping keeps the inode alive.
+        Ok(Mmap { ptr: ptr as *const u8, len })
+    }
+
+    /// Unsupported-platform stub (callers should consult [`supported`]
+    /// and fall back to the heap decoder).
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    pub fn open(path: &Path) -> Result<Mmap> {
+        Err(TgmError::Persist(format!(
+            "mmap-backed segments are not supported on this platform ({})",
+            path.display()
+        )))
+    }
+
+    /// The mapped bytes.
+    pub fn bytes(&self) -> &[u8] {
+        // Safety: ptr/len describe a live PROT_READ mapping for as long
+        // as `self` exists.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// Mapped length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Never true: zero-length files refuse to map.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        unsafe {
+            let _ = sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mmap({} bytes)", self.len)
+    }
+}
+
+/// One typed column served directly from a shared [`Mmap`]: a byte
+/// offset + element count, validated against bounds and alignment at
+/// construction so [`MappedSlice::as_slice`] is branch-free.
+pub struct MappedSlice<T> {
+    map: Arc<Mmap>,
+    offset: usize,
+    len: usize,
+    _ty: std::marker::PhantomData<T>,
+}
+
+impl<T: Copy> MappedSlice<T> {
+    /// View `len` elements of `T` at byte `offset` of `map`. Typed error
+    /// when the range leaves the mapping or the offset is misaligned
+    /// for `T` (mmap bases are page-aligned, so file-relative alignment
+    /// is mapping-relative alignment).
+    pub(crate) fn new(map: Arc<Mmap>, offset: usize, len: usize) -> Result<MappedSlice<T>> {
+        let end = len
+            .checked_mul(std::mem::size_of::<T>())
+            .and_then(|b| offset.checked_add(b));
+        if !end.is_some_and(|e| e <= map.len()) {
+            return Err(TgmError::Persist(format!(
+                "mapped column [{offset}, +{len} x {}B] leaves the {}-byte mapping",
+                std::mem::size_of::<T>(),
+                map.len()
+            )));
+        }
+        if offset % std::mem::align_of::<T>() != 0 {
+            return Err(TgmError::Persist(format!(
+                "mapped column at byte offset {offset} is misaligned for a {}-byte element",
+                std::mem::align_of::<T>()
+            )));
+        }
+        Ok(MappedSlice { map, offset, len, _ty: std::marker::PhantomData })
+    }
+
+    /// The column as a plain slice over the page cache.
+    pub fn as_slice(&self) -> &[T] {
+        // Safety: bounds and alignment were validated in `new`; T is a
+        // plain-old-data numeric type (the callers instantiate i64, u32
+        // and f32 only), for which any bit pattern is a valid value;
+        // the backing mapping is immutable and outlives `self` via the
+        // shared Arc.
+        unsafe {
+            let base = self.map.bytes().as_ptr().add(self.offset);
+            std::slice::from_raw_parts(base as *const T, self.len)
+        }
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for MappedSlice<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MappedSlice({} elems at +{})", self.len, self.offset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_file(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("tgm_mmap_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(tag);
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn maps_round_trip_bytes() {
+        if !supported() {
+            return;
+        }
+        let data: Vec<u8> = (0..=255u8).collect();
+        let path = test_file("round_trip.bin", &data);
+        let map = Mmap::open(&path).unwrap();
+        assert_eq!(map.len(), 256);
+        assert!(!map.is_empty());
+        assert_eq!(map.bytes(), &data[..]);
+    }
+
+    #[test]
+    fn typed_slices_validate_bounds_and_alignment() {
+        if !supported() {
+            return;
+        }
+        let vals: Vec<i64> = (0..32).collect();
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let path = test_file("typed.bin", &bytes);
+        let map = Arc::new(Mmap::open(&path).unwrap());
+
+        let col: MappedSlice<i64> = MappedSlice::new(Arc::clone(&map), 0, 32).unwrap();
+        assert_eq!(col.as_slice(), &vals[..]);
+        let tail: MappedSlice<i64> = MappedSlice::new(Arc::clone(&map), 8, 31).unwrap();
+        assert_eq!(tail.as_slice(), &vals[1..]);
+        // Out of bounds and misaligned views are typed errors.
+        assert!(MappedSlice::<i64>::new(Arc::clone(&map), 0, 33).is_err());
+        assert!(MappedSlice::<i64>::new(Arc::clone(&map), 4, 1).is_err());
+        // Empty views at any valid offset are fine.
+        let empty: MappedSlice<i64> = MappedSlice::new(Arc::clone(&map), 256, 0).unwrap();
+        assert!(empty.as_slice().is_empty());
+    }
+
+    #[test]
+    fn missing_and_empty_files_are_typed_errors() {
+        if !supported() {
+            return;
+        }
+        let missing = std::env::temp_dir().join("tgm_mmap_never_written.bin");
+        assert!(matches!(Mmap::open(&missing).unwrap_err(), TgmError::Persist(_)));
+        let path = test_file("empty.bin", &[]);
+        assert!(matches!(Mmap::open(&path).unwrap_err(), TgmError::Persist(_)));
+    }
+}

@@ -209,12 +209,31 @@ impl TenantHandle {
     /// events before the offending one remain appended — the stream
     /// position is the caller's to manage, exactly as with
     /// [`SegmentedStorage::append`].
+    ///
+    /// Under `DurabilityPolicy::with_group_commit` the chunk is
+    /// acknowledged only after its group fsync lands: the appends
+    /// buffer under the writer lock, then the barrier waits **outside**
+    /// it — so concurrent ingest threads on one tenant share a single
+    /// fsync per commit window instead of paying one each, and the
+    /// writer lock is never held across disk latency.
     pub fn ingest(&self, events: impl IntoIterator<Item = Event>) -> Result<usize> {
-        let mut w = self.writer();
-        let mut n = 0usize;
-        for ev in events {
-            w.append(ev)?;
-            n += 1;
+        let (n, sync) = {
+            let mut w = self.writer();
+            let mut n = 0usize;
+            for ev in events {
+                w.append(ev)?;
+                n += 1;
+            }
+            (n, w.wal_sync())
+        };
+        if let Some(sync) = sync {
+            if let Err(e) = sync.barrier() {
+                // The chunk's fsync outcome is unknown: poison the
+                // store so nothing further is falsely acknowledged, and
+                // report the chunk as not ingested durably.
+                self.writer().poison_durability("a group-commit fsync failed during ingest");
+                return Err(e);
+            }
         }
         Ok(n)
     }
@@ -522,11 +541,21 @@ mod tests {
         let err = router.add_tenant("w-dup", cfg()).unwrap_err();
         assert!(err.to_string().contains("exclusive"), "{err}");
 
-        // A num_nodes mismatch on recovery is a typed serving error.
+        // A second *router* (stand-in for a second process) is fenced by
+        // the directory lock while the first tenant's store is alive.
         let mut router2 = TenantRouter::new();
+        let err = router2.add_tenant("w2", cfg()).unwrap_err();
+        assert!(matches!(err, TgmError::Persist(_)), "{err}");
+        assert!(err.to_string().contains("already holds"), "{err}");
+
+        // Once the first tenant is gone the lock is free, and a
+        // num_nodes mismatch on recovery is a typed serving error.
+        drop(snap);
+        drop(handle);
+        drop(router);
         let err = router2
             .add_tenant(
-                "w2",
+                "w3",
                 TenantConfig::new(3).with_durability(DurabilityPolicy::new(&dir)),
             )
             .unwrap_err();

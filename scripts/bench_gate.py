@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate.
+
+Collects ``BENCH_METRIC <name> <value>`` rows printed by
+``cargo bench --bench ablations`` (see ``benches/common.rs::metric``),
+writes them to a JSON summary artifact (``BENCH_PR5.json``), and fails
+when any metric named in the committed baseline's ``gates`` map regressed
+by more than ``tolerance`` (throughput metrics: measured must be at least
+``baseline * (1 - tolerance)``).
+
+Usage:
+    bench_gate.py --baseline bench-baseline.json --output BENCH_PR5.json LOG...
+    bench_gate.py --write-baseline --baseline bench-baseline.json LOG...
+    bench_gate.py --self-test LOG...
+
+``--write-baseline`` refreshes the baseline's gate values from the
+measured log (run it on a quiet machine, commit the result).
+
+``--self-test`` proves the gate can fail: it fabricates a sandbagged
+baseline (every gated metric 10x the measured value) and exits 0 only if
+the comparison correctly reports regressions — guarding against the gate
+rotting into a rubber stamp.
+
+Opt-out: the workflow skips the job when the PR carries the
+``skip-bench-gate`` label (documented in ``.github/workflows/ci.yml``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+METRIC_RE = re.compile(r"^BENCH_METRIC\s+(\S+)\s+([-+0-9.eE]+)\s*$")
+
+
+def collect_metrics(paths: list[str]) -> dict[str, float]:
+    """Last value wins when a metric is printed twice."""
+    metrics: dict[str, float] = {}
+    for path in paths:
+        for line in Path(path).read_text().splitlines():
+            m = METRIC_RE.match(line.strip())
+            if m:
+                metrics[m.group(1)] = float(m.group(2))
+    return metrics
+
+
+def compare(metrics: dict[str, float], baseline: dict) -> list[str]:
+    """Return human-readable failure rows (empty == gate passes)."""
+    tolerance = float(baseline.get("tolerance", 0.20))
+    failures = []
+    for name, base in sorted(baseline.get("gates", {}).items()):
+        if base is None:
+            continue  # recorded but not gated
+        measured = metrics.get(name)
+        if measured is None:
+            failures.append(
+                f"{name}: gated metric missing from the bench log "
+                "(did the bench section fail to run?)"
+            )
+            continue
+        floor = float(base) * (1.0 - tolerance)
+        if measured < floor:
+            drop = 100.0 * (1.0 - measured / float(base))
+            failures.append(
+                f"{name}: {measured:.1f} is {drop:.1f}% below baseline "
+                f"{float(base):.1f} (tolerance {tolerance:.0%})"
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("logs", nargs="+", help="bench output file(s) to scan")
+    ap.add_argument("--baseline", default="bench-baseline.json")
+    ap.add_argument("--output", default=None, help="write the metric summary JSON here")
+    ap.add_argument("--write-baseline", action="store_true")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+
+    metrics = collect_metrics(args.logs)
+    if not metrics:
+        print("bench-gate: no BENCH_METRIC rows found in the log", file=sys.stderr)
+        return 2
+
+    if args.self_test:
+        # Only strictly positive throughput-style metrics sandbag
+        # meaningfully (a 10x-inflated floor must trip); ratio metrics
+        # that can sit at or below zero are excluded.
+        positive = {n: v for n, v in metrics.items() if v > 0}
+        if not positive:
+            print("bench-gate SELF-TEST FAILED: no positive metrics to sandbag", file=sys.stderr)
+            return 1
+        sandbagged = {
+            "tolerance": 0.20,
+            "gates": {name: value * 10.0 for name, value in positive.items()},
+        }
+        failures = compare(metrics, sandbagged)
+        if len(failures) != len(positive):
+            print(
+                "bench-gate SELF-TEST FAILED: a 10x-sandbagged baseline only "
+                f"tripped {len(failures)}/{len(positive)} gates",
+                file=sys.stderr,
+            )
+            return 1
+        print(
+            f"bench-gate self-test OK: sandbagged baseline tripped all "
+            f"{len(failures)} gates, the gate can fail"
+        )
+        return 0
+
+    baseline_path = Path(args.baseline)
+    baseline = json.loads(baseline_path.read_text()) if baseline_path.exists() else {}
+
+    if args.write_baseline:
+        gates = baseline.setdefault("gates", {})
+        for name in list(gates) or list(metrics):
+            # A null gate means "tracked, not gated" (e.g. lower-is-better
+            # write-amp ratios) — refreshing must not promote it into a
+            # gated throughput floor.
+            if name in metrics and gates.get(name, 0) is not None:
+                gates[name] = metrics[name]
+        baseline.setdefault("tolerance", 0.20)
+        baseline_path.write_text(json.dumps(baseline, indent=2, sort_keys=True) + "\n")
+        print(f"bench-gate: refreshed {baseline_path} from {len(metrics)} measured metrics")
+        return 0
+
+    failures = compare(metrics, baseline)
+    summary = {
+        "baseline": str(baseline_path),
+        "tolerance": baseline.get("tolerance", 0.20),
+        "metrics": dict(sorted(metrics.items())),
+        "failures": failures,
+    }
+    if args.output:
+        Path(args.output).write_text(json.dumps(summary, indent=2) + "\n")
+        print(f"bench-gate: wrote {args.output} ({len(metrics)} metrics)")
+
+    gated = [g for g, v in baseline.get("gates", {}).items() if v is not None]
+    if failures:
+        print("bench-gate: REGRESSIONS DETECTED", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        print(
+            "  (expected? re-run scripts/bench_gate.py --write-baseline on a quiet "
+            "machine and commit bench-baseline.json, or label the PR skip-bench-gate)",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"bench-gate OK: {len(gated)} gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
