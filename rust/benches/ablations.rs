@@ -18,6 +18,9 @@
 //! 8. Durable segment store: WAL overhead, recovery vs segment count,
 //!    tiered-vs-full compaction write amplification at 16/64 sealed
 //!    segments, and per-append fsync vs group-commit throughput.
+//! 9. SIMD kernels: masked feature-row gather throughput (GB/s) and
+//!    timestamp filtered counts, selected backend vs the scalar
+//!    reference (`TGM_KERNELS=scalar` forces the fallback).
 //!
 //! `TGM_ABLATION=streaming,sharded,persist` runs a comma-selected
 //! subset (CI's bench-regression job does exactly that); unset runs
@@ -71,6 +74,82 @@ fn main() {
     let streaming_on = common::section_enabled("streaming");
     let sharded_on = common::section_enabled("sharded");
     let persist_on = common::section_enabled("persist");
+    let kernels_on = common::section_enabled("kernels");
+
+    // 9. SIMD kernel microbench (`ablation.kernels`): raw primitive
+    //    throughput under whichever backend the runtime dispatch picked,
+    //    next to the scalar reference the property tests pin it against.
+    if kernels_on {
+        use tgm::kernels;
+        let rows = 200_000usize;
+        let dim = 16usize;
+        let feats: Vec<f32> = (0..rows * dim).map(|i| (i % 97) as f32).collect();
+        let n = 50_000usize;
+        let mut state = 0x2545F4914F6CDD1Du64;
+        let eidx: Vec<u32> = (0..n)
+            .map(|_| {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                (state % rows as u64) as u32
+            })
+            .collect();
+        let mask: Vec<f32> = (0..n).map(|i| if i % 8 == 7 { 0.0 } else { 1.0 }).collect();
+        let mut out = vec![0.0f32; n * dim];
+        // Bytes actually moved per pass: read + write of unmasked rows.
+        let live_rows = mask.iter().filter(|&&m| m > 0.0).count();
+        let bytes_per_pass = (2 * live_rows * dim * 4) as f64;
+        let fast = common::time_runs(3, 10, || {
+            kernels::gather_rows_masked_f32(&feats, dim, &eidx, &mask, &mut out);
+            out[0]
+        });
+        let slow = common::time_runs(3, 10, || {
+            kernels::gather_rows_masked_f32_scalar(&feats, dim, &eidx, &mask, &mut out);
+            out[0]
+        });
+        let gbps = bytes_per_pass / common::mean(&fast).max(1e-12) / 1e9;
+        common::report(
+            "ablation.kernels",
+            &format!("row gather, {} backend", kernels::backend()),
+            &fast,
+        );
+        common::report("ablation.kernels", "row gather, scalar reference", &slow);
+        println!(
+            "ablation.kernels | gather {gbps:.2} GB/s on {} backend ({:.2}x vs scalar)",
+            kernels::backend(),
+            common::mean(&slow) / common::mean(&fast).max(1e-12)
+        );
+        common::metric("kernels.gather_gbps", gbps);
+
+        // Filtered counts over adjacency-sized sorted runs (the
+        // `neighbors_before` time cut): linear SIMD vs partition_point.
+        let ts: Vec<i64> = (0..200i64).map(|i| i * 3).collect();
+        let cuts: Vec<i64> = (0..10_000i64).map(|i| i % 650).collect();
+        let cnt_fast = common::time_runs(3, 10, || {
+            let mut acc = 0usize;
+            for &c in &cuts {
+                acc += kernels::count_lt(&ts, c);
+            }
+            acc
+        });
+        let cnt_slow = common::time_runs(3, 10, || {
+            let mut acc = 0usize;
+            for &c in &cuts {
+                acc += kernels::count_lt_scalar(&ts, c);
+            }
+            acc
+        });
+        common::report(
+            "ablation.kernels",
+            &format!("count_lt 200-ts runs, {} backend", kernels::backend()),
+            &cnt_fast,
+        );
+        common::report("ablation.kernels", "count_lt 200-ts runs, partition_point", &cnt_slow);
+        println!(
+            "ablation.kernels | count_lt {:.2}x vs partition_point on 200-ts runs",
+            common::mean(&cnt_slow) / common::mean(&cnt_fast).max(1e-12)
+        );
+    }
 
     if sampler_on || ts_index_on {
         let data = gen::by_name("lastfm", 0.5 * scale, 42).unwrap();
@@ -111,11 +190,13 @@ fn main() {
             common::report("ablation.sampler", "recency (circular buffer)", &r);
             common::report("ablation.sampler", "uniform (CSR)", &u);
             common::report("ablation.sampler", "naive (DyGLib history copies)", &nv);
+            let samples_per_s = (2.0 * edges as f64) / common::mean(&r).max(1e-12);
             println!(
                 "ablation.sampler | recency speedup vs naive: {:.2}x ({:.2}M samples/s)",
                 common::mean(&nv) / common::mean(&r).max(1e-12),
-                (2.0 * edges as f64) / common::mean(&r).max(1e-12) / 1e6
+                samples_per_s / 1e6
             );
+            common::metric("sampler.samples_per_s", samples_per_s);
         }
 
         // 3. Cached timestamp index vs raw binary search.

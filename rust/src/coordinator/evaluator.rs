@@ -124,6 +124,7 @@ impl Pipeline<'_> {
         let pstats = loader.stats();
         drop(loader);
         self.profiler.add_overlap(pstats.worker_busy, pstats.consumer_blocked);
+        self.profiler.add_materialization(pstats.mat_batches, pstats.mat_bytes, pstats.mat_cycles);
         self.drain_hook_timings_pub();
         Ok(EvalReport {
             mrr: Some(stats::mean(&rrs)),

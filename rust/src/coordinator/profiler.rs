@@ -16,6 +16,12 @@ pub struct Profiler {
     /// time vs how much of it leaked into the consumer's critical path.
     overlap_busy: Duration,
     overlap_blocked: Duration,
+    /// Per-batch materialization raw-speed counters: batches built,
+    /// bytes of batch arenas produced, and cycles spent building them
+    /// ([`crate::kernels::cycles`] — rdtsc ticks on x86_64).
+    mat_batches: u64,
+    mat_bytes: u64,
+    mat_cycles: u64,
 }
 
 impl Profiler {
@@ -31,6 +37,27 @@ impl Profiler {
     pub fn add_overlap(&mut self, busy: Duration, blocked: Duration) {
         self.overlap_busy += busy;
         self.overlap_blocked += blocked;
+    }
+
+    /// Record batch-materialization raw-speed counters: `batches`
+    /// built, `bytes` of batch arenas produced, `cycles` spent building
+    /// them (rdtsc ticks on x86_64, monotonic nanoseconds elsewhere —
+    /// see [`crate::kernels::cycles`]).
+    pub fn add_materialization(&mut self, batches: u64, bytes: u64, cycles: u64) {
+        self.mat_batches += batches;
+        self.mat_bytes += bytes;
+        self.mat_cycles += cycles;
+    }
+
+    /// `(batches, bytes, cycles)` accumulated by
+    /// [`Self::add_materialization`]; `None` before any batch was
+    /// recorded.
+    pub fn materialization(&self) -> Option<(u64, u64, u64)> {
+        if self.mat_batches == 0 {
+            None
+        } else {
+            Some((self.mat_batches, self.mat_bytes, self.mat_cycles))
+        }
     }
 
     /// `(worker_busy, consumer_blocked, hidden)` if any prefetch run was
@@ -122,6 +149,9 @@ impl Profiler {
         self.started = None;
         self.overlap_busy = Duration::ZERO;
         self.overlap_blocked = Duration::ZERO;
+        self.mat_batches = 0;
+        self.mat_bytes = 0;
+        self.mat_cycles = 0;
     }
 }
 
@@ -139,6 +169,14 @@ impl std::fmt::Display for Profiler {
                 blocked.as_secs_f64(),
                 hidden.as_secs_f64(),
                 100.0 * hidden.as_secs_f64() / busy.as_secs_f64().max(1e-12)
+            )?;
+        }
+        if let Some((batches, bytes, cycles)) = self.materialization() {
+            writeln!(
+                f,
+                "materialization: {batches} batches, {:.1} KB/batch, {:.2} cycles/byte",
+                (bytes as f64 / batches as f64) / 1024.0,
+                cycles as f64 / (bytes as f64).max(1.0)
             )?;
         }
         Ok(())
@@ -202,5 +240,19 @@ mod tests {
         p.reset();
         assert!(p.overlap().is_none());
         assert!(format!("{p}").contains("category"));
+    }
+
+    #[test]
+    fn materialization_counters_accumulate_and_reset() {
+        let mut p = Profiler::new();
+        assert!(p.materialization().is_none());
+        p.add_materialization(2, 4096, 20_000);
+        p.add_materialization(1, 2048, 10_000);
+        assert_eq!(p.materialization(), Some((3, 6144, 30_000)));
+        let shown = format!("{p}");
+        assert!(shown.contains("materialization: 3 batches"), "{shown}");
+        assert!(shown.contains("cycles/byte"), "{shown}");
+        p.reset();
+        assert!(p.materialization().is_none());
     }
 }

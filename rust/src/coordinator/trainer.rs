@@ -280,6 +280,7 @@ impl<'e> Pipeline<'e> {
         let pstats = loader.stats();
         drop(loader);
         self.profiler.add_overlap(pstats.worker_busy, pstats.consumer_blocked);
+        self.profiler.add_materialization(pstats.mat_batches, pstats.mat_bytes, pstats.mat_cycles);
         self.drain_hook_timings();
         Ok(EpochReport {
             mean_loss: crate::util::stats::mean(&losses),

@@ -22,6 +22,7 @@
 
 use crate::graph::segment::{SnapshotId, StorageSnapshot};
 use crate::graph::storage::GraphStorage;
+use crate::kernels;
 use crate::util::Timestamp;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -86,10 +87,15 @@ impl TemporalAdjacency {
 
     /// Neighbors of `node` strictly before `t` (temporal neighborhood
     /// `N_t(s)`, paper Eq. 4 with strict inequality to prevent leakage).
+    ///
+    /// The time cut is a [`kernels::count_lt`] filtered count: a
+    /// branchless SIMD linear scan for the short per-node runs sampling
+    /// actually sees, binary search for long ones — identical to
+    /// `partition_point` either way because the run is time-sorted.
     pub fn neighbors_before(&self, node: u32, t: Timestamp) -> (&[u32], &[Timestamp], &[u32]) {
         let lo = self.offsets[node as usize] as usize;
         let hi = self.offsets[node as usize + 1] as usize;
-        let cut = lo + self.ts[lo..hi].partition_point(|&u| u < t);
+        let cut = lo + kernels::count_lt(&self.ts[lo..hi], t);
         (&self.nbr[lo..cut], &self.ts[lo..cut], &self.eidx[lo..cut])
     }
 
@@ -184,7 +190,7 @@ impl MergedAdjacency {
 
 /// One per-segment slice of a node's neighbor list:
 /// (neighbors, times, segment-local edge indices, logical edge base).
-type NeighborPart<'a> = (&'a [u32], &'a [Timestamp], &'a [u32], u32);
+pub type NeighborPart<'a> = (&'a [u32], &'a [Timestamp], &'a [u32], u32);
 
 /// A node's neighbor list assembled from per-segment slices — zero-copy,
 /// globally time-sorted (oldest first, index `len()-1` is the newest).
@@ -262,17 +268,84 @@ impl<'a> MergedNeighbors<'a> {
         })
     }
 
-    /// Copy the view into owned columns (the DyGLib-baseline cost model).
+    /// Copy the view into owned columns (the DyGLib-baseline cost model;
+    /// hot paths should prefer [`MergedNeighbors::collect_into`] with a
+    /// reused [`NeighborCols`] scratch instead).
     pub fn to_vecs(&self) -> (Vec<u32>, Vec<Timestamp>, Vec<u32>) {
-        let mut n = Vec::with_capacity(self.len);
-        let mut t = Vec::with_capacity(self.len);
-        let mut e = Vec::with_capacity(self.len);
+        let mut cols = NeighborCols::new();
+        self.collect_into(&mut cols);
+        (cols.nbr, cols.ts, cols.eidx)
+    }
+
+    /// Copy the view into a reusable [`NeighborCols`] scratch buffer —
+    /// the allocation-free replacement for [`MergedNeighbors::to_vecs`]
+    /// on the sampler hot path (the scratch's capacity is retained
+    /// across seeds, so steady state allocates nothing). Edge indices
+    /// are rebased to logical snapshot indices via
+    /// [`kernels::add_offset_u32`].
+    pub fn collect_into(&self, out: &mut NeighborCols) {
+        out.clear();
+        out.reserve(self.len);
         for (ns, ts, es, base) in self.parts() {
-            n.extend_from_slice(ns);
-            t.extend_from_slice(ts);
-            e.extend(es.iter().map(|&x| x + base));
+            out.nbr.extend_from_slice(ns);
+            out.ts.extend_from_slice(ts);
+            kernels::add_offset_u32(es, *base, &mut out.eidx);
         }
-        (n, t, e)
+    }
+
+    /// The view's single contiguous part, if it has exactly one —
+    /// lets callers skip the scratch copy entirely in the common
+    /// single-segment case. Returns `(neighbors, times, local edge
+    /// indices, logical edge base)`.
+    pub fn single_part(&self) -> Option<NeighborPart<'a>> {
+        match &self.parts {
+            PartStore::One(p) => Some(*p),
+            _ => None,
+        }
+    }
+}
+
+/// Owned, reusable neighbor columns filled by
+/// [`MergedNeighbors::collect_into`]: `(nbr, ts, eidx)` with logical
+/// (snapshot-wide) edge indices. Keep one per sampler and reuse it
+/// across seeds to stay allocation-free in steady state.
+#[derive(Debug, Default, Clone)]
+pub struct NeighborCols {
+    /// Neighbor node ids, oldest-first.
+    pub nbr: Vec<u32>,
+    /// Event timestamps, non-decreasing.
+    pub ts: Vec<Timestamp>,
+    /// Logical edge indices into the owning snapshot.
+    pub eidx: Vec<u32>,
+}
+
+impl NeighborCols {
+    /// Empty scratch.
+    pub fn new() -> NeighborCols {
+        NeighborCols::default()
+    }
+
+    /// Number of triples currently held.
+    pub fn len(&self) -> usize {
+        self.nbr.len()
+    }
+
+    /// True when no triples are held.
+    pub fn is_empty(&self) -> bool {
+        self.nbr.is_empty()
+    }
+
+    /// Drop contents, keep capacity.
+    pub fn clear(&mut self) {
+        self.nbr.clear();
+        self.ts.clear();
+        self.eidx.clear();
+    }
+
+    fn reserve(&mut self, n: usize) {
+        self.nbr.reserve(n);
+        self.ts.reserve(n);
+        self.eidx.reserve(n);
     }
 }
 
@@ -491,6 +564,42 @@ mod tests {
         for i in 0..view.len() {
             assert_eq!(view.get(i), (n[i], t[i], e[i]));
         }
+    }
+
+    #[test]
+    fn collect_into_reuses_scratch_and_matches_to_vecs() {
+        // Multi-segment snapshot so edge-index rebasing is exercised.
+        let mut st = SegmentedStorage::new(6, SealPolicy::by_events(3));
+        for i in 0..12u32 {
+            st.append_edge(EdgeEvent {
+                t: i as i64,
+                src: i % 3,
+                dst: 3 + (i % 2),
+                features: vec![],
+            })
+            .unwrap();
+        }
+        let snap = st.snapshot().unwrap();
+        let merged = MergedAdjacency::build(&snap);
+        let mut cols = NeighborCols::new();
+        for node in 0..6u32 {
+            for t in [0i64, 5, 100] {
+                let view = merged.neighbors_before(node, t);
+                view.collect_into(&mut cols);
+                let (n, ts, e) = view.to_vecs();
+                assert_eq!(cols.nbr, n, "node {node} t {t}");
+                assert_eq!(cols.ts, ts);
+                assert_eq!(cols.eidx, e);
+                assert_eq!(cols.len(), view.len());
+            }
+        }
+        // Scratch capacity survives clears: fill big, then small.
+        let big = merged.neighbors(0);
+        big.collect_into(&mut cols);
+        let cap = cols.nbr.capacity();
+        merged.neighbors_before(0, 0).collect_into(&mut cols);
+        assert!(cols.is_empty());
+        assert_eq!(cols.nbr.capacity(), cap, "clear must keep capacity");
     }
 
     #[test]

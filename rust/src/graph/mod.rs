@@ -11,7 +11,9 @@ pub mod segment;
 pub mod storage;
 pub mod view;
 
-pub use adjacency::{AdjacencyCache, MergedAdjacency, MergedNeighbors, TemporalAdjacency};
+pub use adjacency::{
+    AdjacencyCache, MergedAdjacency, MergedNeighbors, NeighborCols, TemporalAdjacency,
+};
 pub use data::{DGData, DatasetStats, Splits, Task};
 pub use discretize::{discretize, discretize_utg, ReduceOp};
 pub use events::{EdgeEvent, Event, NodeEvent, NodeId};

@@ -47,6 +47,7 @@
 use crate::error::{Result, TgmError};
 use crate::graph::events::{EdgeEvent, Event, NodeEvent, NodeId};
 use crate::graph::storage::GraphStorage;
+use crate::kernels;
 use crate::persist::format::read_segment_backed;
 use crate::persist::wal::WalSync;
 use crate::persist::{plan_tiered_run, Durability, DurabilityPolicy, SegmentBacking, StoreMeta};
@@ -1294,6 +1295,33 @@ impl StorageSnapshot {
         self.segments[s].edge_feat_row(i - self.edge_bases[s])
     }
 
+    /// Batch feature-row gather into a dense arena: for every slot `o`
+    /// with `mask[o] > 0.0`, copy the feature row of logical edge
+    /// `eidx[o]` into `out[o * d..(o + 1) * d]` (`d` =
+    /// [`Self::edge_feat_dim`]); masked-off slots are left untouched.
+    ///
+    /// Single-segment snapshots (every one-shot dataset) run the whole
+    /// gather as one [`crate::kernels::gather_rows_masked_f32`] call
+    /// straight over the segment's (possibly mmap-backed) column;
+    /// multi-segment snapshots resolve the owning segment per slot.
+    pub fn gather_edge_feat_rows(&self, eidx: &[u32], mask: &[f32], out: &mut [f32]) {
+        let d = self.edge_feat_dim();
+        if d == 0 {
+            return;
+        }
+        if self.segments.len() == 1 {
+            kernels::gather_rows_masked_f32(self.segments[0].edge_feats(), d, eidx, mask, out);
+            return;
+        }
+        assert_eq!(eidx.len(), mask.len(), "eidx/mask length mismatch");
+        assert!(out.len() >= mask.len() * d, "output arena too small");
+        for (o, (&m, &e)) in mask.iter().zip(eidx.iter()).enumerate() {
+            if m > 0.0 {
+                out[o * d..(o + 1) * d].copy_from_slice(self.edge_feat_row(e as usize));
+            }
+        }
+    }
+
     /// `(timestamp, node)` of the logical `i`-th node event.
     pub fn node_event_at(&self, i: usize) -> (Timestamp, NodeId) {
         let s = self.node_segment_of(i);
@@ -1480,6 +1508,32 @@ mod tests {
         assert_eq!(snap.start_time(), reference.start_time());
         assert_eq!(snap.end_time(), reference.end_time());
         assert_eq!(snap.num_unique_timestamps(), reference.num_unique_timestamps());
+    }
+
+    #[test]
+    fn batch_feat_gather_matches_per_row_lookups() {
+        let events = stream(60);
+        // One single-segment and one multi-segment snapshot: both paths.
+        for seal_every in [100usize, 9] {
+            let mut st = build_segmented(&events, seal_every);
+            st.seal().unwrap();
+            let snap = st.snapshot().unwrap();
+            let d = snap.edge_feat_dim();
+            assert_eq!(d, 2);
+            let eidx: Vec<u32> = (0..snap.num_edges() as u32).rev().collect();
+            let mask: Vec<f32> =
+                (0..eidx.len()).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+            let mut out = vec![0.0f32; eidx.len() * d];
+            snap.gather_edge_feat_rows(&eidx, &mask, &mut out);
+            for (o, (&m, &e)) in mask.iter().zip(eidx.iter()).enumerate() {
+                let want: Vec<f32> = if m > 0.0 {
+                    snap.edge_feat_row(e as usize).to_vec()
+                } else {
+                    vec![0.0; d]
+                };
+                assert_eq!(&out[o * d..(o + 1) * d], &want[..], "slot {o} seal {seal_every}");
+            }
+        }
     }
 
     #[test]

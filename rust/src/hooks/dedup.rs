@@ -11,8 +11,16 @@
 use crate::error::Result;
 use crate::hooks::batch::{attr, MaterializedBatch};
 use crate::hooks::hook::{HookContext, StatelessHook};
+use crate::kernels;
 use crate::util::Tensor;
 use std::collections::HashMap;
+
+/// While the unique set is at most this large, membership is resolved
+/// by a [`kernels::position_u32`] linear scan (eight lanes per step, no
+/// hashing, no allocation); beyond it the hook migrates to a `HashMap`.
+/// Typical TGB batches (200 positives + negatives over power-law node
+/// reuse) stay under this bound.
+const SCAN_MAX: usize = 128;
 
 /// Deduplicate `src ++ dst [++ negatives] [++ eval_negatives]` seeds.
 /// Stateless: a pure function of the batch, safe on any prefetch worker.
@@ -59,14 +67,34 @@ impl StatelessHook for DedupHook {
             seeds.extend_from_slice(batch.get(attr::EVAL_NEGATIVES)?.as_i32()?);
         }
 
-        let mut first_row: HashMap<i32, i32> = HashMap::with_capacity(seeds.len());
+        // Hybrid membership: SIMD linear scan over the (bit-cast u32)
+        // unique list while it is short, HashMap once it is not. The
+        // first-occurrence order — and therefore the output — is
+        // identical on every path.
         let mut unique: Vec<i32> = Vec::new();
+        let mut probe: Vec<u32> = Vec::new();
+        let mut first_row: Option<HashMap<i32, i32>> = None;
         let mut inverse: Vec<i32> = Vec::with_capacity(seeds.len());
         for &s in &seeds {
-            let row = *first_row.entry(s).or_insert_with(|| {
+            let row = if let Some(map) = first_row.as_mut() {
+                *map.entry(s).or_insert_with(|| {
+                    unique.push(s);
+                    (unique.len() - 1) as i32
+                })
+            } else if let Some(pos) = kernels::position_u32(&probe, s as u32) {
+                pos as i32
+            } else {
                 unique.push(s);
+                probe.push(s as u32);
+                if unique.len() > SCAN_MAX {
+                    let mut map: HashMap<i32, i32> = HashMap::with_capacity(seeds.len());
+                    for (i, &u) in unique.iter().enumerate() {
+                        map.insert(u, i as i32);
+                    }
+                    first_row = Some(map);
+                }
                 (unique.len() - 1) as i32
-            });
+            };
             inverse.push(row);
         }
         let u = unique.len();
@@ -116,6 +144,39 @@ mod tests {
         for (i, &s) in seeds.iter().enumerate() {
             assert_eq!(unique[inverse[i] as usize], s, "slot {i}");
         }
+    }
+
+    #[test]
+    fn dedup_survives_scan_to_hashmap_migration() {
+        // More uniques than SCAN_MAX, with repeats both before and after
+        // the migration point: inverse must keep first-occurrence rows.
+        let st = storage();
+        let ctx = HookContext::new(&st, "val");
+        let n = SCAN_MAX * 2 + 7;
+        let mut b = MaterializedBatch::new(0, 1);
+        b.src = (0..n as u32).collect();
+        b.dst = (0..n as u32).map(|i| i / 2).collect();
+        b.ts = vec![0; n];
+        b.edge_indices = vec![0; n];
+        let h = DedupHook::new(false, false);
+        h.apply(&mut b, &ctx).unwrap();
+        let unique = b.get(attr::UNIQUE_NODES).unwrap().as_i32().unwrap().to_vec();
+        let inverse = b.get(attr::UNIQUE_INVERSE).unwrap().as_i32().unwrap().to_vec();
+        assert_eq!(unique.len(), n);
+        assert_eq!(inverse.len(), 2 * n);
+        let seeds: Vec<i32> = b
+            .src
+            .iter()
+            .map(|&x| x as i32)
+            .chain(b.dst.iter().map(|&x| x as i32))
+            .collect();
+        for (i, &s) in seeds.iter().enumerate() {
+            assert_eq!(unique[inverse[i] as usize], s, "slot {i}");
+        }
+        // First occurrences appear in seed order.
+        let mut seen = std::collections::HashSet::new();
+        let want: Vec<i32> = seeds.iter().copied().filter(|&s| seen.insert(s)).collect();
+        assert_eq!(unique, want);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! per-slot deltas against each slot's own prediction time.
 
 use crate::error::Result;
-use crate::graph::AdjacencyCache;
+use crate::graph::{AdjacencyCache, NeighborCols};
 use crate::hooks::batch::{attr, MaterializedBatch};
 use crate::hooks::hook::{HookContext, StatelessHook};
 use crate::util::Tensor;
@@ -76,45 +76,74 @@ impl StatelessHook for UniqueRecencyLookup {
         let d = ctx.storage.edge_feat_dim();
         let cut = batch.start; // batch-level semantics: strictly before the window
 
+        // Per unique node: resolve the view's columns once (zero-copy
+        // for single-segment snapshots, one scratch copy otherwise)
+        // instead of part-walking `view.get` per slot, record the edge
+        // index per filled slot, and batch-gather all feature rows in
+        // one SIMD pass at the end.
         let mut ids = vec![0i32; u * k];
         let mut ts = vec![0.0f32; u * k];
         let mut mask = vec![0.0f32; u * k];
-        let mut feats = vec![0.0f32; u * k * d];
+        let mut eidx = vec![0u32; u * k];
+        let mut cols = NeighborCols::new();
         for (row, &node) in unique.iter().enumerate() {
             let view = adj.neighbors_before(node as u32, cut);
             let avail = view.len();
             let take = k.min(avail);
+            if take == 0 {
+                continue;
+            }
+            let (ns, tss, es, base) = match view.single_part() {
+                Some(p) => p,
+                None => {
+                    view.collect_into(&mut cols);
+                    (&cols.nbr[..], &cols.ts[..], &cols.eidx[..], 0u32)
+                }
+            };
             for slot in 0..take {
-                let (nbr, time, eidx) = view.get(avail - 1 - slot); // newest first
+                let j = avail - 1 - slot; // newest first
                 let o = row * k + slot;
-                ids[o] = nbr as i32;
-                ts[o] = time as f32;
+                ids[o] = ns[j] as i32;
+                ts[o] = tss[j] as f32;
                 mask[o] = 1.0;
-                feats[o * d..(o + 1) * d]
-                    .copy_from_slice(ctx.storage.edge_feat_row(eidx as usize));
+                eidx[o] = es[j] + base;
             }
         }
+        let mut feats = vec![0.0f32; u * k * d];
+        ctx.storage.gather_edge_feat_rows(&eidx, &mask, &mut feats);
         if let Some(k2) = self.two_hop {
             let rows = u * k;
             let mut ids2 = vec![0i32; rows * k2];
             let mut ts2 = vec![0.0f32; rows * k2];
             let mut mask2 = vec![0.0f32; rows * k2];
-            let mut feats2 = vec![0.0f32; rows * k2 * d];
+            let mut eidx2 = vec![0u32; rows * k2];
             for o in 0..rows {
                 if mask[o] > 0.0 {
                     let view = adj.neighbors_before(ids[o] as u32, ts[o] as i64);
                     let avail = view.len();
-                    for slot in 0..k2.min(avail) {
-                        let (nbr, time, eidx) = view.get(avail - 1 - slot);
+                    let take = k2.min(avail);
+                    if take == 0 {
+                        continue;
+                    }
+                    let (ns, tss, es, base) = match view.single_part() {
+                        Some(p) => p,
+                        None => {
+                            view.collect_into(&mut cols);
+                            (&cols.nbr[..], &cols.ts[..], &cols.eidx[..], 0u32)
+                        }
+                    };
+                    for slot in 0..take {
+                        let j = avail - 1 - slot;
                         let q = o * k2 + slot;
-                        ids2[q] = nbr as i32;
-                        ts2[q] = time as f32;
+                        ids2[q] = ns[j] as i32;
+                        ts2[q] = tss[j] as f32;
                         mask2[q] = 1.0;
-                        feats2[q * d..(q + 1) * d]
-                            .copy_from_slice(ctx.storage.edge_feat_row(eidx as usize));
+                        eidx2[q] = es[j] + base;
                     }
                 }
             }
+            let mut feats2 = vec![0.0f32; rows * k2 * d];
+            ctx.storage.gather_edge_feat_rows(&eidx2, &mask2, &mut feats2);
             batch.set(UNIQUE_NBR2_IDS, Tensor::i32(ids2, &[rows, k2])?);
             batch.set(UNIQUE_NBR2_TS, Tensor::f32(ts2, &[rows, k2])?);
             batch.set(UNIQUE_NBR2_MASK, Tensor::f32(mask2, &[rows, k2])?);

@@ -33,14 +33,14 @@ pub enum DstRange {
     InferFromData,
 }
 
-/// `[min(dst), max(dst)+1)` of one segment's destination column.
+/// `[min(dst), max(dst)+1)` of one segment's destination column — a
+/// [`crate::kernels::min_max_u32`] SIMD reduction over the whole column.
+/// Empty segments keep the `(u32::MAX, 0)` fold identity.
 fn segment_dst_range(seg: &crate::graph::GraphStorage) -> (u32, u32) {
-    let (mut lo, mut hi) = (u32::MAX, 0u32);
-    for &d in seg.edge_dst() {
-        lo = lo.min(d);
-        hi = hi.max(d + 1);
+    match crate::kernels::min_max_u32(seg.edge_dst()) {
+        Some((lo, hi)) => (lo, hi + 1),
+        None => (u32::MAX, 0),
     }
-    (lo, hi)
 }
 
 /// Interior-mutable per-snapshot cache of the resolved id range, so

@@ -26,9 +26,10 @@
 //! * the `*2` two-hop variants `[S, K, K2]` when `two_hop` is set.
 
 use crate::error::{Result, TgmError};
-use crate::graph::{AdjacencyCache, StorageSnapshot};
+use crate::graph::{AdjacencyCache, NeighborCols, StorageSnapshot};
 use crate::hooks::batch::{attr, MaterializedBatch};
 use crate::hooks::hook::{Hook, HookContext, StatelessHook};
+use crate::kernels;
 use crate::util::{Rng, Tensor, Timestamp};
 
 /// Shared sampler configuration.
@@ -57,9 +58,26 @@ fn collect_seeds(
     batch: &MaterializedBatch,
     seed_negatives: bool,
 ) -> Result<(Vec<u32>, Vec<Timestamp>)> {
+    let mut nodes = Vec::new();
+    let mut times = Vec::new();
+    collect_seeds_into(batch, seed_negatives, &mut nodes, &mut times)?;
+    Ok((nodes, times))
+}
+
+/// [`collect_seeds`] into caller-owned scratch (cleared first, capacity
+/// retained across batches — the stateful sampler reuses one pair for
+/// its whole stream).
+fn collect_seeds_into(
+    batch: &MaterializedBatch,
+    seed_negatives: bool,
+    nodes: &mut Vec<u32>,
+    times: &mut Vec<Timestamp>,
+) -> Result<()> {
     let b = batch.num_edges();
-    let mut nodes = Vec::with_capacity(b * 3);
-    let mut times = Vec::with_capacity(b * 3);
+    nodes.clear();
+    times.clear();
+    nodes.reserve(b * 3);
+    times.reserve(b * 3);
     nodes.extend_from_slice(&batch.src);
     times.extend_from_slice(&batch.ts);
     nodes.extend_from_slice(&batch.dst);
@@ -75,7 +93,7 @@ fn collect_seeds(
         nodes.extend(negs.iter().map(|&n| n as u32));
         times.extend_from_slice(&batch.ts);
     }
-    Ok((nodes, times))
+    Ok(())
 }
 
 /// Common output buffers for one sampling pass.
@@ -114,13 +132,10 @@ impl SampleOut {
     }
 
     fn gather_features(&mut self, storage: &StorageSnapshot) {
-        if let Some((d, feats)) = &mut self.feats {
-            let d = *d;
-            for (o, (&m, &e)) in self.mask.iter().zip(&self.eidx).enumerate() {
-                if m > 0.0 {
-                    feats[o * d..(o + 1) * d].copy_from_slice(storage.edge_feat_row(e as usize));
-                }
-            }
+        if let Some((_, feats)) = &mut self.feats {
+            // One batched masked SIMD gather over the whole arena
+            // (single kernel call on single-segment snapshots).
+            storage.gather_edge_feat_rows(&self.eidx, &self.mask, feats);
         }
     }
 }
@@ -176,7 +191,10 @@ fn store_outputs(
 // Recency sampler (circular buffer)
 // ---------------------------------------------------------------------
 
-/// Per-node circular buffers in structure-of-arrays layout.
+/// Per-node circular buffers in structure-of-arrays layout. Capacity is
+/// always a power of two so every ring step is an AND mask instead of
+/// an integer division — the division sat on both the push and the
+/// sample inner loops.
 #[derive(Debug, Default)]
 struct CircularBuffers {
     cap: usize,
@@ -188,7 +206,10 @@ struct CircularBuffers {
 }
 
 impl CircularBuffers {
+    /// `cap` must be a power of two (callers round up via
+    /// [`usize::next_power_of_two`]).
     fn ensure(&mut self, num_nodes: usize, cap: usize) {
+        debug_assert!(cap.is_power_of_two());
         if self.nbr.len() != num_nodes * cap || self.cap != cap {
             self.cap = cap;
             self.nbr = vec![0; num_nodes * cap];
@@ -206,22 +227,30 @@ impl CircularBuffers {
         self.nbr[pos] = nbr;
         self.ts[pos] = t;
         self.eidx[pos] = eidx;
-        self.head[n] = (self.head[n] + 1) % self.cap as u32;
+        self.head[n] = (self.head[n] + 1) & (self.cap as u32 - 1);
         self.count[n] = (self.count[n] + 1).min(self.cap as u32);
     }
 
     /// Visit up to `k` most-recent entries with `ts < t`, newest first.
     #[inline]
-    fn sample_into(&self, node: u32, t: Timestamp, k: usize, mut f: impl FnMut(usize, u32, Timestamp, u32)) {
+    fn sample_into(
+        &self,
+        node: u32,
+        t: Timestamp,
+        k: usize,
+        mut f: impl FnMut(usize, u32, Timestamp, u32),
+    ) {
         let n = node as usize;
         let cnt = self.count[n] as usize;
         let base = n * self.cap;
+        let mask = self.cap - 1;
+        let newest = self.head[n] as usize + self.cap - 1;
         let mut slot = 0;
         for j in 0..cnt {
             if slot >= k {
                 break;
             }
-            let pos = base + (self.head[n] as usize + self.cap - 1 - j) % self.cap;
+            let pos = base + ((newest - j) & mask);
             if self.ts[pos] < t {
                 f(slot, self.nbr[pos], self.ts[pos], self.eidx[pos]);
                 slot += 1;
@@ -235,20 +264,212 @@ impl CircularBuffers {
     }
 }
 
+/// [`CircularBuffers`] sharded by `node_id % S`: shard `s` owns every
+/// node with `node % S == s`, stored under local index `node / S`.
+///
+/// Sharding exists so the stateful consumer-phase `update` can absorb a
+/// batch's edges with one thread per shard: a node's ring lives in
+/// exactly one shard, every shard scans the batch in edge order
+/// (src-endpoint before dst-endpoint within an edge), so each ring sees
+/// exactly the push sequence the serial walk would apply — the final
+/// state is byte-identical to serial, regardless of shard count or
+/// whether the parallel path engaged (pinned by the determinism tests).
+#[derive(Debug, Default)]
+struct ShardedBuffers {
+    shards: Vec<CircularBuffers>,
+}
+
+impl ShardedBuffers {
+    fn ensure(&mut self, num_nodes: usize, cap: usize, num_shards: usize) {
+        let cap = cap.next_power_of_two();
+        if self.shards.len() != num_shards {
+            self.shards = (0..num_shards).map(|_| CircularBuffers::default()).collect();
+        }
+        let per_shard = num_nodes.div_ceil(num_shards);
+        for shard in &mut self.shards {
+            shard.ensure(per_shard, cap);
+        }
+    }
+
+    #[inline]
+    fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn sample_into(
+        &self,
+        node: u32,
+        t: Timestamp,
+        k: usize,
+        f: impl FnMut(usize, u32, Timestamp, u32),
+    ) {
+        let s = self.shards.len();
+        if s == 1 {
+            self.shards[0].sample_into(node, t, k, f);
+        } else {
+            self.shards[node as usize % s].sample_into(node / s as u32, t, k, f);
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, node: u32, nbr: u32, t: Timestamp, eidx: u32) {
+        let s = self.shards.len();
+        if s == 1 {
+            self.shards[0].push(node, nbr, t, eidx);
+        } else {
+            self.shards[node as usize % s].push(node / s as u32, nbr, t, eidx);
+        }
+    }
+
+    fn clear(&mut self) {
+        for shard in &mut self.shards {
+            shard.clear();
+        }
+    }
+}
+
+/// Default threshold (in work items: seeds for sampling, endpoint
+/// pushes for updates) below which the sampler stays serial — scoped
+/// thread spawns cost more than they save on small batches. The output
+/// is byte-identical either way; the threshold only moves the cutover.
+const PARALLEL_THRESHOLD: usize = 4096;
+
+fn default_shards() -> usize {
+    if let Ok(v) = std::env::var("TGM_SAMPLER_SHARDS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
 /// TGM's vectorized recency sampler (circular buffer, `O(K)` per seed).
+///
+/// The per-node rings are sharded by `node_id % S` ([`ShardedBuffers`]);
+/// large batches run both the read phase (seed sampling, disjoint
+/// row-chunks of the output arenas) and the stateful consumer update
+/// (one thread per shard) in parallel, byte-identical to the serial
+/// walk. `S` defaults to the machine's available parallelism (capped at
+/// 8) and can be forced with `TGM_SAMPLER_SHARDS` or
+/// [`RecencySampler::with_shards`]; `TGM_SAMPLER_SHARDS=1` restores the
+/// fully serial sampler.
 pub struct RecencySampler {
     cfg: SamplerConfig,
-    buffers: CircularBuffers,
+    buffers: ShardedBuffers,
     /// Buffer capacity: keeps a margin above K so two-hop time filtering
-    /// still finds enough strictly-earlier entries.
+    /// still finds enough strictly-earlier entries. Rounded up to a
+    /// power of two by the ring allocator.
     cap: usize,
+    shards: usize,
+    parallel_threshold: usize,
+    /// Reused seed scratch (cleared per batch, capacity retained).
+    seed_nodes: Vec<u32>,
+    seed_times: Vec<Timestamp>,
 }
 
 impl RecencySampler {
     /// Create with the given config.
     pub fn new(cfg: SamplerConfig) -> RecencySampler {
         let cap = (cfg.num_neighbors.max(cfg.two_hop.unwrap_or(0)) * 2).max(4);
-        RecencySampler { cfg, buffers: CircularBuffers::default(), cap }
+        RecencySampler {
+            cfg,
+            buffers: ShardedBuffers::default(),
+            cap,
+            shards: default_shards(),
+            parallel_threshold: PARALLEL_THRESHOLD,
+            seed_nodes: Vec::new(),
+            seed_times: Vec::new(),
+        }
+    }
+
+    /// Override the shard count (1 = fully serial). Must be called
+    /// before the first batch (the rings are laid out per shard).
+    pub fn with_shards(mut self, shards: usize) -> RecencySampler {
+        self.shards = shards.max(1);
+        self.buffers = ShardedBuffers::default();
+        self
+    }
+
+    /// Override the work-item threshold below which batches are
+    /// processed serially (0 forces the parallel path; outputs are
+    /// byte-identical at any setting).
+    pub fn with_parallel_threshold(mut self, threshold: usize) -> RecencySampler {
+        self.parallel_threshold = threshold;
+        self
+    }
+
+    /// Sample one row-chunk of seeds into row-aligned output slices.
+    #[allow(clippy::too_many_arguments)]
+    fn sample_chunk(
+        buffers: &ShardedBuffers,
+        k: usize,
+        nodes: &[u32],
+        times: &[Timestamp],
+        ids: &mut [i32],
+        dts: &mut [f32],
+        mask: &mut [f32],
+        abs_ts: &mut [Timestamp],
+        eidx: &mut [u32],
+    ) {
+        for (row, (&node, &t)) in nodes.iter().zip(times).enumerate() {
+            buffers.sample_into(node, t, k, |slot, nbr, nbr_t, ei| {
+                let o = row * k + slot;
+                ids[o] = nbr as i32;
+                dts[o] = (t - nbr_t) as f32;
+                mask[o] = 1.0;
+                abs_ts[o] = nbr_t;
+                eidx[o] = ei;
+            });
+        }
+    }
+
+    /// Sample every seed into `out`, splitting the rows across scoped
+    /// threads when the batch is large enough. Each thread owns a
+    /// disjoint row range of every output arena, so the bytes written
+    /// are identical to the serial single-chunk walk.
+    fn sample_rows(&self, nodes: &[u32], times: &[Timestamp], k: usize, out: &mut SampleOut) {
+        let s = nodes.len();
+        if k == 0 {
+            return;
+        }
+        let workers = if self.shards <= 1 || s < self.parallel_threshold.max(1) {
+            1
+        } else {
+            self.shards.min(s)
+        };
+        if workers <= 1 {
+            Self::sample_chunk(
+                &self.buffers,
+                k,
+                nodes,
+                times,
+                &mut out.ids,
+                &mut out.dts,
+                &mut out.mask,
+                &mut out.abs_ts,
+                &mut out.eidx,
+            );
+            return;
+        }
+        let rows_per = s.div_ceil(workers);
+        let elems = rows_per * k;
+        let buffers = &self.buffers;
+        std::thread::scope(|scope| {
+            let chunks = nodes
+                .chunks(rows_per)
+                .zip(times.chunks(rows_per))
+                .zip(out.ids.chunks_mut(elems))
+                .zip(out.dts.chunks_mut(elems))
+                .zip(out.mask.chunks_mut(elems))
+                .zip(out.abs_ts.chunks_mut(elems))
+                .zip(out.eidx.chunks_mut(elems));
+            for ((((((ns, ts), ids), dts), mask), abs_ts), eidx) in chunks {
+                scope.spawn(move || {
+                    Self::sample_chunk(buffers, k, ns, ts, ids, dts, mask, abs_ts, eidx);
+                });
+            }
+        });
     }
 
     fn sample_all(
@@ -261,38 +482,61 @@ impl RecencySampler {
         let k = self.cfg.num_neighbors;
         let fd = self.cfg.include_features.then(|| storage.edge_feat_dim());
         let mut hop1 = SampleOut::new(s, k, fd);
-        for (row, (&node, &t)) in nodes.iter().zip(times).enumerate() {
-            self.buffers.sample_into(node, t, k, |slot, nbr, nbr_t, eidx| {
-                hop1.write(row, slot, nbr, nbr_t, t, eidx);
-            });
-        }
+        self.sample_rows(nodes, times, k, &mut hop1);
         hop1.gather_features(storage);
 
         let hop2 = self.cfg.two_hop.map(|k2| {
+            // Hop 2 is hop 1 re-run on synthesized seeds: every hop-1
+            // slot becomes a row seeded at its interaction time; empty
+            // slots get `i64::MIN`, which matches nothing (strict `<`),
+            // so they stay fully masked exactly like the old skip.
+            let nodes2: Vec<u32> = hop1.ids.iter().map(|&i| i as u32).collect();
+            let times2: Vec<Timestamp> = hop1
+                .mask
+                .iter()
+                .zip(&hop1.abs_ts)
+                .map(|(&m, &t)| if m > 0.0 { t } else { Timestamp::MIN })
+                .collect();
             let mut h2 = SampleOut::new(s * k, k2, fd);
-            for row in 0..s {
-                for slot in 0..k {
-                    let o = row * k + slot;
-                    if hop1.mask[o] > 0.0 {
-                        let (n1, t1) = (hop1.ids[o] as u32, hop1.abs_ts[o]);
-                        self.buffers.sample_into(n1, t1, k2, |s2, nbr, nbr_t, eidx| {
-                            h2.write(o, s2, nbr, nbr_t, t1, eidx);
-                        });
-                    }
-                }
-            }
+            self.sample_rows(&nodes2, &times2, k2, &mut h2);
             h2.gather_features(storage);
             h2
         });
         (hop1, hop2)
     }
 
+    /// Absorb the batch's edges into the rings (stateful consumer
+    /// phase). One thread per shard when the batch is large enough:
+    /// every shard scans the edges in order and keeps only its own
+    /// endpoints, so each ring receives exactly the serial push
+    /// sequence.
     fn update(&mut self, batch: &MaterializedBatch) {
-        for i in 0..batch.num_edges() {
-            let (s, d, t, e) = (batch.src[i], batch.dst[i], batch.ts[i], batch.edge_indices[i]);
-            self.buffers.push(s, d, t, e);
-            self.buffers.push(d, s, t, e);
+        let e = batch.num_edges();
+        let num = self.buffers.num_shards();
+        if num <= 1 || e * 2 < self.parallel_threshold.max(1) {
+            for i in 0..e {
+                let (s, d, t, ei) =
+                    (batch.src[i], batch.dst[i], batch.ts[i], batch.edge_indices[i]);
+                self.buffers.push(s, d, t, ei);
+                self.buffers.push(d, s, t, ei);
+            }
+            return;
         }
+        let (src, dst, ts, eidx) = (&batch.src, &batch.dst, &batch.ts, &batch.edge_indices);
+        std::thread::scope(|scope| {
+            for (sid, shard) in self.buffers.shards.iter_mut().enumerate() {
+                scope.spawn(move || {
+                    for i in 0..e {
+                        if src[i] as usize % num == sid {
+                            shard.push(src[i] / num as u32, dst[i], ts[i], eidx[i]);
+                        }
+                        if dst[i] as usize % num == sid {
+                            shard.push(dst[i] / num as u32, src[i], ts[i], eidx[i]);
+                        }
+                    }
+                });
+            }
+        });
     }
 }
 
@@ -310,12 +554,16 @@ impl Hook for RecencySampler {
     }
 
     fn apply(&mut self, batch: &mut MaterializedBatch, ctx: &HookContext<'_>) -> Result<()> {
-        self.buffers.ensure(ctx.storage.num_nodes(), self.cap);
-        let (nodes, times) = collect_seeds(batch, self.cfg.seed_negatives)?;
+        self.buffers.ensure(ctx.storage.num_nodes(), self.cap, self.shards);
+        let mut nodes = std::mem::take(&mut self.seed_nodes);
+        let mut times = std::mem::take(&mut self.seed_times);
+        collect_seeds_into(batch, self.cfg.seed_negatives, &mut nodes, &mut times)?;
         // Sample from *past* state first, then absorb this batch's edges.
         let (hop1, hop2) = self.sample_all(ctx.storage, &nodes, &times);
         store_outputs(batch, nodes.len(), hop1, hop2)?;
         self.update(batch);
+        self.seed_nodes = nodes;
+        self.seed_times = times;
         Ok(())
     }
 
@@ -368,16 +616,45 @@ impl StatelessHook for UniformSampler {
         let (nodes, times) = collect_seeds(batch, self.cfg.seed_negatives)?;
         let s = nodes.len();
         let k = self.cfg.num_neighbors;
+        let k2max = self.cfg.two_hop.unwrap_or(0);
         let fd = self.cfg.include_features.then(|| ctx.storage.edge_feat_dim());
+
+        // Per-seed scratch: random draw indices plus the gathered
+        // columns, reused across seeds (and a NeighborCols scratch for
+        // multi-part views). Draw order matches the old per-slot
+        // `view.get` walk exactly, so the RNG stream — and therefore
+        // the output — is unchanged.
+        let kmax = k.max(k2max);
+        let mut js: Vec<u32> = Vec::with_capacity(kmax);
+        let mut g_nbr = vec![0u32; kmax];
+        let mut g_ts = vec![0i64; kmax];
+        let mut g_eidx = vec![0u32; kmax];
+        let mut cols = NeighborCols::new();
 
         let mut hop1 = SampleOut::new(s, k, fd);
         for (row, (&node, &t)) in nodes.iter().zip(&times).enumerate() {
             let view = adj.neighbors_before(node, t);
             let avail = view.len();
-            for slot in 0..k.min(avail) {
-                let j = rng.below(avail as u64) as usize;
-                let (nbr, nbr_t, eidx) = view.get(j);
-                hop1.write(row, slot, nbr, nbr_t, t, eidx);
+            let take = k.min(avail);
+            if take == 0 {
+                continue;
+            }
+            js.clear();
+            for _ in 0..take {
+                js.push(rng.below(avail as u64) as u32);
+            }
+            let (ns, tss, es, base) = match view.single_part() {
+                Some(p) => p,
+                None => {
+                    view.collect_into(&mut cols);
+                    (&cols.nbr[..], &cols.ts[..], &cols.eidx[..], 0u32)
+                }
+            };
+            kernels::gather_u32(ns, &js, &mut g_nbr[..take]);
+            kernels::gather_i64(tss, &js, &mut g_ts[..take]);
+            kernels::gather_u32(es, &js, &mut g_eidx[..take]);
+            for slot in 0..take {
+                hop1.write(row, slot, g_nbr[slot], g_ts[slot], t, g_eidx[slot] + base);
             }
         }
         hop1.gather_features(ctx.storage);
@@ -389,10 +666,26 @@ impl StatelessHook for UniformSampler {
                     let (n1, t1) = (hop1.ids[o] as u32, hop1.abs_ts[o]);
                     let view = adj.neighbors_before(n1, t1);
                     let avail = view.len();
-                    for slot in 0..k2.min(avail) {
-                        let j = rng.below(avail as u64) as usize;
-                        let (nbr, nbr_t, eidx) = view.get(j);
-                        h2.write(o, slot, nbr, nbr_t, t1, eidx);
+                    let take = k2.min(avail);
+                    if take == 0 {
+                        continue;
+                    }
+                    js.clear();
+                    for _ in 0..take {
+                        js.push(rng.below(avail as u64) as u32);
+                    }
+                    let (ns, tss, es, base) = match view.single_part() {
+                        Some(p) => p,
+                        None => {
+                            view.collect_into(&mut cols);
+                            (&cols.nbr[..], &cols.ts[..], &cols.eidx[..], 0u32)
+                        }
+                    };
+                    kernels::gather_u32(ns, &js, &mut g_nbr[..take]);
+                    kernels::gather_i64(tss, &js, &mut g_ts[..take]);
+                    kernels::gather_u32(es, &js, &mut g_eidx[..take]);
+                    for slot in 0..take {
+                        h2.write(o, slot, g_nbr[slot], g_ts[slot], t1, g_eidx[slot] + base);
                     }
                 }
             }
@@ -568,6 +861,71 @@ mod tests {
         h2.apply(&mut b, &ctx).unwrap();
         assert_eq!(b.get(attr::NEIGHBORS).unwrap().shape(), &[15, 3]);
         drop(h);
+    }
+
+    /// Run a full batch stream through a sampler and collect every
+    /// produced tensor of every batch, flattened for byte comparison.
+    fn stream_outputs(
+        st: &StorageSnapshot,
+        mut h: RecencySampler,
+        keys: &[&str],
+    ) -> Vec<(Vec<i32>, Vec<u32>)> {
+        let ctx = HookContext::new(st, "train");
+        let mut out = Vec::new();
+        for (lo, hi) in [(0usize, 6), (6, 11), (11, 16), (16, 20)] {
+            let mut b = batch_from(st, lo..hi);
+            h.apply(&mut b, &ctx).unwrap();
+            for &key in keys {
+                let t = b.get(key).unwrap();
+                let ints = t.as_i32().map(|v| v.to_vec()).unwrap_or_else(|_| {
+                    t.as_f32().unwrap().iter().map(|&f| f.to_bits() as i32).collect()
+                });
+                out.push((ints, t.shape().iter().map(|&d| d as u32).collect()));
+            }
+        }
+        out
+    }
+
+    /// The tentpole determinism pin: sharded rings (1/2/4 shards) and
+    /// the forced-parallel update/sample paths must produce outputs
+    /// byte-identical to the serial single-shard baseline.
+    #[test]
+    fn sharded_sampler_is_byte_identical_to_serial() {
+        let st = storage();
+        let cfg = SamplerConfig { two_hop: Some(2), ..cfg() };
+        let keys = [
+            attr::NEIGHBORS,
+            attr::NEIGHBOR_TIMES,
+            attr::NEIGHBOR_MASK,
+            attr::NEIGHBOR_FEATS,
+            attr::NEIGHBORS_2,
+            attr::NEIGHBOR_TIMES_2,
+            attr::NEIGHBOR_MASK_2,
+            attr::NEIGHBOR_FEATS_2,
+        ];
+        let serial = stream_outputs(&st, RecencySampler::new(cfg.clone()).with_shards(1), &keys);
+        for shards in [1usize, 2, 4] {
+            // Threshold 0 forces the scoped-thread paths even on these
+            // tiny batches; usize::MAX forces the serial paths.
+            for threshold in [0usize, usize::MAX] {
+                let h = RecencySampler::new(cfg.clone())
+                    .with_shards(shards)
+                    .with_parallel_threshold(threshold);
+                let got = stream_outputs(&st, h, &keys);
+                assert_eq!(
+                    got, serial,
+                    "shards={shards} threshold={threshold} diverged from serial"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn env_shard_default_is_sane() {
+        // Whatever the machine, the default must be at least one shard.
+        let h = RecencySampler::new(cfg());
+        assert!(h.shards >= 1);
+        assert!(h.buffers.num_shards() == 0, "rings are laid out lazily");
     }
 
     #[test]

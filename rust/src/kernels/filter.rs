@@ -1,0 +1,118 @@
+//! Timestamp filtered counts over sorted columns.
+//!
+//! `neighbors_before` and the per-part time cut of `MergedNeighbors`
+//! both reduce to "how many timestamps in this sorted run are strictly
+//! below `t`". Per-node runs are short (tens of entries), where a
+//! branchless linear SIMD count beats binary search's unpredictable
+//! branches; long runs fall back to `partition_point`, which is optimal
+//! at scale. Both answers are identical because the input is sorted.
+
+/// Runs at or below this length take the linear (SIMD or branchless
+/// scalar) count; longer runs binary-search.
+const LINEAR_MAX: usize = 256;
+
+/// Number of elements of sorted `ts` strictly less than `t`.
+///
+/// Equivalent to `ts.partition_point(|&u| u < t)`; the caller must pass
+/// a non-decreasing slice (adjacency timestamp runs are sorted by
+/// construction).
+#[inline]
+pub fn count_lt(ts: &[i64], t: i64) -> usize {
+    if ts.len() > LINEAR_MAX {
+        return ts.partition_point(|&u| u < t);
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd_enabled() {
+        // Safety: AVX2 presence was checked by `simd_enabled`.
+        return unsafe { avx2::count_lt(ts, t) };
+    }
+    count_lt_linear(ts, t)
+}
+
+/// Scalar reference for [`count_lt`] (the property tests pin the SIMD
+/// path byte-identical to this).
+#[inline]
+pub fn count_lt_scalar(ts: &[i64], t: i64) -> usize {
+    ts.partition_point(|&u| u < t)
+}
+
+/// Branchless linear count; auto-vectorization friendly.
+#[inline]
+fn count_lt_linear(ts: &[i64], t: i64) -> usize {
+    ts.iter().map(|&u| usize::from(u < t)).sum()
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    #[cfg(target_arch = "x86_64")]
+    use core::arch::x86_64::*;
+
+    /// Linear SIMD count of elements `< t` in a sorted slice.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn count_lt(ts: &[i64], t: i64) -> usize {
+        let tv = _mm256_set1_epi64x(t);
+        let mut count = 0usize;
+        let chunks = ts.chunks_exact(4);
+        let tail = chunks.remainder();
+        for chunk in chunks {
+            // `x < t` as a signed 64-bit compare: t > x.
+            let x = _mm256_loadu_si256(chunk.as_ptr() as *const __m256i);
+            let lt = _mm256_cmpgt_epi64(tv, x);
+            let mask = _mm256_movemask_pd(_mm256_castsi256_pd(lt));
+            count += mask.count_ones() as usize;
+        }
+        count += tail.iter().map(|&u| usize::from(u < t)).sum::<usize>();
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cases() -> Vec<(Vec<i64>, i64)> {
+        let mut cases = vec![
+            (vec![], 0),
+            (vec![5], 5),
+            (vec![5], 6),
+            (vec![5], 4),
+            (vec![i64::MIN, -1, 0, 1, i64::MAX], 0),
+            (vec![i64::MIN, -1, 0, 1, i64::MAX], i64::MAX),
+            (vec![0; 33], 0),
+            (vec![0; 33], 1),
+        ];
+        // Odd lengths and unaligned tails around the 4-lane width, plus
+        // a run longer than the linear cutoff.
+        for len in [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 31, 63, 255, 257, 1024] {
+            let ts: Vec<i64> = (0..len as i64).map(|i| i * 3).collect();
+            for t in [-1, 0, 1, 3, (len as i64 * 3) / 2, len as i64 * 3 + 1] {
+                cases.push((ts.clone(), t));
+            }
+        }
+        cases
+    }
+
+    #[test]
+    fn matches_scalar_reference() {
+        for (ts, t) in cases() {
+            assert_eq!(count_lt(&ts, t), count_lt_scalar(&ts, t), "ts.len()={} t={t}", ts.len());
+            assert_eq!(count_lt_linear(&ts, t), count_lt_scalar(&ts, t));
+        }
+    }
+
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[test]
+    fn avx2_matches_scalar_reference() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            return;
+        }
+        for (ts, t) in cases() {
+            // Safety: AVX2 detected above.
+            let got = unsafe { avx2::count_lt(&ts, t) };
+            assert_eq!(got, count_lt_scalar(&ts, t), "ts.len()={} t={t}", ts.len());
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! Masked gathers of neighbor ids and feature rows into batch arenas.
+//!
+//! Batch materialization spends most of its memory traffic here: pull a
+//! feature row per sampled edge out of the (mmap-backed, format-v2
+//! aligned) segment columns into the dense arena the model consumes,
+//! and resolve random uniform-sampler draws against contiguous
+//! adjacency columns. The masked row gather fuses the "slot filled?"
+//! check with the copy; the u32/i64 index gathers use the AVX2
+//! hardware gather instructions.
+
+/// Gather `dim`-wide f32 rows `eidx[o]` of `feats` into `out[o*dim..]`
+/// for every slot with `mask[o] > 0.0`; masked-off slots are left
+/// untouched (the arena is pre-zeroed by the caller).
+///
+/// Panics if `eidx.len() != mask.len()`, if `out` is shorter than
+/// `mask.len() * dim`, or if an active row index is out of bounds —
+/// identically on both backends.
+#[inline]
+pub fn gather_rows_masked_f32(
+    feats: &[f32],
+    dim: usize,
+    eidx: &[u32],
+    mask: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(eidx.len(), mask.len(), "eidx/mask length mismatch");
+    assert!(out.len() >= mask.len() * dim, "output arena too small");
+    if dim == 0 {
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if dim >= 8 && super::simd_enabled() {
+        // Safety: AVX2 presence was checked by `simd_enabled`.
+        unsafe { avx2::gather_rows_masked_f32(feats, dim, eidx, mask, out) };
+        return;
+    }
+    gather_rows_masked_f32_scalar(feats, dim, eidx, mask, out);
+}
+
+/// Scalar reference for [`gather_rows_masked_f32`].
+#[inline]
+pub fn gather_rows_masked_f32_scalar(
+    feats: &[f32],
+    dim: usize,
+    eidx: &[u32],
+    mask: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(eidx.len(), mask.len(), "eidx/mask length mismatch");
+    assert!(out.len() >= mask.len() * dim, "output arena too small");
+    if dim == 0 {
+        return;
+    }
+    for (o, (&m, &e)) in mask.iter().zip(eidx.iter()).enumerate() {
+        if m > 0.0 {
+            let start = e as usize * dim;
+            out[o * dim..(o + 1) * dim].copy_from_slice(&feats[start..start + dim]);
+        }
+    }
+}
+
+/// Gather `out[i] = src[idx[i]]` for u32 columns (neighbor ids, edge
+/// indices). All indices are bounds-checked up front, so both backends
+/// panic before writing anything on a bad index.
+#[inline]
+pub fn gather_u32(src: &[u32], idx: &[u32], out: &mut [u32]) {
+    assert_eq!(idx.len(), out.len(), "idx/out length mismatch");
+    assert!(idx.iter().all(|&i| (i as usize) < src.len()), "gather index out of bounds");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd_enabled() {
+        // Safety: AVX2 checked by `simd_enabled`; indices validated above.
+        unsafe { avx2::gather_u32(src, idx, out) };
+        return;
+    }
+    gather_u32_scalar(src, idx, out);
+}
+
+/// Scalar reference for [`gather_u32`].
+#[inline]
+pub fn gather_u32_scalar(src: &[u32], idx: &[u32], out: &mut [u32]) {
+    assert_eq!(idx.len(), out.len(), "idx/out length mismatch");
+    for (o, &i) in out.iter_mut().zip(idx.iter()) {
+        *o = src[i as usize];
+    }
+}
+
+/// Gather `out[i] = src[idx[i]]` for i64 columns (timestamps). Same
+/// up-front bounds validation as [`gather_u32`].
+#[inline]
+pub fn gather_i64(src: &[i64], idx: &[u32], out: &mut [i64]) {
+    assert_eq!(idx.len(), out.len(), "idx/out length mismatch");
+    assert!(idx.iter().all(|&i| (i as usize) < src.len()), "gather index out of bounds");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd_enabled() {
+        // Safety: AVX2 checked by `simd_enabled`; indices validated above.
+        unsafe { avx2::gather_i64(src, idx, out) };
+        return;
+    }
+    gather_i64_scalar(src, idx, out);
+}
+
+/// Scalar reference for [`gather_i64`].
+#[inline]
+pub fn gather_i64_scalar(src: &[i64], idx: &[u32], out: &mut [i64]) {
+    assert_eq!(idx.len(), out.len(), "idx/out length mismatch");
+    for (o, &i) in out.iter_mut().zip(idx.iter()) {
+        *o = src[i as usize];
+    }
+}
+
+/// Append `src[i].wrapping_add(base)` to `out` — rebasing a segment's
+/// local edge indices onto the snapshot's logical edge space when
+/// collecting merged adjacency parts.
+#[inline]
+pub fn add_offset_u32(src: &[u32], base: u32, out: &mut Vec<u32>) {
+    if base == 0 {
+        out.extend_from_slice(src);
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd_enabled() {
+        let start = out.len();
+        out.resize(start + src.len(), 0);
+        // Safety: AVX2 checked by `simd_enabled`; the destination slice
+        // was just sized to match `src`.
+        unsafe { avx2::add_offset_u32(src, base, &mut out[start..]) };
+        return;
+    }
+    add_offset_u32_scalar(src, base, out);
+}
+
+/// Scalar reference for [`add_offset_u32`].
+#[inline]
+pub fn add_offset_u32_scalar(src: &[u32], base: u32, out: &mut Vec<u32>) {
+    out.extend(src.iter().map(|&x| x.wrapping_add(base)));
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    #[cfg(target_arch = "x86_64")]
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support; `eidx.len() == mask.len()`
+    /// and `out.len() >= mask.len() * dim` must hold (row indices are
+    /// re-checked here via safe slicing before any raw copy).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_rows_masked_f32(
+        feats: &[f32],
+        dim: usize,
+        eidx: &[u32],
+        mask: &[f32],
+        out: &mut [f32],
+    ) {
+        for (o, (&m, &e)) in mask.iter().zip(eidx.iter()).enumerate() {
+            if m > 0.0 {
+                let start = e as usize * dim;
+                // Safe slicing keeps the panic behavior of the scalar
+                // path for out-of-bounds rows.
+                let src = &feats[start..start + dim];
+                let dst = &mut out[o * dim..(o + 1) * dim];
+                let mut i = 0usize;
+                while i + 8 <= dim {
+                    let v = _mm256_loadu_ps(src.as_ptr().add(i));
+                    _mm256_storeu_ps(dst.as_mut_ptr().add(i), v);
+                    i += 8;
+                }
+                if i < dim {
+                    dst[i..].copy_from_slice(&src[i..]);
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support, `idx.len() == out.len()`,
+    /// and that every index is in bounds for `src` (the hardware gather
+    /// reads without bounds checks).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_u32(src: &[u32], idx: &[u32], out: &mut [u32]) {
+        let n = idx.len();
+        let base = src.as_ptr() as *const i32;
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let iv = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
+            let g = _mm256_i32gather_epi32::<4>(base, iv);
+            _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, g);
+            i += 8;
+        }
+        while i < n {
+            out[i] = src[idx[i] as usize];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Same contract as [`gather_u32`], for i64 elements.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_i64(src: &[i64], idx: &[u32], out: &mut [i64]) {
+        let n = idx.len();
+        let base = src.as_ptr();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let iv = _mm_loadu_si128(idx.as_ptr().add(i) as *const __m128i);
+            let g = _mm256_i32gather_epi64::<8>(base, iv);
+            _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, g);
+            i += 4;
+        }
+        while i < n {
+            out[i] = src[idx[i] as usize];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support and `dst.len() == src.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_offset_u32(src: &[u32], base: u32, dst: &mut [u32]) {
+        let n = src.len();
+        let bv = _mm256_set1_epi32(base as i32);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let s = _mm256_add_epi32(v, bv);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, s);
+            i += 8;
+        }
+        while i < n {
+            dst[i] = src[i].wrapping_add(base);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Deterministic pseudo-random stream (no external crates).
+    fn xorshift(state: &mut u64) -> u64 {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        *state
+    }
+
+    #[test]
+    fn masked_row_gather_matches_scalar() {
+        let mut rng = 0x1234_5678_9abc_def0u64;
+        for dim in [1usize, 2, 3, 4, 7, 8, 9, 15, 16, 17, 32] {
+            for n in [0usize, 1, 2, 5, 8, 13, 64] {
+                let rows = 64usize;
+                let feats: Vec<f32> = (0..rows * dim).map(|i| i as f32 * 0.5).collect();
+                let eidx: Vec<u32> =
+                    (0..n).map(|_| (xorshift(&mut rng) % rows as u64) as u32).collect();
+                let mask: Vec<f32> =
+                    (0..n).map(|_| if xorshift(&mut rng) % 2 == 0 { 1.0 } else { 0.0 }).collect();
+                let mut got = vec![-7.0f32; n * dim];
+                let mut want = vec![-7.0f32; n * dim];
+                gather_rows_masked_f32(&feats, dim, &eidx, &mask, &mut got);
+                gather_rows_masked_f32_scalar(&feats, dim, &eidx, &mask, &mut want);
+                assert_eq!(got, want, "dim={dim} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn masked_row_gather_skips_empty_and_zero_dim() {
+        let mut out: Vec<f32> = vec![];
+        gather_rows_masked_f32(&[], 4, &[], &[], &mut out);
+        let mut out = vec![1.0f32; 4];
+        gather_rows_masked_f32(&[], 0, &[0, 1, 2, 3], &[1.0; 4], &mut out);
+        assert_eq!(out, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn index_gathers_match_scalar() {
+        let mut rng = 0x0fed_cba9_8765_4321u64;
+        let src32: Vec<u32> = (0..1000u32).map(|i| i.wrapping_mul(2_654_435_761)).collect();
+        let src64: Vec<i64> = (0..1000i64).map(|i| i * -97 + 3).collect();
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 31, 100, 257] {
+            let idx: Vec<u32> = (0..n).map(|_| (xorshift(&mut rng) % 1000) as u32).collect();
+            let mut got32 = vec![0u32; n];
+            let mut want32 = vec![0u32; n];
+            gather_u32(&src32, &idx, &mut got32);
+            gather_u32_scalar(&src32, &idx, &mut want32);
+            assert_eq!(got32, want32, "u32 n={n}");
+            let mut got64 = vec![0i64; n];
+            let mut want64 = vec![0i64; n];
+            gather_i64(&src64, &idx, &mut got64);
+            gather_i64_scalar(&src64, &idx, &mut want64);
+            assert_eq!(got64, want64, "i64 n={n}");
+        }
+    }
+
+    #[test]
+    fn add_offset_matches_scalar() {
+        for n in [0usize, 1, 3, 7, 8, 9, 17, 100] {
+            let src: Vec<u32> = (0..n as u32).map(|i| i * 3 + 1).collect();
+            for base in [0u32, 1, 1000, u32::MAX - 2] {
+                let mut got = vec![42u32; 2];
+                let mut want = vec![42u32; 2];
+                add_offset_u32(&src, base, &mut got);
+                add_offset_u32_scalar(&src, base, &mut want);
+                assert_eq!(got, want, "n={n} base={base}");
+            }
+        }
+    }
+}

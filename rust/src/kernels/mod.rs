@@ -1,0 +1,115 @@
+//! Explicit-SIMD primitives for the serving hot path.
+//!
+//! After PR 5 moved sealed segments onto zero-copy mmap, batch
+//! materialization became memory-bound: the cycles go into four loops —
+//! timestamp `partition_point`-style filtered counts
+//! ([`count_lt`]), masked gathers of neighbor ids and feature rows into
+//! batch arenas ([`gather_rows_masked_f32`], [`gather_u32`],
+//! [`gather_i64`]), time-cut filtering of merged adjacency parts
+//! (again [`count_lt`], per part), and the negatives-dedup membership
+//! scan ([`position_u32`]). This module gives each of those loops an
+//! AVX2 implementation plus an auto-vectorization-friendly scalar
+//! reference, and pins the two byte-identical with property tests.
+//!
+//! Dispatch is layered:
+//!
+//! - **cargo feature** — the `simd` feature (on by default) compiles
+//!   the `std::arch` AVX2 paths at all. `--no-default-features` builds
+//!   are scalar-only.
+//! - **runtime CPU detection** — `is_x86_feature_detected!("avx2")` is
+//!   consulted once and cached; non-AVX2 machines silently take the
+//!   scalar path.
+//! - **env override** — `TGM_KERNELS=scalar` forces the scalar path at
+//!   runtime (the property tests and benches use this to diff the two
+//!   backends on the same machine).
+//!
+//! Every public function here is safe: the `unsafe` AVX2 bodies are
+//! private, only reachable after the feature check, and do their own
+//! bounds handling (exact 4/8-lane chunks plus scalar tails). The
+//! scalar references are public (`*_scalar`) so tests and benches can
+//! pin against them explicitly.
+
+mod filter;
+mod gather;
+mod scan;
+
+pub use filter::{count_lt, count_lt_scalar};
+pub use gather::{
+    add_offset_u32, add_offset_u32_scalar, gather_i64, gather_i64_scalar, gather_rows_masked_f32,
+    gather_rows_masked_f32_scalar, gather_u32, gather_u32_scalar,
+};
+pub use scan::{min_max_u32, min_max_u32_scalar, position_u32, position_u32_scalar};
+
+use std::sync::OnceLock;
+
+/// True when the AVX2 paths are compiled in, the CPU has AVX2, and the
+/// `TGM_KERNELS=scalar` override is not set. Cached after first call.
+#[inline]
+pub fn simd_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(detect)
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn detect() -> bool {
+    if std::env::var("TGM_KERNELS").is_ok_and(|v| v.eq_ignore_ascii_case("scalar")) {
+        return false;
+    }
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+fn detect() -> bool {
+    false
+}
+
+/// Human-readable name of the active backend (for logs and benches).
+pub fn backend() -> &'static str {
+    if simd_enabled() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+/// A cheap monotonic cycle counter for the profiler's per-batch
+/// materialization accounting: `rdtsc` on x86_64 (constant-rate on
+/// every CPU this crate targets), monotonic nanoseconds elsewhere.
+/// Only differences between two readings are meaningful.
+#[inline]
+pub fn cycles() -> u64 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // Safety: RDTSC is unprivileged and has no memory effects.
+        unsafe { core::arch::x86_64::_rdtsc() }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        static EPOCH: OnceLock<std::time::Instant> = OnceLock::new();
+        let epoch = *EPOCH.get_or_init(std::time::Instant::now);
+        epoch.elapsed().as_nanos() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_is_stable_and_named() {
+        let b = backend();
+        assert!(b == "avx2" || b == "scalar");
+        assert_eq!(backend(), b);
+    }
+
+    #[test]
+    fn cycles_is_monotonic_enough() {
+        let a = cycles();
+        let mut spin = 0u64;
+        for i in 0..10_000u64 {
+            spin = spin.wrapping_add(i);
+        }
+        let b = cycles();
+        assert!(b.wrapping_sub(a) > 0 || spin > 0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Membership scans and range reductions over u32 columns.
+//!
+//! The negatives-dedup path asks "has this node id been seen in the
+//! batch already?" against a short first-occurrence list — a linear
+//! membership scan that AVX2 answers eight lanes at a time — and the
+//! negative sampler needs the destination-id range of a segment, a
+//! min/max reduction over the whole `dst` column.
+
+/// Index of the first occurrence of `needle` in `hay`, if any.
+///
+/// Equivalent to `hay.iter().position(|&x| x == needle)`.
+#[inline]
+pub fn position_u32(hay: &[u32], needle: u32) -> Option<usize> {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd_enabled() {
+        // Safety: AVX2 presence was checked by `simd_enabled`.
+        return unsafe { avx2::position_u32(hay, needle) };
+    }
+    position_u32_scalar(hay, needle)
+}
+
+/// Scalar reference for [`position_u32`].
+#[inline]
+pub fn position_u32_scalar(hay: &[u32], needle: u32) -> Option<usize> {
+    hay.iter().position(|&x| x == needle)
+}
+
+/// `(min, max)` over `xs`, or `None` when empty.
+#[inline]
+pub fn min_max_u32(xs: &[u32]) -> Option<(u32, u32)> {
+    if xs.is_empty() {
+        return None;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if xs.len() >= 8 && super::simd_enabled() {
+        // Safety: AVX2 presence was checked by `simd_enabled`; length
+        // >= 8 was checked above.
+        return Some(unsafe { avx2::min_max_u32(xs) });
+    }
+    min_max_u32_scalar(xs)
+}
+
+/// Scalar reference for [`min_max_u32`].
+#[inline]
+pub fn min_max_u32_scalar(xs: &[u32]) -> Option<(u32, u32)> {
+    xs.iter().fold(None, |acc, &x| match acc {
+        None => Some((x, x)),
+        Some((lo, hi)) => Some((lo.min(x), hi.max(x))),
+    })
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    #[cfg(target_arch = "x86_64")]
+    use core::arch::x86_64::*;
+
+    /// First-match membership scan, eight u32 lanes per step. Chunks
+    /// are visited in order and the first set lane wins, so the result
+    /// is the same first occurrence the scalar scan finds.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn position_u32(hay: &[u32], needle: u32) -> Option<usize> {
+        let nv = _mm256_set1_epi32(needle as i32);
+        let chunks = hay.chunks_exact(8);
+        let tail_start = hay.len() - chunks.remainder().len();
+        for (c, chunk) in chunks.enumerate() {
+            let x = _mm256_loadu_si256(chunk.as_ptr() as *const __m256i);
+            let eq = _mm256_cmpeq_epi32(x, nv);
+            let mask = _mm256_movemask_epi8(eq) as u32;
+            if mask != 0 {
+                return Some(c * 8 + (mask.trailing_zeros() / 4) as usize);
+            }
+        }
+        hay[tail_start..].iter().position(|&x| x == needle).map(|p| tail_start + p)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support; `xs.len() >= 8`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn min_max_u32(xs: &[u32]) -> (u32, u32) {
+        let mut lo = _mm256_loadu_si256(xs.as_ptr() as *const __m256i);
+        let mut hi = lo;
+        let chunks = xs.chunks_exact(8);
+        let tail = chunks.remainder();
+        for chunk in chunks {
+            let x = _mm256_loadu_si256(chunk.as_ptr() as *const __m256i);
+            lo = _mm256_min_epu32(lo, x);
+            hi = _mm256_max_epu32(hi, x);
+        }
+        let mut lo_arr = [0u32; 8];
+        let mut hi_arr = [0u32; 8];
+        _mm256_storeu_si256(lo_arr.as_mut_ptr() as *mut __m256i, lo);
+        _mm256_storeu_si256(hi_arr.as_mut_ptr() as *mut __m256i, hi);
+        let mut lo_s = lo_arr[0];
+        let mut hi_s = hi_arr[0];
+        for (&l, &h) in lo_arr[1..].iter().zip(hi_arr[1..].iter()) {
+            lo_s = lo_s.min(l);
+            hi_s = hi_s.max(h);
+        }
+        for &x in tail {
+            lo_s = lo_s.min(x);
+            hi_s = hi_s.max(x);
+        }
+        (lo_s, hi_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xorshift(state: &mut u64) -> u64 {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        *state
+    }
+
+    #[test]
+    fn position_matches_scalar() {
+        let mut rng = 0xdead_beef_cafe_f00du64;
+        for n in [0usize, 1, 2, 3, 7, 8, 9, 15, 16, 17, 100, 255] {
+            let hay: Vec<u32> = (0..n).map(|_| (xorshift(&mut rng) % 50) as u32).collect();
+            for needle in 0..60u32 {
+                assert_eq!(
+                    position_u32(&hay, needle),
+                    position_u32_scalar(&hay, needle),
+                    "n={n} needle={needle}"
+                );
+            }
+        }
+        // Duplicate-heavy input: first occurrence must win.
+        let hay = vec![7u32, 3, 7, 7, 1, 7, 7, 7, 7, 3];
+        assert_eq!(position_u32(&hay, 7), Some(0));
+        assert_eq!(position_u32(&hay, 3), Some(1));
+        assert_eq!(position_u32(&hay, 9), None);
+    }
+
+    #[test]
+    fn min_max_matches_scalar() {
+        let mut rng = 0x0123_4567_89ab_cdefu64;
+        assert_eq!(min_max_u32(&[]), None);
+        for n in [1usize, 2, 3, 7, 8, 9, 15, 16, 17, 100, 1000] {
+            let xs: Vec<u32> = (0..n).map(|_| xorshift(&mut rng) as u32).collect();
+            assert_eq!(min_max_u32(&xs), min_max_u32_scalar(&xs), "n={n}");
+        }
+        assert_eq!(min_max_u32(&[5]), Some((5, 5)));
+        assert_eq!(min_max_u32(&[u32::MAX, 0, 1, 2, 3, 4, 5, 6, 7]), Some((0, u32::MAX)));
+    }
+}

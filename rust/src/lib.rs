@@ -45,6 +45,7 @@ pub mod error;
 pub mod graph;
 pub mod hooks;
 pub mod io;
+pub mod kernels;
 pub mod loader;
 pub mod models;
 pub mod persist;

@@ -1,0 +1,135 @@
+//! Optional CPU pinning for [`super::pool::ServingPool`] workers.
+//!
+//! When a tenant's sealed segments are mmap-served, the pages live in
+//! the page cache of whichever socket faulted them; a worker that
+//! migrates across sockets pays remote-node latency on every gather.
+//! Pinning each pool worker to a fixed CPU keeps a tenant's workers on
+//! the socket that owns its columns. Like the mmap/flock FFI next door
+//! ([`crate::persist::mmap`]), the `sched_setaffinity(2)` declaration
+//! is direct — no new dependencies — and compiled only on Linux;
+//! everywhere else [`supported`] reports `false` and pinning is a
+//! silent no-op (serving behavior is identical either way).
+//!
+//! Pinning is opt-in via the `TGM_PIN_WORKERS` env var:
+//!
+//! - unset / empty / `0` / `off` — no pinning (default);
+//! - `auto` — worker `i` pins to CPU `i % available_parallelism`;
+//! - a cpu list like `0-3,8,10-11` — worker `i` pins to the `i`-th
+//!   listed CPU (wrapping around).
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::{c_int, c_ulong};
+
+    /// Matches glibc's fixed 1024-bit `cpu_set_t`.
+    pub const CPU_SET_WORDS: usize = 1024 / (8 * std::mem::size_of::<c_ulong>());
+
+    extern "C" {
+        pub fn sched_setaffinity(pid: c_int, cpusetsize: usize, mask: *const c_ulong) -> c_int;
+    }
+}
+
+/// True when this build can pin threads (Linux).
+pub fn supported() -> bool {
+    cfg!(target_os = "linux")
+}
+
+/// Pin the calling thread to `cpu`. Returns `true` on success; failures
+/// (CPU offline, cpuset restrictions, unsupported platform) are
+/// reported but never fatal — serving proceeds unpinned.
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(cpu: usize) -> bool {
+    let mut mask: [std::os::raw::c_ulong; sys::CPU_SET_WORDS] = [0; sys::CPU_SET_WORDS];
+    let bits = 8 * std::mem::size_of::<std::os::raw::c_ulong>();
+    let (word, bit) = (cpu / bits, cpu % bits);
+    if word >= mask.len() {
+        return false;
+    }
+    mask[word] = 1 << bit;
+    // Safety: pid 0 targets the calling thread; the mask buffer is a
+    // valid, initialized cpu_set_t-sized allocation for the duration of
+    // the call, and the kernel only reads it.
+    let rc = unsafe { sys::sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+    rc == 0
+}
+
+/// Unsupported-platform stub.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_cpu: usize) -> bool {
+    false
+}
+
+/// Parse a Linux-style cpu list (`0-3,8,10-11`) into CPU ids. Malformed
+/// parts are skipped; an empty result means "do not pin".
+pub fn parse_cpu_list(list: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for part in list.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = part.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>()) {
+                if lo <= hi && hi - lo < 4096 {
+                    cpus.extend(lo..=hi);
+                }
+            }
+        } else if let Ok(cpu) = part.parse::<usize>() {
+            cpus.push(cpu);
+        }
+    }
+    cpus
+}
+
+/// The pin plan requested via `TGM_PIN_WORKERS` (see module docs):
+/// `None` when pinning is disabled or unsupported, else the CPU list
+/// workers cycle through.
+pub fn env_pin_plan() -> Option<Vec<usize>> {
+    if !supported() {
+        return None;
+    }
+    let raw = std::env::var("TGM_PIN_WORKERS").ok()?;
+    let raw = raw.trim();
+    if raw.is_empty() || raw == "0" || raw.eq_ignore_ascii_case("off") {
+        return None;
+    }
+    let cpus = if raw.eq_ignore_ascii_case("auto") {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        (0..n).collect()
+    } else {
+        parse_cpu_list(raw)
+    };
+    if cpus.is_empty() {
+        None
+    } else {
+        Some(cpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_lists_parse() {
+        assert_eq!(parse_cpu_list("0-3,8"), vec![0, 1, 2, 3, 8]);
+        assert_eq!(parse_cpu_list(" 1 , 4-5 "), vec![1, 4, 5]);
+        assert_eq!(parse_cpu_list("7"), vec![7]);
+        assert!(parse_cpu_list("").is_empty());
+        assert!(parse_cpu_list("x,3-1,-2").is_empty());
+    }
+
+    #[test]
+    fn pinning_to_cpu_zero_works_where_supported() {
+        if !supported() {
+            assert!(!pin_current_thread(0));
+            return;
+        }
+        // CPU 0 exists on every Linux box this runs on; pin a scratch
+        // thread rather than the test harness thread.
+        let ok = std::thread::spawn(|| pin_current_thread(0)).join().unwrap();
+        assert!(ok, "pinning a thread to CPU 0 should succeed");
+        // Absurd CPU ids fail gracefully.
+        assert!(!pin_current_thread(1 << 20));
+    }
+}

@@ -31,6 +31,7 @@
 //!   wall-clock granularity τ̂, so batch *duration* is fixed while edge
 //!   counts vary — snapshot iteration.
 
+pub mod affinity;
 pub mod pool;
 pub mod prefetch;
 

@@ -43,7 +43,8 @@ use crate::error::{Result, TgmError};
 use crate::graph::{DGraph, StorageSnapshot};
 use crate::hooks::batch::MaterializedBatch;
 use crate::hooks::manager::{HookManager, StatelessPipeline};
-use crate::loader::{materialize_window, plan_batches, BatchBy, BatchPlan};
+use crate::kernels;
+use crate::loader::{affinity, materialize_window, plan_batches, BatchBy, BatchPlan};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
@@ -54,6 +55,13 @@ use std::time::{Duration, Instant};
 /// One worker-to-consumer message: plan position plus the materialized
 /// batch (or the error that produced it).
 type WorkerMsg = (usize, Result<MaterializedBatch>);
+
+/// Per-stream materialization raw-speed counters: `(batches, bytes,
+/// cycles)` — batch arenas built, their [`MaterializedBatch::byte_size`]
+/// total, and [`kernels::cycles`] ticks spent building them. Shared with
+/// workers the same way `busy` is; surfaced via
+/// [`super::PrefetchStats`] and the profiler's materialization row.
+type MatCounters = Arc<Mutex<(u64, u64, u64)>>;
 
 /// How long a blocked consumer waits between pool-liveness checks. Only
 /// paid when the pool died under a stream (or a worker is genuinely this
@@ -80,6 +88,8 @@ struct Job {
     cancelled: Arc<AtomicBool>,
     /// Per-stream worker-busy accounting (for [`super::PrefetchStats`]).
     busy: Arc<Mutex<Duration>>,
+    /// Per-stream materialization byte/cycle counters.
+    mat: MatCounters,
     /// The submitting stream's private result channel.
     reply: SyncSender<WorkerMsg>,
 }
@@ -226,7 +236,18 @@ pub struct ServingPool {
 impl ServingPool {
     /// Spawn `workers` threads. `0` creates an inert pool whose streams
     /// all run the serial in-place fallback (no threads, same output).
+    /// Workers are CPU-pinned when the `TGM_PIN_WORKERS` env var asks
+    /// for it (see [`affinity`]); [`ServingPool::with_affinity`] is the
+    /// programmatic variant.
     pub fn new(workers: usize) -> ServingPool {
+        ServingPool::with_affinity(workers, affinity::env_pin_plan().unwrap_or_default())
+    }
+
+    /// Spawn `workers` threads, pinning worker `i` to `cpus[i % len]`
+    /// when `cpus` is non-empty. Pinning failures (CPU offline, cpuset
+    /// restrictions, non-Linux platform) are silently ignored — the
+    /// worker just runs unpinned; output is identical either way.
+    pub fn with_affinity(workers: usize, cpus: Vec<usize>) -> ServingPool {
         let closed = Arc::new(AtomicBool::new(false));
         if workers == 0 {
             return ServingPool { tx: Mutex::new(None), closed, handles: Vec::new(), workers: 0 };
@@ -234,45 +255,60 @@ impl ServingPool {
         let (tx, rx) = mpsc::channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
         let handles = (0..workers)
-            .map(|_| {
+            .map(|w| {
                 let rx = Arc::clone(&rx);
-                thread::spawn(move || loop {
-                    // Hold the lock only while dequeueing; execution runs
-                    // unlocked so workers overlap.
-                    let msg = {
-                        let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
-                        guard.recv()
-                    };
-                    let job = match msg {
-                        Ok(Msg::Job(job)) => job,
-                        // One shutdown token per worker, or every sender
-                        // (pool + all streams) is gone: exit.
-                        Ok(Msg::Shutdown) | Err(_) => break,
-                    };
-                    if job.cancelled.load(Ordering::Relaxed) {
-                        continue;
+                let pin = if cpus.is_empty() { None } else { Some(cpus[w % cpus.len()]) };
+                thread::spawn(move || {
+                    if let Some(cpu) = pin {
+                        let _ = affinity::pin_current_thread(cpu);
                     }
-                    let t0 = Instant::now();
-                    // A panicking hook must not strand the consumer
-                    // waiting for a reply that will never come: convert
-                    // the panic into a typed per-batch error.
-                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        materialize_window(&job.storage, &job.plan).and_then(|mut b| {
-                            job.pipeline.run(&mut b, &job.storage, job.plan.index)?;
-                            Ok(b)
-                        })
-                    }))
-                    .unwrap_or_else(|_| {
-                        Err(TgmError::Hook(
-                            "a worker hook panicked while materializing this batch".into(),
-                        ))
-                    });
-                    if let Ok(mut d) = job.busy.lock() {
-                        *d += t0.elapsed();
+                    loop {
+                        // Hold the lock only while dequeueing; execution
+                        // runs unlocked so workers overlap.
+                        let msg = {
+                            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+                            guard.recv()
+                        };
+                        let job = match msg {
+                            Ok(Msg::Job(job)) => job,
+                            // One shutdown token per worker, or every
+                            // sender (pool + all streams) is gone: exit.
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        };
+                        if job.cancelled.load(Ordering::Relaxed) {
+                            continue;
+                        }
+                        let t0 = Instant::now();
+                        let c0 = kernels::cycles();
+                        // A panicking hook must not strand the consumer
+                        // waiting for a reply that will never come:
+                        // convert the panic into a typed per-batch error.
+                        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            materialize_window(&job.storage, &job.plan).and_then(|mut b| {
+                                job.pipeline.run(&mut b, &job.storage, job.plan.index)?;
+                                Ok(b)
+                            })
+                        }))
+                        .unwrap_or_else(|_| {
+                            Err(TgmError::Hook(
+                                "a worker hook panicked while materializing this batch".into(),
+                            ))
+                        });
+                        let cycles = kernels::cycles().wrapping_sub(c0);
+                        if let Ok(mut d) = job.busy.lock() {
+                            *d += t0.elapsed();
+                        }
+                        if let Ok(b) = &res {
+                            if let Ok(mut m) = job.mat.lock() {
+                                m.0 += 1;
+                                m.1 += b.byte_size() as u64;
+                                m.2 += cycles;
+                            }
+                        }
+                        // A closed reply channel means the stream is
+                        // gone; keep serving the other streams.
+                        let _ = job.reply.send((job.seq, res));
                     }
-                    // A closed reply channel means the stream is gone;
-                    // keep serving the other streams.
-                    let _ = job.reply.send((job.seq, res));
                 })
             })
             .collect();
@@ -331,6 +367,7 @@ impl ServingPool {
             reply_rx,
             cancelled: Arc::new(AtomicBool::new(false)),
             busy: Arc::new(Mutex::new(Duration::ZERO)),
+            mat: Arc::new(Mutex::new((0, 0, 0))),
             pending: HashMap::new(),
             submitted: 0,
             next_index: 0,
@@ -386,6 +423,8 @@ pub struct PooledStream<'a> {
     reply_rx: Receiver<WorkerMsg>,
     cancelled: Arc<AtomicBool>,
     busy: Arc<Mutex<Duration>>,
+    /// Materialization raw-speed counters (worker- or serial-side).
+    mat: MatCounters,
     /// Reorder buffer for batches that arrived ahead of plan order.
     pending: HashMap<usize, Result<MaterializedBatch>>,
     /// Plan positions submitted to the pool so far.
@@ -431,6 +470,7 @@ impl<'a> PooledStream<'a> {
                 seq: self.submitted,
                 cancelled: Arc::clone(&self.cancelled),
                 busy: Arc::clone(&self.busy),
+                mat: Arc::clone(&self.mat),
                 reply: self.reply_tx.clone(),
             };
             if tx.send(Msg::Job(Box::new(job))).is_err() {
@@ -460,12 +500,17 @@ impl<'a> PooledStream<'a> {
 
     /// Overlap accounting so far (read after draining for totals).
     pub fn stats(&self) -> super::PrefetchStats {
+        let (mat_batches, mat_bytes, mat_cycles) =
+            *self.mat.lock().unwrap_or_else(|e| e.into_inner());
         super::PrefetchStats {
             batches: self.plans.len(),
             workers: self.workers,
             worker_busy: *self.busy.lock().unwrap_or_else(|e| e.into_inner()),
             consumer_blocked: self.blocked,
             queue_depth: self.depth,
+            mat_batches,
+            mat_bytes,
+            mat_cycles,
         }
     }
 
@@ -518,15 +563,24 @@ impl<'a> PooledStream<'a> {
         let idx = self.next_index;
         self.next_index += 1;
 
-        // Serial fallback: materialize inline, no pool involved.
+        // Serial fallback: materialize inline, no pool involved. The
+        // materialization counters still accumulate so the profiler's
+        // cycles/byte row covers serial and pooled runs alike.
         if self.job_tx.is_none() {
             let plan = self.plans[idx].clone();
+            let c0 = kernels::cycles();
             let mut batch = match materialize_window(&self.storage, &plan) {
                 Ok(b) => b,
                 Err(e) => return Some(Err(e)),
             };
             if let Err(e) = self.pipeline.run(&mut batch, &self.storage, plan.index) {
                 return Some(Err(e));
+            }
+            let cycles = kernels::cycles().wrapping_sub(c0);
+            if let Ok(mut m) = self.mat.lock() {
+                m.0 += 1;
+                m.1 += batch.byte_size() as u64;
+                m.2 += cycles;
             }
             if let Err(e) = self.manager.run_stateful_indexed(&mut batch, &self.storage, plan.index)
             {
@@ -836,6 +890,46 @@ mod tests {
         assert_eq!(s.stats().workers, 0);
         let got = s.collect_all().unwrap();
         identical(&serial("val", 5), &got);
+        // The serial fallback still accounts materialization raw speed.
+        let stats = s.stats();
+        assert_eq!(stats.mat_batches as usize, got.len());
+        let bytes: usize = got.iter().map(|b| b.byte_size()).sum();
+        assert_eq!(stats.mat_bytes as usize, bytes);
+    }
+
+    #[test]
+    fn pooled_streams_account_materialization_bytes() {
+        let pool = ServingPool::new(2);
+        let data = gen::by_name("wiki", 0.05, 7).unwrap();
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate("val").unwrap();
+        let mut s = pool
+            .stream(data.full(), BatchBy::Events(100), &mut m, StreamConfig::default())
+            .unwrap();
+        let got = s.collect_all().unwrap();
+        let stats = s.stats();
+        assert_eq!(stats.mat_batches as usize, got.len());
+        // Worker-side byte_size is measured before the consumer's
+        // stateful phase adds attributes, so it lower-bounds the final
+        // batch sizes and is strictly positive.
+        let final_bytes: usize = got.iter().map(|b| b.byte_size()).sum();
+        assert!(stats.mat_bytes > 0);
+        assert!(stats.mat_bytes as usize <= final_bytes);
+    }
+
+    #[test]
+    fn explicit_affinity_pool_serves_identically() {
+        // Pinning is scheduling-only; even an absurd CPU list (pin
+        // failures ignored) must leave output byte-identical.
+        let pool = ServingPool::with_affinity(2, vec![0, 1 << 20]);
+        let data = gen::by_name("wiki", 0.05, 8).unwrap();
+        let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        m.activate("train").unwrap();
+        let mut s = pool
+            .stream(data.full(), BatchBy::Events(100), &mut m, StreamConfig::default())
+            .unwrap();
+        let got = s.collect_all().unwrap();
+        identical(&serial("train", 8), &got);
     }
 
     #[test]

@@ -121,6 +121,15 @@ pub struct PrefetchStats {
     /// In-flight window size at read time (adaptive streams tune this
     /// between [`QueueDepth::Adaptive`] bounds while they run).
     pub queue_depth: usize,
+    /// Batches successfully materialized so far (worker or serial side).
+    pub mat_batches: u64,
+    /// Total [`MaterializedBatch::byte_size`] of those batches.
+    pub mat_bytes: u64,
+    /// [`crate::kernels::cycles`] ticks spent materializing them (rdtsc
+    /// on x86_64, monotonic nanoseconds elsewhere). Feeds the
+    /// profiler's cycles/byte row via
+    /// [`crate::coordinator::Profiler::add_materialization`].
+    pub mat_cycles: u64,
 }
 
 /// Loader that materializes batches on a dedicated worker pool and
