@@ -22,6 +22,10 @@
 //!    timestamp filtered counts, selected backend vs the scalar
 //!    reference (`TGM_KERNELS=scalar` forces the fallback).
 //!
+//! 10. DTDG materialized views: per-seal incremental refresh vs
+//!     rescanning the full snapshot after every seal at 4/16/64 seals,
+//!     and the vectorized one-shot discretization vs the UTG baseline.
+//!
 //! `TGM_ABLATION=streaming,sharded,persist` runs a comma-selected
 //! subset (CI's bench-regression job does exactly that); unset runs
 //! everything. Rows tagged `BENCH_METRIC` feed `scripts/bench_gate.py`.
@@ -30,7 +34,8 @@
 mod common;
 
 use tgm::graph::{
-    discretize, GraphStorage, ReduceOp, SealPolicy, SegmentedStorage, StorageSnapshot,
+    discretize, discretize_utg, GraphStorage, ReduceOp, SealPolicy, SegmentedStorage,
+    StorageSnapshot,
 };
 use tgm::hooks::batch::attr;
 use tgm::hooks::hook::{Hook, StatelessHook};
@@ -75,6 +80,7 @@ fn main() {
     let sharded_on = common::section_enabled("sharded");
     let persist_on = common::section_enabled("persist");
     let kernels_on = common::section_enabled("kernels");
+    let discretize_on = common::section_enabled("discretize");
 
     // 9. SIMD kernel microbench (`ablation.kernels`): raw primitive
     //    throughput under whichever backend the runtime dispatch picked,
@@ -149,6 +155,11 @@ fn main() {
             "ablation.kernels | count_lt {:.2}x vs partition_point on 200-ts runs",
             common::mean(&cnt_slow) / common::mean(&cnt_fast).max(1e-12)
         );
+    }
+
+    // 10. DTDG materialized views (`ablation.discretize`).
+    if discretize_on {
+        discretize_section(scale);
     }
 
     if sampler_on || ts_index_on {
@@ -520,6 +531,117 @@ fn main() {
             );
         }
     }
+}
+
+/// Section 10: DTDG materialized views (`ablation.discretize`).
+///
+/// (a) Maintaining an hourly view over a live ingest stream: one
+///     registered `DtdgView` refreshed incrementally on every seal vs
+///     rescanning (`discretize()`) the full snapshot after every seal,
+///     at 4/16/64 seals. The rescan redoes O(total) work per seal, the
+///     view only touches the new segment plus the trailing partial
+///     bucket — the gap widens with seal count (target: >= 5x at 64).
+/// (b) The vectorized one-shot discretization pass vs the UTG
+///     (unified-temporal-graph, scalar hash-map) baseline it replaced.
+fn discretize_section(scale: f64) {
+    let wiki = gen::by_name("wiki", scale, 42).unwrap();
+    let snap = wiki.storage();
+    let events: Vec<tgm::graph::EdgeEvent> = (0..snap.num_edges())
+        .map(|i| tgm::graph::EdgeEvent {
+            t: snap.edge_ts_at(i),
+            src: snap.edge_src_at(i),
+            dst: snap.edge_dst_at(i),
+            features: snap.edge_feat_row(i).to_vec(),
+        })
+        .collect();
+    let n_events = events.len();
+    let (target, reduce) = (TimeGranularity::Hour, ReduceOp::Mean);
+
+    // Sanity outside the timed region: the incremental view ends up with
+    // exactly the coarse graph a full rescan produces.
+    {
+        let mut st = SegmentedStorage::new(
+            snap.num_nodes(),
+            SealPolicy::by_events((n_events / 16).max(1)),
+        );
+        let view = st.register_dtdg_view(target, reduce).unwrap();
+        for e in &events {
+            st.append_edge(e.clone()).unwrap();
+        }
+        st.seal().unwrap();
+        let want = discretize(&st.snapshot().unwrap(), target, reduce).unwrap();
+        assert_eq!(view.pin().unwrap().num_edges(), want.num_edges());
+    }
+
+    for n_seals in [4usize, 16, 64] {
+        let per_seal = n_events.div_ceil(n_seals).max(1);
+        let incremental = common::time_runs(1, 3, || {
+            let mut st = SegmentedStorage::new(snap.num_nodes(), SealPolicy::by_events(per_seal));
+            let view = st.register_dtdg_view(target, reduce).unwrap();
+            for e in &events {
+                st.append_edge(e.clone()).unwrap();
+            }
+            st.seal().unwrap();
+            view.pin().unwrap().num_edges()
+        });
+        let rescan = common::time_runs(1, 3, || {
+            let mut st = SegmentedStorage::new(snap.num_nodes(), SealPolicy::by_events(per_seal));
+            let mut coarse = 0usize;
+            for e in &events {
+                if st.append_edge(e.clone()).unwrap() {
+                    coarse = discretize(&st.snapshot().unwrap(), target, reduce)
+                        .unwrap()
+                        .num_edges();
+                }
+            }
+            if st.seal().unwrap() {
+                coarse = discretize(&st.snapshot().unwrap(), target, reduce)
+                    .unwrap()
+                    .num_edges();
+            }
+            coarse
+        });
+        common::report(
+            "ablation.discretize",
+            &format!("incremental view refresh ({n_seals} seals)"),
+            &incremental,
+        );
+        common::report(
+            "ablation.discretize",
+            &format!("full rescan per seal ({n_seals} seals)"),
+            &rescan,
+        );
+        println!(
+            "ablation.discretize | {n_seals} seals: incremental {:.2}M events/s vs rescan \
+             {:.2}M events/s ({:.1}x, target >= 5x at 64 seals)",
+            n_events as f64 / common::mean(&incremental).max(1e-12) / 1e6,
+            n_events as f64 / common::mean(&rescan).max(1e-12) / 1e6,
+            common::mean(&rescan) / common::mean(&incremental).max(1e-12)
+        );
+        if n_seals == 64 {
+            common::metric(
+                "discretize.refresh_events_per_s",
+                n_events as f64 / common::mean(&incremental).max(1e-12),
+            );
+            common::metric(
+                "discretize.full_rescan_events_per_s",
+                n_events as f64 / common::mean(&rescan).max(1e-12),
+            );
+        }
+    }
+
+    // (b) One-shot pass: vectorized kernels vs the UTG scalar baseline.
+    let vectorized =
+        common::time_runs(1, 3, || discretize(snap, target, reduce).unwrap().num_edges());
+    let utg =
+        common::time_runs(1, 3, || discretize_utg(snap, target, reduce).unwrap().num_edges());
+    common::report("ablation.discretize", "one-shot vectorized pass", &vectorized);
+    common::report("ablation.discretize", "one-shot UTG baseline", &utg);
+    println!(
+        "ablation.discretize | one-shot vectorized vs UTG: {:.2}x ({:.2}M events/s)",
+        common::mean(&utg) / common::mean(&vectorized).max(1e-12),
+        n_events as f64 / common::mean(&vectorized).max(1e-12) / 1e6
+    );
 }
 
 /// Section 8: the durable segment store. (a) WAL-on vs in-memory ingest;

@@ -22,13 +22,13 @@
 //! replay the same pseudo-random stream each cycle).
 
 use crate::error::Result;
-use crate::graph::{DGraph, SegmentedStorage};
+use crate::graph::{DGraph, DtdgHandle, ReduceOp, SegmentedStorage};
 use crate::hooks::manager::HookManager;
 use crate::hooks::MaterializedBatch;
 use crate::io::stream::EventSource;
 use crate::loader::{BatchBy, DGDataLoader};
 use crate::serving::{TenantId, TenantRouter};
-use crate::util::Timestamp;
+use crate::util::{TimeGranularity, Timestamp};
 use std::sync::Arc;
 
 /// Streaming-loop configuration.
@@ -167,7 +167,8 @@ impl<S: EventSource> StreamingTrainer<S> {
             // No new time revealed.
             return Ok(if ingested == 0 { None } else { Some(self.empty_report(ingested)) });
         }
-        let report = self.train_window(manager, &snap, start, end, ingested, &mut on_batch)?;
+        let by = BatchBy::Events(self.cfg.batch_events);
+        let report = self.train_window(manager, &snap, by, start, end, ingested, &mut on_batch)?;
         Ok(Some(report))
     }
 
@@ -191,16 +192,133 @@ impl<S: EventSource> StreamingTrainer<S> {
         if start >= end {
             return Ok(None);
         }
-        let report = self.train_window(manager, &snap, start, end, 0, &mut on_batch)?;
+        let by = BatchBy::Events(self.cfg.batch_events);
+        let report = self.train_window(manager, &snap, by, start, end, 0, &mut on_batch)?;
         Ok(Some(report))
     }
 
-    /// Drive the hook recipe over `[start, end)` of `snap` and advance
-    /// the trained watermark and cumulative batch counter.
+    /// Register a DTDG materialized view on the underlying store and
+    /// return its handle. The view is refreshed incrementally by every
+    /// seal the ingest loop triggers, so
+    /// [`StreamingTrainer::run_cycle_time_driven`] can train off it
+    /// without ever rescanning the base stream.
+    pub fn attach_dtdg(&mut self, target: TimeGranularity, reduce: ReduceOp) -> Result<DtdgHandle> {
+        self.store.register_dtdg_view(target, reduce)
+    }
+
+    /// Time-driven counterpart of [`StreamingTrainer::run_cycle`]: ingest
+    /// a chunk, seal (which incrementally refreshes `view`), then train
+    /// one batch per **complete** coarse bucket of the materialized DTDG
+    /// view instead of event-ordered batches of the base stream.
+    ///
+    /// Watermark semantics mirror the event-driven loop, but the held-back
+    /// unit is the trailing *partial bucket* rather than the newest
+    /// timestamp: only buckets strictly before
+    /// [`DtdgHandle::complete_until`] are trained (their reductions can
+    /// never change), so every bucket is trained exactly once, in order,
+    /// with its final reduced features. The partial bucket is flushed when
+    /// the source provably drains or via
+    /// [`StreamingTrainer::finish_time_driven`]. Use one driving mode per
+    /// trainer — both share the same trained-watermark.
+    pub fn run_cycle_time_driven(
+        &mut self,
+        manager: &mut HookManager,
+        view: &DtdgHandle,
+        mut on_batch: impl FnMut(&MaterializedBatch) -> Result<()>,
+    ) -> Result<Option<CycleReport>> {
+        let chunk = self.source.next_chunk(self.cfg.ingest_chunk);
+        let ingested = chunk.len();
+        for ev in chunk {
+            self.store.append(ev)?;
+        }
+        self.store.sync_wal()?;
+        self.store.seal()?;
+        self.store.maybe_compact(self.cfg.compact_after)?;
+
+        let drained = self.source.remaining() == Some(0);
+        let more = |this: &mut Self| {
+            Ok(if ingested == 0 { None } else { Some(this.empty_report(ingested)) })
+        };
+        let Some(snap) = view.pin() else {
+            // View not published yet (no sealed edge, or the view is
+            // stalled on a granularity error — see `DtdgHandle::last_error`).
+            return more(self);
+        };
+        let end = if drained {
+            // Source provably empty: flush the trailing partial bucket too.
+            snap.end_time() + 1
+        } else {
+            match view.complete_until() {
+                Some(cut) => cut,
+                None => return more(self),
+            }
+        };
+        let start = self.trained_until.unwrap_or_else(|| snap.start_time());
+        if start >= end {
+            return more(self);
+        }
+        let by = BatchBy::Time(view.target());
+        let report = self.train_window(manager, &snap, by, start, end, ingested, &mut on_batch)?;
+        Ok(Some(report))
+    }
+
+    /// Time-driven counterpart of [`StreamingTrainer::finish`]: seal
+    /// whatever is still pending (refreshing the view) and train the
+    /// remaining buckets — including the trailing partial one, whose
+    /// reduction is final once no further events will arrive. Returns
+    /// `None` when there was nothing left to train.
+    pub fn finish_time_driven(
+        &mut self,
+        manager: &mut HookManager,
+        view: &DtdgHandle,
+        mut on_batch: impl FnMut(&MaterializedBatch) -> Result<()>,
+    ) -> Result<Option<CycleReport>> {
+        if self.store.total_edges() == 0 {
+            return Ok(None);
+        }
+        self.store.seal()?;
+        let Some(snap) = view.pin() else {
+            return Ok(None);
+        };
+        let end = snap.end_time() + 1;
+        let start = self.trained_until.unwrap_or_else(|| snap.start_time());
+        if start >= end {
+            return Ok(None);
+        }
+        let by = BatchBy::Time(view.target());
+        let report = self.train_window(manager, &snap, by, start, end, 0, &mut on_batch)?;
+        Ok(Some(report))
+    }
+
+    /// Drain the source time-driven: run cycles until a chunk comes back
+    /// empty, then flush the partial-bucket tail. Returns one report per
+    /// cycle.
+    pub fn run_time_driven(
+        &mut self,
+        manager: &mut HookManager,
+        view: &DtdgHandle,
+        mut on_batch: impl FnMut(&MaterializedBatch) -> Result<()>,
+    ) -> Result<Vec<CycleReport>> {
+        let mut reports = Vec::new();
+        while let Some(r) = self.run_cycle_time_driven(manager, view, &mut on_batch)? {
+            reports.push(r);
+        }
+        if let Some(r) = self.finish_time_driven(manager, view, &mut on_batch)? {
+            reports.push(r);
+        }
+        Ok(reports)
+    }
+
+    /// Drive the hook recipe over `[start, end)` of `snap` with the given
+    /// batching strategy and advance the trained watermark and cumulative
+    /// batch counter. (`cfg.batch_events` caps batch size in both modes:
+    /// it is the batch size for event iteration and the event cap that
+    /// splits oversized buckets for time iteration.)
     fn train_window(
         &mut self,
         manager: &mut HookManager,
         snap: &Arc<crate::graph::StorageSnapshot>,
+        by: BatchBy,
         start: Timestamp,
         end: Timestamp,
         ingested: usize,
@@ -208,7 +326,8 @@ impl<S: EventSource> StreamingTrainer<S> {
     ) -> Result<CycleReport> {
         manager.activate(&self.cfg.train_key)?;
         let view = DGraph::slice_of(Arc::clone(snap), start, end)?;
-        let mut loader = DGDataLoader::new(view, BatchBy::Events(self.cfg.batch_events), manager)?
+        let mut loader = DGDataLoader::new(view, by, manager)?
+            .with_event_cap(self.cfg.batch_events)
             .with_index_offset(self.batches_done);
         let mut batches = 0usize;
         while let Some(batch) = loader.next() {
@@ -616,6 +735,71 @@ mod tests {
         let t2 =
             StreamingTrainer::resume(empty, ReplaySource::new(vec![]), StreamingConfig::default());
         assert!(t2.is_ok());
+    }
+
+    #[test]
+    fn time_driven_cycles_train_each_bucket_exactly_once() {
+        use crate::graph::{EdgeEvent, Event, ReduceOp};
+        use crate::util::TimeGranularity;
+
+        // One edge every 10 minutes starting at t=1000: five hour-buckets
+        // relative to the first edge, six edges each. The (src, dst)
+        // pattern cycles through three pairs, so every bucket reduces to
+        // exactly 3 coarse edges with Sum feature [2.0].
+        let events: Vec<Event> = (0..30i64)
+            .map(|i| {
+                Event::Edge(EdgeEvent {
+                    t: 1000 + i * 600,
+                    src: (i % 3) as u32,
+                    dst: ((i + 1) % 3) as u32,
+                    features: vec![1.0],
+                })
+            })
+            .collect();
+        let store = SegmentedStorage::new(3, SealPolicy::by_events(7))
+            .with_granularity(TimeGranularity::Second);
+        let cfg = StreamingConfig {
+            ingest_chunk: 5,
+            batch_events: 64,
+            compact_after: 4,
+            train_key: "train".into(),
+        };
+        let mut trainer = StreamingTrainer::new(store, ReplaySource::new(events), cfg);
+        let view = trainer.attach_dtdg(TimeGranularity::Hour, ReduceOp::Sum).unwrap();
+        let mut manager = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+
+        let mut windows: Vec<(i64, i64)> = Vec::new();
+        let mut coarse_edges = 0usize;
+        let reports = trainer
+            .run_time_driven(&mut manager, &view, |b| {
+                assert!(b.end - b.start <= 3600, "one bucket per batch: {:?}", (b.start, b.end));
+                assert_eq!(b.num_edges(), 3, "each bucket reduces to its 3 classes");
+                windows.push((b.start, b.end));
+                coarse_edges += b.num_edges();
+                Ok(())
+            })
+            .unwrap();
+
+        assert!(
+            reports.iter().filter(|r| r.batches > 0).count() > 1,
+            "training must happen across multiple cycles, not one flush"
+        );
+        assert_eq!(windows.len(), 5, "five buckets, each trained exactly once");
+        assert_eq!(coarse_edges, 15);
+        assert!(windows.windows(2).all(|w| w[0].1 <= w[1].0), "bucket windows tile in order");
+        // The refresh watermark froze everything up to the last full bucket.
+        assert_eq!(view.complete_until(), Some(1000 + 4 * 3600));
+        assert!(view.refreshes() > 1, "the view refreshed incrementally, seal by seal");
+        // The trained view matches the one-shot discretization of the base
+        // stream — same coarse edge count, fully reduced features.
+        let full = crate::graph::discretize(
+            &trainer.store_mut().snapshot().unwrap(),
+            TimeGranularity::Hour,
+            ReduceOp::Sum,
+        )
+        .unwrap();
+        assert_eq!(full.num_edges(), 15);
+        assert!(full.edge_feats().iter().all(|&f| f == 2.0));
     }
 
     #[test]

@@ -3,22 +3,36 @@
 //! `ψ_r : (G, τ) -> (Ĝ, τ̂)` maps a temporal graph to a coarser granularity
 //! τ̂ ≥ τ, groups events into the equivalence classes induced by τ̂ on
 //! `(bucket, src, dst)`, and reduces each class to one representative event
-//! with the class's reduction `r` applied to edge features.
+//! with the class's reduction `r` applied to edge features. Node events
+//! ride along with `Last` semantics: one event per `(bucket, node)` class
+//! carrying the class's latest feature row.
 //!
 //! Two implementations live here:
 //!
-//! * [`discretize`] — TGM's **vectorized** path: one pass to compute bucket
-//!   keys, an index sort over packed keys, and a single grouped-reduction
-//!   scan. No per-event allocation, cache-friendly columnar access. This is
-//!   the implementation behind the paper's 49–433× speedups (Table 5).
+//! * [`discretize`] — TGM's **vectorized** path: one run-based pass to
+//!   compute bucket keys ([`crate::kernels::bucket_keys`]), an index sort
+//!   over packed keys, and a single grouped-reduction scan on the
+//!   [`crate::kernels`] lane ops plus contiguous row copies. No per-event
+//!   allocation, cache-friendly columnar access. This is the implementation behind the
+//!   paper's 49–433× speedups (Table 5).
 //! * [`discretize_utg`] — the **UTG-style baseline**: a per-event hash-map
 //!   of per-class feature accumulator vectors, mirroring the
 //!   Python-dictionary structure of the original UTG code (Huang et al.,
 //!   2024). Kept as a first-class comparator for `benches/table5_*`.
+//!
+//! The vectorized core is exposed crate-internally as
+//! [`discretize_columns`], which works over raw borrowed columns with an
+//! explicit bucket origin — [`crate::graph::DtdgView`] reuses it per
+//! sealed slice so the incremental materialized view is **bit-identical**
+//! to a full-snapshot [`discretize`] call. That identity relies on the
+//! class sort being a deterministic total order (the packed key is
+//! tie-broken by original index), so per-class f32 accumulation always
+//! runs in stream order no matter how the stream is sliced.
 
 use crate::error::{Result, TgmError};
 use crate::graph::segment::StorageSnapshot;
 use crate::graph::storage::GraphStorage;
+use crate::kernels;
 use crate::util::{TimeGranularity, Timestamp};
 use std::collections::HashMap;
 
@@ -51,8 +65,12 @@ impl ReduceOp {
     }
 }
 
-fn check_coarser(storage: &GraphStorage, target: TimeGranularity) -> Result<i64> {
-    let native = storage.granularity();
+/// Validate that `target` is a wall-clock granularity at least as coarse
+/// as `native`; returns the target's bucket width in seconds.
+pub(crate) fn check_coarser_granularity(
+    native: TimeGranularity,
+    target: TimeGranularity,
+) -> Result<i64> {
     if native == TimeGranularity::Event {
         return Err(TgmError::Time(
             "cannot discretize an event-ordered graph: no wall-clock granularity".into(),
@@ -70,45 +88,122 @@ fn check_coarser(storage: &GraphStorage, target: TimeGranularity) -> Result<i64>
         .ok_or_else(|| TgmError::Time("target granularity must be wall-clock".into()))
 }
 
-/// Vectorized discretization: TGM's fast path.
+fn check_coarser(storage: &GraphStorage, target: TimeGranularity) -> Result<i64> {
+    check_coarser_granularity(storage.granularity(), target)
+}
+
+/// Borrowed raw event columns of one contiguous, time-sorted slice of a
+/// stream — the unit [`discretize_columns`] operates on.
+pub(crate) struct EventColumns<'a> {
+    pub ts: &'a [Timestamp],
+    pub src: &'a [u32],
+    pub dst: &'a [u32],
+    pub feat_dim: usize,
+    pub feats: &'a [f32],
+    pub node_ts: &'a [Timestamp],
+    pub node_ids: &'a [u32],
+    pub node_feat_dim: usize,
+    pub node_feats: &'a [f32],
+}
+
+impl<'a> EventColumns<'a> {
+    pub fn of(storage: &'a GraphStorage) -> EventColumns<'a> {
+        EventColumns {
+            ts: storage.edge_ts(),
+            src: storage.edge_src(),
+            dst: storage.edge_dst(),
+            feat_dim: storage.edge_feat_dim(),
+            feats: storage.edge_feats(),
+            node_ts: storage.node_event_ts(),
+            node_ids: storage.node_event_ids(),
+            node_feat_dim: storage.node_feat_dim(),
+            node_feats: storage.node_event_feats(),
+        }
+    }
+}
+
+/// Owned discretized columns produced by [`discretize_columns`], ready to
+/// freeze into a [`GraphStorage`] segment.
+pub(crate) struct DiscretizedColumns {
+    pub ts: Vec<Timestamp>,
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+    pub out_dim: usize,
+    pub feats: Vec<f32>,
+    pub node_ts: Vec<Timestamp>,
+    pub node_ids: Vec<u32>,
+    pub node_feat_dim: usize,
+    pub node_feats: Vec<f32>,
+}
+
+impl DiscretizedColumns {
+    pub fn into_storage(
+        self,
+        num_nodes: usize,
+        static_feat_dim: usize,
+        static_feats: Vec<f32>,
+        target: TimeGranularity,
+    ) -> GraphStorage {
+        GraphStorage::from_sorted_columns(
+            self.ts,
+            self.src,
+            self.dst,
+            self.out_dim,
+            self.feats,
+            self.node_ts,
+            self.node_ids,
+            self.node_feat_dim,
+            self.node_feats,
+            num_nodes,
+            static_feat_dim,
+            static_feats,
+            target,
+        )
+    }
+}
+
+/// Vectorized discretization core over raw columns with an explicit
+/// bucket origin `t0` and width `secs` (already validated against the
+/// native granularity by the caller).
 ///
-/// Complexity: `O(E)` key computation + `O(E log E)` index sort +
-/// `O(E · d)` grouped reduction; zero per-event heap allocation. The
-/// input snapshot is coalesced first (free for single-segment snapshots,
-/// i.e. every one-shot dataset), so the scan runs over contiguous columns.
-pub fn discretize(
-    snapshot: &StorageSnapshot,
+/// Edge timestamps must be `>= t0` (the origin is the stream's first
+/// edge timestamp); node-event timestamps may precede it, so their keys
+/// are sorted as signed tuples instead of the packed unsigned word.
+/// Output rows come out in `(bucket, src, dst)` order — which **is**
+/// timestamp order, since every row's timestamp is its bucket start —
+/// so no final re-sort is needed.
+pub(crate) fn discretize_columns(
+    cols: &EventColumns<'_>,
     target: TimeGranularity,
+    secs: i64,
+    t0: Timestamp,
     reduce: ReduceOp,
-) -> Result<GraphStorage> {
-    let storage = snapshot.coalesce();
-    let storage = storage.as_ref();
-    let secs = check_coarser(storage, target)?;
-    let t0 = storage.start_time();
-    let ts = storage.edge_ts();
-    let src = storage.edge_src();
-    let dst = storage.edge_dst();
+) -> Result<DiscretizedColumns> {
+    let ts = cols.ts;
+    let src = cols.src;
+    let dst = cols.dst;
     let n = ts.len();
 
-    // Pass 1: bucket of every event (vectorized over the columnar layout).
-    let mut buckets: Vec<i64> = Vec::with_capacity(n);
-    for &t in ts {
-        buckets.push((t - t0).div_euclid(secs));
-    }
+    // Pass 1: bucket of every event (run-based over the sorted column).
+    let mut buckets: Vec<i64> = Vec::new();
+    kernels::bucket_keys(ts, t0, secs, &mut buckets);
+    debug_assert!(n == 0 || buckets[0] >= 0, "edge timestamps precede the bucket origin");
 
-    // Pass 2: index sort by packed (bucket, src, dst) key. Timestamps are
-    // already sorted, so the sort is nearly-ordered on the leading key; we
-    // use an unstable pattern-defeating sort over u128 packed keys, which
-    // is allocation-free and branch-cheap.
+    // Pass 2: index sort by packed (bucket, src, dst) key, tie-broken by
+    // the original index. The tiebreak makes the order a deterministic
+    // *total* order: within a class, events stay in stream order, so
+    // order-sensitive f32 folds (Sum/Mean) give the same bits whether a
+    // class is reduced from a full coalesced snapshot or from a slice of
+    // it (the incremental-view identity depends on this).
     let mut order: Vec<u32> = (0..n as u32).collect();
     let key = |i: u32| -> u128 {
         let i = i as usize;
         ((buckets[i] as u128) << 64) | ((src[i] as u128) << 32) | dst[i] as u128
     };
-    order.sort_unstable_by_key(|&i| key(i));
+    order.sort_unstable_by_key(|&i| (key(i), i));
 
     // Pass 3: grouped reduction scan.
-    let d = storage.edge_feat_dim();
+    let d = cols.feat_dim;
     let out_dim = match reduce {
         ReduceOp::Count => 1,
         _ => d,
@@ -117,6 +212,9 @@ pub fn discretize(
     let mut out_src: Vec<u32> = Vec::new();
     let mut out_dst: Vec<u32> = Vec::new();
     let mut out_feats: Vec<f32> = Vec::new();
+    // For Last the per-class representative rows are collected as indices
+    // and pulled in one batched row gather after the scan.
+    let mut last_idx: Vec<u32> = Vec::new();
     let mut acc: Vec<f32> = vec![0.0; d];
 
     let mut g = 0usize;
@@ -135,18 +233,15 @@ pub fn discretize(
         match reduce {
             ReduceOp::Count => out_feats.push(count),
             ReduceOp::Last => {
-                // Sort is unstable on equal keys; pick the max original
-                // index explicitly (events were time-sorted).
-                let last = order[g..end].iter().map(|&i| i as usize).max().unwrap();
-                out_feats.extend_from_slice(storage.edge_feat_row(last));
+                // The index tiebreak sorted the class by original index,
+                // so the latest event is simply the group's last entry.
+                last_idx.push(order[end - 1]);
             }
             ReduceOp::Sum | ReduceOp::Mean => {
                 acc.iter_mut().for_each(|a| *a = 0.0);
                 for &i in &order[g..end] {
-                    let row = storage.edge_feat_row(i as usize);
-                    for (a, &x) in acc.iter_mut().zip(row) {
-                        *a += x;
-                    }
+                    let i = i as usize;
+                    kernels::add_assign_f32(&mut acc, &cols.feats[i * d..(i + 1) * d]);
                 }
                 if reduce == ReduceOp::Mean {
                     acc.iter_mut().for_each(|a| *a /= count);
@@ -156,41 +251,100 @@ pub fn discretize(
             ReduceOp::Max => {
                 acc.iter_mut().for_each(|a| *a = f32::NEG_INFINITY);
                 for &i in &order[g..end] {
-                    let row = storage.edge_feat_row(i as usize);
-                    for (a, &x) in acc.iter_mut().zip(row) {
-                        *a = a.max(x);
-                    }
+                    let i = i as usize;
+                    kernels::max_assign_f32(&mut acc, &cols.feats[i * d..(i + 1) * d]);
                 }
                 out_feats.extend_from_slice(&acc);
             }
         }
         g = end;
     }
+    if reduce == ReduceOp::Last && d > 0 {
+        // Every slot is live, so a straight contiguous row copy beats the
+        // masked gather kernel (no mask to allocate or test).
+        out_feats.reserve(last_idx.len() * d);
+        for &i in &last_idx {
+            let i = i as usize;
+            out_feats.extend_from_slice(&cols.feats[i * d..(i + 1) * d]);
+        }
+    }
+    debug_assert!(out_ts.windows(2).all(|w| w[0] <= w[1]));
 
-    // The grouped output is sorted by (bucket, src, dst); re-sort columns
-    // by timestamp only (stable) to restore the storage invariant.
-    let m = out_ts.len();
-    let mut perm: Vec<u32> = (0..m as u32).collect();
-    perm.sort_by_key(|&i| out_ts[i as usize]);
-    let ts2: Vec<Timestamp> = perm.iter().map(|&i| out_ts[i as usize]).collect();
-    let src2: Vec<u32> = perm.iter().map(|&i| out_src[i as usize]).collect();
-    let dst2: Vec<u32> = perm.iter().map(|&i| out_dst[i as usize]).collect();
-    let mut feats2: Vec<f32> = Vec::with_capacity(m * out_dim);
-    for &i in &perm {
-        let i = i as usize;
-        feats2.extend_from_slice(&out_feats[i * out_dim..(i + 1) * out_dim]);
+    // Node events: one representative per (bucket, node) class with the
+    // class's latest feature row (`Last` semantics regardless of the edge
+    // reduce op — node state is a signal, not a count).
+    let nn = cols.node_ts.len();
+    let nd = cols.node_feat_dim;
+    let mut node_out_ts: Vec<Timestamp> = Vec::new();
+    let mut node_out_ids: Vec<u32> = Vec::new();
+    let mut node_out_feats: Vec<f32> = Vec::new();
+    if nn > 0 {
+        let mut nbuckets: Vec<i64> = Vec::new();
+        kernels::bucket_keys(cols.node_ts, t0, secs, &mut nbuckets);
+        let mut norder: Vec<u32> = (0..nn as u32).collect();
+        // Node events may predate the first edge, so buckets can be
+        // negative: sort signed tuples rather than a packed word.
+        norder.sort_unstable_by_key(|&i| (nbuckets[i as usize], cols.node_ids[i as usize], i));
+        let mut nlast: Vec<u32> = Vec::new();
+        let mut g = 0usize;
+        while g < nn {
+            let head = norder[g] as usize;
+            let (hb, hid) = (nbuckets[head], cols.node_ids[head]);
+            let mut end = g + 1;
+            while end < nn {
+                let j = norder[end] as usize;
+                if nbuckets[j] != hb || cols.node_ids[j] != hid {
+                    break;
+                }
+                end += 1;
+            }
+            node_out_ts.push(target.bucket_start(hb, t0)?);
+            node_out_ids.push(hid);
+            nlast.push(norder[end - 1]);
+            g = end;
+        }
+        if nd > 0 {
+            node_out_feats.reserve(nlast.len() * nd);
+            for &i in &nlast {
+                let i = i as usize;
+                node_out_feats.extend_from_slice(&cols.node_feats[i * nd..(i + 1) * nd]);
+            }
+        }
+        debug_assert!(node_out_ts.windows(2).all(|w| w[0] <= w[1]));
     }
 
-    Ok(GraphStorage::from_sorted_columns(
-        ts2,
-        src2,
-        dst2,
+    Ok(DiscretizedColumns {
+        ts: out_ts,
+        src: out_src,
+        dst: out_dst,
         out_dim,
-        feats2,
-        Vec::new(),
-        Vec::new(),
-        0,
-        Vec::new(),
+        feats: out_feats,
+        node_ts: node_out_ts,
+        node_ids: node_out_ids,
+        node_feat_dim: nd,
+        node_feats: node_out_feats,
+    })
+}
+
+/// Vectorized discretization: TGM's fast path.
+///
+/// Complexity: `O(distinct buckets)` divisions + `O(E log E)` index sort +
+/// `O(E · d)` grouped reduction; zero per-event heap allocation. The
+/// input snapshot is coalesced first (free for single-segment snapshots,
+/// i.e. every one-shot dataset), so the scan runs over contiguous columns.
+/// Node events are carried through with `Last` semantics per
+/// `(bucket, node)` class; static node features pass through unchanged.
+pub fn discretize(
+    snapshot: &StorageSnapshot,
+    target: TimeGranularity,
+    reduce: ReduceOp,
+) -> Result<GraphStorage> {
+    let storage = snapshot.coalesce();
+    let storage = storage.as_ref();
+    let secs = check_coarser(storage, target)?;
+    let t0 = storage.start_time();
+    let out = discretize_columns(&EventColumns::of(storage), target, secs, t0, reduce)?;
+    Ok(out.into_storage(
         storage.num_nodes(),
         storage.static_feat_dim(),
         storage.static_feats().to_vec(),
@@ -205,7 +359,8 @@ pub fn discretize(
 /// and append each event's feature vector to a per-class growable list;
 /// finally walk the map, reduce each list, and sort the output. The
 /// per-event boxed allocations and pointer-chasing hash lookups are the
-/// costs TGM's vectorized path eliminates.
+/// costs TGM's vectorized path eliminates. Node events get the same
+/// `Last`-per-`(bucket, node)` treatment as [`discretize`].
 pub fn discretize_utg(
     snapshot: &StorageSnapshot,
     target: TimeGranularity,
@@ -273,16 +428,39 @@ pub fn discretize_utg(
         dst.push(dd);
         fx.extend_from_slice(&f);
     }
+
+    // Node events, dict-style: latest row per (bucket, node) class.
+    let nd = storage.node_feat_dim();
+    let mut node_classes: HashMap<(i64, u32), Vec<f32>> = HashMap::new();
+    for i in 0..storage.num_node_events() {
+        let bucket = (storage.node_event_ts()[i] - t0).div_euclid(secs);
+        node_classes
+            .insert((bucket, storage.node_event_ids()[i]), storage.node_event_feat_row(i).to_vec());
+    }
+    let mut node_rows: Vec<(Timestamp, u32, Vec<f32>)> = Vec::with_capacity(node_classes.len());
+    for ((bucket, id), f) in node_classes {
+        node_rows.push((target.bucket_start(bucket, t0)?, id, f));
+    }
+    node_rows.sort_by_key(|r| (r.0, r.1));
+    let mut nts = Vec::with_capacity(node_rows.len());
+    let mut nid = Vec::with_capacity(node_rows.len());
+    let mut nfx = Vec::with_capacity(node_rows.len() * nd);
+    for (t, id, f) in node_rows {
+        nts.push(t);
+        nid.push(id);
+        nfx.extend_from_slice(&f);
+    }
+
     Ok(GraphStorage::from_sorted_columns(
         ts,
         src,
         dst,
         out_dim,
         fx,
-        Vec::new(),
-        Vec::new(),
-        0,
-        Vec::new(),
+        nts,
+        nid,
+        nd,
+        nfx,
         storage.num_nodes(),
         storage.static_feat_dim(),
         storage.static_feats().to_vec(),
@@ -293,7 +471,7 @@ pub fn discretize_utg(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::events::EdgeEvent;
+    use crate::graph::events::{EdgeEvent, NodeEvent};
     use crate::util::Rng;
 
     fn edge(t: Timestamp, src: u32, dst: u32, f: f32) -> EdgeEvent {
@@ -347,12 +525,74 @@ mod tests {
     }
 
     #[test]
+    fn reduce_op_parse_round_trips_and_rejects_unknown() {
+        for (s, op) in [
+            ("sum", ReduceOp::Sum),
+            ("MEAN", ReduceOp::Mean),
+            ("Last", ReduceOp::Last),
+            ("max", ReduceOp::Max),
+            ("count", ReduceOp::Count),
+        ] {
+            assert_eq!(ReduceOp::parse(s).unwrap(), op);
+        }
+        let err = ReduceOp::parse("median").unwrap_err();
+        assert!(matches!(err, TgmError::Config(_)), "expected Config error, got {err:?}");
+        assert!(err.to_string().contains("median"));
+    }
+
+    #[test]
     fn rejects_finer_target_and_event_graphs() {
         let g = hourly_graph();
         let daily = discretize(&g, TimeGranularity::Day, ReduceOp::Mean).unwrap().into_snapshot();
         assert_eq!(daily.num_edges(), 3); // all distinct (s,d) pairs, one day
         // Finer than native of the daily graph:
         assert!(discretize(&daily, TimeGranularity::Hour, ReduceOp::Mean).is_err());
+    }
+
+    #[test]
+    fn node_events_are_bucketed_with_last_semantics() {
+        // Regression: node events used to be silently dropped from the
+        // coarse graph. Two updates of node 1 in hour 0 must collapse to
+        // the later one at the bucket start; node 2's hour-1 update (and
+        // one *before* the first edge, in a negative bucket) survive.
+        let edges = vec![edge(100, 0, 1, 1.0), edge(5000, 1, 2, 2.0)];
+        let nodes = vec![
+            NodeEvent { t: 50, node: 2, features: vec![9.0] },
+            NodeEvent { t: 200, node: 1, features: vec![1.5] },
+            NodeEvent { t: 900, node: 1, features: vec![2.5] },
+            NodeEvent { t: 4200, node: 2, features: vec![3.5] },
+        ];
+        let g = GraphStorage::from_events(edges, nodes, 3, None, Some(TimeGranularity::Second))
+            .unwrap()
+            .into_snapshot();
+        for f in [discretize, discretize_utg] {
+            let h = f(&g, TimeGranularity::Hour, ReduceOp::Sum).unwrap();
+            assert_eq!(h.num_node_events(), 3, "one per (bucket, node) class");
+            // t0 = 100, so t=50 lands in bucket -1 (start -3500), the two
+            // node-1 updates collapse into bucket 0 (start 100) keeping
+            // the later features, node 2's second update is bucket 1.
+            assert_eq!(h.node_event_ts(), &[-3500, 100, 3700]);
+            assert_eq!(h.node_event_ids(), &[2, 1, 2]);
+            assert_eq!(h.node_event_feats(), &[9.0, 2.5, 3.5]);
+            assert_eq!(h.node_feat_dim(), 1);
+        }
+    }
+
+    #[test]
+    fn static_feats_pass_through() {
+        let edges = vec![edge(0, 0, 1, 1.0), edge(4000, 1, 2, 2.0)];
+        let g = GraphStorage::from_events(
+            edges,
+            vec![],
+            3,
+            Some((2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0])),
+            Some(TimeGranularity::Second),
+        )
+        .unwrap()
+        .into_snapshot();
+        let h = discretize(&g, TimeGranularity::Hour, ReduceOp::Last).unwrap();
+        assert_eq!(h.static_feat_dim(), 2);
+        assert_eq!(h.static_feats(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
     }
 
     #[test]
@@ -371,7 +611,14 @@ mod tests {
                     )
                 })
                 .collect();
-            let g = GraphStorage::from_events(edges, vec![], 20, None, Some(TimeGranularity::Second))
+            let nodes: Vec<NodeEvent> = (0..60)
+                .map(|_| NodeEvent {
+                    t: rng.range(0, 100_000),
+                    node: rng.below(20) as u32,
+                    features: vec![rng.f32()],
+                })
+                .collect();
+            let g = GraphStorage::from_events(edges, nodes, 20, None, Some(TimeGranularity::Second))
                 .unwrap()
                 .into_snapshot();
             for op in [ReduceOp::Sum, ReduceOp::Mean, ReduceOp::Last, ReduceOp::Max, ReduceOp::Count]
@@ -393,6 +640,9 @@ mod tests {
                         assert!((u - v).abs() < 1e-4, "op {op:?}: {u} vs {v}");
                     }
                 }
+                assert_eq!(a.node_event_ts(), b.node_event_ts(), "trial {trial} op {op:?}");
+                assert_eq!(a.node_event_ids(), b.node_event_ids());
+                assert_eq!(a.node_event_feats(), b.node_event_feats());
             }
         }
     }

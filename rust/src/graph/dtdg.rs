@@ -1,0 +1,522 @@
+//! Incrementally-maintained DTDG materialized views.
+//!
+//! [`discretize`](crate::graph::discretize::discretize) converts a CTDG
+//! snapshot to a coarser discrete-time graph in one O(n) rescan. For a
+//! *growing* store that cost recurs on every refresh, so this module
+//! turns coarse views into **derived segments** maintained incrementally
+//! as the base [`SegmentedStorage`](crate::graph::SegmentedStorage)
+//! seals:
+//!
+//! * A [`DtdgView`] is registered on a store with a target granularity
+//!   and [`ReduceOp`]. Each seal hands the view only the newly sealed
+//!   events; refresh cost is O(new events), amortized O(1) per event.
+//! * Consumed events are split at the **last complete bucket boundary**.
+//!   The complete prefix is discretized alone (with the same vectorized
+//!   [`discretize_columns`] pass the one-shot path uses, anchored at the
+//!   stream's global origin) and frozen into a bucket-aligned derived
+//!   segment. Only the trailing partial bucket region stays mutable: it
+//!   is held as raw pending columns and re-reduced into a fresh tail
+//!   segment on every refresh (the "partial-bucket rule").
+//! * A bucket is complete exactly when no future event can land in it.
+//!   Stale appends are rejected by the base store, so every future edge
+//!   has `t >= last sealed edge timestamp` — all buckets strictly before
+//!   `bucket(last_edge_ts)` are final. Node events have their own
+//!   watermark and are finalized against it independently.
+//! * Each refresh publishes a fresh `Arc<StorageSnapshot>` generation
+//!   (finalized segments + tail) through a
+//!   [`SnapshotCell`](crate::graph::SnapshotCell), so an hourly/daily
+//!   view is always one `pin()` away.
+//!
+//! **Compaction invariance.** Tiered compaction replaces a run of base
+//! segments with one merged segment holding the *identical* logical
+//! event stream (runs are addressed by never-reused segment ids, and
+//! installs splice byte-identical columns). The view consumes the stream
+//! by logical offset, not by segment identity, so an install changes
+//! nothing it depends on — the derived run needs no rebuild, which is
+//! the cheapest possible "rebuild only the affected run". The
+//! integration property test pins this under randomized fanouts.
+//!
+//! **Bit-identity.** The view's concatenated columns are bit-identical
+//! to `discretize()` over the full coalesced snapshot because (a) bucket
+//! classes never straddle derived-segment boundaries (cuts are bucket
+//! starts), (b) the class sort inside `discretize_columns` is a total
+//! order tie-broken by stream position, so per-class f32 folds run in
+//! the same order no matter how the stream is sliced, and (c) both paths
+//! share one bucket origin: the stream's first sealed edge timestamp,
+//! which is fixed forever after the first seal.
+
+use crate::error::{Result, TgmError};
+use crate::graph::discretize::{
+    check_coarser_granularity, discretize_columns, EventColumns, ReduceOp,
+};
+use crate::graph::segment::{next_id, SnapshotCell, SnapshotId, StorageSnapshot};
+use crate::graph::storage::GraphStorage;
+use crate::util::{TimeGranularity, Timestamp};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// State shared between a [`DtdgView`] (owned by the store) and its
+/// [`DtdgHandle`]s (held by trainers / serving readers).
+struct ViewShared {
+    cell: SnapshotCell,
+    /// Exclusive end timestamp of the finalized (complete-bucket) edge
+    /// region; `i64::MIN` until the first refresh finalizes anything.
+    complete_until: AtomicI64,
+    refreshes: AtomicU64,
+    /// Most recent refresh failure (e.g. the base stream's inferred
+    /// granularity is still event-ordered or finer than the target).
+    /// Cleared by the next successful refresh; refreshes never fail the
+    /// seal that triggered them.
+    last_error: Mutex<Option<String>>,
+}
+
+/// Reader handle to a registered DTDG materialized view.
+///
+/// Cheap to clone; outlives nothing — the view keeps refreshing as long
+/// as its store lives, and pinned snapshots stay byte-stable forever.
+#[derive(Clone)]
+pub struct DtdgHandle {
+    target: TimeGranularity,
+    reduce: ReduceOp,
+    shared: Arc<ViewShared>,
+}
+
+impl DtdgHandle {
+    /// Pin the latest published view generation (`None` before the
+    /// first successful refresh).
+    pub fn pin(&self) -> Option<Arc<StorageSnapshot>> {
+        self.shared.cell.pin()
+    }
+
+    /// The underlying publish cell (for wiring into serving surfaces).
+    pub fn cell(&self) -> SnapshotCell {
+        self.shared.cell.clone()
+    }
+
+    /// Target granularity of the view.
+    pub fn target(&self) -> TimeGranularity {
+        self.target
+    }
+
+    /// Reduction op of the view.
+    pub fn reduce(&self) -> ReduceOp {
+        self.reduce
+    }
+
+    /// Exclusive end timestamp of the finalized region: every bucket
+    /// starting strictly before this is complete — no future append can
+    /// add events to it. `None` until the first refresh.
+    pub fn complete_until(&self) -> Option<Timestamp> {
+        let v = self.shared.complete_until.load(Ordering::Acquire);
+        if v == i64::MIN {
+            None
+        } else {
+            Some(v)
+        }
+    }
+
+    /// Generation of the latest published view snapshot.
+    pub fn generation(&self) -> Option<u64> {
+        self.shared.cell.generation()
+    }
+
+    /// Number of successful refreshes so far.
+    pub fn refreshes(&self) -> u64 {
+        self.shared.refreshes.load(Ordering::Relaxed)
+    }
+
+    /// The most recent refresh error, if the view is currently stalled
+    /// (it retries on every seal).
+    pub fn last_error(&self) -> Option<String> {
+        self.shared.last_error.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+}
+
+/// One incrementally-maintained materialized view (store-side state).
+pub(crate) struct DtdgView {
+    target: TimeGranularity,
+    reduce: ReduceOp,
+    /// Bucket origin: the stream's first sealed edge timestamp. Fixed at
+    /// the first refresh that sees a sealed edge (stale appends are
+    /// rejected, so it can never change afterwards) and identical to the
+    /// `start_time()` a full-snapshot `discretize()` would use.
+    origin: Option<Timestamp>,
+    /// Finalized bucket-aligned derived segments (+ their never-reused
+    /// ids). Immutable once pushed.
+    derived: Vec<Arc<GraphStorage>>,
+    derived_ids: Vec<u64>,
+    /// Raw pending columns: consumed events not yet provably complete
+    /// (the trailing partial bucket region), re-reduced every refresh.
+    pend_ts: Vec<Timestamp>,
+    pend_src: Vec<u32>,
+    pend_dst: Vec<u32>,
+    pend_feats: Vec<f32>,
+    pend_node_ts: Vec<Timestamp>,
+    pend_node_ids: Vec<u32>,
+    pend_node_feats: Vec<f32>,
+    edge_feat_dim: usize,
+    node_feat_dim: usize,
+    /// Logical consumption offsets into the base store's sealed stream.
+    /// Compaction preserves the stream byte-for-byte, so these survive
+    /// installs unchanged.
+    consumed_edges: usize,
+    consumed_nodes: usize,
+    /// Store id for the view's published snapshots (distinct from the
+    /// base store's).
+    view_store_id: u64,
+    generation: u64,
+    shared: Arc<ViewShared>,
+}
+
+impl DtdgView {
+    pub(crate) fn new(target: TimeGranularity, reduce: ReduceOp) -> DtdgView {
+        DtdgView {
+            target,
+            reduce,
+            origin: None,
+            derived: Vec::new(),
+            derived_ids: Vec::new(),
+            pend_ts: Vec::new(),
+            pend_src: Vec::new(),
+            pend_dst: Vec::new(),
+            pend_feats: Vec::new(),
+            pend_node_ts: Vec::new(),
+            pend_node_ids: Vec::new(),
+            pend_node_feats: Vec::new(),
+            edge_feat_dim: 0,
+            node_feat_dim: 0,
+            consumed_edges: 0,
+            consumed_nodes: 0,
+            view_store_id: next_id(),
+            generation: 0,
+            shared: Arc::new(ViewShared {
+                cell: SnapshotCell::new(),
+                complete_until: AtomicI64::new(i64::MIN),
+                refreshes: AtomicU64::new(0),
+                last_error: Mutex::new(None),
+            }),
+        }
+    }
+
+    pub(crate) fn handle(&self) -> DtdgHandle {
+        DtdgHandle { target: self.target, reduce: self.reduce, shared: Arc::clone(&self.shared) }
+    }
+
+    /// Refresh from the base store's sealed segments, recording (never
+    /// propagating) errors — a stalled view must not fail the seal that
+    /// triggered it, and it retries on the next one.
+    pub(crate) fn refresh_recording(
+        &mut self,
+        sealed: &[Arc<GraphStorage>],
+        native: TimeGranularity,
+        num_nodes: usize,
+        static_feat_dim: usize,
+        static_feats: &Arc<Vec<f32>>,
+    ) {
+        let res = self.refresh(sealed, native, num_nodes, static_feat_dim, static_feats);
+        let mut slot = self.shared.last_error.lock().unwrap_or_else(|e| e.into_inner());
+        match res {
+            Ok(true) => *slot = None,
+            // A no-op refresh proves nothing about a previously recorded
+            // stall (the failed events sit in the pending columns until a
+            // later seal retries them) — keep the error visible.
+            Ok(false) => {}
+            Err(e) => *slot = Some(e.to_string()),
+        }
+    }
+
+    /// Consume newly sealed events and publish a fresh view generation.
+    /// Returns `true` when anything was consumed.
+    pub(crate) fn refresh(
+        &mut self,
+        sealed: &[Arc<GraphStorage>],
+        native: TimeGranularity,
+        num_nodes: usize,
+        static_feat_dim: usize,
+        static_feats: &Arc<Vec<f32>>,
+    ) -> Result<bool> {
+        let edge_total: usize = sealed.iter().map(|s| s.num_edges()).sum();
+        let node_total: usize = sealed.iter().map(|s| s.num_node_events()).sum();
+        debug_assert!(edge_total >= self.consumed_edges && node_total >= self.consumed_nodes);
+        if edge_total == self.consumed_edges && node_total == self.consumed_nodes {
+            return Ok(false);
+        }
+        // No origin without a sealed edge: hold everything until the
+        // first edge-bearing seal (base segments always carry one).
+        if edge_total == 0 {
+            return Ok(false);
+        }
+        let secs = check_coarser_granularity(native, self.target)?;
+        let origin = *self.origin.get_or_insert_with(|| sealed[0].start_time());
+
+        // Learn feature dims from the first segments that carry each kind.
+        if self.edge_feat_dim == 0 {
+            self.edge_feat_dim = sealed[0].edge_feat_dim();
+        }
+        if self.node_feat_dim == 0 {
+            if let Some(s) = sealed.iter().find(|s| s.num_node_events() > 0) {
+                self.node_feat_dim = s.node_feat_dim();
+            }
+        }
+        let d = self.edge_feat_dim;
+        let nd = self.node_feat_dim;
+
+        // Append the unconsumed logical suffix of the sealed stream to
+        // the pending columns. Offsets are logical, so this walk is
+        // correct across compaction installs (same stream, fewer parts).
+        let mut skip = self.consumed_edges;
+        for seg in sealed {
+            let n = seg.num_edges();
+            if skip >= n {
+                skip -= n;
+                continue;
+            }
+            self.pend_ts.extend_from_slice(&seg.edge_ts()[skip..]);
+            self.pend_src.extend_from_slice(&seg.edge_src()[skip..]);
+            self.pend_dst.extend_from_slice(&seg.edge_dst()[skip..]);
+            self.pend_feats.extend_from_slice(&seg.edge_feats()[skip * d..]);
+            skip = 0;
+        }
+        let mut nskip = self.consumed_nodes;
+        for seg in sealed {
+            let n = seg.num_node_events();
+            if nskip >= n {
+                nskip -= n;
+                continue;
+            }
+            self.pend_node_ts.extend_from_slice(&seg.node_event_ts()[nskip..]);
+            self.pend_node_ids.extend_from_slice(&seg.node_event_ids()[nskip..]);
+            self.pend_node_feats.extend_from_slice(&seg.node_event_feats()[nskip * nd..]);
+            nskip = 0;
+        }
+        self.consumed_edges = edge_total;
+        self.consumed_nodes = node_total;
+
+        // Completeness watermarks. Future edge appends have
+        // `t >= last_edge_ts`, so buckets before bucket(last_edge_ts)
+        // are final; node events carry their own watermark.
+        let last_edge_ts = sealed.last().expect("edge_total > 0").end_time();
+        let edge_cut = origin + (last_edge_ts - origin).div_euclid(secs) * secs;
+        let ek = self.pend_ts.partition_point(|&t| t < edge_cut);
+        let nk = match sealed.iter().rev().find_map(|s| s.node_event_ts().last().copied()) {
+            Some(last_node_ts) => {
+                let node_cut = origin + (last_node_ts - origin).div_euclid(secs) * secs;
+                self.pend_node_ts.partition_point(|&t| t < node_cut)
+            }
+            None => 0,
+        };
+
+        // Freeze the complete prefix into a new derived segment. Node
+        // events only ride along with an edge-bearing freeze so every
+        // derived segment carries a time span (they stay pending
+        // otherwise — the tail still serves them).
+        if ek > 0 {
+            let cols = EventColumns {
+                ts: &self.pend_ts[..ek],
+                src: &self.pend_src[..ek],
+                dst: &self.pend_dst[..ek],
+                feat_dim: d,
+                feats: &self.pend_feats[..ek * d],
+                node_ts: &self.pend_node_ts[..nk],
+                node_ids: &self.pend_node_ids[..nk],
+                node_feat_dim: nd,
+                node_feats: &self.pend_node_feats[..nk * nd],
+            };
+            let out = discretize_columns(&cols, self.target, secs, origin, self.reduce)?;
+            let seg = out.into_storage(num_nodes, 0, Vec::new(), self.target);
+            self.derived.push(Arc::new(seg));
+            self.derived_ids.push(next_id());
+            self.pend_ts.drain(..ek);
+            self.pend_src.drain(..ek);
+            self.pend_dst.drain(..ek);
+            self.pend_feats.drain(..ek * d);
+            self.pend_node_ts.drain(..nk);
+            self.pend_node_ids.drain(..nk);
+            self.pend_node_feats.drain(..nk * nd);
+            self.shared.complete_until.store(edge_cut, Ordering::Release);
+        }
+
+        // Re-reduce the trailing partial region into a fresh tail
+        // segment (pending edges are never empty here: the newest sealed
+        // edge is always in the incomplete bucket) and publish.
+        debug_assert!(!self.pend_ts.is_empty());
+        let tail_cols = EventColumns {
+            ts: &self.pend_ts,
+            src: &self.pend_src,
+            dst: &self.pend_dst,
+            feat_dim: d,
+            feats: &self.pend_feats,
+            node_ts: &self.pend_node_ts,
+            node_ids: &self.pend_node_ids,
+            node_feat_dim: nd,
+            node_feats: &self.pend_node_feats,
+        };
+        let tail = discretize_columns(&tail_cols, self.target, secs, origin, self.reduce)?;
+        let tail_seg = Arc::new(tail.into_storage(num_nodes, 0, Vec::new(), self.target));
+
+        self.generation += 1;
+        let mut segments = self.derived.clone();
+        let mut ids = self.derived_ids.clone();
+        segments.push(tail_seg);
+        ids.push(next_id());
+        let snap = StorageSnapshot::from_parts(
+            segments,
+            ids,
+            num_nodes,
+            self.target,
+            static_feat_dim,
+            Arc::clone(static_feats),
+            SnapshotId { store: self.view_store_id, generation: self.generation },
+        );
+        self.shared.cell.publish(Arc::new(snap));
+        self.shared.refreshes.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Number of finalized derived segments (diagnostics/tests).
+    #[cfg(test)]
+    pub(crate) fn num_derived(&self) -> usize {
+        self.derived.len()
+    }
+}
+
+/// Validate a view registration target: must be a wall-clock unit (an
+/// event-ordered "view" could never bucket anything).
+pub(crate) fn check_view_target(target: TimeGranularity) -> Result<()> {
+    if target.seconds().is_none() {
+        return Err(TgmError::Time(
+            "DTDG view target must be a wall-clock granularity, not event-ordered".into(),
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::discretize::discretize;
+    use crate::graph::events::EdgeEvent;
+    use crate::graph::segment::{SealPolicy, SegmentedStorage};
+
+    fn edge(t: Timestamp, src: u32, dst: u32, f: f32) -> EdgeEvent {
+        EdgeEvent { t, src, dst, features: vec![f] }
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn view_tracks_full_discretize_across_seals() {
+        let mut st = SegmentedStorage::new(8, SealPolicy::by_events(usize::MAX))
+            .with_granularity(TimeGranularity::Second);
+        let h = st.register_dtdg_view(TimeGranularity::Hour, ReduceOp::Sum).unwrap();
+        assert!(h.pin().is_none());
+
+        // Three seals with buckets straddling the seal boundaries.
+        let chunks: Vec<Vec<EdgeEvent>> = vec![
+            vec![edge(0, 0, 1, 1.0), edge(1800, 0, 1, 2.0)],
+            vec![edge(1900, 0, 1, 4.0), edge(4000, 2, 3, 8.0)],
+            vec![edge(4100, 2, 3, 16.0), edge(9000, 1, 2, 32.0)],
+        ];
+        for chunk in chunks {
+            for e in chunk {
+                st.append_edge(e).unwrap();
+            }
+            st.seal().unwrap();
+            let view = h.pin().expect("published after seal");
+            let full = discretize(&st.snapshot().unwrap(), TimeGranularity::Hour, ReduceOp::Sum)
+                .unwrap();
+            let got = view.coalesce();
+            assert_eq!(got.edge_ts(), full.edge_ts());
+            assert_eq!(got.edge_src(), full.edge_src());
+            assert_eq!(got.edge_dst(), full.edge_dst());
+            assert_eq!(bits(got.edge_feats()), bits(full.edge_feats()));
+        }
+        // Hour 0 closed once an hour-1 edge sealed; hour 1 closed at 9000.
+        assert_eq!(h.complete_until(), Some(7200));
+        assert_eq!(h.refreshes(), 3);
+    }
+
+    #[test]
+    fn view_is_invariant_under_compaction_install() {
+        let mut st = SegmentedStorage::new(8, SealPolicy::by_events(2))
+            .with_granularity(TimeGranularity::Second);
+        let h = st.register_dtdg_view(TimeGranularity::Hour, ReduceOp::Mean).unwrap();
+        for i in 0..20i64 {
+            st.append_edge(edge(i * 700, (i % 4) as u32, ((i + 1) % 4) as u32, i as f32)).unwrap();
+        }
+        st.seal().unwrap();
+        let before = h.pin().unwrap();
+        assert!(st.compact_tiered(4).unwrap().is_some());
+        // Nothing new sealed: the published view generation is untouched
+        // and a forced refresh is a no-op.
+        st.refresh_dtdg_views();
+        let after = h.pin().unwrap();
+        assert_eq!(before.id(), after.id());
+        // Content still matches a full rescan over the compacted base.
+        let full =
+            discretize(&st.snapshot().unwrap(), TimeGranularity::Hour, ReduceOp::Mean).unwrap();
+        let got = after.coalesce();
+        assert_eq!(got.edge_ts(), full.edge_ts());
+        assert_eq!(bits(got.edge_feats()), bits(full.edge_feats()));
+    }
+
+    #[test]
+    fn registration_after_seals_catches_up() {
+        let mut st = SegmentedStorage::new(8, SealPolicy::by_events(3))
+            .with_granularity(TimeGranularity::Second);
+        for i in 0..12i64 {
+            st.append_edge(edge(i * 1000, 0, 1, 1.0)).unwrap();
+        }
+        st.seal().unwrap();
+        let h = st.register_dtdg_view(TimeGranularity::Hour, ReduceOp::Count).unwrap();
+        let view = h.pin().expect("catch-up publish at registration");
+        let full =
+            discretize(&st.snapshot().unwrap(), TimeGranularity::Hour, ReduceOp::Count).unwrap();
+        assert_eq!(view.coalesce().edge_ts(), full.edge_ts());
+    }
+
+    #[test]
+    fn event_target_is_rejected_and_event_native_stalls() {
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(usize::MAX));
+        assert!(st.register_dtdg_view(TimeGranularity::Event, ReduceOp::Sum).is_err());
+
+        // All-tied timestamps infer an event-ordered native granularity:
+        // the view stalls with a recorded error instead of failing seal.
+        let h = st.register_dtdg_view(TimeGranularity::Hour, ReduceOp::Sum).unwrap();
+        st.append_edge(edge(5, 0, 1, 1.0)).unwrap();
+        st.append_edge(edge(5, 1, 2, 1.0)).unwrap();
+        st.seal().unwrap();
+        assert!(h.pin().is_none());
+        assert!(h.last_error().unwrap().contains("event-ordered"));
+
+        // A spaced edge refines the native granularity; the stalled view
+        // catches up on the next seal.
+        st.append_edge(edge(3605, 2, 3, 1.0)).unwrap();
+        st.seal().unwrap();
+        assert!(h.pin().is_some());
+        assert!(h.last_error().is_none());
+    }
+
+    #[test]
+    fn trailing_partial_bucket_is_rereduced_not_frozen() {
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(usize::MAX))
+            .with_granularity(TimeGranularity::Second);
+        let h = st.register_dtdg_view(TimeGranularity::Hour, ReduceOp::Sum).unwrap();
+        // Two seals inside one bucket: the class (0,1) keeps absorbing.
+        st.append_edge(edge(0, 0, 1, 1.0)).unwrap();
+        st.seal().unwrap();
+        let v1 = h.pin().unwrap();
+        assert_eq!(v1.num_edges(), 1);
+        assert_eq!(v1.coalesce().edge_feats(), &[1.0]);
+        st.append_edge(edge(100, 0, 1, 2.0)).unwrap();
+        st.seal().unwrap();
+        let v2 = h.pin().unwrap();
+        assert_eq!(v2.num_edges(), 1, "same class, re-reduced");
+        assert_eq!(v2.coalesce().edge_feats(), &[3.0]);
+        assert_eq!(h.complete_until(), None, "nothing finalized yet");
+        // The earlier pin is untouched (byte-stable generations).
+        assert_eq!(v1.coalesce().edge_feats(), &[1.0]);
+    }
+}

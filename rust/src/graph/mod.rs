@@ -6,6 +6,7 @@
 pub mod adjacency;
 pub mod data;
 pub mod discretize;
+pub mod dtdg;
 pub mod events;
 pub mod segment;
 pub mod storage;
@@ -16,6 +17,7 @@ pub use adjacency::{
 };
 pub use data::{DGData, DatasetStats, Splits, Task};
 pub use discretize::{discretize, discretize_utg, ReduceOp};
+pub use dtdg::DtdgHandle;
 pub use events::{EdgeEvent, Event, NodeEvent, NodeId};
 pub use segment::{SealPolicy, SegmentedStorage, SnapshotCell, SnapshotId, StorageSnapshot};
 pub use storage::GraphStorage;

@@ -45,6 +45,8 @@
 //! thread later, since it only touches sealed (immutable) segments.
 
 use crate::error::{Result, TgmError};
+use crate::graph::discretize::ReduceOp;
+use crate::graph::dtdg::{check_view_target, DtdgHandle, DtdgView};
 use crate::graph::events::{EdgeEvent, Event, NodeEvent, NodeId};
 use crate::graph::storage::GraphStorage;
 use crate::kernels;
@@ -62,7 +64,7 @@ use std::sync::Arc;
 /// allocation was recycled.
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
-fn next_id() -> u64 {
+pub(crate) fn next_id() -> u64 {
     NEXT_ID.fetch_add(1, Ordering::Relaxed)
 }
 
@@ -165,6 +167,9 @@ pub struct SegmentedStorage {
     /// appends are WAL-recorded before acknowledgment, seals write
     /// immutable segment files, compactions replace them atomically.
     durability: Option<Durability>,
+    /// Registered DTDG materialized views, refreshed incrementally on
+    /// every seal (see [`crate::graph::dtdg`]).
+    dtdg: Vec<DtdgView>,
 }
 
 impl SegmentedStorage {
@@ -192,6 +197,7 @@ impl SegmentedStorage {
             cached_snapshot: None,
             compaction_bytes: 0,
             durability: None,
+            dtdg: Vec::new(),
         }
     }
 
@@ -335,6 +341,7 @@ impl SegmentedStorage {
             cached_snapshot: None,
             compaction_bytes: 0,
             durability: Some(durability),
+            dtdg: Vec::new(),
         }
     }
 
@@ -732,7 +739,53 @@ impl SegmentedStorage {
         self.active_min_t = None;
         self.active_max_t = None;
         self.generation += 1;
+        self.refresh_dtdg_views();
         Ok(true)
+    }
+
+    /// Register an incrementally-maintained DTDG materialized view at
+    /// `target` granularity with reduction `reduce` (see
+    /// [`crate::graph::dtdg`]). The view catches up on already-sealed
+    /// data immediately and refreshes on every subsequent seal,
+    /// publishing `Arc<StorageSnapshot>` generations through the
+    /// returned handle's [`SnapshotCell`]. Refresh failures (e.g. the
+    /// stream's inferred granularity is still event-ordered) never fail
+    /// a seal; they are recorded on the handle and retried.
+    pub fn register_dtdg_view(
+        &mut self,
+        target: TimeGranularity,
+        reduce: ReduceOp,
+    ) -> Result<DtdgHandle> {
+        check_view_target(target)?;
+        let view = DtdgView::new(target, reduce);
+        let handle = view.handle();
+        self.dtdg.push(view);
+        self.refresh_dtdg_views();
+        Ok(handle)
+    }
+
+    /// Refresh every registered DTDG view against the sealed stream.
+    /// Runs automatically at the end of each successful seal; calling it
+    /// when nothing new sealed is a cheap no-op (compaction installs in
+    /// particular change segment boundaries but not the logical stream,
+    /// so views need no rebuild after them).
+    pub fn refresh_dtdg_views(&mut self) {
+        if self.dtdg.is_empty() {
+            return;
+        }
+        let native = self.granularity_with(None);
+        let num_nodes = self.num_nodes;
+        let static_feat_dim = self.static_feat_dim;
+        let static_feats = Arc::clone(&self.static_feats);
+        let sealed = &self.sealed;
+        for view in &mut self.dtdg {
+            view.refresh_recording(sealed, native, num_nodes, static_feat_dim, &static_feats);
+        }
+    }
+
+    /// Number of registered DTDG views.
+    pub fn num_dtdg_views(&self) -> usize {
+        self.dtdg.len()
     }
 
     /// Rebuild the active buffers from a segment a failed durable seal

@@ -7,9 +7,12 @@
 //! batch arenas ([`gather_rows_masked_f32`], [`gather_u32`],
 //! [`gather_i64`]), time-cut filtering of merged adjacency parts
 //! (again [`count_lt`], per part), and the negatives-dedup membership
-//! scan ([`position_u32`]). This module gives each of those loops an
-//! AVX2 implementation plus an auto-vectorization-friendly scalar
-//! reference, and pins the two byte-identical with property tests.
+//! scan ([`position_u32`]). Discretization adds two more: the bucket-key
+//! pass over sorted timestamp columns ([`bucket_keys`]) and the grouped
+//! feature-row folds ([`add_assign_f32`], [`max_assign_f32`]). This
+//! module gives each of those loops an AVX2 implementation plus an
+//! auto-vectorization-friendly scalar reference, and pins the two
+//! byte-identical with property tests.
 //!
 //! Dispatch is layered:
 //!
@@ -29,15 +32,19 @@
 //! scalar references are public (`*_scalar`) so tests and benches can
 //! pin against them explicitly.
 
+mod bucket;
 mod filter;
 mod gather;
+mod reduce;
 mod scan;
 
+pub use bucket::{bucket_keys, bucket_keys_scalar};
 pub use filter::{count_lt, count_lt_scalar};
 pub use gather::{
     add_offset_u32, add_offset_u32_scalar, gather_i64, gather_i64_scalar, gather_rows_masked_f32,
     gather_rows_masked_f32_scalar, gather_u32, gather_u32_scalar,
 };
+pub use reduce::{add_assign_f32, add_assign_f32_scalar, max_assign_f32, max_assign_f32_scalar};
 pub use scan::{min_max_u32, min_max_u32_scalar, position_u32, position_u32_scalar};
 
 use std::sync::OnceLock;

@@ -1,0 +1,174 @@
+//! Element-wise lane ops over f32 feature rows.
+//!
+//! The grouped reduction scan of discretization folds every event's
+//! feature row into a per-class accumulator — `acc[j] += row[j]` for
+//! Sum/Mean and `acc[j] = max(acc[j], row[j])` for Max. Each feature
+//! dimension is an independent lane, so an 8-wide AVX2 loop computes
+//! **bit-identical** results to the scalar loop (the per-dimension
+//! accumulation order never changes), unlike a horizontal reduction.
+
+/// `acc[j] += src[j]` element-wise. Panics on length mismatch.
+#[inline]
+pub fn add_assign_f32(acc: &mut [f32], src: &[f32]) {
+    assert_eq!(acc.len(), src.len(), "acc/src length mismatch");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if acc.len() >= 8 && super::simd_enabled() {
+        // Safety: AVX2 presence was checked by `simd_enabled`.
+        unsafe { avx2::add_assign_f32(acc, src) };
+        return;
+    }
+    add_assign_f32_scalar(acc, src);
+}
+
+/// Scalar reference for [`add_assign_f32`].
+#[inline]
+pub fn add_assign_f32_scalar(acc: &mut [f32], src: &[f32]) {
+    assert_eq!(acc.len(), src.len(), "acc/src length mismatch");
+    for (a, &x) in acc.iter_mut().zip(src) {
+        *a += x;
+    }
+}
+
+/// `acc[j] = max(acc[j], src[j])` element-wise, with `f32::max`
+/// NaN-ignoring semantics on both backends (a NaN accumulator is
+/// replaced, a NaN source is ignored). Panics on length mismatch.
+#[inline]
+pub fn max_assign_f32(acc: &mut [f32], src: &[f32]) {
+    assert_eq!(acc.len(), src.len(), "acc/src length mismatch");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if acc.len() >= 8 && super::simd_enabled() {
+        // Safety: AVX2 presence was checked by `simd_enabled`.
+        unsafe { avx2::max_assign_f32(acc, src) };
+        return;
+    }
+    max_assign_f32_scalar(acc, src);
+}
+
+/// Scalar reference for [`max_assign_f32`].
+#[inline]
+pub fn max_assign_f32_scalar(acc: &mut [f32], src: &[f32]) {
+    assert_eq!(acc.len(), src.len(), "acc/src length mismatch");
+    for (a, &x) in acc.iter_mut().zip(src) {
+        *a = a.max(x);
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    #[cfg(target_arch = "x86_64")]
+    use core::arch::x86_64::*;
+
+    /// 8-lane `acc += src`.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime; slices must
+    /// have equal length (asserted by the safe wrapper).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign_f32(acc: &mut [f32], src: &[f32]) {
+        let n = acc.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+            let b = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, b));
+            i += 8;
+        }
+        while i < n {
+            *acc.get_unchecked_mut(i) += *src.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    /// 8-lane `acc = max(acc, src)` with `f32::max` NaN semantics:
+    /// `vmaxps` alone returns its *second* operand whenever either lane
+    /// is NaN, so a NaN source would poison the accumulator. Blending
+    /// the plain `max` with `acc` wherever `src` is NaN restores the
+    /// scalar `f32::max` behavior bit-for-bit (for the NaN-accumulator
+    /// case, `vmaxps(acc, src)` already returns `src`).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime; slices must
+    /// have equal length (asserted by the safe wrapper).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max_assign_f32(acc: &mut [f32], src: &[f32]) {
+        let n = acc.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+            let b = _mm256_loadu_ps(src.as_ptr().add(i));
+            let m = _mm256_max_ps(a, b);
+            // src-is-NaN lanes keep the accumulator.
+            let b_nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(b, b);
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_blendv_ps(m, a, b_nan));
+            i += 8;
+        }
+        while i < n {
+            let a = acc.get_unchecked_mut(i);
+            *a = a.max(*src.get_unchecked(i));
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xorshift(state: &mut u64) -> u64 {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        *state
+    }
+
+    fn random_row(state: &mut u64, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let r = xorshift(state);
+                // Mix signs, magnitudes, and the occasional special.
+                match r % 37 {
+                    0 => f32::NEG_INFINITY,
+                    1 => f32::INFINITY,
+                    2 => f32::NAN,
+                    _ => ((r % 20_000) as f32 - 10_000.0) / 97.0,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn add_matches_scalar_bitwise() {
+        let mut state = 0x2545f4914f6cdd1du64;
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 100, 1000] {
+            let src = random_row(&mut state, n);
+            let base = random_row(&mut state, n);
+            let (mut a, mut b) = (base.clone(), base);
+            add_assign_f32(&mut a, &src);
+            add_assign_f32_scalar(&mut b, &src);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a), bits(&b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn max_matches_scalar_bitwise() {
+        let mut state = 0x853c49e6748fea9bu64;
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 100, 1000] {
+            let src = random_row(&mut state, n);
+            let base = random_row(&mut state, n);
+            let (mut a, mut b) = (base.clone(), base);
+            max_assign_f32(&mut a, &src);
+            max_assign_f32_scalar(&mut b, &src);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a), bits(&b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn max_from_neg_infinity_accumulator() {
+        let mut acc = vec![f32::NEG_INFINITY; 9];
+        let src: Vec<f32> = (0..9).map(|i| i as f32 - 4.0).collect();
+        max_assign_f32(&mut acc, &src);
+        assert_eq!(acc, src);
+    }
+}

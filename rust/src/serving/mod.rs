@@ -30,7 +30,8 @@
 
 use crate::error::{Result, TgmError};
 use crate::graph::{
-    DGraph, Event, SealPolicy, SegmentedStorage, SnapshotCell, StorageSnapshot,
+    DGraph, DtdgHandle, Event, ReduceOp, SealPolicy, SegmentedStorage, SnapshotCell,
+    StorageSnapshot,
 };
 use crate::hooks::manager::HookManager;
 use crate::loader::{BatchBy, PooledStream, ServingPool, StreamConfig};
@@ -290,6 +291,21 @@ impl TenantHandle {
     /// dropped.
     pub fn attach_compactor(&self, cfg: CompactorConfig) -> Compactor {
         Compactor::spawn(Arc::clone(&self.writer), self.published.clone(), cfg)
+    }
+
+    /// Register an incrementally-maintained DTDG materialized view on
+    /// this tenant's writer (see [`crate::graph::dtdg`]). The view
+    /// refreshes on every seal the tenant's ingest triggers and
+    /// publishes generations through the returned handle's own cell —
+    /// independent of the tenant's main publish cadence, so a coarse
+    /// time-driven reader and the CTDG serving path coexist without
+    /// coordinating.
+    pub fn register_dtdg_view(
+        &self,
+        target: TimeGranularity,
+        reduce: ReduceOp,
+    ) -> Result<DtdgHandle> {
+        self.writer().register_dtdg_view(target, reduce)
     }
 }
 

@@ -171,6 +171,56 @@ mod tests {
     }
 
     #[test]
+    fn bucket_start_with_negative_epoch_origin() {
+        // Streams whose first event predates the Unix epoch get a
+        // negative origin; bucket arithmetic must stay exact there.
+        let g = TimeGranularity::Day;
+        let t0 = -1_000_000i64;
+        assert_eq!(g.bucket_start(0, t0).unwrap(), t0);
+        assert_eq!(g.bucket_start(1, t0).unwrap(), t0 + 86_400);
+        assert_eq!(g.bucket_start(-1, t0).unwrap(), t0 - 86_400);
+        // Timestamps before the origin land in negative buckets whose
+        // starts still bracket them: start(b) <= t < start(b + 1).
+        for t in [t0 - 86_400, t0 - 1, t0, t0 + 1, t0 + 86_399, t0 + 86_400] {
+            let b = g.bucket_of(t, t0).unwrap();
+            assert!(g.bucket_start(b, t0).unwrap() <= t);
+            assert!(t < g.bucket_start(b + 1, t0).unwrap());
+        }
+    }
+
+    #[test]
+    fn bucket_zero_starts_at_the_origin() {
+        for g in [
+            TimeGranularity::Second,
+            TimeGranularity::Minute,
+            TimeGranularity::Hour,
+            TimeGranularity::Day,
+            TimeGranularity::Week,
+            TimeGranularity::Year,
+        ] {
+            for t0 in [-7i64, 0, 12_345] {
+                assert_eq!(g.bucket_start(0, t0).unwrap(), t0, "{g:?} t0={t0}");
+                assert_eq!(g.bucket_of(t0, t0).unwrap(), 0, "{g:?} t0={t0}");
+            }
+        }
+    }
+
+    #[test]
+    fn coarse_bucket_starts_are_idempotent_under_rebucketing() {
+        // A timestamp already snapped to a bucket start re-buckets to the
+        // same bucket, and snapping again is the identity — discretizing
+        // an already-coarse stream at the same granularity changes nothing.
+        let t0 = -3_601i64;
+        for g in [TimeGranularity::Hour, TimeGranularity::Week] {
+            for b in [-3i64, 0, 1, 7] {
+                let start = g.bucket_start(b, t0).unwrap();
+                assert_eq!(g.bucket_of(start, t0).unwrap(), b);
+                assert_eq!(g.bucket_start(g.bucket_of(start, t0).unwrap(), t0).unwrap(), start);
+            }
+        }
+    }
+
+    #[test]
     fn parse_round_trips() {
         for g in [
             TimeGranularity::Event,
