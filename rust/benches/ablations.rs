@@ -25,6 +25,10 @@
 //! 10. DTDG materialized views: per-seal incremental refresh vs
 //!     rescanning the full snapshot after every seal at 4/16/64 seals,
 //!     and the vectorized one-shot discretization vs the UTG baseline.
+//! 11. Point-query serving latency: p50/p99 of the zero-materialization
+//!     point path on a shared pool under mixed point-query + batch-scan
+//!     + ingest load, vs answering the same question through a
+//!     one-batch pooled stream (target: >= 10x lower p99).
 //!
 //! `TGM_ABLATION=streaming,sharded,persist` runs a comma-selected
 //! subset (CI's bench-regression job does exactly that); unset runs
@@ -81,6 +85,7 @@ fn main() {
     let persist_on = common::section_enabled("persist");
     let kernels_on = common::section_enabled("kernels");
     let discretize_on = common::section_enabled("discretize");
+    let latency_on = common::section_enabled("latency");
 
     // 9. SIMD kernel microbench (`ablation.kernels`): raw primitive
     //    throughput under whichever backend the runtime dispatch picked,
@@ -531,6 +536,171 @@ fn main() {
             );
         }
     }
+
+    // 11. Point-query serving latency (`ablation.latency`).
+    if latency_on {
+        latency_section(scale);
+    }
+}
+
+/// Section 11: point-query serving latency (`ablation.latency`).
+///
+/// p50/p99 latency and closed-loop throughput of the
+/// zero-materialization point path (`ServingPool::point_query`) under
+/// mixed load: while a hooked batch-scan stream and a streaming-ingest
+/// thread run concurrently against the same machine and pool, the main
+/// thread issues point queries one at a time and records exact
+/// per-query wall latencies. The same questions answered through the
+/// batch path — open a pooled stream, wait for its first materialized
+/// and hooked batch, drop it — give the comparison row: the point path
+/// skips batch planning, arena materialization, and hook execution
+/// entirely, so its p99 should sit >= 10x below the one-batch-stream
+/// equivalent.
+fn latency_section(scale: f64) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Instant;
+    use tgm::graph::{AdjacencyCache, PointQuery, PointReader};
+    use tgm::loader::{QosTag, RequestClass, ServingPool, StreamConfig};
+
+    /// Nearest-rank percentile over an ascending-sorted sample set.
+    fn pctl(sorted: &[f64], p: f64) -> f64 {
+        let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx]
+    }
+
+    let wiki = gen::by_name("wiki", scale, 42).unwrap();
+    let snap = wiki.storage();
+    let reader = PointReader::with_cache(std::sync::Arc::clone(snap), &AdjacencyCache::new());
+    let tag = QosTag::new("bench", RequestClass::PointQuery, 1);
+    let num_nodes = snap.num_nodes() as u64;
+    let end = snap.end_time() + 1;
+    let events: Vec<tgm::graph::EdgeEvent> = (0..snap.num_edges())
+        .map(|i| tgm::graph::EdgeEvent {
+            t: snap.edge_ts_at(i),
+            src: snap.edge_src_at(i),
+            dst: snap.edge_dst_at(i),
+            features: snap.edge_feat_row(i).to_vec(),
+        })
+        .collect();
+    let seal_every = (events.len() / 4).max(1);
+
+    let pool = ServingPool::new(4);
+    let (warmup, queries) = (100u64, 1000u64);
+    let stop = AtomicBool::new(false);
+    let query_at = |i: u64| -> PointQuery {
+        let node = ((i.wrapping_mul(0x9E37_79B9_7F4A_7C15)) % num_nodes) as u32;
+        if i % 4 == 0 {
+            let dst = ((i / 4 + 1) % num_nodes) as u32;
+            PointQuery::EdgeLookup { src: node, dst, t: end }
+        } else {
+            PointQuery::NeighborsBefore { node, t: end, k: 10 }
+        }
+    };
+
+    let (mut point_us, point_secs, mut batch_us) =
+        std::thread::scope(|scope| -> (Vec<f64>, f64, Vec<f64>) {
+            // Batch-scan load: hooked "val" passes over the full view,
+            // restarted until the measurement finishes.
+            let scan_pool = &pool;
+            let scan_stop = &stop;
+            let scan_data = &wiki;
+            scope.spawn(move || {
+                let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+                m.activate("val").unwrap();
+                while !scan_stop.load(Ordering::SeqCst) {
+                    let mut s = scan_pool
+                        .stream(
+                            scan_data.full(),
+                            BatchBy::Events(200),
+                            &mut m,
+                            StreamConfig::default(),
+                        )
+                        .unwrap();
+                    while let Some(b) = s.next() {
+                        b.unwrap();
+                        if scan_stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                    }
+                }
+            });
+            // Ingest load: streaming append+seal of the same event log,
+            // repeated until the measurement finishes.
+            let ingest_stop = &stop;
+            let ingest_events = &events;
+            scope.spawn(move || {
+                while !ingest_stop.load(Ordering::SeqCst) {
+                    let policy = SealPolicy::by_events(seal_every);
+                    let mut st = SegmentedStorage::new(num_nodes as usize, policy);
+                    for chunk in ingest_events.chunks(512) {
+                        if ingest_stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        for e in chunk {
+                            st.append_edge(e.clone()).unwrap();
+                        }
+                    }
+                    st.seal().unwrap();
+                }
+            });
+
+            // Closed-loop point queries on the caller, exact per-query
+            // wall latencies (not the pool's log2 histogram buckets).
+            let mut point_us = Vec::with_capacity(queries as usize);
+            let mut measured = 0.0f64;
+            for i in 0..(warmup + queries) {
+                let t0 = Instant::now();
+                pool.point_query(&reader, &tag, query_at(i)).unwrap();
+                let secs = t0.elapsed().as_secs_f64();
+                if i >= warmup {
+                    point_us.push(secs * 1e6);
+                    measured += secs;
+                }
+            }
+
+            // One-batch-stream equivalent under the SAME mixed load:
+            // per "query", open a pooled stream and wait for its first
+            // materialized+hooked batch (the backlog of the dropped
+            // stream's window drains in the pool, as a real abandoned
+            // scan would).
+            let mut m = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+            m.activate("val").unwrap();
+            let batch_reps = 40usize;
+            let mut batch_us = Vec::with_capacity(batch_reps);
+            for rep in 0..(1 + batch_reps) {
+                let t0 = Instant::now();
+                let mut s = pool
+                    .stream(wiki.full(), BatchBy::Events(200), &mut m, StreamConfig::default())
+                    .unwrap();
+                s.next().expect("plan has at least one batch").unwrap();
+                drop(s);
+                if rep > 0 {
+                    batch_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                }
+            }
+            stop.store(true, Ordering::SeqCst);
+            (point_us, measured, batch_us)
+        });
+
+    point_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    batch_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p99) = (pctl(&point_us, 50.0), pctl(&point_us, 99.0));
+    let batch_p99 = pctl(&batch_us, 99.0);
+    let qps = queries as f64 / point_secs.max(1e-12);
+    let speedup = batch_p99 / p99.max(1e-12);
+    println!(
+        "ablation.latency | point path under mixed load: p50 {p50:.0}us p99 {p99:.0}us \
+         ({qps:.0} qps closed-loop)"
+    );
+    println!(
+        "ablation.latency | one-batch-stream equivalent: p50 {:.0}us p99 {batch_p99:.0}us \
+         (point p99 {speedup:.1}x lower, target >= 10x)",
+        pctl(&batch_us, 50.0)
+    );
+    common::metric("latency.point_p50_us", p50);
+    common::metric("latency.point_p99_us", p99);
+    common::metric("latency.point_qps", qps);
+    common::metric("latency.point_vs_batch_speedup", speedup);
 }
 
 /// Section 10: DTDG materialized views (`ablation.discretize`).

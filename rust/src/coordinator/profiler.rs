@@ -4,6 +4,7 @@
 //! `table11_profile` bench can print the same decomposition the paper
 //! reports for TGAT (data loading / hooks / forward / backward / ...).
 
+use crate::loader::LatencyHistogram;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -22,6 +23,9 @@ pub struct Profiler {
     mat_batches: u64,
     mat_bytes: u64,
     mat_cycles: u64,
+    /// Per-request-class serving latency (e.g. "point" / "scan"),
+    /// merged from [`crate::loader::QosStats`] histograms.
+    latency: HashMap<&'static str, LatencyHistogram>,
 }
 
 impl Profiler {
@@ -58,6 +62,20 @@ impl Profiler {
         } else {
             Some((self.mat_batches, self.mat_bytes, self.mat_cycles))
         }
+    }
+
+    /// Fold one request class's latency histogram into the profiler
+    /// (repeat per class; histograms merge across calls). `class` is a
+    /// stable label — use [`crate::loader::RequestClass::label`] when
+    /// reporting pool stats.
+    pub fn add_request_latency(&mut self, class: &'static str, hist: &LatencyHistogram) {
+        self.latency.entry(class).or_default().merge(hist);
+    }
+
+    /// The merged latency histogram of `class`, if any samples were
+    /// recorded.
+    pub fn request_latency(&self, class: &str) -> Option<&LatencyHistogram> {
+        self.latency.get(class).filter(|h| !h.is_empty())
     }
 
     /// `(worker_busy, consumer_blocked, hidden)` if any prefetch run was
@@ -152,6 +170,7 @@ impl Profiler {
         self.mat_batches = 0;
         self.mat_bytes = 0;
         self.mat_cycles = 0;
+        self.latency.clear();
     }
 }
 
@@ -177,6 +196,22 @@ impl std::fmt::Display for Profiler {
                 "materialization: {batches} batches, {:.1} KB/batch, {:.2} cycles/byte",
                 (bytes as f64 / batches as f64) / 1024.0,
                 cycles as f64 / (bytes as f64).max(1.0)
+            )?;
+        }
+        let mut classes: Vec<&&str> = self.latency.keys().collect();
+        classes.sort();
+        for class in classes {
+            let h = &self.latency[*class];
+            if h.is_empty() {
+                continue;
+            }
+            writeln!(
+                f,
+                "latency[{class}]: p50={}us p99={}us max={}us (n={})",
+                h.percentile_us(50.0),
+                h.percentile_us(99.0),
+                h.max_us(),
+                h.count()
             )?;
         }
         Ok(())
@@ -240,6 +275,28 @@ mod tests {
         p.reset();
         assert!(p.overlap().is_none());
         assert!(format!("{p}").contains("category"));
+    }
+
+    #[test]
+    fn request_latency_rows_merge_and_report() {
+        let mut p = Profiler::new();
+        assert!(p.request_latency("point").is_none());
+        let mut h = LatencyHistogram::new();
+        for us in [5u64, 9, 2000] {
+            h.record_us(us);
+        }
+        p.add_request_latency("point", &h);
+        // A second merge folds into the same class row.
+        p.add_request_latency("point", &h);
+        p.add_request_latency("scan", &h);
+        assert_eq!(p.request_latency("point").unwrap().count(), 6);
+        let shown = format!("{p}");
+        assert!(shown.contains("latency[point]: p50="), "{shown}");
+        assert!(shown.contains("latency[scan]:"), "{shown}");
+        assert!(shown.contains("p99="), "{shown}");
+        p.reset();
+        assert!(p.request_latency("point").is_none());
+        assert!(!format!("{p}").contains("latency["));
     }
 
     #[test]

@@ -268,6 +268,16 @@ impl<'a> MergedNeighbors<'a> {
         })
     }
 
+    /// Iterate triples newest-first — the point-read access pattern
+    /// ("last k before t" / "most recent pair event"), which touches
+    /// only as many triples as it consumes instead of walking the whole
+    /// history forward.
+    pub fn iter_rev(&self) -> impl Iterator<Item = (u32, Timestamp, u32)> + '_ {
+        self.parts().iter().rev().flat_map(|(n, t, e, base)| {
+            (0..n.len()).rev().map(move |i| (n[i], t[i], e[i] + base))
+        })
+    }
+
     /// Copy the view into owned columns (the DyGLib-baseline cost model;
     /// hot paths should prefer [`MergedNeighbors::collect_into`] with a
     /// reused [`NeighborCols`] scratch instead).
@@ -564,6 +574,10 @@ mod tests {
         for i in 0..view.len() {
             assert_eq!(view.get(i), (n[i], t[i], e[i]));
         }
+        // The newest-first iterator is exactly the forward order reversed.
+        let mut rev: Vec<_> = view.iter_rev().collect();
+        rev.reverse();
+        assert_eq!(rev, view.iter().collect::<Vec<_>>());
     }
 
     #[test]

@@ -161,6 +161,17 @@ pub(crate) struct DtdgView {
     /// installs unchanged.
     consumed_edges: usize,
     consumed_nodes: usize,
+    /// Set when a refresh failed *after* consuming events into the
+    /// pending columns: the consumption counts then match the stream
+    /// again, but unprocessed data is sitting in the view. The next
+    /// refresh must not treat matching counts as a no-op — it reruns
+    /// the reduce over the pending columns (and clears the recorded
+    /// error on success) instead of staying stalled forever.
+    retry: bool,
+    /// Test hook: make the next refresh fail after its consumption
+    /// bookkeeping (simulating a reduce failure mid-refresh).
+    #[cfg(test)]
+    pub(crate) fail_next: bool,
     /// Store id for the view's published snapshots (distinct from the
     /// base store's).
     view_store_id: u64,
@@ -187,6 +198,9 @@ impl DtdgView {
             node_feat_dim: 0,
             consumed_edges: 0,
             consumed_nodes: 0,
+            retry: false,
+            #[cfg(test)]
+            fail_next: false,
             view_store_id: next_id(),
             generation: 0,
             shared: Arc::new(ViewShared {
@@ -216,12 +230,18 @@ impl DtdgView {
         let res = self.refresh(sealed, native, num_nodes, static_feat_dim, static_feats);
         let mut slot = self.shared.last_error.lock().unwrap_or_else(|e| e.into_inner());
         match res {
-            Ok(true) => *slot = None,
+            Ok(true) => {
+                *slot = None;
+                self.retry = false;
+            }
             // A no-op refresh proves nothing about a previously recorded
-            // stall (the failed events sit in the pending columns until a
-            // later seal retries them) — keep the error visible.
+            // stall (the failed events wait for a later seal to change
+            // the stream) — keep the error visible.
             Ok(false) => {}
-            Err(e) => *slot = Some(e.to_string()),
+            Err(e) => {
+                *slot = Some(e.to_string());
+                self.retry = true;
+            }
         }
     }
 
@@ -238,7 +258,10 @@ impl DtdgView {
         let edge_total: usize = sealed.iter().map(|s| s.num_edges()).sum();
         let node_total: usize = sealed.iter().map(|s| s.num_node_events()).sum();
         debug_assert!(edge_total >= self.consumed_edges && node_total >= self.consumed_nodes);
-        if edge_total == self.consumed_edges && node_total == self.consumed_nodes {
+        // Matching counts are only a no-op when no earlier refresh died
+        // holding consumed-but-unreduced events in the pending columns;
+        // with `retry` set, fall through and rerun the reduce over them.
+        if edge_total == self.consumed_edges && node_total == self.consumed_nodes && !self.retry {
             return Ok(false);
         }
         // No origin without a sealed edge: hold everything until the
@@ -291,6 +314,10 @@ impl DtdgView {
         }
         self.consumed_edges = edge_total;
         self.consumed_nodes = node_total;
+        #[cfg(test)]
+        if std::mem::take(&mut self.fail_next) {
+            return Err(TgmError::Time("injected refresh failure after consumption".into()));
+        }
 
         // Completeness watermarks. Future edge appends have
         // `t >= last_edge_ts`, so buckets before bucket(last_edge_ts)
@@ -497,6 +524,46 @@ mod tests {
         st.seal().unwrap();
         assert!(h.pin().is_some());
         assert!(h.last_error().is_none());
+    }
+
+    /// Regression (ISSUE 8): a refresh that fails *after* consuming
+    /// events used to stall the view forever — the consumption counts
+    /// matched the stream again, so every later refresh early-returned
+    /// as a no-op, the recorded error stayed sticky, and the consumed
+    /// events were never published. A retry must reprocess the pending
+    /// columns and clear the error.
+    #[test]
+    fn post_consumption_refresh_failure_retries_and_clears_the_error() {
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(usize::MAX))
+            .with_granularity(TimeGranularity::Second);
+        let h = st.register_dtdg_view(TimeGranularity::Hour, ReduceOp::Sum).unwrap();
+        st.append_edge(edge(0, 0, 1, 1.0)).unwrap();
+        st.append_edge(edge(4000, 1, 2, 2.0)).unwrap();
+        st.fail_next_dtdg_refresh();
+        st.seal().unwrap();
+        assert!(h.pin().is_none(), "failed refresh must not publish");
+        assert!(h.last_error().unwrap().contains("injected"));
+        assert_eq!(h.refreshes(), 0);
+
+        // Nothing new sealed: the stream counts match what the view
+        // consumed, but the retry must still run, publish the pending
+        // events, and clear the sticky error.
+        st.refresh_dtdg_views();
+        assert!(h.last_error().is_none(), "a later successful refresh must clear the error");
+        let view = h.pin().expect("pending events published on retry");
+        let full =
+            discretize(&st.snapshot().unwrap(), TimeGranularity::Hour, ReduceOp::Sum).unwrap();
+        let got = view.coalesce();
+        assert_eq!(got.edge_ts(), full.edge_ts());
+        assert_eq!(bits(got.edge_feats()), bits(full.edge_feats()));
+        assert_eq!(h.refreshes(), 1);
+        assert_eq!(h.complete_until(), Some(3600));
+
+        // Steady state afterwards: later seals refresh normally.
+        st.append_edge(edge(8000, 2, 3, 4.0)).unwrap();
+        st.seal().unwrap();
+        assert!(h.last_error().is_none());
+        assert_eq!(h.refreshes(), 2);
     }
 
     #[test]

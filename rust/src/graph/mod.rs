@@ -8,6 +8,7 @@ pub mod data;
 pub mod discretize;
 pub mod dtdg;
 pub mod events;
+pub mod point;
 pub mod segment;
 pub mod storage;
 pub mod view;
@@ -19,6 +20,7 @@ pub use data::{DGData, DatasetStats, Splits, Task};
 pub use discretize::{discretize, discretize_utg, ReduceOp};
 pub use dtdg::DtdgHandle;
 pub use events::{EdgeEvent, Event, NodeEvent, NodeId};
+pub use point::{EdgeHit, PointQuery, PointReader, PointResponse};
 pub use segment::{SealPolicy, SegmentedStorage, SnapshotCell, SnapshotId, StorageSnapshot};
 pub use storage::GraphStorage;
 pub use view::DGraph;

@@ -1,0 +1,232 @@
+//! Zero-materialization point reads over pinned snapshots.
+//!
+//! Batch streams answer "iterate the epoch"; real serving traffic is
+//! dominated by small reads — "neighbors of `v` before `t`", "when did
+//! `src` last touch `dst`". Forcing those through the batch path means
+//! allocating a [`crate::hooks::batch::MaterializedBatch`] arena and
+//! running the hook pipeline per query. A [`PointReader`] answers them
+//! directly from a pinned [`StorageSnapshot`] and its per-segment CSR
+//! indices instead:
+//!
+//! * the time cut inside each per-segment [`TemporalAdjacency`] run is
+//!   the same [`crate::kernels::count_lt`] filtered count the samplers
+//!   use (branchless SIMD linear scan for short runs, binary search for
+//!   long ones);
+//! * results reference the snapshot's columns by **logical edge index**,
+//!   so [`PointReader::edge_features`] serves feature rows straight from
+//!   the (possibly mmap-backed) segment columns — no copy, no batch, no
+//!   hooks.
+//!
+//! A reader pins one snapshot generation: queries against it are
+//! byte-stable forever, exactly like a pooled stream. Build one per
+//! published generation (cheaply, via [`PointReader::with_cache`], which
+//! reuses per-segment indices across generations) and share it across
+//! threads — it is `Clone` (two `Arc`s) and `Send + Sync`.
+
+use crate::graph::adjacency::{AdjacencyCache, MergedAdjacency};
+use crate::graph::segment::StorageSnapshot;
+use crate::util::Timestamp;
+use std::sync::Arc;
+
+/// One point request, as submitted to the serving pool's scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PointQuery {
+    /// The `k` most recent neighbors of `node` strictly before `t`.
+    NeighborsBefore {
+        /// Seed node.
+        node: u32,
+        /// Exclusive time cut (strict, no leakage).
+        t: Timestamp,
+        /// Maximum triples returned.
+        k: usize,
+    },
+    /// The most recent edge event between `src` and `dst` strictly
+    /// before `t`.
+    EdgeLookup {
+        /// One endpoint.
+        src: u32,
+        /// The other endpoint (interactions are undirected).
+        dst: u32,
+        /// Exclusive time cut.
+        t: Timestamp,
+    },
+}
+
+/// Answer to one [`PointQuery`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PointResponse {
+    /// `(neighbor, time, logical edge index)` triples, oldest first.
+    Neighbors(Vec<(u32, Timestamp, u32)>),
+    /// The matching edge, or `None` when the pair never interacted
+    /// before `t`.
+    Edge(Option<EdgeHit>),
+}
+
+/// One located edge event: its timestamp plus the logical edge index
+/// into the snapshot the reader is pinned to (usable with
+/// [`StorageSnapshot::edge_feat_row`] and friends).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EdgeHit {
+    /// Event timestamp.
+    pub t: Timestamp,
+    /// Logical (snapshot-wide) edge index.
+    pub eidx: u32,
+}
+
+/// Point-read API over one pinned snapshot generation.
+#[derive(Clone)]
+pub struct PointReader {
+    snapshot: Arc<StorageSnapshot>,
+    adjacency: Arc<MergedAdjacency>,
+}
+
+impl PointReader {
+    /// Build fresh per-segment indices for `snapshot` (no cache). Prefer
+    /// [`PointReader::with_cache`] on serving paths, where generations
+    /// succeed each other and indices should be reused.
+    pub fn new(snapshot: Arc<StorageSnapshot>) -> PointReader {
+        let adjacency = Arc::new(MergedAdjacency::build(&snapshot));
+        PointReader { snapshot, adjacency }
+    }
+
+    /// Build (or reuse) the merged index through `cache`: only segments
+    /// not yet indexed are built, so advancing one generation costs one
+    /// delta index.
+    pub fn with_cache(snapshot: Arc<StorageSnapshot>, cache: &AdjacencyCache) -> PointReader {
+        let adjacency = cache.get(&snapshot);
+        PointReader { snapshot, adjacency }
+    }
+
+    /// The snapshot this reader is pinned to.
+    pub fn snapshot(&self) -> &Arc<StorageSnapshot> {
+        &self.snapshot
+    }
+
+    /// The `k` most recent `(neighbor, time, logical edge index)`
+    /// triples of `node` strictly before `t`, oldest first. Allocates
+    /// only the ≤`k`-element result vector — no batch, no hooks.
+    pub fn neighbors_before(
+        &self,
+        node: u32,
+        t: Timestamp,
+        k: usize,
+    ) -> Vec<(u32, Timestamp, u32)> {
+        if node as usize >= self.snapshot.num_nodes() || k == 0 {
+            return Vec::new();
+        }
+        let view = self.adjacency.neighbors_before(node, t);
+        let take = view.len().min(k);
+        let mut out = Vec::with_capacity(take);
+        out.extend(view.iter_rev().take(take));
+        out.reverse();
+        out
+    }
+
+    /// The most recent edge event between `src` and `dst` strictly
+    /// before `t`. Scans `src`'s time-cut neighbor run newest-first, so
+    /// the cost is the recency rank of the pair, not the degree.
+    pub fn edge_lookup(&self, src: u32, dst: u32, t: Timestamp) -> Option<EdgeHit> {
+        if src as usize >= self.snapshot.num_nodes() || dst as usize >= self.snapshot.num_nodes() {
+            return None;
+        }
+        self.adjacency
+            .neighbors_before(src, t)
+            .iter_rev()
+            .find(|(n, _, _)| *n == dst)
+            .map(|(_, ts, eidx)| EdgeHit { t: ts, eidx })
+    }
+
+    /// Feature row of a located edge, served directly from the pinned
+    /// snapshot's columns.
+    pub fn edge_features(&self, hit: EdgeHit) -> &[f32] {
+        self.snapshot.edge_feat_row(hit.eidx as usize)
+    }
+
+    /// Execute one [`PointQuery`].
+    pub fn execute(&self, query: &PointQuery) -> PointResponse {
+        match *query {
+            PointQuery::NeighborsBefore { node, t, k } => {
+                PointResponse::Neighbors(self.neighbors_before(node, t, k))
+            }
+            PointQuery::EdgeLookup { src, dst, t } => {
+                PointResponse::Edge(self.edge_lookup(src, dst, t))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::events::EdgeEvent;
+    use crate::graph::segment::{SealPolicy, SegmentedStorage};
+    use crate::graph::storage::GraphStorage;
+
+    fn single_segment_reader() -> PointReader {
+        let edges = vec![
+            EdgeEvent { t: 10, src: 0, dst: 1, features: vec![1.0] },
+            EdgeEvent { t: 20, src: 0, dst: 2, features: vec![2.0] },
+            EdgeEvent { t: 30, src: 1, dst: 2, features: vec![3.0] },
+            EdgeEvent { t: 40, src: 0, dst: 1, features: vec![4.0] },
+        ];
+        let snap = GraphStorage::from_events(edges, vec![], 4, None, None).unwrap().into_snapshot();
+        PointReader::new(Arc::new(snap))
+    }
+
+    #[test]
+    fn neighbors_before_takes_most_recent_k() {
+        let r = single_segment_reader();
+        assert_eq!(r.neighbors_before(0, 1000, 10), vec![(1, 10, 0), (2, 20, 1), (1, 40, 3)]);
+        // k truncates from the old end: only the most recent survive.
+        assert_eq!(r.neighbors_before(0, 1000, 2), vec![(2, 20, 1), (1, 40, 3)]);
+        // The cut is strict (t = 40 excludes the t = 40 event).
+        assert_eq!(r.neighbors_before(0, 40, 2), vec![(1, 10, 0), (2, 20, 1)]);
+        assert!(r.neighbors_before(0, 10, 4).is_empty());
+        assert!(r.neighbors_before(0, 1000, 0).is_empty());
+        // Out-of-range node: empty, not a panic.
+        assert!(r.neighbors_before(99, 1000, 4).is_empty());
+    }
+
+    #[test]
+    fn edge_lookup_finds_most_recent_pair_event() {
+        let r = single_segment_reader();
+        assert_eq!(r.edge_lookup(0, 1, 1000), Some(EdgeHit { t: 40, eidx: 3 }));
+        // Before the second (0,1) event only the first is visible.
+        assert_eq!(r.edge_lookup(0, 1, 40), Some(EdgeHit { t: 10, eidx: 0 }));
+        // Undirected: both endpoints see the event.
+        assert_eq!(r.edge_lookup(1, 0, 1000), Some(EdgeHit { t: 40, eidx: 3 }));
+        assert_eq!(r.edge_lookup(0, 3, 1000), None);
+        assert_eq!(r.edge_lookup(0, 99, 1000), None);
+        let hit = r.edge_lookup(0, 2, 1000).unwrap();
+        assert_eq!(r.edge_features(hit), &[2.0]);
+    }
+
+    #[test]
+    fn multi_segment_reader_rebases_edge_indices() {
+        let mut st = SegmentedStorage::new(6, SealPolicy::by_events(3));
+        for i in 0..12u32 {
+            st.append_edge(EdgeEvent {
+                t: i as i64 * 10,
+                src: i % 3,
+                dst: 3 + (i % 2),
+                features: vec![i as f32],
+            })
+            .unwrap();
+        }
+        let snap = st.snapshot().unwrap();
+        assert!(snap.num_segments() > 1);
+        let reader = PointReader::with_cache(snap, &AdjacencyCache::new());
+        // Node 0 interacts at i = 0, 3, 6, 9; the logical indices must
+        // survive segmentation.
+        let got = reader.neighbors_before(0, 10_000, 2);
+        assert_eq!(got, vec![(3 + 6 % 2, 60, 6), (3 + 9 % 2, 90, 9)]);
+        let hit = reader.edge_lookup(0, 4, 10_000).unwrap();
+        assert_eq!(hit, EdgeHit { t: 90, eidx: 9 });
+        assert_eq!(reader.edge_features(hit), &[9.0]);
+        // execute() round-trips both variants.
+        let q = PointQuery::NeighborsBefore { node: 0, t: 10_000, k: 2 };
+        assert_eq!(reader.execute(&q), PointResponse::Neighbors(got));
+        let q = PointQuery::EdgeLookup { src: 0, dst: 4, t: 10_000 };
+        assert_eq!(reader.execute(&q), PointResponse::Edge(Some(hit)));
+    }
+}

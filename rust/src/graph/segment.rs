@@ -788,6 +788,17 @@ impl SegmentedStorage {
         self.dtdg.len()
     }
 
+    /// Test hook: make every registered view's next refresh fail after
+    /// its consumption bookkeeping (simulating a reduce failure
+    /// mid-refresh; see the sticky-error regression test in
+    /// [`crate::graph::dtdg`]).
+    #[cfg(test)]
+    pub(crate) fn fail_next_dtdg_refresh(&mut self) {
+        for view in &mut self.dtdg {
+            view.fail_next = true;
+        }
+    }
+
     /// Rebuild the active buffers from a segment a failed durable seal
     /// could not persist. The events come back time-sorted (the stable
     /// sort already ran), which a later successful seal treats exactly

@@ -12,7 +12,10 @@
 //!   views, vectorized discretization, the phased hook/recipe system
 //!   (stateless worker hooks + stateful consumer hooks), CTDG/DTDG data
 //!   loaders with a deterministic parallel prefetch pipeline (adaptive
-//!   queue depth) over a shared serving pool, a sharded multi-tenant
+//!   queue depth) over a shared serving pool with weighted-DRR tenant
+//!   QoS scheduling, a zero-materialization point-query path
+//!   (`neighbors_before`/`edge_lookup` with per-tenant admission
+//!   control and per-class latency accounting), a sharded multi-tenant
 //!   tenant router with atomic snapshot pinning and per-tenant durable
 //!   directories, samplers, evaluation, and the epoch + streaming
 //!   training coordinators.

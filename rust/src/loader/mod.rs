@@ -34,9 +34,11 @@
 pub mod affinity;
 pub mod pool;
 pub mod prefetch;
+pub mod sched;
 
-pub use pool::{PooledStream, QueueDepth, ServingPool, StreamConfig};
+pub use pool::{PointTicket, PooledStream, QosStats, QueueDepth, ServingPool, StreamConfig};
 pub use prefetch::{PrefetchConfig, PrefetchLoader, PrefetchStats};
+pub use sched::{LatencyHistogram, QosTag, RequestClass, Scheduler, SchedulerKind};
 
 use crate::error::{Result, TgmError};
 use crate::graph::{DGraph, StorageSnapshot};

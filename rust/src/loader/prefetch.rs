@@ -101,6 +101,7 @@ impl PrefetchConfig {
             queue_depth: self.queue_depth.widened_to(self.workers.max(1)),
             skip_empty: self.skip_empty,
             event_cap: self.event_cap,
+            ..StreamConfig::default()
         }
     }
 }

@@ -1,0 +1,664 @@
+//! Unified request scheduling: tenant-weighted fair queueing with
+//! admission control for the shared [`super::ServingPool`].
+//!
+//! The pool used to be a single FIFO: every tenant's batch jobs landed
+//! in one queue, so one tenant's epoch scan queued ahead of everyone
+//! else's small reads. This module lifts the job model into a request
+//! abstraction the pool schedules explicitly:
+//!
+//! * every request carries a [`QosTag`] — tenant, [`RequestClass`]
+//!   (point query vs batch scan), scheduling weight, and an admission
+//!   cap;
+//! * a [`Scheduler`] decides service order. The default
+//!   [`DrrScheduler`] runs **weighted deficit round robin** over
+//!   per-`(tenant, class)` queues: each nonempty queue gets
+//!   `weight × quantum` credit per round and serves requests while its
+//!   credit covers their [cost](SchedEntry::cost). Point queries cost
+//!   [`POINT_COST`], batch jobs [`BATCH_COST`], so under equal weights a
+//!   tenant's point class is served [`BATCH_COST`]`/`[`POINT_COST`]
+//!   requests for every scan — and because every nonempty queue is
+//!   visited every round, a backlog of scans can never starve another
+//!   queue (bounded-delay fairness, not just proportional share);
+//! * **admission control** sits in front: a queue at its
+//!   [`QosTag::max_queued`] cap rejects the enqueue with the existing
+//!   typed [`TgmError::Backpressure`], so an over-driving tenant sheds
+//!   its own load instead of growing everyone's queue.
+//!
+//! `TGM_QOS=fifo` falls back to the legacy single-FIFO order (admission
+//! caps still apply); `TGM_QOS_DEPTH` overrides the default per-queue
+//! admission cap. Scheduling never changes *results* — batches stay
+//! byte-identical and plan-ordered per stream — only service order
+//! across tenants.
+
+use crate::error::{Result, TgmError};
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Deficit units charged per point query.
+pub const POINT_COST: u32 = 1;
+
+/// Deficit units charged per batch-materialization job (a batch arena +
+/// stateless hook phase is orders of magnitude more work than a point
+/// read).
+pub const BATCH_COST: u32 = 4;
+
+/// Credit added to a queue per round visit, scaled by its weight. Equal
+/// to [`BATCH_COST`], so a weight-1 queue serves at least one request
+/// (of any class) per round — the starvation-freedom bound.
+const QUANTUM: u64 = BATCH_COST as u64;
+
+/// Default per-`(tenant, class)` admission cap when the tag does not
+/// set one (overridable via `TGM_QOS_DEPTH`).
+pub const DEFAULT_MAX_QUEUED: usize = 1024;
+
+/// Request class: what shape of work a queue entry is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RequestClass {
+    /// A small read on a pinned snapshot (see [`crate::graph::point`]).
+    PointQuery,
+    /// One batch-materialization job of a pooled stream.
+    BatchScan,
+}
+
+impl RequestClass {
+    /// Stable label for stats/profiler rows.
+    pub fn label(self) -> &'static str {
+        match self {
+            RequestClass::PointQuery => "point",
+            RequestClass::BatchScan => "scan",
+        }
+    }
+
+    /// Deficit cost of one request of this class.
+    pub fn cost(self) -> u32 {
+        match self {
+            RequestClass::PointQuery => POINT_COST,
+            RequestClass::BatchScan => BATCH_COST,
+        }
+    }
+}
+
+/// Scheduling identity of a request: which per-tenant class queue it
+/// joins, with what weight and admission cap.
+#[derive(Debug, Clone)]
+pub struct QosTag {
+    /// Tenant key (shared cheaply across requests).
+    pub tenant: Arc<str>,
+    /// Request class.
+    pub class: RequestClass,
+    /// Relative service share (clamped to `1..=1024`). Completed-request
+    /// ratios between saturated equal-cost queues converge to the
+    /// weight ratio.
+    pub weight: u32,
+    /// Admission cap: an enqueue finding this many requests already
+    /// queued in the same `(tenant, class)` queue fails with
+    /// [`TgmError::Backpressure`].
+    pub max_queued: usize,
+}
+
+impl QosTag {
+    /// Tag for `tenant` with explicit weight and the default admission
+    /// cap (`TGM_QOS_DEPTH` or [`DEFAULT_MAX_QUEUED`]).
+    pub fn new(tenant: impl AsRef<str>, class: RequestClass, weight: u32) -> QosTag {
+        QosTag {
+            tenant: Arc::from(tenant.as_ref()),
+            class,
+            weight: weight.clamp(1, 1024),
+            max_queued: env_default_depth(),
+        }
+    }
+
+    /// Override the admission cap.
+    pub fn with_max_queued(mut self, cap: usize) -> QosTag {
+        self.max_queued = cap.max(1);
+        self
+    }
+
+    /// The tag anonymous batch streams run under (weight 1, effectively
+    /// uncapped — their sliding window already bounds in-flight jobs).
+    pub fn shared_batch() -> QosTag {
+        QosTag {
+            tenant: Arc::from(""),
+            class: RequestClass::BatchScan,
+            weight: 1,
+            max_queued: usize::MAX,
+        }
+    }
+
+    fn key(&self) -> (Arc<str>, RequestClass) {
+        (Arc::clone(&self.tenant), self.class)
+    }
+}
+
+impl Default for QosTag {
+    fn default() -> QosTag {
+        QosTag::shared_batch()
+    }
+}
+
+/// One scheduled request: its tag, deficit cost, enqueue instant (for
+/// per-class latency histograms) and opaque payload.
+pub struct SchedEntry<T> {
+    /// Scheduling identity.
+    pub tag: QosTag,
+    /// Deficit units this request consumes when served.
+    pub cost: u32,
+    /// When the request entered the queue.
+    pub enqueued: Instant,
+    /// The work itself (the pool's job enum).
+    pub payload: T,
+}
+
+/// Service-order policy over [`SchedEntry`]s. Implementations must be
+/// work-conserving: `dequeue` returns `Some` whenever `len() > 0`.
+pub trait Scheduler<T>: Send {
+    /// Admit a request, or reject it with [`TgmError::Backpressure`]
+    /// when its `(tenant, class)` queue is at its admission cap.
+    fn enqueue(&mut self, entry: SchedEntry<T>) -> Result<()>;
+
+    /// Next request in service order (`None` when idle).
+    fn dequeue(&mut self) -> Option<SchedEntry<T>>;
+
+    /// Requests currently queued.
+    fn len(&self) -> usize;
+
+    /// True when no request is queued.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Which scheduler the pool builds (from `TGM_QOS`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulerKind {
+    /// Weighted deficit round robin (the default).
+    #[default]
+    WeightedDrr,
+    /// Legacy single FIFO (admission caps still enforced).
+    Fifo,
+}
+
+impl SchedulerKind {
+    /// `TGM_QOS=fifo` selects the legacy FIFO; anything else (or unset)
+    /// selects weighted DRR.
+    pub fn from_env() -> SchedulerKind {
+        match std::env::var("TGM_QOS") {
+            Ok(v) if v.trim().eq_ignore_ascii_case("fifo") => SchedulerKind::Fifo,
+            _ => SchedulerKind::WeightedDrr,
+        }
+    }
+
+    /// Build a boxed scheduler of this kind.
+    pub fn build<T: Send + 'static>(self) -> Box<dyn Scheduler<T>> {
+        match self {
+            SchedulerKind::WeightedDrr => Box::new(DrrScheduler::new()),
+            SchedulerKind::Fifo => Box::new(FifoScheduler::new()),
+        }
+    }
+}
+
+/// Default admission cap: `TGM_QOS_DEPTH` or [`DEFAULT_MAX_QUEUED`].
+fn env_default_depth() -> usize {
+    std::env::var("TGM_QOS_DEPTH")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_MAX_QUEUED)
+}
+
+fn backpressure(tag: &QosTag, queued: usize) -> TgmError {
+    TgmError::Backpressure(format!(
+        "tenant `{}` {} queue is at its admission cap ({queued} queued); \
+         retry after in-flight requests drain or raise the cap",
+        tag.tenant,
+        tag.class.label(),
+    ))
+}
+
+/// Legacy service order: one FIFO across all tenants and classes, with
+/// per-queue admission caps still enforced.
+pub struct FifoScheduler<T> {
+    items: VecDeque<SchedEntry<T>>,
+    queued: HashMap<(Arc<str>, RequestClass), usize>,
+}
+
+impl<T> FifoScheduler<T> {
+    /// Empty scheduler.
+    pub fn new() -> FifoScheduler<T> {
+        FifoScheduler { items: VecDeque::new(), queued: HashMap::new() }
+    }
+}
+
+impl<T> Default for FifoScheduler<T> {
+    fn default() -> Self {
+        FifoScheduler::new()
+    }
+}
+
+impl<T: Send> Scheduler<T> for FifoScheduler<T> {
+    fn enqueue(&mut self, entry: SchedEntry<T>) -> Result<()> {
+        let count = self.queued.entry(entry.tag.key()).or_insert(0);
+        if *count >= entry.tag.max_queued {
+            return Err(backpressure(&entry.tag, *count));
+        }
+        *count += 1;
+        self.items.push_back(entry);
+        Ok(())
+    }
+
+    fn dequeue(&mut self) -> Option<SchedEntry<T>> {
+        let entry = self.items.pop_front()?;
+        if let Some(c) = self.queued.get_mut(&entry.tag.key()) {
+            *c -= 1;
+        }
+        Some(entry)
+    }
+
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+}
+
+/// One `(tenant, class)` queue of the DRR scheduler (keyed externally
+/// by the scheduler's index map).
+struct ClassQueue<T> {
+    /// Latest weight seen on an enqueue (tenant reconfiguration applies
+    /// from the next round).
+    weight: u32,
+    deficit: u64,
+    items: VecDeque<SchedEntry<T>>,
+    /// True while the queue index sits in the active ring.
+    in_ring: bool,
+}
+
+/// Weighted deficit round robin over per-`(tenant, class)` queues.
+///
+/// Properties (pinned by the fairness tests):
+/// * **proportional share**: saturated equal-cost queues complete
+///   requests in their weight ratio;
+/// * **starvation-freedom**: every nonempty queue is visited once per
+///   round and a visit's credit (`weight × QUANTUM ≥ BATCH_COST`)
+///   always covers at least one request, so the worst-case delay of a
+///   point query is one round — independent of any batch backlog depth.
+pub struct DrrScheduler<T> {
+    queues: Vec<ClassQueue<T>>,
+    index: HashMap<(Arc<str>, RequestClass), usize>,
+    /// Round-robin ring of nonempty queue indices (excluding `current`).
+    ring: VecDeque<usize>,
+    /// Queue currently spending its deficit, if any.
+    current: Option<usize>,
+    len: usize,
+}
+
+impl<T> DrrScheduler<T> {
+    /// Empty scheduler.
+    pub fn new() -> DrrScheduler<T> {
+        DrrScheduler {
+            queues: Vec::new(),
+            index: HashMap::new(),
+            ring: VecDeque::new(),
+            current: None,
+            len: 0,
+        }
+    }
+}
+
+impl<T> Default for DrrScheduler<T> {
+    fn default() -> Self {
+        DrrScheduler::new()
+    }
+}
+
+impl<T: Send> Scheduler<T> for DrrScheduler<T> {
+    fn enqueue(&mut self, entry: SchedEntry<T>) -> Result<()> {
+        let idx = match self.index.get(&entry.tag.key()) {
+            Some(&i) => i,
+            None => {
+                let i = self.queues.len();
+                self.queues.push(ClassQueue {
+                    weight: entry.tag.weight.clamp(1, 1024),
+                    deficit: 0,
+                    items: VecDeque::new(),
+                    in_ring: false,
+                });
+                self.index.insert(entry.tag.key(), i);
+                i
+            }
+        };
+        let q = &mut self.queues[idx];
+        if q.items.len() >= entry.tag.max_queued {
+            return Err(backpressure(&entry.tag, q.items.len()));
+        }
+        q.weight = entry.tag.weight.clamp(1, 1024);
+        q.items.push_back(entry);
+        if !q.in_ring && self.current != Some(idx) {
+            q.in_ring = true;
+            self.ring.push_back(idx);
+        }
+        self.len += 1;
+        Ok(())
+    }
+
+    fn dequeue(&mut self) -> Option<SchedEntry<T>> {
+        loop {
+            let idx = match self.current {
+                Some(i) => i,
+                None => {
+                    let i = self.ring.pop_front()?;
+                    let q = &mut self.queues[i];
+                    q.in_ring = false;
+                    // One round's credit on entering service.
+                    q.deficit = q.deficit.saturating_add(q.weight as u64 * QUANTUM);
+                    self.current = Some(i);
+                    i
+                }
+            };
+            let q = &mut self.queues[idx];
+            let Some(head_cost) = q.items.front().map(|e| e.cost.max(1) as u64) else {
+                // Drained while current (or a spurious ring entry):
+                // forfeit unused credit so idle queues cannot bank it.
+                q.deficit = 0;
+                self.current = None;
+                continue;
+            };
+            if head_cost <= q.deficit {
+                q.deficit -= head_cost;
+                let entry = q.items.pop_front();
+                self.len -= 1;
+                if q.items.is_empty() {
+                    q.deficit = 0;
+                    self.current = None;
+                }
+                return entry;
+            }
+            // Credit exhausted: back of the ring, keep the remainder.
+            self.current = None;
+            q.in_ring = true;
+            self.ring.push_back(idx);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+/// Fixed log₂-bucketed latency histogram (microseconds). Coarse by
+/// design — it answers "what order of magnitude is p99" for the
+/// profiler and pool stats without unbounded memory; benches wanting
+/// exact percentiles keep their own samples.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHistogram {
+    /// `counts[i]` holds samples with `floor(log2(us + 1)) == i`.
+    counts: [u64; 40],
+    total: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// Record one latency sample in microseconds.
+    pub fn record_us(&mut self, us: u64) {
+        let bucket =
+            (64 - us.saturating_add(1).leading_zeros() as usize - 1).min(self.counts.len() - 1);
+        self.counts[bucket] += 1;
+        self.total += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// True when no sample was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Mean latency in microseconds (0 when empty).
+    pub fn mean_us(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.sum_us / self.total
+        }
+    }
+
+    /// Largest recorded sample.
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Upper bound of the bucket holding the `p`-th percentile sample
+    /// (`p` in `0..=100`); 0 when empty. Within 2x of the exact value by
+    /// construction.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // Bucket i holds samples in [2^i - 1, 2^(i+1) - 2]; the
+                // max clamps the final (open-ended) bucket.
+                return ((1u64 << (i + 1)) - 2).min(self.max_us.max(1));
+            }
+        }
+        self.max_us
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(tenant: &str, class: RequestClass, weight: u32, cap: usize) -> SchedEntry<u32> {
+        SchedEntry {
+            tag: QosTag::new(tenant, class, weight).with_max_queued(cap),
+            cost: class.cost(),
+            enqueued: Instant::now(),
+            payload: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_preserves_order_and_enforces_caps() {
+        let mut s: FifoScheduler<u32> = FifoScheduler::new();
+        for i in 0..3u32 {
+            let mut e = entry("a", RequestClass::BatchScan, 1, 3);
+            e.payload = i;
+            s.enqueue(e).unwrap();
+        }
+        let err = s.enqueue(entry("a", RequestClass::BatchScan, 1, 3)).unwrap_err();
+        assert!(matches!(err, TgmError::Backpressure(_)), "{err}");
+        // A different class of the same tenant has its own cap.
+        s.enqueue(entry("a", RequestClass::PointQuery, 1, 3)).unwrap();
+        let order: Vec<u32> = std::iter::from_fn(|| s.dequeue()).map(|e| e.payload).collect();
+        assert_eq!(order, vec![0, 1, 2, 0]);
+        assert!(s.is_empty());
+        // Draining freed the cap.
+        s.enqueue(entry("a", RequestClass::BatchScan, 1, 3)).unwrap();
+    }
+
+    /// Saturating two-tenant load: keep both queues topped up, count
+    /// completions per tenant, and require the ratio to converge to the
+    /// weight ratio within 10% — across several weight pairs and both
+    /// request classes (the property the ISSUE names).
+    #[test]
+    fn drr_completed_ratio_converges_to_weight_ratio() {
+        for (wa, wb) in [(1u32, 3u32), (1, 1), (2, 5), (1, 8)] {
+            for class in [RequestClass::PointQuery, RequestClass::BatchScan] {
+                let mut s: DrrScheduler<u32> = DrrScheduler::new();
+                let top_up = |s: &mut DrrScheduler<u32>| {
+                    for (t, w) in [("a", wa), ("b", wb)] {
+                        // Saturation: both queues always hold work.
+                        while s
+                            .index
+                            .get(&(Arc::from(t), class))
+                            .map(|&i| s.queues[i].items.len())
+                            .unwrap_or(0)
+                            < 4
+                        {
+                            s.enqueue(entry(t, class, w, usize::MAX)).unwrap();
+                        }
+                    }
+                };
+                let (mut got_a, mut got_b) = (0u64, 0u64);
+                for _ in 0..4000 {
+                    top_up(&mut s);
+                    match s.dequeue().unwrap().tag.tenant.as_ref() {
+                        "a" => got_a += 1,
+                        _ => got_b += 1,
+                    }
+                }
+                let ratio = got_b as f64 / got_a as f64;
+                let want = wb as f64 / wa as f64;
+                assert!(
+                    (ratio - want).abs() / want < 0.10,
+                    "weights ({wa},{wb}) {class:?}: completed ratio {ratio:.3}, want {want:.3}"
+                );
+            }
+        }
+    }
+
+    /// A point query behind an arbitrarily deep batch backlog of another
+    /// tenant is served within one DRR round, never starved.
+    #[test]
+    fn drr_never_starves_point_queries_behind_batch_backlog() {
+        let mut s: DrrScheduler<u32> = DrrScheduler::new();
+        for _ in 0..500 {
+            s.enqueue(entry("scanner", RequestClass::BatchScan, 8, usize::MAX)).unwrap();
+        }
+        s.enqueue(entry("reader", RequestClass::PointQuery, 1, usize::MAX)).unwrap();
+        // Worst case: the scanner finishes its whole round's credit
+        // (weight 8 → 8 batch jobs) before the reader's visit.
+        let mut served_after = 0usize;
+        loop {
+            let e = s.dequeue().unwrap();
+            if e.tag.class == RequestClass::PointQuery {
+                break;
+            }
+            served_after += 1;
+            assert!(served_after <= 8, "point query starved behind {served_after} batch jobs");
+        }
+    }
+
+    #[test]
+    fn drr_mixed_classes_within_one_tenant_favor_points_by_cost() {
+        // Equal weights, same tenant: per round the point queue serves
+        // BATCH_COST/POINT_COST times as many requests as the scan queue.
+        let mut s: DrrScheduler<u32> = DrrScheduler::new();
+        for _ in 0..400 {
+            s.enqueue(entry("t", RequestClass::PointQuery, 1, usize::MAX)).unwrap();
+            s.enqueue(entry("t", RequestClass::BatchScan, 1, usize::MAX)).unwrap();
+        }
+        let (mut points, mut scans) = (0u64, 0u64);
+        for _ in 0..200 {
+            match s.dequeue().unwrap().tag.class {
+                RequestClass::PointQuery => points += 1,
+                RequestClass::BatchScan => scans += 1,
+            }
+        }
+        let ratio = points as f64 / scans as f64;
+        let want = (BATCH_COST / POINT_COST) as f64;
+        assert!((ratio - want).abs() / want < 0.15, "point/scan ratio {ratio:.2}, want {want}");
+    }
+
+    #[test]
+    fn drr_admission_cap_returns_backpressure_per_queue() {
+        let mut s: DrrScheduler<u32> = DrrScheduler::new();
+        for _ in 0..2 {
+            s.enqueue(entry("a", RequestClass::PointQuery, 1, 2)).unwrap();
+        }
+        let err = s.enqueue(entry("a", RequestClass::PointQuery, 1, 2)).unwrap_err();
+        assert!(matches!(err, TgmError::Backpressure(_)), "{err}");
+        assert!(err.to_string().contains("admission cap"), "{err}");
+        // Other queues are unaffected by one tenant's full queue.
+        s.enqueue(entry("b", RequestClass::PointQuery, 1, 2)).unwrap();
+        s.enqueue(entry("a", RequestClass::BatchScan, 1, 2)).unwrap();
+        assert_eq!(s.len(), 4);
+        // Serving drains the cap.
+        while s.dequeue().is_some() {}
+        s.enqueue(entry("a", RequestClass::PointQuery, 1, 2)).unwrap();
+    }
+
+    #[test]
+    fn drr_is_work_conserving() {
+        let mut s: DrrScheduler<u32> = DrrScheduler::new();
+        // Interleave enqueues/dequeues across tenants with odd weights;
+        // every dequeue must produce work while len > 0.
+        for round in 0..50u32 {
+            for (t, w) in [("x", 1), ("y", 7), ("z", 3)] {
+                s.enqueue(entry(t, RequestClass::BatchScan, w, usize::MAX)).unwrap();
+                if round % 3 == 0 {
+                    s.enqueue(entry(t, RequestClass::PointQuery, w, usize::MAX)).unwrap();
+                }
+            }
+            if round % 2 == 0 {
+                assert!(s.dequeue().is_some());
+            }
+        }
+        let mut drained = 0;
+        while !s.is_empty() {
+            assert!(s.dequeue().is_some(), "work-conservation violated with {} queued", s.len());
+            drained += 1;
+        }
+        assert!(drained > 0);
+        assert!(s.dequeue().is_none());
+    }
+
+    #[test]
+    fn scheduler_kind_builds_both() {
+        let mut drr = SchedulerKind::WeightedDrr.build::<u32>();
+        let mut fifo = SchedulerKind::Fifo.build::<u32>();
+        drr.enqueue(entry("a", RequestClass::PointQuery, 1, 8)).unwrap();
+        fifo.enqueue(entry("a", RequestClass::PointQuery, 1, 8)).unwrap();
+        assert_eq!(drr.len(), 1);
+        assert_eq!(fifo.len(), 1);
+        assert!(drr.dequeue().is_some() && fifo.dequeue().is_some());
+    }
+
+    #[test]
+    fn latency_histogram_percentiles_and_merge() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.percentile_us(99.0), 0);
+        for us in [10u64, 12, 14, 100, 5000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.mean_us(), (10 + 12 + 14 + 100 + 5000) / 5);
+        assert_eq!(h.max_us(), 5000);
+        // Log-bucketed: within 2x of the exact percentile, monotone.
+        let p50 = h.percentile_us(50.0);
+        let p99 = h.percentile_us(99.0);
+        assert!((12..=30).contains(&p50), "p50 {p50}");
+        assert!((5000..=10000).contains(&p99), "p99 {p99}");
+        assert!(h.percentile_us(0.0) <= p50 && p50 <= p99);
+
+        let mut other = LatencyHistogram::new();
+        other.record_us(7);
+        other.merge(&h);
+        assert_eq!(other.count(), 6);
+        assert_eq!(other.max_us(), 5000);
+    }
+}

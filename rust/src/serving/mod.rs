@@ -30,11 +30,13 @@
 
 use crate::error::{Result, TgmError};
 use crate::graph::{
-    DGraph, DtdgHandle, Event, ReduceOp, SealPolicy, SegmentedStorage, SnapshotCell,
-    StorageSnapshot,
+    AdjacencyCache, DGraph, DtdgHandle, Event, PointQuery, PointReader, PointResponse, ReduceOp,
+    SealPolicy, SegmentedStorage, SnapshotCell, StorageSnapshot,
 };
 use crate::hooks::manager::HookManager;
-use crate::loader::{BatchBy, PooledStream, ServingPool, StreamConfig};
+use crate::loader::{
+    BatchBy, PointTicket, PooledStream, QosTag, RequestClass, ServingPool, StreamConfig,
+};
 use crate::persist::{self, Compactor, CompactorConfig, DurabilityPolicy};
 use crate::util::TimeGranularity;
 use std::collections::HashMap;
@@ -75,6 +77,26 @@ impl From<String> for TenantId {
     }
 }
 
+/// Per-tenant scheduling policy: how the shared pool's scheduler
+/// weighs this tenant's requests and how deep its queues may grow
+/// before admission control sheds load (see [`crate::loader::sched`]).
+#[derive(Debug, Clone, Copy)]
+pub struct QosPolicy {
+    /// Relative service share under the weighted-DRR scheduler
+    /// (clamped to `1..=1024` at the scheduler).
+    pub weight: u32,
+    /// Per-`(tenant, class)` admission cap; `None` uses the scheduler
+    /// default (`TGM_QOS_DEPTH` or its built-in cap). A full queue
+    /// rejects new requests with [`TgmError::Backpressure`].
+    pub max_queued: Option<usize>,
+}
+
+impl Default for QosPolicy {
+    fn default() -> QosPolicy {
+        QosPolicy { weight: 1, max_queued: None }
+    }
+}
+
 /// Per-tenant storage policy: every tenant gets its own writer, seal
 /// policy and compaction cadence.
 #[derive(Debug, Clone)]
@@ -101,11 +123,14 @@ pub struct TenantConfig {
     /// writer per directory across processes is the operator's
     /// contract).
     pub durable: Option<DurabilityPolicy>,
+    /// Scheduling weight and admission cap for this tenant's requests
+    /// on the shared pool (weight 1, default cap unless overridden).
+    pub qos: QosPolicy,
 }
 
 impl TenantConfig {
     /// Defaults: default seal policy, compaction past 8 sealed segments,
-    /// inferred granularity.
+    /// inferred granularity, weight-1 QoS.
     pub fn new(num_nodes: usize) -> TenantConfig {
         TenantConfig {
             num_nodes,
@@ -113,6 +138,7 @@ impl TenantConfig {
             compact_after: 8,
             granularity: None,
             durable: None,
+            qos: QosPolicy::default(),
         }
     }
 
@@ -140,6 +166,20 @@ impl TenantConfig {
         self.durable = Some(policy);
         self
     }
+
+    /// Set the tenant's scheduling weight (relative service share on
+    /// the shared pool).
+    pub fn with_qos_weight(mut self, weight: u32) -> TenantConfig {
+        self.qos.weight = weight;
+        self
+    }
+
+    /// Cap the tenant's per-class queues: beyond `cap` queued requests,
+    /// new ones are rejected with [`TgmError::Backpressure`].
+    pub fn with_admission_cap(mut self, cap: usize) -> TenantConfig {
+        self.qos.max_queued = Some(cap.max(1));
+        self
+    }
 }
 
 /// One tenant: a locked writer plus the atomic publication cell. Shared
@@ -151,6 +191,12 @@ pub struct TenantHandle {
     writer: Arc<Mutex<SegmentedStorage>>,
     published: SnapshotCell,
     compact_after: usize,
+    qos: QosPolicy,
+    /// Per-tenant CSR index cache: readers for successive generations
+    /// rebuild only the segments that changed.
+    adjacency: AdjacencyCache,
+    /// Memoized [`PointReader`] for the currently-published generation.
+    reader: Mutex<Option<PointReader>>,
 }
 
 impl TenantHandle {
@@ -185,6 +231,9 @@ impl TenantHandle {
             writer: Arc::new(Mutex::new(store)),
             published: SnapshotCell::new(),
             compact_after: cfg.compact_after,
+            qos: cfg.qos,
+            adjacency: AdjacencyCache::new(),
+            reader: Mutex::new(None),
         };
         // A recovered tenant serves its pre-crash data immediately.
         {
@@ -260,6 +309,55 @@ impl TenantHandle {
     /// Generation currently published (`None` before the first publish).
     pub fn published_generation(&self) -> Option<u64> {
         self.published.generation()
+    }
+
+    /// This tenant's scheduling policy.
+    pub fn qos(&self) -> QosPolicy {
+        self.qos
+    }
+
+    /// The [`QosTag`] this tenant's requests of `class` carry on the
+    /// shared pool's scheduler.
+    pub fn qos_tag(&self, class: RequestClass) -> QosTag {
+        let tag = QosTag::new(self.id.as_str(), class, self.qos.weight);
+        match self.qos.max_queued {
+            Some(cap) => tag.with_max_queued(cap),
+            None => tag,
+        }
+    }
+
+    /// A [`PointReader`] pinned to the latest published generation.
+    /// Memoized per generation: repeated calls between publishes reuse
+    /// the same reader, and advancing a generation re-indexes only the
+    /// segments that changed (via the tenant's [`AdjacencyCache`]).
+    /// Typed error before the first publish.
+    pub fn reader(&self) -> Result<PointReader> {
+        let snap = self.pin()?;
+        let mut cached = self.reader.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(r) = cached.as_ref() {
+            if r.snapshot().id() == snap.id() {
+                return Ok(r.clone());
+            }
+        }
+        let r = PointReader::with_cache(snap, &self.adjacency);
+        *cached = Some(r.clone());
+        Ok(r)
+    }
+
+    /// Answer one point query on the shared pool under this tenant's
+    /// QoS tag, blocking for the response. The query runs against the
+    /// latest published generation (pinned for the duration, so a
+    /// concurrent publish cannot tear it). Admission control applies.
+    pub fn query(&self, pool: &ServingPool, query: PointQuery) -> Result<PointResponse> {
+        let reader = self.reader()?;
+        pool.point_query(&reader, &self.qos_tag(RequestClass::PointQuery), query)
+    }
+
+    /// Submit one point query without blocking for the response (pair
+    /// with [`PointTicket::wait`] to pipeline many queries).
+    pub fn submit_query(&self, pool: &ServingPool, query: PointQuery) -> Result<PointTicket> {
+        let reader = self.reader()?;
+        pool.submit_point(&reader, &self.qos_tag(RequestClass::PointQuery), query)
     }
 
     /// Edge events ingested so far (sealed + active).
@@ -417,8 +515,23 @@ impl TenantRouter {
         manager: &'a mut HookManager,
         cfg: StreamConfig,
     ) -> Result<PooledStream<'a>> {
-        let snap = self.pin(id)?;
+        let handle = self.tenant(id)?;
+        let snap = handle.pin()?;
+        // The stream's jobs are scheduled under the tenant's identity
+        // and weight, so its scans compete fairly with other tenants.
+        let cfg = cfg.with_qos(handle.qos_tag(RequestClass::BatchScan));
         pool.stream(DGraph::full(snap), by, manager, cfg)
+    }
+
+    /// [`TenantHandle::query`] by id: one point query on the shared
+    /// pool under the tenant's QoS tag.
+    pub fn query(
+        &self,
+        pool: &ServingPool,
+        id: &TenantId,
+        query: PointQuery,
+    ) -> Result<PointResponse> {
+        self.tenant(id)?.query(pool, query)
     }
 }
 
@@ -516,6 +629,80 @@ mod tests {
         let serial =
             DGDataLoader::new(data.full(), BatchBy::Events(100), &mut ms).unwrap().collect_all().unwrap();
         identical(&serial, &served);
+    }
+
+    #[test]
+    fn point_queries_serve_from_the_published_generation() {
+        let mut router = TenantRouter::new();
+        let id = loaded_tenant(&mut router, "wiki", 5);
+        let pool = ServingPool::new(2);
+        let handle = Arc::clone(router.tenant(&id).unwrap());
+        let snap = router.pin(&id).unwrap();
+        let end = snap.end_time() + 1;
+
+        // Router-level query matches a direct reader execution.
+        let q = PointQuery::NeighborsBefore { node: 0, t: end, k: 4 };
+        let got = router.query(&pool, &id, q).unwrap();
+        let direct = handle.reader().unwrap().execute(&q);
+        assert_eq!(got, direct);
+        match got {
+            PointResponse::Neighbors(ref n) => assert!(!n.is_empty()),
+            ref other => panic!("unexpected response {other:?}"),
+        }
+
+        // The memoized reader is reused between publishes...
+        let r1 = handle.reader().unwrap();
+        let r2 = handle.reader().unwrap();
+        assert_eq!(r1.snapshot().id(), r2.snapshot().id());
+
+        // ...and a publish advances it: a new edge becomes visible to
+        // queries only after publish.
+        let (src, dst) = (0u32, 1u32);
+        handle
+            .ingest(vec![Event::Edge(crate::graph::EdgeEvent {
+                t: end + 60,
+                src,
+                dst,
+                features: vec![0.0; snap.edge_feat_dim()],
+            })])
+            .unwrap();
+        let before = handle.query(&pool, PointQuery::EdgeLookup { src, dst, t: end + 120 });
+        handle.publish().unwrap();
+        let after =
+            handle.query(&pool, PointQuery::EdgeLookup { src, dst, t: end + 120 }).unwrap();
+        match (before.unwrap(), after) {
+            (PointResponse::Edge(b), PointResponse::Edge(Some(hit))) => {
+                assert_eq!(hit.t, end + 60);
+                assert!(b.map(|h| h.t != end + 60).unwrap_or(true), "pre-publish leak");
+            }
+            other => panic!("unexpected responses {other:?}"),
+        }
+        // An unpublished tenant yields a typed error, not a panic.
+        let mut empty = TenantRouter::new();
+        empty.add_tenant("fresh", TenantConfig::new(8)).unwrap();
+        let err = empty.query(&pool, &TenantId::from("fresh"), q).unwrap_err();
+        assert!(matches!(err, TgmError::Serving(_)), "{err}");
+    }
+
+    #[test]
+    fn tenant_qos_policy_stamps_tags() {
+        let mut router = TenantRouter::new();
+        router
+            .add_tenant("vip", TenantConfig::new(8).with_qos_weight(9).with_admission_cap(17))
+            .unwrap();
+        let h = router.tenant(&TenantId::from("vip")).unwrap();
+        assert_eq!(h.qos().weight, 9);
+        let tag = h.qos_tag(RequestClass::PointQuery);
+        assert_eq!(tag.tenant.as_ref(), "vip");
+        assert_eq!(tag.weight, 9);
+        assert_eq!(tag.max_queued, 17);
+        assert_eq!(tag.class, RequestClass::PointQuery);
+        // Default policy: weight 1, scheduler-default cap.
+        router.add_tenant("std", TenantConfig::new(8)).unwrap();
+        let std_tag =
+            router.tenant(&TenantId::from("std")).unwrap().qos_tag(RequestClass::BatchScan);
+        assert_eq!(std_tag.weight, 1);
+        assert!(std_tag.max_queued >= 1);
     }
 
     #[test]

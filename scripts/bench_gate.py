@@ -6,7 +6,9 @@ Collects ``BENCH_METRIC <name> <value>`` rows printed by
 writes them to a JSON summary artifact (``BENCH_PR5.json``), and fails
 when any metric named in the committed baseline's ``gates`` map regressed
 by more than ``tolerance`` (throughput metrics: measured must be at least
-``baseline * (1 - tolerance)``).
+``baseline * (1 - tolerance)``). The baseline's ``ceilings`` map gates
+lower-is-better metrics (e.g. ``latency.point_p99_us``) the other way:
+measured must be at most ``baseline * (1 + tolerance)``.
 
 Usage:
     bench_gate.py --baseline bench-baseline.json --output BENCH_PR5.json LOG...
@@ -68,6 +70,23 @@ def compare(metrics: dict[str, float], baseline: dict) -> list[str]:
                 f"{name}: {measured:.1f} is {drop:.1f}% below baseline "
                 f"{float(base):.1f} (tolerance {tolerance:.0%})"
             )
+    for name, base in sorted(baseline.get("ceilings", {}).items()):
+        if base is None:
+            continue  # recorded but not gated
+        measured = metrics.get(name)
+        if measured is None:
+            failures.append(
+                f"{name}: gated metric missing from the bench log "
+                "(did the bench section fail to run?)"
+            )
+            continue
+        ceiling = float(base) * (1.0 + tolerance)
+        if measured > ceiling:
+            rise = 100.0 * (measured / float(base) - 1.0)
+            failures.append(
+                f"{name}: {measured:.1f} is {rise:.1f}% above ceiling "
+                f"{float(base):.1f} (tolerance {tolerance:.0%})"
+            )
     return failures
 
 
@@ -93,15 +112,18 @@ def main() -> int:
         if not positive:
             print("bench-gate SELF-TEST FAILED: no positive metrics to sandbag", file=sys.stderr)
             return 1
+        # Floors sandbagged 10x up AND ceilings sandbagged 10x down:
+        # every positive metric must trip once per direction.
         sandbagged = {
             "tolerance": 0.20,
             "gates": {name: value * 10.0 for name, value in positive.items()},
+            "ceilings": {name: value * 0.1 for name, value in positive.items()},
         }
         failures = compare(metrics, sandbagged)
-        if len(failures) != len(positive):
+        if len(failures) != 2 * len(positive):
             print(
                 "bench-gate SELF-TEST FAILED: a 10x-sandbagged baseline only "
-                f"tripped {len(failures)}/{len(positive)} gates",
+                f"tripped {len(failures)}/{2 * len(positive)} gates",
                 file=sys.stderr,
             )
             return 1
@@ -122,6 +144,13 @@ def main() -> int:
             # gated throughput floor.
             if name in metrics and gates.get(name, 0) is not None:
                 gates[name] = metrics[name]
+        # Ceilings are never seeded from scratch (a throughput metric
+        # must not silently become lower-is-better); only refresh keys
+        # someone deliberately put there.
+        ceilings = baseline.get("ceilings", {})
+        for name in list(ceilings):
+            if name in metrics and ceilings.get(name) is not None:
+                ceilings[name] = metrics[name]
         baseline.setdefault("tolerance", 0.20)
         baseline_path.write_text(json.dumps(baseline, indent=2, sort_keys=True) + "\n")
         print(f"bench-gate: refreshed {baseline_path} from {len(metrics)} measured metrics")
@@ -139,6 +168,7 @@ def main() -> int:
         print(f"bench-gate: wrote {args.output} ({len(metrics)} metrics)")
 
     gated = [g for g, v in baseline.get("gates", {}).items() if v is not None]
+    gated += [c for c, v in baseline.get("ceilings", {}).items() if v is not None]
     if failures:
         print("bench-gate: REGRESSIONS DETECTED", file=sys.stderr)
         for f in failures:
