@@ -13,22 +13,32 @@
 //! generation *G* is untouched by the writer publishing *G+1* mid-pass —
 //! the next pass picks the newer generation up.
 //!
+//! Each serving pass also fires a small burst of point queries against
+//! the pinned snapshot, so both request classes flow through the pool.
+//! With `TGM_METRICS_ADDR` set (e.g. `127.0.0.1:0`), the process serves
+//! a Prometheus `/metrics` endpoint mid-run and prints the bound
+//! address, so a smoke test can scrape ingest/serving/persist metric
+//! families while load is live.
+//!
 //! ```text
 //! cargo run --release --example multi_tenant_serving
 //! TGM_TENANTS=3 TGM_SCALE=0.05 cargo run --release --example multi_tenant_serving
+//! TGM_METRICS_ADDR=127.0.0.1:0 cargo run --release --example multi_tenant_serving
 //! ```
 //!
 //! Environment knobs: `TGM_TENANTS` (default 3), `TGM_SCALE` (default
-//! 0.1), `TGM_WORKERS` (default 4).
+//! 0.1), `TGM_WORKERS` (default 4), `TGM_METRICS_ADDR` (off by
+//! default).
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use tgm::coordinator::MultiTenantIngestor;
-use tgm::graph::{DGData, SealPolicy};
+use tgm::graph::{DGData, PointQuery, SealPolicy};
 use tgm::hooks::{RecipeRegistry, RECIPE_TGB_LINK};
 use tgm::io::gen;
 use tgm::io::stream::ReplaySource;
 use tgm::loader::{BatchBy, ServingPool, StreamConfig};
+use tgm::obs::ObsServer;
 use tgm::serving::{TenantConfig, TenantId, TenantRouter};
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -43,6 +53,13 @@ fn main() -> tgm::Result<()> {
     let tenants = env_usize("TGM_TENANTS", 3).clamp(1, 8);
     let scale = env_f64("TGM_SCALE", 0.1);
     let workers = env_usize("TGM_WORKERS", 4).max(1);
+
+    // Opt-in scrape endpoint; the printed line is what smoke tests
+    // parse to curl an ephemeral port mid-run.
+    let obs = ObsServer::from_env();
+    if let Some(s) = &obs {
+        println!("metrics endpoint: http://{}/metrics", s.local_addr());
+    }
 
     // Each tenant is its own surrogate graph (distinct dataset + seed).
     let names = ["wiki", "reddit", "lastfm", "genre"];
@@ -83,6 +100,7 @@ fn main() -> tgm::Result<()> {
 
     let done = AtomicBool::new(false);
     let total_batches = AtomicUsize::new(0);
+    let total_points = AtomicUsize::new(0);
 
     let per_tenant: Vec<(usize, usize)> =
         std::thread::scope(|scope| -> tgm::Result<Vec<(usize, usize)>> {
@@ -97,15 +115,18 @@ fn main() -> tgm::Result<()> {
         // One serving loop per tenant: pin latest -> full pass -> repeat;
         // the pass that starts after `done` serves the final generation.
         let mut servers = Vec::new();
-        for (id, _) in &datasets {
+        for (id, data) in &datasets {
             let router = Arc::clone(&router);
             let pool = &pool;
             let done = &done;
             let total_batches = &total_batches;
+            let total_points = &total_points;
+            let num_nodes = data.storage().num_nodes() as u64;
             servers.push(scope.spawn(move || -> tgm::Result<(usize, usize)> {
                 let handle = Arc::clone(router.tenant(id)?);
                 let mut passes = 0usize;
                 let mut final_edges = 0usize;
+                let mut qi = 0u64;
                 loop {
                     // Read the flag BEFORE pinning: if ingestion had
                     // already finished, this pin observes the final
@@ -137,6 +158,26 @@ fn main() -> tgm::Result<()> {
                         batches += 1;
                     }
                     total_batches.fetch_add(batches, Ordering::Relaxed);
+
+                    // A small point-query burst against the same
+                    // generation: both request classes share the pool,
+                    // and the point-latency histogram fills for the
+                    // mid-run scrape.
+                    let snap = handle.pin()?;
+                    let end = snap.end_time() + 1;
+                    let mut tickets = Vec::with_capacity(16);
+                    for _ in 0..16 {
+                        let node =
+                            ((qi.wrapping_mul(0x9E37_79B9_7F4A_7C15)) % num_nodes) as u32;
+                        qi += 1;
+                        let query = PointQuery::NeighborsBefore { node, t: end, k: 10 };
+                        tickets.push(handle.submit_query(pool, query)?);
+                    }
+                    for t in tickets {
+                        t.wait()?;
+                        total_points.fetch_add(1, Ordering::Relaxed);
+                    }
+
                     passes += 1;
                     final_edges = edges;
                     if finished {
@@ -174,9 +215,11 @@ fn main() -> tgm::Result<()> {
         );
     }
     println!(
-        "served {} hooked batches total across all tenants",
-        total_batches.load(Ordering::Relaxed)
+        "served {} hooked batches and {} point queries total across all tenants",
+        total_batches.load(Ordering::Relaxed),
+        total_points.load(Ordering::Relaxed)
     );
+    drop(obs);
     println!("multi_tenant_serving OK");
     Ok(())
 }

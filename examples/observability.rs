@@ -1,0 +1,276 @@
+//! The observability layer end to end: multi-tenant ingest +
+//! point-query load with the metrics registry, trace ring, and scrape
+//! endpoint all live.
+//!
+//! Two tenants ingest concurrently (chunked append + publish through
+//! `MultiTenantIngestor`) while per-tenant serving loops drive batch
+//! scans and pipelined point queries over one shared `ServingPool`.
+//! Every layer reports into the process-global registry and trace ring
+//! as it works — no wiring in this file beyond reading the results:
+//!
+//! * a `/metrics` endpoint serves Prometheus text for the whole run
+//!   (bound to `TGM_METRICS_ADDR`, or an ephemeral localhost port when
+//!   unset — this example always serves); the example scrapes itself
+//!   once over plain TCP to show the loop closes;
+//! * at exit it prints the final registry snapshot (counters, gauges,
+//!   and histogram percentiles) and the 10 slowest trace spans.
+//!
+//! ```text
+//! cargo run --release --example observability
+//! TGM_TRACE=1 TGM_TRACE_SLOW_US=1000 cargo run --release --example observability
+//! ```
+//!
+//! Environment knobs: `TGM_TENANTS` (default 2), `TGM_SCALE` (default
+//! 0.05), `TGM_WORKERS` (default 2), `TGM_METRICS_ADDR` (default
+//! `127.0.0.1:0`), plus `TGM_TRACE` / `TGM_TRACE_SLOW_US` for the
+//! stderr slow-op log.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use tgm::coordinator::{MultiTenantIngestor, Profiler};
+use tgm::graph::{DGData, PointQuery, SealPolicy};
+use tgm::hooks::{RecipeRegistry, RECIPE_TGB_LINK};
+use tgm::io::gen;
+use tgm::io::stream::ReplaySource;
+use tgm::loader::{BatchBy, ServingPool, StreamConfig};
+use tgm::obs::{self, MetricValue, ObsServer};
+use tgm::serving::{TenantConfig, TenantId, TenantRouter};
+use tgm::TgmError;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// In-flight point queries one tenant keeps pipelined at once.
+const WINDOW: usize = 8;
+
+/// One plain-TCP `GET /metrics` against our own endpoint.
+fn self_scrape(addr: std::net::SocketAddr) -> std::io::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    write!(stream, "GET /metrics HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    let mut body = String::new();
+    stream.read_to_string(&mut body)?;
+    Ok(body.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or(body))
+}
+
+fn main() -> tgm::Result<()> {
+    let tenants = env_usize("TGM_TENANTS", 2).clamp(1, 8);
+    let scale = env_f64("TGM_SCALE", 0.05);
+    let workers = env_usize("TGM_WORKERS", 2).max(1);
+
+    // This example is about observability, so the endpoint is always
+    // on: TGM_METRICS_ADDR when set, else an ephemeral localhost port.
+    let server = match ObsServer::from_env() {
+        Some(s) => s,
+        None => ObsServer::serve("127.0.0.1:0")
+            .map_err(|e| TgmError::Io(format!("failed to bind metrics endpoint: {e}")))?,
+    };
+    println!("metrics endpoint: http://{}/metrics", server.local_addr());
+
+    let names = ["wiki", "reddit", "lastfm", "genre"];
+    let mut datasets: Vec<(TenantId, DGData)> = Vec::with_capacity(tenants);
+    for i in 0..tenants {
+        let name = names[i % names.len()];
+        let data = gen::by_name(name, scale, 42 + i as u64)?;
+        datasets.push((TenantId::from(format!("{name}-{i}")), data));
+    }
+
+    let mut router = TenantRouter::new();
+    for (i, (id, data)) in datasets.iter().enumerate() {
+        router.add_tenant(
+            id.clone(),
+            TenantConfig::new(data.storage().num_nodes())
+                .with_seal(SealPolicy::by_events(256 * (i + 1)))
+                .with_compact_after(4)
+                .with_granularity(data.storage().granularity()),
+        )?;
+    }
+    let router = Arc::new(router);
+    let pool = ServingPool::new(workers);
+
+    let mut ingestor = MultiTenantIngestor::new(Arc::clone(&router), 256);
+    for (id, data) in &datasets {
+        ingestor.add_stream(id.clone(), ReplaySource::from_data(data))?;
+        println!("  {:<12} {} edge events", id.to_string(), data.storage().num_edges());
+    }
+
+    let done = AtomicBool::new(false);
+    std::thread::scope(|scope| -> tgm::Result<()> {
+        let ingest = scope.spawn(|| {
+            let res = ingestor.run_to_completion();
+            done.store(true, Ordering::SeqCst);
+            res
+        });
+
+        let mut joins = Vec::new();
+        for (id, data) in &datasets {
+            let router = Arc::clone(&router);
+            let pool = &pool;
+            let done = &done;
+            let num_nodes = data.storage().num_nodes() as u64;
+
+            // Batch-scan loop: full hooked passes until ingest drains.
+            let scan_router = Arc::clone(&router);
+            joins.push(scope.spawn(move || -> tgm::Result<()> {
+                loop {
+                    let finished = done.load(Ordering::SeqCst);
+                    let handle = scan_router.tenant(id)?;
+                    if handle.published_generation().is_none() {
+                        if finished {
+                            return Ok(());
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                        continue;
+                    }
+                    let mut manager = RecipeRegistry::build(RECIPE_TGB_LINK)?;
+                    manager.activate("val")?;
+                    let mut stream = scan_router.serve(
+                        pool,
+                        id,
+                        BatchBy::Events(200),
+                        &mut manager,
+                        StreamConfig::default(),
+                    )?;
+                    while let Some(b) = stream.next() {
+                        b?;
+                    }
+                    if finished {
+                        return Ok(());
+                    }
+                }
+            }));
+
+            // Point-query loop: pipelined window of small reads;
+            // Backpressure sheds load by draining the window.
+            joins.push(scope.spawn(move || -> tgm::Result<()> {
+                let handle = Arc::clone(router.tenant(id)?);
+                let mut outstanding = VecDeque::new();
+                let mut i = 0u64;
+                while !done.load(Ordering::SeqCst) {
+                    let Some(snap) = handle.pin().ok() else {
+                        std::thread::sleep(Duration::from_millis(1));
+                        continue;
+                    };
+                    let end = snap.end_time() + 1;
+                    let node = ((i.wrapping_mul(0x9E37_79B9_7F4A_7C15)) % num_nodes) as u32;
+                    let query = if i % 4 == 0 {
+                        let dst = ((i / 4 + 1) % num_nodes) as u32;
+                        PointQuery::EdgeLookup { src: node, dst, t: end }
+                    } else {
+                        PointQuery::NeighborsBefore { node, t: end, k: 10 }
+                    };
+                    i += 1;
+                    match handle.submit_query(pool, query) {
+                        Ok(ticket) => outstanding.push_back(ticket),
+                        Err(TgmError::Backpressure(_)) => {}
+                        Err(e) => return Err(e),
+                    }
+                    if outstanding.len() >= WINDOW {
+                        if let Some(t) = outstanding.pop_front() {
+                            t.wait()?;
+                        }
+                    }
+                }
+                for t in outstanding {
+                    t.wait()?;
+                }
+                Ok(())
+            }));
+        }
+
+        let rows = ingest.join().expect("ingestor panicked")?;
+        println!("ingestion done: {} per-tenant cycle reports", rows.len());
+        for j in joins {
+            j.join().expect("serving loop panicked")?;
+        }
+        Ok(())
+    })?;
+
+    // Scrape our own endpoint once: the same bytes Prometheus would see.
+    let body = self_scrape(server.local_addr())
+        .map_err(|e| TgmError::Io(format!("self-scrape failed: {e}")))?;
+    let samples = obs::parse_prometheus(&body);
+    println!(
+        "\nself-scrape: {} bytes of Prometheus text, {} samples across {} families",
+        body.len(),
+        samples.len(),
+        {
+            let mut fams: Vec<&str> = body
+                .lines()
+                .filter_map(|l| l.strip_prefix("# TYPE "))
+                .filter_map(|l| l.split_whitespace().next())
+                .collect();
+            fams.dedup();
+            fams.len()
+        }
+    );
+    assert!(
+        samples.iter().any(|s| s.name == "tgm_ingest_events_total" && s.value > 0.0),
+        "scrape must report ingested events"
+    );
+    assert!(
+        samples.iter().any(|s| s.name == "tgm_point_latency_us_count" && s.value > 0.0),
+        "scrape must report completed point queries"
+    );
+
+    // Final registry snapshot: one compact row per series.
+    let snap = obs::registry().snapshot();
+    println!("\nfinal registry snapshot ({} series):", snap.metrics.len());
+    for m in &snap.metrics {
+        let labels = if m.labels.is_empty() {
+            String::new()
+        } else {
+            let pairs: Vec<String> =
+                m.labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+            format!("{{{}}}", pairs.join(","))
+        };
+        match &m.value {
+            MetricValue::Counter(v) => println!("  {}{labels} {v}", m.name),
+            MetricValue::Gauge(v) => println!("  {}{labels} {v}", m.name),
+            MetricValue::Histogram(h) => println!(
+                "  {}{labels} n={} p50={}us p99={}us max={}us",
+                m.name,
+                h.count(),
+                h.percentile_us(50.0),
+                h.percentile_us(99.0),
+                h.max_us(),
+            ),
+        }
+    }
+
+    // The profiler folds the same snapshot into its familiar report.
+    let mut profiler = Profiler::new();
+    profiler.fold_registry(&snap);
+    println!();
+    print!("{profiler}");
+
+    // The 10 slowest spans the trace ring retained.
+    let mut spans = obs::trace_ring().snapshot();
+    spans.retain(|e| e.dur_us > 0);
+    spans.sort_by(|a, b| b.dur_us.cmp(&a.dur_us));
+    println!("\n10 slowest trace spans:");
+    for e in spans.iter().take(10) {
+        println!(
+            "  {:>8}us {}.{} tenant={} {}",
+            e.dur_us,
+            e.subsystem,
+            e.kind,
+            e.tenant.as_ref().map(|t| t.as_str()).unwrap_or("-"),
+            e.detail,
+        );
+    }
+    assert!(!spans.is_empty(), "the trace ring must have retained spans");
+
+    drop(server);
+    println!("\nobservability OK");
+    Ok(())
+}

@@ -29,6 +29,10 @@
 //!     point path on a shared pool under mixed point-query + batch-scan
 //!     + ingest load, vs answering the same question through a
 //!     one-batch pooled stream (target: >= 10x lower p99).
+//! 12. Observability overhead: the same durable-ingest loop with the
+//!     process-global metrics registry recording vs disabled — the
+//!     per-append counter increments and per-seal histogram records
+//!     must cost <= 3% of ingest throughput.
 //!
 //! `TGM_ABLATION=streaming,sharded,persist` runs a comma-selected
 //! subset (CI's bench-regression job does exactly that); unset runs
@@ -86,6 +90,7 @@ fn main() {
     let kernels_on = common::section_enabled("kernels");
     let discretize_on = common::section_enabled("discretize");
     let latency_on = common::section_enabled("latency");
+    let obs_on = common::section_enabled("obs");
 
     // 9. SIMD kernel microbench (`ablation.kernels`): raw primitive
     //    throughput under whichever backend the runtime dispatch picked,
@@ -541,6 +546,78 @@ fn main() {
     if latency_on {
         latency_section(scale);
     }
+
+    // 12. Observability overhead (`ablation.obs`).
+    if obs_on {
+        obs_section(scale);
+    }
+}
+
+/// Section 12: observability overhead (`ablation.obs`).
+///
+/// The durable-ingest loop is the most metric-dense hot path in the
+/// library: every `append_edge` increments the WAL append counter and
+/// every seal records duration/byte metrics plus a trace span. Timing
+/// the identical loop with the process-global registry recording vs
+/// disabled (`MetricsRegistry::set_enabled(false)` — handles keep
+/// working, they just skip the stores) bounds what instrumentation
+/// costs on the paths users actually pay for. Target: <= 3% throughput
+/// delta; the `obs.overhead_pct` row is tracked (null-gated) in
+/// `bench-baseline.json` because its sign flips with runner jitter.
+fn obs_section(scale: f64) {
+    let wiki = gen::by_name("wiki", scale, 42).unwrap();
+    let snap = wiki.storage();
+    let events: Vec<tgm::graph::EdgeEvent> = (0..snap.num_edges())
+        .map(|i| tgm::graph::EdgeEvent {
+            t: snap.edge_ts_at(i),
+            src: snap.edge_src_at(i),
+            dst: snap.edge_dst_at(i),
+            features: snap.edge_feat_row(i).to_vec(),
+        })
+        .collect();
+    let n_events = events.len();
+    let seal_every = (n_events / 4).max(1);
+    let bench_dir =
+        std::env::temp_dir().join(format!("tgm_ablation_obs_{}", std::process::id()));
+
+    let run_seq = std::sync::atomic::AtomicUsize::new(0);
+    let run_ingest = || {
+        let run = run_seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut st = SegmentedStorage::new(snap.num_nodes(), SealPolicy::by_events(seal_every))
+            .with_durability(DurabilityPolicy::new(bench_dir.join(format!("run-{run}"))))
+            .unwrap();
+        for e in &events {
+            st.append_edge(e.clone()).unwrap();
+        }
+        st.seal().unwrap();
+        st.total_edges()
+    };
+
+    let registry = tgm::obs::registry();
+    assert!(registry.is_enabled(), "the global registry starts enabled");
+    let instrumented = common::time_runs(1, 3, run_ingest);
+    registry.set_enabled(false);
+    let disabled = common::time_runs(1, 3, run_ingest);
+    // This process is done measuring, but leave the global registry the
+    // way every other section (and library user) expects it.
+    registry.set_enabled(true);
+
+    common::report("ablation.obs", "durable ingest, registry recording", &instrumented);
+    common::report("ablation.obs", "durable ingest, registry disabled", &disabled);
+    let overhead_pct =
+        (common::mean(&instrumented) / common::mean(&disabled).max(1e-12) - 1.0) * 100.0;
+    println!(
+        "ablation.obs | metrics overhead on durable ingest: {overhead_pct:.2}% \
+         ({:.2}M events/s instrumented, target <= 3%)",
+        n_events as f64 / common::mean(&instrumented).max(1e-12) / 1e6
+    );
+    common::metric("obs.overhead_pct", overhead_pct);
+    common::metric(
+        "obs.instrumented_ingest_events_per_s",
+        n_events as f64 / common::mean(&instrumented).max(1e-12),
+    );
+
+    let _ = std::fs::remove_dir_all(&bench_dir);
 }
 
 /// Section 11: point-query serving latency (`ablation.latency`).

@@ -5,6 +5,7 @@
 //! reports for TGAT (data loading / hooks / forward / backward / ...).
 
 use crate::loader::LatencyHistogram;
+use crate::obs::{Label, MetricValue, RegistrySnapshot};
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -24,8 +25,11 @@ pub struct Profiler {
     mat_bytes: u64,
     mat_cycles: u64,
     /// Per-request-class serving latency (e.g. "point" / "scan"),
-    /// merged from [`crate::loader::QosStats`] histograms.
-    latency: HashMap<&'static str, LatencyHistogram>,
+    /// merged from [`crate::loader::QosStats`] histograms. Keyed on an
+    /// owned [`Label`] so dynamic class names (per-tenant rows, registry
+    /// metric names) work alongside the `&'static str` literals the
+    /// call sites pass.
+    latency: HashMap<Label, LatencyHistogram>,
 }
 
 impl Profiler {
@@ -68,8 +72,26 @@ impl Profiler {
     /// (repeat per class; histograms merge across calls). `class` is a
     /// stable label — use [`crate::loader::RequestClass::label`] when
     /// reporting pool stats.
-    pub fn add_request_latency(&mut self, class: &'static str, hist: &LatencyHistogram) {
-        self.latency.entry(class).or_default().merge(hist);
+    pub fn add_request_latency(&mut self, class: impl Into<Label>, hist: &LatencyHistogram) {
+        self.latency.entry(class.into()).or_default().merge(hist);
+    }
+
+    /// Fold a registry snapshot's latency histograms into the per-class
+    /// rows: the pool's `tgm_point_latency_us` / `tgm_scan_latency_us`
+    /// series land under their familiar "point" / "scan" classes, every
+    /// other histogram under its metric name. Counters and gauges are
+    /// skipped — they have no duration to fold.
+    pub fn fold_registry(&mut self, snap: &RegistrySnapshot) {
+        for m in &snap.metrics {
+            if let MetricValue::Histogram(h) = &m.value {
+                let class = match m.name.as_str() {
+                    "tgm_point_latency_us" => Label::from("point"),
+                    "tgm_scan_latency_us" => Label::from("scan"),
+                    other => Label::from(other),
+                };
+                self.add_request_latency(class, h);
+            }
+        }
     }
 
     /// The merged latency histogram of `class`, if any samples were
@@ -198,10 +220,10 @@ impl std::fmt::Display for Profiler {
                 cycles as f64 / (bytes as f64).max(1.0)
             )?;
         }
-        let mut classes: Vec<&&str> = self.latency.keys().collect();
+        let mut classes: Vec<&Label> = self.latency.keys().collect();
         classes.sort();
         for class in classes {
-            let h = &self.latency[*class];
+            let h = &self.latency[class];
             if h.is_empty() {
                 continue;
             }
@@ -297,6 +319,50 @@ mod tests {
         p.reset();
         assert!(p.request_latency("point").is_none());
         assert!(!format!("{p}").contains("latency["));
+    }
+
+    #[test]
+    fn fold_registry_maps_pool_series_to_point_and_scan_rows() {
+        use crate::obs::{MetricSnapshot, MetricValue, RegistrySnapshot};
+        let mut h = LatencyHistogram::new();
+        for us in [3u64, 40, 500] {
+            h.record_us(us);
+        }
+        let snap = RegistrySnapshot {
+            metrics: vec![
+                MetricSnapshot {
+                    name: "tgm_point_latency_us".to_string(),
+                    labels: vec![("pool".to_string(), "0".to_string())],
+                    value: MetricValue::Histogram(h.clone()),
+                },
+                MetricSnapshot {
+                    name: "tgm_scan_latency_us".to_string(),
+                    labels: vec![],
+                    value: MetricValue::Histogram(h.clone()),
+                },
+                MetricSnapshot {
+                    name: "tgm_seal_duration_us".to_string(),
+                    labels: vec![],
+                    value: MetricValue::Histogram(h.clone()),
+                },
+                MetricSnapshot {
+                    name: "tgm_wal_appends_total".to_string(),
+                    labels: vec![],
+                    value: MetricValue::Counter(7),
+                },
+            ],
+        };
+        let mut p = Profiler::new();
+        p.fold_registry(&snap);
+        // Two pool series fold under their familiar class names; other
+        // histograms keep their metric name; counters are skipped.
+        assert_eq!(p.request_latency("point").unwrap().count(), 3);
+        assert_eq!(p.request_latency("scan").unwrap().count(), 3);
+        assert_eq!(p.request_latency("tgm_seal_duration_us").unwrap().count(), 3);
+        assert!(p.request_latency("tgm_wal_appends_total").is_none());
+        // Folding the same snapshot again merges into the same rows.
+        p.fold_registry(&snap);
+        assert_eq!(p.request_latency("point").unwrap().count(), 6);
     }
 
     #[test]

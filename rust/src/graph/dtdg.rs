@@ -51,9 +51,11 @@ use crate::graph::discretize::{
 };
 use crate::graph::segment::{next_id, SnapshotCell, SnapshotId, StorageSnapshot};
 use crate::graph::storage::GraphStorage;
+use crate::obs::{self, Counter, Gauge, Histogram, Label};
 use crate::util::{TimeGranularity, Timestamp};
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// State shared between a [`DtdgView`] (owned by the store) and its
 /// [`DtdgHandle`]s (held by trainers / serving readers).
@@ -68,6 +70,21 @@ struct ViewShared {
     /// Cleared by the next successful refresh; refreshes never fail the
     /// seal that triggered them.
     last_error: Mutex<Option<String>>,
+    /// `store=<view_store_id>` label shared by this view's registry
+    /// series, so concurrent views never cross-contaminate.
+    store: Label,
+    /// `tgm_dtdg_refresh_duration_us{store}`.
+    refresh_hist: Histogram,
+    /// `tgm_dtdg_refreshes_total{store}`.
+    refreshes_total: Counter,
+    /// `tgm_dtdg_complete_lag_seconds{store}`: how far the newest sealed
+    /// edge runs ahead of the finalized-bucket watermark.
+    lag_gauge: Gauge,
+    /// `tgm_dtdg_error{store}`: 1 while the view is stalled on a refresh
+    /// error, 0 once a later refresh succeeds.
+    error_gauge: Gauge,
+    /// `tgm_dtdg_errors_total{store}`.
+    errors_total: Counter,
 }
 
 /// Reader handle to a registered DTDG materialized view.
@@ -181,6 +198,9 @@ pub(crate) struct DtdgView {
 
 impl DtdgView {
     pub(crate) fn new(target: TimeGranularity, reduce: ReduceOp) -> DtdgView {
+        let view_store_id = next_id();
+        let store = Label::from(view_store_id.to_string());
+        let registry = obs::registry();
         DtdgView {
             target,
             reduce,
@@ -201,13 +221,23 @@ impl DtdgView {
             retry: false,
             #[cfg(test)]
             fail_next: false,
-            view_store_id: next_id(),
+            view_store_id,
             generation: 0,
             shared: Arc::new(ViewShared {
                 cell: SnapshotCell::new(),
                 complete_until: AtomicI64::new(i64::MIN),
                 refreshes: AtomicU64::new(0),
                 last_error: Mutex::new(None),
+                refresh_hist: registry
+                    .histogram("tgm_dtdg_refresh_duration_us", &[("store", store.clone())]),
+                refreshes_total: registry
+                    .counter("tgm_dtdg_refreshes_total", &[("store", store.clone())]),
+                lag_gauge: registry
+                    .gauge("tgm_dtdg_complete_lag_seconds", &[("store", store.clone())]),
+                error_gauge: registry.gauge("tgm_dtdg_error", &[("store", store.clone())]),
+                errors_total: registry
+                    .counter("tgm_dtdg_errors_total", &[("store", store.clone())]),
+                store,
             }),
         }
     }
@@ -227,11 +257,26 @@ impl DtdgView {
         static_feat_dim: usize,
         static_feats: &Arc<Vec<f32>>,
     ) {
+        let started = Instant::now();
+        let span = obs::span("dtdg", "refresh").with_tenant(self.shared.store.clone());
         let res = self.refresh(sealed, native, num_nodes, static_feat_dim, static_feats);
+        drop(span);
         let mut slot = self.shared.last_error.lock().unwrap_or_else(|e| e.into_inner());
         match res {
             Ok(true) => {
-                *slot = None;
+                self.shared
+                    .refresh_hist
+                    .record_us(started.elapsed().as_micros().min(u64::MAX as u128) as u64);
+                self.shared.refreshes_total.inc();
+                if slot.take().is_some() {
+                    self.shared.error_gauge.set(0);
+                    obs::event(
+                        "dtdg",
+                        "error_cleared",
+                        Some(self.shared.store.clone()),
+                        "a later refresh succeeded",
+                    );
+                }
                 self.retry = false;
             }
             // A no-op refresh proves nothing about a previously recorded
@@ -241,6 +286,14 @@ impl DtdgView {
             Err(e) => {
                 *slot = Some(e.to_string());
                 self.retry = true;
+                self.shared.error_gauge.set(1);
+                self.shared.errors_total.inc();
+                obs::event(
+                    "dtdg",
+                    "refresh_error",
+                    Some(self.shared.store.clone()),
+                    e.to_string(),
+                );
             }
         }
     }
@@ -324,6 +377,7 @@ impl DtdgView {
         // are final; node events carry their own watermark.
         let last_edge_ts = sealed.last().expect("edge_total > 0").end_time();
         let edge_cut = origin + (last_edge_ts - origin).div_euclid(secs) * secs;
+        self.shared.lag_gauge.set(last_edge_ts.saturating_sub(edge_cut));
         let ek = self.pend_ts.partition_point(|&t| t < edge_cut);
         let nk = match sealed.iter().rev().find_map(|s| s.node_event_ts().last().copied()) {
             Some(last_node_ts) => {
@@ -564,6 +618,40 @@ mod tests {
         st.seal().unwrap();
         assert!(h.last_error().is_none());
         assert_eq!(h.refreshes(), 2);
+    }
+
+    /// Satellite (ISSUE 9): refresh failures surface as registry
+    /// metrics — an injected failure sets the per-view error gauge and
+    /// bumps the monotonic error counter; a later successful refresh
+    /// clears the gauge but never the counter.
+    #[test]
+    fn refresh_failure_sets_error_metrics_and_success_clears_the_gauge() {
+        let mut st = SegmentedStorage::new(4, SealPolicy::by_events(usize::MAX))
+            .with_granularity(TimeGranularity::Second);
+        let h = st.register_dtdg_view(TimeGranularity::Hour, ReduceOp::Sum).unwrap();
+        assert_eq!(h.shared.error_gauge.get(), 0);
+        assert_eq!(h.shared.errors_total.get(), 0, "fresh view, fresh per-store series");
+
+        st.append_edge(edge(0, 0, 1, 1.0)).unwrap();
+        st.append_edge(edge(4000, 1, 2, 2.0)).unwrap();
+        st.fail_next_dtdg_refresh();
+        st.seal().unwrap();
+        assert_eq!(h.shared.error_gauge.get(), 1, "failure raises the gauge");
+        assert_eq!(h.shared.errors_total.get(), 1, "and increments the counter");
+
+        st.refresh_dtdg_views();
+        assert!(h.last_error().is_none());
+        assert_eq!(h.shared.error_gauge.get(), 0, "success clears the gauge");
+        assert_eq!(h.shared.errors_total.get(), 1, "the counter stays monotonic");
+
+        // The series is visible in a registry snapshot under this
+        // view's own store label.
+        let store = h.shared.store.as_str();
+        let snap = crate::obs::registry().snapshot();
+        assert!(
+            snap.by_name("tgm_dtdg_errors_total").any(|m| m.label("store") == Some(store)),
+            "per-store error counter must appear in the registry snapshot"
+        );
     }
 
     #[test]

@@ -51,6 +51,7 @@ pub mod io;
 pub mod kernels;
 pub mod loader;
 pub mod models;
+pub mod obs;
 pub mod persist;
 pub mod runtime;
 pub mod serving;

@@ -53,8 +53,9 @@ use crate::loader::sched::{
     POINT_COST,
 };
 use crate::loader::{affinity, materialize_window, plan_batches, BatchBy, BatchPlan};
+use crate::obs::{self, Counter, Gauge, Histogram, Label};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -128,6 +129,9 @@ struct QueueInner {
 struct JobQueue {
     inner: Mutex<QueueInner>,
     ready: Condvar,
+    /// Live scheduler depth (`tgm_pool_queue_depth{pool}`), mirrored to
+    /// the registry on every enqueue/dequeue under the queue lock.
+    depth: Gauge,
 }
 
 impl JobQueue {
@@ -146,30 +150,66 @@ impl JobQueue {
             enqueued: Instant::now(),
             payload,
         })?;
+        self.depth.set(inner.sched.len() as i64);
         drop(inner);
         self.ready.notify_one();
         Ok(())
     }
 }
 
-/// Per-class / per-tenant completion accounting shared by the workers.
-#[derive(Default)]
-struct QosInner {
-    point: LatencyHistogram,
-    scan: LatencyHistogram,
-    completed: HashMap<(Arc<str>, RequestClass), u64>,
+/// Per-pool QoS accounting as a view over the global metrics registry:
+/// per-class latency histograms (`tgm_point_latency_us{pool}`,
+/// `tgm_scan_latency_us{pool}`) and per-`(tenant, class)` completion
+/// counters (`tgm_requests_completed_total{pool,tenant,class}`). The
+/// unique `pool` label keeps [`ServingPool::qos_stats`] exact per pool
+/// while the same series are scrapeable through `/metrics`.
+struct QosShared {
+    pool: Label,
+    point: Histogram,
+    scan: Histogram,
+    /// Counter-handle cache; the mutex is held only for the map lookup
+    /// (the first completion of a `(tenant, class)` registers its
+    /// series), the increment itself is lock-free.
+    completed: Mutex<HashMap<(Arc<str>, RequestClass), Counter>>,
 }
 
-type QosShared = Arc<Mutex<QosInner>>;
-
-fn record_completion(qos: &QosShared, tag: &QosTag, enqueued: Instant) {
-    let us = enqueued.elapsed().as_micros().min(u64::MAX as u128) as u64;
-    let mut g = qos.lock().unwrap_or_else(|e| e.into_inner());
-    match tag.class {
-        RequestClass::PointQuery => g.point.record_us(us),
-        RequestClass::BatchScan => g.scan.record_us(us),
+impl QosShared {
+    fn new() -> Arc<QosShared> {
+        static POOL_SEQ: AtomicU64 = AtomicU64::new(0);
+        let pool = Label::from(POOL_SEQ.fetch_add(1, Ordering::Relaxed).to_string());
+        let registry = obs::registry();
+        Arc::new(QosShared {
+            point: registry.histogram("tgm_point_latency_us", &[("pool", pool.clone())]),
+            scan: registry.histogram("tgm_scan_latency_us", &[("pool", pool.clone())]),
+            completed: Mutex::new(HashMap::new()),
+            pool,
+        })
     }
-    *g.completed.entry((Arc::clone(&tag.tenant), tag.class)).or_insert(0) += 1;
+
+    fn completion_counter(&self, tenant: &Arc<str>, class: RequestClass) -> Counter {
+        let mut g = self.completed.lock().unwrap_or_else(|e| e.into_inner());
+        g.entry((Arc::clone(tenant), class))
+            .or_insert_with(|| {
+                obs::registry().counter(
+                    "tgm_requests_completed_total",
+                    &[
+                        ("pool", self.pool.clone()),
+                        ("tenant", Label::from(tenant)),
+                        ("class", Label::from(class.label())),
+                    ],
+                )
+            })
+            .clone()
+    }
+}
+
+fn record_completion(qos: &Arc<QosShared>, tag: &QosTag, enqueued: Instant) {
+    let us = enqueued.elapsed().as_micros().min(u64::MAX as u128) as u64;
+    match tag.class {
+        RequestClass::PointQuery => qos.point.record_us(us),
+        RequestClass::BatchScan => qos.scan.record_us(us),
+    }
+    qos.completion_counter(&tag.tenant, tag.class).inc();
 }
 
 /// Snapshot of the pool's per-class QoS counters: enqueue-to-completion
@@ -384,8 +424,9 @@ pub struct ServingPool {
     /// Raised by `drop` before workers are joined; streams poll it so a
     /// wait on a dead pool fails fast instead of blocking forever.
     closed: Arc<AtomicBool>,
-    /// Per-class latency + per-tenant completion counters.
-    qos: QosShared,
+    /// Per-class latency + per-tenant completion counters (registry
+    /// view; see [`QosShared`]).
+    qos: Arc<QosShared>,
     handles: Vec<thread::JoinHandle<()>>,
     workers: usize,
 }
@@ -416,13 +457,14 @@ impl ServingPool {
 
     fn build(workers: usize, cpus: Vec<usize>, kind: SchedulerKind) -> ServingPool {
         let closed = Arc::new(AtomicBool::new(false));
-        let qos: QosShared = Arc::default();
+        let qos = QosShared::new();
         if workers == 0 {
             return ServingPool { queue: None, closed, qos, handles: Vec::new(), workers: 0 };
         }
         let queue = Arc::new(JobQueue {
             inner: Mutex::new(QueueInner { sched: kind.build(), shutdown: false }),
             ready: Condvar::new(),
+            depth: obs::registry().gauge("tgm_pool_queue_depth", &[("pool", qos.pool.clone())]),
         });
         let handles = (0..workers)
             .map(|w| {
@@ -443,6 +485,7 @@ impl ServingPool {
                                 queue.inner.lock().unwrap_or_else(|e| e.into_inner());
                             loop {
                                 if let Some(e) = inner.sched.dequeue() {
+                                    queue.depth.set(inner.sched.len() as i64);
                                     break Some(e);
                                 }
                                 if inner.shutdown {
@@ -468,6 +511,8 @@ impl ServingPool {
                                 // No hooks run here, but the same
                                 // panic fence as the batch path: a
                                 // worker must never strand a waiter.
+                                let span = obs::span("serving", "point_query")
+                                    .with_tenant(&tag.tenant);
                                 let res = std::panic::catch_unwind(
                                     std::panic::AssertUnwindSafe(|| pj.reader.execute(&pj.query)),
                                 )
@@ -476,6 +521,7 @@ impl ServingPool {
                                         "a point query panicked while executing".into(),
                                     )
                                 });
+                                drop(span);
                                 let _ = pj.reply.send(res);
                                 record_completion(&qos, &tag, enqueued);
                             }
@@ -493,10 +539,21 @@ impl ServingPool {
     }
 
     /// Snapshot of the per-class QoS counters (latency histograms +
-    /// per-tenant completions).
+    /// per-tenant completions). This is a view over the global metrics
+    /// registry (the same series `/metrics` exposes, filtered to this
+    /// pool's unique `pool` label), so it is exact per pool and zero
+    /// when the registry has been disabled via
+    /// [`crate::obs::MetricsRegistry::set_enabled`].
     pub fn qos_stats(&self) -> QosStats {
-        let g = self.qos.lock().unwrap_or_else(|e| e.into_inner());
-        QosStats { point: g.point.clone(), scan: g.scan.clone(), completed: g.completed.clone() }
+        let completed = {
+            let g = self.qos.completed.lock().unwrap_or_else(|e| e.into_inner());
+            g.iter().map(|(k, c)| (k.clone(), c.get())).collect()
+        };
+        QosStats {
+            point: self.qos.point.snapshot(),
+            scan: self.qos.scan.snapshot(),
+            completed,
+        }
     }
 
     /// Submit one point query under `tag` (class forced to
@@ -515,7 +572,10 @@ impl ServingPool {
         match &self.queue {
             None => {
                 let t0 = Instant::now();
-                let res = reader.execute(&query);
+                let res = {
+                    let _span = obs::span("serving", "point_query").with_tenant(&tag.tenant);
+                    reader.execute(&query)
+                };
                 record_completion(&self.qos, &tag, t0);
                 let _ = tx.send(Ok(res));
             }

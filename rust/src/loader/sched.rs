@@ -208,6 +208,17 @@ fn env_default_depth() -> usize {
 }
 
 fn backpressure(tag: &QosTag, queued: usize) -> TgmError {
+    // Registration is cheap relative to shedding load, and rejections
+    // are off the hot path by definition.
+    crate::obs::registry()
+        .counter(
+            "tgm_admission_rejections_total",
+            &[
+                ("tenant", crate::obs::Label::from(&tag.tenant)),
+                ("class", crate::obs::Label::from(tag.class.label())),
+            ],
+        )
+        .inc();
     TgmError::Backpressure(format!(
         "tenant `{}` {} queue is at its admission cap ({queued} queued); \
          retry after in-flight requests drain or raise the cap",
@@ -401,6 +412,24 @@ impl LatencyHistogram {
     /// Empty histogram.
     pub fn new() -> LatencyHistogram {
         LatencyHistogram::default()
+    }
+
+    /// Rebuild a histogram from raw parts — the bridge from the atomic
+    /// registry histograms in [`crate::obs`], which share this exact
+    /// bucket layout.
+    pub fn from_parts(counts: [u64; 40], total: u64, sum_us: u64, max_us: u64) -> LatencyHistogram {
+        LatencyHistogram { counts, total, sum_us, max_us }
+    }
+
+    /// Raw per-bucket counts (`counts[i]` holds samples with
+    /// `floor(log2(us + 1)) == i`).
+    pub fn bucket_counts(&self) -> &[u64; 40] {
+        &self.counts
+    }
+
+    /// Sum of all recorded samples in microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
     }
 
     /// Record one latency sample in microseconds.

@@ -1,0 +1,397 @@
+//! Exporters for the metrics registry and trace ring: Prometheus text
+//! exposition, JSON rendering, and a dependency-free scrape endpoint.
+//!
+//! [`ObsServer`] is a single `std::net::TcpListener` accept loop (the
+//! same no-external-deps discipline as the persist layer's raw
+//! mmap/flock FFI) answering:
+//!
+//! * `GET /metrics` — Prometheus text format (version 0.0.4) of the
+//!   global registry;
+//! * `GET /metrics.json` — the same snapshot as JSON;
+//! * `GET /trace` — the trace ring's retained events as JSON.
+//!
+//! Opt in by setting `TGM_METRICS_ADDR` (e.g. `127.0.0.1:9184`, or port
+//! `0` to let the OS pick) and calling [`ObsServer::from_env`]; the
+//! bound address is available via [`ObsServer::local_addr`] so smoke
+//! tests can scrape ephemeral ports. [`parse_prometheus`] parses the
+//! text format back (the round-trip property test pins that rendering
+//! loses nothing).
+
+use super::registry::{registry, MetricValue, RegistrySnapshot};
+use super::trace::{trace_ring, TraceEvent};
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Upper `le` bound of log₂ bucket `i`: bucket `i` holds samples in
+/// `[2^i - 1, 2^(i+1) - 2]` (see `LatencyHistogram`), and the last
+/// bucket is open-ended.
+fn bucket_le(i: usize) -> String {
+    if i >= 39 {
+        "+Inf".to_string()
+    } else {
+        ((1u128 << (i + 1)) - 2).to_string()
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut pairs: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some((k, v)) = extra {
+        pairs.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if pairs.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", pairs.join(","))
+    }
+}
+
+/// Render a registry snapshot in Prometheus text exposition format.
+pub fn render_prometheus(snap: &RegistrySnapshot) -> String {
+    let mut out = String::new();
+    let mut last_name: &str = "";
+    for m in &snap.metrics {
+        if m.name != last_name {
+            let kind = match &m.value {
+                MetricValue::Counter(_) => "counter",
+                MetricValue::Gauge(_) => "gauge",
+                MetricValue::Histogram(_) => "histogram",
+            };
+            let _ = writeln!(out, "# TYPE {} {kind}", m.name);
+            last_name = &m.name;
+        }
+        match &m.value {
+            MetricValue::Counter(v) => {
+                let _ = writeln!(out, "{}{} {v}", m.name, label_block(&m.labels, None));
+            }
+            MetricValue::Gauge(v) => {
+                let _ = writeln!(out, "{}{} {v}", m.name, label_block(&m.labels, None));
+            }
+            MetricValue::Histogram(h) => {
+                let mut cumulative = 0u64;
+                for (i, &c) in h.bucket_counts().iter().enumerate() {
+                    cumulative += c;
+                    let le = bucket_le(i);
+                    let _ = writeln!(
+                        out,
+                        "{}_bucket{} {cumulative}",
+                        m.name,
+                        label_block(&m.labels, Some(("le", &le))),
+                    );
+                }
+                let _ = writeln!(
+                    out,
+                    "{}_sum{} {}",
+                    m.name,
+                    label_block(&m.labels, None),
+                    h.sum_us()
+                );
+                let _ = writeln!(
+                    out,
+                    "{}_count{} {}",
+                    m.name,
+                    label_block(&m.labels, None),
+                    h.count()
+                );
+            }
+        }
+    }
+    out
+}
+
+fn escape_json(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_labels(labels: &[(String, String)]) -> String {
+    let pairs: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("\"{}\":\"{}\"", escape_json(k), escape_json(v)))
+        .collect();
+    format!("{{{}}}", pairs.join(","))
+}
+
+/// Render a registry snapshot as JSON.
+pub fn render_json(snap: &RegistrySnapshot) -> String {
+    let mut rows = Vec::with_capacity(snap.metrics.len());
+    for m in &snap.metrics {
+        let head = format!(
+            "{{\"name\":\"{}\",\"labels\":{},",
+            escape_json(&m.name),
+            json_labels(&m.labels)
+        );
+        let row = match &m.value {
+            MetricValue::Counter(v) => format!("{head}\"type\":\"counter\",\"value\":{v}}}"),
+            MetricValue::Gauge(v) => format!("{head}\"type\":\"gauge\",\"value\":{v}}}"),
+            MetricValue::Histogram(h) => {
+                let buckets: Vec<String> =
+                    h.bucket_counts().iter().map(|c| c.to_string()).collect();
+                format!(
+                    "{head}\"type\":\"histogram\",\"count\":{},\"sum\":{},\"max\":{},\
+                     \"buckets\":[{}]}}",
+                    h.count(),
+                    h.sum_us(),
+                    h.max_us(),
+                    buckets.join(","),
+                )
+            }
+        };
+        rows.push(row);
+    }
+    format!("{{\"metrics\":[{}]}}", rows.join(","))
+}
+
+/// Render trace events as JSON (oldest first).
+pub fn render_trace_json(events: &[TraceEvent]) -> String {
+    let rows: Vec<String> = events
+        .iter()
+        .map(|e| {
+            format!(
+                "{{\"ts_us\":{},\"subsystem\":\"{}\",\"kind\":\"{}\",\"tenant\":{},\
+                 \"dur_us\":{},\"detail\":\"{}\"}}",
+                e.ts_us,
+                escape_json(e.subsystem),
+                escape_json(e.kind),
+                match &e.tenant {
+                    Some(t) => format!("\"{}\"", escape_json(t.as_str())),
+                    None => "null".to_string(),
+                },
+                e.dur_us,
+                escape_json(&e.detail),
+            )
+        })
+        .collect();
+    format!("[{}]", rows.join(","))
+}
+
+/// One parsed Prometheus text-format sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedSample {
+    /// Series name as written (histograms appear as their `_bucket` /
+    /// `_sum` / `_count` series).
+    pub name: String,
+    /// Label pairs, sorted by key then value.
+    pub labels: Vec<(String, String)>,
+    /// Sample value.
+    pub value: f64,
+}
+
+/// Parse Prometheus text exposition back into sample lines (comments
+/// skipped). Inverse of [`render_prometheus`] for the value ranges the
+/// registry produces; the round-trip property test pins it.
+pub fn parse_prometheus(text: &str) -> Vec<ParsedSample> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = match line.rsplit_once(' ') {
+            Some((s, v)) => (s.trim(), v.trim()),
+            None => continue,
+        };
+        let value: f64 = match value {
+            "+Inf" => f64::INFINITY,
+            v => match v.parse() {
+                Ok(x) => x,
+                Err(_) => continue,
+            },
+        };
+        let (name, labels) = match series.split_once('{') {
+            None => (series.to_string(), Vec::new()),
+            Some((name, rest)) => {
+                let body = rest.strip_suffix('}').unwrap_or(rest);
+                let mut labels = Vec::new();
+                // Split on `","` boundaries outside quotes.
+                let mut pair = String::new();
+                let mut in_quotes = false;
+                let mut escaped = false;
+                let mut pairs: Vec<String> = Vec::new();
+                for c in body.chars() {
+                    if escaped {
+                        pair.push(c);
+                        escaped = false;
+                        continue;
+                    }
+                    match c {
+                        '\\' if in_quotes => {
+                            pair.push(c);
+                            escaped = true;
+                        }
+                        '"' => {
+                            pair.push(c);
+                            in_quotes = !in_quotes;
+                        }
+                        ',' if !in_quotes => {
+                            pairs.push(std::mem::take(&mut pair));
+                        }
+                        c => pair.push(c),
+                    }
+                }
+                if !pair.is_empty() {
+                    pairs.push(pair);
+                }
+                for p in pairs {
+                    let Some((k, v)) = p.split_once('=') else { continue };
+                    let v = v.trim().trim_matches('"');
+                    let mut un = String::with_capacity(v.len());
+                    let mut esc = false;
+                    for c in v.chars() {
+                        if esc {
+                            match c {
+                                'n' => un.push('\n'),
+                                c => un.push(c),
+                            }
+                            esc = false;
+                        } else if c == '\\' {
+                            esc = true;
+                        } else {
+                            un.push(c);
+                        }
+                    }
+                    labels.push((k.trim().to_string(), un));
+                }
+                labels.sort();
+                (name.to_string(), labels)
+            }
+        };
+        out.push(ParsedSample { name, labels, value });
+    }
+    out
+}
+
+/// Dependency-free scrape endpoint over the global registry + ring.
+///
+/// Binds on construction, serves from one background thread, and shuts
+/// down (unblocking its own accept) on drop.
+pub struct ObsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// Bind `addr` (host:port; port 0 picks a free port) and start
+    /// serving `/metrics`, `/metrics.json`, and `/trace`.
+    pub fn serve(addr: &str) -> std::io::Result<ObsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = thread::Builder::new().name("tgm-obs".into()).spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(mut stream) = conn {
+                    let _ = handle_conn(&mut stream);
+                }
+            }
+        })?;
+        Ok(ObsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// Start a server when `TGM_METRICS_ADDR` is set; `None` when unset
+    /// or empty. Bind failures are reported to stderr, not fatal — a
+    /// serving process must not die because its metrics port is taken.
+    pub fn from_env() -> Option<ObsServer> {
+        let addr = std::env::var("TGM_METRICS_ADDR").ok()?;
+        let addr = addr.trim();
+        if addr.is_empty() {
+            return None;
+        }
+        match ObsServer::serve(addr) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("[tgm-obs] failed to bind TGM_METRICS_ADDR={addr}: {e}");
+                None
+            }
+        }
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Self-connect to unblock the accept loop, then join it.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // Requests are tiny GETs; read until the request line is complete
+    // (or a small cap, dropping anything larger).
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    while !buf.windows(2).any(|w| w == b"\r\n") && buf.len() < 4096 {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => break,
+        }
+    }
+    let request = String::from_utf8_lossy(&buf);
+    let path = request
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("/")
+        .to_string();
+    let path = path.split('?').next().unwrap_or("/");
+    let (status, content_type, body) = match path {
+        "/metrics" => {
+            ("200 OK", "text/plain; version=0.0.4", render_prometheus(&registry().snapshot()))
+        }
+        "/metrics.json" => ("200 OK", "application/json", render_json(&registry().snapshot())),
+        "/trace" => ("200 OK", "application/json", render_trace_json(&trace_ring().snapshot())),
+        _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    stream.write_all(response.as_bytes())
+}

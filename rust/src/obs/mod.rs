@@ -1,0 +1,310 @@
+//! Unified observability layer: metrics registry, structured trace
+//! ring, and a scrapeable endpoint.
+//!
+//! Three pieces, each usable alone:
+//!
+//! * [`registry`](mod@registry) — a process-global
+//!   [`MetricsRegistry`] of sharded-atomic counters, gauges, and log₂
+//!   histograms with cheap labels (`tenant`, `class`, `pool`, …).
+//!   Ingest, serving, persist, and DTDG all record here; the
+//!   coordinator's `Profiler` folds registry snapshots into its report
+//!   instead of owning private state.
+//! * [`trace`] — a bounded lock-free ring of structured
+//!   [`TraceEvent`]s with [`span`] guards around
+//!   seal/compaction/recovery/WAL-sync/dtdg-refresh/point-query, plus
+//!   a slow-op stderr log (`TGM_TRACE`, `TGM_TRACE_SLOW_US`).
+//! * [`export`] — Prometheus text + JSON rendering and the
+//!   dependency-free [`ObsServer`] scrape endpoint
+//!   (`TGM_METRICS_ADDR`, paths `/metrics`, `/metrics.json`,
+//!   `/trace`).
+//!
+//! Run `examples/observability.rs` for the whole loop: multi-tenant
+//! ingest + point queries with a live scrape endpoint, ending in a
+//! registry snapshot and the slowest trace spans.
+
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use export::{
+    parse_prometheus, render_json, render_prometheus, render_trace_json, ObsServer, ParsedSample,
+};
+pub use registry::{
+    registry, Counter, Gauge, Histogram, Label, MetricSnapshot, MetricValue, MetricsRegistry,
+    RegistrySnapshot,
+};
+pub use trace::{event, span, trace_ring, Span, TraceEvent, TraceRing};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    /// ISSUE 9 satellite: ≥4 threads hammering one counter and one
+    /// histogram concurrently lose no updates — totals are exact.
+    #[test]
+    fn concurrent_hammering_keeps_exact_totals() {
+        // A private registry so totals cannot be perturbed by other
+        // tests instrumenting the global one in parallel.
+        let reg = MetricsRegistry::new();
+        let counter = reg.counter("obs_test_hammer_total", &[("class", Label::from("hammer"))]);
+        let hist = reg.histogram("obs_test_hammer_us", &[]);
+        let gauge = reg.gauge("obs_test_hammer_depth", &[]);
+        const THREADS: usize = 8;
+        const PER_THREAD: u64 = 50_000;
+        thread::scope(|scope| {
+            for t in 0..THREADS {
+                let counter = counter.clone();
+                let hist = hist.clone();
+                let gauge = gauge.clone();
+                scope.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        counter.inc();
+                        hist.record_us((t as u64 * PER_THREAD + i) % 1000);
+                        gauge.add(1);
+                    }
+                });
+            }
+        });
+        let want = THREADS as u64 * PER_THREAD;
+        assert_eq!(counter.get(), want, "lost counter updates");
+        assert_eq!(hist.count(), want, "lost histogram samples");
+        assert_eq!(gauge.get(), want as i64, "lost gauge increments");
+        let snap = hist.snapshot();
+        assert_eq!(snap.count(), want);
+        let bucket_total: u64 = snap.bucket_counts().iter().sum();
+        assert_eq!(bucket_total, want, "bucket counts must sum to the total");
+    }
+
+    /// Registry histograms use LatencyHistogram's exact bucket layout,
+    /// so snapshots merge losslessly with profiler state.
+    #[test]
+    fn histogram_snapshot_matches_latency_histogram() {
+        use crate::loader::sched::LatencyHistogram;
+        let reg = MetricsRegistry::new();
+        let hist = reg.histogram("obs_test_layout_us", &[]);
+        let mut reference = LatencyHistogram::new();
+        for us in [0u64, 1, 2, 3, 10, 100, 1_000, 65_535, 1 << 30, u64::MAX] {
+            hist.record_us(us);
+            reference.record_us(us);
+        }
+        let snap = hist.snapshot();
+        assert_eq!(snap.bucket_counts(), reference.bucket_counts());
+        assert_eq!(snap.count(), reference.count());
+        assert_eq!(snap.max_us(), reference.max_us());
+        assert_eq!(snap.percentile_us(50.0), reference.percentile_us(50.0));
+        assert_eq!(snap.percentile_us(99.0), reference.percentile_us(99.0));
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing_and_reenables() {
+        let reg = MetricsRegistry::new();
+        let counter = reg.counter("obs_test_disabled_total", &[]);
+        let hist = reg.histogram("obs_test_disabled_us", &[]);
+        let gauge = reg.gauge("obs_test_disabled_gauge", &[]);
+        reg.set_enabled(false);
+        assert!(!reg.is_enabled());
+        counter.add(5);
+        hist.record_us(123);
+        gauge.set(9);
+        assert_eq!(counter.get(), 0);
+        assert_eq!(hist.count(), 0);
+        assert_eq!(gauge.get(), 0);
+        reg.set_enabled(true);
+        counter.add(5);
+        hist.record_us(123);
+        gauge.set(9);
+        assert_eq!(counter.get(), 5);
+        assert_eq!(hist.count(), 1);
+        assert_eq!(gauge.get(), 9);
+    }
+
+    #[test]
+    fn handles_share_cells_by_name_and_labels() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("obs_test_shared_total", &[("tenant", Label::from("t0"))]);
+        // Label order must not matter for identity.
+        let b = reg.counter("obs_test_shared_total", &[("tenant", Label::from("t0"))]);
+        let other = reg.counter("obs_test_shared_total", &[("tenant", Label::from("t1"))]);
+        a.inc();
+        b.inc();
+        other.inc();
+        assert_eq!(a.get(), 2);
+        assert_eq!(other.get(), 1);
+        let snap = reg.snapshot();
+        let series: Vec<_> = snap.by_name("obs_test_shared_total").collect();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].label("tenant"), Some("t0"));
+    }
+
+    /// ISSUE 9 satellite: Prometheus text output parses back to the
+    /// same names, labels, and (cumulative) bucket counts across a
+    /// randomized registry population.
+    #[test]
+    fn prometheus_round_trip_preserves_values() {
+        // Deterministic xorshift so the property covers varied shapes
+        // without flaky seeds.
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for round in 0..20 {
+            let reg = MetricsRegistry::new();
+            let tenants = ["alpha", "beta", "g\"amma", "del\\ta", "ep\nsilon"];
+            let n_counters = (next() % 5) as usize + 1;
+            let n_hists = (next() % 3) as usize + 1;
+            for c in 0..n_counters {
+                let name: &'static str = match c {
+                    0 => "rt_a_total",
+                    1 => "rt_b_total",
+                    2 => "rt_c_total",
+                    3 => "rt_d_total",
+                    _ => "rt_e_total",
+                };
+                let tenant = tenants[(next() % tenants.len() as u64) as usize];
+                let counter = reg.counter(name, &[("tenant", Label::from(tenant))]);
+                counter.add(next() % 100_000);
+            }
+            for h in 0..n_hists {
+                let name: &'static str = match h {
+                    0 => "rt_lat_us",
+                    1 => "rt_dur_us",
+                    _ => "rt_len_us",
+                };
+                let hist = reg.histogram(name, &[("class", Label::from("point"))]);
+                for _ in 0..(next() % 200) {
+                    hist.record_us(next() % (1 << 22));
+                }
+            }
+            let gauge = reg.gauge("rt_depth", &[]);
+            gauge.set((next() % 1000) as i64 - 500);
+
+            let snap = reg.snapshot();
+            let text = render_prometheus(&snap);
+            let parsed = parse_prometheus(&text);
+
+            for m in &snap.metrics {
+                let find = |suffix: &str, extra: Option<(&str, &str)>| -> Option<f64> {
+                    let want_name = format!("{}{suffix}", m.name);
+                    let mut want_labels: Vec<(String, String)> = m.labels.clone();
+                    if let Some((k, v)) = extra {
+                        want_labels.push((k.to_string(), v.to_string()));
+                    }
+                    want_labels.sort();
+                    parsed
+                        .iter()
+                        .find(|p| p.name == want_name && p.labels == want_labels)
+                        .map(|p| p.value)
+                };
+                match &m.value {
+                    MetricValue::Counter(v) => {
+                        assert_eq!(
+                            find("", None),
+                            Some(*v as f64),
+                            "round {round}: counter {} lost",
+                            m.name
+                        );
+                    }
+                    MetricValue::Gauge(v) => {
+                        assert_eq!(find("", None), Some(*v as f64), "gauge {} lost", m.name);
+                    }
+                    MetricValue::Histogram(hist) => {
+                        assert_eq!(find("_count", None), Some(hist.count() as f64));
+                        assert_eq!(find("_sum", None), Some(hist.sum_us() as f64));
+                        let mut cumulative = 0u64;
+                        for (i, &c) in hist.bucket_counts().iter().enumerate() {
+                            cumulative += c;
+                            let le = if i >= 39 {
+                                "+Inf".to_string()
+                            } else {
+                                ((1u128 << (i + 1)) - 2).to_string()
+                            };
+                            assert_eq!(
+                                find("_bucket", Some(("le", &le))),
+                                Some(cumulative as f64),
+                                "round {round}: {} bucket {i} (le {le}) lost",
+                                m.name
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trace_ring_bounds_retains_latest_and_orders_events() {
+        let ring = TraceRing::with_capacity(8);
+        for i in 0..20u64 {
+            ring.record(TraceEvent {
+                ts_us: i,
+                subsystem: "test",
+                kind: "tick",
+                tenant: None,
+                dur_us: i,
+                detail: format!("e{i}"),
+            });
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 8, "ring must retain exactly its capacity");
+        let durs: Vec<u64> = snap.iter().map(|e| e.dur_us).collect();
+        assert_eq!(durs, (12..20).collect::<Vec<_>>(), "oldest-first, latest events retained");
+        // Drain empties; a fresh snapshot after drain sees nothing.
+        let drained = ring.drain();
+        assert_eq!(drained.len(), 8);
+        assert!(ring.snapshot().is_empty());
+    }
+
+    #[test]
+    fn span_guard_records_duration_and_tenant() {
+        {
+            let _s = span("obs-test", "span_probe").with_tenant("tenant-7").with_detail("d=1");
+        }
+        let events = trace_ring().snapshot();
+        let e = events
+            .iter()
+            .rev()
+            .find(|e| e.subsystem == "obs-test" && e.kind == "span_probe")
+            .expect("span must land in the global ring");
+        assert_eq!(e.tenant.as_ref().map(|t| t.as_str()), Some("tenant-7"));
+        assert_eq!(e.detail, "d=1");
+    }
+
+    #[test]
+    fn scrape_endpoint_serves_metrics_and_trace() {
+        use std::io::{Read as _, Write as _};
+        use std::net::TcpStream;
+
+        // Populate the global registry so the scrape has content.
+        let counter =
+            registry().counter("obs_test_scrape_total", &[("tenant", Label::from("scrape"))]);
+        counter.add(3);
+        event("obs-test", "scrape_probe", Some(Label::from("scrape")), "hello");
+
+        let server = ObsServer::serve("127.0.0.1:0").expect("bind an ephemeral port");
+        let addr = server.local_addr();
+        let fetch = |path: &str| -> String {
+            let mut s = TcpStream::connect(addr).unwrap();
+            write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\n\r\n").unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        };
+        let metrics = fetch("/metrics");
+        assert!(metrics.starts_with("HTTP/1.1 200 OK"), "{metrics}");
+        assert!(metrics.contains("obs_test_scrape_total{tenant=\"scrape\"} 3"), "{metrics}");
+        let json = fetch("/metrics.json");
+        assert!(json.contains("\"obs_test_scrape_total\""), "{json}");
+        let trace = fetch("/trace");
+        assert!(trace.contains("scrape_probe"), "{trace}");
+        let missing = fetch("/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        drop(server);
+        // The port is released after drop: a fresh bind to it succeeds.
+        let again = ObsServer::serve(&addr.to_string()).expect("rebind after drop");
+        drop(again);
+    }
+}

@@ -1,0 +1,441 @@
+//! Process-global metrics registry: sharded atomic counters, gauges,
+//! and log₂ latency histograms with cheap label support.
+//!
+//! Design goals, in order:
+//!
+//! * **lock-free hot path** — a [`Counter`]/[`Gauge`]/[`Histogram`]
+//!   handle is a clone of `Arc`'d atomic cells; recording is one or two
+//!   relaxed atomic RMWs, never a lock. Counters are sharded across
+//!   cache-line-padded cells so concurrent writers on different cores
+//!   do not bounce one line;
+//! * **~zero cost when disabled** — every handle checks one shared
+//!   `AtomicBool` and early-returns; [`MetricsRegistry::set_enabled`]
+//!   flips the whole registry at once (the `obs.overhead` ablation
+//!   section measures exactly this delta);
+//! * **registration is rare** — creating a handle takes a mutex over
+//!   the name→cells map, so instrument setup once (at pool/tenant/store
+//!   construction) and keep the handle, not per event.
+//!
+//! Histograms share [`LatencyHistogram`]'s exact bucket layout
+//! (`floor(log2(us + 1))`, 40 buckets), so a [`Histogram::snapshot`]
+//! merges losslessly with profiler state and renders as a Prometheus
+//! histogram with stable `le` bounds (see [`super::export`]).
+
+use crate::loader::sched::LatencyHistogram;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A small owned label value (`tenant`, `class`, `segment_level`, …).
+///
+/// Backed by `Arc<str>`: cloning is a refcount bump, so dynamic
+/// (per-tenant) labels work without leaking strings — the reason
+/// [`crate::coordinator::Profiler::add_request_latency`] keys on this
+/// instead of `&'static str`.
+#[derive(Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Label(Arc<str>);
+
+impl Label {
+    /// Label from anything string-like (copies once).
+    pub fn new(s: impl AsRef<str>) -> Label {
+        Label(Arc::from(s.as_ref()))
+    }
+
+    /// The label text.
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl From<&str> for Label {
+    fn from(s: &str) -> Label {
+        Label::new(s)
+    }
+}
+
+impl From<String> for Label {
+    fn from(s: String) -> Label {
+        Label(Arc::from(s.as_str()))
+    }
+}
+
+impl From<Arc<str>> for Label {
+    fn from(s: Arc<str>) -> Label {
+        Label(s)
+    }
+}
+
+impl From<&Arc<str>> for Label {
+    fn from(s: &Arc<str>) -> Label {
+        Label(Arc::clone(s))
+    }
+}
+
+impl std::ops::Deref for Label {
+    type Target = str;
+    fn deref(&self) -> &str {
+        &self.0
+    }
+}
+
+impl AsRef<str> for Label {
+    fn as_ref(&self) -> &str {
+        &self.0
+    }
+}
+
+impl std::borrow::Borrow<str> for Label {
+    fn borrow(&self) -> &str {
+        &self.0
+    }
+}
+
+impl fmt::Display for Label {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Label {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", &*self.0)
+    }
+}
+
+/// Counter shard count: enough to spread a few writer threads across
+/// cache lines without bloating every counter (8 × 64 B = 512 B each).
+const SHARDS: usize = 8;
+
+/// One cache-line-padded counter cell (no false sharing between
+/// neighboring shards).
+#[repr(align(64))]
+#[derive(Default)]
+struct PaddedU64(AtomicU64);
+
+/// Stable per-thread shard index: threads are striped over shards in
+/// registration order, so a fixed set of workers lands on distinct
+/// cells.
+fn shard_index() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static IDX: usize = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+    }
+    IDX.with(|i| *i)
+}
+
+#[derive(Default)]
+struct CounterCells {
+    shards: [PaddedU64; SHARDS],
+}
+
+impl CounterCells {
+    fn add(&self, v: u64) {
+        self.shards[shard_index()].0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Monotone counter handle (cheap to clone; all clones share cells).
+#[derive(Clone)]
+pub struct Counter {
+    cells: Arc<CounterCells>,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `v`.
+    pub fn add(&self, v: u64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.cells.add(v);
+        }
+    }
+
+    /// Current total (sums the shards).
+    pub fn get(&self) -> u64 {
+        self.cells.get()
+    }
+}
+
+/// Last-write-wins gauge handle.
+#[derive(Clone)]
+pub struct Gauge {
+    cell: Arc<AtomicI64>,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Gauge {
+    /// Set the current value.
+    pub fn set(&self, v: i64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.cell.store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Adjust by `delta` (negative to decrement).
+    pub fn add(&self, delta: i64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.cell.fetch_add(delta, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// Atomic mirror of [`LatencyHistogram`]: same 40-bucket
+/// `floor(log2(us + 1))` layout, recordable from any thread without a
+/// lock.
+struct HistogramCells {
+    counts: [AtomicU64; 40],
+    total: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for HistogramCells {
+    fn default() -> HistogramCells {
+        HistogramCells {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Histogram handle (cheap to clone; all clones share cells).
+#[derive(Clone)]
+pub struct Histogram {
+    cells: Arc<HistogramCells>,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Histogram {
+    /// Record one sample in microseconds (or any u64 magnitude — the
+    /// WAL uses the same log₂ buckets for group-commit window bytes).
+    pub fn record_us(&self, us: u64) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let c = &self.cells;
+        // Exactly LatencyHistogram::record_us's bucket, so snapshots
+        // merge losslessly with profiler histograms.
+        let bucket = (64 - us.saturating_add(1).leading_zeros() as usize - 1).min(39);
+        c.counts[bucket].fetch_add(1, Ordering::Relaxed);
+        c.total.fetch_add(1, Ordering::Relaxed);
+        c.sum_us.fetch_add(us, Ordering::Relaxed);
+        c.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.cells.total.load(Ordering::Relaxed)
+    }
+
+    /// Materialize into a [`LatencyHistogram`]. Field loads are
+    /// individually atomic, not mutually — a snapshot racing recorders
+    /// may be off by in-flight samples, which is fine for monitoring.
+    pub fn snapshot(&self) -> LatencyHistogram {
+        let c = &self.cells;
+        LatencyHistogram::from_parts(
+            std::array::from_fn(|i| c.counts[i].load(Ordering::Relaxed)),
+            c.total.load(Ordering::Relaxed),
+            c.sum_us.load(Ordering::Relaxed),
+            c.max_us.load(Ordering::Relaxed),
+        )
+    }
+}
+
+enum Cells {
+    Counter(Arc<CounterCells>),
+    Gauge(Arc<AtomicI64>),
+    Histogram(Arc<HistogramCells>),
+}
+
+/// Identity of one series: metric name + sorted label pairs.
+#[derive(PartialEq, Eq, Hash, Clone)]
+struct MetricId {
+    name: &'static str,
+    labels: Vec<(&'static str, Label)>,
+}
+
+fn metric_id(name: &'static str, labels: &[(&'static str, Label)]) -> MetricId {
+    let mut labels = labels.to_vec();
+    labels.sort_by(|a, b| a.0.cmp(b.0).then_with(|| a.1.cmp(&b.1)));
+    MetricId { name, labels }
+}
+
+/// A registry of named, labeled metric series.
+///
+/// One process-global instance lives behind [`registry()`]; local
+/// instances (`MetricsRegistry::new`) exist for tests and for exactly
+/// scoped accounting.
+pub struct MetricsRegistry {
+    enabled: Arc<AtomicBool>,
+    inner: Mutex<HashMap<MetricId, Cells>>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry::new()
+    }
+}
+
+impl MetricsRegistry {
+    /// Empty, enabled registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            enabled: Arc::new(AtomicBool::new(true)),
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Enable or disable every handle of this registry at once.
+    /// Disabled handles early-return on record (reads still work).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::SeqCst);
+    }
+
+    /// Whether handles currently record.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::SeqCst)
+    }
+
+    /// Counter handle for `name` + `labels` (created on first use;
+    /// subsequent calls return handles onto the same cells).
+    pub fn counter(&self, name: &'static str, labels: &[(&'static str, Label)]) -> Counter {
+        let id = metric_id(name, labels);
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let cells = match g.entry(id).or_insert_with(|| Cells::Counter(Arc::default())) {
+            Cells::Counter(c) => Arc::clone(c),
+            other => {
+                // Kind mismatch is a programming error; recover by
+                // replacing rather than panicking a serving process.
+                let c: Arc<CounterCells> = Arc::default();
+                *other = Cells::Counter(Arc::clone(&c));
+                c
+            }
+        };
+        Counter { cells, enabled: Arc::clone(&self.enabled) }
+    }
+
+    /// Gauge handle for `name` + `labels`.
+    pub fn gauge(&self, name: &'static str, labels: &[(&'static str, Label)]) -> Gauge {
+        let id = metric_id(name, labels);
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let cell = match g.entry(id).or_insert_with(|| Cells::Gauge(Arc::default())) {
+            Cells::Gauge(c) => Arc::clone(c),
+            other => {
+                let c: Arc<AtomicI64> = Arc::default();
+                *other = Cells::Gauge(Arc::clone(&c));
+                c
+            }
+        };
+        Gauge { cell, enabled: Arc::clone(&self.enabled) }
+    }
+
+    /// Histogram handle for `name` + `labels`.
+    pub fn histogram(&self, name: &'static str, labels: &[(&'static str, Label)]) -> Histogram {
+        let id = metric_id(name, labels);
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let cells = match g.entry(id).or_insert_with(|| Cells::Histogram(Arc::default())) {
+            Cells::Histogram(c) => Arc::clone(c),
+            other => {
+                let c: Arc<HistogramCells> = Arc::default();
+                *other = Cells::Histogram(Arc::clone(&c));
+                c
+            }
+        };
+        Histogram { cells, enabled: Arc::clone(&self.enabled) }
+    }
+
+    /// Point-in-time copy of every series, sorted by name then labels
+    /// (the order the exporters render in).
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut metrics: Vec<MetricSnapshot> = g
+            .iter()
+            .map(|(id, cells)| MetricSnapshot {
+                name: id.name.to_string(),
+                labels: id
+                    .labels
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), v.as_str().to_string()))
+                    .collect(),
+                value: match cells {
+                    Cells::Counter(c) => MetricValue::Counter(c.get()),
+                    Cells::Gauge(c) => MetricValue::Gauge(c.load(Ordering::Relaxed)),
+                    Cells::Histogram(c) => MetricValue::Histogram(LatencyHistogram::from_parts(
+                        std::array::from_fn(|i| c.counts[i].load(Ordering::Relaxed)),
+                        c.total.load(Ordering::Relaxed),
+                        c.sum_us.load(Ordering::Relaxed),
+                        c.max_us.load(Ordering::Relaxed),
+                    )),
+                },
+            })
+            .collect();
+        metrics.sort_by(|a, b| a.name.cmp(&b.name).then_with(|| a.labels.cmp(&b.labels)));
+        RegistrySnapshot { metrics }
+    }
+}
+
+/// One series in a [`RegistrySnapshot`].
+#[derive(Debug, Clone)]
+pub struct MetricSnapshot {
+    /// Metric name (e.g. `tgm_ingest_events_total`).
+    pub name: String,
+    /// Sorted label pairs.
+    pub labels: Vec<(String, String)>,
+    /// The value at snapshot time.
+    pub value: MetricValue,
+}
+
+impl MetricSnapshot {
+    /// The value of label `key`, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// A snapshot value, by metric kind.
+#[derive(Debug, Clone)]
+pub enum MetricValue {
+    /// Monotone counter total.
+    Counter(u64),
+    /// Gauge value.
+    Gauge(i64),
+    /// Full histogram state.
+    Histogram(LatencyHistogram),
+}
+
+/// Sorted, point-in-time copy of a registry (see
+/// [`MetricsRegistry::snapshot`]).
+#[derive(Debug, Clone, Default)]
+pub struct RegistrySnapshot {
+    /// Every series, sorted by name then labels.
+    pub metrics: Vec<MetricSnapshot>,
+}
+
+impl RegistrySnapshot {
+    /// Series with `name` (any labels).
+    pub fn by_name<'a>(&'a self, name: &'a str) -> impl Iterator<Item = &'a MetricSnapshot> {
+        self.metrics.iter().filter(move |m| m.name == name)
+    }
+}
+
+/// The process-global registry every subsystem instruments against.
+pub fn registry() -> &'static MetricsRegistry {
+    static REGISTRY: OnceLock<MetricsRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(MetricsRegistry::new)
+}

@@ -1,0 +1,228 @@
+//! Bounded structured trace ring: the "what just happened" companion to
+//! the metrics registry's "how much".
+//!
+//! A [`TraceRing`] is a fixed-capacity ring of [`TraceEvent`]s — one
+//! per interesting operation (seal, compaction round, recovery, WAL
+//! group sync, DTDG refresh, point query, error set/cleared). Writers
+//! never block: the write cursor is one atomic `fetch_add`, each slot
+//! is guarded by a `try_lock` (a contended slot counts a drop instead
+//! of waiting), so tracing is safe from the hottest paths. Readers take
+//! ordered copies via [`TraceRing::snapshot`] (non-destructive) or
+//! [`TraceRing::drain`] (consuming), oldest first.
+//!
+//! [`span`] returns a guard that records its wall-clock duration on
+//! drop. With `TGM_TRACE` set, spans at or above `TGM_TRACE_SLOW_US`
+//! microseconds (default 10 ms) are also logged to stderr immediately —
+//! a built-in slow-op log with zero setup.
+
+use super::registry::Label;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock, TryLockError};
+use std::time::Instant;
+
+/// Capacity of the process-global ring (events; ~a few hundred KB).
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// Default `TGM_TRACE_SLOW_US` when `TGM_TRACE` is set: 10 ms.
+const DEFAULT_SLOW_US: u64 = 10_000;
+
+/// One structured trace event.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Microseconds since process start (monotonic).
+    pub ts_us: u64,
+    /// Owning subsystem (`persist`, `serving`, `dtdg`, `graph`, …).
+    pub subsystem: &'static str,
+    /// Operation kind (`seal`, `compaction`, `wal_sync`, …).
+    pub kind: &'static str,
+    /// Tenant / store the operation ran for, when attributable.
+    pub tenant: Option<Label>,
+    /// Operation duration (0 for instantaneous events).
+    pub dur_us: u64,
+    /// Free-form context (byte counts, error text, …).
+    pub detail: String,
+}
+
+struct Slot {
+    seq: u64,
+    event: TraceEvent,
+}
+
+/// Fixed-capacity, never-blocking ring of [`TraceEvent`]s.
+pub struct TraceRing {
+    slots: Box<[Mutex<Option<Slot>>]>,
+    cursor: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl TraceRing {
+    /// Ring holding the latest `capacity` events.
+    pub fn with_capacity(capacity: usize) -> TraceRing {
+        let cap = capacity.max(1);
+        TraceRing {
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+            cursor: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one event. Never blocks: a slot currently held by a
+    /// reader (or another writer that wrapped a full lap) drops the
+    /// event and counts it in [`TraceRing::dropped`].
+    pub fn record(&self, event: TraceEvent) {
+        let seq = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(seq % self.slots.len() as u64) as usize];
+        match slot.try_lock() {
+            Ok(mut g) => *g = Some(Slot { seq, event }),
+            Err(TryLockError::Poisoned(p)) => *p.into_inner() = Some(Slot { seq, event }),
+            Err(TryLockError::WouldBlock) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Events dropped because their slot was contended at record time.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Copy of the retained events, oldest first (non-destructive).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.collect(false)
+    }
+
+    /// Remove and return the retained events, oldest first.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        self.collect(true)
+    }
+
+    fn collect(&self, take: bool) -> Vec<TraceEvent> {
+        let mut out: Vec<Slot> = Vec::new();
+        for slot in self.slots.iter() {
+            let mut g = slot.lock().unwrap_or_else(|e| e.into_inner());
+            if take {
+                if let Some(s) = g.take() {
+                    out.push(s);
+                }
+            } else if let Some(s) = g.as_ref() {
+                out.push(Slot { seq: s.seq, event: s.event.clone() });
+            }
+        }
+        out.sort_by_key(|s| s.seq);
+        out.into_iter().map(|s| s.event).collect()
+    }
+}
+
+/// The process-global ring all [`span`]s and [`event`]s feed.
+pub fn trace_ring() -> &'static TraceRing {
+    static RING: OnceLock<TraceRing> = OnceLock::new();
+    RING.get_or_init(|| TraceRing::with_capacity(DEFAULT_CAPACITY))
+}
+
+fn process_start() -> Instant {
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Microseconds since process start (monotonic, saturating).
+pub fn now_us() -> u64 {
+    process_start().elapsed().as_micros().min(u64::MAX as u128) as u64
+}
+
+/// Slow-op logging threshold: `Some(us)` when `TGM_TRACE` is set
+/// (non-empty, not `0`), with `TGM_TRACE_SLOW_US` overriding the
+/// default 10 ms.
+fn slow_threshold_us() -> Option<u64> {
+    static T: OnceLock<Option<u64>> = OnceLock::new();
+    *T.get_or_init(|| {
+        match std::env::var("TGM_TRACE") {
+            Ok(v) if !v.trim().is_empty() && v.trim() != "0" => {}
+            _ => return None,
+        }
+        Some(
+            std::env::var("TGM_TRACE_SLOW_US")
+                .ok()
+                .and_then(|v| v.trim().parse::<u64>().ok())
+                .unwrap_or(DEFAULT_SLOW_US),
+        )
+    })
+}
+
+/// Start a span guard: duration is measured from this call to drop,
+/// then recorded into the global ring (and stderr when slow logging is
+/// on and the span is at or above the threshold).
+pub fn span(subsystem: &'static str, kind: &'static str) -> Span {
+    Span { subsystem, kind, tenant: None, detail: String::new(), start: Instant::now() }
+}
+
+/// Record one instantaneous event (no duration) into the global ring.
+pub fn event(
+    subsystem: &'static str,
+    kind: &'static str,
+    tenant: Option<Label>,
+    detail: impl Into<String>,
+) {
+    trace_ring().record(TraceEvent {
+        ts_us: now_us(),
+        subsystem,
+        kind,
+        tenant,
+        dur_us: 0,
+        detail: detail.into(),
+    });
+}
+
+/// Duration-measuring guard; see [`span`].
+pub struct Span {
+    subsystem: &'static str,
+    kind: &'static str,
+    tenant: Option<Label>,
+    detail: String,
+    start: Instant,
+}
+
+impl Span {
+    /// Attribute the span to a tenant / store.
+    pub fn with_tenant(mut self, tenant: impl Into<Label>) -> Span {
+        self.tenant = Some(tenant.into());
+        self
+    }
+
+    /// Attach free-form context (kept on the recorded event).
+    pub fn with_detail(mut self, detail: impl Into<String>) -> Span {
+        self.detail = detail.into();
+        self
+    }
+
+    /// Replace the context after the span started (e.g. byte counts
+    /// known only once the operation finished).
+    pub fn set_detail(&mut self, detail: impl Into<String>) {
+        self.detail = detail.into();
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let dur_us = self.start.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        if let Some(threshold) = slow_threshold_us() {
+            if dur_us >= threshold {
+                eprintln!(
+                    "[tgm-trace] slow {}.{} {}us tenant={} {}",
+                    self.subsystem,
+                    self.kind,
+                    dur_us,
+                    self.tenant.as_ref().map(|t| t.as_str()).unwrap_or("-"),
+                    self.detail,
+                );
+            }
+        }
+        trace_ring().record(TraceEvent {
+            ts_us: now_us(),
+            subsystem: self.subsystem,
+            kind: self.kind,
+            tenant: self.tenant.take(),
+            dur_us,
+            detail: std::mem::take(&mut self.detail),
+        });
+    }
+}

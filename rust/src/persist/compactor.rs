@@ -43,6 +43,7 @@
 use crate::error::Result;
 use crate::graph::segment::merge_segments;
 use crate::graph::{SegmentedStorage, SnapshotCell};
+use crate::obs::{self, Label};
 use crate::persist::{format, PENDING_SUFFIX};
 use std::io::Write;
 use std::ops::Range;
@@ -50,7 +51,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Process-wide counter for pending-output names, so two compactors
 /// (e.g. over different tenants sharing a directory tree, or a
@@ -155,6 +156,12 @@ pub struct Compactor {
     handle: Option<thread::JoinHandle<()>>,
     compactions: Arc<AtomicUsize>,
     last_error: Arc<Mutex<Option<String>>>,
+    /// `tgm_compactor_error{compactor}`: 1 while the most recent round
+    /// failed, 0 once a later round succeeds (mirrors
+    /// [`Compactor::last_error`] as a scrapeable registry series).
+    error_gauge: obs::Gauge,
+    /// `tgm_compactor_errors_total{compactor}` (monotonic).
+    errors_total: obs::Counter,
 }
 
 impl Compactor {
@@ -170,19 +177,54 @@ impl Compactor {
         let stop = Arc::new(AtomicBool::new(false));
         let compactions = Arc::new(AtomicUsize::new(0));
         let last_error = Arc::new(Mutex::new(None));
+        // Per-instance registry series: concurrent compactors (one per
+        // tenant, or tests running in parallel) never share a gauge.
+        static COMPACTOR_SEQ: AtomicU64 = AtomicU64::new(0);
+        let compactor_id =
+            Label::from(COMPACTOR_SEQ.fetch_add(1, Ordering::Relaxed).to_string());
+        let registry = obs::registry();
+        let error_gauge =
+            registry.gauge("tgm_compactor_error", &[("compactor", compactor_id.clone())]);
+        let errors_total = registry
+            .counter("tgm_compactor_errors_total", &[("compactor", compactor_id.clone())]);
         let handle = {
             let stop = Arc::clone(&stop);
             let compactions = Arc::clone(&compactions);
             let last_error = Arc::clone(&last_error);
+            let error_gauge = error_gauge.clone();
+            let errors_total = errors_total.clone();
             thread::spawn(move || {
                 while !stop.load(Ordering::SeqCst) {
+                    let round = Instant::now();
                     match try_compact(&store, &cell, &cfg) {
                         Ok(true) => {
                             compactions.fetch_add(1, Ordering::SeqCst);
                             // A successful round supersedes any earlier
                             // transient failure: the health signal
                             // reflects the *current* state.
-                            *last_error.lock().unwrap_or_else(|p| p.into_inner()) = None;
+                            let had_error = last_error
+                                .lock()
+                                .unwrap_or_else(|p| p.into_inner())
+                                .take()
+                                .is_some();
+                            if had_error {
+                                error_gauge.set(0);
+                                obs::event(
+                                    "persist",
+                                    "compactor_error_cleared",
+                                    Some(compactor_id.clone()),
+                                    "a later round succeeded",
+                                );
+                            }
+                            obs::trace_ring().record(obs::TraceEvent {
+                                ts_us: obs::trace::now_us(),
+                                subsystem: "persist",
+                                kind: "compaction_round",
+                                tenant: Some(compactor_id.clone()),
+                                dur_us: round.elapsed().as_micros().min(u64::MAX as u128)
+                                    as u64,
+                                detail: String::new(),
+                            });
                             // Re-scan immediately: a burst of seals may
                             // have piled up more than one round's worth.
                         }
@@ -190,13 +232,21 @@ impl Compactor {
                         Err(e) => {
                             *last_error.lock().unwrap_or_else(|p| p.into_inner()) =
                                 Some(e.to_string());
+                            error_gauge.set(1);
+                            errors_total.inc();
+                            obs::event(
+                                "persist",
+                                "compactor_error",
+                                Some(compactor_id.clone()),
+                                e.to_string(),
+                            );
                             thread::sleep(cfg.interval);
                         }
                     }
                 }
             })
         };
-        Compactor { stop, handle: Some(handle), compactions, last_error }
+        Compactor { stop, handle: Some(handle), compactions, last_error, error_gauge, errors_total }
     }
 
     /// Compaction rounds completed so far.
@@ -448,6 +498,58 @@ mod tests {
         // The pinned old generation still reads its own (pre-compaction)
         // segment stack.
         assert!(baseline.num_segments() >= 8);
+    }
+
+    /// Satellite (ISSUE 9): a failed round raises the per-compactor
+    /// error gauge and bumps the monotonic counter; a later successful
+    /// round clears the gauge (never the counter), mirroring
+    /// `last_error`'s set-then-clear contract as registry series.
+    #[test]
+    fn compactor_error_metrics_set_and_clear_with_round_outcomes() {
+        let dir = std::env::temp_dir()
+            .join(format!("tgm_persist_compactor_err_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut st = SegmentedStorage::new(8, SealPolicy::by_events(4))
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        for i in 0..32i64 {
+            st.append_edge(edge(i * 10, (i % 5) as u32, 5 + (i % 3) as u32)).unwrap();
+        }
+        let cell = SnapshotCell::new();
+        let store = Arc::new(Mutex::new(st));
+        // Yank the directory: each round's pending-segment write fails
+        // (the store itself is not poisoned — the failure is on the
+        // compactor's side of the protocol, before any install).
+        std::fs::remove_dir_all(&dir).unwrap();
+        let compactor = Compactor::spawn(
+            Arc::clone(&store),
+            cell.clone(),
+            CompactorConfig {
+                min_sealed: 1,
+                interval: Duration::from_millis(1),
+                ..CompactorConfig::default()
+            },
+        );
+        assert!(
+            wait_until(Duration::from_secs(10), || compactor.error_gauge.get() == 1),
+            "a failed round must raise the error gauge"
+        );
+        assert!(compactor.errors_total.get() >= 1);
+        assert!(compactor.last_error().is_some());
+
+        // Restore the directory: a later round succeeds and clears the
+        // gauge while the counter stays put.
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(
+            wait_until(Duration::from_secs(10), || {
+                compactor.error_gauge.get() == 0 && compactor.compactions() > 0
+            }),
+            "a successful round must clear the gauge: {:?}",
+            compactor.last_error()
+        );
+        assert!(compactor.last_error().is_none());
+        assert!(compactor.errors_total.get() >= 1, "the counter is monotonic");
+        compactor.stop();
     }
 
     #[test]

@@ -70,9 +70,11 @@ use crate::error::{Result, TgmError};
 use crate::graph::events::{EdgeEvent, NodeEvent};
 use crate::graph::storage::GraphStorage;
 use crate::graph::{SealPolicy, SegmentedStorage};
+use crate::obs;
 use crate::util::TimeGranularity;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Manifest file name inside a durable store directory.
 pub const MANIFEST_FILE: &str = "MANIFEST";
@@ -412,6 +414,8 @@ impl Durability {
         meta: &StoreMeta<'_>,
     ) -> Result<PathBuf> {
         self.check_poisoned()?;
+        let start = Instant::now();
+        let mut span = obs::span("persist", "seal");
         let seq = self.next_seq;
         let path = segment_path(self.dir(), seq);
         format::write_segment(&path, seg)?;
@@ -423,6 +427,12 @@ impl Durability {
         self.wal_epoch += 1;
         self.next_seq = seq + 1;
         self.seqs = seqs;
+        let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        span.set_detail(format!("seq={seq} bytes={bytes}"));
+        let r = obs::registry();
+        r.histogram("tgm_seal_duration_us", &[])
+            .record_us(start.elapsed().as_micros().min(u64::MAX as u128) as u64);
+        r.counter("tgm_seal_bytes_total", &[]).add(bytes);
         Ok(path)
     }
 
@@ -443,6 +453,8 @@ impl Durability {
         meta: &StoreMeta<'_>,
     ) -> Result<PathBuf> {
         self.check_poisoned()?;
+        let began = Instant::now();
+        let mut span = obs::span("persist", "compaction");
         let seq = self.next_seq;
         let path = segment_path(self.dir(), seq);
         match prewritten {
@@ -466,6 +478,13 @@ impl Durability {
             // by the manifest and gets swept on the next recovery.
             let _ = std::fs::remove_file(segment_path(self.dir(), s));
         }
+        let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        span.set_detail(format!("seq={seq} replaced={replaced} bytes={bytes}"));
+        let r = obs::registry();
+        r.counter("tgm_compactions_total", &[]).inc();
+        r.histogram("tgm_compaction_duration_us", &[])
+            .record_us(began.elapsed().as_micros().min(u64::MAX as u128) as u64);
+        r.counter("tgm_compaction_bytes_total", &[]).add(bytes);
         Ok(path)
     }
 }
@@ -518,6 +537,8 @@ pub fn recover_with_report(
 ) -> Result<(SegmentedStorage, RecoveryReport)> {
     // The lock comes first: it fences a live writer (this process or
     // another) off the directory before any file is read or swept.
+    let mut span = obs::span("persist", "recovery")
+        .with_detail(policy.dir.display().to_string());
     let dir_lock = DirLock::acquire(&policy.dir)?;
     let man = format::read_manifest(&policy.dir.join(MANIFEST_FILE))?;
     let mut sealed = Vec::with_capacity(man.segments.len());
@@ -617,6 +638,25 @@ pub fn recover_with_report(
     }
     store.commit_recovered_wal()?;
     store.seal_if_due()?;
+    span.set_detail(format!(
+        "segments={} replayed={} torn_tail={} dropped_bytes={} stale_wal={}",
+        report.sealed_segments,
+        report.replayed_events,
+        report.torn_tail,
+        report.dropped_bytes,
+        report.stale_wal_discarded
+    ));
+    drop(span);
+    let r = obs::registry();
+    r.counter("tgm_recovery_sealed_segments_total", &[]).add(report.sealed_segments as u64);
+    r.counter("tgm_recovery_replayed_events_total", &[]).add(report.replayed_events as u64);
+    r.counter("tgm_recovery_dropped_bytes_total", &[]).add(report.dropped_bytes as u64);
+    if report.torn_tail {
+        r.counter("tgm_recovery_torn_tail_total", &[]).inc();
+    }
+    if report.stale_wal_discarded {
+        r.counter("tgm_recovery_stale_wal_discarded_total", &[]).inc();
+    }
     Ok((store, report))
 }
 

@@ -64,13 +64,14 @@
 
 use crate::error::{Result, TgmError};
 use crate::graph::events::{EdgeEvent, Event, NodeEvent};
+use crate::obs::{self, Counter, Histogram};
 use crate::persist::format::{
     checksum, checksum_seeded, sync_parent_dir, tmp_sibling, Dec, FORMAT_VERSION,
 };
 use std::fs::File;
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 const WAL_MAGIC: &[u8; 8] = b"TGMWAL01";
 /// magic + version + epoch.
@@ -78,6 +79,26 @@ const HEADER_LEN: usize = 8 + 4 + 8;
 
 const KIND_EDGE: u8 = 0;
 const KIND_NODE: u8 = 1;
+
+/// Process-wide WAL metric handles, resolved once: the append hot path
+/// bumps shared cells and never touches the registry map.
+struct WalMetrics {
+    appends: Counter,
+    fsyncs: Counter,
+    group_window: Histogram,
+}
+
+fn wal_metrics() -> &'static WalMetrics {
+    static M: OnceLock<WalMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = obs::registry();
+        WalMetrics {
+            appends: r.counter("tgm_wal_appends_total", &[]),
+            fsyncs: r.counter("tgm_wal_fsyncs_total", &[]),
+            group_window: r.histogram("tgm_wal_group_window_records", &[]),
+        }
+    })
+}
 
 fn decode_payload(kind: u8, payload: &[u8]) -> Result<Event> {
     let mut d = Dec::new(payload, "wal record");
@@ -179,9 +200,14 @@ impl WalSync {
             }
             g.leading = true;
             let covered = g.written;
+            let prev_synced = g.synced;
             let file = Arc::clone(&g.file);
             drop(g);
+            let window = covered.saturating_sub(prev_synced);
+            let span =
+                obs::span("persist", "wal_sync").with_detail(format!("window={window}"));
             let res = file.sync_data();
+            drop(span);
             g = self.shared.lock();
             g.leading = false;
             match res {
@@ -190,6 +216,9 @@ impl WalSync {
                         g.synced = g.synced.max(covered);
                     }
                     g.syncs += 1;
+                    let m = wal_metrics();
+                    m.fsyncs.inc();
+                    m.group_window.record_us(window);
                 }
                 Err(e) => g.error = Some(e.to_string()),
             }
@@ -382,9 +411,13 @@ impl WalWriter {
         let sum = checksum_seeded(checksum(&[kind]), &self.scratch[5..]);
         self.scratch.extend_from_slice(&sum.to_le_bytes());
         (&*self.file).write_all(&self.scratch)?;
+        wal_metrics().appends.inc();
         match &self.mode {
             SyncMode::Flush => {}
-            SyncMode::Each => self.file.sync_data()?,
+            SyncMode::Each => {
+                self.file.sync_data()?;
+                wal_metrics().fsyncs.inc();
+            }
             SyncMode::Group(shared) => shared.lock().written += 1,
         }
         Ok(())

@@ -37,10 +37,12 @@ use crate::hooks::manager::HookManager;
 use crate::loader::{
     BatchBy, PointTicket, PooledStream, QosTag, RequestClass, ServingPool, StreamConfig,
 };
+use crate::obs::{self, Counter, Gauge, Label};
 use crate::persist::{self, Compactor, CompactorConfig, DurabilityPolicy};
 use crate::util::TimeGranularity;
 use std::collections::HashMap;
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Name of one tenant graph (routing key).
@@ -197,6 +199,15 @@ pub struct TenantHandle {
     adjacency: AdjacencyCache,
     /// Memoized [`PointReader`] for the currently-published generation.
     reader: Mutex<Option<PointReader>>,
+    /// `tgm_ingest_events_total{tenant}` (cached registry handle).
+    ingested: Counter,
+    /// `tgm_published_generation{tenant}`.
+    generation_gauge: Gauge,
+    /// `tgm_snapshot_age_us{tenant}`: µs between the last publish and
+    /// the most recent pin (0 right after a publish).
+    snapshot_age: Gauge,
+    /// Monotonic µs timestamp of the last publish (0 before the first).
+    published_at_us: AtomicU64,
 }
 
 impl TenantHandle {
@@ -226,6 +237,8 @@ impl TenantHandle {
                 store
             }
         };
+        let tenant = Label::from(id.as_str());
+        let registry = obs::registry();
         let handle = TenantHandle {
             id,
             writer: Arc::new(Mutex::new(store)),
@@ -234,15 +247,30 @@ impl TenantHandle {
             qos: cfg.qos,
             adjacency: AdjacencyCache::new(),
             reader: Mutex::new(None),
+            ingested: registry
+                .counter("tgm_ingest_events_total", &[("tenant", tenant.clone())]),
+            generation_gauge: registry
+                .gauge("tgm_published_generation", &[("tenant", tenant.clone())]),
+            snapshot_age: registry.gauge("tgm_snapshot_age_us", &[("tenant", tenant)]),
+            published_at_us: AtomicU64::new(0),
         };
         // A recovered tenant serves its pre-crash data immediately.
         {
             let mut w = handle.writer();
             if w.total_edges() > 0 {
-                w.publish_to(&handle.published)?;
+                let snap = w.publish_to(&handle.published)?;
+                handle.note_publish(snap.generation());
             }
         }
         Ok(handle)
+    }
+
+    /// Record a publish in the registry: generation gauge, publish
+    /// timestamp (for the snapshot-age gauge), age reset to 0.
+    fn note_publish(&self, generation: u64) {
+        self.generation_gauge.set(generation.min(i64::MAX as u64) as i64);
+        self.published_at_us.store(obs::trace::now_us().max(1), Ordering::Relaxed);
+        self.snapshot_age.set(0);
     }
 
     fn writer(&self) -> std::sync::MutexGuard<'_, SegmentedStorage> {
@@ -285,6 +313,7 @@ impl TenantHandle {
                 return Err(e);
             }
         }
+        self.ingested.add(n as u64);
         Ok(n)
     }
 
@@ -295,15 +324,23 @@ impl TenantHandle {
     pub fn publish(&self) -> Result<Arc<StorageSnapshot>> {
         let mut w = self.writer();
         w.maybe_compact(self.compact_after)?;
-        w.publish_to(&self.published)
+        let snap = w.publish_to(&self.published)?;
+        self.note_publish(snap.generation());
+        Ok(snap)
     }
 
     /// Pin the latest published generation. Typed error before the first
     /// [`TenantHandle::publish`].
     pub fn pin(&self) -> Result<Arc<StorageSnapshot>> {
-        self.published.pin().ok_or_else(|| {
+        let snap = self.published.pin().ok_or_else(|| {
             TgmError::Serving(format!("tenant `{}` has not published a snapshot yet", self.id))
-        })
+        })?;
+        let published_at = self.published_at_us.load(Ordering::Relaxed);
+        if published_at != 0 {
+            let age = obs::trace::now_us().saturating_sub(published_at);
+            self.snapshot_age.set(age.min(i64::MAX as u64) as i64);
+        }
+        Ok(snap)
     }
 
     /// Generation currently published (`None` before the first publish).
