@@ -8,15 +8,18 @@
 //! destructors, no flushes) after a configured number of acknowledged
 //! appends, mid-active-segment. The orchestrator then:
 //!
-//! 1. **recovers** the store from the directory — sealed columns served
-//!    **zero-copy from an mmap** of the segment files
-//!    (`DurabilityPolicy::with_mmap`) — and verifies it holds *exactly
-//!    the acknowledged prefix* (byte-compared against an in-memory
-//!    store fed the same events);
+//! 1. **recovers** the store through the serving tier — one
+//!    `ServingConfig::primary(..).mmap().group_commit()` registration
+//!    whose sealed columns serve **zero-copy from an mmap** of the
+//!    segment files — surfaces the recovery diagnostics via
+//!    `TenantHandle::recovery_report`, and verifies the recovered
+//!    publication holds *exactly the acknowledged prefix*
+//!    (byte-compared against an in-memory store fed the same events);
 //! 2. **resumes** ingestion of the remaining stream — appends
-//!    group-committed per chunk — while a background `Compactor`
-//!    merges **tiered** runs of sealed segment files off the write
-//!    path, publishing generations through a `SnapshotCell`;
+//!    group-committed per chunk by `TenantHandle::ingest` — while a
+//!    background `Compactor` attached to the tenant merges **tiered**
+//!    runs of sealed segment files off the write path, publishing
+//!    generations through the tenant's cell;
 //! 3. verifies the final snapshot is **byte-identical** to an
 //!    uninterrupted run, and that the prequential EdgeBank MRR over the
 //!    recovered store matches the uninterrupted run's exactly.
@@ -34,8 +37,8 @@
 //! Environment knobs: `TGM_SCALE` (default 0.2), `TGM_KILL_AT`
 //! (acknowledged events before the kill; default 640 = 2.5 segments).
 
-use std::sync::{Arc, Mutex};
-use tgm::graph::{DGData, SealPolicy, SegmentedStorage, SnapshotCell, StorageSnapshot, Task};
+use std::sync::Arc;
+use tgm::graph::{DGData, SealPolicy, SegmentedStorage, StorageSnapshot, Task};
 use tgm::hooks::batch::attr;
 use tgm::hooks::negatives::EvalNegativeSampler;
 use tgm::hooks::{DstRange, HookManager};
@@ -43,7 +46,8 @@ use tgm::io::gen;
 use tgm::io::stream::{EventSource, ReplaySource};
 use tgm::loader::{BatchBy, DGDataLoader};
 use tgm::models::{EdgeBank, EdgeBankMode};
-use tgm::persist::{self, Compactor, CompactorConfig, DurabilityPolicy};
+use tgm::persist::{CompactorConfig, DurabilityPolicy};
+use tgm::serving::{ServingConfig, TenantRouter};
 use tgm::util::stats;
 
 const SEAL_EVERY: usize = 256;
@@ -160,14 +164,26 @@ fn main() -> tgm::Result<()> {
     assert!(!status.success(), "the child must die abnormally, got {status}");
     println!("child died as planned ({status})");
 
-    // 2. Recover: exactly the acknowledged prefix comes back, the
-    //    sealed columns mmap-served, and subsequent appends
-    //    group-committed (the child's stale LOCK file does not block —
-    //    the kernel released its flock at death).
-    let (mut recovered, report) = persist::recover_with_report(
-        SealPolicy::by_events(SEAL_EVERY),
-        DurabilityPolicy::new(&dir).with_mmap().with_group_commit(),
+    // 2. Recover through the serving tier: one registration rebuilds
+    //    the store (sealed columns mmap-served, subsequent appends
+    //    group-committed), republishes the pre-crash generation, and
+    //    surfaces the recovery diagnostics — the child's stale LOCK
+    //    file does not block, because the kernel released its flock at
+    //    death.
+    let mut router = TenantRouter::new();
+    let tenant = router.add_primary(
+        "wiki",
+        ServingConfig::primary(data.storage().num_nodes(), &dir)
+            .seal(SealPolicy::by_events(SEAL_EVERY))
+            // The background compactor attached below owns compaction.
+            .compact_after(usize::MAX)
+            .mmap()
+            .group_commit(),
     )?;
+    let report = tenant
+        .recovery_report()
+        .expect("a tenant registered over an existing store carries a recovery report")
+        .clone();
     println!(
         "recovery report: {} sealed segments, {} WAL events replayed, torn tail: {} \
          ({} bytes dropped)",
@@ -179,7 +195,8 @@ fn main() -> tgm::Result<()> {
         expected_prefix.append(ev)?;
     }
     {
-        let rec = recovered.snapshot()?;
+        // The recovered generation is already published — pin it.
+        let rec = tenant.pin()?;
         let exp = expected_prefix.snapshot()?;
         assert_eq!(rec.num_edges(), exp.num_edges(), "recovered edge count");
         assert_eq!(rec.edge_ts(), exp.edge_ts(), "recovered timestamps");
@@ -190,17 +207,15 @@ fn main() -> tgm::Result<()> {
         println!(
             "recovered the acknowledged prefix: {} edges across {} segments + WAL tail",
             rec.num_edges(),
-            recovered.num_sealed_segments(),
+            tenant.num_sealed_segments(),
         );
     }
 
     // 3. Resume ingestion of the rest while a background compactor
-    //    merges sealed segment files and publishes generations.
-    let cell = SnapshotCell::new();
-    let store = Arc::new(Mutex::new(recovered));
-    let compactor = Compactor::spawn(
-        Arc::clone(&store),
-        cell.clone(),
+    //    merges sealed segment files and publishes generations through
+    //    the tenant's cell. Each ingest chunk is acknowledged by one
+    //    group-commit fsync.
+    let compactor = tenant.attach_compactor(
         // Low threshold so even the small CI-scale run compacts.
         CompactorConfig { min_sealed: 2, ..Default::default() },
     );
@@ -209,20 +224,14 @@ fn main() -> tgm::Result<()> {
         if chunk.is_empty() {
             break;
         }
-        let mut w = store.lock().unwrap_or_else(|p| p.into_inner());
-        for ev in chunk {
-            w.append(ev)?;
-        }
-        // Group commit: one fsync acknowledges the whole chunk.
-        w.sync_wal()?;
-        w.publish_to(&cell)?;
+        tenant.ingest(chunk)?;
+        tenant.publish()?;
     }
     // Give the compactor a moment to drain the sealed backlog so the
     // smoke run demonstrably exercises a background round.
     let t0 = std::time::Instant::now();
     while t0.elapsed() < std::time::Duration::from_secs(5) {
-        let sealed = store.lock().unwrap_or_else(|p| p.into_inner()).num_sealed_segments();
-        if compactor.compactions() > 0 || sealed <= 2 {
+        if compactor.compactions() > 0 || tenant.num_sealed_segments() <= 2 {
             break;
         }
         std::thread::sleep(std::time::Duration::from_millis(5));
@@ -232,13 +241,9 @@ fn main() -> tgm::Result<()> {
         return Err(tgm::TgmError::Persist(format!("background compaction failed: {e}")));
     }
     compactor.stop();
-    let mut store = Arc::try_unwrap(store)
-        .map_err(|_| tgm::TgmError::Persist("compactor still holds the store".into()))?
-        .into_inner()
-        .unwrap_or_else(|p| p.into_inner());
 
     // 4. Byte-identical serving + identical MRR vs the uninterrupted run.
-    let final_snap = store.snapshot()?;
+    let final_snap = tenant.publish()?;
     assert_eq!(final_snap.num_edges(), reference.num_edges());
     assert_eq!(final_snap.edge_ts(), reference.edge_ts());
     assert_eq!(final_snap.edge_src(), reference.edge_src());
@@ -257,6 +262,8 @@ fn main() -> tgm::Result<()> {
         "recovered serving must reproduce the uninterrupted MRR bit-for-bit"
     );
 
+    drop(router);
+    drop(tenant);
     let _ = std::fs::remove_dir_all(&dir);
     println!("durable_restart OK");
     Ok(())

@@ -39,7 +39,7 @@ use tgm::hooks::{RecipeRegistry, RECIPE_TGB_LINK};
 use tgm::io::gen;
 use tgm::io::stream::ReplaySource;
 use tgm::loader::{BatchBy, RequestClass, ServingPool, StreamConfig};
-use tgm::serving::{TenantConfig, TenantId, TenantRouter};
+use tgm::serving::{ServingConfig, TenantId, TenantRouter};
 use tgm::TgmError;
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -70,14 +70,14 @@ fn main() -> tgm::Result<()> {
 
     let mut router = TenantRouter::new();
     for ((id, data), (_, weight)) in datasets.iter().zip(&tenants) {
-        router.add_tenant(
+        router.add_primary(
             id.clone(),
-            TenantConfig::new(data.storage().num_nodes())
-                .with_seal(SealPolicy::by_events(512))
-                .with_compact_after(6)
-                .with_granularity(data.storage().granularity())
-                .with_qos_weight(*weight)
-                .with_admission_cap(256),
+            ServingConfig::in_memory(data.storage().num_nodes())
+                .seal(SealPolicy::by_events(512))
+                .compact_after(6)
+                .granularity(data.storage().granularity())
+                .qos_weight(*weight)
+                .admission_cap(256),
         )?;
     }
     let router = Arc::new(router);

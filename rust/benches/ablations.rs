@@ -33,6 +33,11 @@
 //!     process-global metrics registry recording vs disabled — the
 //!     per-append counter increments and per-seal histogram records
 //!     must cost <= 3% of ingest throughput.
+//! 13. Replicated serving: replica bootstrap throughput vs the
+//!     primary's sealed-segment count (1/4/16 — copy + open + catch-up,
+//!     no primary lock taken), and aggregate point-query QPS served
+//!     entirely by 1/2/4 WAL-tailing replicas behind the unified
+//!     read-handle API.
 //!
 //! `TGM_ABLATION=streaming,sharded,persist` runs a comma-selected
 //! subset (CI's bench-regression job does exactly that); unset runs
@@ -53,7 +58,7 @@ use tgm::hooks::{
 };
 use tgm::io::gen;
 use tgm::loader::{plan_batches, BatchBy, DGDataLoader, PrefetchConfig, PrefetchLoader};
-use tgm::persist::DurabilityPolicy;
+use tgm::persist::{DurabilityPolicy, SegmentBacking};
 use tgm::util::{Tensor, TimeGranularity};
 
 fn batches_of(storage: &StorageSnapshot, bsz: usize) -> Vec<MaterializedBatch> {
@@ -91,6 +96,7 @@ fn main() {
     let discretize_on = common::section_enabled("discretize");
     let latency_on = common::section_enabled("latency");
     let obs_on = common::section_enabled("obs");
+    let replica_on = common::section_enabled("replica");
 
     // 9. SIMD kernel microbench (`ablation.kernels`): raw primitive
     //    throughput under whichever backend the runtime dispatch picked,
@@ -551,6 +557,11 @@ fn main() {
     if obs_on {
         obs_section(scale);
     }
+
+    // 13. Replicated serving (`ablation.replica`).
+    if replica_on {
+        replica_section(scale);
+    }
 }
 
 /// Section 12: observability overhead (`ablation.obs`).
@@ -971,7 +982,7 @@ fn persist_section(num_nodes: usize, events: &[tgm::graph::EdgeEvent], seal_ever
         let rec_mmap = common::time_runs(1, 3, || {
             tgm::persist::recover(
                 SealPolicy::by_events(per_seg),
-                DurabilityPolicy::new(&bench_dir).with_mmap(),
+                DurabilityPolicy::new(&bench_dir).with_backing(SegmentBacking::Mmap),
             )
             .unwrap()
             .total_edges()
@@ -1072,9 +1083,11 @@ fn persist_section(num_nodes: usize, events: &[tgm::graph::EdgeEvent], seal_ever
     });
     drop(st);
     let mut st = SegmentedStorage::new(num_nodes, SealPolicy::by_events(usize::MAX))
-        .with_durability(
-            DurabilityPolicy::new(bench_dir.join("group-commit")).with_group_commit(),
-        )
+        .with_durability(DurabilityPolicy {
+            fsync_appends: true,
+            group_commit: true,
+            ..DurabilityPolicy::new(bench_dir.join("group-commit"))
+        })
         .unwrap();
     let group_secs = common::time_runs(0, 1, || {
         for (i, e) in events[..n_sync].iter().enumerate() {
@@ -1109,4 +1122,150 @@ fn persist_section(num_nodes: usize, events: &[tgm::graph::EdgeEvent], seal_ever
     common::metric("persist.group_commit_events_per_s", group_eps);
 
     let _ = std::fs::remove_dir_all(&bench_dir);
+}
+
+/// Section 13: replicated serving (`ablation.replica`).
+///
+/// Two costs define the replica tier. (a) Bootstrap: copying the
+/// primary's sealed segment files plus static table (no primary lock
+/// taken), opening them mmap-backed, and replaying the WAL tail —
+/// measured as end-to-end events/s into a fresh replica directory at
+/// 1/4/16 sealed segments. (b) Read scaling: aggregate closed-loop
+/// point-query QPS when every read is answered by a replica (the
+/// primary serves none), at 1/2/4 tailing replicas over one shared
+/// pool. The `1r` floor is gated conservatively like
+/// `latency.point_qps`; the scaling rows are tracked un-gated because
+/// 2-core CI runners flatten them.
+fn replica_section(scale: f64) {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use tgm::graph::PointQuery;
+    use tgm::loader::ServingPool;
+    use tgm::replica::{DirTransport, Replica, ReplicaConfig};
+    use tgm::serving::{ReadHandle, ServingConfig, TenantId, TenantRouter};
+
+    let wiki = gen::by_name("wiki", scale, 77).unwrap();
+    let snap = wiki.storage();
+    let n_events = snap.num_edges();
+    let events: Vec<tgm::graph::EdgeEvent> = (0..n_events)
+        .map(|i| tgm::graph::EdgeEvent {
+            t: snap.edge_ts_at(i),
+            src: snap.edge_src_at(i),
+            dst: snap.edge_dst_at(i),
+            features: snap.edge_feat_row(i).to_vec(),
+        })
+        .collect();
+    let base =
+        std::env::temp_dir().join(format!("tgm_ablation_replica_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+
+    // (a) Bootstrap throughput vs sealed-segment count. The primary
+    // stays alive (directory locked) — bootstrap reads around the lock.
+    let run_seq = AtomicUsize::new(0);
+    for segs in [1usize, 4, 16] {
+        let pdir = base.join(format!("primary-{segs}"));
+        let mut st = SegmentedStorage::new(
+            snap.num_nodes(),
+            SealPolicy::by_events(n_events.div_ceil(segs).max(1)),
+        )
+        .with_granularity(snap.granularity())
+        .with_durability(DurabilityPolicy::new(&pdir))
+        .unwrap();
+        for e in &events {
+            st.append_edge(e.clone()).unwrap();
+        }
+        st.seal().unwrap();
+        let log = Arc::new(DirTransport::new(&pdir));
+        let secs = common::time_runs(1, 3, || {
+            let rdir =
+                base.join(format!("boot-{segs}-{}", run_seq.fetch_add(1, Ordering::Relaxed)));
+            let (replica, report) = Replica::bootstrap(
+                format!("boot-{segs}"),
+                Arc::clone(&log),
+                ReplicaConfig::new(rdir),
+            )
+            .unwrap();
+            assert!(report.shipped_bytes > 0, "a fresh dir must fetch segments");
+            replica.total_edges()
+        });
+        common::report(
+            "ablation.replica",
+            &format!("bootstrap, {segs} sealed segments"),
+            &secs,
+        );
+        common::metric(
+            &format!("replica.bootstrap_events_per_s_{segs}segs"),
+            n_events as f64 / common::mean(&secs).max(1e-12),
+        );
+        drop(st);
+    }
+
+    // (b) Aggregate point QPS with every read served by a replica.
+    let pdir = base.join("primary-serve");
+    {
+        let mut st = SegmentedStorage::new(
+            snap.num_nodes(),
+            SealPolicy::by_events((n_events / 8).max(1)),
+        )
+        .with_granularity(snap.granularity())
+        .with_durability(DurabilityPolicy::new(&pdir))
+        .unwrap();
+        for e in &events {
+            st.append_edge(e.clone()).unwrap();
+        }
+    } // drop: releases the primary directory lock for the router
+    let n_nodes = snap.num_nodes() as u64;
+    let queries_total = ((2000.0 * scale.max(0.05)) as usize).max(400);
+    let mut qps_1r = 0.0f64;
+    for n_replicas in [1usize, 2, 4] {
+        let mut router = TenantRouter::new();
+        let id = TenantId::from("serve");
+        router
+            .add_primary(
+                id.clone(),
+                ServingConfig::primary(snap.num_nodes(), &pdir)
+                    .seal(SealPolicy::by_events((n_events / 8).max(1))),
+            )
+            .unwrap();
+        let mut handles: Vec<Arc<dyn ReadHandle>> = Vec::new();
+        for r in 0..n_replicas {
+            handles.push(router.add_replica(
+                id.clone(),
+                ServingConfig::replica(&pdir, base.join(format!("serve-{n_replicas}-{r}"))),
+            )
+            .unwrap());
+        }
+        let pool = ServingPool::new(4);
+        let per = queries_total / n_replicas;
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|scope| {
+            for h in &handles {
+                let pool = &pool;
+                scope.spawn(move || {
+                    let snap = h.pin().unwrap();
+                    let end = snap.end_time() + 1;
+                    for i in 0..per {
+                        let node =
+                            ((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) % n_nodes) as u32;
+                        h.query(pool, PointQuery::NeighborsBefore { node, t: end, k: 10 })
+                            .unwrap();
+                    }
+                });
+            }
+        });
+        let qps = (per * n_replicas) as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+        if n_replicas == 1 {
+            qps_1r = qps;
+        }
+        println!(
+            "ablation.replica | {n_replicas} replicas, {} queries each: {qps:.0} aggregate \
+             point QPS ({:.2}x vs 1 replica)",
+            per,
+            qps / qps_1r.max(1e-12)
+        );
+        common::metric(&format!("replica.point_qps_{n_replicas}r"), qps);
+        drop(router); // release the primary dir lock for the next config
+    }
+
+    let _ = std::fs::remove_dir_all(&base);
 }

@@ -42,6 +42,10 @@ pub enum TgmError {
     /// violation (see `crate::persist`).
     Persist(String),
 
+    /// Replication failure: a replica could not bootstrap from or stay
+    /// in sync with its primary (see `crate::replica`).
+    Replica(String),
+
     /// Dataset loading / parsing failure.
     Io(String),
 
@@ -70,6 +74,7 @@ impl std::fmt::Display for TgmError {
             TgmError::Backpressure(m) => write!(f, "backpressure: {m}"),
             TgmError::Serving(m) => write!(f, "serving error: {m}"),
             TgmError::Persist(m) => write!(f, "persist error: {m}"),
+            TgmError::Replica(m) => write!(f, "replica error: {m}"),
             TgmError::Io(m) => write!(f, "io error: {m}"),
             TgmError::Manifest(m) => write!(f, "manifest error: {m}"),
             TgmError::Runtime(m) => write!(f, "runtime error: {m}"),

@@ -68,6 +68,56 @@ pub(crate) fn next_id() -> u64 {
     NEXT_ID.fetch_add(1, Ordering::Relaxed)
 }
 
+/// Bookkeeping derivable from a sealed-segment stack (boundary gaps,
+/// last sealed timestamps, feature dims). Recomputed rather than
+/// persisted: recovery, replica bootstrap, and replica compaction
+/// deltas all rebuild it from the segments themselves.
+struct SealedInvariants {
+    min_sealed_gap: Option<i64>,
+    last_sealed_edge_ts: Option<Timestamp>,
+    last_sealed_node_ts: Option<Timestamp>,
+    edge_feat_dim: Option<usize>,
+    node_feat_dim: Option<usize>,
+}
+
+impl SealedInvariants {
+    fn derive(sealed: &[Arc<GraphStorage>]) -> SealedInvariants {
+        let mut min_sealed_gap: Option<i64> = None;
+        let mut last_sealed_edge_ts: Option<Timestamp> = None;
+        let mut last_sealed_node_ts: Option<Timestamp> = None;
+        let mut edge_feat_dim = None;
+        let mut node_feat_dim = None;
+        for seg in sealed {
+            let ts = seg.edge_ts();
+            let mut gap = min_positive_gap(ts);
+            if let (Some(last), Some(&first)) = (last_sealed_edge_ts, ts.first()) {
+                let boundary = first - last;
+                if boundary > 0 {
+                    gap = Some(gap.map_or(boundary, |g: i64| g.min(boundary)));
+                }
+            }
+            min_sealed_gap = SegmentedStorage::fold_gap(min_sealed_gap, gap);
+            last_sealed_edge_ts =
+                Some(last_sealed_edge_ts.map_or(seg.end_time(), |l| l.max(seg.end_time())));
+            if let Some(&last) = seg.node_event_ts().last() {
+                last_sealed_node_ts =
+                    Some(last_sealed_node_ts.map_or(last, |l: Timestamp| l.max(last)));
+            }
+            edge_feat_dim.get_or_insert(seg.edge_feat_dim());
+            if node_feat_dim.is_none() && seg.num_node_events() > 0 {
+                node_feat_dim = Some(seg.node_feat_dim());
+            }
+        }
+        SealedInvariants {
+            min_sealed_gap,
+            last_sealed_edge_ts,
+            last_sealed_node_ts,
+            edge_feat_dim,
+            node_feat_dim,
+        }
+    }
+}
+
 /// Identity of one immutable snapshot: the owning store's id plus the
 /// store's monotonic generation at snapshot time. Two snapshots with the
 /// same `SnapshotId` are guaranteed to hold identical data.
@@ -292,32 +342,14 @@ impl SegmentedStorage {
         generation: u64,
         durability: Durability,
     ) -> SegmentedStorage {
-        let mut min_sealed_gap: Option<i64> = None;
-        let mut last_sealed_edge_ts: Option<Timestamp> = None;
-        let mut last_sealed_node_ts: Option<Timestamp> = None;
-        let mut edge_feat_dim = None;
-        let mut node_feat_dim = None;
-        for seg in &sealed {
-            let ts = seg.edge_ts();
-            let mut gap = min_positive_gap(ts);
-            if let (Some(last), Some(&first)) = (last_sealed_edge_ts, ts.first()) {
-                let boundary = first - last;
-                if boundary > 0 {
-                    gap = Some(gap.map_or(boundary, |g: i64| g.min(boundary)));
-                }
-            }
-            min_sealed_gap = Self::fold_gap(min_sealed_gap, gap);
-            last_sealed_edge_ts =
-                Some(last_sealed_edge_ts.map_or(seg.end_time(), |l| l.max(seg.end_time())));
-            if let Some(&last) = seg.node_event_ts().last() {
-                last_sealed_node_ts =
-                    Some(last_sealed_node_ts.map_or(last, |l: Timestamp| l.max(last)));
-            }
-            edge_feat_dim.get_or_insert(seg.edge_feat_dim());
-            if node_feat_dim.is_none() && seg.num_node_events() > 0 {
-                node_feat_dim = Some(seg.node_feat_dim());
-            }
-        }
+        let inv = SealedInvariants::derive(&sealed);
+        let SealedInvariants {
+            min_sealed_gap,
+            last_sealed_edge_ts,
+            last_sealed_node_ts,
+            edge_feat_dim,
+            node_feat_dim,
+        } = inv;
         let sealed_ids = sealed.iter().map(|_| next_id()).collect();
         SegmentedStorage {
             num_nodes,
@@ -342,6 +374,128 @@ impl SegmentedStorage {
             compaction_bytes: 0,
             durability: Some(durability),
             dtdg: Vec::new(),
+        }
+    }
+
+    /// Rebuild a read-only replica store from fetched parts (the
+    /// [`crate::replica`] bootstrap path). Same derivation as
+    /// [`SegmentedStorage::from_recovered`], but with no durability:
+    /// a replica's on-disk state is owned by the replica itself
+    /// (fetched files named by primary segment seq), so the store
+    /// must never write a WAL or seal segments of its own.
+    pub(crate) fn from_replica_parts(
+        num_nodes: usize,
+        fixed_granularity: Option<TimeGranularity>,
+        static_feat_dim: usize,
+        static_feats: Vec<f32>,
+        sealed: Vec<Arc<GraphStorage>>,
+        generation: u64,
+    ) -> SegmentedStorage {
+        let SealedInvariants {
+            min_sealed_gap,
+            last_sealed_edge_ts,
+            last_sealed_node_ts,
+            edge_feat_dim,
+            node_feat_dim,
+        } = SealedInvariants::derive(&sealed);
+        let sealed_ids = sealed.iter().map(|_| next_id()).collect();
+        SegmentedStorage {
+            num_nodes,
+            policy: SealPolicy::default(),
+            fixed_granularity,
+            min_sealed_gap,
+            static_feat_dim,
+            static_feats: Arc::new(static_feats),
+            sealed,
+            sealed_ids,
+            active_edges: Vec::new(),
+            active_nodes: Vec::new(),
+            edge_feat_dim,
+            node_feat_dim,
+            active_min_t: None,
+            active_max_t: None,
+            last_sealed_edge_ts,
+            last_sealed_node_ts,
+            store_id: next_id(),
+            generation,
+            cached_snapshot: None,
+            compaction_bytes: 0,
+            durability: None,
+            dtdg: Vec::new(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // replica apply path (see `crate::replica`)
+    // ------------------------------------------------------------------
+
+    /// Drop the replayed WAL tail: the primary sealed, so every event
+    /// the replica replayed this epoch is contained in the sealed
+    /// segment it is about to install.
+    pub(crate) fn replica_clear_tail(&mut self) {
+        self.active_edges.clear();
+        self.active_nodes.clear();
+        self.active_min_t = None;
+        self.active_max_t = None;
+    }
+
+    /// Install a fetched sealed segment at the top of the stack,
+    /// folding the same boundary-gap / last-timestamp bookkeeping the
+    /// primary's own seal performed, so replica snapshots infer the
+    /// identical granularity (byte-identical batches).
+    pub(crate) fn replica_install_sealed(&mut self, seg: Arc<GraphStorage>) {
+        let ts = seg.edge_ts();
+        let mut gap = min_positive_gap(ts);
+        if let (Some(last), Some(&first)) = (self.last_sealed_edge_ts, ts.first()) {
+            let boundary = first - last;
+            if boundary > 0 {
+                gap = Some(gap.map_or(boundary, |g: i64| g.min(boundary)));
+            }
+        }
+        self.min_sealed_gap = Self::fold_gap(self.min_sealed_gap, gap);
+        self.last_sealed_edge_ts =
+            Some(self.last_sealed_edge_ts.map_or(seg.end_time(), |l| l.max(seg.end_time())));
+        if let Some(&last) = seg.node_event_ts().last() {
+            self.last_sealed_node_ts =
+                Some(self.last_sealed_node_ts.map_or(last, |l: Timestamp| l.max(last)));
+        }
+        self.edge_feat_dim.get_or_insert(seg.edge_feat_dim());
+        if self.node_feat_dim.is_none() && seg.num_node_events() > 0 {
+            self.node_feat_dim = Some(seg.node_feat_dim());
+        }
+        self.sealed.push(seg);
+        self.sealed_ids.push(next_id());
+        self.generation += 1;
+    }
+
+    /// Recompute sealed-stack bookkeeping from scratch. Replica path
+    /// after a compaction delta: the merged segment may fold events
+    /// from seals this replica never saw individually (a seal and a
+    /// compaction landing between two polls), so the incremental
+    /// update in [`SegmentedStorage::replica_install_sealed`] cannot
+    /// cover it.
+    pub(crate) fn replica_recompute_sealed_invariants(&mut self) {
+        let inv = SealedInvariants::derive(&self.sealed);
+        self.min_sealed_gap = inv.min_sealed_gap;
+        self.last_sealed_edge_ts = inv.last_sealed_edge_ts;
+        self.last_sealed_node_ts = inv.last_sealed_node_ts;
+        if let Some(d) = inv.edge_feat_dim {
+            self.edge_feat_dim.get_or_insert(d);
+        }
+        if let Some(d) = inv.node_feat_dim {
+            self.node_feat_dim.get_or_insert(d);
+        }
+        self.cached_snapshot = None;
+    }
+
+    /// Pin the mutation counter to the primary's. Replica generations
+    /// are derived (manifest anchor + applied WAL-tail length), not
+    /// counted locally, so a replica snapshot's `SnapshotId.generation`
+    /// matches the primary's for the same logical content.
+    pub(crate) fn set_replica_generation(&mut self, generation: u64) {
+        if self.generation != generation {
+            self.cached_snapshot = None;
+            self.generation = generation;
         }
     }
 

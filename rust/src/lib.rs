@@ -53,6 +53,7 @@ pub mod loader;
 pub mod models;
 pub mod obs;
 pub mod persist;
+pub mod replica;
 pub mod runtime;
 pub mod serving;
 pub mod util;

@@ -264,6 +264,12 @@ impl<'a> Dec<'a> {
         self.pos
     }
 
+    /// Bytes left after the cursor (lenient decoders check this before
+    /// reading fields appended by newer writers).
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
     pub(crate) fn done(&self) -> Result<()> {
         if self.pos != self.buf.len() {
             return Err(TgmError::Persist(format!(
@@ -677,6 +683,17 @@ pub struct Manifest {
     pub next_seq: u64,
     /// Live segment files (sequence numbers, oldest first).
     pub segments: Vec<u64>,
+    /// Number of current-epoch WAL records acknowledged at the moment
+    /// this manifest was written. Seals reset the WAL (epoch+1), so a
+    /// seal manifest records 0; a compaction manifest written mid-epoch
+    /// records how many of the epoch's appends its `generation` already
+    /// counts. `generation - wal_records` is therefore the generation
+    /// *before* any current-epoch append — the anchor both recovery and
+    /// a tailing replica use to reconstruct exact generations (+1 per
+    /// replayed record). Encoded after the segment list and decoded
+    /// leniently (absent in pre-replication manifests ⇒ 0), so the
+    /// format version is unchanged and old stores stay readable.
+    pub wal_records: u64,
 }
 
 /// Encode the manifest.
@@ -695,6 +712,7 @@ pub fn encode_manifest(m: &Manifest) -> Vec<u8> {
     for &s in &m.segments {
         p.u64(s);
     }
+    p.u64(m.wal_records);
     frame(MANIFEST_MAGIC, p.into_bytes())
 }
 
@@ -716,6 +734,9 @@ pub fn decode_manifest(bytes: &[u8]) -> Result<Manifest> {
     for _ in 0..nsegs {
         segments.push(d.u64()?);
     }
+    // Pre-replication manifests end here; newer ones append the
+    // current-epoch WAL record count.
+    let wal_records = if d.remaining() > 0 { d.u64()? } else { 0 };
     d.done()?;
     Ok(Manifest {
         num_nodes,
@@ -725,6 +746,7 @@ pub fn decode_manifest(bytes: &[u8]) -> Result<Manifest> {
         wal_epoch,
         next_seq,
         segments,
+        wal_records,
     })
 }
 
@@ -897,12 +919,20 @@ mod tests {
             wal_epoch: 9,
             next_seq: 4,
             segments: vec![1, 2, 3],
+            wal_records: 17,
         };
         let back = decode_manifest(&encode_manifest(&m)).unwrap();
         assert_eq!(back, m);
-        let none = Manifest { fixed_granularity: None, ..m };
+        let none = Manifest { fixed_granularity: None, ..m.clone() };
         let back = decode_manifest(&encode_manifest(&none)).unwrap();
         assert_eq!(back.fixed_granularity, None);
+        // A pre-replication manifest (no trailing wal_records field)
+        // still decodes, with the count defaulting to 0.
+        let encoded = encode_manifest(&m);
+        let (_, payload) = unframe(MANIFEST_MAGIC, &encoded, "manifest", FORMAT_VERSION).unwrap();
+        let legacy = frame(MANIFEST_MAGIC, payload[..payload.len() - 8].to_vec());
+        let back = decode_manifest(&legacy).unwrap();
+        assert_eq!(back, Manifest { wal_records: 0, ..m });
     }
 
     #[test]
@@ -932,6 +962,7 @@ mod tests {
             wal_epoch: 1,
             next_seq: 1,
             segments: vec![],
+            wal_records: 0,
         };
         write_manifest(&path, &m).unwrap();
         assert_eq!(read_manifest(&path).unwrap(), m);

@@ -64,7 +64,7 @@ pub mod wal;
 pub use compactor::{plan_tiered_run, CompactionStrategy, Compactor, CompactorConfig};
 pub use format::{Manifest, FORMAT_VERSION, SEGMENT_FORMAT_VERSION};
 pub use lock::DirLock;
-pub use wal::{read_wal, WalContents, WalSync, WalWriter};
+pub use wal::{read_wal, read_wal_tail, WalContents, WalSync, WalTail, WalWriter};
 
 use crate::error::{Result, TgmError};
 use crate::graph::events::{EdgeEvent, NodeEvent};
@@ -158,6 +158,10 @@ impl DurabilityPolicy {
     /// Implies `with_fsync`-grade durability at each barrier at a
     /// fraction of the per-append cost (`ablation.persist` quantifies
     /// it).
+    #[deprecated(
+        note = "use `ServingConfig::group_commit` at the serving layer, or set the \
+                `fsync_appends`/`group_commit` fields directly"
+    )]
     pub fn with_group_commit(mut self) -> DurabilityPolicy {
         self.fsync_appends = true;
         self.group_commit = true;
@@ -166,6 +170,10 @@ impl DurabilityPolicy {
 
     /// Serve sealed segment files via mmap (zero-copy recovery and
     /// compaction installs).
+    #[deprecated(
+        note = "use `ServingConfig::mmap` at the serving layer, or \
+                `with_backing(SegmentBacking::Mmap)`"
+    )]
     pub fn with_mmap(mut self) -> DurabilityPolicy {
         self.backing = SegmentBacking::Mmap;
         self
@@ -190,7 +198,13 @@ pub(crate) struct StoreMeta<'a> {
 }
 
 impl StoreMeta<'_> {
-    fn manifest(&self, wal_epoch: u64, next_seq: u64, segments: Vec<u64>) -> Manifest {
+    fn manifest(
+        &self,
+        wal_epoch: u64,
+        next_seq: u64,
+        segments: Vec<u64>,
+        wal_records: u64,
+    ) -> Manifest {
         Manifest {
             num_nodes: self.num_nodes,
             fixed_granularity: self.fixed_granularity,
@@ -199,6 +213,7 @@ impl StoreMeta<'_> {
             wal_epoch,
             next_seq,
             segments,
+            wal_records,
         }
     }
 }
@@ -213,6 +228,11 @@ pub(crate) struct Durability {
     /// Live segment sequence numbers, parallel to the store's sealed
     /// stack (oldest first).
     seqs: Vec<u64>,
+    /// Acknowledged records in the current WAL epoch. Written into every
+    /// manifest (see [`Manifest::wal_records`]) so recovery and tailing
+    /// replicas can anchor exact generations; resets with the WAL on
+    /// seal.
+    wal_records: u64,
     /// Group-commit barrier handle when the policy asked for it.
     sync: Option<WalSync>,
     /// Held for the lifetime of the store: fences a second process (or
@@ -252,7 +272,7 @@ impl Durability {
                 meta.static_feats,
             )?;
         }
-        format::write_manifest(&man_path, &meta.manifest(1, 1, Vec::new()))?;
+        format::write_manifest(&man_path, &meta.manifest(1, 1, Vec::new(), 0))?;
         let mut wal = WalWriter::create(&policy.dir.join(WAL_FILE), 1, policy.fsync_appends)?;
         let sync = policy.group_commit.then(|| wal.enable_group_commit());
         Ok(Durability {
@@ -261,6 +281,7 @@ impl Durability {
             wal_epoch: 1,
             next_seq: 1,
             seqs: Vec::new(),
+            wal_records: 0,
             sync,
             _lock: dir_lock,
             poisoned: None,
@@ -291,6 +312,10 @@ impl Durability {
             wal_epoch: man.wal_epoch,
             next_seq: man.next_seq,
             seqs: man.segments.clone(),
+            // Replay re-records every surviving tail event through
+            // `record_edge`/`record_node`, so the counter rebuilds
+            // itself to the replayed count.
+            wal_records: 0,
             sync: None,
             _lock: dir_lock,
             poisoned: None,
@@ -369,7 +394,8 @@ impl Durability {
                 meta.static_feats,
             )?;
         }
-        let man = meta.manifest(self.wal_epoch, self.next_seq, self.seqs.clone());
+        let man =
+            meta.manifest(self.wal_epoch, self.next_seq, self.seqs.clone(), self.wal_records);
         format::write_manifest(&self.dir().join(MANIFEST_FILE), &man)?;
         Ok(())
     }
@@ -388,8 +414,11 @@ impl Durability {
     pub(crate) fn record_edge(&mut self, e: &EdgeEvent) -> Result<()> {
         self.check_poisoned()?;
         let res = self.wal.append_edge(e);
-        if res.is_err() {
-            self.poison("a WAL append failed mid-record (the log tail may be partial)");
+        match &res {
+            Ok(()) => self.wal_records += 1,
+            Err(_) => {
+                self.poison("a WAL append failed mid-record (the log tail may be partial)")
+            }
         }
         res
     }
@@ -399,8 +428,11 @@ impl Durability {
     pub(crate) fn record_node(&mut self, e: &NodeEvent) -> Result<()> {
         self.check_poisoned()?;
         let res = self.wal.append_node(e);
-        if res.is_err() {
-            self.poison("a WAL append failed mid-record (the log tail may be partial)");
+        match &res {
+            Ok(()) => self.wal_records += 1,
+            Err(_) => {
+                self.poison("a WAL append failed mid-record (the log tail may be partial)")
+            }
         }
         res
     }
@@ -421,12 +453,16 @@ impl Durability {
         format::write_segment(&path, seg)?;
         let mut seqs = self.seqs.clone();
         seqs.push(seq);
-        let man = meta.manifest(self.wal_epoch + 1, seq + 1, seqs.clone());
+        // The manifest describes the post-seal epoch, whose WAL starts
+        // empty — its record count is 0 regardless of how many appends
+        // the sealing epoch absorbed.
+        let man = meta.manifest(self.wal_epoch + 1, seq + 1, seqs.clone(), 0);
         format::write_manifest(&self.dir().join(MANIFEST_FILE), &man)?;
         self.wal.reset(self.wal_epoch + 1)?;
         self.wal_epoch += 1;
         self.next_seq = seq + 1;
         self.seqs = seqs;
+        self.wal_records = 0;
         let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
         span.set_detail(format!("seq={seq} bytes={bytes}"));
         let r = obs::registry();
@@ -469,7 +505,11 @@ impl Durability {
         seqs.extend_from_slice(&self.seqs[..start]);
         seqs.push(seq);
         seqs.extend_from_slice(&self.seqs[start + replaced..]);
-        let man = meta.manifest(self.wal_epoch, seq + 1, seqs.clone());
+        // Written mid-epoch: `meta.generation` already counts this
+        // epoch's acknowledged appends, so the manifest records how many
+        // (`wal_records`) — the anchor that lets recovery and replicas
+        // reconstruct exact generations instead of lower bounds.
+        let man = meta.manifest(self.wal_epoch, seq + 1, seqs.clone(), self.wal_records);
         format::write_manifest(&self.dir().join(MANIFEST_FILE), &man)?;
         self.next_seq = seq + 1;
         self.seqs = seqs;
@@ -517,10 +557,12 @@ pub struct RecoveryReport {
 ///   A torn trailing record (killed mid-write, never acknowledged) is
 ///   dropped; a checksum-failing complete record or segment file is a
 ///   typed [`TgmError::Persist`].
-/// * The store resumes at a generation `>=` every acknowledged
-///   pre-crash generation (manifest generation at the last seal plus
-///   one per replayed WAL record), so republished snapshots are never
-///   mistaken for stale ones.
+/// * The store resumes at **exactly** the last acknowledged pre-crash
+///   generation: the manifest anchors the epoch-start generation (its
+///   recorded generation minus [`Manifest::wal_records`]) and each
+///   replayed WAL record re-advances it by one — the same arithmetic a
+///   tailing replica uses (see [`crate::replica`]). Republished
+///   snapshots are therefore never mistaken for stale ones.
 /// * `seal` is the recovered store's go-forward policy (it is not
 ///   persisted; ingestion policy belongs to the process, not the data).
 ///   Replay bypasses its admission checks — acknowledged data always
@@ -614,6 +656,13 @@ pub fn recover_with_report(
 
     sweep_unreferenced_segments(&policy.dir, &man.segments);
     let durability = Durability::attach_recovered(policy, &man, dir_lock)?;
+    // The manifest's generation may already count `wal_records` of the
+    // current epoch's appends (a mid-epoch compaction or metadata
+    // refresh rewrites it); subtracting them anchors the store at the
+    // generation *before* any current-epoch append, and the replay below
+    // re-advances one per record — landing on exactly the pre-crash
+    // generation. Pre-replication manifests decode wal_records as 0,
+    // which degrades to the old (lower-bound) behavior.
     let mut store = SegmentedStorage::from_recovered(
         man.num_nodes,
         seal,
@@ -621,7 +670,7 @@ pub fn recover_with_report(
         man.static_feat_dim,
         static_feats,
         sealed,
-        man.generation,
+        man.generation.saturating_sub(man.wal_records),
         durability,
     );
     // Replay the acknowledged tail: the (deferred) fresh WAL re-records
@@ -672,8 +721,9 @@ fn sweep_pending_files(dir: &Path) {
 }
 
 /// Delete `seg-*.tgm` files the manifest does not reference (orphans
-/// from a crash between a segment write and its manifest replace).
-fn sweep_unreferenced_segments(dir: &Path, live: &[u64]) {
+/// from a crash between a segment write and its manifest replace; on a
+/// replica, local copies superseded by primary-side compaction).
+pub(crate) fn sweep_unreferenced_segments(dir: &Path, live: &[u64]) {
     let Ok(entries) = std::fs::read_dir(dir) else { return };
     for entry in entries.flatten() {
         let name = entry.file_name();
@@ -931,6 +981,28 @@ mod tests {
         assert!(rec.generation() >= last, "{} < {last}", rec.generation());
     }
 
+    /// The manifest's `wal_records` anchor makes recovery exact, not
+    /// just monotonic — including across the tricky case of a
+    /// compaction manifest written mid-epoch (whose generation already
+    /// counts the epoch's replayed appends).
+    #[test]
+    fn recovery_resumes_at_the_exact_pre_crash_generation() {
+        let dir = test_dir("exact_generation");
+        let mut st = SegmentedStorage::new(8, SealPolicy::by_events(4))
+            .with_durability(DurabilityPolicy::new(&dir))
+            .unwrap();
+        for e in stream(10) {
+            st.append_edge(e).unwrap(); // seals at 4 and 8; 2 in the WAL
+        }
+        assert!(st.compact().unwrap(), "mid-epoch compaction writes a manifest with \
+                                        wal_records > 0");
+        st.append_edge(edge(10_000, 0, 5)).unwrap();
+        let last = st.generation();
+        drop(st);
+        let rec = recover(SealPolicy::by_events(4), DurabilityPolicy::new(&dir)).unwrap();
+        assert_eq!(rec.generation(), last);
+    }
+
     #[test]
     fn fixed_granularity_and_static_feats_survive_recovery() {
         let dir = test_dir("meta");
@@ -1026,8 +1098,13 @@ mod tests {
     #[test]
     fn group_commit_store_round_trips_through_recovery() {
         let dir = test_dir("group_commit");
+        let group = |dir: &Path| DurabilityPolicy {
+            fsync_appends: true,
+            group_commit: true,
+            ..DurabilityPolicy::new(dir)
+        };
         let mut st = SegmentedStorage::new(8, SealPolicy::by_events(16))
-            .with_durability(DurabilityPolicy::new(&dir).with_group_commit())
+            .with_durability(group(&dir))
             .unwrap();
         for e in stream(40) {
             st.append_edge(e).unwrap();
@@ -1035,21 +1112,13 @@ mod tests {
         st.sync_wal().unwrap();
         let expect = st.snapshot().unwrap().edge_ts();
         drop(st); // kill
-        let mut rec = recover(
-            SealPolicy::by_events(16),
-            DurabilityPolicy::new(&dir).with_group_commit(),
-        )
-        .unwrap();
+        let mut rec = recover(SealPolicy::by_events(16), group(&dir)).unwrap();
         assert_eq!(rec.snapshot().unwrap().edge_ts(), expect);
         // The recovered store keeps group-committing.
         rec.append_edge(edge(10_000, 0, 5)).unwrap();
         rec.sync_wal().unwrap();
         drop(rec);
-        let mut again = recover(
-            SealPolicy::by_events(16),
-            DurabilityPolicy::new(&dir).with_group_commit(),
-        )
-        .unwrap();
+        let mut again = recover(SealPolicy::by_events(16), group(&dir)).unwrap();
         assert_eq!(again.snapshot().unwrap().num_edges(), expect.len() + 1);
     }
 
@@ -1075,7 +1144,7 @@ mod tests {
 
         let mut mapped = recover(
             SealPolicy::by_events(12),
-            DurabilityPolicy::new(&dir).with_mmap(),
+            DurabilityPolicy::new(&dir).with_backing(SegmentBacking::Mmap),
         )
         .unwrap();
         let snap = mapped.snapshot().unwrap();

@@ -74,8 +74,9 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 const WAL_MAGIC: &[u8; 8] = b"TGMWAL01";
-/// magic + version + epoch.
-const HEADER_LEN: usize = 8 + 4 + 8;
+/// magic + version + epoch. Also the byte offset of the first record —
+/// where a tailing reader ([`read_wal_tail`]) starts a fresh epoch.
+pub(crate) const HEADER_LEN: usize = 8 + 4 + 8;
 
 const KIND_EDGE: u8 = 0;
 const KIND_NODE: u8 = 1;
@@ -477,6 +478,13 @@ const MAX_RECORD_PAYLOAD: usize = 1 << 30;
 pub fn read_wal(path: &Path) -> Result<WalContents> {
     let bytes = std::fs::read(path)
         .map_err(|e| TgmError::Persist(format!("cannot read wal {}: {e}", path.display())))?;
+    let epoch = parse_header(&bytes)?;
+    let (events, pos, torn_tail) = parse_records(&bytes, HEADER_LEN)?;
+    Ok(WalContents { epoch, events, torn_tail, dropped_bytes: bytes.len() - pos })
+}
+
+/// Validate the fixed WAL header and return its epoch.
+fn parse_header(bytes: &[u8]) -> Result<u64> {
     if bytes.len() < HEADER_LEN {
         return Err(TgmError::Persist(format!(
             "wal header torn ({} of {HEADER_LEN} bytes)",
@@ -492,12 +500,17 @@ pub fn read_wal(path: &Path) -> Result<WalContents> {
             "wal format version {version} unsupported (this build reads {FORMAT_VERSION})"
         )));
     }
-    let epoch = u64::from_le_bytes([
+    Ok(u64::from_le_bytes([
         bytes[12], bytes[13], bytes[14], bytes[15], bytes[16], bytes[17], bytes[18], bytes[19],
-    ]);
+    ]))
+}
 
+/// Parse complete records from `start` to the end of `bytes`: the
+/// decoded events, the offset one past the last complete record, and
+/// whether trailing bytes form an incomplete (torn/in-flight) record.
+fn parse_records(bytes: &[u8], start: usize) -> Result<(Vec<Event>, usize, bool)> {
     let mut events = Vec::new();
-    let mut pos = HEADER_LEN;
+    let mut pos = start;
     let mut torn_tail = false;
     while pos < bytes.len() {
         // kind + len prefix.
@@ -544,7 +557,63 @@ pub fn read_wal(path: &Path) -> Result<WalContents> {
         events.push(decode_payload(kind, payload)?);
         pos = rec_end;
     }
-    Ok(WalContents { epoch, events, torn_tail, dropped_bytes: bytes.len() - pos })
+    Ok((events, pos, torn_tail))
+}
+
+/// One incremental read of a live, still-growing WAL (the replica
+/// tailing path — see [`crate::replica`]).
+#[derive(Debug)]
+pub struct WalTail {
+    /// Epoch in the file's header at read time (the primary's reset
+    /// atomically replaces the file, so a read observes exactly one
+    /// epoch's bytes).
+    pub epoch: u64,
+    /// Complete, checksum-valid records from the requested offset, in
+    /// append order. Empty when the header epoch differs from the
+    /// expected one — the **epoch fence**: records of another epoch are
+    /// never surfaced against a stale cursor, so a tailing reader can
+    /// never double-apply across a seal window.
+    pub events: Vec<Event>,
+    /// Offset one past the last complete record — the next read's
+    /// cursor. Unchanged from the request when the fence tripped.
+    pub end_offset: usize,
+    /// Trailing bytes form an incomplete record. On a live log this is
+    /// an in-flight append, not damage: re-read from `end_offset` once
+    /// the writer finishes it.
+    pub torn_tail: bool,
+}
+
+/// Tail a WAL from a byte cursor: parse only the complete records in
+/// `bytes[offset..]`, for a reader that polls a live log.
+///
+/// * A header epoch other than `expected_epoch` returns **no** events
+///   (fenced) with the observed epoch, letting the caller reconcile the
+///   manifest first — after a seal, the cursor restarts at the fresh
+///   epoch's [`WalTail::end_offset`].
+/// * An incomplete trailing record sets [`WalTail::torn_tail`] and is
+///   left for the next poll; a checksum-failing complete record is a
+///   typed error, exactly as in [`read_wal`].
+/// * `offset` must lie on a record boundary previously returned by this
+///   function (or be the fresh-epoch start); an offset past the end of
+///   the file is a typed error, since an epoch's log only ever grows.
+pub fn read_wal_tail(path: &Path, expected_epoch: u64, offset: usize) -> Result<WalTail> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| TgmError::Persist(format!("cannot read wal {}: {e}", path.display())))?;
+    let epoch = parse_header(&bytes)?;
+    if epoch != expected_epoch {
+        return Ok(WalTail { epoch, events: Vec::new(), end_offset: offset, torn_tail: false });
+    }
+    let start = offset.max(HEADER_LEN);
+    if start > bytes.len() {
+        return Err(TgmError::Persist(format!(
+            "wal tail cursor {start} is past the end of {} ({} bytes at epoch {epoch}) — \
+             the log shrank within an epoch",
+            path.display(),
+            bytes.len()
+        )));
+    }
+    let (events, end_offset, torn_tail) = parse_records(&bytes, start)?;
+    Ok(WalTail { epoch, events, end_offset, torn_tail })
 }
 
 #[cfg(test)]
@@ -767,6 +836,64 @@ mod tests {
             syncs <= (threads * per_thread) as u64,
             "syncs ({syncs}) must never exceed appends"
         );
+    }
+
+    #[test]
+    fn tail_reads_resume_from_the_cursor_and_fence_on_epoch_change() {
+        let path = dir().join("wal_tail.log");
+        let mut w = WalWriter::create(&path, 1, false).unwrap();
+        w.append(&edge(1)).unwrap();
+        w.append(&edge(2)).unwrap();
+        let t1 = read_wal_tail(&path, 1, HEADER_LEN).unwrap();
+        assert_eq!(t1.events, vec![edge(1), edge(2)]);
+        assert!(!t1.torn_tail);
+        // Nothing new: the same cursor yields nothing and stays put.
+        let t2 = read_wal_tail(&path, 1, t1.end_offset).unwrap();
+        assert!(t2.events.is_empty());
+        assert_eq!(t2.end_offset, t1.end_offset);
+        // New appends surface from the cursor only (no re-delivery).
+        w.append(&node(3)).unwrap();
+        let t3 = read_wal_tail(&path, 1, t1.end_offset).unwrap();
+        assert_eq!(t3.events, vec![node(3)]);
+        // A reset (seal) fences the stale cursor: observed epoch comes
+        // back, no events, cursor untouched — even though the fresh
+        // file is shorter than the cursor.
+        w.reset(2).unwrap();
+        let t4 = read_wal_tail(&path, 1, t3.end_offset).unwrap();
+        assert_eq!(t4.epoch, 2);
+        assert!(t4.events.is_empty());
+        assert_eq!(t4.end_offset, t3.end_offset);
+        // Restarting at the fresh epoch's start picks up its records.
+        w.append(&edge(9)).unwrap();
+        let t5 = read_wal_tail(&path, 2, HEADER_LEN).unwrap();
+        assert_eq!(t5.events, vec![edge(9)]);
+    }
+
+    #[test]
+    fn tail_reads_leave_inflight_records_for_the_next_poll() {
+        let path = dir().join("wal_tail_torn.log");
+        let mut w = WalWriter::create(&path, 1, false).unwrap();
+        w.append(&edge(1)).unwrap();
+        w.append(&edge(2)).unwrap();
+        drop(w);
+        let full = std::fs::read(&path).unwrap();
+        let rec_len = (full.len() - HEADER_LEN) / 2;
+        // Simulate an in-flight append: first record complete, second
+        // only half-written.
+        std::fs::write(&path, &full[..HEADER_LEN + rec_len + rec_len / 2]).unwrap();
+        let t = read_wal_tail(&path, 1, HEADER_LEN).unwrap();
+        assert_eq!(t.events, vec![edge(1)]);
+        assert!(t.torn_tail);
+        assert_eq!(t.end_offset, HEADER_LEN + rec_len);
+        // The writer finishes the record: the same cursor now sees it.
+        std::fs::write(&path, &full).unwrap();
+        let t = read_wal_tail(&path, 1, t.end_offset).unwrap();
+        assert_eq!(t.events, vec![edge(2)]);
+        assert!(!t.torn_tail);
+        // A cursor past the end of a matching-epoch log is corruption.
+        std::fs::write(&path, &full[..HEADER_LEN + rec_len]).unwrap();
+        let err = read_wal_tail(&path, 1, full.len()).unwrap_err();
+        assert!(matches!(err, TgmError::Persist(_)), "{err}");
     }
 
     #[test]

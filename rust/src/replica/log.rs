@@ -1,0 +1,97 @@
+//! Replication transport: how a replica reads its primary's durable
+//! state.
+//!
+//! [`ReplicationLog`] is the full surface a replica needs — manifest,
+//! sealed-segment bytes, the write-once static table, and an
+//! offset-addressed WAL tail. Every method is a pull (the replica
+//! polls), every payload is already checksummed by the on-disk format,
+//! and the WAL tail carries the epoch fence, so the trait ports to a
+//! socket transport without protocol changes: a server would answer the
+//! same four requests over the wire.
+//!
+//! [`DirTransport`] is the local-dir implementation: the replica reads
+//! the primary's directory directly. It never takes the primary's
+//! `LOCK` — the primary keeps running — and relies on the store's
+//! write protocol instead: segment files are write-once and synced
+//! before the manifest references them, the manifest is replaced by
+//! rename (a read sees the old or the new one, never a blend), and the
+//! WAL is append-only within an epoch.
+
+use crate::error::{Result, TgmError};
+use crate::persist::wal::{read_wal_tail, WalTail, HEADER_LEN};
+use crate::persist::{format, segment_path, Manifest, MANIFEST_FILE, STATIC_FILE, WAL_FILE};
+use std::path::{Path, PathBuf};
+
+/// Pull-based view of a primary's replicated state (see module docs).
+pub trait ReplicationLog: Send + Sync {
+    /// The primary's current manifest (its acknowledged sealed state).
+    fn manifest(&self) -> Result<Manifest>;
+
+    /// Raw bytes of sealed segment `seq`. Segment files are immutable
+    /// and never reuse a seq, so the response is cacheable forever.
+    fn fetch_segment(&self, seq: u64) -> Result<Vec<u8>>;
+
+    /// Raw bytes of the write-once static-feature table.
+    fn fetch_static(&self) -> Result<Vec<u8>>;
+
+    /// Complete WAL records at `expected_epoch` from byte `offset`.
+    /// An epoch mismatch is a fence, not an error: the reply names the
+    /// observed epoch, delivers nothing, and leaves the cursor where it
+    /// was (see [`read_wal_tail`]).
+    fn wal_tail(&self, expected_epoch: u64, offset: usize) -> Result<WalTail>;
+}
+
+/// [`ReplicationLog`] over a locally readable primary directory (same
+/// machine or a shared filesystem).
+pub struct DirTransport {
+    dir: PathBuf,
+}
+
+impl DirTransport {
+    /// Transport reading the primary's durable dir in place.
+    pub fn new(dir: impl Into<PathBuf>) -> DirTransport {
+        DirTransport { dir: dir.into() }
+    }
+
+    /// The primary directory this transport reads.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+impl ReplicationLog for DirTransport {
+    fn manifest(&self) -> Result<Manifest> {
+        format::read_manifest(&self.dir.join(MANIFEST_FILE))
+    }
+
+    fn fetch_segment(&self, seq: u64) -> Result<Vec<u8>> {
+        let path = segment_path(&self.dir, seq);
+        std::fs::read(&path).map_err(|e| {
+            TgmError::Replica(format!("cannot fetch segment {}: {e}", path.display()))
+        })
+    }
+
+    fn fetch_static(&self) -> Result<Vec<u8>> {
+        let path = self.dir.join(STATIC_FILE);
+        std::fs::read(&path).map_err(|e| {
+            TgmError::Replica(format!("cannot fetch static table {}: {e}", path.display()))
+        })
+    }
+
+    fn wal_tail(&self, expected_epoch: u64, offset: usize) -> Result<WalTail> {
+        let path = self.dir.join(WAL_FILE);
+        if !path.exists() {
+            // Only legitimate before the primary's first append (epoch
+            // 1, nothing to deliver); the poll loop validates epochs
+            // against the manifest, so a vanished log at a later epoch
+            // surfaces as a stall, not silent data loss.
+            return Ok(WalTail {
+                epoch: expected_epoch,
+                events: Vec::new(),
+                end_offset: offset.max(HEADER_LEN),
+                torn_tail: false,
+            });
+        }
+        read_wal_tail(&path, expected_epoch, offset)
+    }
+}

@@ -1,0 +1,829 @@
+//! Replicated serving tier: WAL-tailing read replicas.
+//!
+//! A [`Replica`] mirrors one primary [`SegmentedStorage`]'s durable
+//! state and serves reads from it, scaling read throughput
+//! horizontally: every replica publishes the same generation-pinned
+//! [`StorageSnapshot`]s the primary would, through its own
+//! [`SnapshotCell`], and the serving layer fans point queries out
+//! across them (`crate::serving::ReadHandle`).
+//!
+//! ## Protocol
+//!
+//! **Bootstrap.** The replica copies the primary's `MANIFEST`-referenced
+//! sealed segment files (plus the write-once static table) through a
+//! [`ReplicationLog`] into a replica-local directory, opens them
+//! mmap-backed, and rebuilds the store exactly the way crash recovery
+//! does. Local files are named by the primary's never-reused segment
+//! seq, so a restarted replica revalidates its cache and fetches only
+//! what it is missing — bootstrap bytes are never re-shipped. The
+//! replica never touches the primary's flock-held `LOCK`; it holds its
+//! **own** lock on the replica directory instead, and relies on the
+//! store's write protocol (write-once synced segments, rename-replaced
+//! manifest, append-only WAL epochs) for consistent reads of a live
+//! primary.
+//!
+//! **Tailing.** Each poll round reads the manifest, reconciles the
+//! sealed stack (appended seqs install as seals; replaced contiguous
+//! runs install as compaction deltas through
+//! [`SegmentedStorage::install_compacted`] — a merged file ships once,
+//! old bytes never re-ship), then reads the WAL tail from a byte
+//! cursor. The WAL's epoch header **fences** the tail: a record is
+//! only applied when its epoch matches the manifest the round started
+//! from, so a seal racing the poll can never double-apply tail events
+//! that are already inside the sealed segment it just installed.
+//!
+//! **Generations.** The manifest anchors the epoch-start generation
+//! (`generation - wal_records`), and each applied tail record advances
+//! it by one — the identical arithmetic crash recovery uses — so a
+//! replica snapshot at generation *G* holds byte-for-byte the state
+//! the primary published at *G*. A round publishes only once it has
+//! caught up to the manifest's own record count (the transport reads
+//! the manifest *before* the WAL, so the tail always spans it).
+//!
+//! Metrics: `tgm_replica_lag_us`, `tgm_replica_applied_generation`,
+//! `tgm_replica_bootstrap_duration_us`, plus shipped-byte / applied /
+//! resync counters, all labeled per replica and scrapeable through the
+//! `/metrics` endpoint (`crate::obs::export`).
+
+pub mod log;
+
+pub use log::{DirTransport, ReplicationLog};
+
+use crate::error::{Result, TgmError};
+use crate::graph::{GraphStorage, SegmentedStorage, SnapshotCell, StorageSnapshot};
+use crate::obs::{self, Counter, Gauge, Label};
+use crate::persist::{self, format, segment_path, DirLock, Manifest, SegmentBacking, STATIC_FILE};
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How a replica stores and serves its mirrored state.
+#[derive(Debug, Clone)]
+pub struct ReplicaConfig {
+    /// Replica-local directory caching fetched segment files (named by
+    /// primary seq). Locked by the replica; must not be the primary's
+    /// directory.
+    pub dir: PathBuf,
+    /// Backing for fetched segment files (mmap by default — replicas
+    /// serve straight from the page cache).
+    pub backing: SegmentBacking,
+    /// How often the background tailer polls the primary.
+    pub poll_interval: Duration,
+}
+
+impl ReplicaConfig {
+    /// Defaults: mmap-backed segments, 10 ms poll cadence.
+    pub fn new(dir: impl Into<PathBuf>) -> ReplicaConfig {
+        ReplicaConfig {
+            dir: dir.into(),
+            backing: SegmentBacking::Mmap,
+            poll_interval: Duration::from_millis(10),
+        }
+    }
+
+    /// Set the sealed-segment backing.
+    pub fn with_backing(mut self, backing: SegmentBacking) -> ReplicaConfig {
+        self.backing = backing;
+        self
+    }
+
+    /// Set the background tailer's poll cadence.
+    pub fn with_poll_interval(mut self, interval: Duration) -> ReplicaConfig {
+        self.poll_interval = interval;
+        self
+    }
+}
+
+/// What bootstrap found and moved (returned by [`Replica::bootstrap`]).
+#[derive(Debug, Default, Clone)]
+pub struct BootstrapReport {
+    /// Sealed segments behind the replica after catch-up.
+    pub segments: usize,
+    /// Locally cached segment files revalidated instead of shipped (a
+    /// restarted replica re-fetches only what it is missing).
+    pub reused_segments: usize,
+    /// Bytes fetched from the primary (segments + static table).
+    pub shipped_bytes: u64,
+    /// WAL-tail events replayed during catch-up.
+    pub replayed_events: usize,
+    /// Applied generation after catch-up (0 when the primary is empty).
+    pub generation: u64,
+    /// Wall-clock bootstrap duration.
+    pub duration_us: u64,
+}
+
+/// What one poll round did (returned by [`Replica::poll`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PollOutcome {
+    /// A caught-up snapshot was (re)published this round. `false` when
+    /// the WAL fence tripped (a seal raced the round — the next round
+    /// converges) or the primary has no events yet.
+    pub published: bool,
+    /// WAL-tail events applied this round.
+    pub applied_events: usize,
+    /// Sealed segments installed this round (seals + compaction deltas).
+    pub installed_segments: usize,
+    /// The round fell back to a wholesale stack rebuild (still reusing
+    /// every locally cached file).
+    pub resynced: bool,
+}
+
+/// Replica-side counters shared with serving handles while the
+/// [`Replica`] itself lives on its tailer thread.
+#[derive(Debug, Default)]
+pub struct ReplicaShared {
+    applied_generation: AtomicU64,
+    /// Round-start µs of the last caught-up round: everything the
+    /// primary acknowledged before this instant is applied here.
+    fresh_as_of_us: AtomicU64,
+    shipped_bytes: AtomicU64,
+    resyncs: AtomicU64,
+}
+
+impl ReplicaShared {
+    /// Generation of the replica's latest caught-up state.
+    pub fn applied_generation(&self) -> u64 {
+        self.applied_generation.load(Ordering::Relaxed)
+    }
+
+    /// Upper bound on staleness: µs since the last caught-up round
+    /// began (`None` before the first). Everything the primary
+    /// acknowledged earlier than that instant is already applied.
+    pub fn lag_us(&self) -> Option<u64> {
+        let t = self.fresh_as_of_us.load(Ordering::Relaxed);
+        if t == 0 {
+            return None;
+        }
+        Some(obs::trace::now_us().saturating_sub(t))
+    }
+
+    /// Cumulative bytes fetched from the primary.
+    pub fn shipped_bytes(&self) -> u64 {
+        self.shipped_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Wholesale resyncs taken (anomalous manifest diffs; normally 0).
+    pub fn resyncs(&self) -> u64 {
+        self.resyncs.load(Ordering::Relaxed)
+    }
+}
+
+/// One WAL-tailing replica of a primary durable store (see module
+/// docs). Drive it manually with [`Replica::poll`] or hand it to a
+/// background thread with [`Replica::spawn_tailer`].
+pub struct Replica {
+    name: String,
+    log: Arc<dyn ReplicationLog>,
+    dir: PathBuf,
+    backing: SegmentBacking,
+    _lock: DirLock,
+    store: SegmentedStorage,
+    cell: SnapshotCell,
+    /// The primary's write-once static table (kept for resync rebuilds).
+    static_feats: Vec<f32>,
+    /// Primary segment seqs mirrored by the store's sealed stack, in
+    /// order (the reconcile diff runs against this).
+    seqs: Vec<u64>,
+    /// WAL epoch the tail cursor is valid for.
+    epoch: u64,
+    /// Byte cursor into the primary's WAL (complete records only).
+    wal_offset: usize,
+    /// Records applied in the current epoch (the generation formula's
+    /// `k`; resets when the epoch advances).
+    applied_epoch_records: u64,
+    reused_segments: usize,
+    applied_events_total: u64,
+    shared: Arc<ReplicaShared>,
+    lag_gauge: Gauge,
+    applied_gauge: Gauge,
+    shipped_ctr: Counter,
+    applied_events_ctr: Counter,
+    installed_segments_ctr: Counter,
+    resync_ctr: Counter,
+    poll_errors_ctr: Counter,
+}
+
+/// Rounds bootstrap retries before giving up (each retry re-reads the
+/// manifest, so races with primary seals/compactions converge fast).
+const BOOTSTRAP_ROUNDS: usize = 8;
+
+impl Replica {
+    /// Bootstrap a replica of the primary behind `log` into
+    /// `cfg.dir`, catch up, and publish the first snapshot (unless the
+    /// primary is still empty). `name` labels this replica's metrics
+    /// and serving identity.
+    pub fn bootstrap(
+        name: impl Into<String>,
+        log: Arc<dyn ReplicationLog>,
+        cfg: ReplicaConfig,
+    ) -> Result<(Replica, BootstrapReport)> {
+        let name = name.into();
+        let start = obs::trace::now_us();
+        let mut span = obs::span("replica", "bootstrap").with_detail(name.clone());
+        std::fs::create_dir_all(&cfg.dir).map_err(|e| {
+            TgmError::Replica(format!("cannot create replica dir {}: {e}", cfg.dir.display()))
+        })?;
+        let lock = DirLock::acquire(&cfg.dir)?;
+
+        let label = Label::from(name.clone());
+        let registry = obs::registry();
+        let shared = Arc::new(ReplicaShared::default());
+
+        let man = log.manifest()?;
+        let (static_feats, static_shipped) = fetch_static_cached(log.as_ref(), &cfg.dir, &man)?;
+        shared.shipped_bytes.fetch_add(static_shipped, Ordering::Relaxed);
+        let shipped_ctr =
+            registry.counter("tgm_replica_shipped_bytes_total", &[("replica", label.clone())]);
+        shipped_ctr.add(static_shipped);
+
+        let mut replica = Replica {
+            store: SegmentedStorage::from_replica_parts(
+                man.num_nodes,
+                man.fixed_granularity,
+                man.static_feat_dim,
+                static_feats.clone(),
+                Vec::new(),
+                0,
+            ),
+            cell: SnapshotCell::new(),
+            static_feats,
+            seqs: Vec::new(),
+            epoch: man.wal_epoch,
+            wal_offset: 0,
+            applied_epoch_records: 0,
+            reused_segments: 0,
+            applied_events_total: 0,
+            shared: Arc::clone(&shared),
+            lag_gauge: registry.gauge("tgm_replica_lag_us", &[("replica", label.clone())]),
+            applied_gauge: registry
+                .gauge("tgm_replica_applied_generation", &[("replica", label.clone())]),
+            shipped_ctr,
+            applied_events_ctr: registry
+                .counter("tgm_replica_applied_events_total", &[("replica", label.clone())]),
+            installed_segments_ctr: registry
+                .counter("tgm_replica_installed_segments_total", &[("replica", label.clone())]),
+            resync_ctr: registry
+                .counter("tgm_replica_resyncs_total", &[("replica", label.clone())]),
+            poll_errors_ctr: registry
+                .counter("tgm_replica_poll_errors_total", &[("replica", label.clone())]),
+            name,
+            log,
+            dir: cfg.dir,
+            backing: cfg.backing,
+            _lock: lock,
+        };
+
+        // Catch up. A round can race a primary seal (WAL fence) or
+        // compaction (segment file vanishing between manifest read and
+        // fetch); both converge on the next round's fresh manifest.
+        let mut last_err: Option<TgmError> = None;
+        for _ in 0..BOOTSTRAP_ROUNDS {
+            match replica.poll() {
+                Ok(outcome) => {
+                    last_err = None;
+                    if outcome.published || replica.store.total_edges() == 0 {
+                        break;
+                    }
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        if let Some(e) = last_err {
+            return Err(e);
+        }
+
+        let report = BootstrapReport {
+            segments: replica.seqs.len(),
+            reused_segments: replica.reused_segments,
+            shipped_bytes: replica.shared.shipped_bytes(),
+            replayed_events: replica.applied_events_total as usize,
+            generation: replica.shared.applied_generation(),
+            duration_us: obs::trace::now_us().saturating_sub(start),
+        };
+        span.set_detail(format!(
+            "{} segments={} reused={} shipped_bytes={} replayed={} generation={}",
+            replica.name,
+            report.segments,
+            report.reused_segments,
+            report.shipped_bytes,
+            report.replayed_events,
+            report.generation
+        ));
+        drop(span);
+        registry
+            .histogram("tgm_replica_bootstrap_duration_us", &[("replica", label)])
+            .record_us(report.duration_us);
+        Ok((replica, report))
+    }
+
+    /// One catch-up round: reconcile the sealed stack against the
+    /// primary's manifest, apply the WAL tail behind the epoch fence,
+    /// and republish if caught up (see module docs). Safe to call at
+    /// any cadence; an error leaves the replica consistent and the next
+    /// round retries from the cursor.
+    pub fn poll(&mut self) -> Result<PollOutcome> {
+        let round_start = obs::trace::now_us();
+        let mut outcome = PollOutcome::default();
+        let m = self.log.manifest()?;
+        if m.num_nodes != self.store.num_nodes() {
+            return Err(TgmError::Replica(format!(
+                "primary changed num_nodes from {} to {} under replica `{}`",
+                self.store.num_nodes(),
+                m.num_nodes,
+                self.name
+            )));
+        }
+        if m.wal_epoch < self.epoch {
+            return Err(TgmError::Replica(format!(
+                "primary wal epoch went backwards ({} -> {}) under replica `{}`",
+                self.epoch, m.wal_epoch, self.name
+            )));
+        }
+        if m.wal_epoch > self.epoch {
+            // The primary sealed: every tail event we replayed this
+            // epoch is inside a segment the reconcile below installs.
+            self.store.replica_clear_tail();
+            self.epoch = m.wal_epoch;
+            self.wal_offset = 0;
+            self.applied_epoch_records = 0;
+        }
+        if m.segments != self.seqs {
+            self.reconcile(&m, &mut outcome)?;
+        }
+        if outcome.installed_segments > 0 || outcome.resynced {
+            persist::sweep_unreferenced_segments(&self.dir, &self.seqs);
+        }
+
+        let tail = self.log.wal_tail(self.epoch, self.wal_offset)?;
+        if tail.epoch != self.epoch {
+            if tail.epoch < self.epoch {
+                return Err(TgmError::Replica(format!(
+                    "primary wal epoch went backwards ({} -> {}) under replica `{}`",
+                    self.epoch, tail.epoch, self.name
+                )));
+            }
+            // Fenced: the primary sealed after this round's manifest
+            // read. Nothing is applied (the records we hold cursors for
+            // are inside a segment the next round installs), and this
+            // round must not publish — its generation arithmetic spans
+            // the seal.
+            return Ok(outcome);
+        }
+        let n = tail.events.len();
+        for ev in tail.events {
+            if let Err(e) = self.store.replay_append(ev) {
+                // The cursor no longer matches what was applied; a
+                // wholesale rebuild from the (all-durable) manifest
+                // restores consistency before surfacing the error.
+                self.resync(&m, &mut outcome)?;
+                return Err(e);
+            }
+        }
+        self.wal_offset = tail.end_offset;
+        self.applied_epoch_records += n as u64;
+        self.applied_events_total += n as u64;
+        self.applied_events_ctr.add(n as u64);
+        outcome.applied_events = n;
+
+        // Publish only when caught up past the manifest's own record
+        // count: the transport reads the manifest before the WAL, so a
+        // complete tail always spans it — falling short means a torn
+        // in-flight record cut the read early; retry next round.
+        if self.applied_epoch_records >= m.wal_records {
+            let anchor = m.generation.saturating_sub(m.wal_records);
+            let generation = anchor + self.applied_epoch_records;
+            self.store.set_replica_generation(generation);
+            if self.store.total_edges() > 0 {
+                self.store.publish_to(&self.cell)?;
+                outcome.published = true;
+            }
+            self.shared.applied_generation.store(generation, Ordering::Relaxed);
+            self.shared.fresh_as_of_us.store(round_start.max(1), Ordering::Relaxed);
+            self.applied_gauge.set(generation.min(i64::MAX as u64) as i64);
+            let lag = obs::trace::now_us().saturating_sub(round_start);
+            self.lag_gauge.set(lag.min(i64::MAX as u64) as i64);
+        }
+        Ok(outcome)
+    }
+
+    /// Diff the local seq stack against the manifest's and apply the
+    /// difference: appended seqs install as seals, contiguous replaced
+    /// runs install as compaction deltas (one merged file ships; the
+    /// run's old bytes never re-ship). Any shape the two moves cannot
+    /// explain falls back to [`Replica::resync`].
+    fn reconcile(&mut self, m: &Manifest, outcome: &mut PollOutcome) -> Result<()> {
+        let mset: HashSet<u64> = m.segments.iter().copied().collect();
+        let mut i = 0usize;
+        let mut j = 0usize;
+        loop {
+            let local = self.seqs.get(i).copied();
+            let remote = m.segments.get(j).copied();
+            match (local, remote) {
+                (None, None) => break,
+                (Some(l), Some(r)) if l == r => {
+                    i += 1;
+                    j += 1;
+                }
+                _ => {
+                    // Maximal run of local seqs the manifest dropped.
+                    let mut k = i;
+                    while k < self.seqs.len() && !mset.contains(&self.seqs[k]) {
+                        k += 1;
+                    }
+                    if k > i {
+                        // Replaced run: a compaction delta addressed by
+                        // the new merged seq.
+                        let Some(seq) = remote else {
+                            return self.resync(m, outcome);
+                        };
+                        if self.seqs.contains(&seq) {
+                            return self.resync(m, outcome);
+                        }
+                        let merged = self.fetch_local_segment(seq, m.num_nodes)?;
+                        let (_, ids) = self.store.sealed_segments();
+                        let replaced = ids[i..k].to_vec();
+                        if replaced.len() < 2
+                            || !self.store.install_compacted(merged, &replaced, None)?
+                        {
+                            // A merged run folding a seal this replica
+                            // never saw individually (seal + compaction
+                            // between two polls) — rebuild wholesale,
+                            // still reusing every cached file.
+                            return self.resync(m, outcome);
+                        }
+                        self.seqs.splice(i..k, [seq]);
+                        self.store.replica_recompute_sealed_invariants();
+                        self.installed_segments_ctr.inc();
+                        outcome.installed_segments += 1;
+                        i += 1;
+                        j += 1;
+                    } else if local.is_none() {
+                        // Appended seal.
+                        let Some(seq) = remote else {
+                            return self.resync(m, outcome);
+                        };
+                        let seg = self.fetch_local_segment(seq, m.num_nodes)?;
+                        self.store.replica_install_sealed(Arc::new(seg));
+                        self.seqs.push(seq);
+                        self.installed_segments_ctr.inc();
+                        outcome.installed_segments += 1;
+                        i += 1;
+                        j += 1;
+                    } else {
+                        // A local seq the manifest still holds, out of
+                        // position — nothing the protocol produces.
+                        return self.resync(m, outcome);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild the sealed stack wholesale from the manifest. The
+    /// anomaly escape hatch: correctness never depends on the diff in
+    /// [`Replica::reconcile`] staying two-move-shaped. Every locally
+    /// cached file is revalidated and reused, so even this path ships
+    /// only segments the replica has never held.
+    fn resync(&mut self, m: &Manifest, outcome: &mut PollOutcome) -> Result<()> {
+        let mut sealed = Vec::with_capacity(m.segments.len());
+        for &seq in &m.segments {
+            sealed.push(Arc::new(self.fetch_local_segment(seq, m.num_nodes)?));
+        }
+        for w in sealed.windows(2) {
+            if w[1].start_time() < w[0].end_time() {
+                return Err(TgmError::Replica(
+                    "primary manifest orders segments with overlapping time spans".into(),
+                ));
+            }
+        }
+        self.store = SegmentedStorage::from_replica_parts(
+            m.num_nodes,
+            m.fixed_granularity,
+            m.static_feat_dim,
+            self.static_feats.clone(),
+            sealed,
+            m.generation.saturating_sub(m.wal_records),
+        );
+        self.seqs = m.segments.clone();
+        self.epoch = m.wal_epoch;
+        self.wal_offset = 0;
+        self.applied_epoch_records = 0;
+        self.shared.resyncs.fetch_add(1, Ordering::Relaxed);
+        self.resync_ctr.inc();
+        outcome.resynced = true;
+        Ok(())
+    }
+
+    /// Open segment `seq` from the local cache, or ship it from the
+    /// primary (atomically writing the local copy first, so a killed
+    /// replica never caches a torn file).
+    fn fetch_local_segment(&mut self, seq: u64, num_nodes: usize) -> Result<GraphStorage> {
+        let path = segment_path(&self.dir, seq);
+        if path.exists() {
+            if let Ok(seg) = format::read_segment_backed(&path, self.backing) {
+                if seg.num_nodes() == num_nodes {
+                    self.reused_segments += 1;
+                    return Ok(seg);
+                }
+            }
+            // Unreadable or mismatched cache entry: re-ship below.
+        }
+        let bytes = self.log.fetch_segment(seq)?;
+        self.shared.shipped_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        self.shipped_ctr.add(bytes.len() as u64);
+        format::write_atomic(&path, &bytes)?;
+        let seg = format::read_segment_backed(&path, self.backing)?;
+        if seg.num_nodes() != num_nodes {
+            return Err(TgmError::Replica(format!(
+                "segment {seq} spans {} nodes but the primary manifest says {num_nodes}",
+                seg.num_nodes()
+            )));
+        }
+        Ok(seg)
+    }
+
+    /// Pin the latest published generation. Typed error before the
+    /// first publish (bootstrap publishes unless the primary is empty).
+    pub fn pin(&self) -> Result<Arc<StorageSnapshot>> {
+        self.cell.pin().ok_or_else(|| {
+            TgmError::Serving(format!(
+                "replica `{}` has not published a snapshot yet",
+                self.name
+            ))
+        })
+    }
+
+    /// This replica's name (metrics label / serving identity).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The publication cell replicas of this store serve from (clones
+    /// share one slot, like any [`SnapshotCell`]).
+    pub fn cell(&self) -> SnapshotCell {
+        self.cell.clone()
+    }
+
+    /// Counters shared with serving handles (see [`ReplicaShared`]).
+    pub fn shared(&self) -> Arc<ReplicaShared> {
+        Arc::clone(&self.shared)
+    }
+
+    /// Generation of the latest caught-up state.
+    pub fn applied_generation(&self) -> u64 {
+        self.shared.applied_generation()
+    }
+
+    /// Cumulative bytes fetched from the primary.
+    pub fn shipped_bytes(&self) -> u64 {
+        self.shared.shipped_bytes()
+    }
+
+    /// Sealed segments currently mirrored.
+    pub fn num_sealed_segments(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Edge events applied (sealed + tail).
+    pub fn total_edges(&self) -> usize {
+        self.store.total_edges()
+    }
+
+    /// Move the replica onto a background thread polling at
+    /// `interval`. Poll errors are counted
+    /// (`tgm_replica_poll_errors_total`) and retried — transient races
+    /// with primary seals and compactions are expected. Stop (and get
+    /// the replica back) with [`ReplicaTailer::stop`]; dropping the
+    /// tailer stops it too.
+    pub fn spawn_tailer(self, interval: Duration) -> ReplicaTailer {
+        let mut replica = self;
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = replica.shared();
+        let cell = replica.cell();
+        let flag = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name(format!("tgm-replica-{}", replica.name))
+            .spawn(move || {
+                while !flag.load(Ordering::Relaxed) {
+                    if replica.poll().is_err() {
+                        replica.poll_errors_ctr.inc();
+                    }
+                    std::thread::park_timeout(interval);
+                }
+                replica
+            })
+            .expect("failed to spawn replica tailer thread");
+        ReplicaTailer { stop, shared, cell, thread: Some(thread) }
+    }
+}
+
+/// Read the write-once static table from the local cache, or ship it.
+/// Returns the features plus how many bytes were shipped.
+fn fetch_static_cached(
+    log: &dyn ReplicationLog,
+    dir: &Path,
+    m: &Manifest,
+) -> Result<(Vec<f32>, u64)> {
+    if m.static_feat_dim == 0 {
+        return Ok((Vec::new(), 0));
+    }
+    let path = dir.join(STATIC_FILE);
+    if path.exists() {
+        if let Ok((dim, feats)) = format::read_static(&path) {
+            if dim == m.static_feat_dim && feats.len() == dim * m.num_nodes {
+                return Ok((feats, 0));
+            }
+        }
+    }
+    let bytes = log.fetch_static()?;
+    let shipped = bytes.len() as u64;
+    format::write_atomic(&path, &bytes)?;
+    let (dim, feats) = format::decode_static(&bytes)?;
+    if dim != m.static_feat_dim || feats.len() != dim * m.num_nodes {
+        return Err(TgmError::Replica(format!(
+            "static table holds {} values at dim {dim}, primary manifest expects {} x {}",
+            feats.len(),
+            m.num_nodes,
+            m.static_feat_dim
+        )));
+    }
+    Ok((feats, shipped))
+}
+
+/// Handle to a background tailer thread (see [`Replica::spawn_tailer`]).
+pub struct ReplicaTailer {
+    stop: Arc<AtomicBool>,
+    shared: Arc<ReplicaShared>,
+    cell: SnapshotCell,
+    thread: Option<std::thread::JoinHandle<Replica>>,
+}
+
+impl ReplicaTailer {
+    /// The replica's publication cell (for serving handles).
+    pub fn cell(&self) -> SnapshotCell {
+        self.cell.clone()
+    }
+
+    /// The replica's shared counters.
+    pub fn shared(&self) -> Arc<ReplicaShared> {
+        Arc::clone(&self.shared)
+    }
+
+    /// Stop the tailer and get the [`Replica`] back (e.g. to poll it
+    /// manually or drop it cleanly).
+    pub fn stop(mut self) -> Replica {
+        self.stop.store(true, Ordering::Relaxed);
+        let thread = self.thread.take().expect("replica tailer already joined");
+        thread.thread().unpark();
+        thread.join().expect("replica tailer thread panicked")
+    }
+}
+
+impl Drop for ReplicaTailer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(thread) = self.thread.take() {
+            thread.thread().unpark();
+            let _ = thread.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeEvent, SealPolicy};
+    use crate::persist::DurabilityPolicy;
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "tgm_replica_test_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn edge(t: i64, src: u32, dst: u32) -> EdgeEvent {
+        EdgeEvent { t, src, dst, features: vec![t as f32, 0.25] }
+    }
+
+    fn primary(dir: &Path, seal_every: usize) -> SegmentedStorage {
+        SegmentedStorage::new(16, SealPolicy::by_events(seal_every))
+            .with_durability(DurabilityPolicy::new(dir))
+            .unwrap()
+    }
+
+    fn assert_same_content(primary: &mut SegmentedStorage, replica: &mut Replica) {
+        let a = primary.snapshot().unwrap();
+        let b = replica.pin().unwrap();
+        assert_eq!(a.generation(), b.generation(), "generations diverge");
+        assert_eq!(a.num_edges(), b.num_edges());
+        assert_eq!(a.granularity(), b.granularity(), "inferred granularity diverges");
+        for i in 0..a.num_edges() {
+            assert_eq!(a.edge_ts(i), b.edge_ts(i), "edge {i} ts");
+            assert_eq!(a.edge_src(i), b.edge_src(i), "edge {i} src");
+            assert_eq!(a.edge_dst(i), b.edge_dst(i), "edge {i} dst");
+        }
+    }
+
+    #[test]
+    fn replica_bootstraps_from_a_live_primary_and_tails_appends() {
+        let pdir = test_dir("tail_primary");
+        let rdir = test_dir("tail_replica");
+        let mut p = primary(&pdir, 4);
+        for i in 0..10 {
+            p.append_edge(edge(1_000 * (i + 1), 0, 1)).unwrap();
+        }
+        // 2 sealed segments + 2 events in the WAL tail; the primary
+        // stays live (lock held) the whole time.
+        let log = Arc::new(DirTransport::new(&pdir));
+        let (mut r, report) =
+            Replica::bootstrap("r0", log, ReplicaConfig::new(&rdir)).unwrap();
+        assert_eq!(report.segments, 2);
+        assert_eq!(report.replayed_events, 2);
+        assert!(report.shipped_bytes > 0);
+        assert_eq!(report.generation, p.generation());
+        assert_same_content(&mut p, &mut r);
+
+        // New appends on the primary stream over through the tail...
+        p.append_edge(edge(11_000, 2, 3)).unwrap();
+        let o = r.poll().unwrap();
+        assert!(o.published);
+        assert_eq!(o.applied_events, 1);
+        assert_same_content(&mut p, &mut r);
+
+        // ...and a seal replaces the replayed tail with the sealed
+        // file, without double-applying across the epoch fence.
+        p.append_edge(edge(12_000, 2, 3)).unwrap();
+        assert!(p.append_edge(edge(13_000, 2, 4)).unwrap(), "this append should seal");
+        let o = r.poll().unwrap();
+        assert_eq!(o.installed_segments, 1);
+        assert_same_content(&mut p, &mut r);
+    }
+
+    #[test]
+    fn compaction_ships_one_delta_and_never_rebootstraps() {
+        let pdir = test_dir("delta_primary");
+        let rdir = test_dir("delta_replica");
+        let mut p = primary(&pdir, 4);
+        for i in 0..16 {
+            p.append_edge(edge(500 * (i + 1), 1, 2)).unwrap();
+        }
+        let log: Arc<dyn ReplicationLog> = Arc::new(DirTransport::new(&pdir));
+        let (mut r, report) =
+            Replica::bootstrap("r1", Arc::clone(&log), ReplicaConfig::new(&rdir)).unwrap();
+        assert_eq!(report.segments, 4);
+        let shipped_before = r.shipped_bytes();
+
+        assert!(p.compact().unwrap());
+        let o = r.poll().unwrap();
+        assert_eq!(o.installed_segments, 1, "one merged file replaces the whole run");
+        assert!(!o.resynced);
+        assert_eq!(r.num_sealed_segments(), 1);
+        let delta = r.shipped_bytes() - shipped_before;
+        assert!(delta > 0, "the merged segment itself must ship");
+        assert_same_content(&mut p, &mut r);
+
+        // A replica restart re-fetches nothing: every live file is
+        // already cached locally under its primary seq.
+        drop(r);
+        let (mut r2, report2) =
+            Replica::bootstrap("r1b", log, ReplicaConfig::new(&rdir)).unwrap();
+        assert_eq!(report2.reused_segments, 1);
+        assert_eq!(report2.shipped_bytes, 0, "bootstrap bytes are never re-shipped");
+        assert_same_content(&mut p, &mut r2);
+    }
+
+    #[test]
+    fn tailer_thread_keeps_a_replica_within_bounded_lag() {
+        let pdir = test_dir("tailer_primary");
+        let rdir = test_dir("tailer_replica");
+        let mut p = primary(&pdir, 32);
+        p.append_edge(edge(10, 0, 1)).unwrap();
+        let (r, _) = Replica::bootstrap(
+            "r2",
+            Arc::new(DirTransport::new(&pdir)),
+            ReplicaConfig::new(&rdir),
+        )
+        .unwrap();
+        let tailer = r.spawn_tailer(Duration::from_millis(1));
+        for i in 0..200 {
+            p.append_edge(edge(20 + i, 0, 1)).unwrap();
+        }
+        let target = p.generation();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while tailer.shared().applied_generation() < target {
+            assert!(std::time::Instant::now() < deadline, "replica never caught up");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut r = tailer.stop();
+        assert_same_content(&mut p, &mut r);
+        assert!(r.shared().lag_us().is_some());
+    }
+}

@@ -27,6 +27,17 @@
 //! `Arc`s. `examples/multi_tenant_serving.rs` runs ≥3 tenants ingesting
 //! and serving concurrently; the `ablation.sharded` bench compares one
 //! shared pool against per-tenant dedicated prefetch loaders.
+//!
+//! Reads scale out past one store through the [`ReadHandle`] trait: a
+//! writable [`TenantHandle`] and a WAL-tailing [`ReplicaHandle`] (see
+//! [`crate::replica`]) serve the identical pin / batch-stream /
+//! point-query surface, [`ServingConfig`] is the single entry point
+//! that decides which one a config builds
+//! ([`ServingConfig::primary`] / [`ServingConfig::replica`]), and
+//! [`TenantRouter::read_handle`] picks the freshest registered handle
+//! for an id while [`TenantRouter::read_handles`] exposes the whole
+//! fan-out set. `examples/replicated_serving.rs` runs one primary and
+//! two tailing replicas over a shared pool.
 
 use crate::error::{Result, TgmError};
 use crate::graph::{
@@ -38,12 +49,20 @@ use crate::loader::{
     BatchBy, PointTicket, PooledStream, QosTag, RequestClass, ServingPool, StreamConfig,
 };
 use crate::obs::{self, Counter, Gauge, Label};
-use crate::persist::{self, Compactor, CompactorConfig, DurabilityPolicy};
+use crate::persist::{
+    self, Compactor, CompactorConfig, DurabilityPolicy, RecoveryReport, SegmentBacking,
+};
+use crate::replica::{
+    BootstrapReport, DirTransport, Replica, ReplicaConfig, ReplicaShared, ReplicaTailer,
+    ReplicationLog,
+};
 use crate::util::TimeGranularity;
 use std::collections::HashMap;
 use std::fmt;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Name of one tenant graph (routing key).
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -164,6 +183,7 @@ impl TenantConfig {
 
     /// Persist the tenant's store under `policy.dir` (recovering an
     /// existing store on restart).
+    #[deprecated(note = "build through `ServingConfig::primary` instead")]
     pub fn with_durability(mut self, policy: DurabilityPolicy) -> TenantConfig {
         self.durable = Some(policy);
         self
@@ -171,6 +191,7 @@ impl TenantConfig {
 
     /// Set the tenant's scheduling weight (relative service share on
     /// the shared pool).
+    #[deprecated(note = "use `ServingConfig::qos_weight` instead")]
     pub fn with_qos_weight(mut self, weight: u32) -> TenantConfig {
         self.qos.weight = weight;
         self
@@ -178,9 +199,219 @@ impl TenantConfig {
 
     /// Cap the tenant's per-class queues: beyond `cap` queued requests,
     /// new ones are rejected with [`TgmError::Backpressure`].
+    #[deprecated(note = "use `ServingConfig::admission_cap` instead")]
     pub fn with_admission_cap(mut self, cap: usize) -> TenantConfig {
         self.qos.max_queued = Some(cap.max(1));
         self
+    }
+}
+
+/// Where a [`ServingConfig`] puts the graph's bytes.
+#[derive(Clone)]
+enum ServingRole {
+    /// In-memory writer, no durable backing.
+    InMemory,
+    /// Durable writer over this directory (recovered when it exists).
+    Primary(PathBuf),
+    /// WAL-tailing read replica: bootstrap from `log`, keep local copies
+    /// under `dir` (see [`crate::replica`]).
+    Replica { log: Arc<dyn ReplicationLog>, dir: PathBuf },
+}
+
+/// Single entry point for serving configuration: the storage role
+/// (in-memory, durable primary, or read replica) is fixed by the
+/// constructor, every knob that used to be scattered across
+/// [`TenantConfig`], [`DurabilityPolicy`] and [`QosPolicy`] builders
+/// hangs off one value, and the router consumes it directly via
+/// [`TenantRouter::add_primary`] / [`TenantRouter::add_replica`].
+///
+/// ```no_run
+/// use tgm::serving::{ServingConfig, TenantRouter};
+/// let mut router = TenantRouter::new();
+/// let _primary = router.add_primary(
+///     "events",
+///     ServingConfig::primary(1024, "/var/lib/tgm/events")
+///         .group_commit()
+///         .qos_weight(4),
+/// )?;
+/// let _replica = router.add_replica(
+///     "events",
+///     ServingConfig::replica("/var/lib/tgm/events", "/var/lib/tgm/events-r0"),
+/// )?;
+/// # Ok::<(), tgm::TgmError>(())
+/// ```
+#[derive(Clone)]
+pub struct ServingConfig {
+    role: ServingRole,
+    num_nodes: usize,
+    seal: SealPolicy,
+    compact_after: usize,
+    granularity: Option<TimeGranularity>,
+    qos: QosPolicy,
+    fsync: bool,
+    group_commit: bool,
+    mmap: bool,
+    poll_interval: Duration,
+}
+
+impl ServingConfig {
+    fn base(role: ServingRole, num_nodes: usize, mmap: bool) -> ServingConfig {
+        ServingConfig {
+            role,
+            num_nodes,
+            seal: SealPolicy::default(),
+            compact_after: 8,
+            granularity: None,
+            qos: QosPolicy::default(),
+            fsync: false,
+            group_commit: false,
+            mmap,
+            poll_interval: Duration::from_millis(10),
+        }
+    }
+
+    /// In-memory tenant (no durable backing), default policies.
+    pub fn in_memory(num_nodes: usize) -> ServingConfig {
+        ServingConfig::base(ServingRole::InMemory, num_nodes, false)
+    }
+
+    /// Durable primary persisting under `dir` (recovering an existing
+    /// store on restart). Heap-backed, no fsync per append by default —
+    /// opt into [`ServingConfig::fsync`], [`ServingConfig::group_commit`]
+    /// or [`ServingConfig::mmap`].
+    pub fn primary(num_nodes: usize, dir: impl Into<PathBuf>) -> ServingConfig {
+        ServingConfig::base(ServingRole::Primary(dir.into()), num_nodes, false)
+    }
+
+    /// Read replica of the primary persisting at `primary_dir`, keeping
+    /// its local segment copies under `replica_dir`. Mmap-backed by
+    /// default (the replica's working set is read-only file bytes). The
+    /// node-id space, granularity and seal policy all come from the
+    /// primary's manifest, so only QoS and replication knobs apply.
+    pub fn replica(
+        primary_dir: impl Into<PathBuf>,
+        replica_dir: impl Into<PathBuf>,
+    ) -> ServingConfig {
+        ServingConfig::replica_over(Arc::new(DirTransport::new(primary_dir)), replica_dir)
+    }
+
+    /// Read replica over an arbitrary [`ReplicationLog`] transport
+    /// (socket-ready variant of [`ServingConfig::replica`]).
+    pub fn replica_over(
+        log: Arc<dyn ReplicationLog>,
+        replica_dir: impl Into<PathBuf>,
+    ) -> ServingConfig {
+        ServingConfig::base(ServingRole::Replica { log, dir: replica_dir.into() }, 0, true)
+    }
+
+    /// Set the primary's seal policy.
+    pub fn seal(mut self, seal: SealPolicy) -> ServingConfig {
+        self.seal = seal;
+        self
+    }
+
+    /// Set the primary's synchronous compaction threshold.
+    pub fn compact_after(mut self, n: usize) -> ServingConfig {
+        self.compact_after = n;
+        self
+    }
+
+    /// Fix the native granularity up front (primaries only; replicas
+    /// inherit it from the manifest).
+    pub fn granularity(mut self, g: TimeGranularity) -> ServingConfig {
+        self.granularity = Some(g);
+        self
+    }
+
+    /// Scheduling weight on the shared pool (relative service share).
+    pub fn qos_weight(mut self, weight: u32) -> ServingConfig {
+        self.qos.weight = weight;
+        self
+    }
+
+    /// Per-class admission cap: beyond `cap` queued requests, new ones
+    /// are rejected with [`TgmError::Backpressure`].
+    pub fn admission_cap(mut self, cap: usize) -> ServingConfig {
+        self.qos.max_queued = Some(cap.max(1));
+        self
+    }
+
+    /// Fsync every WAL append before acknowledging it (primaries).
+    pub fn fsync(mut self) -> ServingConfig {
+        self.fsync = true;
+        self
+    }
+
+    /// Group-commit the WAL: appends buffer and one fsync acknowledges
+    /// the whole commit window (primaries; implies fsync-on-ack).
+    pub fn group_commit(mut self) -> ServingConfig {
+        self.fsync = true;
+        self.group_commit = true;
+        self
+    }
+
+    /// Mmap sealed segment files instead of heap-copying them
+    /// (degrades to heap where unsupported; replicas default to this).
+    pub fn mmap(mut self) -> ServingConfig {
+        self.mmap = true;
+        self
+    }
+
+    /// How often a replica polls its primary for new state.
+    pub fn poll_interval(mut self, interval: Duration) -> ServingConfig {
+        self.poll_interval = interval;
+        self
+    }
+
+    /// Lower to the per-tenant storage config. Typed error for a
+    /// replica-role config (register those with
+    /// [`TenantRouter::add_replica`]).
+    pub fn into_tenant_config(self) -> Result<TenantConfig> {
+        let backing = if self.mmap { SegmentBacking::Mmap } else { SegmentBacking::Heap };
+        let durable = match self.role {
+            ServingRole::InMemory => None,
+            ServingRole::Primary(dir) => Some(DurabilityPolicy {
+                dir,
+                fsync_appends: self.fsync,
+                group_commit: self.group_commit,
+                backing,
+            }),
+            ServingRole::Replica { .. } => {
+                return Err(TgmError::Serving(
+                    "a replica ServingConfig cannot build a tenant; register it \
+                     with TenantRouter::add_replica"
+                        .into(),
+                ))
+            }
+        };
+        Ok(TenantConfig {
+            num_nodes: self.num_nodes,
+            seal: self.seal,
+            compact_after: self.compact_after,
+            granularity: self.granularity,
+            durable,
+            qos: self.qos,
+        })
+    }
+
+    /// Lower to the replica transport + config. Typed error for a
+    /// non-replica role.
+    fn into_replica_parts(self) -> Result<(Arc<dyn ReplicationLog>, ReplicaConfig, QosPolicy)> {
+        match self.role {
+            ServingRole::Replica { log, dir } => {
+                let backing =
+                    if self.mmap { SegmentBacking::Mmap } else { SegmentBacking::Heap };
+                let cfg = ReplicaConfig::new(dir)
+                    .with_backing(backing)
+                    .with_poll_interval(self.poll_interval);
+                Ok((log, cfg, self.qos))
+            }
+            _ => Err(TgmError::Serving(
+                "this ServingConfig builds a tenant (primary); register it with \
+                 TenantRouter::add_tenant or TenantRouter::add_primary"
+                    .into(),
+            )),
+        }
     }
 }
 
@@ -208,13 +439,19 @@ pub struct TenantHandle {
     snapshot_age: Gauge,
     /// Monotonic µs timestamp of the last publish (0 before the first).
     published_at_us: AtomicU64,
+    /// What recovery found on disk when this tenant was registered over
+    /// an existing durable directory (`None` for fresh/in-memory
+    /// tenants). Surfaced so operators can alert on torn tails or
+    /// unexpectedly large dropped byte counts instead of recovery
+    /// silently swallowing them.
+    recovery: Option<RecoveryReport>,
 }
 
 impl TenantHandle {
     fn build(id: TenantId, cfg: TenantConfig) -> Result<TenantHandle> {
-        let store = match &cfg.durable {
+        let (store, recovery) = match &cfg.durable {
             Some(policy) if persist::store_exists(&policy.dir) => {
-                let store = persist::recover(cfg.seal.clone(), policy.clone())?;
+                let (store, report) = persist::recover_with_report(cfg.seal.clone(), policy.clone())?;
                 if store.num_nodes() != cfg.num_nodes {
                     return Err(TgmError::Serving(format!(
                         "tenant `{id}` recovered {} nodes from {} but was configured \
@@ -224,7 +461,7 @@ impl TenantHandle {
                         cfg.num_nodes
                     )));
                 }
-                store
+                (store, Some(report))
             }
             durable => {
                 let mut store = SegmentedStorage::new(cfg.num_nodes, cfg.seal.clone());
@@ -234,7 +471,7 @@ impl TenantHandle {
                 if let Some(policy) = durable {
                     store = store.with_durability(policy.clone())?;
                 }
-                store
+                (store, None)
             }
         };
         let tenant = Label::from(id.as_str());
@@ -253,6 +490,7 @@ impl TenantHandle {
                 .gauge("tgm_published_generation", &[("tenant", tenant.clone())]),
             snapshot_age: registry.gauge("tgm_snapshot_age_us", &[("tenant", tenant)]),
             published_at_us: AtomicU64::new(0),
+            recovery,
         };
         // A recovered tenant serves its pre-crash data immediately.
         {
@@ -346,6 +584,15 @@ impl TenantHandle {
     /// Generation currently published (`None` before the first publish).
     pub fn published_generation(&self) -> Option<u64> {
         self.published.generation()
+    }
+
+    /// What recovery found on disk when this tenant was registered over
+    /// an existing durable directory: sealed segments reopened, WAL
+    /// records replayed, whether a torn trailing record was dropped and
+    /// how many bytes went with it. `None` when the tenant started
+    /// fresh (in-memory, or an empty durable directory).
+    pub fn recovery_report(&self) -> Option<&RecoveryReport> {
+        self.recovery.as_ref()
     }
 
     /// This tenant's scheduling policy.
@@ -444,11 +691,241 @@ impl TenantHandle {
     }
 }
 
+/// Uniform read surface over anything that publishes snapshot
+/// generations and serves under a QoS identity: a writable
+/// [`TenantHandle`] (primary) and a WAL-tailing [`ReplicaHandle`]
+/// expose the **same** pin / batch-stream / point-query API, so serving
+/// code programs against `&dyn ReadHandle` (or `Arc<dyn ReadHandle>`
+/// from [`TenantRouter::read_handle`]) and never branches on where the
+/// bytes came from. Pinned reads are generation-stable on both: a
+/// request that pinned generation *G* streams byte-identical batches
+/// from *G* regardless of concurrent publishes or replica catch-up.
+pub trait ReadHandle: Send + Sync {
+    /// The serving identity requests run under (routing key, QoS
+    /// tenant, metrics label).
+    fn id(&self) -> &TenantId;
+
+    /// Pin the latest published generation. Typed error before the
+    /// first publish (primary) or first applied round (replica).
+    fn pin(&self) -> Result<Arc<StorageSnapshot>>;
+
+    /// Generation currently published (`None` before the first).
+    fn published_generation(&self) -> Option<u64>;
+
+    /// The [`QosTag`] this handle's requests of `class` carry on the
+    /// shared pool's scheduler.
+    fn qos_tag(&self, class: RequestClass) -> QosTag;
+
+    /// A [`PointReader`] pinned to the latest published generation,
+    /// memoized per generation.
+    fn reader(&self) -> Result<PointReader>;
+
+    /// Open a pooled batch stream over the latest published generation
+    /// under this handle's QoS tag; the stream stays pinned to that
+    /// generation even as newer ones publish mid-iteration.
+    fn serve<'a>(
+        &self,
+        pool: &ServingPool,
+        by: BatchBy,
+        manager: &'a mut HookManager,
+        cfg: StreamConfig,
+    ) -> Result<PooledStream<'a>> {
+        let snap = self.pin()?;
+        let cfg = cfg.with_qos(self.qos_tag(RequestClass::BatchScan));
+        pool.stream(DGraph::full(snap), by, manager, cfg)
+    }
+
+    /// Answer one point query on the shared pool under this handle's
+    /// QoS tag, blocking for the response.
+    fn query(&self, pool: &ServingPool, query: PointQuery) -> Result<PointResponse> {
+        let reader = self.reader()?;
+        pool.point_query(&reader, &self.qos_tag(RequestClass::PointQuery), query)
+    }
+
+    /// Submit one point query without blocking for the response (pair
+    /// with [`PointTicket::wait`] to pipeline many queries).
+    fn submit_query(&self, pool: &ServingPool, query: PointQuery) -> Result<PointTicket> {
+        let reader = self.reader()?;
+        pool.submit_point(&reader, &self.qos_tag(RequestClass::PointQuery), query)
+    }
+}
+
+impl ReadHandle for TenantHandle {
+    fn id(&self) -> &TenantId {
+        TenantHandle::id(self)
+    }
+
+    fn pin(&self) -> Result<Arc<StorageSnapshot>> {
+        TenantHandle::pin(self)
+    }
+
+    fn published_generation(&self) -> Option<u64> {
+        TenantHandle::published_generation(self)
+    }
+
+    fn qos_tag(&self, class: RequestClass) -> QosTag {
+        TenantHandle::qos_tag(self, class)
+    }
+
+    fn reader(&self) -> Result<PointReader> {
+        TenantHandle::reader(self)
+    }
+}
+
+/// One read replica: a background tailer keeps a local
+/// [`crate::replica::Replica`] in sync with its primary, and this
+/// handle serves generation-pinned reads from the replica's publication
+/// cell under its own QoS identity — the read-only sibling of
+/// [`TenantHandle`], unified with it behind [`ReadHandle`].
+pub struct ReplicaHandle {
+    id: TenantId,
+    cell: SnapshotCell,
+    shared: Arc<ReplicaShared>,
+    qos: QosPolicy,
+    /// Per-replica CSR index cache (same reuse story as a tenant's).
+    adjacency: AdjacencyCache,
+    /// Memoized [`PointReader`] for the currently-published generation.
+    reader: Mutex<Option<PointReader>>,
+    /// Keeps the tailing thread alive; dropping the handle stops it.
+    tailer: Mutex<Option<ReplicaTailer>>,
+    report: BootstrapReport,
+}
+
+impl ReplicaHandle {
+    fn build(id: TenantId, name: String, cfg: ServingConfig) -> Result<ReplicaHandle> {
+        let (log, rcfg, qos) = cfg.into_replica_parts()?;
+        let poll = rcfg.poll_interval;
+        let (replica, report) = Replica::bootstrap(name.as_str(), log, rcfg)?;
+        let cell = replica.cell();
+        let shared = replica.shared();
+        let tailer = replica.spawn_tailer(poll);
+        Ok(ReplicaHandle {
+            id,
+            cell,
+            shared,
+            qos,
+            adjacency: AdjacencyCache::new(),
+            reader: Mutex::new(None),
+            tailer: Mutex::new(Some(tailer)),
+            report,
+        })
+    }
+
+    /// The serving identity (shared with the primary it replicates, so
+    /// the scheduler treats primary + replicas as one tenant).
+    pub fn id(&self) -> &TenantId {
+        &self.id
+    }
+
+    /// Pin the latest applied generation. Typed error before the first
+    /// applied round.
+    pub fn pin(&self) -> Result<Arc<StorageSnapshot>> {
+        self.cell.pin().ok_or_else(|| {
+            TgmError::Serving(format!(
+                "replica of `{}` has not applied a publishable generation yet",
+                self.id
+            ))
+        })
+    }
+
+    /// Generation currently published (`None` before the first round).
+    pub fn published_generation(&self) -> Option<u64> {
+        self.cell.generation()
+    }
+
+    /// The [`QosTag`] this replica's requests of `class` carry.
+    pub fn qos_tag(&self, class: RequestClass) -> QosTag {
+        let tag = QosTag::new(self.id.as_str(), class, self.qos.weight);
+        match self.qos.max_queued {
+            Some(cap) => tag.with_max_queued(cap),
+            None => tag,
+        }
+    }
+
+    /// A [`PointReader`] pinned to the latest applied generation,
+    /// memoized per generation (see [`TenantHandle::reader`]).
+    pub fn reader(&self) -> Result<PointReader> {
+        let snap = self.pin()?;
+        let mut cached = self.reader.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(r) = cached.as_ref() {
+            if r.snapshot().id() == snap.id() {
+                return Ok(r.clone());
+            }
+        }
+        let r = PointReader::with_cache(snap, &self.adjacency);
+        *cached = Some(r.clone());
+        Ok(r)
+    }
+
+    /// What bootstrap copied, reused and replayed (see
+    /// [`BootstrapReport`]) — the replica-side analogue of
+    /// [`TenantHandle::recovery_report`].
+    pub fn bootstrap_report(&self) -> &BootstrapReport {
+        &self.report
+    }
+
+    /// Replication lag in µs (now − the manifest freshness of the last
+    /// applied round); `None` before the first round.
+    pub fn lag_us(&self) -> Option<u64> {
+        self.shared.lag_us()
+    }
+
+    /// Generation of the last fully-applied round.
+    pub fn applied_generation(&self) -> u64 {
+        self.shared.applied_generation()
+    }
+
+    /// Segment/static bytes shipped from the primary so far (bootstrap
+    /// plus compaction deltas; cached reuse ships nothing).
+    pub fn shipped_bytes(&self) -> u64 {
+        self.shared.shipped_bytes()
+    }
+
+    /// Wholesale resyncs taken so far (0 on the incremental fast path).
+    pub fn resyncs(&self) -> u64 {
+        self.shared.resyncs()
+    }
+
+    /// Stop the background tailer and return the underlying replica
+    /// (e.g. to poll it manually); `None` if already stopped. Reads
+    /// keep serving the last applied generation.
+    pub fn stop_tailer(&self) -> Option<Replica> {
+        let mut tailer = self.tailer.lock().unwrap_or_else(|e| e.into_inner());
+        tailer.take().map(|t| t.stop())
+    }
+}
+
+impl ReadHandle for ReplicaHandle {
+    fn id(&self) -> &TenantId {
+        ReplicaHandle::id(self)
+    }
+
+    fn pin(&self) -> Result<Arc<StorageSnapshot>> {
+        ReplicaHandle::pin(self)
+    }
+
+    fn published_generation(&self) -> Option<u64> {
+        ReplicaHandle::published_generation(self)
+    }
+
+    fn qos_tag(&self, class: RequestClass) -> QosTag {
+        ReplicaHandle::qos_tag(self, class)
+    }
+
+    fn reader(&self) -> Result<PointReader> {
+        ReplicaHandle::reader(self)
+    }
+}
+
 /// Routing layer: tenant ids to handles, plus serving entry points that
 /// multiplex all tenants over one shared [`ServingPool`].
 #[derive(Default)]
 pub struct TenantRouter {
     tenants: HashMap<TenantId, Arc<TenantHandle>>,
+    /// Read replicas keyed by the logical tenant id they replicate
+    /// (which may have no local primary — e.g. replicating another
+    /// process's store).
+    replicas: HashMap<TenantId, Vec<Arc<ReplicaHandle>>>,
 }
 
 impl TenantRouter {
@@ -505,6 +982,83 @@ impl TenantRouter {
         self.tenants
             .get(id)
             .ok_or_else(|| TgmError::Serving(format!("unknown tenant `{id}`")))
+    }
+
+    /// Register a primary (writable) tenant from a [`ServingConfig`]
+    /// built with [`ServingConfig::in_memory`] or
+    /// [`ServingConfig::primary`]. Typed error for a replica-role
+    /// config (use [`TenantRouter::add_replica`]).
+    pub fn add_primary(
+        &mut self,
+        id: impl Into<TenantId>,
+        cfg: ServingConfig,
+    ) -> Result<Arc<TenantHandle>> {
+        self.add_tenant(id, cfg.into_tenant_config()?)
+    }
+
+    /// Register a read replica of logical tenant `id` from a
+    /// [`ServingConfig::replica`] config. The replica bootstraps from
+    /// the primary's durable state, spawns its background tailer, and
+    /// joins the router's read fan-out for `id` — the id does **not**
+    /// need a local primary (replicating another process's store is the
+    /// point), and several replicas may serve one id. Typed error for a
+    /// non-replica config.
+    pub fn add_replica(
+        &mut self,
+        id: impl Into<TenantId>,
+        cfg: ServingConfig,
+    ) -> Result<Arc<ReplicaHandle>> {
+        let id = id.into();
+        let slot = self.replicas.entry(id.clone()).or_default();
+        // Unique metrics identity per replica of one logical tenant.
+        let name = format!("{id}#r{}", slot.len());
+        let handle = Arc::new(ReplicaHandle::build(id, name, cfg)?);
+        slot.push(Arc::clone(&handle));
+        Ok(handle)
+    }
+
+    /// The freshest read handle for `id`: the registered handle
+    /// (primary or replica) with the highest published generation, the
+    /// primary winning ties. Typed error when `id` has neither a
+    /// primary nor replicas.
+    pub fn read_handle(&self, id: &TenantId) -> Result<Arc<dyn ReadHandle>> {
+        let mut best: Option<Arc<dyn ReadHandle>> =
+            self.tenants.get(id).map(|p| Arc::clone(p) as Arc<dyn ReadHandle>);
+        let mut best_gen = best.as_ref().and_then(|h| h.published_generation());
+        for r in self.replicas.get(id).map(|v| v.as_slice()).unwrap_or(&[]) {
+            let g = r.published_generation();
+            let fresher = match (g, best_gen) {
+                (Some(g), Some(b)) => g > b,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if fresher || best.is_none() {
+                best_gen = g;
+                best = Some(Arc::clone(r) as Arc<dyn ReadHandle>);
+            }
+        }
+        best.ok_or_else(|| {
+            TgmError::Serving(format!("unknown tenant `{id}` (no primary or replicas)"))
+        })
+    }
+
+    /// Every read handle registered for `id` (primary first, then
+    /// replicas in registration order) — the fan-out set for spreading
+    /// read load. Empty when `id` is unknown.
+    pub fn read_handles(&self, id: &TenantId) -> Vec<Arc<dyn ReadHandle>> {
+        let mut out: Vec<Arc<dyn ReadHandle>> = Vec::new();
+        if let Some(p) = self.tenants.get(id) {
+            out.push(Arc::clone(p) as Arc<dyn ReadHandle>);
+        }
+        if let Some(rs) = self.replicas.get(id) {
+            out.extend(rs.iter().map(|r| Arc::clone(r) as Arc<dyn ReadHandle>));
+        }
+        out
+    }
+
+    /// Replicas registered for `id` (empty when none).
+    pub fn replicas(&self, id: &TenantId) -> &[Arc<ReplicaHandle>] {
+        self.replicas.get(id).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     /// Registered tenant ids, sorted for deterministic iteration.
@@ -725,7 +1279,7 @@ mod tests {
     fn tenant_qos_policy_stamps_tags() {
         let mut router = TenantRouter::new();
         router
-            .add_tenant("vip", TenantConfig::new(8).with_qos_weight(9).with_admission_cap(17))
+            .add_primary("vip", ServingConfig::in_memory(8).qos_weight(9).admission_cap(17))
             .unwrap();
         let h = router.tenant(&TenantId::from("vip")).unwrap();
         assert_eq!(h.qos().weight, 9);
@@ -749,17 +1303,18 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let data = gen::by_name("wiki", 0.05, 17).unwrap();
         let cfg = || {
-            TenantConfig::new(data.storage().num_nodes())
-                .with_seal(SealPolicy::by_events(150))
-                .with_granularity(data.storage().granularity())
-                .with_durability(DurabilityPolicy::new(&dir))
+            ServingConfig::primary(data.storage().num_nodes(), &dir)
+                .seal(SealPolicy::by_events(150))
+                .granularity(data.storage().granularity())
         };
 
         // First life: ingest + publish, then "crash" (drop everything).
         {
             let mut router = TenantRouter::new();
             let id = TenantId::from("w");
-            router.add_tenant(id.clone(), cfg()).unwrap();
+            let fresh = router.add_primary(id.clone(), cfg()).unwrap();
+            // A fresh directory has nothing to recover — no report.
+            assert!(fresh.recovery_report().is_none());
             let mut source = ReplaySource::from_data(&data);
             router.ingest(&id, source.next_chunk(usize::MAX)).unwrap();
             router.publish(&id).unwrap();
@@ -769,8 +1324,15 @@ mod tests {
         // already published — serving resumes without re-ingestion.
         let mut router = TenantRouter::new();
         let id = TenantId::from("w");
-        let handle = router.add_tenant(id.clone(), cfg()).unwrap();
+        let handle = router.add_primary(id.clone(), cfg()).unwrap();
         assert!(handle.published_generation().is_some());
+        // The recovery diagnostics surface through registration.
+        let report = handle.recovery_report().expect("recovered tenant carries a report");
+        assert!(
+            report.sealed_segments > 0 || report.replayed_events > 0,
+            "recovery saw data: {report:?}"
+        );
+        assert!(!report.torn_tail, "clean shutdown must not report a torn tail");
         let snap = router.pin(&id).unwrap();
         assert_eq!(snap.num_edges(), data.storage().num_edges());
         assert_eq!(snap.edge_ts(), data.storage().edge_ts());
@@ -778,13 +1340,13 @@ mod tests {
 
         // A second tenant over the same directory is rejected up front
         // (two writers would destroy each other's WAL).
-        let err = router.add_tenant("w-dup", cfg()).unwrap_err();
+        let err = router.add_primary("w-dup", cfg()).unwrap_err();
         assert!(err.to_string().contains("exclusive"), "{err}");
 
         // A second *router* (stand-in for a second process) is fenced by
         // the directory lock while the first tenant's store is alive.
         let mut router2 = TenantRouter::new();
-        let err = router2.add_tenant("w2", cfg()).unwrap_err();
+        let err = router2.add_primary("w2", cfg()).unwrap_err();
         assert!(matches!(err, TgmError::Persist(_)), "{err}");
         assert!(err.to_string().contains("already holds"), "{err}");
 
@@ -793,12 +1355,7 @@ mod tests {
         drop(snap);
         drop(handle);
         drop(router);
-        let err = router2
-            .add_tenant(
-                "w3",
-                TenantConfig::new(3).with_durability(DurabilityPolicy::new(&dir)),
-            )
-            .unwrap_err();
+        let err = router2.add_primary("w3", ServingConfig::primary(3, &dir)).unwrap_err();
         assert!(matches!(err, TgmError::Serving(_)), "{err}");
     }
 
@@ -832,5 +1389,151 @@ mod tests {
             router.pin(&TenantId::from("fine")).unwrap().edge_ts(),
             router.pin(&TenantId::from("coarse")).unwrap().edge_ts()
         );
+    }
+
+    /// The deprecated builders remain thin shims: a `ServingConfig`
+    /// lowers to exactly the `TenantConfig`/`DurabilityPolicy` the old
+    /// builder chain produced.
+    #[test]
+    #[allow(deprecated)]
+    fn serving_config_lowers_to_what_the_deprecated_builders_built() {
+        let dir = std::env::temp_dir().join("tgm_serving_cfg_lowering");
+        let new = ServingConfig::primary(64, &dir)
+            .seal(SealPolicy::by_events(9))
+            .compact_after(3)
+            .granularity(TimeGranularity::Second)
+            .qos_weight(7)
+            .admission_cap(5)
+            .group_commit()
+            .mmap()
+            .into_tenant_config()
+            .unwrap();
+        let old = TenantConfig::new(64)
+            .with_seal(SealPolicy::by_events(9))
+            .with_compact_after(3)
+            .with_granularity(TimeGranularity::Second)
+            .with_qos_weight(7)
+            .with_admission_cap(5)
+            .with_durability(DurabilityPolicy::new(&dir).with_group_commit().with_mmap());
+        assert_eq!(new.num_nodes, old.num_nodes);
+        assert_eq!(new.compact_after, old.compact_after);
+        assert_eq!(new.granularity, old.granularity);
+        assert_eq!(new.qos.weight, old.qos.weight);
+        assert_eq!(new.qos.max_queued, old.qos.max_queued);
+        let (nd, od) = (new.durable.unwrap(), old.durable.unwrap());
+        assert_eq!(nd.dir, od.dir);
+        assert_eq!(nd.fsync_appends, od.fsync_appends);
+        assert_eq!(nd.group_commit, od.group_commit);
+        assert_eq!(nd.backing, od.backing);
+
+        // Role mismatches are typed errors, not silent misconfigs.
+        let err = ServingConfig::replica("/nope/p", "/nope/r").into_tenant_config().unwrap_err();
+        assert!(matches!(err, TgmError::Serving(_)), "{err}");
+        let err =
+            ServingConfig::in_memory(8).into_replica_parts().unwrap_err();
+        assert!(matches!(err, TgmError::Serving(_)), "{err}");
+    }
+
+    /// Tentpole: a WAL-tailing replica joins the router's read fan-out
+    /// and serves byte-identical generation-pinned reads through the
+    /// same [`ReadHandle`] surface as the primary.
+    #[test]
+    fn replica_serves_identical_reads_behind_the_unified_handle() {
+        let base =
+            std::env::temp_dir().join(format!("tgm_serving_replica_{}", std::process::id()));
+        let (dir, rdir) = (base.join("primary"), base.join("r0"));
+        let _ = std::fs::remove_dir_all(&base);
+        let data = gen::by_name("wiki", 0.05, 23).unwrap();
+        let pool = ServingPool::new(2);
+
+        let mut router = TenantRouter::new();
+        let id = TenantId::from("w");
+        let primary = router
+            .add_primary(
+                id.clone(),
+                ServingConfig::primary(data.storage().num_nodes(), &dir)
+                    .seal(SealPolicy::by_events(500))
+                    .granularity(data.storage().granularity()),
+            )
+            .unwrap();
+        let mut source = ReplaySource::from_data(&data);
+        router.ingest(&id, source.next_chunk(usize::MAX)).unwrap();
+        router.publish(&id).unwrap();
+        let primary_gen = primary.published_generation().unwrap();
+
+        // Replica bootstraps from the primary's live directory (no lock
+        // contention) and catches up to the same generation.
+        let replica = router
+            .add_replica(
+                id.clone(),
+                ServingConfig::replica(&dir, &rdir)
+                    .poll_interval(std::time::Duration::from_millis(1)),
+            )
+            .unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        while replica.published_generation() != Some(primary_gen) {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "replica stuck at {:?} (primary at {primary_gen})",
+                replica.published_generation()
+            );
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+
+        // Same generation, same bytes.
+        let (ps, rs) = (primary.pin().unwrap(), replica.pin().unwrap());
+        assert_eq!(ps.generation(), rs.generation());
+        assert_eq!(ps.edge_ts(), rs.edge_ts());
+        assert_eq!(ps.edge_src(), rs.edge_src());
+        assert_eq!(ps.edge_feats(), rs.edge_feats());
+
+        // Batch streams through the unified handle are byte-identical.
+        let streamed = |h: &dyn ReadHandle| {
+            let mut mp = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+            mp.activate("val").unwrap();
+            h.serve(&pool, BatchBy::Events(100), &mut mp, StreamConfig::default())
+                .unwrap()
+                .collect_all()
+                .unwrap()
+        };
+        identical(&streamed(primary.as_ref()), &streamed(replica.as_ref()));
+
+        // Point queries agree through the trait as well.
+        let q = PointQuery::NeighborsBefore { node: 0, t: ps.end_time() + 1, k: 4 };
+        let via_primary = ReadHandle::query(primary.as_ref(), &pool, q).unwrap();
+        let via_replica = ReadHandle::query(replica.as_ref(), &pool, q).unwrap();
+        assert_eq!(via_primary, via_replica);
+
+        // Freshest pick: tied generations go to the primary...
+        let picked = router.read_handle(&id).unwrap();
+        assert_eq!(picked.published_generation(), Some(primary_gen));
+        assert_eq!(router.read_handles(&id).len(), 2);
+
+        // ...but a replica that tailed unpublished WAL appends past the
+        // primary's published generation wins the pick.
+        primary
+            .ingest(vec![Event::Edge(crate::graph::EdgeEvent {
+                t: ps.end_time() + 60,
+                src: 0,
+                dst: 1,
+                features: vec![0.0; ps.edge_feat_dim()],
+            })])
+            .unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        while replica.published_generation() == Some(primary_gen) {
+            assert!(std::time::Instant::now() < deadline, "replica never saw the append");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let picked = router.read_handle(&id).unwrap();
+        assert!(picked.published_generation() > Some(primary_gen));
+
+        // Publishing restores the tie (and the primary's precedence).
+        let newer = primary.publish().unwrap();
+        assert_eq!(newer.generation(), replica.published_generation().unwrap());
+
+        assert!(replica.bootstrap_report().shipped_bytes > 0);
+        assert_eq!(replica.resyncs(), 0, "incremental path only");
+        assert!(replica.stop_tailer().is_some());
+        assert!(replica.stop_tailer().is_none(), "second stop is a no-op");
     }
 }

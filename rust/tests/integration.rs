@@ -14,9 +14,10 @@ use tgm::io::gen;
 use tgm::io::stream::{EventSource, ReplaySource};
 use tgm::loader::{BatchBy, DGDataLoader, PrefetchConfig, PrefetchLoader, ServingPool, StreamConfig};
 use tgm::models::EdgeBankMode;
-use tgm::persist::{self, Compactor, CompactorConfig, DurabilityPolicy};
+use tgm::persist::{self, Compactor, CompactorConfig, DurabilityPolicy, SegmentBacking};
+use tgm::replica::{DirTransport, Replica, ReplicaConfig};
 use tgm::runtime::XlaEngine;
-use tgm::serving::{TenantConfig, TenantId, TenantRouter};
+use tgm::serving::{ReadHandle, ServingConfig, TenantConfig, TenantId, TenantRouter};
 use tgm::util::TimeGranularity;
 
 fn engine() -> Option<XlaEngine> {
@@ -628,7 +629,7 @@ fn mmap_backed_store_serves_byte_identical_batches_serial_and_prefetch() {
 
     let mut mapped = persist::recover(
         SealPolicy::by_events(120),
-        DurabilityPolicy::new(&dir).with_mmap(),
+        DurabilityPolicy::new(&dir).with_backing(SegmentBacking::Mmap),
     )
     .unwrap();
     let snap = mapped.snapshot().unwrap();
@@ -688,11 +689,11 @@ fn group_committed_concurrent_ingest_survives_recovery() {
         // active segment), and a mid-race seal would turn the laggards
         // into stale appends. The recovered store seals instead.
         let handle = router
-            .add_tenant(
+            .add_primary(
                 "g",
-                TenantConfig::new(threads + 1)
-                    .with_seal(SealPolicy::by_events(100_000))
-                    .with_durability(DurabilityPolicy::new(&dir).with_group_commit()),
+                ServingConfig::primary(threads + 1, &dir)
+                    .seal(SealPolicy::by_events(100_000))
+                    .group_commit(),
             )
             .unwrap();
         // Each thread owns one source node and appends at a shared,
@@ -726,7 +727,11 @@ fn group_committed_concurrent_ingest_survives_recovery() {
 
     let mut rec = persist::recover(
         SealPolicy::by_events(128),
-        DurabilityPolicy::new(&dir).with_group_commit(),
+        DurabilityPolicy {
+            fsync_appends: true,
+            group_commit: true,
+            ..DurabilityPolicy::new(&dir)
+        },
     )
     .unwrap();
     let snap = rec.snapshot().unwrap();
@@ -1029,6 +1034,251 @@ fn time_chunked_eval_matches_batch_count() {
         .unwrap();
     assert_eq!(by_events.queries, by_day.queries, "every test edge scored once");
     assert!(by_day.mrr.unwrap() > 0.0);
+}
+
+/// Replicated-serving tentpole, part 1: a tailing replica killed at
+/// arbitrary points (mid-WAL, mid-segment-ship, whatever its cursor
+/// happened to be) restarts over its local cache, revalidates instead of
+/// re-shipping, catches back up, and ends byte-identical to the primary
+/// — hooked batches included, serial and prefetch at >= 2 workers.
+#[test]
+fn replica_killed_at_arbitrary_points_catches_up_without_reshipping() {
+    let data = gen::by_name("wiki", 0.05, 61).unwrap();
+    let base = std::env::temp_dir().join(format!("tgm_it_replkill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let pdir = base.join("primary");
+    let rdir = base.join("replica");
+    let mut primary =
+        SegmentedStorage::new(data.storage().num_nodes(), SealPolicy::by_events(97))
+            .with_granularity(data.storage().granularity())
+            .with_durability(DurabilityPolicy::new(&pdir))
+            .unwrap();
+    let mut source = ReplaySource::from_data(&data);
+    let events = source.next_chunk(usize::MAX);
+    let log = Arc::new(DirTransport::new(&pdir));
+
+    // Seed a quarter of the stream so the first bootstrap ships real
+    // segment files from a primary that keeps its directory locked.
+    let seed = events.len() / 4;
+    for ev in &events[..seed] {
+        primary.append(ev.clone()).unwrap();
+    }
+    let (mut replica, first) =
+        Replica::bootstrap("kill-r", Arc::clone(&log), ReplicaConfig::new(&rdir)).unwrap();
+    assert!(first.shipped_bytes > 0, "the first bootstrap must fetch the seed segments");
+    assert_eq!(first.reused_segments, 0, "a fresh replica dir has nothing to revalidate");
+
+    // Stream the rest in randomized chunks, polling at a randomized
+    // cadence so the replica's WAL cursor sits at arbitrary offsets —
+    // then kill it at random points and restart over the same dir.
+    let mut rng = tgm::util::Rng::new(6161);
+    let mut restarts = 0usize;
+    let mut i = seed;
+    while i < events.len() {
+        let end = (i + rng.range(1, 400) as usize).min(events.len());
+        for ev in &events[i..end] {
+            primary.append(ev.clone()).unwrap();
+        }
+        i = end;
+        if rng.range(0, 100) < 60 {
+            replica.poll().unwrap();
+        }
+        if rng.range(0, 100) < 25 || (i == events.len() && restarts == 0) {
+            let cached = replica.num_sealed_segments();
+            drop(replica); // kill: releases the replica dir lock, keeps the cache
+            let (r, again) =
+                Replica::bootstrap("kill-r", Arc::clone(&log), ReplicaConfig::new(&rdir))
+                    .unwrap();
+            replica = r;
+            restarts += 1;
+            assert_eq!(
+                again.reused_segments, cached,
+                "restart {restarts}: every cached segment must be revalidated, not re-shipped"
+            );
+            assert!(again.segments >= cached, "the sealed stack never shrinks without compaction");
+        }
+    }
+    assert!(restarts > 0);
+
+    // Converge, then compare: snapshot bytes, then hooked batches.
+    let outcome = replica.poll().unwrap();
+    assert!(outcome.published, "a serial poll with no seal race must catch up");
+    let psnap = primary.snapshot().unwrap();
+    let rsnap = replica.pin().unwrap();
+    assert_eq!(replica.applied_generation(), psnap.generation());
+    assert_eq!(rsnap.edge_ts(), psnap.edge_ts());
+    assert_eq!(rsnap.edge_src(), psnap.edge_src());
+    assert_eq!(rsnap.edge_dst(), psnap.edge_dst());
+    assert_eq!(rsnap.edge_feats(), psnap.edge_feats());
+    assert_eq!(rsnap.num_node_events(), psnap.num_node_events());
+
+    let pdata = DGData::from_snapshot(psnap, "primary", Task::LinkPrediction);
+    let rdata = DGData::from_snapshot(rsnap, "replica", Task::LinkPrediction);
+    for key in ["train", "val"] {
+        let mut mh = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        mh.activate(key).unwrap();
+        let reference = DGDataLoader::new(pdata.full(), BatchBy::Events(100), &mut mh)
+            .unwrap()
+            .collect_all()
+            .unwrap();
+        assert!(reference.len() > 2);
+
+        let mut ms = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+        ms.activate(key).unwrap();
+        let serial = DGDataLoader::new(rdata.full(), BatchBy::Events(100), &mut ms)
+            .unwrap()
+            .collect_all()
+            .unwrap();
+        assert_identical(&reference, &serial);
+
+        for workers in [2usize, 4] {
+            let mut mp = RecipeRegistry::build(RECIPE_TGB_LINK).unwrap();
+            mp.activate(key).unwrap();
+            let prefetched = PrefetchLoader::new(
+                rdata.full(),
+                BatchBy::Events(100),
+                &mut mp,
+                PrefetchConfig::default().with_workers(workers),
+            )
+            .unwrap()
+            .collect_all()
+            .unwrap();
+            assert_identical(&reference, &prefetched);
+        }
+    }
+    drop(replica);
+    drop(primary);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Replicated-serving tentpole, part 2: primary-side tiered compaction
+/// reaches the replica as run-replacement deltas — a handful of
+/// installed segments, never a resync, never a wholesale re-ship — and a
+/// post-compaction restart ships zero bytes because everything current
+/// is already cached locally.
+#[test]
+fn replica_ships_compaction_as_deltas_and_restarts_from_cache() {
+    let data = gen::by_name("wiki", 0.05, 63).unwrap();
+    let base = std::env::temp_dir().join(format!("tgm_it_repldelta_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let pdir = base.join("primary");
+    let rdir = base.join("replica");
+    let mut primary =
+        SegmentedStorage::new(data.storage().num_nodes(), SealPolicy::by_events(97))
+            .with_granularity(data.storage().granularity())
+            .with_durability(DurabilityPolicy::new(&pdir))
+            .unwrap();
+    let mut source = ReplaySource::from_data(&data);
+    for ev in source.next_chunk(usize::MAX) {
+        primary.append(ev).unwrap();
+    }
+    primary.seal().unwrap();
+
+    let log = Arc::new(DirTransport::new(&pdir));
+    let (mut replica, first) =
+        Replica::bootstrap("delta-r", Arc::clone(&log), ReplicaConfig::new(&rdir)).unwrap();
+    let pre_segments = replica.num_sealed_segments();
+    assert!(pre_segments > 8, "want a tall sealed stack, got {pre_segments}");
+    assert_eq!(first.segments, pre_segments);
+
+    // Tiered compaction to its fixpoint on the primary, then let the
+    // replica reconcile. Installs must be the new merged runs only.
+    while primary.compact_tiered(3).unwrap().is_some() {}
+    let shipped_before = replica.shipped_bytes();
+    let mut installed = 0usize;
+    for round in 0.. {
+        assert!(round < 10, "replica never converged on the compacted stack");
+        let outcome = replica.poll().unwrap();
+        assert!(!outcome.resynced, "serial compaction must arrive as deltas, not a resync");
+        installed += outcome.installed_segments;
+        if outcome.published && replica.num_sealed_segments() < pre_segments {
+            break;
+        }
+    }
+    assert!(installed > 0, "compaction must install replacement runs");
+    assert!(
+        installed < pre_segments,
+        "{installed} installs for a {pre_segments}-segment stack is a re-ship, not a delta"
+    );
+    assert!(replica.shipped_bytes() > shipped_before, "new runs are fetched, not conjured");
+
+    let psnap = primary.snapshot().unwrap();
+    let rsnap = replica.pin().unwrap();
+    assert_eq!(replica.applied_generation(), psnap.generation());
+    assert_eq!(rsnap.edge_ts(), psnap.edge_ts());
+    assert_eq!(rsnap.edge_feats(), psnap.edge_feats());
+
+    // Restart over the same cache: the current stack is fully local, so
+    // nothing ships — the zero-re-ship invariant across restarts.
+    drop(replica);
+    let (replica2, again) =
+        Replica::bootstrap("delta-r2", Arc::clone(&log), ReplicaConfig::new(&rdir)).unwrap();
+    assert_eq!(again.shipped_bytes, 0, "a fully cached restart must ship zero bytes");
+    assert_eq!(again.reused_segments, again.segments);
+    assert_eq!(replica2.pin().unwrap().edge_ts(), psnap.edge_ts());
+    drop(replica2);
+    drop(primary);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Bugfix regression: registering a tenant over a directory whose WAL
+/// tail was torn mid-record must surface the recovery diagnostics
+/// through the serving tier (`TenantHandle::recovery_report`) instead of
+/// swallowing them — and still serve the acknowledged prefix through the
+/// unified read-handle API.
+#[test]
+fn torn_tail_recovery_report_surfaces_through_the_serving_tier() {
+    let data = gen::by_name("wiki", 0.05, 62).unwrap();
+    let dir = std::env::temp_dir().join(format!("tgm_it_tornreport_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    {
+        let mut st =
+            SegmentedStorage::new(data.storage().num_nodes(), SealPolicy::by_events(97))
+                .with_granularity(data.storage().granularity())
+                .with_durability(DurabilityPolicy::new(&dir))
+                .unwrap();
+        let mut source = ReplaySource::from_data(&data);
+        for ev in source.next_chunk(500) {
+            st.append(ev).unwrap();
+        }
+        assert!(st.pending_edges() + st.pending_node_events() > 0, "want a live WAL tail");
+    } // crash
+    // Tear the tail mid-record: the last acknowledged append loses its
+    // final bytes, as if the disk absorbed a partial sector.
+    let wal_path = dir.join("wal.log");
+    let wal = std::fs::read(&wal_path).unwrap();
+    std::fs::write(&wal_path, &wal[..wal.len() - 3]).unwrap();
+
+    let mut router = TenantRouter::new();
+    let id = TenantId::from("wiki");
+    let handle = router
+        .add_primary(
+            id.clone(),
+            ServingConfig::primary(data.storage().num_nodes(), &dir)
+                .seal(SealPolicy::by_events(97)),
+        )
+        .unwrap();
+    let report = handle
+        .recovery_report()
+        .expect("recovery over an existing directory must carry a report");
+    assert!(report.torn_tail, "the torn record must be diagnosed, not silently dropped");
+    assert!(report.dropped_bytes > 0);
+    assert!(report.sealed_segments > 0);
+    assert!(report.replayed_events > 0, "the complete-record prefix of the tail survives");
+    assert!(!report.stale_wal_discarded);
+
+    // The tenant still serves the acknowledged prefix, and the unified
+    // read-handle API resolves to it.
+    let h = router.read_handle(&id).unwrap();
+    let snap = h.pin().unwrap();
+    assert!(snap.num_edges() > 0);
+    assert_eq!(
+        snap.num_edges() + snap.num_node_events(),
+        report.sealed_segments * 97 + report.replayed_events,
+        "recovered prefix = sealed segments + surviving WAL records"
+    );
+    drop(router);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
